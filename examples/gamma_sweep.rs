@@ -1,0 +1,43 @@
+//! The γ phase transition (paper §IV-D) in one self-contained run:
+//! sweep the amplification exponent, report iterations-to-accuracy and
+//! the peak transmitted magnitude, and print the Fig. 7/8-style table.
+//!
+//! ```bash
+//! cargo run --release --example gamma_sweep [-- --trials 20]
+//! ```
+
+use adcdgd::experiments::phase_transition;
+use adcdgd::util::args::Args;
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let mut p = phase_transition::Params::default();
+    p.trials = args.get::<usize>("trials", 12).unwrap_or(12);
+    p.iterations = args.get::<usize>("iters", 1500).unwrap_or(1500);
+
+    println!(
+        "gamma sweep on the paper 4-node network ({} trials, {} iters, threshold {}):\n",
+        p.trials, p.iterations, p.threshold
+    );
+    let fr = phase_transition::run(&p);
+    let iters = fr.series("iters_to_threshold").unwrap();
+    let peak = fr.series("peak_transmitted").unwrap();
+    println!("{:>6} {:>20} {:>18}", "gamma", "iters to ‖∇f̄‖<thr", "peak |k^γ·y|");
+    for i in 0..iters.x.len() {
+        let reached = iters.y[i] < 2.0 * p.iterations as f64;
+        println!(
+            "{:>6.2} {:>20} {:>18.2}",
+            iters.x[i],
+            if reached { format!("{:.0}", iters.y[i]) } else { "never".to_string() },
+            peak.y[i],
+        );
+    }
+    println!(
+        "\nreading: convergence speed improves up to γ ≈ 1 and then saturates (the\n\
+         paper's §IV-D phase transition); γ ≤ 1/2 violates the theory threshold\n\
+         and is slow/noisy. On this scalar problem the transmitted magnitude is\n\
+         dominated by the O(σ) compression-noise floor — its growth with γ shows\n\
+         up in the transient (Fig. 8 reproduction, `cargo bench --bench\n\
+         fig8_transmitted`) and in high-dimensional runs."
+    );
+}

@@ -1,0 +1,80 @@
+//! Distributed change-point detection over a sensor network — the
+//! motivating application of paper §III-A.
+//!
+//! 12 sensors on a ring each observe a noisy copy of a common signal
+//! with a step change. They reach consensus on the signal with ADC-DGD
+//! (compressed, so each round costs 2 B/sample instead of 8) and then
+//! locate the change point with the CUSUM statistic. The example also
+//! shows detection still works with 10% message loss.
+//!
+//! ```bash
+//! cargo run --release --example sensor_cusum
+//! ```
+
+use adcdgd::algorithms::ObjectiveRef;
+use adcdgd::network::LinkModel;
+use adcdgd::objective::{detect_change_point, CusumObjective};
+use adcdgd::prelude::*;
+use adcdgd::rng::Normal;
+use adcdgd::{consensus, topology};
+use std::sync::Arc;
+
+fn main() {
+    let n_sensors = 12;
+    let t_len = 128;
+    let true_cp = 80; // change-point index
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    let noise = Normal::new(0.0, 0.8);
+
+    // Ground-truth signal: 0 before the change, 1.5 after.
+    let signal: Vec<f64> =
+        (0..t_len).map(|t| if t >= true_cp { 1.5 } else { 0.0 }).collect();
+
+    // Each sensor sees signal + heavy independent noise.
+    let mut raw_series: Vec<Vec<f64>> = Vec::with_capacity(n_sensors);
+    let objectives: Vec<ObjectiveRef> = (0..n_sensors)
+        .map(|_| {
+            let y: Vec<f64> = signal.iter().map(|&s| s + noise.sample(&mut rng)).collect();
+            raw_series.push(y.clone());
+            Arc::new(CusumObjective::new(y)) as ObjectiveRef
+        })
+        .collect();
+
+    let graph = topology::ring(n_sensors);
+    let w = consensus::metropolis(&graph);
+
+    for drop_prob in [0.0, 0.10] {
+        let cfg = RunConfig {
+            iterations: 300,
+            step_size: StepSize::Constant(0.2),
+            record_every: 300,
+            seed: 1,
+            link: LinkModel { drop_prob, ..LinkModel::default() },
+            ..RunConfig::default()
+        };
+        let out = run_adc_dgd(
+            &graph,
+            &w,
+            &objectives,
+            Arc::new(LowPrecisionQuantizer::new(1.0 / 256.0)),
+            &AdcDgdOptions { gamma: 1.0 },
+            &cfg,
+        );
+        // Consensus estimate = node 0's final state.
+        let estimate = &out.final_states[0];
+        let cp = detect_change_point(estimate);
+        println!(
+            "drop={drop_prob:>4}: detected change at t={cp} (truth {true_cp}), \
+             consensus err {:.3e}, bytes {}, dropped {}",
+            out.metrics.consensus_error.last().unwrap(),
+            out.total_bytes,
+            out.dropped_messages,
+        );
+        assert!((cp as i64 - true_cp as i64).abs() <= 3, "detection failed");
+    }
+
+    // Single-sensor baseline: CUSUM straight on one noisy series.
+    let single_cp = detect_change_point(&raw_series[0]);
+    println!("single-sensor CUSUM (no network): t={single_cp} (truth {true_cp})");
+    println!("ok: network consensus sharpens noisy per-sensor detection");
+}

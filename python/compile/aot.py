@@ -1,0 +1,211 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts + manifest.
+
+Interchange is HLO text, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the rust side's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts written to ``--out`` (default ``../artifacts``):
+
+* ``quad.hlo.txt``          — (x, a, b) → (value, grad)            [P = 4]
+* ``logistic.hlo.txt``      — (w, X, y, lam) → (loss, grad)        [M = 64, D = 16]
+* ``transformer.hlo.txt``   — (*params, tokens) → (loss, *grads)
+* ``transformer_params.bin``— initial parameters, flat f32 little-endian
+* ``quantize.hlo.txt``      — (y, u, k_gamma) → C(k^γ y)           [P = 65536]
+* ``consensus.hlo.txt``     — (X, w, g, alpha) → wᵀX − αg          [N = 4, P = 4096]
+* ``manifest.json``         — shapes/dtypes/params contract for rust
+
+Run once at build time (``make artifacts``); never on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import consensus as consensus_kernel
+from .kernels import quantize as quantize_kernel
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32 if dtype == "s32" else jnp.float32)
+
+
+def io_entry(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def build_quad(out_dir, p=4):
+    def fn(x, a, b):
+        return model.quad_value_and_grad(x, a, b)
+
+    lowered = jax.jit(fn).lower(spec([p]), spec([p]), spec([p]))
+    path = os.path.join(out_dir, "quad.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "hlo": "quad.hlo.txt",
+        "inputs": [io_entry("x", [p]), io_entry("a", [p]), io_entry("b", [p])],
+        "outputs": [io_entry("value", []), io_entry("grad", [p])],
+        "meta": {"p": p},
+    }
+
+
+def build_logistic(out_dir, m=64, d=16):
+    def fn(w, features, labels, lam):
+        return model.logistic_value_and_grad(w, features, labels, lam)
+
+    lowered = jax.jit(fn).lower(spec([d]), spec([m, d]), spec([m]), spec([]))
+    path = os.path.join(out_dir, "logistic.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "hlo": "logistic.hlo.txt",
+        "inputs": [
+            io_entry("w", [d]),
+            io_entry("features", [m, d]),
+            io_entry("labels", [m]),
+            io_entry("lam", []),
+        ],
+        "outputs": [io_entry("loss", []), io_entry("grad", [d])],
+        "meta": {"m": m, "d": d},
+    }
+
+
+def build_transformer(out_dir, cfg: model.TransformerConfig, seed=0):
+    specs = model.param_specs(cfg)
+
+    def fn(*args):
+        flat_params = args[:-1]
+        tokens = args[-1]
+        return model.transformer_loss_and_grads(list(flat_params), tokens, cfg)
+
+    in_specs = [spec(shape) for _, shape, _ in specs]
+    in_specs.append(spec([cfg.batch, cfg.seq_len + 1], "s32"))
+    lowered = jax.jit(fn).lower(*in_specs)
+    with open(os.path.join(out_dir, "transformer.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    # Initial parameters, concatenated flat f32 LE in spec order.
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    flat = np.concatenate(
+        [np.asarray(params[name], np.float32).reshape(-1) for name, _, _ in specs]
+    )
+    flat.tofile(os.path.join(out_dir, "transformer_params.bin"))
+
+    inputs = [io_entry(name, shape) for name, shape, _ in specs]
+    inputs.append(io_entry("tokens", [cfg.batch, cfg.seq_len + 1], "s32"))
+    outputs = [io_entry("loss", [])]
+    outputs += [io_entry("d_" + name, shape) for name, shape, _ in specs]
+    return {
+        "hlo": "transformer.hlo.txt",
+        "inputs": inputs,
+        "outputs": outputs,
+        "params": {
+            "file": "transformer_params.bin",
+            "count": len(specs),
+            "total": int(flat.size),
+        },
+        "meta": {
+            "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len,
+            "d_model": cfg.d_model,
+            "n_head": cfg.n_head,
+            "n_layer": cfg.n_layer,
+            "d_mlp": cfg.d_mlp,
+            "batch": cfg.batch,
+        },
+    }
+
+
+def build_quantize(out_dir, p=65536):
+    def fn(y, u, kg):
+        return (quantize_kernel.amplified_round(y, u, kg),)
+
+    lowered = jax.jit(fn).lower(spec([p]), spec([p]), spec([]))
+    with open(os.path.join(out_dir, "quantize.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "hlo": "quantize.hlo.txt",
+        "inputs": [io_entry("y", [p]), io_entry("u", [p]), io_entry("k_gamma", [])],
+        "outputs": [io_entry("q", [p])],
+        "meta": {"p": p},
+    }
+
+
+def build_consensus(out_dir, n=4, p=4096):
+    def fn(x_stack, w, g, alpha):
+        return (consensus_kernel.consensus_step(x_stack, w, g, alpha),)
+
+    lowered = jax.jit(fn).lower(spec([n, p]), spec([n]), spec([p]), spec([]))
+    with open(os.path.join(out_dir, "consensus.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "hlo": "consensus.hlo.txt",
+        "inputs": [
+            io_entry("x_stack", [n, p]),
+            io_entry("w", [n]),
+            io_entry("g", [p]),
+            io_entry("alpha", []),
+        ],
+        "outputs": [io_entry("out", [p])],
+        "meta": {"n": n, "p": p},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-layer", type=int, default=2)
+    ap.add_argument("--n-head", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = model.TransformerConfig(
+        d_model=args.d_model,
+        n_layer=args.n_layer,
+        n_head=args.n_head,
+        seq_len=args.seq_len,
+        d_mlp=4 * args.d_model,
+        batch=args.batch,
+    )
+    manifest = {
+        "format_version": 1,
+        "models": {
+            "quad": build_quad(args.out),
+            "logistic": build_logistic(args.out),
+            "transformer": build_transformer(args.out, cfg, args.seed),
+            "quantize": build_quantize(args.out),
+            "consensus": build_consensus(args.out),
+        },
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    sizes = {
+        name: os.path.getsize(os.path.join(args.out, m["hlo"]))
+        for name, m in manifest["models"].items()
+    }
+    print(f"artifacts written to {args.out}: " + ", ".join(f"{k}={v}B" for k, v in sizes.items()))
+
+
+if __name__ == "__main__":
+    main()

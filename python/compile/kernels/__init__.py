@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness path
+and real-TPU performance is *estimated* from the BlockSpec schedule
+(DESIGN.md §5). Every kernel has a pure-jnp oracle in :mod:`ref` checked
+by pytest + hypothesis.
+"""
+
+from . import consensus, matmul, quantize, ref  # noqa: F401

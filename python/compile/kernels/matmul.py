@@ -1,0 +1,147 @@
+"""Tiled matmul (+ bias + GELU) kernel — the transformer's MLP/projection
+hot-spot — with custom VJPs so the L2 model can differentiate through it
+(`pallas_call` has no built-in transpose rule; the backward passes are
+themselves Pallas matmuls: dA = dC·Bᵀ, dB = Aᵀ·dC).
+
+TPU mapping (DESIGN.md §5): 2-D grid over (M/bm, N/bn) output tiles with
+the full K dimension resident per tile (model dims here are ≤ 512, so a
+``bm×K`` + ``K×bn`` slab fits VMEM comfortably); the inner ``jnp.dot``
+maps onto the MXU systolic array. ``preferred_element_type=float32``
+keeps the accumulator in f32 — the paper-era GPU fp32-accumulate GEMM
+translated to TPU idiom. The GELU epilogue is fused into the forward
+kernel; the backward rematerializes the pre-activation (one extra
+matmul) — the standard remat trade.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+BN = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _matmul_bias_gelu_kernel(a_ref, b_ref, bias_ref, o_ref):
+    acc = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + bias_ref[...]
+    o_ref[...] = jax.nn.gelu(acc)
+
+
+def _matmul_bias_kernel(a_ref, b_ref, bias_ref, o_ref):
+    acc = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = acc + bias_ref[...]
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def _matmul_impl(a, b, bm=BM, bn=BN):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    ap = _pad_to(a, bm, 1)
+    bp = _pad_to(b, 1, bn)
+    mp, np_ = ap.shape[0], bp.shape[1]
+    out = pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("gelu", "bm", "bn"))
+def _matmul_bias_impl(a, b, bias, gelu=False, bm=BM, bn=BN):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and bias.shape == (n,), (a.shape, b.shape, bias.shape)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    ap = _pad_to(a, bm, 1)
+    bp = _pad_to(b, 1, bn)
+    biasp = jnp.pad(bias, (0, bp.shape[1] - n))
+    mp, np_ = ap.shape[0], bp.shape[1]
+    kernel = _matmul_bias_gelu_kernel if gelu else _matmul_bias_kernel
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(ap, bp, biasp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrappers
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def matmul(a, b):
+    """Differentiable Pallas ``a @ b``."""
+    return _matmul_impl(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _matmul_impl(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    return _matmul_impl(g, b.T), _matmul_impl(a.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def matmul_bias(a, b, bias, gelu=False):
+    """Differentiable Pallas ``a @ b + bias`` with optional fused GELU."""
+    return _matmul_bias_impl(a, b, bias, gelu=gelu)
+
+
+def _matmul_bias_fwd(a, b, bias, gelu):
+    return _matmul_bias_impl(a, b, bias, gelu=gelu), (a, b, bias)
+
+
+def _matmul_bias_bwd(gelu, res, g):
+    a, b, bias = res
+    if gelu:
+        # Rematerialize the pre-activation, then chain through GELU.
+        z = _matmul_bias_impl(a, b, bias, gelu=False)
+        _, gelu_vjp = jax.vjp(jax.nn.gelu, z)
+        (dz,) = gelu_vjp(g)
+    else:
+        dz = g
+    da = _matmul_impl(dz, b.T)
+    db = _matmul_impl(a.T, dz)
+    dbias = jnp.sum(dz, axis=0)
+    return da, db, dbias
+
+
+matmul_bias.defvjp(_matmul_bias_fwd, _matmul_bias_bwd)

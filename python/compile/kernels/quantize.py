@@ -1,0 +1,96 @@
+"""Stochastic-rounding quantization kernel — the ADC-DGD compression
+hot-spot (paper Def. 1 / Example 2).
+
+The kernel is *pure*: the uniform noise ``u ~ U[0,1)`` is an explicit
+input tensor rather than an in-kernel PRNG, so (a) the kernel is exactly
+checkable against :func:`ref.stochastic_round_ref`, and (b) the host
+controls the randomness stream (rust's xoshiro feeds the same noise to
+the AOT'd kernel when using the ``XlaQuantizer`` backend).
+
+TPU mapping (DESIGN.md §5): elementwise over P, tiled into
+``BLOCK``-sized VMEM blocks via a 1-D grid; on real hardware the grid
+double-buffers HBM→VMEM automatically. The op intensity is O(1)
+flops/byte — memory-bound — so block size only needs to cover DMA
+latency; 4096 f32 = 16 KiB per ref, far under VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _quantize_kernel(z_ref, u_ref, o_ref):
+    z = z_ref[...]
+    lo = jnp.floor(z)
+    frac = z - lo
+    o_ref[...] = lo + (u_ref[...] < frac).astype(z.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def stochastic_round(z, u, block=BLOCK):
+    """Stochastically round ``z`` to integers using uniform noise ``u``.
+
+    Unbiased: ``E[out] = z`` because ``P(round up) = frac(z)``.
+    Shapes: ``z`` and ``u`` are rank-1 of equal length; any length is
+    accepted (padded internally to a block multiple).
+    """
+    assert z.ndim == 1 and z.shape == u.shape, (z.shape, u.shape)
+    p = z.shape[0]
+    block = min(block, max(p, 1))
+    padded = (p + block - 1) // block * block
+    zp = jnp.pad(z, (0, padded - p))
+    # Pad noise with 1.0 so padding never rounds up (stays exactly 0).
+    up = jnp.pad(u, (0, padded - p), constant_values=1.0)
+    out = pl.pallas_call(
+        _quantize_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded,), z.dtype),
+        grid=(padded // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(zp, up)
+    return out[:p]
+
+
+def _amplified_kernel(y_ref, u_ref, kg_ref, o_ref):
+    """Fused amplify + stochastic round: round(k^γ · y) in one pass."""
+    z = y_ref[...] * kg_ref[0]
+    lo = jnp.floor(z)
+    frac = z - lo
+    o_ref[...] = lo + (u_ref[...] < frac).astype(z.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def amplified_round(y, u, k_gamma, block=BLOCK):
+    """ADC-DGD's transmit transform ``C(k^γ y)`` fused into one kernel.
+
+    ``k_gamma`` is a scalar (traced, so one compiled artifact serves all
+    rounds).
+    """
+    assert y.ndim == 1 and y.shape == u.shape
+    p = y.shape[0]
+    block = min(block, max(p, 1))
+    padded = (p + block - 1) // block * block
+    yp = jnp.pad(y, (0, padded - p))
+    up = jnp.pad(u, (0, padded - p), constant_values=1.0)
+    kg = jnp.asarray(k_gamma, dtype=y.dtype).reshape((1,))
+    out = pl.pallas_call(
+        _amplified_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded,), y.dtype),
+        grid=(padded // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(yp, up, kg)
+    return out[:p]

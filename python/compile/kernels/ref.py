@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground
+truth enforced by pytest + hypothesis (``tests/test_kernels.py``)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def stochastic_round_ref(z, u):
+    """Reference for :func:`quantize.stochastic_round`."""
+    lo = jnp.floor(z)
+    return lo + (u < (z - lo)).astype(z.dtype)
+
+
+def amplified_round_ref(y, u, k_gamma):
+    """Reference for :func:`quantize.amplified_round`."""
+    return stochastic_round_ref(y * k_gamma, u)
+
+
+def consensus_step_ref(x_stack, w, g, alpha):
+    """Reference for :func:`consensus.consensus_step`."""
+    return w @ x_stack - alpha * g
+
+
+def matmul_ref(a, b):
+    """Reference for :func:`matmul.matmul`."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def matmul_bias_ref(a, b, bias, gelu=False):
+    """Reference for :func:`matmul.matmul_bias`."""
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32) + bias
+    return jax.nn.gelu(out) if gelu else out

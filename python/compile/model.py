@@ -1,0 +1,198 @@
+"""Layer-2 JAX models: each node's local objective as a (value, grad)
+computation, calling the L1 Pallas kernels, AOT-lowered by ``aot.py``.
+
+Three model families:
+
+* :func:`quad_value_and_grad` — the paper's scalar-quadratic family
+  vectorized (cross-checks the rust-native objective through the PJRT
+  path).
+* :func:`logistic_value_and_grad` — L2-regularized logistic regression
+  (deterministic given the node's data shard; cross-checked against the
+  pure-rust implementation to 1e-5).
+* :class:`TransformerConfig` / :func:`transformer_loss_and_grads` — a
+  byte-level GPT used by the decentralized-training E2E example: causal
+  self-attention, Pallas fused-matmul MLP, weight-tied LM head.
+
+Everything is f32 (the PJRT CPU path; rust converts its f64 state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul
+
+
+# --------------------------------------------------------------------------
+# Quadratics: f(x) = sum_j a_j (x_j - b_j)^2
+# --------------------------------------------------------------------------
+
+def quad_value_and_grad(x, a, b):
+    """Value and gradient of ``Σ a·(x−b)²`` (elementwise a, b)."""
+    d = x - b
+    value = jnp.sum(a * d * d)
+    grad = 2.0 * a * d
+    return value, grad
+
+
+# --------------------------------------------------------------------------
+# Logistic regression: mean log-loss + (lam/2)||w||^2, labels in {-1,+1}
+# --------------------------------------------------------------------------
+
+def logistic_value_and_grad(w, features, labels, lam):
+    """Stable value+grad of L2-regularized logistic regression.
+
+    The logit matvec goes through the Pallas matmul kernel so the L1
+    layer sits on the model's hot path.
+    """
+    logits = matmul.matmul(features, w[:, None])[:, 0]
+    margins = labels * logits
+    # log(1 + e^{-m}) stably
+    loss = jnp.mean(jnp.logaddexp(0.0, -margins)) + 0.5 * lam * jnp.sum(w * w)
+    sig = jax.nn.sigmoid(-margins)  # = 1/(1+e^{m})
+    coef = -labels * sig / labels.shape[0]
+    grad = matmul.matmul(coef[None, :], features)[0] + lam * w
+    return loss, grad
+
+
+# --------------------------------------------------------------------------
+# Byte-level GPT
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    """Model shape. Defaults give ≈0.44 M parameters (CPU-friendly);
+    scale ``d_model``/``n_layer`` up for larger runs."""
+
+    vocab: int = 256
+    seq_len: int = 64
+    d_model: int = 128
+    n_head: int = 4
+    n_layer: int = 2
+    d_mlp: int = 512
+    batch: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+
+def param_specs(cfg: TransformerConfig) -> List[Tuple[str, Tuple[int, ...], float]]:
+    """Ordered (name, shape, init_std) list — the flattening contract
+    shared with the rust runtime via the manifest."""
+    d, v, t, m = cfg.d_model, cfg.vocab, cfg.seq_len, cfg.d_mlp
+    specs: List[Tuple[str, Tuple[int, ...], float]] = [
+        ("wte", (v, d), 0.02),
+        ("wpe", (t, d), 0.02),
+    ]
+    proj_std = 0.02 / (2.0 * cfg.n_layer) ** 0.5  # GPT-2 style residual scaling
+    for layer in range(cfg.n_layer):
+        pre = f"h{layer}."
+        specs += [
+            (pre + "ln1_g", (d,), -1.0),  # std<0 ⇒ init to ones
+            (pre + "ln1_b", (d,), 0.0),
+            (pre + "attn_qkv_w", (d, 3 * d), 0.02),
+            (pre + "attn_qkv_b", (3 * d,), 0.0),
+            (pre + "attn_proj_w", (d, d), proj_std),
+            (pre + "attn_proj_b", (d,), 0.0),
+            (pre + "ln2_g", (d,), -1.0),
+            (pre + "ln2_b", (d,), 0.0),
+            (pre + "mlp_fc_w", (d, m), 0.02),
+            (pre + "mlp_fc_b", (m,), 0.0),
+            (pre + "mlp_proj_w", (m, d), proj_std),
+            (pre + "mlp_proj_b", (d,), 0.0),
+        ]
+    specs += [("lnf_g", (d,), -1.0), ("lnf_b", (d,), 0.0)]
+    return specs
+
+
+def init_params(cfg: TransformerConfig, key) -> Dict[str, jnp.ndarray]:
+    """Initialize parameters per :func:`param_specs`."""
+    params = {}
+    for name, shape, std in param_specs(cfg):
+        if std < 0.0:
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif std == 0.0:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            key, sub = jax.random.split(key)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(x, qkv_w, qkv_b, proj_w, proj_b, cfg: TransformerConfig):
+    b, t, d = x.shape
+    h, hd = cfg.n_head, cfg.head_dim
+    qkv = matmul.matmul_bias(x.reshape(b * t, d), qkv_w, qkv_b).reshape(b, t, 3 * d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b * t, d)
+    return matmul.matmul_bias(out, proj_w, proj_b).reshape(b, t, d)
+
+
+def _mlp(x, fc_w, fc_b, proj_w, proj_b):
+    b, t, d = x.shape
+    hidden = matmul.matmul_bias(x.reshape(b * t, d), fc_w, fc_b, gelu=True)
+    return matmul.matmul_bias(hidden, proj_w, proj_b).reshape(b, t, d)
+
+
+def transformer_loss(params: Dict[str, jnp.ndarray], tokens, cfg: TransformerConfig):
+    """Mean next-token cross-entropy of the GPT on ``tokens`` (B, T+1)
+    int32: positions 0..T-1 are inputs, 1..T are targets."""
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    b, t = inp.shape
+    x = params["wte"][inp] + params["wpe"][jnp.arange(t)][None]
+    for layer in range(cfg.n_layer):
+        pre = f"h{layer}."
+        x = x + _attention(
+            _layer_norm(x, params[pre + "ln1_g"], params[pre + "ln1_b"]),
+            params[pre + "attn_qkv_w"],
+            params[pre + "attn_qkv_b"],
+            params[pre + "attn_proj_w"],
+            params[pre + "attn_proj_b"],
+            cfg,
+        )
+        x = x + _mlp(
+            _layer_norm(x, params[pre + "ln2_g"], params[pre + "ln2_b"]),
+            params[pre + "mlp_fc_w"],
+            params[pre + "mlp_fc_b"],
+            params[pre + "mlp_proj_w"],
+            params[pre + "mlp_proj_b"],
+        )
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = matmul.matmul(x.reshape(b * t, cfg.d_model), params["wte"].T)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt.reshape(b * t, 1), axis=-1)
+    return jnp.mean(nll)
+
+
+def transformer_loss_and_grads(flat_params: List[jnp.ndarray], tokens, cfg: TransformerConfig):
+    """(loss, *grads) with params as the ordered flat list of
+    :func:`param_specs` — the AOT entry point."""
+    names = [name for name, _, _ in param_specs(cfg)]
+    assert len(flat_params) == len(names)
+
+    def loss_from_list(plist):
+        return transformer_loss(dict(zip(names, plist)), tokens, cfg)
+
+    loss, grads = jax.value_and_grad(loss_from_list)(list(flat_params))
+    return (loss, *grads)

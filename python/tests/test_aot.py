@@ -1,0 +1,65 @@
+"""AOT pipeline checks: manifest consistency and HLO-text lowering."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", ART],
+            check=True,
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+        )
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_models(manifest):
+    assert manifest["format_version"] == 1
+    for name in ["quad", "logistic", "transformer", "quantize", "consensus"]:
+        assert name in manifest["models"], name
+        m = manifest["models"][name]
+        assert os.path.exists(os.path.join(ART, m["hlo"])), m["hlo"]
+        assert m["inputs"] and m["outputs"]
+
+
+def test_hlo_text_is_parseable_hlo(manifest):
+    for name, m in manifest["models"].items():
+        text = open(os.path.join(ART, m["hlo"])).read()
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in text, name
+
+
+def test_transformer_params_bin_matches_manifest(manifest):
+    m = manifest["models"]["transformer"]
+    total = m["params"]["total"]
+    flat = np.fromfile(os.path.join(ART, m["params"]["file"]), np.float32)
+    assert flat.size == total
+    # Total must equal the sum of the declared param input sizes
+    # (inputs minus the trailing tokens input).
+    sizes = [int(np.prod(i["shape"])) for i in m["inputs"][:-1]]
+    assert sum(sizes) == total
+    assert m["inputs"][-1]["name"] == "tokens"
+    assert m["inputs"][-1]["dtype"] == "s32"
+    # ln gains initialized to ones, so the params can't be all ~N(0, .02).
+    assert np.abs(flat).max() > 0.5
+
+
+def test_output_grads_mirror_param_inputs(manifest):
+    m = manifest["models"]["transformer"]
+    param_inputs = m["inputs"][:-1]
+    grad_outputs = m["outputs"][1:]
+    assert len(param_inputs) == len(grad_outputs)
+    for i, o in zip(param_inputs, grad_outputs):
+        assert o["name"] == "d_" + i["name"]
+        assert o["shape"] == i["shape"]

@@ -1,0 +1,173 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, swept over shapes
+and values with hypothesis. This is the core correctness signal for the
+compiled artifacts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import consensus, matmul, quantize, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+# --------------------------------------------------------------------------
+# quantize
+# --------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(min_value=1, max_value=10_000),
+    scale=st.floats(min_value=0.01, max_value=100.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_stochastic_round_matches_ref(p, scale, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray((rng.standard_normal(p) * scale).astype(np.float32))
+    u = jnp.asarray(rng.random(p).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(quantize.stochastic_round(z, u)),
+        np.asarray(ref.stochastic_round_ref(z, u)),
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(min_value=1, max_value=5_000),
+    kg=st.floats(min_value=0.1, max_value=1000.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_amplified_round_matches_ref(p, kg, seed):
+    rng = np.random.default_rng(seed)
+    y = _rand(rng, p)
+    u = jnp.asarray(rng.random(p).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(quantize.amplified_round(y, u, kg)),
+        np.asarray(ref.amplified_round_ref(y, u, np.float32(kg))),
+    )
+
+
+def test_stochastic_round_is_unbiased():
+    rng = np.random.default_rng(7)
+    z = jnp.full((20_000,), 0.3, jnp.float32)
+    u = jnp.asarray(rng.random(20_000).astype(np.float32))
+    mean = float(jnp.mean(quantize.stochastic_round(z, u)))
+    assert abs(mean - 0.3) < 0.02
+
+
+def test_stochastic_round_integers_are_exact():
+    z = jnp.asarray([0.0, 1.0, -5.0, 100.0], jnp.float32)
+    u = jnp.asarray([0.5, 0.01, 0.99, 0.5], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(quantize.stochastic_round(z, u)), np.asarray(z))
+
+
+# --------------------------------------------------------------------------
+# consensus
+# --------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(min_value=1, max_value=8),
+    p=st.integers(min_value=1, max_value=5_000),
+    alpha=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_consensus_step_matches_ref(n, p, alpha, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n, p)
+    w = jnp.asarray(rng.random(n).astype(np.float32))
+    g = _rand(rng, p)
+    np.testing.assert_allclose(
+        np.asarray(consensus.consensus_step(x, w, g, alpha)),
+        np.asarray(ref.consensus_step_ref(x, w, g, np.float32(alpha))),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(min_value=1, max_value=300),
+    k=st.integers(min_value=1, max_value=128),
+    n=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, m, k)
+    b = _rand(rng, k, n)
+    np.testing.assert_allclose(
+        np.asarray(matmul.matmul(a, b)),
+        np.asarray(ref.matmul_ref(a, b)),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(min_value=1, max_value=200),
+    k=st.integers(min_value=1, max_value=64),
+    n=st.integers(min_value=1, max_value=200),
+    gelu=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matmul_bias_matches_ref(m, k, n, gelu, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, m, k)
+    b = _rand(rng, k, n)
+    bias = _rand(rng, n)
+    np.testing.assert_allclose(
+        np.asarray(matmul.matmul_bias(a, b, bias, gelu=gelu)),
+        np.asarray(ref.matmul_bias_ref(a, b, bias, gelu=gelu)),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("gelu", [False, True])
+def test_matmul_bias_gradients_match_jnp(gelu):
+    """custom_vjp backward (Pallas) vs autodiff through the jnp oracle."""
+    rng = np.random.default_rng(3)
+    a = _rand(rng, 37, 19)
+    b = _rand(rng, 19, 23)
+    bias = _rand(rng, 23)
+
+    def pallas_loss(a, b, bias):
+        return jnp.sum(jnp.sin(matmul.matmul_bias(a, b, bias, gelu=gelu)))
+
+    def ref_loss(a, b, bias):
+        return jnp.sum(jnp.sin(ref.matmul_bias_ref(a, b, bias, gelu=gelu)))
+
+    gp = jax.grad(pallas_loss, argnums=(0, 1, 2))(a, b, bias)
+    gr = jax.grad(ref_loss, argnums=(0, 1, 2))(a, b, bias)
+    for x, y in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_gradients_match_jnp():
+    rng = np.random.default_rng(4)
+    a = _rand(rng, 40, 12)
+    b = _rand(rng, 12, 31)
+
+    def pallas_loss(a, b):
+        return jnp.sum(matmul.matmul(a, b) ** 2)
+
+    def ref_loss(a, b):
+        return jnp.sum(ref.matmul_ref(a, b) ** 2)
+
+    gp = jax.grad(pallas_loss, argnums=(0, 1))(a, b)
+    gr = jax.grad(ref_loss, argnums=(0, 1))(a, b)
+    for x, y in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,22 @@
+//! Ablation benches: phase transition (γ), error ball (α), compressor
+//! family, diminishing-step exponent (η).
+mod common;
+use adcdgd::experiments::{ablations, phase_transition};
+
+fn main() {
+    common::figure_bench("phase transition (gamma grid)", 1, || {
+        phase_transition::run(&phase_transition::Params::default())
+    });
+    common::figure_bench("ablation: alpha error ball", 3, || {
+        ablations::alpha_error_ball(&[0.0025, 0.005, 0.01, 0.02], 1500, 5)
+    });
+    common::figure_bench("ablation: compressor family", 3, || {
+        ablations::compressor_comparison(800, 0.02, 6)
+    });
+    common::figure_bench("ablation: eta sweep", 3, || {
+        ablations::eta_sweep(&[0.5, 0.75, 1.0], 3000, 0.1, 7)
+    });
+    common::figure_bench("ablation: Def.1 / biased compressors", 3, || {
+        ablations::def1_bias_ablation(2500, 0.02, 8)
+    });
+}

@@ -1,0 +1,26 @@
+//! Shared bench plumbing: every figure bench prints the paper series
+//! (the reproduction artifact) plus wall-clock stats from the built-in
+//! harness (`criterion` is unavailable offline).
+
+use adcdgd::experiments::FigureResult;
+use adcdgd::util::bench::bench;
+use std::time::Duration;
+
+/// Run a figure reproduction `f`, print its rendered series, and time
+/// repeated executions.
+pub fn figure_bench<F: FnMut() -> FigureResult>(name: &str, samples: usize, mut f: F) {
+    // First (reported) run.
+    let fr = f();
+    print!("{}", fr.render());
+    // Timing samples.
+    let r = bench(name, 0, samples, Duration::from_secs(30), || {
+        std::hint::black_box(f());
+    });
+    println!("{}", r.summary());
+    // Optional CSV dump for plotting.
+    if let Ok(dir) = std::env::var("ADCDGD_BENCH_OUT") {
+        let path = std::path::Path::new(&dir);
+        fr.write_csv(path).expect("csv write");
+        println!("   CSVs -> {dir}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Bench fig10: network-size scaling on circle topologies (100 trials).
+mod common;
+use adcdgd::experiments::fig10;
+
+fn main() {
+    common::figure_bench("fig10 (circle n=3,5,10,20; 100 trials)", 3, || {
+        fig10::run(&fig10::Params::default())
+    });
+}

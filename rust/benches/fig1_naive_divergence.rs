@@ -1,0 +1,7 @@
+//! Bench fig1: naive compressed DGD diverges, exact DGD settles.
+mod common;
+use adcdgd::experiments::fig1;
+
+fn main() {
+    common::figure_bench("fig1 (2-node, 1000 iters)", 10, || fig1::run(&fig1::Params::default()));
+}

@@ -1,0 +1,7 @@
+//! Bench fig5: ADC-DGD vs DGD vs DGD^t convergence on the 4-node net.
+mod common;
+use adcdgd::experiments::fig5;
+
+fn main() {
+    common::figure_bench("fig5 (4-node, 8 series)", 10, || fig5::run(&fig5::Params::default()));
+}

@@ -1,0 +1,7 @@
+//! Bench fig6: bytes exchanged vs gradient norm.
+mod common;
+use adcdgd::experiments::fig6;
+
+fn main() {
+    common::figure_bench("fig6 (bytes vs grad norm)", 10, || fig6::run(&fig6::Params::default()));
+}

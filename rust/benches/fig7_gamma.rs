@@ -1,0 +1,9 @@
+//! Bench fig7: γ sweep, 100-trial average objective curves.
+mod common;
+use adcdgd::experiments::fig7;
+
+fn main() {
+    common::figure_bench("fig7 (gamma sweep, 100 trials)", 3, || {
+        fig7::run(&fig7::Params::default())
+    });
+}

@@ -1,0 +1,9 @@
+//! Bench fig8: transmitted-value growth per γ (100-trial average).
+mod common;
+use adcdgd::experiments::fig8;
+
+fn main() {
+    common::figure_bench("fig8 (transmitted value, 100 trials)", 3, || {
+        fig8::run(&fig8::Params::default())
+    });
+}

@@ -1,0 +1,136 @@
+//! Hot-path micro-benchmarks (§Perf): per-round cost of each algorithm
+//! at increasing dimension P, compression/codec throughput, and the
+//! XLA-backed paths when artifacts are present.
+
+use adcdgd::algorithms::{
+    run_adc_dgd, run_dgd, AdcDgdOptions, CompressorRef, ObjectiveRef, StepSize,
+};
+use adcdgd::compress::{
+    Compressor, LowPrecisionQuantizer, Qsgd, RandomizedRounding, TernGrad,
+};
+use adcdgd::consensus::metropolis;
+use adcdgd::coordinator::RunConfig;
+use adcdgd::objective::DiagonalQuadratic;
+use adcdgd::rng::Xoshiro256pp;
+use adcdgd::topology;
+use adcdgd::util::bench::bench_print;
+use std::sync::Arc;
+
+fn quad_objectives(n: usize, p: usize, seed: u64) -> Vec<ObjectiveRef> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let d: Vec<f64> = (0..p).map(|_| 0.5 + rng.next_f64()).collect();
+            let b: Vec<f64> = (0..p).map(|_| rng.next_f64()).collect();
+            Arc::new(DiagonalQuadratic::new(d, b)) as ObjectiveRef
+        })
+        .collect()
+}
+
+fn round_throughput(p: usize, rounds: usize) {
+    let g = topology::ring(8);
+    let w = metropolis(&g);
+    let objs = quad_objectives(8, p, 1);
+    let cfg = RunConfig {
+        iterations: rounds,
+        step_size: StepSize::Constant(0.05),
+        record_every: rounds, // metrics off the hot path
+        ..RunConfig::default()
+    };
+    bench_print(&format!("dgd      ring8 P={p:<7} {rounds} rounds"), || {
+        std::hint::black_box(run_dgd(&g, &w, &objs, &cfg));
+    });
+    let comp: CompressorRef = Arc::new(LowPrecisionQuantizer::new(1.0 / 64.0));
+    bench_print(&format!("adc-dgd  ring8 P={p:<7} {rounds} rounds"), || {
+        std::hint::black_box(run_adc_dgd(
+            &g,
+            &w,
+            &objs,
+            comp.clone(),
+            &AdcDgdOptions::default(),
+            &cfg,
+        ));
+    });
+}
+
+fn compressor_throughput(p: usize) {
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let z: Vec<f64> = (0..p).map(|_| (rng.next_f64() - 0.5) * 100.0).collect();
+    let ops: Vec<(&str, Box<dyn Compressor>)> = vec![
+        ("rand-round", Box::new(RandomizedRounding::new())),
+        ("low-prec", Box::new(LowPrecisionQuantizer::new(0.01))),
+        ("qsgd-256", Box::new(Qsgd::new(256))),
+        ("terngrad", Box::new(TernGrad::new())),
+    ];
+    for (name, op) in ops {
+        let mut r = Xoshiro256pp::seed_from_u64(3);
+        let res = bench_print(&format!("compress {name:<11} P={p}"), || {
+            std::hint::black_box(op.compress(&z, &mut r));
+        });
+        let mps = p as f64 / res.mean() / 1e6;
+        println!("     -> {mps:.1} M elts/s");
+    }
+    // Decode path.
+    let mut r = Xoshiro256pp::seed_from_u64(4);
+    let c = RandomizedRounding::new().compress(&z, &mut r);
+    let mut out = vec![0.0; p];
+    let res = bench_print(&format!("decode   int16       P={p}"), || {
+        c.decode_into(std::hint::black_box(&mut out));
+    });
+    println!("     -> {:.1} M elts/s", p as f64 / res.mean() / 1e6);
+}
+
+fn xla_paths() {
+    let dir = adcdgd::runtime::artifacts_dir(None);
+    if !adcdgd::runtime::artifacts_available(&dir) {
+        println!("xla benches skipped (run `make artifacts`)");
+        return;
+    }
+    let rt = adcdgd::runtime::Runtime::cpu().expect("pjrt");
+    let manifest = adcdgd::runtime::Manifest::load(&dir).expect("manifest");
+    // Quantizer artifact throughput.
+    let q = Arc::new(rt.load(&dir, &manifest, "quantize").expect("quantize"));
+    let xq = adcdgd::runtime::XlaQuantizer::new(q);
+    let p = xq.block();
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let z: Vec<f64> = (0..p).map(|_| (rng.next_f64() - 0.5) * 10.0).collect();
+    let res = bench_print(&format!("xla-quantize (pallas)  P={p}"), || {
+        std::hint::black_box(xq.compress(&z, &mut rng));
+    });
+    println!("     -> {:.1} M elts/s", p as f64 / res.mean() / 1e6);
+    // Transformer step latency.
+    let tr = Arc::new(rt.load(&dir, &manifest, "transformer").expect("transformer"));
+    let spec = tr.spec().clone();
+    let gen = adcdgd::runtime::TokenGen::new(
+        spec.meta["vocab"] as usize,
+        spec.meta["seq_len"] as usize,
+        spec.meta["batch"] as usize,
+        1,
+        0.1,
+        0,
+    );
+    let obj = adcdgd::runtime::TransformerObjective::new(tr, gen).expect("objective");
+    let (file, _, total) = spec.params.clone().unwrap();
+    let x0: Vec<f64> = std::fs::read(dir.join(file))
+        .unwrap()
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64)
+        .collect();
+    assert_eq!(x0.len(), total);
+    let mut g = vec![0.0; total];
+    use adcdgd::objective::Objective;
+    bench_print(&format!("transformer fwd+bwd (P={total})"), || {
+        obj.grad_into(std::hint::black_box(&x0), &mut g);
+    });
+}
+
+fn main() {
+    println!("== L3 hot path ==");
+    for p in [100usize, 10_000, 100_000] {
+        round_throughput(p, 20);
+    }
+    println!("== compression codecs ==");
+    compressor_throughput(100_000);
+    println!("== XLA-backed paths ==");
+    xla_paths();
+}

@@ -1,0 +1,123 @@
+//! The algorithm family.
+//!
+//! Every algorithm is expressed as per-node [`NodeLogic`]: in each engine
+//! round a node (1) emits one message for its neighbors, (2) consumes the
+//! messages it received, updating its local state. The engines
+//! ([`crate::engine`]) own scheduling and message transport, so the same
+//! node logic runs unchanged on the deterministic sequential engine and on
+//! the multi-threaded engine.
+//!
+//! Implemented algorithms:
+//!
+//! * [`DgdNode`] — Algorithm 1 (Nedic–Ozdaglar DGD), raw f64 exchange.
+//! * [`DgdTNode`] — DGD^t (Berahas et al.): `t` consensus exchanges per
+//!   gradient step.
+//! * [`NaiveCompressedNode`] — Eq. (5): DGD with *directly* compressed
+//!   iterates; provably non-convergent (Fig. 1).
+//! * [`AdcDgdNode`] — **Algorithm 2, the paper's contribution**:
+//!   amplified-differential compression.
+//! * [`QdgdNode`] — QDGD-style baseline (Reisizadeh et al. 2018):
+//!   quantized neighbors with a damped mixing step.
+
+mod adc_dgd;
+mod dgd;
+mod dgd_t;
+mod naive_cdgd;
+mod qdgd;
+mod runners;
+
+pub use adc_dgd::{AdcDgdNode, AdcDgdOptions};
+pub use dgd::DgdNode;
+pub use dgd_t::DgdTNode;
+pub use naive_cdgd::NaiveCompressedNode;
+pub use qdgd::{QdgdNode, QdgdOptions};
+pub use runners::{
+    run_adc_dgd, run_dgd, run_dgd_t, run_naive_compressed, run_qdgd,
+};
+
+use crate::compress::Payload;
+use std::sync::Arc as StdArc;
+use crate::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+/// Step-size schedule `α_k` (k is 1-based).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepSize {
+    /// Constant `α`.
+    Constant(f64),
+    /// `α_k = alpha0 / k^eta` — the paper's diminishing schedule
+    /// (η = ½ gives the Theorem-3 optimal `o(1/√k)` regime).
+    Diminishing {
+        /// Numerator `α₀`.
+        alpha0: f64,
+        /// Decay exponent `η`.
+        eta: f64,
+    },
+}
+
+impl StepSize {
+    /// Evaluate `α_k` at (1-based) iteration `k`.
+    #[inline]
+    pub fn at(&self, k: usize) -> f64 {
+        match *self {
+            StepSize::Constant(a) => a,
+            StepSize::Diminishing { alpha0, eta } => alpha0 / (k as f64).powf(eta),
+        }
+    }
+}
+
+/// What a node hands to the engine each round.
+#[derive(Debug, Clone)]
+pub struct Outgoing {
+    /// Encoded message for every neighbor (broadcast semantics: the same
+    /// payload goes on each incident link).
+    pub payload: Payload,
+    /// `‖transmitted‖∞` *before* encoding — Fig. 8's y-axis (for ADC-DGD
+    /// this is `max|k^γ y|`; for others the raw state magnitude).
+    pub tx_magnitude: f64,
+    /// Elements saturated by the integer encoding this round.
+    pub saturated: usize,
+}
+
+/// Per-node algorithm state machine. One engine round = one
+/// `make_message` + one `consume` on every node.
+pub trait NodeLogic: Send {
+    /// Produce this round's broadcast message. `round` is 1-based.
+    fn make_message(&mut self, round: usize, rng: &mut Xoshiro256pp) -> Outgoing;
+
+    /// Consume the messages received this round (one per neighbor,
+    /// tagged with the sender id) and update local state.
+    fn consume(&mut self, round: usize, inbox: &[(usize, StdArc<Payload>)], rng: &mut Xoshiro256pp);
+
+    /// Current local iterate `x_i`.
+    fn state(&self) -> &[f64];
+
+    /// Number of *gradient* iterations completed (differs from rounds for
+    /// DGD^t, which performs `t` rounds per gradient step).
+    fn grad_steps(&self) -> usize;
+}
+
+/// Factory that builds the per-node logic for node `i`. The engines call
+/// this once per node at startup.
+pub type NodeFactory<'a> = dyn Fn(usize) -> Box<dyn NodeLogic> + Sync + 'a;
+
+/// Shared handle types used across node implementations.
+pub type ObjectiveRef = Arc<dyn crate::objective::Objective>;
+/// Shared compressor handle.
+pub type CompressorRef = Arc<dyn crate::compress::Compressor>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_size_schedules() {
+        let c = StepSize::Constant(0.1);
+        assert_eq!(c.at(1), 0.1);
+        assert_eq!(c.at(1000), 0.1);
+        let d = StepSize::Diminishing { alpha0: 1.0, eta: 0.5 };
+        assert!((d.at(1) - 1.0).abs() < 1e-12);
+        assert!((d.at(4) - 0.5).abs() < 1e-12);
+        assert!((d.at(100) - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,129 @@
+//! DGD with *directly* compressed iterates — paper Eq. (5).
+//!
+//! Each node broadcasts `C(x_i)`; receivers mix the noisy copies. The
+//! compression noise `Σ_j W_ij ε_{x_j}` has constant variance and is
+//! injected every iteration, so it never vanishes: the iterates hover in a
+//! noise ball and the method **does not converge** (the paper's Fig. 1
+//! motivating example). Implemented to reproduce exactly that failure.
+
+use super::{CompressorRef, NodeLogic, ObjectiveRef, Outgoing, StepSize};
+use crate::compress::Payload;
+use crate::linalg::vecops;
+use crate::rng::Xoshiro256pp;
+
+/// Per-node state for naive compressed DGD.
+pub struct NaiveCompressedNode {
+    id: usize,
+    weights: Vec<f64>,
+    objective: ObjectiveRef,
+    compressor: CompressorRef,
+    step: StepSize,
+    x: Vec<f64>,
+    grad: Vec<f64>,
+    mix: Vec<f64>,
+    steps: usize,
+}
+
+impl NaiveCompressedNode {
+    /// Create node `id`.
+    pub fn new(
+        id: usize,
+        weights: Vec<f64>,
+        objective: ObjectiveRef,
+        compressor: CompressorRef,
+        step: StepSize,
+    ) -> Self {
+        let p = objective.dim();
+        Self {
+            id,
+            weights,
+            objective,
+            compressor,
+            step,
+            x: vec![0.0; p],
+            grad: vec![0.0; p],
+            mix: vec![0.0; p],
+            steps: 0,
+        }
+    }
+}
+
+impl NodeLogic for NaiveCompressedNode {
+    fn make_message(&mut self, _round: usize, rng: &mut Xoshiro256pp) -> Outgoing {
+        let c = self.compressor.compress(&self.x, rng);
+        Outgoing {
+            tx_magnitude: vecops::norm_inf(&self.x),
+            saturated: c.saturated,
+            payload: c.payload,
+        }
+    }
+
+    fn consume(&mut self, round: usize, inbox: &[(usize, std::sync::Arc<Payload>)], _rng: &mut Xoshiro256pp) {
+        // Own term uncompressed (Eq. 5's noise comes from neighbors only).
+        self.mix.copy_from_slice(&self.x);
+        vecops::scale(&mut self.mix, self.weights[self.id]);
+        for (j, payload) in inbox {
+            payload.decode_axpy(self.weights[*j], &mut self.mix);
+        }
+        self.objective.grad_into(&self.x, &mut self.grad);
+        let alpha = self.step.at(round);
+        std::mem::swap(&mut self.x, &mut self.mix);
+        vecops::axpy(-alpha, &self.grad, &mut self.x);
+        self.steps += 1;
+    }
+
+    fn state(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn grad_steps(&self) -> usize {
+        self.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::RandomizedRounding;
+    use crate::objective::ScalarQuadratic;
+    use std::sync::Arc;
+
+    /// Fig. 1's phenomenon: the iterates keep fluctuating at the
+    /// compression-noise scale instead of settling.
+    #[test]
+    fn naive_compression_does_not_settle() {
+        let w = [[0.5, 0.5], [0.5, 0.5]];
+        let objs: Vec<ObjectiveRef> = vec![
+            Arc::new(ScalarQuadratic::new(4.0, 2.0)),
+            Arc::new(ScalarQuadratic::new(2.0, -3.0)),
+        ];
+        let comp: CompressorRef = Arc::new(RandomizedRounding::new());
+        let mut nodes: Vec<NaiveCompressedNode> = (0..2)
+            .map(|i| {
+                NaiveCompressedNode::new(
+                    i,
+                    w[i].to_vec(),
+                    objs[i].clone(),
+                    comp.clone(),
+                    StepSize::Constant(0.02),
+                )
+            })
+            .collect();
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut tail_dev: f64 = 0.0;
+        for k in 1..=2000 {
+            let msgs: Vec<Payload> =
+                nodes.iter_mut().map(|n| n.make_message(k, &mut rng).payload).collect();
+            nodes[0].consume(k, &[(1, Arc::new(msgs[1].clone()))], &mut rng);
+            nodes[1].consume(k, &[(0, Arc::new(msgs[0].clone()))], &mut rng);
+            if k > 1500 {
+                // Distance to the true optimum x* = 1/3 stays noise-scale.
+                tail_dev = tail_dev.max((nodes[0].state()[0] - 1.0 / 3.0).abs());
+            }
+        }
+        assert!(
+            tail_dev > 0.05,
+            "naive compressed DGD unexpectedly converged (tail dev {tail_dev})"
+        );
+    }
+}

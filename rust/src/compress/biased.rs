@@ -1,0 +1,165 @@
+//! *Biased* compression operators — deliberately **outside** the paper's
+//! Definition 1.
+//!
+//! The paper's convergence theory requires `E[C(z)] = z`. Top-k
+//! sparsification and 1-bit sign compression are popular in practice but
+//! biased; plugging them into ADC-DGD voids the variance-reduction
+//! argument. They are provided (a) for the `ablation: def1` experiment,
+//! which demonstrates empirically that the unbiasedness assumption is
+//! *load-bearing* — ADC-DGD's error with a biased operator stalls above
+//! the unbiased operators' — and (b) as building blocks for
+//! error-feedback extensions (future work the paper's conclusion hints
+//! at).
+
+use super::{Compressed, Compressor, Payload};
+use crate::rng::Xoshiro256pp;
+
+/// Top-k magnitude sparsification: keeps the `k` largest-|z| entries
+/// exactly, zeroes the rest. Biased: `E[C(z)] ≠ z` whenever any entry is
+/// dropped.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    k: usize,
+}
+
+impl TopK {
+    /// Keep the `k ≥ 1` largest-magnitude entries.
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        Self { k }
+    }
+}
+
+impl Compressor for TopK {
+    fn compress(&self, z: &[f64], _rng: &mut Xoshiro256pp) -> Compressed {
+        let k = self.k.min(z.len());
+        // Partial select of the k largest by |value|.
+        let mut order: Vec<usize> = (0..z.len()).collect();
+        order.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+            z[b].abs().partial_cmp(&z[a].abs()).unwrap()
+        });
+        let mut idx: Vec<u32> = order[..k].iter().map(|&i| i as u32).collect();
+        idx.sort_unstable();
+        // Values sent exactly (f32 precision on the wire via scale=1,
+        // quantized i16 grid of 2^-8 — close enough to "exact" for the
+        // ablation while keeping the sparse wire format).
+        let scale = 1.0 / 256.0;
+        let mut saturated = 0usize;
+        let val: Vec<i16> = idx
+            .iter()
+            .map(|&i| {
+                let q = (z[i as usize] / scale).round();
+                if q > i16::MAX as f64 {
+                    saturated += 1;
+                    i16::MAX
+                } else if q < i16::MIN as f64 {
+                    saturated += 1;
+                    i16::MIN
+                } else {
+                    q as i16
+                }
+            })
+            .collect();
+        Compressed {
+            payload: Payload::SparseI16 { len: z.len(), scale, idx, val },
+            saturated,
+        }
+    }
+
+    fn variance_bound(&self) -> Option<f64> {
+        None // biased — Definition 1 does not hold
+    }
+
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn bytes_per_element(&self) -> f64 {
+        6.0 // per *kept* element
+    }
+}
+
+/// 1-bit sign compression with mean-magnitude scale:
+/// `C(z) = (‖z‖₁/P) · sign(z)`. Biased for general `z`.
+#[derive(Debug, Clone, Default)]
+pub struct SignOneBit;
+
+impl SignOneBit {
+    /// New sign compressor.
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Compressor for SignOneBit {
+    fn compress(&self, z: &[f64], _rng: &mut Xoshiro256pp) -> Compressed {
+        let p = z.len();
+        let scale = if p == 0 { 0.0 } else { z.iter().map(|v| v.abs()).sum::<f64>() / p as f64 };
+        let t: Vec<i8> = z.iter().map(|&v| if v >= 0.0 { 1 } else { -1 }).collect();
+        Compressed { payload: Payload::pack_ternary(p, scale, &t), saturated: 0 }
+    }
+
+    fn variance_bound(&self) -> Option<f64> {
+        None // biased
+    }
+
+    fn name(&self) -> &'static str {
+        "sign1bit"
+    }
+
+    fn bytes_per_element(&self) -> f64 {
+        0.25
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::stats::empirical_bias_and_variance;
+
+    #[test]
+    fn topk_keeps_largest() {
+        let op = TopK::new(2);
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let z = vec![0.1, -5.0, 0.2, 3.0];
+        let d = op.compress(&z, &mut rng).decode();
+        assert_eq!(d[0], 0.0);
+        assert!((d[1] + 5.0).abs() < 0.01);
+        assert_eq!(d[2], 0.0);
+        assert!((d[3] - 3.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn topk_is_biased() {
+        let op = TopK::new(1);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let (bias, _) = empirical_bias_and_variance(&op, &[1.0, 0.5], 100, &mut rng);
+        assert!(bias > 0.4, "top-1 must drop the 0.5 entry: bias {bias}");
+    }
+
+    #[test]
+    fn sign_is_biased_but_directional() {
+        let op = SignOneBit::new();
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let z = vec![2.0, -0.5, 1.0];
+        let d = op.compress(&z, &mut rng).decode();
+        // Signs preserved, magnitudes collapsed to the mean |z|.
+        assert!(d[0] > 0.0 && d[1] < 0.0 && d[2] > 0.0);
+        let scale = (2.0 + 0.5 + 1.0) / 3.0;
+        assert!((d[0] - scale).abs() < 1e-12);
+        let (bias, _) = empirical_bias_and_variance(&op, &z, 50, &mut rng);
+        assert!(bias > 0.5, "sign compression is biased: {bias}");
+    }
+
+    #[test]
+    fn wire_formats_roundtrip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let z: Vec<f64> = (0..100).map(|i| (i as f64 - 50.0) / 10.0).collect();
+        let c = TopK::new(10).compress(&z, &mut rng);
+        assert_eq!(c.decode().len(), 100);
+        assert_eq!(c.wire_bytes(), 10 * 6);
+        let s = SignOneBit::new().compress(&z, &mut rng);
+        assert_eq!(s.decode().len(), 100);
+        assert_eq!(s.wire_bytes(), 8 + 25);
+    }
+}

@@ -1,0 +1,310 @@
+//! Wire payload encodings and byte accounting.
+//!
+//! Byte accounting matches the paper's §V-1 convention: integer payloads
+//! cost their integer width per element, floats cost 8 B (f64) or 4 B
+//! (f32); sparse payloads cost index + value bytes per *stored* element;
+//! ternary payloads pack 4 values per byte plus an 8-byte scale.
+
+/// Kind tag for a payload (used in metrics/reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// Raw f64.
+    F64,
+    /// Raw f32.
+    F32,
+    /// Scaled i16 grid values.
+    I16,
+    /// Scaled i8 grid values.
+    I8,
+    /// Sparse scaled i16 values with u32 indices.
+    SparseI16,
+    /// Packed 2-bit ternary with an f64 scale.
+    Ternary,
+}
+
+/// An encoded message payload.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Raw f64 values (8 B/elt) — the uncompressed DGD wire format.
+    F64(Vec<f64>),
+    /// Raw f32 values (4 B/elt).
+    F32(Vec<f32>),
+    /// `value = scale * q` with `q: i16` (2 B/elt — the paper's 'int16').
+    I16 {
+        /// Grid step.
+        scale: f64,
+        /// Quantized values.
+        data: Vec<i16>,
+    },
+    /// `value = scale * q` with `q: i8` (1 B/elt).
+    I8 {
+        /// Grid step.
+        scale: f64,
+        /// Quantized values.
+        data: Vec<i8>,
+    },
+    /// Sparse: only nonzero grid values are sent (4 B index + 2 B value
+    /// per stored element).
+    SparseI16 {
+        /// Dense length.
+        len: usize,
+        /// Grid step.
+        scale: f64,
+        /// Indices of nonzeros.
+        idx: Vec<u32>,
+        /// Their quantized values.
+        val: Vec<i16>,
+    },
+    /// Ternary values in {−1, 0, +1} packed 4-per-byte, scaled.
+    Ternary {
+        /// Dense length.
+        len: usize,
+        /// Scale `s` (value = s · t).
+        scale: f64,
+        /// 2-bit packed codes (00 = 0, 01 = +1, 10 = −1).
+        packed: Vec<u8>,
+    },
+}
+
+impl Payload {
+    /// Number of logical (dense) elements.
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::F64(v) => v.len(),
+            Payload::F32(v) => v.len(),
+            Payload::I16 { data, .. } => data.len(),
+            Payload::I8 { data, .. } => data.len(),
+            Payload::SparseI16 { len, .. } => *len,
+            Payload::Ternary { len, .. } => *len,
+        }
+    }
+
+    /// True when the payload has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload kind tag.
+    pub fn kind(&self) -> PayloadKind {
+        match self {
+            Payload::F64(_) => PayloadKind::F64,
+            Payload::F32(_) => PayloadKind::F32,
+            Payload::I16 { .. } => PayloadKind::I16,
+            Payload::I8 { .. } => PayloadKind::I8,
+            Payload::SparseI16 { .. } => PayloadKind::SparseI16,
+            Payload::Ternary { .. } => PayloadKind::Ternary,
+        }
+    }
+
+    /// Wire size in bytes (paper §V-1 accounting; payload only).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::F64(v) => 8 * v.len(),
+            Payload::F32(v) => 4 * v.len(),
+            Payload::I16 { data, .. } => 2 * data.len(),
+            Payload::I8 { data, .. } => data.len(),
+            Payload::SparseI16 { idx, val, .. } => 4 * idx.len() + 2 * val.len(),
+            Payload::Ternary { packed, .. } => 8 + packed.len(),
+        }
+    }
+
+    /// Decode to owned f64 values.
+    pub fn decode(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.len()];
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Decode into a preallocated buffer of exactly `self.len()` elements.
+    pub fn decode_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.len(), "decode buffer size mismatch");
+        match self {
+            Payload::F64(v) => out.copy_from_slice(v),
+            Payload::F32(v) => {
+                for (o, x) in out.iter_mut().zip(v.iter()) {
+                    *o = *x as f64;
+                }
+            }
+            Payload::I16 { scale, data } => {
+                for (o, q) in out.iter_mut().zip(data.iter()) {
+                    *o = *scale * *q as f64;
+                }
+            }
+            Payload::I8 { scale, data } => {
+                for (o, q) in out.iter_mut().zip(data.iter()) {
+                    *o = *scale * *q as f64;
+                }
+            }
+            Payload::SparseI16 { scale, idx, val, .. } => {
+                for o in out.iter_mut() {
+                    *o = 0.0;
+                }
+                for (i, q) in idx.iter().zip(val.iter()) {
+                    out[*i as usize] = *scale * *q as f64;
+                }
+            }
+            Payload::Ternary { len, scale, packed } => {
+                for (i, o) in out.iter_mut().enumerate().take(*len) {
+                    let byte = packed[i / 4];
+                    let code = (byte >> ((i % 4) * 2)) & 0b11;
+                    *o = match code {
+                        0b01 => *scale,
+                        0b10 => -*scale,
+                        _ => 0.0,
+                    };
+                }
+            }
+        }
+    }
+
+    /// Fused decode + scaled accumulate: `out[i] += scale · decode(self)[i]`
+    /// in a single pass (hot-path: avoids materializing the decoded
+    /// vector — one memory pass instead of two).
+    pub fn decode_axpy(&self, scale: f64, out: &mut [f64]) {
+        assert_eq!(out.len(), self.len(), "decode_axpy buffer size mismatch");
+        match self {
+            Payload::F64(v) => {
+                for (o, x) in out.iter_mut().zip(v.iter()) {
+                    *o += scale * *x;
+                }
+            }
+            Payload::F32(v) => {
+                for (o, x) in out.iter_mut().zip(v.iter()) {
+                    *o += scale * *x as f64;
+                }
+            }
+            Payload::I16 { scale: s, data } => {
+                let c = scale * *s;
+                for (o, q) in out.iter_mut().zip(data.iter()) {
+                    *o += c * *q as f64;
+                }
+            }
+            Payload::I8 { scale: s, data } => {
+                let c = scale * *s;
+                for (o, q) in out.iter_mut().zip(data.iter()) {
+                    *o += c * *q as f64;
+                }
+            }
+            Payload::SparseI16 { scale: s, idx, val, .. } => {
+                let c = scale * *s;
+                for (i, q) in idx.iter().zip(val.iter()) {
+                    out[*i as usize] += c * *q as f64;
+                }
+            }
+            Payload::Ternary { len, scale: s, packed } => {
+                let c = scale * *s;
+                for (i, o) in out.iter_mut().enumerate().take(*len) {
+                    let code = (packed[i / 4] >> ((i % 4) * 2)) & 0b11;
+                    match code {
+                        0b01 => *o += c,
+                        0b10 => *o -= c,
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pack a ternary slice (values in {−1, 0, 1}) into 2-bit codes.
+    pub fn pack_ternary(len: usize, scale: f64, ternary: &[i8]) -> Payload {
+        assert_eq!(ternary.len(), len);
+        let mut packed = vec![0u8; len.div_ceil(4)];
+        for (i, &t) in ternary.iter().enumerate() {
+            let code: u8 = match t {
+                1 => 0b01,
+                -1 => 0b10,
+                0 => 0b00,
+                other => panic!("ternary value out of range: {other}"),
+            };
+            packed[i / 4] |= code << ((i % 4) * 2);
+        }
+        Payload::Ternary { len, scale, packed }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_roundtrip_and_bytes() {
+        let p = Payload::F64(vec![1.5, -2.5]);
+        assert_eq!(p.wire_bytes(), 16);
+        assert_eq!(p.decode(), vec![1.5, -2.5]);
+        assert_eq!(p.kind(), PayloadKind::F64);
+    }
+
+    #[test]
+    fn i16_roundtrip() {
+        let p = Payload::I16 { scale: 0.5, data: vec![3, -4, 0] };
+        assert_eq!(p.wire_bytes(), 6);
+        assert_eq!(p.decode(), vec![1.5, -2.0, 0.0]);
+    }
+
+    #[test]
+    fn i8_roundtrip() {
+        let p = Payload::I8 { scale: 2.0, data: vec![-1, 5] };
+        assert_eq!(p.wire_bytes(), 2);
+        assert_eq!(p.decode(), vec![-2.0, 10.0]);
+    }
+
+    #[test]
+    fn sparse_roundtrip() {
+        let p = Payload::SparseI16 { len: 5, scale: 1.0, idx: vec![1, 4], val: vec![7, -2] };
+        assert_eq!(p.wire_bytes(), 4 * 2 + 2 * 2);
+        assert_eq!(p.decode(), vec![0.0, 7.0, 0.0, 0.0, -2.0]);
+    }
+
+    #[test]
+    fn ternary_roundtrip() {
+        let vals: Vec<i8> = vec![1, 0, -1, 1, -1, 0, 0, 1, 1];
+        let p = Payload::pack_ternary(vals.len(), 2.5, &vals);
+        let expect: Vec<f64> = vals.iter().map(|&t| 2.5 * t as f64).collect();
+        assert_eq!(p.decode(), expect);
+        // 9 values -> 3 packed bytes + 8 scale bytes
+        assert_eq!(p.wire_bytes(), 11);
+    }
+
+    #[test]
+    fn decode_into_rejects_wrong_size() {
+        let p = Payload::F64(vec![1.0]);
+        let mut out = vec![0.0; 2];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.decode_into(&mut out);
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn decode_axpy_matches_decode_then_axpy() {
+        let payloads = vec![
+            Payload::F64(vec![1.5, -2.0, 0.25]),
+            Payload::F32(vec![0.5, 1.0, -3.0]),
+            Payload::I16 { scale: 0.5, data: vec![3, -4, 0] },
+            Payload::I8 { scale: 2.0, data: vec![-1, 5, 2] },
+            Payload::SparseI16 { len: 3, scale: 1.5, idx: vec![0, 2], val: vec![2, -1] },
+            Payload::pack_ternary(3, 2.5, &[1, 0, -1]),
+        ];
+        for p in payloads {
+            let mut fused = vec![10.0, 20.0, 30.0];
+            p.decode_axpy(0.7, &mut fused);
+            let mut reference = vec![10.0, 20.0, 30.0];
+            for (r, d) in reference.iter_mut().zip(p.decode().iter()) {
+                *r += 0.7 * d;
+            }
+            for (a, b) in fused.iter().zip(reference.iter()) {
+                assert!((a - b).abs() < 1e-12, "{:?}", p.kind());
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_bytes_match_paper_convention() {
+        // 2 B/elt for int16, 8 B/elt for double — the Fig. 6 axis rule.
+        let p = 100;
+        let int16 = Payload::I16 { scale: 1.0, data: vec![0; p] };
+        let double = Payload::F64(vec![0.0; p]);
+        assert_eq!(int16.wire_bytes(), 2 * p);
+        assert_eq!(double.wire_bytes(), 8 * p);
+    }
+}

@@ -1,0 +1,83 @@
+//! Compression operators (paper Definition 1) and wire encodings.
+//!
+//! A compression operator `C(·)` is *unbiased* when `C(z) = z + ε_z` with
+//! `E[ε_z] = 0` and `E[ε_z²] ≤ σ²` for every `z`. The paper's three
+//! examples are implemented here, plus TernGrad- and QSGD-style operators
+//! from the cited literature and the identity (no compression):
+//!
+//! * [`LowPrecisionQuantizer`] — Example 1: stochastic snap to a uniform
+//!   grid with step Δ (σ² = Δ²/4).
+//! * [`RandomizedRounding`] — Example 2: stochastic rounding to integers
+//!   (Δ = 1). Note: the paper's Example 2 states "⌊z⌋+1 w.p. (1−p), ⌊z⌋
+//!   w.p. p" with p = z − ⌊z⌋, which is *biased* as written (E = ⌊z⌋+1−p ≠ z
+//!   only when read literally); we implement the standard unbiased version
+//!   — round **up** with probability equal to the fractional part — which
+//!   is what the paper's Def. 1 requires and what its analysis uses.
+//! * [`QuantizationSparsifier`] — Example 3: values snap to the next grid
+//!   level with probability |z|/a_{i+1}, else to 0 ⇒ sparse messages.
+//! * [`TernGrad`] — ternary {−s, 0, +s} with per-message scale s = max|z|.
+//! * [`Qsgd`] — s-level quantization relative to ‖z‖₂ with sign.
+//! * [`Identity`] — transmits raw f64 (8 B/element), the DGD baseline.
+//!
+//! Wire cost accounting follows the paper's convention (§V-1): compressed
+//! integer payloads cost 2 B/element ('int16'), uncompressed values cost
+//! 8 B/element ('double'). [`Payload::wire_bytes`] implements exactly that
+//! (payload only, no framing), so Fig. 6's byte axis is reproducible.
+
+mod biased;
+mod codec;
+mod operators;
+pub mod stats;
+
+pub use biased::{SignOneBit, TopK};
+pub use codec::{Payload, PayloadKind};
+pub use operators::{
+    Identity, LowPrecisionQuantizer, Qsgd, QuantizationSparsifier, RandomizedRounding, TernGrad,
+};
+
+use crate::rng::Xoshiro256pp;
+
+/// Result of compressing one vector.
+#[derive(Debug, Clone)]
+pub struct Compressed {
+    /// Encoded payload (what goes on the wire).
+    pub payload: Payload,
+    /// Number of elements that exceeded the integer range of the encoding
+    /// and were saturated. Nonzero saturation means the operator is no
+    /// longer unbiased — the overflow failure mode of §IV-D / Fig. 8.
+    pub saturated: usize,
+}
+
+impl Compressed {
+    /// Decode to f64 values (allocating).
+    pub fn decode(&self) -> Vec<f64> {
+        self.payload.decode()
+    }
+
+    /// Decode into a preallocated buffer (hot path).
+    pub fn decode_into(&self, out: &mut [f64]) {
+        self.payload.decode_into(out)
+    }
+
+    /// Bytes this message occupies on the wire (paper accounting).
+    pub fn wire_bytes(&self) -> usize {
+        self.payload.wire_bytes()
+    }
+}
+
+/// An unbiased stochastic compression operator (paper Definition 1).
+pub trait Compressor: Send + Sync {
+    /// Compress `z`, drawing any randomness from `rng`.
+    fn compress(&self, z: &[f64], rng: &mut Xoshiro256pp) -> Compressed;
+
+    /// Theoretical per-element variance bound σ², when known in closed
+    /// form. `None` for operators whose bound depends on the input (e.g.
+    /// TernGrad's scale).
+    fn variance_bound(&self) -> Option<f64>;
+
+    /// Human-readable name used in experiment reports.
+    fn name(&self) -> &'static str;
+
+    /// Bytes per element on the wire for this operator's encoding.
+    fn bytes_per_element(&self) -> f64;
+}

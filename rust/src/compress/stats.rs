@@ -1,0 +1,74 @@
+//! Empirical verification of Definition 1 (unbiasedness + bounded
+//! variance) for any [`Compressor`]. Used by unit tests and the
+//! compressor-comparison ablation.
+
+use super::Compressor;
+use crate::rng::Xoshiro256pp;
+
+/// Monte-Carlo estimate of the compression error moments for a fixed input
+/// `z`: returns `(max_abs_bias, max_per_element_variance)` over the
+/// elements of `z`, using `trials` independent compressions.
+pub fn empirical_bias_and_variance(
+    op: &dyn Compressor,
+    z: &[f64],
+    trials: usize,
+    rng: &mut Xoshiro256pp,
+) -> (f64, f64) {
+    let p = z.len();
+    let mut sum = vec![0.0f64; p];
+    let mut sum_sq = vec![0.0f64; p];
+    let mut buf = vec![0.0f64; p];
+    for _ in 0..trials {
+        let c = op.compress(z, rng);
+        c.decode_into(&mut buf);
+        for i in 0..p {
+            let e = buf[i] - z[i];
+            sum[i] += e;
+            sum_sq[i] += e * e;
+        }
+    }
+    let n = trials as f64;
+    let mut max_bias = 0.0f64;
+    let mut max_var = 0.0f64;
+    for i in 0..p {
+        let mean = sum[i] / n;
+        let var = sum_sq[i] / n - mean * mean;
+        max_bias = max_bias.max(mean.abs());
+        max_var = max_var.max(var);
+    }
+    (max_bias, max_var)
+}
+
+/// Mean wire bytes per element for `op` on input `z` over `trials`
+/// compressions (stochastic for sparse operators).
+pub fn mean_wire_bytes_per_element(
+    op: &dyn Compressor,
+    z: &[f64],
+    trials: usize,
+    rng: &mut Xoshiro256pp,
+) -> f64 {
+    let total: usize = (0..trials).map(|_| op.compress(z, rng).wire_bytes()).sum();
+    total as f64 / (trials * z.len()) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, RandomizedRounding};
+
+    #[test]
+    fn identity_has_zero_moments() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let (b, v) = empirical_bias_and_variance(&Identity::new(), &[1.0, -2.0], 100, &mut rng);
+        assert_eq!(b, 0.0);
+        assert_eq!(v, 0.0);
+    }
+
+    #[test]
+    fn wire_bytes_per_element() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let bpe =
+            mean_wire_bytes_per_element(&RandomizedRounding::new(), &[0.5; 10], 10, &mut rng);
+        assert_eq!(bpe, 2.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Consensus-matrix constructions.
+
+use super::{ConsensusMatrix, ValidationError};
+use crate::linalg::Matrix;
+use crate::topology::Graph;
+
+/// Metropolis–Hastings weights:
+/// `W_ij = 1 / (1 + max(d_i, d_j))` for links, diagonal absorbs the rest.
+/// Always doubly stochastic and symmetric on any graph; `β < 1` iff
+/// connected.
+pub fn metropolis(g: &Graph) -> ConsensusMatrix {
+    let n = g.num_nodes();
+    let mut w = Matrix::zeros(n, n);
+    for &(i, j) in g.edges() {
+        let v = 1.0 / (1.0 + g.degree(i).max(g.degree(j)) as f64);
+        w[(i, j)] = v;
+        w[(j, i)] = v;
+    }
+    for i in 0..n {
+        let off: f64 = g.neighbors(i).iter().map(|&j| w[(i, j)]).sum();
+        w[(i, i)] = 1.0 - off;
+    }
+    ConsensusMatrix::new(w, g).expect("Metropolis weights are always valid on a connected graph")
+}
+
+/// Lazy Metropolis: `(I + W_MH) / 2`. Guarantees all eigenvalues ≥ 0, so
+/// `β = λ₂` and oscillation (negative eigenvalues) is impossible.
+pub fn lazy_metropolis(g: &Graph) -> ConsensusMatrix {
+    let mh = metropolis(g);
+    let n = g.num_nodes();
+    let mut w = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            w[(i, j)] = 0.5 * mh.weight(i, j) + if i == j { 0.5 } else { 0.0 };
+        }
+    }
+    ConsensusMatrix::new(w, g).expect("lazy Metropolis weights are always valid")
+}
+
+/// Max-degree weights: `W_ij = 1/(1+Δ)` on links with `Δ` the maximum
+/// degree, diagonal absorbs the rest.
+pub fn max_degree(g: &Graph) -> ConsensusMatrix {
+    let n = g.num_nodes();
+    let d = g.max_degree() as f64;
+    let v = 1.0 / (1.0 + d);
+    let mut w = Matrix::zeros(n, n);
+    for &(i, j) in g.edges() {
+        w[(i, j)] = v;
+        w[(j, i)] = v;
+    }
+    for i in 0..n {
+        w[(i, i)] = 1.0 - v * g.degree(i) as f64;
+    }
+    ConsensusMatrix::new(w, g).expect("max-degree weights are always valid")
+}
+
+/// A user-supplied matrix, validated.
+pub fn custom(w: Matrix, g: &Graph) -> Result<ConsensusMatrix, ValidationError> {
+    ConsensusMatrix::new(w, g)
+}
+
+/// The paper's Fig. 4 consensus matrix for the Fig. 3 four-node topology.
+pub fn paper_four_node_w() -> (Graph, ConsensusMatrix) {
+    let g = crate::topology::paper_four_node();
+    let w = Matrix::from_rows(&[
+        vec![0.25, 0.25, 0.25, 0.25],
+        vec![0.25, 0.75, 0.0, 0.0],
+        vec![0.25, 0.0, 0.75, 0.0],
+        vec![0.25, 0.0, 0.0, 0.75],
+    ]);
+    let cm = ConsensusMatrix::new(w, &g).expect("paper W is valid");
+    (g, cm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology;
+
+    #[test]
+    fn metropolis_on_standard_graphs() {
+        for g in [
+            topology::pair(),
+            topology::ring(5),
+            topology::star(6),
+            topology::complete(4),
+            topology::grid2d(3, 3),
+            topology::erdos_renyi(10, 0.4, 3),
+            topology::barabasi_albert(20, 2, 3),
+        ] {
+            let cm = metropolis(&g);
+            assert!(cm.beta() < 1.0, "beta={} on {:?} nodes", cm.beta(), g.num_nodes());
+        }
+    }
+
+    #[test]
+    fn metropolis_pair_is_half_half() {
+        let cm = metropolis(&topology::pair());
+        assert!((cm.weight(0, 1) - 0.5).abs() < 1e-12);
+        assert!((cm.weight(0, 0) - 0.5).abs() < 1e-12);
+        assert!(cm.beta() < 1e-9); // eigenvalues {1, 0}
+    }
+
+    #[test]
+    fn lazy_metropolis_has_nonneg_spectrum() {
+        // β(lazy) corresponds to eigenvalues (1+λ)/2 ∈ [0,1]; for the ring
+        // the most negative MH eigenvalue maps above 0, so the lazy β is
+        // (1+λ₂)/2.
+        let g = topology::ring(6);
+        let mh = metropolis(&g);
+        let lz = lazy_metropolis(&g);
+        assert!(lz.beta() < 1.0);
+        // Lazy β = (1+β_signed_top)/2 where β_signed_top = λ₂(MH).
+        // Sanity: lazy beta within (0,1) and no larger than (1+β_MH)/2.
+        assert!(lz.beta() <= (1.0 + mh.beta()) / 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn max_degree_valid_on_star() {
+        let g = topology::star(8);
+        let cm = max_degree(&g);
+        assert!(cm.beta() < 1.0);
+        assert!((cm.weight(0, 1) - 1.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_four_node_pair_is_consistent() {
+        let (g, cm) = paper_four_node_w();
+        assert_eq!(g.num_nodes(), 4);
+        assert!((cm.beta() - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn custom_rejects_invalid() {
+        let g = topology::pair();
+        let bad = Matrix::from_rows(&[vec![0.9, 0.1], vec![0.1, 0.9]]);
+        assert!(custom(bad, &g).is_ok());
+        let worse = Matrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
+        assert!(custom(worse, &g).is_err());
+    }
+}

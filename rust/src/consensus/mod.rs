@@ -1,0 +1,13 @@
+//! Consensus (mixing) matrices.
+//!
+//! A consensus matrix `W ∈ R^{N×N}` must satisfy the paper's §III-A
+//! properties: doubly stochastic, sparsity pattern matching the topology
+//! (positive on links and the diagonal may be positive; zero elsewhere),
+//! and symmetric. Its second-largest eigenvalue magnitude
+//! `β = max(|λ₂|, |λ_N|) < 1` governs consensus speed.
+
+mod builders;
+mod matrix;
+
+pub use builders::{custom, lazy_metropolis, max_degree, metropolis, paper_four_node_w};
+pub use matrix::{ConsensusMatrix, ValidationError};

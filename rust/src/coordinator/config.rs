@@ -1,0 +1,64 @@
+//! Run configuration.
+
+use crate::algorithms::StepSize;
+use crate::network::LinkModel;
+
+/// Which engine executes the nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Single-threaded deterministic reference engine.
+    #[default]
+    Sequential,
+    /// One OS thread per node (bit-identical results; real contention).
+    Threaded,
+}
+
+/// Configuration of one run.
+#[derive(Debug, Clone, Copy)]
+pub struct RunConfig {
+    /// Engine rounds to execute (for DGD^t one *gradient* iteration takes
+    /// `t` rounds).
+    pub iterations: usize,
+    /// Step-size schedule α_k.
+    pub step_size: StepSize,
+    /// Master seed. Node RNG streams and loss injection derive from it.
+    pub seed: u64,
+    /// Record metrics every this many rounds (1 = every round). The final
+    /// round is always recorded.
+    pub record_every: usize,
+    /// Stop when `‖(1/N)Σ∇f_i(x̄)‖` falls at or below this threshold
+    /// (None = run all iterations).
+    pub grad_tol: Option<f64>,
+    /// Link model (bandwidth / latency / loss).
+    pub link: LinkModel,
+    /// Engine selection.
+    pub engine: EngineKind,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            iterations: 1000,
+            step_size: StepSize::Constant(0.05),
+            seed: 0,
+            record_every: 1,
+            grad_tol: None,
+            link: LinkModel::default(),
+            engine: EngineKind::Sequential,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.iterations, 1000);
+        assert_eq!(c.record_every, 1);
+        assert_eq!(c.engine, EngineKind::Sequential);
+        assert!(c.grad_tol.is_none());
+    }
+}

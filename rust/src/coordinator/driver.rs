@@ -1,0 +1,311 @@
+//! The run driver: builds per-node RNG streams and the bus, executes the
+//! selected engine, computes derived metrics each recorded round, and
+//! aggregates repeated trials.
+
+use super::{EngineKind, RunConfig};
+use crate::algorithms::{NodeLogic, ObjectiveRef};
+use crate::engine::{sequential, threaded, RoundTelemetry};
+use crate::linalg::vecops;
+use crate::metrics::{RoundRecord, RunMetrics};
+use crate::network::Bus;
+use crate::rng::Xoshiro256pp;
+use crate::topology::Graph;
+
+/// Everything a run produces.
+#[derive(Debug, Clone)]
+pub struct RunOutput {
+    /// Recorded metric series.
+    pub metrics: RunMetrics,
+    /// Final per-node iterates.
+    pub final_states: Vec<Vec<f64>>,
+    /// Rounds actually executed (≤ config.iterations on early stop).
+    pub rounds_completed: usize,
+    /// Total payload bytes over all links.
+    pub total_bytes: usize,
+    /// Total messages dropped by loss injection.
+    pub dropped_messages: usize,
+    /// Simulated network seconds elapsed.
+    pub sim_seconds: f64,
+}
+
+/// Derive per-node RNG streams from a master seed: stream `i` is the
+/// SplitMix expansion of `seed ⊕ golden·(i+1)` — decorrelated and stable
+/// across engines.
+pub fn node_rngs(seed: u64, n: usize) -> Vec<Xoshiro256pp> {
+    (0..n)
+        .map(|i| {
+            Xoshiro256pp::seed_from_u64(
+                seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1)),
+            )
+        })
+        .collect()
+}
+
+struct MetricHelper<'a> {
+    objectives: &'a [ObjectiveRef],
+    cfg: &'a RunConfig,
+    saturations_cum: usize,
+    grad_acc: Vec<f64>,
+    grad_buf: Vec<f64>,
+}
+
+impl<'a> MetricHelper<'a> {
+    fn new(objectives: &'a [ObjectiveRef], cfg: &'a RunConfig) -> Self {
+        let p = objectives[0].dim();
+        Self { objectives, cfg, saturations_cum: 0, grad_acc: vec![0.0; p], grad_buf: vec![0.0; p] }
+    }
+
+    fn should_record(&self, telem: &RoundTelemetry, total_rounds: usize) -> bool {
+        telem.round % self.cfg.record_every.max(1) == 0
+            || telem.round == total_rounds
+            || self.cfg.grad_tol.is_some()
+    }
+
+    /// Compute the derived metrics at the mean iterate.
+    fn record(
+        &mut self,
+        telem: &RoundTelemetry,
+        states: &[&[f64]],
+        grad_steps: usize,
+        bus: &Bus,
+    ) -> RoundRecord {
+        self.saturations_cum += telem.saturations;
+        let n = states.len();
+        let p = states[0].len();
+        // x̄
+        let mut xbar = vec![0.0; p];
+        for s in states {
+            vecops::axpy(1.0, s, &mut xbar);
+        }
+        vecops::scale(&mut xbar, 1.0 / n as f64);
+        // consensus error ‖x − x̄‖
+        let consensus_error = states
+            .iter()
+            .map(|s| s.iter().zip(xbar.iter()).map(|(a, b)| (a - b) * (a - b)).sum::<f64>())
+            .sum::<f64>()
+            .sqrt();
+        // objective and mean-grad norm at x̄
+        let mut objective = 0.0;
+        vecops::fill(&mut self.grad_acc, 0.0);
+        for obj in self.objectives {
+            objective += obj.value(&xbar);
+            obj.grad_into(&xbar, &mut self.grad_buf);
+            vecops::axpy(1.0, &self.grad_buf, &mut self.grad_acc);
+        }
+        let grad_norm = vecops::norm2(&self.grad_acc) / n as f64;
+        RoundRecord {
+            round: telem.round,
+            grad_iterations: grad_steps,
+            objective,
+            grad_norm,
+            consensus_error,
+            bytes_cumulative: bus.total_bytes(),
+            max_transmitted: telem.max_transmitted,
+            saturations: self.saturations_cum,
+        }
+    }
+}
+
+/// Run a set of prebuilt nodes over `graph` under `cfg`. `objectives[i]`
+/// must be node `i`'s objective (used only for metric evaluation — the
+/// nodes own their own references for gradient computation).
+pub fn run_nodes(
+    graph: &Graph,
+    objectives: &[ObjectiveRef],
+    mut nodes: Vec<Box<dyn NodeLogic>>,
+    cfg: &RunConfig,
+) -> RunOutput {
+    let n = graph.num_nodes();
+    assert_eq!(nodes.len(), n);
+    assert_eq!(objectives.len(), n);
+    let mut rngs = node_rngs(cfg.seed, n);
+    let bus = Bus::new(graph, cfg.link, cfg.seed ^ 0xB0B);
+    let mut metrics = RunMetrics::default();
+    let mut helper = MetricHelper::new(objectives, cfg);
+    let total_rounds = cfg.iterations;
+
+    match cfg.engine {
+        EngineKind::Sequential => {
+            let mut bus = bus;
+            let completed =
+                sequential::run(&mut nodes, &mut rngs, &mut bus, total_rounds, |telem, ns, b| {
+                    if helper.should_record(&telem, total_rounds) {
+                        let states: Vec<&[f64]> = ns.iter().map(|x| x.state()).collect();
+                        let grad_steps = ns.iter().map(|x| x.grad_steps()).max().unwrap_or(0);
+                        let rec = helper.record(&telem, &states, grad_steps, b);
+                        let stop =
+                            cfg.grad_tol.map(|t| rec.grad_norm <= t).unwrap_or(false);
+                        if telem.round % cfg.record_every.max(1) == 0
+                            || telem.round == total_rounds
+                            || stop
+                        {
+                            metrics.push(rec);
+                        }
+                        return !stop;
+                    }
+                    true
+                });
+            RunOutput {
+                final_states: nodes.iter().map(|x| x.state().to_vec()).collect(),
+                rounds_completed: completed,
+                total_bytes: bus.total_bytes(),
+                dropped_messages: bus.total_dropped(),
+                sim_seconds: bus.sim_clock(),
+                metrics,
+            }
+        }
+        EngineKind::Threaded => {
+            let (nodes, bus, completed) =
+                threaded::run(nodes, rngs, bus, total_rounds, |telem, snap, b| {
+                    if helper.should_record(&telem, total_rounds) {
+                        let states: Vec<&[f64]> =
+                            snap.states.iter().map(|s| s.as_slice()).collect();
+                        let grad_steps = snap.grad_steps.iter().copied().max().unwrap_or(0);
+                        let rec = helper.record(&telem, &states, grad_steps, b);
+                        let stop =
+                            cfg.grad_tol.map(|t| rec.grad_norm <= t).unwrap_or(false);
+                        if telem.round % cfg.record_every.max(1) == 0
+                            || telem.round == total_rounds
+                            || stop
+                        {
+                            metrics.push(rec);
+                        }
+                        return !stop;
+                    }
+                    true
+                });
+            RunOutput {
+                final_states: nodes.iter().map(|x| x.state().to_vec()).collect(),
+                rounds_completed: completed,
+                total_bytes: bus.total_bytes(),
+                dropped_messages: bus.total_dropped(),
+                sim_seconds: bus.sim_clock(),
+                metrics,
+            }
+        }
+    }
+}
+
+/// Repeat a run `trials` times with seeds `seed0..seed0+trials`, building
+/// fresh nodes per trial via `factory(trial_seed)`. Returns all outputs
+/// (the experiment layer averages what it needs — the paper averages over
+/// 100 trials in Figs. 7/10).
+pub fn run_trials(
+    graph: &Graph,
+    objectives: &[ObjectiveRef],
+    cfg: &RunConfig,
+    trials: usize,
+    mut factory: impl FnMut(u64) -> Vec<Box<dyn NodeLogic>>,
+) -> Vec<RunOutput> {
+    (0..trials)
+        .map(|t| {
+            let seed = cfg.seed.wrapping_add(t as u64);
+            let mut c = *cfg;
+            c.seed = seed;
+            run_nodes(graph, objectives, factory(seed), &c)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{DgdNode, StepSize};
+    use crate::objective::ScalarQuadratic;
+    use std::sync::Arc;
+
+    fn pair_setup() -> (Graph, Vec<ObjectiveRef>, [[f64; 2]; 2]) {
+        let g = crate::topology::pair();
+        let objs: Vec<ObjectiveRef> = vec![
+            Arc::new(ScalarQuadratic::new(4.0, 2.0)),
+            Arc::new(ScalarQuadratic::new(2.0, -3.0)),
+        ];
+        (g, objs, [[0.5, 0.5], [0.5, 0.5]])
+    }
+
+    fn dgd_nodes(objs: &[ObjectiveRef], w: &[[f64; 2]; 2], step: StepSize) -> Vec<Box<dyn NodeLogic>> {
+        (0..2)
+            .map(|i| {
+                Box::new(DgdNode::new(i, w[i].to_vec(), objs[i].clone(), step))
+                    as Box<dyn NodeLogic>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn driver_records_metrics_and_converges() {
+        let (g, objs, w) = pair_setup();
+        let cfg = RunConfig {
+            iterations: 500,
+            step_size: StepSize::Constant(0.02),
+            record_every: 10,
+            ..RunConfig::default()
+        };
+        let nodes = dgd_nodes(&objs, &w, cfg.step_size);
+        let out = run_nodes(&g, &objs, nodes, &cfg);
+        assert_eq!(out.rounds_completed, 500);
+        assert_eq!(out.metrics.len(), 50);
+        let last = *out.metrics.grad_norm.last().unwrap();
+        let first = out.metrics.grad_norm[0];
+        assert!(last < first, "grad norm should decrease: {first} -> {last}");
+        assert!(out.total_bytes > 0);
+    }
+
+    #[test]
+    fn grad_tol_stops_early() {
+        // Homogeneous objectives: no consensus bias, so DGD's gradient
+        // norm at x̄ decays geometrically and the tolerance is reachable.
+        let g = crate::topology::pair();
+        let objs: Vec<ObjectiveRef> = vec![
+            Arc::new(ScalarQuadratic::new(1.0, 1.0)),
+            Arc::new(ScalarQuadratic::new(1.0, 1.0)),
+        ];
+        let w = [[0.5, 0.5], [0.5, 0.5]];
+        let cfg = RunConfig {
+            iterations: 100_000,
+            step_size: StepSize::Constant(0.1),
+            grad_tol: Some(1e-6),
+            record_every: 1,
+            ..RunConfig::default()
+        };
+        let nodes = dgd_nodes(&objs, &w, cfg.step_size);
+        let out = run_nodes(&g, &objs, nodes, &cfg);
+        assert!(out.rounds_completed < 1000, "should stop early");
+        assert!(*out.metrics.grad_norm.last().unwrap() <= 1e-6);
+    }
+
+    #[test]
+    fn sequential_and_threaded_agree() {
+        let (g, objs, w) = pair_setup();
+        let mk = |engine| {
+            let cfg = RunConfig {
+                iterations: 200,
+                step_size: StepSize::Constant(0.02),
+                record_every: 200,
+                engine,
+                ..RunConfig::default()
+            };
+            let nodes = dgd_nodes(&objs, &w, cfg.step_size);
+            run_nodes(&g, &objs, nodes, &cfg)
+        };
+        let a = mk(EngineKind::Sequential);
+        let b = mk(EngineKind::Threaded);
+        assert_eq!(a.final_states, b.final_states);
+        assert_eq!(a.total_bytes, b.total_bytes);
+    }
+
+    #[test]
+    fn trials_vary_with_seed() {
+        let (g, objs, w) = pair_setup();
+        let cfg = RunConfig {
+            iterations: 50,
+            step_size: StepSize::Constant(0.02),
+            record_every: 50,
+            ..RunConfig::default()
+        };
+        let outs = run_trials(&g, &objs, &cfg, 3, |_seed| dgd_nodes(&objs, &w, cfg.step_size));
+        assert_eq!(outs.len(), 3);
+        // DGD is deterministic regardless of seed; final states agree.
+        assert_eq!(outs[0].final_states, outs[1].final_states);
+    }
+}

@@ -1,0 +1,8 @@
+//! Experiment driver: configures a run, owns metric computation, selects
+//! the engine, and aggregates repeated trials.
+
+mod config;
+mod driver;
+
+pub use config::{EngineKind, RunConfig};
+pub use driver::{run_nodes, run_trials, RunOutput};

@@ -1,0 +1,28 @@
+//! Execution engines.
+//!
+//! Two interchangeable engines run the same per-node [`NodeLogic`]:
+//!
+//! * [`sequential::run`] — single-threaded, deterministic; the reference
+//!   semantics used by tests and benches.
+//! * [`threaded::run`] — one OS thread per node with barrier-synchronized
+//!   rounds, exercising real contention on the shared bus. Bit-identical
+//!   to the sequential engine given the same seeds (per-node RNG streams
+//!   + hash-based loss injection), which is asserted by integration
+//!   tests.
+
+pub mod sequential;
+pub mod threaded;
+
+/// Telemetry handed to the per-round observer callback.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundTelemetry {
+    /// 1-based round index.
+    pub round: usize,
+    /// Max `tx_magnitude` over nodes this round (Fig. 8).
+    pub max_transmitted: f64,
+    /// Saturation events this round.
+    pub saturations: usize,
+    /// Largest single payload this round in bytes (drives the simulated
+    /// round clock).
+    pub max_payload_bytes: usize,
+}

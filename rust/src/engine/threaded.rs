@@ -1,0 +1,209 @@
+//! Multi-threaded engine: one OS thread per node, barrier-synchronized
+//! rounds, shared bus behind a mutex.
+//!
+//! Determinism: node RNG streams are owned per-thread and the bus's loss
+//! injection is a stateless hash of `(seed, src, dst, round)`, so results
+//! are bit-identical to the sequential engine regardless of thread
+//! interleaving (asserted in `rust/tests/engine_equivalence.rs`).
+
+use super::RoundTelemetry;
+use crate::algorithms::NodeLogic;
+use crate::compress::Payload;
+use crate::network::Bus;
+use crate::rng::Xoshiro256pp;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
+
+/// Per-round snapshot passed to the threaded observer (node states are
+/// copied out at the barrier — the threads own the live state).
+pub struct Snapshot {
+    /// `x_i` per node.
+    pub states: Vec<Vec<f64>>,
+    /// Gradient iterations completed per node.
+    pub grad_steps: Vec<usize>,
+}
+
+/// Run `rounds` barrier-synchronized rounds with one thread per node.
+/// The observer runs on the coordinating thread between rounds and may
+/// return `false` to stop. Returns (nodes, completed_rounds).
+#[allow(clippy::type_complexity)]
+pub fn run<F>(
+    mut nodes: Vec<Box<dyn NodeLogic>>,
+    mut rngs: Vec<Xoshiro256pp>,
+    bus: Bus,
+    rounds: usize,
+    mut observer: F,
+) -> (Vec<Box<dyn NodeLogic>>, Bus, usize)
+where
+    F: FnMut(RoundTelemetry, &Snapshot, &Bus) -> bool,
+{
+    let n = nodes.len();
+    assert_eq!(rngs.len(), n);
+    assert_eq!(bus.n(), n);
+    if n == 0 {
+        return (nodes, bus, 0);
+    }
+
+    let bus = Mutex::new(bus);
+    // Three sync points per round: after broadcast, after consume+snapshot,
+    // and after the observer's stop decision (so every thread reads the
+    // same `stop` value for the round).
+    let after_send = Barrier::new(n + 1);
+    let after_consume = Barrier::new(n + 1);
+    let after_observe = Barrier::new(n + 1);
+    let stop = AtomicBool::new(false);
+    let completed = AtomicUsize::new(0);
+
+    // Shared per-round telemetry slots (one writer per slot, then barrier).
+    let tx_slots: Vec<Mutex<(f64, usize, usize)>> =
+        (0..n).map(|_| Mutex::new((0.0, 0, 0))).collect();
+    let state_slots: Vec<Mutex<(Vec<f64>, usize)>> =
+        (0..n).map(|_| Mutex::new((Vec::new(), 0))).collect();
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n);
+        for (i, (node, rng)) in nodes.drain(..).zip(rngs.drain(..)).enumerate() {
+            let bus = &bus;
+            let after_send = &after_send;
+            let after_consume = &after_consume;
+            let after_observe = &after_observe;
+            let stop = &stop;
+            let tx_slots = &tx_slots;
+            let state_slots = &state_slots;
+            handles.push(scope.spawn(move || {
+                let mut node = node;
+                let mut rng = rng;
+                for k in 1..=rounds {
+                    let out = node.make_message(k, &mut rng);
+                    let bytes = out.payload.wire_bytes();
+                    {
+                        let payload = std::sync::Arc::new(out.payload);
+                        let mut b = bus.lock().unwrap();
+                        b.broadcast(i, k, &payload);
+                    }
+                    *tx_slots[i].lock().unwrap() = (out.tx_magnitude, out.saturated, bytes);
+                    after_send.wait();
+                    // Coordinator advances the round clock here.
+                    // Sort by sender: float reduction order must match
+                    // the sequential engine exactly (bit-identical runs).
+                    let mut inbox: Vec<(usize, std::sync::Arc<Payload>)> = {
+                        let mut b = bus.lock().unwrap();
+                        b.collect(i).into_iter().map(|m| (m.src, m.payload)).collect()
+                    };
+                    inbox.sort_by_key(|(src, _)| *src);
+                    node.consume(k, &inbox, &mut rng);
+                    {
+                        let mut slot = state_slots[i].lock().unwrap();
+                        slot.0 = node.state().to_vec();
+                        slot.1 = node.grad_steps();
+                    }
+                    after_consume.wait();
+                    // Coordinator runs the observer here and sets `stop`.
+                    after_observe.wait();
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+                (node, rng)
+            }));
+        }
+
+        // Coordinating thread.
+        for k in 1..=rounds {
+            after_send.wait();
+            let mut max_tx = 0.0f64;
+            let mut saturations = 0usize;
+            let mut max_payload = 0usize;
+            for slot in tx_slots.iter() {
+                let (tx, sat, bytes) = *slot.lock().unwrap();
+                max_tx = max_tx.max(tx);
+                saturations += sat;
+                max_payload = max_payload.max(bytes);
+            }
+            bus.lock().unwrap().advance_round(max_payload);
+            after_consume.wait();
+            let snapshot = Snapshot {
+                states: state_slots.iter().map(|s| s.lock().unwrap().0.clone()).collect(),
+                grad_steps: state_slots.iter().map(|s| s.lock().unwrap().1).collect(),
+            };
+            let telem = RoundTelemetry {
+                round: k,
+                max_transmitted: max_tx,
+                saturations,
+                max_payload_bytes: max_payload,
+            };
+            completed.store(k, Ordering::SeqCst);
+            let keep_going = {
+                let b = bus.lock().unwrap();
+                observer(telem, &snapshot, &b)
+            };
+            if !keep_going || k == rounds {
+                stop.store(true, Ordering::SeqCst);
+            }
+            after_observe.wait();
+            if !keep_going {
+                break;
+            }
+        }
+
+        let mut out_nodes = Vec::with_capacity(n);
+        let mut out_rngs = Vec::with_capacity(n);
+        for h in handles {
+            let (node, rng) = h.join().expect("node thread panicked");
+            out_nodes.push(node);
+            out_rngs.push(rng);
+        }
+        nodes = out_nodes;
+        rngs = out_rngs;
+    });
+
+    let completed = completed.load(Ordering::SeqCst);
+    (nodes, bus.into_inner().unwrap(), completed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{DgdNode, StepSize};
+    use crate::network::LinkModel;
+    use crate::objective::ScalarQuadratic;
+    use crate::topology;
+    use std::sync::Arc;
+
+    fn build(n_iters: usize, stop_at: Option<usize>) -> (Vec<Vec<f64>>, usize, usize) {
+        let g = topology::pair();
+        let w = [[0.5, 0.5], [0.5, 0.5]];
+        let nodes: Vec<Box<dyn NodeLogic>> = (0..2)
+            .map(|i| {
+                Box::new(DgdNode::new(
+                    i,
+                    w[i].to_vec(),
+                    Arc::new(ScalarQuadratic::new(4.0, 2.0 * (1.0 - 2.0 * i as f64))),
+                    StepSize::Constant(0.02),
+                )) as Box<dyn NodeLogic>
+            })
+            .collect();
+        let rngs: Vec<Xoshiro256pp> =
+            (0..2).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
+        let bus = Bus::new(&g, LinkModel::default(), 0);
+        let (nodes, bus, completed) = run(nodes, rngs, bus, n_iters, |t, _s, _b| {
+            stop_at.map(|s| t.round < s).unwrap_or(true)
+        });
+        (nodes.iter().map(|n| n.state().to_vec()).collect(), completed, bus.total_bytes())
+    }
+
+    #[test]
+    fn threaded_engine_converges() {
+        let (states, completed, bytes) = build(1000, None);
+        assert_eq!(completed, 1000);
+        // Same symmetric fixed point as the sequential engine test.
+        assert!((states[0][0] - 0.32 / 1.16).abs() < 1e-6, "x={}", states[0][0]);
+        assert_eq!(bytes, 16_000);
+    }
+
+    #[test]
+    fn threaded_engine_early_stop() {
+        let (_, completed, _) = build(1000, Some(7));
+        assert_eq!(completed, 7);
+    }
+}

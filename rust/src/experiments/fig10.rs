@@ -1,0 +1,99 @@
+//! Fig. 10 — scalability with network size: circle topologies with
+//! n ∈ {3, 5, 10, 20}, random quadratics `a_i(x−b_i)²` (a ~ U[0,10],
+//! b ~ U[0,1]), average gradient norm over repeated trials.
+
+use super::{random_circle_objectives, FigureResult};
+use crate::algorithms::{run_adc_dgd, AdcDgdOptions, StepSize};
+use crate::compress::RandomizedRounding;
+use crate::consensus::metropolis;
+use crate::coordinator::RunConfig;
+use crate::metrics::{aggregate_mean, MetricSeries};
+use crate::rng::Xoshiro256pp;
+use crate::topology;
+use std::sync::Arc;
+
+/// Parameters (paper: 100 trials, n ∈ {3,5,10,20}).
+#[derive(Debug, Clone)]
+pub struct Params {
+    /// Iterations per trial.
+    pub iterations: usize,
+    /// Constant step-size.
+    pub alpha: f64,
+    /// Trials per network size.
+    pub trials: usize,
+    /// Circle sizes.
+    pub sizes: Vec<usize>,
+    /// ADC-DGD γ.
+    pub gamma: f64,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Self {
+            iterations: 500,
+            alpha: 0.01,
+            trials: 100,
+            sizes: vec![3, 5, 10, 20],
+            gamma: 1.0,
+            seed: 21,
+        }
+    }
+}
+
+/// Run the Fig. 10 reproduction.
+pub fn run(p: &Params) -> FigureResult {
+    let mut fr = FigureResult { id: "fig10".into(), ..Default::default() };
+    fr.notes.push(("trials".into(), p.trials.to_string()));
+
+    for &n in &p.sizes {
+        let g = topology::ring(n);
+        let w = metropolis(&g);
+        fr.notes.push((format!("n{n}/beta"), format!("{:.4}", w.beta())));
+        let mut trials: Vec<Vec<f64>> = Vec::with_capacity(p.trials);
+        for t in 0..p.trials {
+            let trial_seed = p.seed.wrapping_add((n * 1000 + t) as u64);
+            let mut objs_rng = Xoshiro256pp::seed_from_u64(trial_seed);
+            let objs = random_circle_objectives(n, &mut objs_rng);
+            let cfg = RunConfig {
+                iterations: p.iterations,
+                step_size: StepSize::Constant(p.alpha),
+                seed: trial_seed,
+                record_every: 1,
+                ..RunConfig::default()
+            };
+            let out = run_adc_dgd(
+                &g,
+                &w,
+                &objs,
+                Arc::new(RandomizedRounding::new()),
+                &AdcDgdOptions { gamma: p.gamma },
+                &cfg,
+            );
+            trials.push(out.metrics.grad_norm.clone());
+        }
+        let mean = aggregate_mean(&trials);
+        let x: Vec<f64> = (1..=p.iterations).map(|k| k as f64).collect();
+        fr.series.push(MetricSeries::new(format!("n{n}/grad_norm"), x, mean));
+    }
+    fr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_sizes_converge() {
+        let p = Params { trials: 10, iterations: 400, sizes: vec![3, 5, 10], ..Params::default() };
+        let fr = run(&p);
+        for n in [3usize, 5, 10] {
+            let s = fr.series(&format!("n{n}/grad_norm")).unwrap();
+            let start = s.y[..10].iter().sum::<f64>() / 10.0;
+            let end = s.y[s.y.len() - 10..].iter().sum::<f64>() / 10.0;
+            assert!(end < start * 0.3, "n={n}: grad norm {start} -> {end} should shrink");
+            assert!(end < 0.5, "n={n}: end {end}");
+        }
+    }
+}

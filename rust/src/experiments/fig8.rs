@@ -1,0 +1,84 @@
+//! Fig. 8 — growth of the transmitted value `max_i ‖k^γ y_{i,k}‖∞` vs
+//! iteration for each γ: the overflow-risk side of the γ trade-off
+//! (Proposition 5: E‖k^γ y‖ = o(k^{γ−1/2})).
+
+use super::{paper_four_node_objectives, FigureResult};
+use crate::algorithms::{run_adc_dgd, AdcDgdOptions, StepSize};
+use crate::compress::RandomizedRounding;
+use crate::consensus::paper_four_node_w;
+use crate::coordinator::RunConfig;
+use crate::metrics::{aggregate_mean, MetricSeries};
+use std::sync::Arc;
+
+/// Parameters (shared shape with Fig. 7).
+pub type Params = super::fig7::Params;
+
+/// Run the Fig. 8 reproduction.
+pub fn run(p: &Params) -> FigureResult {
+    let (g, w) = paper_four_node_w();
+    let objs = paper_four_node_objectives();
+    let mut fr = FigureResult { id: "fig8".into(), ..Default::default() };
+    fr.notes.push(("trials".into(), p.trials.to_string()));
+
+    for &gamma in &p.gammas {
+        let mut trials: Vec<Vec<f64>> = Vec::with_capacity(p.trials);
+        let mut saturated_total = 0.0;
+        for t in 0..p.trials {
+            let cfg = RunConfig {
+                iterations: p.iterations,
+                step_size: StepSize::Constant(p.alpha),
+                seed: p.seed.wrapping_add(t as u64),
+                record_every: 1,
+                ..RunConfig::default()
+            };
+            let out = run_adc_dgd(
+                &g,
+                &w,
+                &objs,
+                Arc::new(RandomizedRounding::new()),
+                &AdcDgdOptions { gamma },
+                &cfg,
+            );
+            saturated_total += out.metrics.saturations.last().copied().unwrap_or(0.0);
+            trials.push(out.metrics.max_transmitted.clone());
+        }
+        let mean = aggregate_mean(&trials);
+        let x: Vec<f64> = (1..=p.iterations).map(|k| k as f64).collect();
+        fr.series.push(MetricSeries::new(format!("gamma_{gamma}/max_transmitted"), x, mean));
+        fr.notes.push((
+            format!("gamma_{gamma}/mean_saturations"),
+            format!("{:.2}", saturated_total / p.trials as f64),
+        ));
+    }
+    fr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transmitted_value_grows_with_gamma_in_transient() {
+        let p = Params { trials: 25, iterations: 300, ..Params::default() };
+        let fr = run(&p);
+        // The γ effect lives in the transient (k ∈ [2, 50)): once the run
+        // reaches its noise ball, `k^γ y` is O(σ) for every γ (see
+        // §IV-D analysis), so we assert on the early-window mean — and
+        // separately that every curve grows from its k=1 value (the
+        // Fig. 8 "growing transmitted value" shape).
+        let early = |name: &str| {
+            let y = &fr.series(name).unwrap().y;
+            y[2..50].iter().sum::<f64>() / 48.0
+        };
+        let e06 = early("gamma_0.6/max_transmitted");
+        let e12 = early("gamma_1.2/max_transmitted");
+        assert!(
+            e12 > e06,
+            "transient transmitted magnitude should grow with γ: γ=1.2 {e12} vs γ=0.6 {e06}"
+        );
+        for s in &fr.series {
+            let tail = s.y[s.y.len() - 50..].iter().sum::<f64>() / 50.0;
+            assert!(tail > 3.0 * s.y[0], "{}: no growth ({} vs {})", s.name, s.y[0], tail);
+        }
+    }
+}

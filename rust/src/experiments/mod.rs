@@ -1,0 +1,156 @@
+//! Paper-figure reproductions and ablations.
+//!
+//! Each submodule regenerates one figure of the paper's §V (there are no
+//! numbered tables): it returns the exact series the paper plots, which
+//! the bench binaries print and EXPERIMENTS.md records. See DESIGN.md §4
+//! for the experiment index.
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig10;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod phase_transition;
+
+use crate::algorithms::ObjectiveRef;
+use crate::metrics::MetricSeries;
+use crate::objective::ScalarQuadratic;
+use crate::rng::{Uniform, Xoshiro256pp};
+use std::sync::Arc;
+
+/// Output of one figure reproduction: named series plus free-form notes
+/// (e.g. summary statistics quoted in EXPERIMENTS.md).
+#[derive(Debug, Clone, Default)]
+pub struct FigureResult {
+    /// Figure id, e.g. "fig5".
+    pub id: String,
+    /// The plotted series.
+    pub series: Vec<MetricSeries>,
+    /// Key-value summary lines.
+    pub notes: Vec<(String, String)>,
+}
+
+impl FigureResult {
+    /// Render as an aligned text report (what the benches print).
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} ==\n", self.id);
+        for (k, v) in &self.notes {
+            out.push_str(&format!("   {k}: {v}\n"));
+        }
+        for s in &self.series {
+            out.push_str(&format!(
+                "   series {:<38} n={:<6} first=({:.4}, {:.4e}) last=({:.4}, {:.4e})\n",
+                s.name,
+                s.x.len(),
+                s.x.first().copied().unwrap_or(f64::NAN),
+                s.y.first().copied().unwrap_or(f64::NAN),
+                s.x.last().copied().unwrap_or(f64::NAN),
+                s.y.last().copied().unwrap_or(f64::NAN),
+            ));
+        }
+        out
+    }
+
+    /// Fetch a series by name.
+    pub fn series(&self, name: &str) -> Option<&MetricSeries> {
+        self.series.iter().find(|s| s.name == name)
+    }
+
+    /// Write all series as CSV files under `dir` (one per series).
+    pub fn write_csv(&self, dir: &std::path::Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for s in &self.series {
+            let mut body = String::from("x,y\n");
+            for (x, y) in s.x.iter().zip(s.y.iter()) {
+                body.push_str(&format!("{x},{y}\n"));
+            }
+            let fname = format!("{}_{}.csv", self.id, s.name.replace([' ', '/'], "_"));
+            std::fs::write(dir.join(fname), body)?;
+        }
+        Ok(())
+    }
+}
+
+/// The paper's Fig. 5 local objectives on the four-node network:
+/// `f₁ = −4x²` (non-convex), `f₂ = 2(x−0.2)²`, `f₃ = 2(x+0.3)²`,
+/// `f₄ = 5(x−0.1)²`.
+pub fn paper_four_node_objectives() -> Vec<ObjectiveRef> {
+    vec![
+        Arc::new(ScalarQuadratic::new(-4.0, 0.0)),
+        Arc::new(ScalarQuadratic::new(2.0, 0.2)),
+        Arc::new(ScalarQuadratic::new(2.0, -0.3)),
+        Arc::new(ScalarQuadratic::new(5.0, 0.1)),
+    ]
+}
+
+/// The paper's Fig. 1 two-node objectives: `f₁ = 4(x−2)²`, `f₂ = 2(x+3)²`.
+pub fn paper_two_node_objectives() -> Vec<ObjectiveRef> {
+    vec![Arc::new(ScalarQuadratic::new(4.0, 2.0)), Arc::new(ScalarQuadratic::new(2.0, -3.0))]
+}
+
+/// Fig. 10's random objectives `f_i = a_i (x − b_i)²`, `a ~ U[0,10]`,
+/// `b ~ U[0,1]`, one per node, drawn from `rng`.
+pub fn random_circle_objectives(n: usize, rng: &mut Xoshiro256pp) -> Vec<ObjectiveRef> {
+    let ua = Uniform::new(0.0, 10.0);
+    let ub = Uniform::new(0.0, 1.0);
+    (0..n)
+        .map(|_| {
+            Arc::new(ScalarQuadratic::new(ua.sample(rng), ub.sample(rng))) as ObjectiveRef
+        })
+        .collect()
+}
+
+/// Analytic optimum of a set of scalar quadratics `Σ aᵢ(x−bᵢ)²`:
+/// `x* = Σ aᵢbᵢ / Σ aᵢ` (valid when `Σ aᵢ > 0`).
+pub fn scalar_quadratic_optimum(objs: &[(f64, f64)]) -> f64 {
+    let num: f64 = objs.iter().map(|(a, b)| a * b).sum();
+    let den: f64 = objs.iter().map(|(a, _)| a).sum();
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_node_objectives_match_paper() {
+        let objs = paper_four_node_objectives();
+        assert_eq!(objs.len(), 4);
+        // f1(1) = −4, f4(0.1) = 0
+        assert_eq!(objs[0].value(&[1.0]), -4.0);
+        assert_eq!(objs[3].value(&[0.1]), 0.0);
+        // Global optimum: Σ a_i b_i / Σ a_i with a = (−4,2,2,5).
+        let x = scalar_quadratic_optimum(&[(-4.0, 0.0), (2.0, 0.2), (2.0, -0.3), (5.0, 0.1)]);
+        assert!((x - (0.4 - 0.6 + 0.5) / 5.0).abs() < 1e-12); // = 0.06
+        // grad of sum at x*: 2Σa_i(x−b_i) = 0
+        let g: f64 = objs.iter().map(|o| o.grad(&[x])[0]).sum();
+        assert!(g.abs() < 1e-12);
+    }
+
+    #[test]
+    fn figure_result_render_and_csv() {
+        let mut fr = FigureResult { id: "figX".into(), ..Default::default() };
+        fr.series.push(MetricSeries::new("a", vec![1.0, 2.0], vec![3.0, 4.0]));
+        fr.notes.push(("k".into(), "v".into()));
+        let r = fr.render();
+        assert!(r.contains("figX") && r.contains("series a"));
+        let dir = std::env::temp_dir().join("adcdgd_test_csv");
+        fr.write_csv(&dir).unwrap();
+        let written = std::fs::read_to_string(dir.join("figX_a.csv")).unwrap();
+        assert!(written.contains("1,3"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn random_objectives_deterministic() {
+        let mut r1 = Xoshiro256pp::seed_from_u64(9);
+        let mut r2 = Xoshiro256pp::seed_from_u64(9);
+        let a = random_circle_objectives(5, &mut r1);
+        let b = random_circle_objectives(5, &mut r2);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.value(&[0.5]), y.value(&[0.5]));
+        }
+    }
+}

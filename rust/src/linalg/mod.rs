@@ -1,0 +1,19 @@
+//! Dense linear algebra for consensus computations.
+//!
+//! The consensus matrices in this library are small (`N × N`, with `N` the
+//! number of network nodes — tens to a few hundreds), while the
+//! optimization variables can be large (`P` up to millions). We therefore
+//! only need:
+//!
+//! * a small dense row-major [`Matrix`] with matvec / matmul / powers,
+//! * vector kernels (`axpy`, `dot`, norms) over `&[f64]` used by the
+//!   per-node hot path,
+//! * power iteration to estimate `β = max(|λ₂|, |λ_N|)` — the spectral
+//!   quantity governing DGD/ADC-DGD convergence (paper §III-A).
+
+mod matrix;
+mod spectral;
+pub mod vecops;
+
+pub use matrix::Matrix;
+pub use spectral::{estimate_beta, power_iteration, PowerIterationResult};

@@ -1,0 +1,144 @@
+//! Spectral utilities: power iteration and the consensus spectral gap.
+//!
+//! For a consensus matrix `W` (symmetric, doubly stochastic), convergence
+//! of DGD-type methods is governed by `β = max(|λ₂(W)|, |λ_N(W)|)` — the
+//! second-largest eigenvalue *magnitude* (paper §III-A). Since `W`'s top
+//! eigenpair is known exactly (`λ₁ = 1`, eigenvector `1/√N`), we compute β
+//! by power iteration on the deflated matrix `W − (1/N)·11ᵀ`.
+
+use super::vecops;
+use super::Matrix;
+use crate::rng::Xoshiro256pp;
+
+/// Result of a power iteration run.
+#[derive(Debug, Clone)]
+pub struct PowerIterationResult {
+    /// Dominant eigenvalue estimate (by magnitude; sign recovered via the
+    /// Rayleigh quotient).
+    pub eigenvalue: f64,
+    /// Corresponding unit eigenvector estimate.
+    pub eigenvector: Vec<f64>,
+    /// Iterations actually performed.
+    pub iterations: usize,
+    /// Final residual `‖A v − λ v‖`.
+    pub residual: f64,
+}
+
+/// Power iteration for the dominant (largest |λ|) eigenpair of a square
+/// matrix `a`. Deterministic given `seed`.
+pub fn power_iteration(a: &Matrix, max_iter: usize, tol: f64, seed: u64) -> PowerIterationResult {
+    assert_eq!(a.rows(), a.cols(), "power iteration requires a square matrix");
+    let n = a.rows();
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.next_f64() - 0.5).collect();
+    let nrm = vecops::norm2(&v).max(f64::MIN_POSITIVE);
+    vecops::scale(&mut v, 1.0 / nrm);
+
+    let mut av = vec![0.0; n];
+    let mut lambda = 0.0;
+    let mut iterations = 0;
+    let mut residual = f64::INFINITY;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        a.matvec_into(&v, &mut av);
+        // Rayleigh quotient gives a signed eigenvalue estimate.
+        lambda = vecops::dot(&v, &av);
+        // residual = ‖Av − λv‖
+        residual = av
+            .iter()
+            .zip(v.iter())
+            .map(|(x, y)| (x - lambda * y) * (x - lambda * y))
+            .sum::<f64>()
+            .sqrt();
+        let nrm = vecops::norm2(&av);
+        if nrm < f64::MIN_POSITIVE {
+            // a v = 0: v is in the kernel; eigenvalue 0.
+            lambda = 0.0;
+            break;
+        }
+        for (vi, avi) in v.iter_mut().zip(av.iter()) {
+            *vi = avi / nrm;
+        }
+        if residual < tol {
+            break;
+        }
+    }
+    PowerIterationResult { eigenvalue: lambda, eigenvector: v, iterations, residual }
+}
+
+/// Estimate `β = max(|λ₂(W)|, |λ_N(W)|)` of a doubly-stochastic symmetric
+/// consensus matrix by deflating the known top eigenpair (`λ₁ = 1`,
+/// `v₁ = 1/√N`) and running power iteration on the remainder.
+pub fn estimate_beta(w: &Matrix) -> f64 {
+    assert_eq!(w.rows(), w.cols());
+    let n = w.rows();
+    if n == 1 {
+        return 0.0;
+    }
+    // Deflate: B = W − (1/N) 1 1ᵀ. The spectrum of B is that of W with the
+    // eigenvalue 1 (eigenvector 1) replaced by 0, so |λ|max(B) = β.
+    let mut b = w.clone();
+    let c = 1.0 / n as f64;
+    for i in 0..n {
+        for j in 0..n {
+            b[(i, j)] -= c;
+        }
+    }
+    let res = power_iteration(&b, 10_000, 1e-13, 0xBEEF);
+    res.eigenvalue.abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_iteration_diagonal() {
+        let a = Matrix::from_rows(&[vec![3.0, 0.0], vec![0.0, 1.0]]);
+        let r = power_iteration(&a, 1000, 1e-12, 1);
+        assert!((r.eigenvalue - 3.0).abs() < 1e-9, "λ={}", r.eigenvalue);
+        assert!(r.eigenvector[0].abs() > 0.99);
+    }
+
+    #[test]
+    fn power_iteration_negative_dominant() {
+        let a = Matrix::from_rows(&[vec![-5.0, 0.0], vec![0.0, 2.0]]);
+        let r = power_iteration(&a, 2000, 1e-12, 2);
+        assert!((r.eigenvalue + 5.0).abs() < 1e-8, "λ={}", r.eigenvalue);
+    }
+
+    #[test]
+    fn beta_of_complete_average_is_zero() {
+        // W = (1/N) 11ᵀ has spectrum {1, 0, ..., 0} ⇒ β = 0.
+        let n = 4;
+        let w = Matrix::from_vec(n, n, vec![1.0 / n as f64; n * n]);
+        assert!(estimate_beta(&w) < 1e-9);
+    }
+
+    #[test]
+    fn beta_of_identity_is_one() {
+        // W = I: every eigenvalue is 1 ⇒ deflated spectrum still has 1.
+        let w = Matrix::identity(3);
+        assert!((estimate_beta(&w) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn beta_of_two_node_metropolis() {
+        // W = [[1/2, 1/2], [1/2, 1/2]] ⇒ eigenvalues {1, 0} ⇒ β = 0.
+        let w = Matrix::from_rows(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
+        assert!(estimate_beta(&w) < 1e-9);
+    }
+
+    #[test]
+    fn beta_of_paper_four_node_matrix() {
+        // Paper Fig. 4's W: eigenvalues are {1, 3/4, 3/4, −1/4} ⇒ β = 3/4.
+        let w = Matrix::from_rows(&[
+            vec![0.25, 0.25, 0.25, 0.25],
+            vec![0.25, 0.75, 0.0, 0.0],
+            vec![0.25, 0.0, 0.75, 0.0],
+            vec![0.25, 0.0, 0.0, 0.75],
+        ]);
+        let beta = estimate_beta(&w);
+        assert!((beta - 0.75).abs() < 1e-6, "beta={beta}");
+    }
+}

@@ -1,0 +1,183 @@
+//! Vector kernels used on the per-node hot path.
+//!
+//! These are deliberately written over plain slices so algorithm code can
+//! reuse preallocated buffers — the steady-state round loop performs no
+//! allocation (see DESIGN.md §8).
+
+/// `y += a * x` (fused multiply-add over slices).
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * *xi;
+    }
+}
+
+/// `y = a * x + b * y`.
+#[inline]
+pub fn axpby(a: f64, x: &[f64], b: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi = a * *xi + b * *yi;
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y.iter()).map(|(a, b)| a * b).sum()
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Infinity norm (max absolute value); 0 for empty input.
+#[inline]
+pub fn norm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+}
+
+/// Euclidean distance between two vectors.
+#[inline]
+pub fn dist2(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y.iter())
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// `out = x - y`.
+#[inline]
+pub fn sub(x: &[f64], y: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for ((o, a), b) in out.iter_mut().zip(x.iter()).zip(y.iter()) {
+        *o = a - b;
+    }
+}
+
+/// Scale in place: `x *= a`.
+#[inline]
+pub fn scale(x: &mut [f64], a: f64) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Set all entries to `v`.
+#[inline]
+pub fn fill(x: &mut [f64], v: f64) {
+    for e in x.iter_mut() {
+        *e = v;
+    }
+}
+
+/// Arithmetic mean of a slice (0 for empty input).
+#[inline]
+pub fn mean(x: &[f64]) -> f64 {
+    if x.is_empty() {
+        0.0
+    } else {
+        x.iter().sum::<f64>() / x.len() as f64
+    }
+}
+
+/// Column-wise mean of `n` stacked vectors of length `p` (row-major).
+/// Returns the mean vector `x̄ = (1/n) Σ x_i` — the consensus target of
+/// paper Theorem 1.
+pub fn stacked_mean(rows: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!rows.is_empty());
+    let p = rows[0].len();
+    let mut out = vec![0.0; p];
+    for r in rows {
+        assert_eq!(r.len(), p, "ragged stack");
+        axpy(1.0, r, &mut out);
+    }
+    scale(&mut out, 1.0 / rows.len() as f64);
+    out
+}
+
+/// Consensus error `‖x − x̄‖₂` of stacked local copies (paper Thm 1's
+/// left-hand side): sqrt of Σ_i ‖x_i − x̄‖².
+pub fn consensus_error(rows: &[Vec<f64>]) -> f64 {
+    let xbar = stacked_mean(rows);
+    rows.iter()
+        .map(|r| {
+            r.iter()
+                .zip(xbar.iter())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn axpby_basic() {
+        let x = [1.0, 2.0];
+        let mut y = [3.0, 4.0];
+        axpby(2.0, &x, 0.5, &mut y);
+        assert_eq!(y, [3.5, 6.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let x = [3.0, -4.0];
+        assert!((norm2(&x) - 5.0).abs() < 1e-12);
+        assert_eq!(norm_inf(&x), 4.0);
+        assert_eq!(norm2_sq(&x), 25.0);
+        assert_eq!(norm_inf(&[]), 0.0);
+    }
+
+    #[test]
+    fn dist_and_sub() {
+        let x = [1.0, 2.0];
+        let y = [4.0, 6.0];
+        assert!((dist2(&x, &y) - 5.0).abs() < 1e-12);
+        let mut out = [0.0; 2];
+        sub(&x, &y, &mut out);
+        assert_eq!(out, [-3.0, -4.0]);
+    }
+
+    #[test]
+    fn stacked_mean_and_consensus_error() {
+        let rows = vec![vec![1.0, 0.0], vec![3.0, 4.0]];
+        let m = stacked_mean(&rows);
+        assert_eq!(m, vec![2.0, 2.0]);
+        // deviations: (−1,−2) and (1,2): total sq = 1+4+1+4 = 10
+        assert!((consensus_error(&rows) - 10f64.sqrt()).abs() < 1e-12);
+        // Identical rows have zero consensus error.
+        let same = vec![vec![5.0, 6.0]; 4];
+        assert_eq!(consensus_error(&same), 0.0);
+    }
+
+    #[test]
+    fn mean_handles_empty() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+}

@@ -1,0 +1,307 @@
+//! `adcdgd` — the coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `run --exp <fig1|fig5|fig6|fig7|fig8|fig10|phase|ablations|all>`
+//!   regenerate a paper figure (optionally `--out <dir>` for CSVs,
+//!   `--trials`, `--iters` to rescale).
+//! * `solve` — run one algorithm on a chosen topology/objective family
+//!   (`--algo adc|dgd|dgdt|naive|qdgd`, `--topology ring|star|complete|
+//!   grid|er|ba|paper4`, `--n`, `--gamma`, `--alpha`, `--eta`,
+//!   `--iters`, `--engine seq|threaded`, `--drop-prob`).
+//! * `train` — decentralized ML training from an AOT artifact
+//!   (`--artifacts <dir>`, `--model logistic|transformer`, see
+//!   `runtime` docs).
+//! * `info` — environment + topology/spectral summary.
+
+use adcdgd::prelude::*;
+use adcdgd::util::args::Args;
+use adcdgd::{consensus, experiments, topology};
+use std::sync::Arc;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("solve") => cmd_solve(&args),
+        Some("train") => cmd_train(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: adcdgd <run|solve|train|info> [options]\n\
+                 \n  adcdgd run --exp fig5 [--out results/] [--trials 100] [--iters 500]\
+                 \n  adcdgd solve --algo adc --topology ring --n 10 --iters 1000 [--engine threaded]\
+                 \n  adcdgd train --model logistic --artifacts artifacts/ --nodes 4 --steps 100\
+                 \n  adcdgd info"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let exp = args.get_str("exp", "all");
+    let out_dir = args.options.get("out").map(std::path::PathBuf::from);
+    let trials = args.get::<usize>("trials", 0).unwrap_or(0); // 0 = default
+    let iters = args.get::<usize>("iters", 0).unwrap_or(0);
+
+    let mut results: Vec<experiments::FigureResult> = Vec::new();
+    let want = |name: &str| exp == "all" || exp == name;
+
+    if want("fig1") {
+        let mut p = experiments::fig1::Params::default();
+        if iters > 0 {
+            p.iterations = iters;
+        }
+        results.push(experiments::fig1::run(&p));
+    }
+    if want("fig5") {
+        let mut p = experiments::fig5::Params::default();
+        if iters > 0 {
+            p.iterations = iters;
+        }
+        results.push(experiments::fig5::run(&p));
+    }
+    if want("fig6") {
+        let mut p = experiments::fig6::Params::default();
+        if iters > 0 {
+            p.iterations = iters;
+        }
+        results.push(experiments::fig6::run(&p));
+    }
+    if want("fig7") {
+        let mut p = experiments::fig7::Params::default();
+        if trials > 0 {
+            p.trials = trials;
+        }
+        if iters > 0 {
+            p.iterations = iters;
+        }
+        results.push(experiments::fig7::run(&p));
+    }
+    if want("fig8") {
+        let mut p = experiments::fig8::Params::default();
+        if trials > 0 {
+            p.trials = trials;
+        }
+        if iters > 0 {
+            p.iterations = iters;
+        }
+        results.push(experiments::fig8::run(&p));
+    }
+    if want("fig10") {
+        let mut p = experiments::fig10::Params::default();
+        if trials > 0 {
+            p.trials = trials;
+        }
+        if iters > 0 {
+            p.iterations = iters;
+        }
+        results.push(experiments::fig10::run(&p));
+    }
+    if want("phase") {
+        let mut p = experiments::phase_transition::Params::default();
+        if trials > 0 {
+            p.trials = trials;
+        }
+        results.push(experiments::phase_transition::run(&p));
+    }
+    if want("ablations") {
+        results.push(experiments::ablations::alpha_error_ball(
+            &[0.0025, 0.005, 0.01, 0.02],
+            1500,
+            5,
+        ));
+        results.push(experiments::ablations::compressor_comparison(800, 0.02, 6));
+        results.push(experiments::ablations::eta_sweep(&[0.5, 0.75, 1.0], 3000, 0.1, 7));
+        results.push(experiments::ablations::def1_bias_ablation(2500, 0.02, 8));
+    }
+
+    if results.is_empty() {
+        eprintln!("unknown experiment: {exp}");
+        return 2;
+    }
+    for fr in &results {
+        print!("{}", fr.render());
+        if let Some(dir) = &out_dir {
+            if let Err(e) = fr.write_csv(dir) {
+                eprintln!("csv write failed: {e}");
+                return 1;
+            }
+        }
+    }
+    if let Some(dir) = &out_dir {
+        println!("CSV series written to {}", dir.display());
+    }
+    0
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    // Optional config file: CLI options override file values.
+    let mut args = args.clone();
+    if let Some(path) = args.options.get("config").cloned() {
+        match adcdgd::util::config::Config::load(std::path::Path::new(&path)) {
+            Ok(cfg) => {
+                for key in ["algo", "topology", "engine"] {
+                    if !args.options.contains_key(key) {
+                        if let Some(adcdgd::util::config::Value::Str(v)) = cfg.get(key) {
+                            args.options.insert(key.into(), v.clone());
+                        }
+                    }
+                }
+                for key in ["n", "iters", "seed", "record-every", "t"] {
+                    if !args.options.contains_key(key) {
+                        if let Some(adcdgd::util::config::Value::Num(v)) = cfg.get(key) {
+                            args.options.insert(key.into(), format!("{}", *v as u64));
+                        }
+                    }
+                }
+                for key in ["alpha", "eta", "gamma", "drop-prob"] {
+                    if !args.options.contains_key(key) {
+                        if let Some(adcdgd::util::config::Value::Num(v)) = cfg.get(key) {
+                            args.options.insert(key.into(), v.to_string());
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        }
+    }
+    let args = &args;
+    let n = args.get::<usize>("n", 10).unwrap();
+    let topo = args.get_str("topology", "ring");
+    let seed = args.get::<u64>("seed", 0).unwrap();
+    let g = match topo.as_str() {
+        "ring" => topology::ring(n),
+        "star" => topology::star(n),
+        "complete" => topology::complete(n),
+        "path" => topology::path(n),
+        "grid" => {
+            let side = (n as f64).sqrt().ceil() as usize;
+            topology::grid2d(side, n.div_ceil(side))
+        }
+        "er" => topology::erdos_renyi(n, 0.3, seed),
+        "ba" => topology::barabasi_albert(n, 2, seed),
+        "paper4" => topology::paper_four_node(),
+        other => {
+            eprintln!("unknown topology {other}");
+            return 2;
+        }
+    };
+    let n = g.num_nodes();
+    let w = if topo == "paper4" {
+        consensus::paper_four_node_w().1
+    } else {
+        consensus::metropolis(&g)
+    };
+    // Random scalar quadratics (Fig. 10 family) unless paper4.
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x0BEC);
+    let objs: Vec<ObjectiveRef> = if topo == "paper4" {
+        experiments::paper_four_node_objectives()
+    } else {
+        experiments::random_circle_objectives(n, &mut rng)
+    };
+
+    let alpha = args.get::<f64>("alpha", 0.01).unwrap();
+    let eta = args.get::<f64>("eta", 0.0).unwrap();
+    let step = if eta > 0.0 {
+        StepSize::Diminishing { alpha0: alpha, eta }
+    } else {
+        StepSize::Constant(alpha)
+    };
+    let cfg = RunConfig {
+        iterations: args.get::<usize>("iters", 1000).unwrap(),
+        step_size: step,
+        seed,
+        record_every: args.get::<usize>("record-every", 10).unwrap(),
+        engine: match args.get_str("engine", "seq").as_str() {
+            "threaded" => EngineKind::Threaded,
+            _ => EngineKind::Sequential,
+        },
+        link: adcdgd::network::LinkModel {
+            drop_prob: args.get::<f64>("drop-prob", 0.0).unwrap(),
+            ..adcdgd::network::LinkModel::default()
+        },
+        grad_tol: None,
+    };
+    let gamma = args.get::<f64>("gamma", 1.0).unwrap();
+    let algo = args.get_str("algo", "adc");
+    let comp: CompressorRef = Arc::new(RandomizedRounding::new());
+    let out = match algo.as_str() {
+        "adc" => run_adc_dgd(&g, &w, &objs, comp, &AdcDgdOptions { gamma }, &cfg),
+        "dgd" => run_dgd(&g, &w, &objs, &cfg),
+        "dgdt" => run_dgd_t(&g, &w, &objs, args.get::<usize>("t", 3).unwrap(), &cfg),
+        "naive" => run_naive_compressed(&g, &w, &objs, comp, &cfg),
+        "qdgd" => run_qdgd(&g, &w, &objs, comp, &QdgdOptions::default(), &cfg),
+        other => {
+            eprintln!("unknown algorithm {other}");
+            return 2;
+        }
+    };
+    println!(
+        "algo={algo} topology={topo} n={n} beta={:.4} rounds={} bytes={} dropped={} sim_time={:.3}s",
+        w.beta(),
+        out.rounds_completed,
+        out.total_bytes,
+        out.dropped_messages,
+        out.sim_seconds
+    );
+    let m = &out.metrics;
+    for i in 0..m.len() {
+        println!(
+            "round {:>6}  f(x̄) {:>12.6}  ‖∇f̄‖ {:>12.6e}  consensus {:>10.4e}  bytes {:>10}",
+            m.rounds[i], m.objective[i], m.grad_norm[i], m.consensus_error[i],
+            m.bytes_cumulative[i]
+        );
+    }
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    match adcdgd::runtime::cli_train(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("train failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_info(_args: &Args) -> i32 {
+    println!("adcdgd {} — ADC-DGD reproduction (Zhang et al. 2018)", env!("CARGO_PKG_VERSION"));
+    for (name, g) in [
+        ("pair", topology::pair()),
+        ("paper4", topology::paper_four_node()),
+        ("ring(10)", topology::ring(10)),
+        ("star(10)", topology::star(10)),
+        ("complete(10)", topology::complete(10)),
+        ("grid(4x4)", topology::grid2d(4, 4)),
+        ("er(10,0.4)", topology::erdos_renyi(10, 0.4, 1)),
+        ("ba(10,2)", topology::barabasi_albert(10, 2, 1)),
+    ] {
+        let w = consensus::metropolis(&g);
+        println!(
+            "  {:<14} N={:<3} E={:<3} diam={:<3} beta(MH)={:.4}",
+            name,
+            g.num_nodes(),
+            g.num_edges(),
+            g.diameter().map(|d| d.to_string()).unwrap_or_else(|| "-".into()),
+            w.beta()
+        );
+    }
+    match adcdgd::runtime::probe() {
+        Ok(desc) => println!("  PJRT: {desc}"),
+        Err(e) => println!("  PJRT: unavailable ({e})"),
+    }
+    0
+}

@@ -1,0 +1,98 @@
+//! Per-run metric time series and aggregation across trials.
+
+mod recorder;
+mod series;
+
+pub use recorder::RoundRecord;
+pub use series::{aggregate_mean, MetricSeries};
+
+/// The full metric set recorded over one run — one entry per recorded
+/// round (see `RunConfig::record_every`).
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// Round indices at which the remaining series were sampled.
+    pub rounds: Vec<usize>,
+    /// Gradient iterations completed at each sample (≠ rounds for DGD^t).
+    pub grad_iterations: Vec<usize>,
+    /// Global objective `Σ_i f_i(x̄)` at the mean iterate.
+    pub objective: Vec<f64>,
+    /// `‖(1/N) Σ_i ∇f_i(x̄)‖` — Theorems 2–3's convergence metric.
+    pub grad_norm: Vec<f64>,
+    /// Consensus error `‖x − x̄‖` (Theorem 1's metric).
+    pub consensus_error: Vec<f64>,
+    /// Cumulative payload bytes over all links (Fig. 6's x-axis).
+    pub bytes_cumulative: Vec<f64>,
+    /// Max transmitted magnitude this round over all nodes (Fig. 8).
+    pub max_transmitted: Vec<f64>,
+    /// Cumulative saturation (integer-overflow) events.
+    pub saturations: Vec<f64>,
+}
+
+impl RunMetrics {
+    /// Number of recorded samples.
+    pub fn len(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.rounds.is_empty()
+    }
+
+    /// Append one record.
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r.round);
+        self.grad_iterations.push(r.grad_iterations);
+        self.objective.push(r.objective);
+        self.grad_norm.push(r.grad_norm);
+        self.consensus_error.push(r.consensus_error);
+        self.bytes_cumulative.push(r.bytes_cumulative as f64);
+        self.max_transmitted.push(r.max_transmitted);
+        self.saturations.push(r.saturations as f64);
+    }
+
+    /// Write as CSV (header + one row per sample).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "round,grad_iterations,objective,grad_norm,consensus_error,bytes_cumulative,max_transmitted,saturations\n",
+        );
+        for i in 0..self.len() {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{}\n",
+                self.rounds[i],
+                self.grad_iterations[i],
+                self.objective[i],
+                self.grad_norm[i],
+                self.consensus_error[i],
+                self.bytes_cumulative[i],
+                self.max_transmitted[i],
+                self.saturations[i]
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_csv() {
+        let mut m = RunMetrics::default();
+        m.push(RoundRecord {
+            round: 1,
+            grad_iterations: 1,
+            objective: 2.0,
+            grad_norm: 3.0,
+            consensus_error: 0.5,
+            bytes_cumulative: 16,
+            max_transmitted: 1.5,
+            saturations: 0,
+        });
+        assert_eq!(m.len(), 1);
+        let csv = m.to_csv();
+        assert!(csv.starts_with("round,"));
+        assert!(csv.contains("1,1,2,3,0.5,16,1.5,0"));
+    }
+}

@@ -1,0 +1,22 @@
+//! One recorded round.
+
+/// Snapshot of system state after one engine round.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundRecord {
+    /// 1-based round index.
+    pub round: usize,
+    /// Gradient iterations completed so far.
+    pub grad_iterations: usize,
+    /// `Σ_i f_i(x̄)`.
+    pub objective: f64,
+    /// `‖(1/N) Σ_i ∇f_i(x̄)‖`.
+    pub grad_norm: f64,
+    /// `‖x − x̄‖` over stacked states.
+    pub consensus_error: f64,
+    /// Cumulative wire bytes.
+    pub bytes_cumulative: usize,
+    /// Max per-node transmitted magnitude this round.
+    pub max_transmitted: f64,
+    /// Cumulative saturation events.
+    pub saturations: usize,
+}

@@ -1,0 +1,79 @@
+//! Cross-trial aggregation (the paper averages Figs. 7/10 over 100
+//! trials).
+
+/// A named scalar series (x monotone, y values).
+#[derive(Debug, Clone, Default)]
+pub struct MetricSeries {
+    /// Series label used in reports.
+    pub name: String,
+    /// X coordinates (iterations or bytes).
+    pub x: Vec<f64>,
+    /// Y values.
+    pub y: Vec<f64>,
+}
+
+impl MetricSeries {
+    /// Build a named series.
+    pub fn new(name: impl Into<String>, x: Vec<f64>, y: Vec<f64>) -> Self {
+        assert_eq!(x.len(), y.len());
+        Self { name: name.into(), x, y }
+    }
+
+    /// Last y value (None for empty series).
+    pub fn last(&self) -> Option<f64> {
+        self.y.last().copied()
+    }
+
+    /// First x whose y falls at or below `threshold` (for
+    /// iterations-to-accuracy summaries). None if never reached.
+    pub fn first_below(&self, threshold: f64) -> Option<f64> {
+        self.x
+            .iter()
+            .zip(self.y.iter())
+            .find(|(_, &y)| y <= threshold)
+            .map(|(&x, _)| x)
+    }
+}
+
+/// Point-wise mean of equally-sampled trials: all inputs must share the
+/// same x grid (enforced).
+pub fn aggregate_mean(trials: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!trials.is_empty());
+    let n = trials[0].len();
+    assert!(trials.iter().all(|t| t.len() == n), "trials not equally sampled");
+    let mut out = vec![0.0; n];
+    for t in trials {
+        for (o, v) in out.iter_mut().zip(t.iter()) {
+            *o += v;
+        }
+    }
+    for o in out.iter_mut() {
+        *o /= trials.len() as f64;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_of_trials() {
+        let m = aggregate_mean(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn first_below_threshold() {
+        let s = MetricSeries::new("t", vec![1.0, 2.0, 3.0], vec![1.0, 0.5, 0.1]);
+        assert_eq!(s.first_below(0.5), Some(2.0));
+        assert_eq!(s.first_below(0.01), None);
+        assert_eq!(s.last(), Some(0.1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_trials_rejected() {
+        let _ = aggregate_mean(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+}

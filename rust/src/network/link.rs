@@ -1,0 +1,65 @@
+//! Link models: bandwidth/latency cost accounting and loss injection.
+
+/// Transmission characteristics of every link in the fabric.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Bytes/second the link sustains. Used by the simulated clock to
+    /// translate payload size into transmission time. `f64::INFINITY`
+    /// disables the bandwidth term.
+    pub bandwidth_bytes_per_sec: f64,
+    /// Fixed per-message latency in seconds.
+    pub latency_sec: f64,
+    /// Probability a message is silently dropped (failure injection).
+    pub drop_prob: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        Self { bandwidth_bytes_per_sec: f64::INFINITY, latency_sec: 0.0, drop_prob: 0.0 }
+    }
+}
+
+impl LinkModel {
+    /// A "slow network" preset: the communication-bottleneck regime the
+    /// paper motivates (≈1 MB/s, 5 ms latency).
+    pub fn slow() -> Self {
+        Self { bandwidth_bytes_per_sec: 1e6, latency_sec: 5e-3, drop_prob: 0.0 }
+    }
+
+    /// Simulated wall-clock cost of transmitting `bytes` on this link.
+    pub fn transmit_time(&self, bytes: usize) -> f64 {
+        let bw = if self.bandwidth_bytes_per_sec.is_finite() {
+            bytes as f64 / self.bandwidth_bytes_per_sec
+        } else {
+            0.0
+        };
+        self.latency_sec + bw
+    }
+}
+
+/// Per-link counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LinkStats {
+    /// Messages attempted on this link.
+    pub messages: usize,
+    /// Messages dropped by failure injection.
+    pub dropped: usize,
+    /// Payload bytes successfully delivered.
+    pub bytes: usize,
+    /// Total simulated transmission time (seconds).
+    pub sim_time: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transmit_time_components() {
+        let fast = LinkModel::default();
+        assert_eq!(fast.transmit_time(1_000_000), 0.0);
+        let slow = LinkModel::slow();
+        let t = slow.transmit_time(1_000_000);
+        assert!((t - (1.0 + 0.005)).abs() < 1e-12, "t={t}");
+    }
+}

@@ -1,0 +1,28 @@
+//! Simulated network fabric.
+//!
+//! The paper's target regime is consensus over *low-speed* networks, so
+//! the fabric meters every transmission: per-link byte counters feed the
+//! Fig. 6 reproduction, and a configurable [`LinkModel`] adds latency
+//! (simulated clock) and random message loss for robustness experiments.
+
+mod bus;
+mod link;
+
+pub use bus::{Bus, DeliveredMessage};
+pub use link::{LinkModel, LinkStats};
+
+use crate::compress::Payload;
+use std::sync::Arc;
+
+/// A message in flight.
+#[derive(Debug, Clone)]
+pub struct Message {
+    /// Sender node.
+    pub src: usize,
+    /// Receiver node.
+    pub dst: usize,
+    /// 1-based round in which it was sent.
+    pub round: usize,
+    /// Encoded payload (shared; one buffer serves every link copy).
+    pub payload: Arc<Payload>,
+}

@@ -1,0 +1,109 @@
+//! Distributed change-point detection — the wireless-sensor-network
+//! motivation of paper §III-A.
+//!
+//! Each sensor `i` holds a noisy local view `y_i ∈ R^T` of a common
+//! temporal signal. The network reaches consensus on the signal by
+//! minimizing `f_i(x) = ½ ‖x − y_i‖²` (whose minimizer of the *sum* is the
+//! network-wide mean series), and the change point is then read off the
+//! consensus estimate with the CUSUM statistic
+//! `S_t(x) = |Σ_{s≤t} x_s − (t/T) Σ_{s≤T} x_s|²` — maximal at the change
+//! point, the statistic the paper quotes.
+
+use super::Objective;
+
+/// Least-squares consensus objective for one sensor's local series.
+#[derive(Debug, Clone)]
+pub struct CusumObjective {
+    y: Vec<f64>,
+}
+
+impl CusumObjective {
+    /// New objective from one sensor's observed series.
+    pub fn new(y: Vec<f64>) -> Self {
+        assert!(!y.is_empty());
+        Self { y }
+    }
+
+    /// The sensor's raw observations.
+    pub fn observations(&self) -> &[f64] {
+        &self.y
+    }
+}
+
+impl Objective for CusumObjective {
+    fn dim(&self) -> usize {
+        self.y.len()
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        0.5 * x
+            .iter()
+            .zip(self.y.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        for ((o, xi), yi) in out.iter_mut().zip(x.iter()).zip(self.y.iter()) {
+            *o = xi - yi;
+        }
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        Some(1.0)
+    }
+}
+
+/// CUSUM statistic sequence `S_t(x)` for `t = 1..T` (paper §III-A).
+pub fn cusum_statistic(x: &[f64]) -> Vec<f64> {
+    let t_total = x.len();
+    let total: f64 = x.iter().sum();
+    let mut prefix = 0.0;
+    let mut s = Vec::with_capacity(t_total);
+    for (t, &v) in x.iter().enumerate() {
+        prefix += v;
+        let dev = prefix - ((t + 1) as f64 / t_total as f64) * total;
+        s.push(dev * dev);
+    }
+    s
+}
+
+/// Index of the CUSUM-estimated change point (argmax of the statistic).
+pub fn detect_change_point(x: &[f64]) -> usize {
+    cusum_statistic(x)
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::check_gradient;
+    use super::*;
+
+    #[test]
+    fn gradient_is_residual() {
+        let f = CusumObjective::new(vec![1.0, 2.0, 3.0]);
+        assert_eq!(f.grad(&[2.0, 2.0, 2.0]), vec![1.0, 0.0, -1.0]);
+        check_gradient(&f, &[0.5, 1.5, -0.5], 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn cusum_finds_step_change() {
+        // Clean step at index 50.
+        let mut x = vec![0.0; 100];
+        for v in x.iter_mut().skip(50) {
+            *v = 1.0;
+        }
+        let cp = detect_change_point(&x);
+        assert!((49..=51).contains(&cp), "cp={cp}");
+    }
+
+    #[test]
+    fn cusum_statistic_zero_for_constant_series() {
+        let s = cusum_statistic(&[3.0; 10]);
+        assert!(s.iter().all(|&v| v.abs() < 1e-18));
+    }
+}

@@ -1,0 +1,161 @@
+//! L2-regularized logistic regression — the decentralized-ML workload in
+//! pure rust. (The same loss is also authored in JAX and compiled via the
+//! AOT path; this implementation is the numeric cross-check.)
+
+use super::Objective;
+use crate::rng::{Normal, Xoshiro256pp};
+
+/// `f(w) = (1/m) Σ_j log(1 + exp(−y_j · w·x_j)) + (λ/2)‖w‖²`
+/// with labels `y ∈ {−1, +1}`.
+#[derive(Debug, Clone)]
+pub struct LogisticRegression {
+    features: Vec<Vec<f64>>,
+    labels: Vec<f64>,
+    lambda: f64,
+}
+
+impl LogisticRegression {
+    /// New objective over a local shard of examples.
+    pub fn new(features: Vec<Vec<f64>>, labels: Vec<f64>, lambda: f64) -> Self {
+        assert!(!features.is_empty());
+        assert_eq!(features.len(), labels.len());
+        let d = features[0].len();
+        assert!(features.iter().all(|f| f.len() == d), "ragged features");
+        assert!(labels.iter().all(|&y| y == 1.0 || y == -1.0), "labels must be ±1");
+        assert!(lambda >= 0.0);
+        Self { features, labels, lambda }
+    }
+
+    /// Synthesize a linearly-separable-ish shard: true weight `w*` drawn
+    /// N(0,1), features N(0,1), labels `sign(w*·x + noise)`.
+    /// Returns (objective, true_w). Deterministic given `rng`.
+    pub fn synthetic(
+        m: usize,
+        d: usize,
+        noise_sd: f64,
+        lambda: f64,
+        rng: &mut Xoshiro256pp,
+    ) -> (Self, Vec<f64>) {
+        let std = Normal::new(0.0, 1.0);
+        let w_star: Vec<f64> = std.sample_vec(rng, d);
+        let noise = Normal::new(0.0, noise_sd);
+        let mut features = Vec::with_capacity(m);
+        let mut labels = Vec::with_capacity(m);
+        for _ in 0..m {
+            let x: Vec<f64> = std.sample_vec(rng, d);
+            let margin = crate::linalg::vecops::dot(&w_star, &x) + noise.sample(rng);
+            labels.push(if margin >= 0.0 { 1.0 } else { -1.0 });
+            features.push(x);
+        }
+        (Self::new(features, labels, lambda), w_star)
+    }
+
+    /// Classification accuracy of weights `w` on this shard.
+    pub fn accuracy(&self, w: &[f64]) -> f64 {
+        let hits = self
+            .features
+            .iter()
+            .zip(self.labels.iter())
+            .filter(|(x, &y)| crate::linalg::vecops::dot(w, x) * y > 0.0)
+            .count();
+        hits as f64 / self.labels.len() as f64
+    }
+
+    /// Number of local examples.
+    pub fn num_examples(&self) -> usize {
+        self.labels.len()
+    }
+}
+
+impl Objective for LogisticRegression {
+    fn dim(&self) -> usize {
+        self.features[0].len()
+    }
+
+    fn value(&self, w: &[f64]) -> f64 {
+        let m = self.labels.len() as f64;
+        let mut loss = 0.0;
+        for (x, &y) in self.features.iter().zip(self.labels.iter()) {
+            let margin = y * crate::linalg::vecops::dot(w, x);
+            // log(1 + e^{−margin}) computed stably.
+            loss += if margin > 0.0 {
+                (-margin).exp().ln_1p()
+            } else {
+                -margin + margin.exp().ln_1p()
+            };
+        }
+        loss / m + 0.5 * self.lambda * crate::linalg::vecops::norm2_sq(w)
+    }
+
+    fn grad_into(&self, w: &[f64], out: &mut [f64]) {
+        let m = self.labels.len() as f64;
+        for (o, &wi) in out.iter_mut().zip(w.iter()) {
+            *o = self.lambda * wi;
+        }
+        for (x, &y) in self.features.iter().zip(self.labels.iter()) {
+            let margin = y * crate::linalg::vecops::dot(w, x);
+            // σ(−margin) = 1/(1+e^{margin}), computed stably.
+            let s = if margin > 0.0 {
+                let e = (-margin).exp();
+                e / (1.0 + e)
+            } else {
+                1.0 / (1.0 + margin.exp())
+            };
+            let coef = -y * s / m;
+            crate::linalg::vecops::axpy(coef, x, out);
+        }
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        // L ≤ (1/4m) Σ‖x_j‖² + λ.
+        let m = self.labels.len() as f64;
+        let s: f64 =
+            self.features.iter().map(|x| crate::linalg::vecops::norm2_sq(x)).sum::<f64>();
+        Some(s / (4.0 * m) + self.lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::check_gradient;
+    use super::*;
+
+    #[test]
+    fn gradient_check() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let (f, _) = LogisticRegression::synthetic(20, 5, 0.1, 0.01, &mut rng);
+        check_gradient(&f, &vec![0.1; 5], 1e-6, 1e-5).unwrap();
+        check_gradient(&f, &vec![-0.5; 5], 1e-6, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn training_improves_accuracy() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let (f, _w_star) = LogisticRegression::synthetic(200, 8, 0.05, 0.001, &mut rng);
+        let mut w = vec![0.0; 8];
+        let acc0 = f.accuracy(&w);
+        let mut g = vec![0.0; 8];
+        for _ in 0..300 {
+            f.grad_into(&w, &mut g);
+            crate::linalg::vecops::axpy(-0.5, &g, &mut w);
+        }
+        let acc1 = f.accuracy(&w);
+        assert!(acc1 > 0.9, "acc after training = {acc1} (before {acc0})");
+        assert!(acc1 > acc0);
+    }
+
+    #[test]
+    fn value_is_stable_for_large_margins() {
+        let f = LogisticRegression::new(vec![vec![1000.0]], vec![1.0], 0.0);
+        assert!(f.value(&[1.0]).is_finite());
+        assert!(f.value(&[-1.0]).is_finite());
+        let g = f.grad(&[-1.0]);
+        assert!(g[0].is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be")]
+    fn rejects_bad_labels() {
+        let _ = LogisticRegression::new(vec![vec![1.0]], vec![0.5], 0.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Local objective functions `f_i`.
+//!
+//! Every node holds one [`Objective`]; the global problem is
+//! `min_x Σ_i f_i(x)` (paper Eq. 1). Implementations cover the paper's
+//! experiments (scalar quadratics, the non-convex `−4x²` of Fig. 5, the
+//! Assumption-2 examples), the sensor-network CUSUM motivation of §III-A,
+//! classic ML losses in pure rust, and — through
+//! [`crate::runtime::XlaObjective`] — arbitrary JAX-authored models
+//! (logistic regression, transformer LM) compiled AOT to HLO.
+
+mod cusum;
+mod logistic;
+mod poly;
+mod quadratic;
+
+pub use cusum::{cusum_statistic, detect_change_point, CusumObjective};
+pub use logistic::LogisticRegression;
+pub use poly::{NonConvexPoly, Rosenbrock, SinePlusSquare};
+pub use quadratic::{DiagonalQuadratic, Quadratic, ScalarQuadratic};
+
+use crate::linalg::vecops;
+
+/// A differentiable local objective `f_i: R^P → R`.
+pub trait Objective: Send + Sync {
+    /// Problem dimension `P`.
+    fn dim(&self) -> usize;
+
+    /// Objective value `f_i(x)`.
+    fn value(&self, x: &[f64]) -> f64;
+
+    /// Gradient `∇f_i(x)` written into `out` (length `P`).
+    fn grad_into(&self, x: &[f64], out: &mut [f64]);
+
+    /// Gradient (allocating convenience wrapper).
+    fn grad(&self, x: &[f64]) -> Vec<f64> {
+        let mut g = vec![0.0; self.dim()];
+        self.grad_into(x, &mut g);
+        g
+    }
+
+    /// Best known Lipschitz constant of the gradient, if available
+    /// (Assumption 1). Used to pick the Theorem-2 step-size bound
+    /// `α < (1+λ_N(W))/L`.
+    fn lipschitz(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Numerical gradient check by central differences — test utility shared
+/// by all objective implementations.
+pub fn check_gradient(obj: &dyn Objective, x: &[f64], eps: f64, tol: f64) -> Result<(), String> {
+    let p = obj.dim();
+    assert_eq!(x.len(), p);
+    let analytic = obj.grad(x);
+    let mut xp = x.to_vec();
+    for i in 0..p {
+        let orig = xp[i];
+        xp[i] = orig + eps;
+        let fp = obj.value(&xp);
+        xp[i] = orig - eps;
+        let fm = obj.value(&xp);
+        xp[i] = orig;
+        let numeric = (fp - fm) / (2.0 * eps);
+        let denom = 1.0f64.max(numeric.abs()).max(analytic[i].abs());
+        if (numeric - analytic[i]).abs() / denom > tol {
+            return Err(format!(
+                "gradient mismatch at dim {i}: analytic={} numeric={numeric}",
+                analytic[i]
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The mean gradient norm `‖(1/N) Σ_i ∇f_i(x̄)‖` — the convergence metric
+/// of Theorems 2–3 — evaluated at the mean iterate.
+pub fn mean_gradient_norm(objectives: &[Box<dyn Objective>], xbar: &[f64]) -> f64 {
+    let n = objectives.len();
+    assert!(n > 0);
+    let p = objectives[0].dim();
+    let mut acc = vec![0.0; p];
+    let mut g = vec![0.0; p];
+    for obj in objectives {
+        obj.grad_into(xbar, &mut g);
+        vecops::axpy(1.0, &g, &mut acc);
+    }
+    vecops::scale(&mut acc, 1.0 / n as f64);
+    vecops::norm2(&acc)
+}
+
+/// Global objective value `Σ_i f_i(x)` at a common point.
+pub fn global_value(objectives: &[Box<dyn Objective>], x: &[f64]) -> f64 {
+    objectives.iter().map(|o| o.value(x)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_gradient_norm_at_optimum_is_zero() {
+        // f1 = (x-1)², f2 = (x+1)²: global optimum at 0 where grads cancel.
+        let objs: Vec<Box<dyn Objective>> = vec![
+            Box::new(ScalarQuadratic::new(1.0, 1.0)),
+            Box::new(ScalarQuadratic::new(1.0, -1.0)),
+        ];
+        assert!(mean_gradient_norm(&objs, &[0.0]) < 1e-12);
+        assert!(mean_gradient_norm(&objs, &[1.0]) > 0.1);
+    }
+
+    #[test]
+    fn global_value_sums() {
+        let objs: Vec<Box<dyn Objective>> = vec![
+            Box::new(ScalarQuadratic::new(1.0, 0.0)),
+            Box::new(ScalarQuadratic::new(2.0, 0.0)),
+        ];
+        assert!((global_value(&objs, &[2.0]) - (4.0 + 8.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,146 @@
+//! Non-convex scalar objectives from the paper's Example 4 (functions
+//! satisfying Assumption 2 without convexity) and the Rosenbrock valley as
+//! a harder multivariate non-convex benchmark.
+
+use super::Objective;
+
+/// `f(x) = x⁴ + 5x³` — paper Example 4, bullet 1. Non-convex
+/// (`f''(−1) < 0`) but superlinear growth at infinity.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NonConvexPoly;
+
+impl NonConvexPoly {
+    /// New instance.
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Objective for NonConvexPoly {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let v = x[0];
+        v.powi(4) + 5.0 * v.powi(3)
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        let v = x[0];
+        out[0] = 4.0 * v.powi(3) + 15.0 * v * v;
+    }
+}
+
+/// `f(x) = 10 sin(x) + x²` — paper Example 4, bullet 2, with quadratic
+/// growth at infinity. Non-convex: `f''(x) = −10 sin(x) + 2 < 0` wherever
+/// `sin(x) > 1/5` (e.g. x = π/2). (The paper states `∇²f = −10cos(x)+2 < 0`
+/// at `x = 0`; both the derivative and the point are typos — `f''(0) = 2`.)
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SinePlusSquare;
+
+impl SinePlusSquare {
+    /// New instance.
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Objective for SinePlusSquare {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        10.0 * x[0].sin() + x[0] * x[0]
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        out[0] = 10.0 * x[0].cos() + 2.0 * x[0];
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        Some(12.0) // |f''| = |−10 sin? ... | ≤ 10 + 2
+    }
+}
+
+/// The `P`-dimensional Rosenbrock function
+/// `Σ_{i<P−1} 100 (x_{i+1} − x_i²)² + (1 − x_i)²` — a classic ill-
+/// conditioned non-convex test problem used in the robustness tests.
+#[derive(Debug, Clone, Copy)]
+pub struct Rosenbrock {
+    dim: usize,
+}
+
+impl Rosenbrock {
+    /// New Rosenbrock objective of dimension `dim ≥ 2`.
+    pub fn new(dim: usize) -> Self {
+        assert!(dim >= 2);
+        Self { dim }
+    }
+}
+
+impl Objective for Rosenbrock {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.dim - 1 {
+            let t1 = x[i + 1] - x[i] * x[i];
+            let t2 = 1.0 - x[i];
+            s += 100.0 * t1 * t1 + t2 * t2;
+        }
+        s
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        for i in 0..self.dim - 1 {
+            let t1 = x[i + 1] - x[i] * x[i];
+            out[i] += -400.0 * x[i] * t1 - 2.0 * (1.0 - x[i]);
+            out[i + 1] += 200.0 * t1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::check_gradient;
+    use super::*;
+
+    #[test]
+    fn nonconvex_poly_gradient() {
+        let f = NonConvexPoly::new();
+        check_gradient(&f, &[-1.2], 1e-6, 1e-5).unwrap();
+        check_gradient(&f, &[2.0], 1e-6, 1e-5).unwrap();
+        // Non-convexity: f''(−1) = 12 − 30 < 0.
+        let h = 1e-4;
+        let fpp = (f.value(&[-1.0 + h]) - 2.0 * f.value(&[-1.0]) + f.value(&[-1.0 - h])) / (h * h);
+        assert!(fpp < 0.0, "f''(−1) = {fpp}");
+    }
+
+    #[test]
+    fn sine_plus_square_gradient() {
+        let f = SinePlusSquare::new();
+        check_gradient(&f, &[0.0], 1e-6, 1e-6).unwrap();
+        check_gradient(&f, &[3.7], 1e-6, 1e-6).unwrap();
+        // Non-convex at x = π/2 where f'' = −10·1 + 2 = −8.
+        let h = 1e-4;
+        let p = std::f64::consts::FRAC_PI_2;
+        let fpp = (f.value(&[p + h]) - 2.0 * f.value(&[p]) + f.value(&[p - h])) / (h * h);
+        assert!(fpp < 0.0, "f''(pi/2) = {fpp}");
+    }
+
+    #[test]
+    fn rosenbrock_gradient_and_minimum() {
+        let f = Rosenbrock::new(4);
+        check_gradient(&f, &[0.1, 0.2, -0.3, 0.4], 1e-6, 1e-4).unwrap();
+        let ones = vec![1.0; 4];
+        assert!(f.value(&ones) < 1e-15);
+        assert!(crate::linalg::vecops::norm2(&f.grad(&ones)) < 1e-12);
+    }
+}

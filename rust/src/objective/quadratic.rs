@@ -1,0 +1,213 @@
+//! Quadratic objectives — the paper's experimental workhorse.
+
+use super::Objective;
+use crate::linalg::Matrix;
+
+/// Scalar quadratic `f(x) = a (x − b)²` (paper Figs. 1, 5, 10). Negative
+/// `a` gives the non-convex `f₁ = −4x²` of Fig. 5.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalarQuadratic {
+    a: f64,
+    b: f64,
+}
+
+impl ScalarQuadratic {
+    /// New scalar quadratic with curvature `a` and center `b`.
+    pub fn new(a: f64, b: f64) -> Self {
+        Self { a, b }
+    }
+
+    /// Curvature coefficient.
+    pub fn a(&self) -> f64 {
+        self.a
+    }
+
+    /// Center.
+    pub fn b(&self) -> f64 {
+        self.b
+    }
+}
+
+impl Objective for ScalarQuadratic {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let d = x[0] - self.b;
+        self.a * d * d
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        out[0] = 2.0 * self.a * (x[0] - self.b);
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        Some(2.0 * self.a.abs())
+    }
+}
+
+/// Vector quadratic `f(x) = ½ (x − b)ᵀ A (x − b)` with symmetric PSD `A`.
+#[derive(Debug, Clone)]
+pub struct Quadratic {
+    a: Matrix,
+    b: Vec<f64>,
+    lipschitz: f64,
+}
+
+impl Quadratic {
+    /// New quadratic; `a` must be square and match `b`'s length.
+    pub fn new(a: Matrix, b: Vec<f64>) -> Self {
+        assert_eq!(a.rows(), a.cols());
+        assert_eq!(a.rows(), b.len());
+        assert!(a.is_symmetric(1e-9), "A must be symmetric");
+        let lipschitz = crate::linalg::power_iteration(&a, 5000, 1e-12, 77).eigenvalue.abs();
+        Self { a, b, lipschitz }
+    }
+
+    /// Diagonal quadratic `½ Σ d_i (x_i − b_i)²`.
+    pub fn diagonal(d: &[f64], b: Vec<f64>) -> Self {
+        assert_eq!(d.len(), b.len());
+        let n = d.len();
+        let mut a = Matrix::zeros(n, n);
+        for (i, &di) in d.iter().enumerate() {
+            a[(i, i)] = di;
+        }
+        Self::new(a, b)
+    }
+}
+
+impl Objective for Quadratic {
+    fn dim(&self) -> usize {
+        self.b.len()
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let p = self.dim();
+        let mut d = vec![0.0; p];
+        crate::linalg::vecops::sub(x, &self.b, &mut d);
+        let ad = self.a.matvec(&d);
+        0.5 * crate::linalg::vecops::dot(&d, &ad)
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        let p = self.dim();
+        let mut d = vec![0.0; p];
+        crate::linalg::vecops::sub(x, &self.b, &mut d);
+        self.a.matvec_into(&d, out);
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        Some(self.lipschitz)
+    }
+}
+
+/// Diagonal quadratic `f(x) = ½ Σ d_i (x_i − b_i)²` stored in O(P) —
+/// use this (not [`Quadratic::diagonal`]) for high-dimensional
+/// problems: the dense variant materializes a P×P matrix.
+#[derive(Debug, Clone)]
+pub struct DiagonalQuadratic {
+    d: Vec<f64>,
+    b: Vec<f64>,
+    lipschitz: f64,
+}
+
+impl DiagonalQuadratic {
+    /// New diagonal quadratic; requires `d_i ≥ 0` is *not* enforced (the
+    /// paper's Fig. 5 uses a negative-curvature term), but the Lipschitz
+    /// constant uses |d|.
+    pub fn new(d: Vec<f64>, b: Vec<f64>) -> Self {
+        assert_eq!(d.len(), b.len());
+        assert!(!d.is_empty());
+        let lipschitz = d.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        Self { d, b, lipschitz }
+    }
+}
+
+impl Objective for DiagonalQuadratic {
+    fn dim(&self) -> usize {
+        self.d.len()
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.d.len() {
+            let t = x[i] - self.b[i];
+            s += self.d[i] * t * t;
+        }
+        0.5 * s
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        for i in 0..self.d.len() {
+            out[i] = self.d[i] * (x[i] - self.b[i]);
+        }
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        Some(self.lipschitz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::check_gradient;
+    use super::*;
+
+    #[test]
+    fn scalar_quadratic_matches_paper_fig1() {
+        // f1 = 4(x−2)²: f(2)=0, f'(0) = −16.
+        let f1 = ScalarQuadratic::new(4.0, 2.0);
+        assert_eq!(f1.value(&[2.0]), 0.0);
+        assert_eq!(f1.grad(&[0.0]), vec![-16.0]);
+        assert_eq!(f1.lipschitz(), Some(8.0));
+        check_gradient(&f1, &[0.7], 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn nonconvex_scalar_quadratic() {
+        // f = −4x² (paper Fig. 5's f₁): gradient −8x.
+        let f = ScalarQuadratic::new(-4.0, 0.0);
+        assert_eq!(f.grad(&[1.0]), vec![-8.0]);
+        check_gradient(&f, &[0.3], 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn vector_quadratic_value_and_grad() {
+        let q = Quadratic::diagonal(&[2.0, 4.0], vec![1.0, -1.0]);
+        // f(x) = (x0−1)² + 2(x1+1)²
+        assert!((q.value(&[2.0, 0.0]) - (1.0 + 2.0)).abs() < 1e-12);
+        assert_eq!(q.grad(&[2.0, 0.0]), vec![2.0, 4.0]);
+        check_gradient(&q, &[0.5, 0.5], 1e-6, 1e-6).unwrap();
+        assert!((q.lipschitz().unwrap() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dense_quadratic_gradient_check() {
+        let a = Matrix::from_rows(&[vec![3.0, 1.0], vec![1.0, 2.0]]);
+        let q = Quadratic::new(a, vec![0.5, -0.5]);
+        check_gradient(&q, &[1.0, 2.0], 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn diagonal_quadratic_matches_dense() {
+        let d = vec![2.0, 4.0, 1.0];
+        let b = vec![1.0, -1.0, 0.5];
+        let sparse = DiagonalQuadratic::new(d.clone(), b.clone());
+        let dense = Quadratic::diagonal(&d, b);
+        let x = [0.3, 0.7, -0.2];
+        assert!((sparse.value(&x) - dense.value(&x)).abs() < 1e-12);
+        assert_eq!(sparse.grad(&x), dense.grad(&x));
+        assert!((sparse.lipschitz().unwrap() - 4.0).abs() < 1e-12);
+        check_gradient(&sparse, &x, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn diagonal_quadratic_scales_to_large_p() {
+        // O(P) construction — would OOM with the dense representation.
+        let p = 1_000_000;
+        let q = DiagonalQuadratic::new(vec![1.0; p], vec![0.0; p]);
+        let x = vec![1.0; p];
+        assert!((q.value(&x) - 0.5 * p as f64).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,125 @@
+//! Sampling distributions on top of [`Xoshiro256pp`](super::Xoshiro256pp).
+
+use super::Xoshiro256pp;
+
+/// Uniform distribution on `[lo, hi)`.
+#[derive(Debug, Clone, Copy)]
+pub struct Uniform {
+    lo: f64,
+    hi: f64,
+}
+
+impl Uniform {
+    /// New uniform distribution; requires `lo < hi`.
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(lo < hi, "Uniform requires lo < hi ({lo} >= {hi})");
+        Self { lo, hi }
+    }
+
+    /// Draw one sample.
+    #[inline]
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+
+    /// Fill a vector with samples.
+    pub fn sample_vec(&self, rng: &mut Xoshiro256pp, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+/// Normal distribution via the Marsaglia polar method.
+#[derive(Debug, Clone, Copy)]
+pub struct Normal {
+    mean: f64,
+    sd: f64,
+}
+
+impl Normal {
+    /// New normal distribution; requires `sd >= 0`.
+    pub fn new(mean: f64, sd: f64) -> Self {
+        assert!(sd >= 0.0, "Normal requires sd >= 0");
+        Self { mean, sd }
+    }
+
+    /// Draw one sample.
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        // Marsaglia polar: rejection from the unit disc, no trig calls.
+        loop {
+            let u = 2.0 * rng.next_f64() - 1.0;
+            let v = 2.0 * rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let scale = (-2.0 * s.ln() / s).sqrt();
+                return self.mean + self.sd * u * scale;
+            }
+        }
+    }
+
+    /// Fill a vector with samples.
+    pub fn sample_vec(&self, rng: &mut Xoshiro256pp, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+/// Bernoulli distribution with success probability `p`.
+#[derive(Debug, Clone, Copy)]
+pub struct Bernoulli {
+    p: f64,
+}
+
+impl Bernoulli {
+    /// New Bernoulli distribution; requires `p` in `[0, 1]`.
+    pub fn new(p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "Bernoulli requires p in [0,1]");
+        Self { p }
+    }
+
+    /// Draw one sample.
+    #[inline]
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> bool {
+        rng.next_f64() < self.p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let d = Uniform::new(0.0, 10.0);
+        let xs = d.sample_vec(&mut rng, 100_000);
+        assert!(xs.iter().all(|&x| (0.0..10.0).contains(&x)));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 5.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let d = Normal::new(3.0, 2.0);
+        let xs = d.sample_vec(&mut rng, 200_000);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn bernoulli_frequency() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let d = Bernoulli::new(0.3);
+        let n = 100_000;
+        let hits = (0..n).filter(|_| d.sample(&mut rng)).count();
+        let freq = hits as f64 / n as f64;
+        assert!((freq - 0.3).abs() < 0.01, "freq={freq}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn uniform_rejects_bad_bounds() {
+        let _ = Uniform::new(1.0, 1.0);
+    }
+}

@@ -1,0 +1,215 @@
+//! `manifest.json` parsing — the cross-language artifact contract.
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One tensor's shape/dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    /// Logical name (e.g. "wte", "tokens", "d_wte").
+    pub name: String,
+    /// Dimensions (empty = scalar).
+    pub shape: Vec<usize>,
+    /// "f32" or "s32".
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Number of elements.
+    pub fn count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT model.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// HLO text filename (relative to the artifacts dir).
+    pub hlo: String,
+    /// Ordered inputs.
+    pub inputs: Vec<TensorSpec>,
+    /// Ordered outputs (the HLO returns them as one tuple).
+    pub outputs: Vec<TensorSpec>,
+    /// Initial-parameter blob, when the model has trainable state:
+    /// (filename, tensor count, total f32 elements).
+    pub params: Option<(String, usize, usize)>,
+    /// Free-form numeric metadata (e.g. vocab, seq_len).
+    pub meta: BTreeMap<String, f64>,
+}
+
+impl ModelSpec {
+    /// Parameter inputs = all inputs except the trailing data inputs;
+    /// by convention the params blob covers a *prefix* of `inputs`.
+    pub fn param_inputs(&self) -> &[TensorSpec] {
+        match &self.params {
+            Some((_, count, _)) => &self.inputs[..*count],
+            None => &[],
+        }
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Models by name.
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensor specs"))?
+        .iter()
+        .map(|t| {
+            let name = t
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensor missing name"))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensor {name} missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {name}")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = t.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string();
+            if dtype != "f32" && dtype != "s32" {
+                bail!("unsupported dtype {dtype} for {name}");
+            }
+            Ok(TensorSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json` from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let version = root
+            .get("format_version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing format_version"))?;
+        if version != 1 {
+            bail!("unsupported manifest format_version {version}");
+        }
+        let models_json = match root.get("models") {
+            Some(Json::Obj(m)) => m,
+            _ => bail!("manifest missing models object"),
+        };
+        let mut models = BTreeMap::new();
+        for (name, m) in models_json {
+            let hlo = m
+                .get("hlo")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("model {name} missing hlo"))?
+                .to_string();
+            if !dir.join(&hlo).exists() {
+                bail!("model {name}: HLO file {hlo} missing from {}", dir.display());
+            }
+            let inputs = tensor_specs(m.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?;
+            let outputs = tensor_specs(m.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?;
+            let params = match m.get("params") {
+                Some(p) => {
+                    let file = p
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("params missing file"))?
+                        .to_string();
+                    let count = p
+                        .get("count")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("params missing count"))?;
+                    let total = p
+                        .get("total")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("params missing total"))?;
+                    // Cross-validate against the declared input shapes.
+                    let declared: usize = inputs[..count].iter().map(TensorSpec::count).sum();
+                    if declared != total {
+                        bail!("model {name}: params total {total} != input prefix {declared}");
+                    }
+                    Some((file, count, total))
+                }
+                None => None,
+            };
+            let mut meta = BTreeMap::new();
+            if let Some(Json::Obj(mm)) = m.get("meta") {
+                for (k, v) in mm {
+                    if let Some(x) = v.as_f64() {
+                        meta.insert(k.clone(), x);
+                    }
+                }
+            }
+            models.insert(name.clone(), ModelSpec { hlo, inputs, outputs, params, meta });
+        }
+        Ok(Self { models })
+    }
+
+    /// Fetch a model spec by name.
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.get(name).ok_or_else(|| anyhow!("model {name} not in manifest"))
+    }
+}
+
+/// Read a flat little-endian f32 blob.
+pub fn read_f32_blob(path: &Path, expected: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != expected * 4 {
+        bail!("{}: expected {} f32 ({} B), got {} B", path.display(), expected, expected * 4, bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        let dir = crate::runtime::artifacts_dir(None);
+        if !crate::runtime::artifacts_available(&dir) {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for name in ["quad", "logistic", "transformer", "quantize", "consensus"] {
+            assert!(m.models.contains_key(name), "{name} missing");
+        }
+        let tr = m.model("transformer").unwrap();
+        let (file, count, total) = tr.params.clone().unwrap();
+        assert_eq!(tr.param_inputs().len(), count);
+        assert_eq!(tr.inputs.last().unwrap().name, "tokens");
+        assert_eq!(tr.inputs.last().unwrap().dtype, "s32");
+        assert_eq!(tr.outputs.len(), count + 1);
+        let blob = read_f32_blob(&dir.join(file), total).unwrap();
+        assert_eq!(blob.len(), total);
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        let tmp = std::env::temp_dir().join("adcdgd_bad_manifest");
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), "{\"format_version\": 2, \"models\": {}}")
+            .unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        std::fs::write(tmp.join("manifest.json"), "not json").unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn tensor_spec_count() {
+        let t = TensorSpec { name: "x".into(), shape: vec![3, 4], dtype: "f32".into() };
+        assert_eq!(t.count(), 12);
+        let s = TensorSpec { name: "s".into(), shape: vec![], dtype: "f32".into() };
+        assert_eq!(s.count(), 1);
+    }
+}

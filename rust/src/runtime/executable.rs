@@ -1,0 +1,229 @@
+//! PJRT client + compiled-model wrappers.
+
+use super::artifact::{Manifest, ModelSpec};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// The PJRT CPU client. Compile once per artifact; execution goes
+/// through [`LoadedModel`].
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        Ok(Self { client })
+    }
+
+    /// Human-readable platform description.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} ({}), {} device(s)",
+            self.client.platform_name(),
+            self.client.platform_version(),
+            self.client.device_count()
+        )
+    }
+
+    /// Load + compile one model from the artifacts directory.
+    pub fn load(&self, dir: &Path, manifest: &Manifest, name: &str) -> Result<LoadedModel> {
+        let spec = manifest.model(name)?.clone();
+        let hlo_path = dir.join(&spec.hlo);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        Ok(LoadedModel { name: name.to_string(), spec, exe: Mutex::new(exe) })
+    }
+}
+
+/// One compiled executable plus its manifest spec.
+///
+/// The raw PJRT handles are not `Send`/`Sync` by auto-trait (FFI
+/// pointers), but the PJRT CPU client is thread-safe for execution and
+/// the executable here is additionally serialized behind a `Mutex`, so
+/// the manual impls below are sound in this usage.
+pub struct LoadedModel {
+    name: String,
+    spec: ModelSpec,
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: all mutation goes through the Mutex; PJRT CPU execution is
+// internally synchronized.
+unsafe impl Send for LoadedModel {}
+unsafe impl Sync for LoadedModel {}
+
+impl LoadedModel {
+    /// Model name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Manifest spec.
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Execute with validated inputs; returns the decomposed output
+    /// tuple (one literal per manifest output).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.exe.lock().unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {} result: {e}", self.name))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling {}: {e}", self.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: manifest declares {} outputs, HLO returned {}",
+                self.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Build an f32 literal of the given dims from a slice.
+    pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let count: usize = dims.iter().product::<usize>().max(1);
+        if count != data.len() {
+            bail!("literal shape {:?} needs {count} elements, got {}", dims, data.len());
+        }
+        let lit = xla::Literal::vec1(data);
+        if dims.len() == 1 || dims.is_empty() {
+            if dims.is_empty() {
+                return Ok(xla::Literal::scalar(data[0]));
+            }
+            return Ok(lit);
+        }
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims_i64).map_err(|e| anyhow!("reshape: {e}"))
+    }
+
+    /// Build an i32 literal.
+    pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+        let count: usize = dims.iter().product::<usize>().max(1);
+        if count != data.len() {
+            bail!("literal shape {:?} needs {count} elements, got {}", dims, data.len());
+        }
+        if dims.is_empty() {
+            return Ok(xla::Literal::scalar(data[0]));
+        }
+        let lit = xla::Literal::vec1(data);
+        if dims.len() == 1 {
+            return Ok(lit);
+        }
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims_i64).map_err(|e| anyhow!("reshape: {e}"))
+    }
+
+    /// Extract an f32 vector from an output literal.
+    pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))
+    }
+
+    /// Extract a scalar f32.
+    pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+        lit.get_first_element::<f32>().map_err(|e| anyhow!("literal scalar: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime_and_manifest() -> Option<(Runtime, Manifest, std::path::PathBuf)> {
+        let dir = crate::runtime::artifacts_dir(None);
+        if !crate::runtime::artifacts_available(&dir) {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let rt = Runtime::cpu().expect("PJRT cpu client");
+        let m = Manifest::load(&dir).expect("manifest");
+        Some((rt, m, dir))
+    }
+
+    #[test]
+    fn quad_artifact_matches_analytic() {
+        let Some((rt, m, dir)) = runtime_and_manifest() else { return };
+        let model = rt.load(&dir, &m, "quad").unwrap();
+        let x = [1.0f32, 2.0, -0.5, 0.0];
+        let a = [4.0f32, 2.0, 1.0, 5.0];
+        let b = [2.0f32, -3.0, 0.5, 0.1];
+        let out = model
+            .execute(&[
+                LoadedModel::literal_f32(&x, &[4]).unwrap(),
+                LoadedModel::literal_f32(&a, &[4]).unwrap(),
+                LoadedModel::literal_f32(&b, &[4]).unwrap(),
+            ])
+            .unwrap();
+        let value = LoadedModel::to_f32_scalar(&out[0]).unwrap();
+        let grad = LoadedModel::to_f32_vec(&out[1]).unwrap();
+        let mut want_v = 0.0f32;
+        for i in 0..4 {
+            let d = x[i] - b[i];
+            want_v += a[i] * d * d;
+            assert!((grad[i] - 2.0 * a[i] * d).abs() < 1e-5, "grad[{i}]");
+        }
+        assert!((value - want_v).abs() < 1e-4, "value {value} vs {want_v}");
+    }
+
+    #[test]
+    fn execute_rejects_wrong_arity() {
+        let Some((rt, m, dir)) = runtime_and_manifest() else { return };
+        let model = rt.load(&dir, &m, "quad").unwrap();
+        let x = LoadedModel::literal_f32(&[0.0; 4], &[4]).unwrap();
+        assert!(model.execute(&[x]).is_err());
+    }
+
+    #[test]
+    fn consensus_artifact_matches_native() {
+        let Some((rt, m, dir)) = runtime_and_manifest() else { return };
+        let model = rt.load(&dir, &m, "consensus").unwrap();
+        let spec = model.spec().clone();
+        let n = spec.meta["n"] as usize;
+        let p = spec.meta["p"] as usize;
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(5);
+        let x: Vec<f32> = (0..n * p).map(|_| rng.next_f32() - 0.5).collect();
+        let w: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let g: Vec<f32> = (0..p).map(|_| rng.next_f32() - 0.5).collect();
+        let alpha = 0.05f32;
+        let out = model
+            .execute(&[
+                LoadedModel::literal_f32(&x, &[n, p]).unwrap(),
+                LoadedModel::literal_f32(&w, &[n]).unwrap(),
+                LoadedModel::literal_f32(&g, &[p]).unwrap(),
+                xla::Literal::scalar(alpha),
+            ])
+            .unwrap();
+        let got = LoadedModel::to_f32_vec(&out[0]).unwrap();
+        for j in (0..p).step_by(499) {
+            let mut want = 0.0f32;
+            for i in 0..n {
+                want += w[i] * x[i * p + j];
+            }
+            want -= alpha * g[j];
+            assert!((got[j] - want).abs() < 1e-4, "j={j}: {} vs {want}", got[j]);
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//! Python never runs at request time — the artifacts directory is the
+//! only contract between the layers (`manifest.json` + `*.hlo.txt` +
+//! `transformer_params.bin`).
+
+mod artifact;
+mod corpus;
+mod executable;
+mod objectives;
+mod quantizer;
+mod train;
+
+pub use artifact::{Manifest, ModelSpec, TensorSpec};
+pub use corpus::TokenGen;
+pub use executable::{LoadedModel, Runtime};
+pub use objectives::{TransformerObjective, XlaLogistic, XlaQuadratic};
+pub use quantizer::XlaQuantizer;
+pub use train::{train_decentralized, TrainParams, TrainReport};
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: explicit argument, else
+/// `$ADCDGD_ARTIFACTS`, else `<manifest dir>/artifacts`.
+pub fn artifacts_dir(explicit: Option<&str>) -> PathBuf {
+    if let Some(p) = explicit {
+        return PathBuf::from(p);
+    }
+    if let Ok(p) = std::env::var("ADCDGD_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True when the AOT artifacts exist (used by tests to self-skip).
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").exists()
+}
+
+/// Quick PJRT liveness probe for `adcdgd info`.
+pub fn probe() -> Result<String> {
+    let rt = Runtime::cpu()?;
+    Ok(rt.describe())
+}
+
+/// `adcdgd train` entry point (thin shim over [`train_decentralized`]).
+pub fn cli_train(args: &crate::util::args::Args) -> Result<()> {
+    let dir = artifacts_dir(args.options.get("artifacts").map(|s| s.as_str()));
+    anyhow::ensure!(
+        artifacts_available(&dir),
+        "artifacts not found in {} — run `make artifacts` first",
+        dir.display()
+    );
+    let params = TrainParams {
+        model: args.get_str("model", "transformer"),
+        nodes: args.get::<usize>("nodes", 4).map_err(anyhow::Error::msg)?,
+        steps: args.get::<usize>("steps", 200).map_err(anyhow::Error::msg)?,
+        alpha: args.get::<f64>("alpha", 0.05).map_err(anyhow::Error::msg)?,
+        gamma: args.get::<f64>("gamma", 1.0).map_err(anyhow::Error::msg)?,
+        seed: args.get::<u64>("seed", 0).map_err(anyhow::Error::msg)?,
+        compressor: args.get_str("compressor", "qsgd"),
+        record_every: args.get::<usize>("record-every", 10).map_err(anyhow::Error::msg)?,
+        baseline_dgd: args.has_flag("baseline-dgd"),
+    };
+    let report = train_decentralized(&dir, &params).context("decentralized training failed")?;
+    println!("{}", report.render());
+    if let Some(out) = args.options.get("out") {
+        std::fs::write(out, report.to_csv())?;
+        println!("loss curve written to {out}");
+    }
+    Ok(())
+}

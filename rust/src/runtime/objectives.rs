@@ -1,0 +1,220 @@
+//! HLO-backed [`Objective`] implementations — the node-local gradient
+//! computations that exercise the full L1/L2 stack from the rust hot
+//! path.
+
+use super::corpus::TokenGen;
+use super::executable::LoadedModel;
+use crate::objective::Objective;
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
+
+fn f64_to_f32(x: &[f64]) -> Vec<f32> {
+    x.iter().map(|&v| v as f32).collect()
+}
+
+/// Quadratic family through the `quad` artifact: value/grad of
+/// `Σ a·(x−b)²` with fixed per-node `a`, `b`.
+pub struct XlaQuadratic {
+    model: Arc<LoadedModel>,
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl XlaQuadratic {
+    /// New node objective; lengths must match the artifact's P.
+    pub fn new(model: Arc<LoadedModel>, a: Vec<f64>, b: Vec<f64>) -> Result<Self> {
+        let p = model.spec().inputs[0].count();
+        anyhow::ensure!(a.len() == p && b.len() == p, "expected length {p}");
+        Ok(Self { model, a: f64_to_f32(&a), b: f64_to_f32(&b) })
+    }
+
+    fn run(&self, x: &[f64]) -> (f64, Vec<f64>) {
+        let p = self.a.len();
+        let out = self
+            .model
+            .execute(&[
+                LoadedModel::literal_f32(&f64_to_f32(x), &[p]).expect("x literal"),
+                LoadedModel::literal_f32(&self.a, &[p]).expect("a literal"),
+                LoadedModel::literal_f32(&self.b, &[p]).expect("b literal"),
+            ])
+            .expect("quad artifact execution");
+        let v = LoadedModel::to_f32_scalar(&out[0]).expect("value") as f64;
+        let g = LoadedModel::to_f32_vec(&out[1]).expect("grad");
+        (v, g.iter().map(|&x| x as f64).collect())
+    }
+}
+
+impl Objective for XlaQuadratic {
+    fn dim(&self) -> usize {
+        self.a.len()
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        self.run(x).0
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(&self.run(x).1);
+    }
+}
+
+/// Logistic regression through the `logistic` artifact with a fixed
+/// local data shard (deterministic gradients — cross-checked against
+/// the pure-rust implementation in the integration tests).
+pub struct XlaLogistic {
+    model: Arc<LoadedModel>,
+    features: Vec<f32>,
+    labels: Vec<f32>,
+    lam: f32,
+    m: usize,
+    d: usize,
+}
+
+impl XlaLogistic {
+    /// New node objective over `features` (m×d row-major) and ±1
+    /// `labels`.
+    pub fn new(
+        model: Arc<LoadedModel>,
+        features: Vec<f64>,
+        labels: Vec<f64>,
+        lam: f64,
+    ) -> Result<Self> {
+        let m = model.spec().meta["m"] as usize;
+        let d = model.spec().meta["d"] as usize;
+        anyhow::ensure!(features.len() == m * d, "features must be {m}x{d}");
+        anyhow::ensure!(labels.len() == m, "labels must be length {m}");
+        Ok(Self {
+            model,
+            features: f64_to_f32(&features),
+            labels: f64_to_f32(&labels),
+            lam: lam as f32,
+            m,
+            d,
+        })
+    }
+
+    fn run(&self, w: &[f64]) -> (f64, Vec<f64>) {
+        let out = self
+            .model
+            .execute(&[
+                LoadedModel::literal_f32(&f64_to_f32(w), &[self.d]).expect("w"),
+                LoadedModel::literal_f32(&self.features, &[self.m, self.d]).expect("X"),
+                LoadedModel::literal_f32(&self.labels, &[self.m]).expect("y"),
+                xla::Literal::scalar(self.lam),
+            ])
+            .expect("logistic artifact execution");
+        let v = LoadedModel::to_f32_scalar(&out[0]).expect("loss") as f64;
+        let g = LoadedModel::to_f32_vec(&out[1]).expect("grad");
+        (v, g.iter().map(|&x| x as f64).collect())
+    }
+}
+
+impl Objective for XlaLogistic {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn value(&self, w: &[f64]) -> f64 {
+        self.run(w).0
+    }
+
+    fn grad_into(&self, w: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(&self.run(w).1);
+    }
+}
+
+/// The transformer LM through the `transformer` artifact. The decision
+/// variable is the *flattened parameter vector*; each `grad_into` call
+/// consumes the node's next local token batch (local SGD — the
+/// stochastic-gradient extension the paper's conclusion names as the
+/// natural follow-up), while `value` uses a frozen evaluation batch so
+/// the coordinator's metrics are comparable across rounds.
+pub struct TransformerObjective {
+    model: Arc<LoadedModel>,
+    sizes: Vec<usize>,
+    shapes: Vec<Vec<usize>>,
+    token_shape: (usize, usize),
+    eval_tokens: Vec<i32>,
+    gen: Mutex<TokenGen>,
+    total: usize,
+}
+
+impl TransformerObjective {
+    /// New node objective with its own data stream.
+    pub fn new(model: Arc<LoadedModel>, mut gen: TokenGen) -> Result<Self> {
+        let spec = model.spec();
+        let params = spec.param_inputs();
+        anyhow::ensure!(!params.is_empty(), "transformer artifact missing params");
+        let sizes: Vec<usize> = params.iter().map(|t| t.count()).collect();
+        let shapes: Vec<Vec<usize>> = params.iter().map(|t| t.shape.clone()).collect();
+        let tokens_spec = spec.inputs.last().unwrap();
+        anyhow::ensure!(tokens_spec.dtype == "s32", "tokens must be s32");
+        let token_shape = (tokens_spec.shape[0], tokens_spec.shape[1]);
+        anyhow::ensure!(
+            gen.shape() == token_shape,
+            "token generator shape {:?} != artifact {:?}",
+            gen.shape(),
+            token_shape
+        );
+        let eval_tokens = gen.next_batch();
+        let total = sizes.iter().sum();
+        Ok(Self {
+            model,
+            sizes,
+            shapes,
+            token_shape,
+            eval_tokens,
+            gen: Mutex::new(gen),
+            total,
+        })
+    }
+
+    /// Total parameter count P.
+    pub fn total_params(&self) -> usize {
+        self.total
+    }
+
+    fn run(&self, x: &[f64], tokens: &[i32]) -> (f64, Option<Vec<f64>>, bool) {
+        assert_eq!(x.len(), self.total);
+        let mut literals = Vec::with_capacity(self.sizes.len() + 1);
+        let mut offset = 0usize;
+        for (size, shape) in self.sizes.iter().zip(self.shapes.iter()) {
+            let chunk: Vec<f32> = x[offset..offset + size].iter().map(|&v| v as f32).collect();
+            literals.push(LoadedModel::literal_f32(&chunk, shape).expect("param literal"));
+            offset += size;
+        }
+        literals.push(
+            LoadedModel::literal_i32(tokens, &[self.token_shape.0, self.token_shape.1])
+                .expect("tokens literal"),
+        );
+        let out = self.model.execute(&literals).expect("transformer execution");
+        let loss = LoadedModel::to_f32_scalar(&out[0]).expect("loss") as f64;
+        let mut grads = Vec::with_capacity(self.total);
+        for lit in &out[1..] {
+            let g = LoadedModel::to_f32_vec(lit).expect("grad");
+            grads.extend(g.iter().map(|&v| v as f64));
+        }
+        (loss, Some(grads), true)
+    }
+
+    /// Evaluation loss on the frozen batch (what `value` returns).
+    pub fn eval_loss(&self, x: &[f64]) -> f64 {
+        self.run(x, &self.eval_tokens).0
+    }
+}
+
+impl Objective for TransformerObjective {
+    fn dim(&self) -> usize {
+        self.total
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        self.eval_loss(x)
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        let tokens = self.gen.lock().unwrap().next_batch();
+        let (_, grads, _) = self.run(x, &tokens);
+        out.copy_from_slice(&grads.unwrap());
+    }
+}

@@ -1,0 +1,83 @@
+//! [`XlaQuantizer`] — the L1 Pallas stochastic-rounding kernel on the
+//! communication hot path, executed through PJRT.
+//!
+//! Semantically identical to [`crate::compress::RandomizedRounding`]
+//! (same Def.-1 operator), but the rounding happens in the AOT-compiled
+//! kernel: rust supplies the value vector and its own uniform noise and
+//! int16-encodes the kernel's output. Used for large-P workloads where
+//! the quantization itself is worth offloading; the integration tests
+//! assert exact agreement with the native operator given the same
+//! noise.
+
+use super::executable::LoadedModel;
+use crate::compress::{Compressed, Compressor, Payload};
+use crate::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+/// Compressor backed by the `quantize` artifact.
+pub struct XlaQuantizer {
+    model: Arc<LoadedModel>,
+    block: usize,
+}
+
+impl XlaQuantizer {
+    /// Wrap a loaded `quantize` artifact.
+    pub fn new(model: Arc<LoadedModel>) -> Self {
+        let block = model.spec().inputs[0].count();
+        Self { model, block }
+    }
+
+    /// The artifact's fixed block length P.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+}
+
+impl Compressor for XlaQuantizer {
+    fn compress(&self, z: &[f64], rng: &mut Xoshiro256pp) -> Compressed {
+        let mut data = Vec::with_capacity(z.len());
+        let mut saturated = 0usize;
+        // Process in artifact-sized blocks (pad the last one).
+        for chunk in z.chunks(self.block) {
+            let mut y: Vec<f32> = chunk.iter().map(|&v| v as f32).collect();
+            y.resize(self.block, 0.0);
+            // Padding noise 1.0 keeps padded entries exactly 0.
+            let mut u: Vec<f32> = chunk.iter().map(|_| rng.next_f32()).collect();
+            u.resize(self.block, 1.0);
+            let out = self
+                .model
+                .execute(&[
+                    LoadedModel::literal_f32(&y, &[self.block]).expect("y"),
+                    LoadedModel::literal_f32(&u, &[self.block]).expect("u"),
+                    xla::Literal::scalar(1.0f32), // amplification handled upstream
+                ])
+                .expect("quantize artifact execution");
+            let q = LoadedModel::to_f32_vec(&out[0]).expect("q");
+            for &v in q.iter().take(chunk.len()) {
+                let v = v as f64;
+                if v > i16::MAX as f64 {
+                    saturated += 1;
+                    data.push(i16::MAX);
+                } else if v < i16::MIN as f64 {
+                    saturated += 1;
+                    data.push(i16::MIN);
+                } else {
+                    data.push(v as i16);
+                }
+            }
+        }
+        Compressed { payload: Payload::I16 { scale: 1.0, data }, saturated }
+    }
+
+    fn variance_bound(&self) -> Option<f64> {
+        Some(0.25)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-quantize"
+    }
+
+    fn bytes_per_element(&self) -> f64 {
+        2.0
+    }
+}

@@ -1,0 +1,294 @@
+//! Decentralized-training driver: ADC-DGD over the transformer (or
+//! logistic) artifact — the E2E workload proving all three layers
+//! compose (DESIGN.md §4, experiment E2E).
+
+use super::artifact::{read_f32_blob, Manifest};
+use super::corpus::TokenGen;
+use super::objectives::{TransformerObjective, XlaLogistic};
+use super::Runtime;
+use crate::algorithms::{AdcDgdNode, AdcDgdOptions, DgdNode, NodeLogic, ObjectiveRef, StepSize};
+use crate::compress::{LowPrecisionQuantizer, Qsgd, RandomizedRounding, TernGrad};
+use crate::consensus::metropolis;
+use crate::coordinator::{run_nodes, RunConfig};
+use crate::rng::{Normal, Xoshiro256pp};
+use crate::topology;
+use anyhow::{bail, Result};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Training-run parameters.
+#[derive(Debug, Clone)]
+pub struct TrainParams {
+    /// "transformer" or "logistic".
+    pub model: String,
+    /// Node count (ring topology).
+    pub nodes: usize,
+    /// ADC-DGD rounds.
+    pub steps: usize,
+    /// Constant step-size.
+    pub alpha: f64,
+    /// Amplification exponent γ.
+    pub gamma: f64,
+    /// Seed.
+    pub seed: u64,
+    /// "lowprec" | "randround" | "qsgd" | "terngrad".
+    pub compressor: String,
+    /// Metric cadence.
+    pub record_every: usize,
+    /// Also run uncompressed DGD for the byte/quality comparison.
+    pub baseline_dgd: bool,
+}
+
+impl Default for TrainParams {
+    fn default() -> Self {
+        Self {
+            model: "transformer".into(),
+            nodes: 4,
+            steps: 200,
+            alpha: 0.05,
+            gamma: 1.0,
+            seed: 0,
+            compressor: "lowprec".into(),
+            record_every: 10,
+            baseline_dgd: false,
+        }
+    }
+}
+
+/// One recorded point of the training curve.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainPoint {
+    /// Round.
+    pub round: usize,
+    /// Global objective (mean eval loss summed over nodes / N… reported
+    /// as mean per-node loss).
+    pub loss: f64,
+    /// Cumulative payload bytes.
+    pub bytes: f64,
+    /// Consensus error.
+    pub consensus: f64,
+}
+
+/// Training-run report.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Model name.
+    pub model: String,
+    /// Parameter count P.
+    pub dim: usize,
+    /// Loss curve.
+    pub points: Vec<TrainPoint>,
+    /// Same curve for the uncompressed DGD baseline (when requested).
+    pub baseline: Vec<TrainPoint>,
+    /// Total bytes (ADC-DGD).
+    pub total_bytes: usize,
+    /// Total bytes (baseline, when requested).
+    pub baseline_bytes: usize,
+    /// Wall-clock seconds.
+    pub wall_seconds: f64,
+    /// Loss floor of the data process (transformer only).
+    pub entropy_floor: Option<f64>,
+}
+
+impl TrainReport {
+    /// Human-readable report.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "== decentralized training ({}; P = {}) ==\n",
+            self.model, self.dim
+        );
+        if let Some(h) = self.entropy_floor {
+            s.push_str(&format!("   data process entropy floor: {h:.4} nats\n"));
+        }
+        let first = self.points.first();
+        let last = self.points.last();
+        if let (Some(f), Some(l)) = (first, last) {
+            s.push_str(&format!(
+                "   loss: {:.4} (round {}) -> {:.4} (round {})\n",
+                f.loss, f.round, l.loss, l.round
+            ));
+        }
+        s.push_str(&format!("   adc-dgd bytes: {}\n", self.total_bytes));
+        if self.baseline_bytes > 0 {
+            let bl = self.baseline.last().map(|p| p.loss).unwrap_or(f64::NAN);
+            s.push_str(&format!(
+                "   dgd baseline bytes: {} ({}x more), final loss {:.4}\n",
+                self.baseline_bytes,
+                self.baseline_bytes as f64 / self.total_bytes.max(1) as f64,
+                bl
+            ));
+        }
+        s.push_str(&format!("   wall time: {:.1}s\n", self.wall_seconds));
+        for p in &self.points {
+            s.push_str(&format!(
+                "   round {:>5}  loss {:>8.4}  bytes {:>12.0}  consensus {:>10.3e}\n",
+                p.round, p.loss, p.bytes, p.consensus
+            ));
+        }
+        s
+    }
+
+    /// CSV of the loss curve.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("round,loss,bytes,consensus\n");
+        for p in &self.points {
+            s.push_str(&format!("{},{},{},{}\n", p.round, p.loss, p.bytes, p.consensus));
+        }
+        s
+    }
+}
+
+fn make_compressor(name: &str) -> Result<crate::algorithms::CompressorRef> {
+    Ok(match name {
+        // 2 B/elt grid with Δ = 2^-10: fine enough that the Def.-1 noise
+        // σ = Δ/2 ≈ 5e-4 does not swamp parameter-scale (~0.02) values.
+        "lowprec" => Arc::new(LowPrecisionQuantizer::new(1.0 / 1024.0)),
+        "randround" => Arc::new(RandomizedRounding::new()),
+        "qsgd" => Arc::new(Qsgd::new(8192)),
+        "terngrad" => Arc::new(TernGrad::new()),
+        other => bail!("unknown compressor {other}"),
+    })
+}
+
+fn points_from(out: &crate::coordinator::RunOutput) -> Vec<TrainPoint> {
+    let m = &out.metrics;
+    (0..m.len())
+        .map(|i| TrainPoint {
+            round: m.rounds[i],
+            loss: m.objective[i] / 1.0, // objective = Σ_i f_i(x̄); normalized below
+            bytes: m.bytes_cumulative[i],
+            consensus: m.consensus_error[i],
+        })
+        .collect()
+}
+
+/// Run decentralized training from the artifacts in `dir`.
+pub fn train_decentralized(dir: &Path, p: &TrainParams) -> Result<TrainReport> {
+    let t0 = Instant::now();
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(dir)?;
+    let g = topology::ring(p.nodes.max(2));
+    let w = metropolis(&g);
+    let n = g.num_nodes();
+    let comp = make_compressor(&p.compressor)?;
+
+    // Build per-node objectives + shared init.
+    let (objectives, x0, entropy_floor): (Vec<ObjectiveRef>, Vec<f64>, Option<f64>) =
+        match p.model.as_str() {
+            "transformer" => {
+                let model = Arc::new(rt.load(dir, &manifest, "transformer")?);
+                let spec = model.spec().clone();
+                let (file, _, total) = spec.params.clone().expect("transformer params");
+                let blob = read_f32_blob(&dir.join(file), total)?;
+                let x0: Vec<f64> = blob.iter().map(|&v| v as f64).collect();
+                let vocab = spec.meta["vocab"] as usize;
+                let seq = spec.meta["seq_len"] as usize;
+                let batch = spec.meta["batch"] as usize;
+                let mut floor = None;
+                let objs: Vec<ObjectiveRef> = (0..n)
+                    .map(|i| {
+                        let gen = TokenGen::new(
+                            vocab,
+                            seq,
+                            batch,
+                            1,
+                            0.1,
+                            p.seed ^ (0xDA7A + i as u64),
+                        );
+                        floor = Some(gen.process_entropy());
+                        Arc::new(TransformerObjective::new(model.clone(), gen).unwrap())
+                            as ObjectiveRef
+                    })
+                    .collect();
+                (objs, x0, floor)
+            }
+            "logistic" => {
+                let model = Arc::new(rt.load(dir, &manifest, "logistic")?);
+                let m = model.spec().meta["m"] as usize;
+                let d = model.spec().meta["d"] as usize;
+                let mut rng = Xoshiro256pp::seed_from_u64(p.seed ^ 0x109);
+                let std = Normal::new(0.0, 1.0);
+                let w_star = std.sample_vec(&mut rng, d);
+                let objs: Vec<ObjectiveRef> = (0..n)
+                    .map(|_| {
+                        let mut feats = Vec::with_capacity(m * d);
+                        let mut labels = Vec::with_capacity(m);
+                        for _ in 0..m {
+                            let x = std.sample_vec(&mut rng, d);
+                            let margin = crate::linalg::vecops::dot(&w_star, &x);
+                            labels.push(if margin >= 0.0 { 1.0 } else { -1.0 });
+                            feats.extend_from_slice(&x);
+                        }
+                        Arc::new(XlaLogistic::new(model.clone(), feats, labels, 0.01).unwrap())
+                            as ObjectiveRef
+                    })
+                    .collect();
+                (objs, vec![0.0; d], None)
+            }
+            other => bail!("unknown model {other}"),
+        };
+
+    let cfg = RunConfig {
+        iterations: p.steps,
+        step_size: StepSize::Constant(p.alpha),
+        seed: p.seed,
+        record_every: p.record_every,
+        ..RunConfig::default()
+    };
+
+    // ADC-DGD nodes with shared warm init.
+    let nodes: Vec<Box<dyn NodeLogic>> = (0..n)
+        .map(|i| {
+            Box::new(
+                AdcDgdNode::new(
+                    i,
+                    w.row(i).to_vec(),
+                    g.neighbors(i).to_vec(),
+                    objectives[i].clone(),
+                    comp.clone(),
+                    cfg.step_size,
+                    AdcDgdOptions { gamma: p.gamma },
+                )
+                .with_init(x0.clone()),
+            ) as Box<dyn NodeLogic>
+        })
+        .collect();
+    let out = run_nodes(&g, &objectives, nodes, &cfg);
+    let mut points = points_from(&out);
+    // Report mean per-node loss rather than the sum.
+    for pt in points.iter_mut() {
+        pt.loss /= n as f64;
+    }
+
+    // Optional uncompressed-DGD baseline.
+    let (baseline, baseline_bytes) = if p.baseline_dgd {
+        let nodes: Vec<Box<dyn NodeLogic>> = (0..n)
+            .map(|i| {
+                Box::new(
+                    DgdNode::new(i, w.row(i).to_vec(), objectives[i].clone(), cfg.step_size)
+                        .with_init(x0.clone()),
+                ) as Box<dyn NodeLogic>
+            })
+            .collect();
+        let bout = run_nodes(&g, &objectives, nodes, &cfg);
+        let mut bpts = points_from(&bout);
+        for pt in bpts.iter_mut() {
+            pt.loss /= n as f64;
+        }
+        (bpts, bout.total_bytes)
+    } else {
+        (Vec::new(), 0)
+    };
+
+    Ok(TrainReport {
+        model: p.model.clone(),
+        dim: objectives[0].dim(),
+        points,
+        baseline,
+        total_bytes: out.total_bytes,
+        baseline_bytes,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        entropy_floor,
+    })
+}

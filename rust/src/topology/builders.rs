@@ -1,0 +1,219 @@
+//! Standard topology constructors.
+
+use super::Graph;
+use crate::rng::Xoshiro256pp;
+
+/// Two nodes joined by one link — the Fig. 1 motivating example.
+pub fn pair() -> Graph {
+    Graph::new(2, vec![(0, 1)])
+}
+
+/// Path graph `0 — 1 — … — n−1`.
+pub fn path(n: usize) -> Graph {
+    assert!(n >= 1);
+    Graph::new(n, (0..n.saturating_sub(1)).map(|i| (i, i + 1)).collect())
+}
+
+/// Ring / circle graph (paper Fig. 9: each node connects to its two
+/// neighbors). For `n = 2` this degenerates to a single link.
+pub fn ring(n: usize) -> Graph {
+    assert!(n >= 2, "ring needs at least 2 nodes");
+    if n == 2 {
+        return pair();
+    }
+    let mut edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+    edges.push((n - 1, 0));
+    Graph::new(n, edges)
+}
+
+/// Star graph: node 0 is the hub.
+pub fn star(n: usize) -> Graph {
+    assert!(n >= 2);
+    Graph::new(n, (1..n).map(|i| (0, i)).collect())
+}
+
+/// Complete graph `K_n`.
+pub fn complete(n: usize) -> Graph {
+    assert!(n >= 1);
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            edges.push((i, j));
+        }
+    }
+    Graph::new(n, edges)
+}
+
+/// `rows × cols` 2-D grid (4-neighborhood).
+pub fn grid2d(rows: usize, cols: usize) -> Graph {
+    assert!(rows >= 1 && cols >= 1);
+    let id = |r: usize, c: usize| r * cols + c;
+    let mut edges = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                edges.push((id(r, c), id(r, c + 1)));
+            }
+            if r + 1 < rows {
+                edges.push((id(r, c), id(r + 1, c)));
+            }
+        }
+    }
+    Graph::new(rows * cols, edges)
+}
+
+/// The paper's Fig. 3 four-node topology: node 0 is connected to 1, 2, 3
+/// (matching the consensus matrix of Fig. 4 whose off-diagonal sparsity is
+/// row 0 ↔ all others).
+pub fn paper_four_node() -> Graph {
+    Graph::new(4, vec![(0, 1), (0, 2), (0, 3)])
+}
+
+/// Erdős–Rényi `G(n, p)`, conditioned on connectivity: edges are resampled
+/// (with fresh randomness) until the graph is connected. Deterministic
+/// given `seed`.
+pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Graph {
+    assert!(n >= 2);
+    assert!((0.0..=1.0).contains(&p));
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    for _attempt in 0..10_000 {
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.next_f64() < p {
+                    edges.push((i, j));
+                }
+            }
+        }
+        let g = Graph::new(n, edges);
+        if g.is_connected() {
+            return g;
+        }
+    }
+    panic!("erdos_renyi({n}, {p}): failed to draw a connected graph in 10000 attempts");
+}
+
+/// Barabási–Albert preferential attachment with `m` links per new node.
+/// Produces the scale-free degree distributions the paper's §IV-A remark
+/// appeals to (most nodes low-degree ⇒ modest neighbor-memory cost).
+/// Deterministic given `seed`.
+pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> Graph {
+    assert!(m >= 1, "m must be >= 1");
+    assert!(n > m, "need n > m");
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    // Start from a complete core on m+1 nodes.
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for i in 0..=m {
+        for j in (i + 1)..=m {
+            edges.push((i, j));
+        }
+    }
+    // Repeated-endpoint list: node appears once per incident edge ⇒
+    // sampling uniformly from it is preferential attachment.
+    let mut endpoints: Vec<usize> = Vec::new();
+    for &(u, v) in &edges {
+        endpoints.push(u);
+        endpoints.push(v);
+    }
+    for new in (m + 1)..n {
+        let mut targets: Vec<usize> = Vec::new();
+        while targets.len() < m {
+            let t = endpoints[rng.next_bounded(endpoints.len() as u64) as usize];
+            if !targets.contains(&t) {
+                targets.push(t);
+            }
+        }
+        for &t in &targets {
+            edges.push((t, new));
+            endpoints.push(t);
+            endpoints.push(new);
+        }
+    }
+    Graph::new(n, edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_structure() {
+        let g = ring(5);
+        assert_eq!(g.num_edges(), 5);
+        for i in 0..5 {
+            assert_eq!(g.degree(i), 2);
+        }
+        assert!(g.is_connected());
+        let g2 = ring(2);
+        assert_eq!(g2.num_edges(), 1);
+    }
+
+    #[test]
+    fn star_structure() {
+        let g = star(6);
+        assert_eq!(g.degree(0), 5);
+        for i in 1..6 {
+            assert_eq!(g.degree(i), 1);
+        }
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn complete_structure() {
+        let g = complete(5);
+        assert_eq!(g.num_edges(), 10);
+        assert_eq!(g.diameter(), Some(1));
+    }
+
+    #[test]
+    fn grid_structure() {
+        let g = grid2d(3, 4);
+        assert_eq!(g.num_nodes(), 12);
+        // edges: 3*3 horizontal + 2*4 vertical = 9 + 8 = 17
+        assert_eq!(g.num_edges(), 17);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn paper_four_node_matches_consensus_sparsity() {
+        let g = paper_four_node();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.degree(0), 3);
+        for i in 1..4 {
+            assert_eq!(g.degree(i), 1);
+            assert!(g.has_edge(0, i));
+        }
+    }
+
+    #[test]
+    fn erdos_renyi_connected_and_deterministic() {
+        let a = erdos_renyi(12, 0.3, 7);
+        let b = erdos_renyi(12, 0.3, 7);
+        assert!(a.is_connected());
+        assert_eq!(a.edges(), b.edges());
+        let c = erdos_renyi(12, 0.3, 8);
+        // Overwhelmingly likely to differ.
+        assert_ne!(a.edges(), c.edges());
+    }
+
+    #[test]
+    fn barabasi_albert_structure() {
+        let g = barabasi_albert(30, 2, 5);
+        assert_eq!(g.num_nodes(), 30);
+        assert!(g.is_connected());
+        // Core K3 (3 edges) + 27 new nodes × 2 = 57 edges.
+        assert_eq!(g.num_edges(), 3 + 27 * 2);
+        // Determinism
+        let h = barabasi_albert(30, 2, 5);
+        assert_eq!(g.edges(), h.edges());
+    }
+
+    #[test]
+    fn path_structure() {
+        let g = path(4);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.diameter(), Some(3));
+        let single = path(1);
+        assert_eq!(single.num_edges(), 0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Undirected graph type used as the communication topology.
+
+use std::collections::VecDeque;
+
+/// An undirected graph on nodes `0..n`. Edges are stored both as a sorted
+/// edge list and as adjacency lists for O(1) neighbor iteration.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    n: usize,
+    edges: Vec<(usize, usize)>,
+    adj: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    /// Build a graph from an edge list. Self-loops and duplicate edges are
+    /// rejected; endpoints must be `< n`.
+    pub fn new(n: usize, mut edges: Vec<(usize, usize)>) -> Self {
+        assert!(n > 0, "graph must have at least one node");
+        for e in edges.iter_mut() {
+            assert!(e.0 < n && e.1 < n, "edge {e:?} out of range for n={n}");
+            assert_ne!(e.0, e.1, "self-loop {e:?} not allowed");
+            if e.0 > e.1 {
+                *e = (e.1, e.0);
+            }
+        }
+        edges.sort_unstable();
+        let before = edges.len();
+        edges.dedup();
+        assert_eq!(before, edges.len(), "duplicate edges not allowed");
+        let mut adj = vec![Vec::new(); n];
+        for &(u, v) in &edges {
+            adj[u].push(v);
+            adj[v].push(u);
+        }
+        for a in adj.iter_mut() {
+            a.sort_unstable();
+        }
+        Self { n, edges, adj }
+    }
+
+    /// Number of nodes `N`.
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Number of undirected links `E`.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Sorted edge list (u < v).
+    pub fn edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+
+    /// Neighbors of node `i` (sorted).
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    /// Degree of node `i`.
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        self.adj.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Are `u` and `v` adjacent?
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj[u].binary_search(&v).is_ok()
+    }
+
+    /// BFS connectivity check. Consensus requires a connected graph
+    /// (paper §III-A assumes an undirected *connected* G).
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut q = VecDeque::new();
+        q.push_back(0);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = q.pop_front() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Graph diameter via BFS from every node (∞/None if disconnected).
+    pub fn diameter(&self) -> Option<usize> {
+        let mut diam = 0;
+        for s in 0..self.n {
+            let mut dist = vec![usize::MAX; self.n];
+            let mut q = VecDeque::new();
+            dist[s] = 0;
+            q.push_back(s);
+            while let Some(u) = q.pop_front() {
+                for &v in &self.adj[u] {
+                    if dist[v] == usize::MAX {
+                        dist[v] = dist[u] + 1;
+                        q.push_back(v);
+                    }
+                }
+            }
+            let far = *dist.iter().max().unwrap();
+            if far == usize::MAX {
+                return None;
+            }
+            diam = diam.max(far);
+        }
+        Some(diam)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_construction() {
+        let g = Graph::new(3, vec![(0, 1), (2, 1)]);
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert!(g.has_edge(1, 2));
+        assert!(!g.has_edge(0, 2));
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn rejects_self_loop() {
+        let _ = Graph::new(2, vec![(1, 1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn rejects_duplicate_edges() {
+        let _ = Graph::new(2, vec![(0, 1), (1, 0)]);
+    }
+
+    #[test]
+    fn connectivity() {
+        let connected = Graph::new(3, vec![(0, 1), (1, 2)]);
+        assert!(connected.is_connected());
+        let disconnected = Graph::new(4, vec![(0, 1), (2, 3)]);
+        assert!(!disconnected.is_connected());
+        let single = Graph::new(1, vec![]);
+        assert!(single.is_connected());
+    }
+
+    #[test]
+    fn diameter_values() {
+        let path3 = Graph::new(3, vec![(0, 1), (1, 2)]);
+        assert_eq!(path3.diameter(), Some(2));
+        let disconnected = Graph::new(2, vec![]);
+        assert_eq!(disconnected.diameter(), None);
+        let k3 = Graph::new(3, vec![(0, 1), (1, 2), (0, 2)]);
+        assert_eq!(k3.diameter(), Some(1));
+    }
+}

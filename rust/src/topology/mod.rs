@@ -1,0 +1,18 @@
+//! Network topologies.
+//!
+//! The paper's experiments run on a 2-node pair (Fig. 1), the custom
+//! 4-node star-like graph of Fig. 3, and circle graphs of growing size
+//! (Fig. 9/10). This module provides those plus the standard families used
+//! for scaling and robustness studies (complete, path, star, 2-D grid,
+//! Erdős–Rényi, Barabási–Albert scale-free — the paper's §IV-A remark about
+//! scale-free node degrees motivates the last one).
+
+mod builders;
+mod graph;
+mod properties;
+
+pub use builders::{
+    barabasi_albert, complete, erdos_renyi, grid2d, pair, paper_four_node, path, ring, star,
+};
+pub use graph::Graph;
+pub use properties::{degree_stats, DegreeStats};

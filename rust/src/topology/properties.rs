@@ -1,0 +1,63 @@
+//! Degree statistics — used to size the per-node neighbor memory that
+//! ADC-DGD requires (paper §IV-A remark i).
+
+use super::Graph;
+
+/// Summary of a graph's degree distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegreeStats {
+    /// Minimum degree.
+    pub min: usize,
+    /// Maximum degree.
+    pub max: usize,
+    /// Mean degree.
+    pub mean: f64,
+    /// Total neighbor-memory slots = Σ_i deg(i) = 2E. Each slot stores one
+    /// P-dimensional mirror vector x̃ under ADC-DGD.
+    pub total_memory_slots: usize,
+}
+
+/// Compute degree statistics.
+pub fn degree_stats(g: &Graph) -> DegreeStats {
+    let n = g.num_nodes();
+    let degs: Vec<usize> = (0..n).map(|i| g.degree(i)).collect();
+    let total: usize = degs.iter().sum();
+    DegreeStats {
+        min: degs.iter().copied().min().unwrap_or(0),
+        max: degs.iter().copied().max().unwrap_or(0),
+        mean: total as f64 / n as f64,
+        total_memory_slots: total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::builders;
+    use super::*;
+
+    #[test]
+    fn ring_stats() {
+        let s = degree_stats(&builders::ring(10));
+        assert_eq!(s.min, 2);
+        assert_eq!(s.max, 2);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.total_memory_slots, 20);
+    }
+
+    #[test]
+    fn star_stats() {
+        let s = degree_stats(&builders::star(5));
+        assert_eq!(s.min, 1);
+        assert_eq!(s.max, 4);
+        assert_eq!(s.total_memory_slots, 8); // 2E = 2*4
+    }
+
+    #[test]
+    fn scale_free_memory_is_modest() {
+        // The §IV-A remark: in scale-free graphs most nodes are low-degree,
+        // so total mirror memory stays near 2·m·n.
+        let g = builders::barabasi_albert(100, 2, 1);
+        let s = degree_stats(&g);
+        assert!(s.mean < 5.0, "mean={}", s.mean);
+    }
+}

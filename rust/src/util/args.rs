@@ -1,0 +1,112 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `binary <subcommand> [--flag] [--key value]...`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (the subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` pairs.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+    /// Remaining positionals after the subcommand.
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option with default; errors on unparseable values.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| format!("invalid value for --{key}: {v}")),
+        }
+    }
+
+    /// Is a bare flag present?
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        // Note: `--verbose extra` would bind as an option (greedy value
+        // consumption); a flag is only recognized before another `--`
+        // token or at the end.
+        let a = parse("run extra --exp fig5 --iters 1000 --verbose");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get_str("exp", ""), "fig5");
+        assert_eq!(a.get::<usize>("iters", 0).unwrap(), 1000);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("bench --gamma=0.8");
+        assert_eq!(a.get::<f64>("gamma", 0.0).unwrap(), 0.8);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("run");
+        assert_eq!(a.get::<usize>("iters", 42).unwrap(), 42);
+        let b = parse("run --iters abc");
+        assert!(b.get::<usize>("iters", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --quiet");
+        assert!(a.has_flag("quiet"));
+        assert!(a.options.is_empty());
+    }
+}

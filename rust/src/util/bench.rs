@@ -1,0 +1,104 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timed runs with mean / p50 / p95 summary —
+//! enough to drive the `cargo bench` targets and the §Perf iteration log.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Label.
+    pub name: String,
+    /// Samples (seconds per iteration).
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    /// Mean seconds.
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Percentile (0–100) seconds.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx]
+    }
+
+    /// Human summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} mean {:>12} p50 {:>12} p95 {:>12} ({} samples)",
+            self.name,
+            fmt_dur(self.mean()),
+            fmt_dur(self.percentile(50.0)),
+            fmt_dur(self.percentile(95.0)),
+            self.samples.len()
+        )
+    }
+}
+
+fn fmt_dur(sec: f64) -> String {
+    if sec >= 1.0 {
+        format!("{sec:.3} s")
+    } else if sec >= 1e-3 {
+        format!("{:.3} ms", sec * 1e3)
+    } else if sec >= 1e-6 {
+        format!("{:.3} µs", sec * 1e6)
+    } else {
+        format!("{:.1} ns", sec * 1e9)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs, then measured runs until
+/// either `samples` samples are collected or `max_time` elapses (at least
+/// 3 samples regardless).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, max_time: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    let start = Instant::now();
+    while out.len() < samples && (out.len() < 3 || start.elapsed() < max_time) {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), samples: out }
+}
+
+/// Convenience: bench with defaults (2 warmup, 10 samples, 10 s budget)
+/// and print the summary line.
+pub fn bench_print<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let r = bench(name, 2, 10, Duration::from_secs(10), f);
+    println!("{}", r.summary());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_stats() {
+        let r = bench("noop", 1, 5, Duration::from_secs(1), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.mean() >= 0.0);
+        assert!(r.percentile(95.0) >= r.percentile(50.0) - 1e-9);
+        assert!(r.summary().contains("noop"));
+    }
+
+    #[test]
+    fn respects_time_budget() {
+        let r = bench("sleepy", 0, 1000, Duration::from_millis(50), || {
+            std::thread::sleep(Duration::from_millis(10));
+        });
+        assert!(r.samples.len() < 1000);
+        assert!(r.samples.len() >= 3);
+    }
+}

@@ -1,0 +1,193 @@
+//! Minimal TOML-subset config parser (no serde/toml crates offline).
+//!
+//! Supported grammar — enough for experiment configs:
+//!
+//! ```toml
+//! # comment
+//! key = "string"
+//! other = 1.5
+//! flag = true
+//! [section]
+//! nested = 3
+//! ```
+//!
+//! Values: strings (double-quoted), numbers (f64), booleans. Keys are
+//! flattened as `section.key`.
+
+use std::collections::BTreeMap;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Number (always f64).
+    Num(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+/// Flat key → value map with typed accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let full_key =
+                if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let val = parse_value(val.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            map.insert(full_key, val);
+        }
+        Ok(Self { map })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Raw value.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    /// String accessor with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        match self.map.get(key) {
+            Some(Value::Str(s)) => s.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    /// f64 accessor with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        match self.map.get(key) {
+            Some(Value::Num(n)) => *n,
+            _ => default,
+        }
+    }
+
+    /// usize accessor with default (floors the stored number).
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        match self.map.get(key) {
+            Some(Value::Num(n)) if *n >= 0.0 => *n as usize,
+            _ => default,
+        }
+    }
+
+    /// bool accessor with default.
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.map.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    /// All keys (for validation / error messages).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>().map(Value::Num).map_err(|_| format!("cannot parse value: {s}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_and_sections() {
+        let c = Config::parse(
+            r#"
+# experiment config
+algo = "adc"      # trailing comment
+alpha = 0.02
+iters = 1000
+verbose = true
+
+[link]
+drop_prob = 0.05
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.get_str("algo", ""), "adc");
+        assert_eq!(c.get_f64("alpha", 0.0), 0.02);
+        assert_eq!(c.get_usize("iters", 0), 1000);
+        assert!(c.get_bool("verbose", false));
+        assert_eq!(c.get_f64("link.drop_prob", 0.0), 0.05);
+        assert_eq!(c.keys().count(), 5);
+    }
+
+    #[test]
+    fn defaults_on_missing_or_wrong_type() {
+        let c = Config::parse("x = \"str\"").unwrap();
+        assert_eq!(c.get_f64("x", 7.0), 7.0);
+        assert_eq!(c.get_f64("missing", 7.0), 7.0);
+        assert_eq!(c.get_str("x", ""), "str");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = \"unterminated").is_err());
+        assert!(Config::parse("[]").is_err());
+        assert!(Config::parse("x = notanumber").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let c = Config::parse("x = \"a#b\"").unwrap();
+        assert_eq!(c.get_str("x", ""), "a#b");
+    }
+}

@@ -1,0 +1,7 @@
+//! Small self-contained utilities (the offline environment has no serde /
+//! clap / criterion, so the pieces we need are implemented here).
+
+pub mod args;
+pub mod bench;
+pub mod config;
+pub mod json;

@@ -1,0 +1,148 @@
+//! CLI smoke tests: drive the `adcdgd` binary end-to-end as a user
+//! would (subprocess), checking exit codes and output shape.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> PathBuf {
+    // target/<profile>/adcdgd next to the test executable.
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("adcdgd");
+    p
+}
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(bin()).args(args).output().expect("spawn adcdgd");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (_, err, ok) = run(&[]);
+    assert!(!ok);
+    assert!(err.contains("usage"), "{err}");
+}
+
+#[test]
+fn info_lists_topologies() {
+    let (out, _, ok) = run(&["info"]);
+    assert!(ok);
+    assert!(out.contains("paper4") && out.contains("beta"), "{out}");
+}
+
+#[test]
+fn run_fig1_prints_series() {
+    let (out, _, ok) = run(&["run", "--exp", "fig1", "--iters", "200"]);
+    assert!(ok, "{out}");
+    assert!(out.contains("fig1") && out.contains("dgd_naive_compressed"), "{out}");
+}
+
+#[test]
+fn run_unknown_experiment_fails() {
+    let (_, err, ok) = run(&["run", "--exp", "nope"]);
+    assert!(!ok);
+    assert!(err.contains("unknown experiment"), "{err}");
+}
+
+#[test]
+fn solve_on_ring_reports_metrics() {
+    let (out, _, ok) = run(&[
+        "solve", "--algo", "adc", "--topology", "ring", "--n", "6", "--iters", "200",
+        "--record-every", "100",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("algo=adc") && out.contains("beta="), "{out}");
+    assert!(out.contains("round"), "{out}");
+}
+
+#[test]
+fn solve_threaded_engine_works() {
+    let (out, _, ok) = run(&[
+        "solve", "--algo", "dgd", "--topology", "star", "--n", "5", "--iters", "100",
+        "--engine", "threaded", "--record-every", "50",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("algo=dgd"), "{out}");
+}
+
+#[test]
+fn run_writes_csv_when_out_given() {
+    let dir = std::env::temp_dir().join(format!("adcdgd_cli_{}", std::process::id()));
+    let (out, _, ok) = run(&[
+        "run",
+        "--exp",
+        "fig1",
+        "--iters",
+        "100",
+        "--out",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "{out}");
+    assert!(dir.join("fig1_dgd_exact_objective.csv").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn solve_reads_config_file() {
+    let dir = std::env::temp_dir().join(format!("adcdgd_cfg_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("exp.toml");
+    std::fs::write(
+        &cfg_path,
+        "# experiment config\nalgo = \"dgd\"\ntopology = \"star\"\nn = 5\niters = 120\nalpha = 0.02\nrecord-every = 60\n",
+    )
+    .unwrap();
+    // CLI overrides file: request ring even though the file says star.
+    let (out, err, ok) = run(&[
+        "solve", "--config", cfg_path.to_str().unwrap(), "--topology", "ring",
+    ]);
+    assert!(ok, "stdout: {out}\nstderr: {err}");
+    assert!(out.contains("algo=dgd"), "{out}");
+    assert!(out.contains("topology=ring"), "{out}");
+    assert!(out.contains("n=5"), "{out}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn solve_bad_config_fails_cleanly() {
+    let dir = std::env::temp_dir().join(format!("adcdgd_badcfg_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("bad.toml");
+    std::fs::write(&cfg_path, "oops this is not toml").unwrap();
+    let (_, err, ok) = run(&["solve", "--config", cfg_path.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(err.contains("config error"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn train_logistic_end_to_end() {
+    // Requires artifacts; self-skip otherwise (mirrors xla_integration).
+    let dir = adcdgd::runtime::artifacts_dir(None);
+    if !adcdgd::runtime::artifacts_available(&dir) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (out, err, ok) = run(&[
+        "train", "--model", "logistic", "--steps", "60", "--alpha", "0.5",
+        "--record-every", "30",
+    ]);
+    assert!(ok, "stdout: {out}\nstderr: {err}");
+    assert!(out.contains("decentralized training (logistic"), "{out}");
+    assert!(out.contains("loss:"), "{out}");
+}
+
+#[test]
+fn train_without_artifacts_gives_clear_error() {
+    // Point artifacts at a bogus dir: the error message must tell the
+    // user to run `make artifacts`.
+    let (_, err, ok) = run(&["train", "--artifacts", "/nonexistent/adcdgd"]);
+    assert!(!ok);
+    assert!(err.contains("make artifacts"), "{err}");
+}

@@ -1,0 +1,116 @@
+//! The threaded engine must be bit-identical to the sequential engine:
+//! per-node RNG streams are thread-owned and loss injection is a
+//! stateless hash, so scheduling cannot leak into results.
+
+use adcdgd::algorithms::{
+    run_adc_dgd, run_dgd_t, run_qdgd, AdcDgdOptions, ObjectiveRef, QdgdOptions, StepSize,
+};
+use adcdgd::compress::RandomizedRounding;
+use adcdgd::consensus::metropolis;
+use adcdgd::coordinator::{EngineKind, RunConfig};
+use adcdgd::experiments::random_circle_objectives;
+use adcdgd::network::LinkModel;
+use adcdgd::rng::Xoshiro256pp;
+use adcdgd::topology;
+use std::sync::Arc;
+
+fn setup(n: usize) -> (adcdgd::topology::Graph, adcdgd::consensus::ConsensusMatrix, Vec<ObjectiveRef>) {
+    let g = topology::ring(n);
+    let w = metropolis(&g);
+    let mut rng = Xoshiro256pp::seed_from_u64(77);
+    let objs = random_circle_objectives(n, &mut rng);
+    (g, w, objs)
+}
+
+fn cfg(engine: EngineKind, drop_prob: f64) -> RunConfig {
+    RunConfig {
+        iterations: 300,
+        step_size: StepSize::Constant(0.01),
+        record_every: 50,
+        seed: 5,
+        engine,
+        link: LinkModel { drop_prob, ..LinkModel::default() },
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn adc_dgd_engines_bit_identical() {
+    let (g, w, objs) = setup(6);
+    let run = |engine| {
+        run_adc_dgd(
+            &g,
+            &w,
+            &objs,
+            Arc::new(RandomizedRounding::new()),
+            &AdcDgdOptions { gamma: 1.0 },
+            &cfg(engine, 0.0),
+        )
+    };
+    let a = run(EngineKind::Sequential);
+    let b = run(EngineKind::Threaded);
+    assert_eq!(a.final_states, b.final_states);
+    assert_eq!(a.total_bytes, b.total_bytes);
+    assert_eq!(a.metrics.grad_norm, b.metrics.grad_norm);
+    assert_eq!(a.metrics.objective, b.metrics.objective);
+}
+
+#[test]
+fn engines_agree_under_message_loss() {
+    let (g, w, objs) = setup(5);
+    let run = |engine| {
+        run_adc_dgd(
+            &g,
+            &w,
+            &objs,
+            Arc::new(RandomizedRounding::new()),
+            &AdcDgdOptions { gamma: 1.0 },
+            &cfg(engine, 0.10),
+        )
+    };
+    let a = run(EngineKind::Sequential);
+    let b = run(EngineKind::Threaded);
+    assert!(a.dropped_messages > 0);
+    assert_eq!(a.dropped_messages, b.dropped_messages);
+    assert_eq!(a.final_states, b.final_states);
+}
+
+#[test]
+fn dgd_t_and_qdgd_engines_agree() {
+    let (g, w, objs) = setup(4);
+    let a = run_dgd_t(&g, &w, &objs, 3, &cfg(EngineKind::Sequential, 0.0));
+    let b = run_dgd_t(&g, &w, &objs, 3, &cfg(EngineKind::Threaded, 0.0));
+    assert_eq!(a.final_states, b.final_states);
+    let qa = run_qdgd(
+        &g,
+        &w,
+        &objs,
+        Arc::new(RandomizedRounding::new()),
+        &QdgdOptions::default(),
+        &cfg(EngineKind::Sequential, 0.0),
+    );
+    let qb = run_qdgd(
+        &g,
+        &w,
+        &objs,
+        Arc::new(RandomizedRounding::new()),
+        &QdgdOptions::default(),
+        &cfg(EngineKind::Threaded, 0.0),
+    );
+    assert_eq!(qa.final_states, qb.final_states);
+}
+
+#[test]
+fn threaded_engine_scales_to_many_nodes() {
+    let (g, w, objs) = setup(24);
+    let out = run_adc_dgd(
+        &g,
+        &w,
+        &objs,
+        Arc::new(RandomizedRounding::new()),
+        &AdcDgdOptions { gamma: 1.0 },
+        &cfg(EngineKind::Threaded, 0.0),
+    );
+    assert_eq!(out.rounds_completed, 300);
+    assert!(out.metrics.grad_norm.last().unwrap().is_finite());
+}

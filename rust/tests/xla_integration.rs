@@ -1,0 +1,206 @@
+//! Cross-language integration: the AOT artifacts (JAX/Pallas → HLO →
+//! PJRT) must agree numerically with the pure-rust implementations.
+//! All tests self-skip when `make artifacts` has not been run.
+
+use adcdgd::algorithms::{run_adc_dgd, AdcDgdOptions, ObjectiveRef, StepSize};
+use adcdgd::compress::{Compressor, RandomizedRounding};
+use adcdgd::consensus::metropolis;
+use adcdgd::coordinator::RunConfig;
+use adcdgd::linalg::vecops;
+use adcdgd::objective::{LogisticRegression, Objective};
+use adcdgd::rng::{Normal, Xoshiro256pp};
+use adcdgd::runtime::{
+    artifacts_available, artifacts_dir, Manifest, Runtime, TokenGen, TransformerObjective,
+    XlaLogistic, XlaQuadratic, XlaQuantizer,
+};
+use adcdgd::topology;
+use std::sync::Arc;
+
+macro_rules! require_artifacts {
+    () => {{
+        let dir = artifacts_dir(None);
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        dir
+    }};
+}
+
+#[test]
+fn xla_quadratic_matches_native() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let model = Arc::new(rt.load(&dir, &manifest, "quad").unwrap());
+    let a = vec![4.0, 2.0, 1.0, 5.0];
+    let b = vec![2.0, -3.0, 0.5, 0.1];
+    let xla_obj = XlaQuadratic::new(model, a.clone(), b.clone()).unwrap();
+    // Native equivalent: diagonal quadratic with D = 2a (since our
+    // Quadratic is ½(x−b)ᵀA(x−b) and the paper form is a(x−b)²).
+    let native = adcdgd::objective::Quadratic::diagonal(
+        &a.iter().map(|&v| 2.0 * v).collect::<Vec<_>>(),
+        b,
+    );
+    let x = vec![1.0, 2.0, -0.5, 0.0];
+    assert!((xla_obj.value(&x) - native.value(&x)).abs() < 1e-4);
+    let gx = xla_obj.grad(&x);
+    let gn = native.grad(&x);
+    for (u, v) in gx.iter().zip(gn.iter()) {
+        assert!((u - v).abs() < 1e-4, "{gx:?} vs {gn:?}");
+    }
+}
+
+#[test]
+fn xla_logistic_matches_pure_rust() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let model = Arc::new(rt.load(&dir, &manifest, "logistic").unwrap());
+    let m = model.spec().meta["m"] as usize;
+    let d = model.spec().meta["d"] as usize;
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let std = Normal::new(0.0, 1.0);
+    let mut rows = Vec::with_capacity(m);
+    let mut flat = Vec::with_capacity(m * d);
+    let mut labels = Vec::with_capacity(m);
+    for _ in 0..m {
+        let x = std.sample_vec(&mut rng, d);
+        labels.push(if rng.next_f64() < 0.5 { 1.0 } else { -1.0 });
+        flat.extend_from_slice(&x);
+        rows.push(x);
+    }
+    let lam = 0.03;
+    let xla_obj = XlaLogistic::new(model, flat, labels.clone(), lam).unwrap();
+    let native = LogisticRegression::new(rows, labels, lam);
+    let w: Vec<f64> = std.sample_vec(&mut rng, d).iter().map(|v| v * 0.3).collect();
+    let lv = xla_obj.value(&w);
+    let nv = native.value(&w);
+    assert!((lv - nv).abs() < 1e-5, "loss {lv} vs {nv}");
+    let gx = xla_obj.grad(&w);
+    let gn = native.grad(&w);
+    let dist = vecops::dist2(&gx, &gn);
+    assert!(dist < 1e-5, "grad distance {dist}");
+}
+
+#[test]
+fn xla_quantizer_matches_native_randround() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let model = Arc::new(rt.load(&dir, &manifest, "quantize").unwrap());
+    let xq = XlaQuantizer::new(model);
+    let native = RandomizedRounding::new();
+    // Same rng seed ⇒ same uniform stream ⇒ identical quantization
+    // (both consume exactly one f32/f64 draw per element... the native
+    // operator draws f64; so compare statistically instead of exactly).
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let p = 3000;
+    let z: Vec<f64> = (0..p).map(|_| (rng.next_f64() - 0.5) * 20.0).collect();
+    let trials = 200;
+    let mut sum_xla = vec![0.0; p];
+    let mut sum_nat = vec![0.0; p];
+    let mut r1 = Xoshiro256pp::seed_from_u64(10);
+    let mut r2 = Xoshiro256pp::seed_from_u64(11);
+    for _ in 0..trials {
+        let cx = xq.compress(&z, &mut r1);
+        let cn = native.compress(&z, &mut r2);
+        vecops::axpy(1.0, &cx.decode(), &mut sum_xla);
+        vecops::axpy(1.0, &cn.decode(), &mut sum_nat);
+        assert_eq!(cx.wire_bytes(), cn.wire_bytes());
+    }
+    // Both unbiased ⇒ means close to z and to each other.
+    for i in (0..p).step_by(97) {
+        let mx = sum_xla[i] / trials as f64;
+        let mn = sum_nat[i] / trials as f64;
+        assert!((mx - z[i]).abs() < 0.15, "xla mean {mx} vs z {}", z[i]);
+        assert!((mn - z[i]).abs() < 0.15, "native mean {mn} vs z {}", z[i]);
+    }
+}
+
+#[test]
+fn adc_dgd_over_xla_objectives_converges() {
+    // Full-stack: 4-node ring, XLA logistic objectives, compressed
+    // consensus. Exercises rust → PJRT → HLO(JAX+Pallas) each round.
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let model = Arc::new(rt.load(&dir, &manifest, "logistic").unwrap());
+    let m = model.spec().meta["m"] as usize;
+    let d = model.spec().meta["d"] as usize;
+    let mut rng = Xoshiro256pp::seed_from_u64(12);
+    let std = Normal::new(0.0, 1.0);
+    let w_star = std.sample_vec(&mut rng, d);
+    let objs: Vec<ObjectiveRef> = (0..4)
+        .map(|_| {
+            let mut flat = Vec::with_capacity(m * d);
+            let mut labels = Vec::with_capacity(m);
+            for _ in 0..m {
+                let x = std.sample_vec(&mut rng, d);
+                labels.push(if vecops::dot(&x, &w_star) >= 0.0 { 1.0 } else { -1.0 });
+                flat.extend_from_slice(&x);
+            }
+            Arc::new(XlaLogistic::new(model.clone(), flat, labels, 0.01).unwrap())
+                as ObjectiveRef
+        })
+        .collect();
+    let g = topology::ring(4);
+    let w = metropolis(&g);
+    let cfg = RunConfig {
+        iterations: 150,
+        step_size: StepSize::Constant(0.5),
+        record_every: 25,
+        seed: 1,
+        ..RunConfig::default()
+    };
+    let out = run_adc_dgd(
+        &g,
+        &w,
+        &objs,
+        Arc::new(adcdgd::compress::LowPrecisionQuantizer::new(1.0 / 128.0)),
+        &AdcDgdOptions { gamma: 1.0 },
+        &cfg,
+    );
+    let first = out.metrics.grad_norm[0];
+    let last = *out.metrics.grad_norm.last().unwrap();
+    assert!(last < first * 0.3, "grad norm {first} -> {last}");
+}
+
+#[test]
+fn transformer_objective_grad_descends_loss() {
+    // One gradient step on the transformer artifact must reduce the
+    // eval loss (the cheapest end-to-end sanity of the fwd+bwd HLO).
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let model = Arc::new(rt.load(&dir, &manifest, "transformer").unwrap());
+    let spec = model.spec().clone();
+    let gen = TokenGen::new(
+        spec.meta["vocab"] as usize,
+        spec.meta["seq_len"] as usize,
+        spec.meta["batch"] as usize,
+        1,
+        0.0, // deterministic successor data: fastest learnable signal
+        4,
+    );
+    let obj = TransformerObjective::new(model, gen).unwrap();
+    let (file, _, total) = spec.params.clone().unwrap();
+    let x0: Vec<f64> = std::fs::read(dir.join(file))
+        .unwrap()
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64)
+        .collect();
+    assert_eq!(x0.len(), total);
+    let l0 = obj.value(&x0);
+    let mut x = x0.clone();
+    let mut g = vec![0.0; total];
+    for _ in 0..5 {
+        obj.grad_into(&x, &mut g);
+        vecops::axpy(-0.5, &g, &mut x);
+    }
+    let l1 = obj.value(&x);
+    assert!(
+        l1 < l0 - 0.05,
+        "5 SGD steps should reduce eval loss: {l0} -> {l1}"
+    );
+}
