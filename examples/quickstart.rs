@@ -1,22 +1,14 @@
 //! Quickstart: solve the paper's 4-node consensus problem with ADC-DGD
-//! and compare against uncompressed DGD.
+//! and compare against uncompressed DGD. Both runs are one
+//! [`ScenarioSpec`] declaration each — no hand wiring.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use adcdgd::experiments::paper_four_node_objectives;
 use adcdgd::prelude::*;
-use std::sync::Arc;
 
 fn main() {
-    // The paper's Fig. 3 network and Fig. 4 consensus matrix.
-    let (graph, w) = paper_four_node_w();
-    println!("network: N={} E={} beta={:.3}", graph.num_nodes(), graph.num_edges(), w.beta());
-
-    // Local objectives f1..f4 (f1 is non-convex).
-    let objectives = paper_four_node_objectives();
-
     let cfg = RunConfig {
         iterations: 800,
         step_size: StepSize::Constant(0.02),
@@ -26,16 +18,20 @@ fn main() {
     };
 
     // ADC-DGD: compressed amplified differentials (2 B/element int16).
-    let adc = run_adc_dgd(
-        &graph,
-        &w,
-        &objectives,
-        Arc::new(RandomizedRounding::new()),
-        &AdcDgdOptions { gamma: 1.0 },
-        &cfg,
+    let adc_spec = ScenarioSpec::paper4(AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }))
+        .with_compressor(CompressorSpec::RandomizedRounding)
+        .with_config(cfg);
+    let prepared = adc_spec.prepare();
+    // The paper's Fig. 3 network and Fig. 4 consensus matrix.
+    println!(
+        "network: N={} E={} beta={:.3}",
+        prepared.graph().num_nodes(),
+        prepared.graph().num_edges(),
+        prepared.weights().beta()
     );
+    let adc = prepared.run();
     // Uncompressed DGD (8 B/element f64).
-    let dgd = run_dgd(&graph, &w, &objectives, &cfg);
+    let dgd = run_scenario(&ScenarioSpec::paper4(AlgorithmKind::Dgd).with_config(cfg));
 
     println!("\n{:>8} {:>14} {:>14}", "round", "ADC-DGD f(x̄)", "DGD f(x̄)");
     for i in 0..adc.metrics.len() {
@@ -56,5 +52,8 @@ fn main() {
         dgd.total_bytes as f64 / adc.total_bytes as f64
     );
     // The paper's global optimum is x* = 0.06 (Σ aᵢbᵢ / Σ aᵢ).
-    println!("final states (→ 0.06): {:?}", adc.final_states.iter().map(|s| s[0]).collect::<Vec<_>>());
+    println!(
+        "final states (→ 0.06): {:?}",
+        adc.final_states.iter().map(|s| s[0]).collect::<Vec<_>>()
+    );
 }

@@ -16,7 +16,6 @@ use adcdgd::network::LinkModel;
 use adcdgd::objective::{detect_change_point, CusumObjective};
 use adcdgd::prelude::*;
 use adcdgd::rng::Normal;
-use adcdgd::{consensus, topology};
 use std::sync::Arc;
 
 fn main() {
@@ -40,9 +39,6 @@ fn main() {
         })
         .collect();
 
-    let graph = topology::ring(n_sensors);
-    let w = consensus::metropolis(&graph);
-
     for drop_prob in [0.0, 0.10] {
         let cfg = RunConfig {
             iterations: 300,
@@ -52,14 +48,14 @@ fn main() {
             link: LinkModel { drop_prob, ..LinkModel::default() },
             ..RunConfig::default()
         };
-        let out = run_adc_dgd(
-            &graph,
-            &w,
-            &objectives,
-            Arc::new(LowPrecisionQuantizer::new(1.0 / 256.0)),
-            &AdcDgdOptions { gamma: 1.0 },
-            &cfg,
-        );
+        let spec = ScenarioSpec::new(
+            AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+            TopologySpec::Ring(n_sensors),
+            ObjectiveSpec::Custom(objectives.clone()),
+        )
+        .with_compressor(CompressorSpec::LowPrecision { delta: 1.0 / 256.0 })
+        .with_config(cfg);
+        let out = run_scenario(&spec);
         // Consensus estimate = node 0's final state.
         let estimate = &out.final_states[0];
         let cp = detect_change_point(estimate);

@@ -1,20 +1,25 @@
 //! Hot-path micro-benchmarks (§Perf): per-round cost of each algorithm
-//! at increasing dimension P, compression/codec throughput, and the
-//! XLA-backed paths when artifacts are present.
+//! at increasing dimension P, compression/codec throughput, the
+//! per-thread vs worker-pool engine comparison (emits
+//! `BENCH_pool_engine.json`), and the XLA-backed paths when artifacts
+//! are present.
+//!
+//! Set `ADCDGD_BENCH_ONLY=pool` to run only the engine comparison (CI
+//! uses this to publish the JSON artifact quickly).
 
-use adcdgd::algorithms::{
-    run_adc_dgd, run_dgd, AdcDgdOptions, CompressorRef, ObjectiveRef, StepSize,
-};
+use adcdgd::algorithms::{AdcDgdOptions, AlgorithmKind, ObjectiveRef, StepSize};
 use adcdgd::compress::{
     Compressor, LowPrecisionQuantizer, Qsgd, RandomizedRounding, TernGrad,
 };
-use adcdgd::consensus::metropolis;
-use adcdgd::coordinator::RunConfig;
+use adcdgd::coordinator::{
+    run_scenario, CompressorSpec, EngineKind, ObjectiveSpec, RunConfig, ScenarioSpec,
+    TopologySpec,
+};
 use adcdgd::objective::DiagonalQuadratic;
 use adcdgd::rng::Xoshiro256pp;
-use adcdgd::topology;
-use adcdgd::util::bench::bench_print;
+use adcdgd::util::bench::{bench, bench_print};
 use std::sync::Arc;
+use std::time::Duration;
 
 fn quad_objectives(n: usize, p: usize, seed: u64) -> Vec<ObjectiveRef> {
     let mut rng = Xoshiro256pp::seed_from_u64(seed);
@@ -28,28 +33,31 @@ fn quad_objectives(n: usize, p: usize, seed: u64) -> Vec<ObjectiveRef> {
 }
 
 fn round_throughput(p: usize, rounds: usize) {
-    let g = topology::ring(8);
-    let w = metropolis(&g);
-    let objs = quad_objectives(8, p, 1);
     let cfg = RunConfig {
         iterations: rounds,
         step_size: StepSize::Constant(0.05),
         record_every: rounds, // metrics off the hot path
         ..RunConfig::default()
     };
+    let ring8 = |algorithm, compressor| {
+        ScenarioSpec::new(
+            algorithm,
+            TopologySpec::Ring(8),
+            ObjectiveSpec::Custom(quad_objectives(8, p, 1)),
+        )
+        .with_compressor(compressor)
+        .with_config(cfg)
+    };
+    let dgd = ring8(AlgorithmKind::Dgd, CompressorSpec::None);
     bench_print(&format!("dgd      ring8 P={p:<7} {rounds} rounds"), || {
-        std::hint::black_box(run_dgd(&g, &w, &objs, &cfg));
+        std::hint::black_box(run_scenario(&dgd));
     });
-    let comp: CompressorRef = Arc::new(LowPrecisionQuantizer::new(1.0 / 64.0));
+    let adc = ring8(
+        AlgorithmKind::AdcDgd(AdcDgdOptions::default()),
+        CompressorSpec::LowPrecision { delta: 1.0 / 64.0 },
+    );
     bench_print(&format!("adc-dgd  ring8 P={p:<7} {rounds} rounds"), || {
-        std::hint::black_box(run_adc_dgd(
-            &g,
-            &w,
-            &objs,
-            comp.clone(),
-            &AdcDgdOptions::default(),
-            &cfg,
-        ));
+        std::hint::black_box(run_scenario(&adc));
     });
 }
 
@@ -78,6 +86,73 @@ fn compressor_throughput(p: usize) {
         c.decode_into(std::hint::black_box(&mut out));
     });
     println!("     -> {:.1} M elts/s", p as f64 / res.mean() / 1e6);
+}
+
+/// Per-thread vs sharded-pool engine wall-time at n ∈ {16, 256, 2048}.
+/// Emits `BENCH_pool_engine.json` next to the working directory.
+fn pool_engine_comparison() {
+    println!("== engine comparison (per-thread vs pool) ==");
+    let rounds = 10;
+    let mut rows = Vec::new();
+    for n in [16usize, 256, 2048] {
+        // An ER graph with ~12 neighbors per node stays comfortably
+        // above the connectivity threshold at n = 2048 and keeps the
+        // spectral-gap estimation (dense power iteration) tractable.
+        let p_edge = (12.0 / n as f64).min(0.5);
+        let spec = ScenarioSpec::new(
+            AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+            TopologySpec::ErdosRenyi { n, p: p_edge, seed: 5 },
+            ObjectiveSpec::RandomCircle { seed: 7 },
+        )
+        .with_compressor(CompressorSpec::RandomizedRounding);
+        let prepared = spec.prepare();
+        let mk_cfg = |engine| RunConfig {
+            iterations: rounds,
+            step_size: StepSize::Constant(0.01),
+            record_every: rounds,
+            engine,
+            ..RunConfig::default()
+        };
+        let samples = if n >= 2048 { 5 } else { 10 };
+        let threaded = bench(
+            &format!("threaded n={n} {rounds} rounds"),
+            1,
+            samples,
+            Duration::from_secs(60),
+            || {
+                std::hint::black_box(prepared.run_with(&mk_cfg(EngineKind::Threaded)));
+            },
+        );
+        println!("{}", threaded.summary());
+        let pool = bench(
+            &format!("pool     n={n} {rounds} rounds"),
+            1,
+            samples,
+            Duration::from_secs(60),
+            || {
+                std::hint::black_box(prepared.run_with(&mk_cfg(EngineKind::pool())));
+            },
+        );
+        println!("{}", pool.summary());
+        let speedup = threaded.mean() / pool.mean();
+        println!("     -> pool speedup over per-thread at n={n}: {speedup:.2}x");
+        rows.push(format!(
+            "    {{\"n\": {n}, \"rounds\": {rounds}, \"threaded_mean_s\": {:.6}, \
+             \"pool_mean_s\": {:.6}, \"pool_speedup\": {:.3}}}",
+            threaded.mean(),
+            pool.mean(),
+            speedup
+        ));
+    }
+    let workers =
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(0);
+    let json = format!(
+        "{{\n  \"bench\": \"pool_engine\",\n  \"algorithm\": \"adc-dgd/randround\",\n  \
+         \"pool_workers\": {workers},\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_pool_engine.json", &json).expect("write BENCH_pool_engine.json");
+    println!("engine comparison written to BENCH_pool_engine.json");
 }
 
 fn xla_paths() {
@@ -125,12 +200,18 @@ fn xla_paths() {
 }
 
 fn main() {
+    let only = std::env::var("ADCDGD_BENCH_ONLY").unwrap_or_default();
+    if only == "pool" {
+        pool_engine_comparison();
+        return;
+    }
     println!("== L3 hot path ==");
     for p in [100usize, 10_000, 100_000] {
         round_throughput(p, 20);
     }
     println!("== compression codecs ==");
     compressor_throughput(100_000);
+    pool_engine_comparison();
     println!("== XLA-backed paths ==");
     xla_paths();
 }

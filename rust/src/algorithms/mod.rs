@@ -18,12 +18,17 @@
 //!   amplified-differential compression.
 //! * [`QdgdNode`] — QDGD-style baseline (Reisizadeh et al. 2018):
 //!   quantized neighbors with a damped mixing step.
+//!
+//! Node construction for the whole family is centralized in the
+//! [`AlgorithmKind`] registry; the `run_*` helpers are deprecated thin
+//! wrappers over [`crate::coordinator::run_scenario`].
 
 mod adc_dgd;
 mod dgd;
 mod dgd_t;
 mod naive_cdgd;
 mod qdgd;
+mod registry;
 mod runners;
 
 pub use adc_dgd::{AdcDgdNode, AdcDgdOptions};
@@ -31,9 +36,9 @@ pub use dgd::DgdNode;
 pub use dgd_t::DgdTNode;
 pub use naive_cdgd::NaiveCompressedNode;
 pub use qdgd::{QdgdNode, QdgdOptions};
-pub use runners::{
-    run_adc_dgd, run_dgd, run_dgd_t, run_naive_compressed, run_qdgd,
-};
+pub use registry::AlgorithmKind;
+#[allow(deprecated)]
+pub use runners::{run_adc_dgd, run_dgd, run_dgd_t, run_naive_compressed, run_qdgd};
 
 use crate::compress::Payload;
 use std::sync::Arc as StdArc;

@@ -46,6 +46,13 @@ impl NaiveCompressedNode {
             steps: 0,
         }
     }
+
+    /// Override the initial iterate (e.g. shared pretrained parameters).
+    pub fn with_init(mut self, x0: Vec<f64>) -> Self {
+        assert_eq!(x0.len(), self.x.len());
+        self.x = x0;
+        self
+    }
 }
 
 impl NodeLogic for NaiveCompressedNode {

@@ -75,6 +75,13 @@ impl QdgdNode {
         }
     }
 
+    /// Override the initial iterate (e.g. shared pretrained parameters).
+    pub fn with_init(mut self, x0: Vec<f64>) -> Self {
+        assert_eq!(x0.len(), self.x.len());
+        self.x = x0;
+        self
+    }
+
     #[inline]
     fn eps(&self, k: usize) -> f64 {
         self.opts.eps0 / (k as f64).powf(self.opts.eps_exp)

@@ -1,0 +1,264 @@
+//! The algorithm registry: every algorithm in the family is a value of
+//! [`AlgorithmKind`], and node construction for all of them goes through
+//! one factory ([`AlgorithmKind::build_nodes`]).
+//!
+//! This is the single place in the codebase that knows how to wire a
+//! per-node state machine from (consensus row, neighbor list, objective,
+//! compressor, step schedule). Everything above it — the scenario runner,
+//! experiments, examples, the CLI — declares *which* algorithm to run as
+//! data and never touches node constructors.
+
+use super::{
+    AdcDgdNode, AdcDgdOptions, CompressorRef, DgdNode, DgdTNode, NaiveCompressedNode, NodeLogic,
+    ObjectiveRef, QdgdNode, QdgdOptions, StepSize,
+};
+use crate::consensus::ConsensusMatrix;
+use crate::topology::Graph;
+
+/// Which algorithm to run, with its hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub enum AlgorithmKind {
+    /// Algorithm 1: classic DGD, raw f64 exchange.
+    Dgd,
+    /// DGD^t: `t` consensus exchanges per gradient step. Note that
+    /// `RunConfig::iterations` counts engine *rounds*, so `t·K` rounds
+    /// perform `K` gradient iterations.
+    DgdT {
+        /// Consensus exchanges per gradient step (`t ≥ 1`).
+        t: usize,
+    },
+    /// Eq. (5): DGD with directly compressed iterates (diverges; Fig. 1).
+    NaiveCompressed,
+    /// Algorithm 2 — ADC-DGD, the paper's method.
+    AdcDgd(AdcDgdOptions),
+    /// QDGD-style baseline (Reisizadeh et al. 2018).
+    Qdgd(QdgdOptions),
+}
+
+impl AlgorithmKind {
+    /// Short name used in reports and the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgorithmKind::Dgd => "dgd",
+            AlgorithmKind::DgdT { .. } => "dgdt",
+            AlgorithmKind::NaiveCompressed => "naive",
+            AlgorithmKind::AdcDgd(_) => "adc",
+            AlgorithmKind::Qdgd(_) => "qdgd",
+        }
+    }
+
+    /// Does this algorithm transmit compressed payloads (and therefore
+    /// require a compression operator)?
+    pub fn needs_compressor(&self) -> bool {
+        matches!(
+            self,
+            AlgorithmKind::NaiveCompressed | AlgorithmKind::AdcDgd(_) | AlgorithmKind::Qdgd(_)
+        )
+    }
+
+    /// Engine rounds consumed per gradient iteration (1 for everything
+    /// except DGD^t).
+    pub fn rounds_per_grad_step(&self) -> usize {
+        match self {
+            AlgorithmKind::DgdT { t } => *t,
+            _ => 1,
+        }
+    }
+
+    /// Parse a CLI algorithm name (`adc|dgd|dgdt|naive|qdgd`), binding
+    /// the relevant hyper-parameters.
+    pub fn parse(name: &str, t: usize, gamma: f64) -> Result<Self, String> {
+        Ok(match name {
+            "adc" => AlgorithmKind::AdcDgd(AdcDgdOptions { gamma }),
+            "dgd" => AlgorithmKind::Dgd,
+            "dgdt" => AlgorithmKind::DgdT { t },
+            "naive" => AlgorithmKind::NaiveCompressed,
+            "qdgd" => AlgorithmKind::Qdgd(QdgdOptions::default()),
+            other => return Err(format!("unknown algorithm {other}")),
+        })
+    }
+
+    /// Build the per-node logic for node `i`. The compressor is required
+    /// when [`Self::needs_compressor`] holds; `init` optionally overrides
+    /// the zero initial iterate.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_node(
+        &self,
+        i: usize,
+        graph: &Graph,
+        w: &ConsensusMatrix,
+        objectives: &[ObjectiveRef],
+        compressor: Option<&CompressorRef>,
+        step: StepSize,
+        init: Option<&[f64]>,
+    ) -> Box<dyn NodeLogic> {
+        let comp = || {
+            compressor
+                .unwrap_or_else(|| {
+                    panic!("algorithm `{}` requires a compressor", self.name())
+                })
+                .clone()
+        };
+        let row = w.row(i).to_vec();
+        let obj = objectives[i].clone();
+        let node: Box<dyn NodeLogic> = match self {
+            AlgorithmKind::Dgd => {
+                let n = DgdNode::new(i, row, obj, step);
+                match init {
+                    Some(x0) => Box::new(n.with_init(x0.to_vec())),
+                    None => Box::new(n),
+                }
+            }
+            AlgorithmKind::DgdT { t } => {
+                let n = DgdTNode::new(i, row, obj, step, *t);
+                match init {
+                    Some(x0) => Box::new(n.with_init(x0.to_vec())),
+                    None => Box::new(n),
+                }
+            }
+            AlgorithmKind::NaiveCompressed => {
+                let n = NaiveCompressedNode::new(i, row, obj, comp(), step);
+                match init {
+                    Some(x0) => Box::new(n.with_init(x0.to_vec())),
+                    None => Box::new(n),
+                }
+            }
+            AlgorithmKind::AdcDgd(opts) => {
+                let n = AdcDgdNode::new(
+                    i,
+                    row,
+                    graph.neighbors(i).to_vec(),
+                    obj,
+                    comp(),
+                    step,
+                    *opts,
+                );
+                match init {
+                    Some(x0) => Box::new(n.with_init(x0.to_vec())),
+                    None => Box::new(n),
+                }
+            }
+            AlgorithmKind::Qdgd(opts) => {
+                let n = QdgdNode::new(i, row, obj, comp(), step, *opts);
+                match init {
+                    Some(x0) => Box::new(n.with_init(x0.to_vec())),
+                    None => Box::new(n),
+                }
+            }
+        };
+        node
+    }
+
+    /// Build all nodes for a run, validating the (graph, W, objectives)
+    /// triple first.
+    pub fn build_nodes(
+        &self,
+        graph: &Graph,
+        w: &ConsensusMatrix,
+        objectives: &[ObjectiveRef],
+        compressor: Option<&CompressorRef>,
+        step: StepSize,
+        init: Option<&[f64]>,
+    ) -> Vec<Box<dyn NodeLogic>> {
+        assert_eq!(graph.num_nodes(), w.n(), "graph/W size mismatch");
+        assert_eq!(graph.num_nodes(), objectives.len(), "graph/objectives mismatch");
+        let p = objectives[0].dim();
+        assert!(objectives.iter().all(|o| o.dim() == p), "objective dims differ");
+        if let Some(x0) = init {
+            assert_eq!(x0.len(), p, "init dim mismatch");
+        }
+        (0..graph.num_nodes())
+            .map(|i| self.build_node(i, graph, w, objectives, compressor, step, init))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::RandomizedRounding;
+    use crate::objective::ScalarQuadratic;
+    use std::sync::Arc;
+
+    fn setup() -> (Graph, ConsensusMatrix, Vec<ObjectiveRef>) {
+        let g = crate::topology::ring(4);
+        let w = crate::consensus::metropolis(&g);
+        let objs: Vec<ObjectiveRef> = (0..4)
+            .map(|i| Arc::new(ScalarQuadratic::new(1.0 + i as f64, 0.1)) as ObjectiveRef)
+            .collect();
+        (g, w, objs)
+    }
+
+    #[test]
+    fn registry_builds_every_kind() {
+        let (g, w, objs) = setup();
+        let comp: CompressorRef = Arc::new(RandomizedRounding::new());
+        let kinds = [
+            AlgorithmKind::Dgd,
+            AlgorithmKind::DgdT { t: 3 },
+            AlgorithmKind::NaiveCompressed,
+            AlgorithmKind::AdcDgd(AdcDgdOptions::default()),
+            AlgorithmKind::Qdgd(QdgdOptions::default()),
+        ];
+        for kind in kinds {
+            let nodes = kind.build_nodes(
+                &g,
+                &w,
+                &objs,
+                Some(&comp),
+                StepSize::Constant(0.01),
+                None,
+            );
+            assert_eq!(nodes.len(), 4, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn init_override_applies_to_all_kinds() {
+        let (g, w, objs) = setup();
+        let comp: CompressorRef = Arc::new(RandomizedRounding::new());
+        let x0 = vec![0.75];
+        for kind in [
+            AlgorithmKind::Dgd,
+            AlgorithmKind::DgdT { t: 2 },
+            AlgorithmKind::NaiveCompressed,
+            AlgorithmKind::AdcDgd(AdcDgdOptions::default()),
+            AlgorithmKind::Qdgd(QdgdOptions::default()),
+        ] {
+            let nodes = kind.build_nodes(
+                &g,
+                &w,
+                &objs,
+                Some(&comp),
+                StepSize::Constant(0.01),
+                Some(&x0),
+            );
+            for n in &nodes {
+                assert_eq!(n.state(), &x0[..], "{}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "requires a compressor")]
+    fn missing_compressor_panics_clearly() {
+        let (g, w, objs) = setup();
+        let _ = AlgorithmKind::AdcDgd(AdcDgdOptions::default()).build_nodes(
+            &g,
+            &w,
+            &objs,
+            None,
+            StepSize::Constant(0.01),
+            None,
+        );
+    }
+
+    #[test]
+    fn metadata_helpers() {
+        assert!(AlgorithmKind::AdcDgd(AdcDgdOptions::default()).needs_compressor());
+        assert!(!AlgorithmKind::Dgd.needs_compressor());
+        assert_eq!(AlgorithmKind::DgdT { t: 5 }.rounds_per_grad_step(), 5);
+        assert_eq!(AlgorithmKind::parse("adc", 3, 1.0).unwrap().name(), "adc");
+        assert!(AlgorithmKind::parse("nope", 1, 1.0).is_err());
+    }
+}

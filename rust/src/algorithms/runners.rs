@@ -1,41 +1,60 @@
-//! One-call runners: build per-node logic for each algorithm over a
-//! validated consensus matrix and execute it under a [`RunConfig`].
+//! Legacy one-call runners, kept as thin deprecated wrappers over the
+//! declarative pathway so external callers and benches keep working.
+//!
+//! Each function builds a [`ScenarioSpec`] with `Custom` topology /
+//! weights / objectives and delegates to
+//! [`crate::coordinator::run_scenario`] — there is no separate execution
+//! path. New code should construct the spec directly.
 
-use super::{
-    AdcDgdNode, AdcDgdOptions, CompressorRef, DgdNode, DgdTNode, NaiveCompressedNode, NodeLogic,
-    ObjectiveRef, QdgdNode, QdgdOptions,
-};
+use super::{AdcDgdOptions, AlgorithmKind, CompressorRef, ObjectiveRef, QdgdOptions};
 use crate::consensus::ConsensusMatrix;
-use crate::coordinator::{run_nodes, RunConfig, RunOutput};
+use crate::coordinator::{
+    run_scenario, CompressorSpec, ObjectiveSpec, RunConfig, RunOutput, ScenarioSpec, TopologySpec,
+    WeightSpec,
+};
 use crate::topology::Graph;
 
-fn check(graph: &Graph, w: &ConsensusMatrix, objectives: &[ObjectiveRef]) {
-    assert_eq!(graph.num_nodes(), w.n(), "graph/W size mismatch");
-    assert_eq!(graph.num_nodes(), objectives.len(), "graph/objectives mismatch");
-    let p = objectives[0].dim();
-    assert!(objectives.iter().all(|o| o.dim() == p), "objective dims differ");
+fn spec_for(
+    algorithm: AlgorithmKind,
+    graph: &Graph,
+    w: &ConsensusMatrix,
+    objectives: &[ObjectiveRef],
+    compressor: CompressorSpec,
+    cfg: &RunConfig,
+) -> ScenarioSpec {
+    ScenarioSpec {
+        algorithm,
+        topology: TopologySpec::Custom(graph.clone()),
+        weights: WeightSpec::Custom(w.clone()),
+        objective: ObjectiveSpec::Custom(objectives.to_vec()),
+        compressor,
+        config: *cfg,
+        init: None,
+    }
 }
 
 /// Run classic DGD (Algorithm 1).
+#[deprecated(since = "0.2.0", note = "build a ScenarioSpec and call coordinator::run_scenario")]
 pub fn run_dgd(
     graph: &Graph,
     w: &ConsensusMatrix,
     objectives: &[ObjectiveRef],
     cfg: &RunConfig,
 ) -> RunOutput {
-    check(graph, w, objectives);
-    let nodes: Vec<Box<dyn NodeLogic>> = (0..graph.num_nodes())
-        .map(|i| {
-            Box::new(DgdNode::new(i, w.row(i).to_vec(), objectives[i].clone(), cfg.step_size))
-                as Box<dyn NodeLogic>
-        })
-        .collect();
-    run_nodes(graph, objectives, nodes, cfg)
+    run_scenario(&spec_for(
+        AlgorithmKind::Dgd,
+        graph,
+        w,
+        objectives,
+        CompressorSpec::None,
+        cfg,
+    ))
 }
 
 /// Run DGD^t with `t` consensus exchanges per gradient step. Note
 /// `cfg.iterations` counts engine *rounds*; `t·K` rounds perform `K`
 /// gradient iterations.
+#[deprecated(since = "0.2.0", note = "build a ScenarioSpec and call coordinator::run_scenario")]
 pub fn run_dgd_t(
     graph: &Graph,
     w: &ConsensusMatrix,
@@ -43,17 +62,18 @@ pub fn run_dgd_t(
     t: usize,
     cfg: &RunConfig,
 ) -> RunOutput {
-    check(graph, w, objectives);
-    let nodes: Vec<Box<dyn NodeLogic>> = (0..graph.num_nodes())
-        .map(|i| {
-            Box::new(DgdTNode::new(i, w.row(i).to_vec(), objectives[i].clone(), cfg.step_size, t))
-                as Box<dyn NodeLogic>
-        })
-        .collect();
-    run_nodes(graph, objectives, nodes, cfg)
+    run_scenario(&spec_for(
+        AlgorithmKind::DgdT { t },
+        graph,
+        w,
+        objectives,
+        CompressorSpec::None,
+        cfg,
+    ))
 }
 
 /// Run DGD with directly compressed iterates (Eq. 5 — diverges; Fig. 1).
+#[deprecated(since = "0.2.0", note = "build a ScenarioSpec and call coordinator::run_scenario")]
 pub fn run_naive_compressed(
     graph: &Graph,
     w: &ConsensusMatrix,
@@ -61,22 +81,18 @@ pub fn run_naive_compressed(
     compressor: CompressorRef,
     cfg: &RunConfig,
 ) -> RunOutput {
-    check(graph, w, objectives);
-    let nodes: Vec<Box<dyn NodeLogic>> = (0..graph.num_nodes())
-        .map(|i| {
-            Box::new(NaiveCompressedNode::new(
-                i,
-                w.row(i).to_vec(),
-                objectives[i].clone(),
-                compressor.clone(),
-                cfg.step_size,
-            )) as Box<dyn NodeLogic>
-        })
-        .collect();
-    run_nodes(graph, objectives, nodes, cfg)
+    run_scenario(&spec_for(
+        AlgorithmKind::NaiveCompressed,
+        graph,
+        w,
+        objectives,
+        CompressorSpec::Custom(compressor),
+        cfg,
+    ))
 }
 
 /// Run **ADC-DGD** (Algorithm 2 — the paper's method).
+#[deprecated(since = "0.2.0", note = "build a ScenarioSpec and call coordinator::run_scenario")]
 pub fn run_adc_dgd(
     graph: &Graph,
     w: &ConsensusMatrix,
@@ -85,24 +101,18 @@ pub fn run_adc_dgd(
     opts: &AdcDgdOptions,
     cfg: &RunConfig,
 ) -> RunOutput {
-    check(graph, w, objectives);
-    let nodes: Vec<Box<dyn NodeLogic>> = (0..graph.num_nodes())
-        .map(|i| {
-            Box::new(AdcDgdNode::new(
-                i,
-                w.row(i).to_vec(),
-                graph.neighbors(i).to_vec(),
-                objectives[i].clone(),
-                compressor.clone(),
-                cfg.step_size,
-                *opts,
-            )) as Box<dyn NodeLogic>
-        })
-        .collect();
-    run_nodes(graph, objectives, nodes, cfg)
+    run_scenario(&spec_for(
+        AlgorithmKind::AdcDgd(*opts),
+        graph,
+        w,
+        objectives,
+        CompressorSpec::Custom(compressor),
+        cfg,
+    ))
 }
 
 /// Run the QDGD-style baseline (Reisizadeh et al. 2018).
+#[deprecated(since = "0.2.0", note = "build a ScenarioSpec and call coordinator::run_scenario")]
 pub fn run_qdgd(
     graph: &Graph,
     w: &ConsensusMatrix,
@@ -111,23 +121,18 @@ pub fn run_qdgd(
     opts: &QdgdOptions,
     cfg: &RunConfig,
 ) -> RunOutput {
-    check(graph, w, objectives);
-    let nodes: Vec<Box<dyn NodeLogic>> = (0..graph.num_nodes())
-        .map(|i| {
-            Box::new(QdgdNode::new(
-                i,
-                w.row(i).to_vec(),
-                objectives[i].clone(),
-                compressor.clone(),
-                cfg.step_size,
-                *opts,
-            )) as Box<dyn NodeLogic>
-        })
-        .collect();
-    run_nodes(graph, objectives, nodes, cfg)
+    run_scenario(&spec_for(
+        AlgorithmKind::Qdgd(*opts),
+        graph,
+        w,
+        objectives,
+        CompressorSpec::Custom(compressor),
+        cfg,
+    ))
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::algorithms::StepSize;
@@ -204,5 +209,27 @@ mod tests {
         );
         assert_eq!(out.rounds_completed, 500);
         assert!(out.metrics.grad_norm.last().unwrap().is_finite());
+    }
+
+    /// The wrappers must agree with the declarative pathway exactly.
+    #[test]
+    fn wrapper_equals_scenario() {
+        let (g, w, objs) = four_node();
+        let cfg = RunConfig {
+            iterations: 400,
+            step_size: StepSize::Constant(0.02),
+            record_every: 100,
+            ..RunConfig::default()
+        };
+        let comp: CompressorRef = Arc::new(RandomizedRounding::new());
+        let legacy = run_adc_dgd(&g, &w, &objs, comp, &AdcDgdOptions::default(), &cfg);
+        let spec = crate::coordinator::ScenarioSpec::paper4(AlgorithmKind::AdcDgd(
+            AdcDgdOptions::default(),
+        ))
+        .with_compressor(CompressorSpec::RandomizedRounding)
+        .with_config(cfg);
+        let modern = run_scenario(&spec);
+        assert_eq!(legacy.final_states, modern.final_states);
+        assert_eq!(legacy.total_bytes, modern.total_bytes);
     }
 }

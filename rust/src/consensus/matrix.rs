@@ -2,13 +2,11 @@
 
 use crate::linalg::{estimate_beta, Matrix};
 use crate::topology::Graph;
-use thiserror::Error;
 
 /// Why a candidate `W` was rejected.
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ValidationError {
     /// Not square or wrong dimension for the graph.
-    #[error("W must be {expected}x{expected}, got {rows}x{cols}")]
     Shape {
         /// Expected node count.
         expected: usize,
@@ -18,7 +16,6 @@ pub enum ValidationError {
         cols: usize,
     },
     /// A row or column does not sum to 1.
-    #[error("W is not doubly stochastic: {axis} {index} sums to {sum}")]
     NotDoublyStochastic {
         /// "row" or "col".
         axis: &'static str,
@@ -28,7 +25,6 @@ pub enum ValidationError {
         sum: f64,
     },
     /// `W[i][j] != W[j][i]`.
-    #[error("W is not symmetric at ({i},{j})")]
     NotSymmetric {
         /// Row.
         i: usize,
@@ -36,7 +32,6 @@ pub enum ValidationError {
         j: usize,
     },
     /// Nonzero weight on a non-link, or non-positive weight on a link.
-    #[error("W sparsity violates topology at ({i},{j}): value {value}")]
     SparsityMismatch {
         /// Row.
         i: usize,
@@ -46,12 +41,35 @@ pub enum ValidationError {
         value: f64,
     },
     /// Spectral radius of the deflated matrix ≥ 1 (consensus would stall).
-    #[error("beta = {beta} >= 1; consensus cannot contract")]
     BetaNotContracting {
         /// Estimated β.
         beta: f64,
     },
 }
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ValidationError::Shape { expected, rows, cols } => {
+                write!(f, "W must be {expected}x{expected}, got {rows}x{cols}")
+            }
+            ValidationError::NotDoublyStochastic { axis, index, sum } => {
+                write!(f, "W is not doubly stochastic: {axis} {index} sums to {sum}")
+            }
+            ValidationError::NotSymmetric { i, j } => {
+                write!(f, "W is not symmetric at ({i},{j})")
+            }
+            ValidationError::SparsityMismatch { i, j, value } => {
+                write!(f, "W sparsity violates topology at ({i},{j}): value {value}")
+            }
+            ValidationError::BetaNotContracting { beta } => {
+                write!(f, "beta = {beta} >= 1; consensus cannot contract")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ValidationError {}
 
 /// A consensus matrix validated against a topology, with its spectral gap
 /// precomputed.

@@ -11,6 +11,21 @@ pub enum EngineKind {
     Sequential,
     /// One OS thread per node (bit-identical results; real contention).
     Threaded,
+    /// Sharded worker pool: nodes chunked over `workers` OS threads
+    /// (`0` = available parallelism). Bit-identical to the sequential
+    /// engine while scaling to thousands of nodes.
+    Pool {
+        /// Worker-thread count; `0` selects the machine's available
+        /// parallelism.
+        workers: usize,
+    },
+}
+
+impl EngineKind {
+    /// The worker pool with the default (auto) worker count.
+    pub fn pool() -> Self {
+        EngineKind::Pool { workers: 0 }
+    }
 }
 
 /// Configuration of one run.

@@ -4,7 +4,7 @@
 
 use super::{EngineKind, RunConfig};
 use crate::algorithms::{NodeLogic, ObjectiveRef};
-use crate::engine::{sequential, threaded, RoundTelemetry};
+use crate::engine::{pool, sequential, threaded, RoundTelemetry};
 use crate::linalg::vecops;
 use crate::metrics::{RoundRecord, RunMetrics};
 use crate::network::Bus;
@@ -41,6 +41,14 @@ pub fn node_rngs(seed: u64, n: usize) -> Vec<Xoshiro256pp> {
         .collect()
 }
 
+/// The shared recording cadence: every engine must agree on which rounds
+/// are observed (metrics recorded, saturations accumulated, stop checked)
+/// so results stay bit-identical across engines. The pool engine also
+/// uses this to skip state snapshots entirely on unobserved rounds.
+fn round_is_recorded(cfg: &RunConfig, round: usize, total_rounds: usize) -> bool {
+    round % cfg.record_every.max(1) == 0 || round == total_rounds || cfg.grad_tol.is_some()
+}
+
 struct MetricHelper<'a> {
     objectives: &'a [ObjectiveRef],
     cfg: &'a RunConfig,
@@ -56,9 +64,7 @@ impl<'a> MetricHelper<'a> {
     }
 
     fn should_record(&self, telem: &RoundTelemetry, total_rounds: usize) -> bool {
-        telem.round % self.cfg.record_every.max(1) == 0
-            || telem.round == total_rounds
-            || self.cfg.grad_tol.is_some()
+        round_is_recorded(self.cfg, telem.round, total_rounds)
     }
 
     /// Compute the derived metrics at the mean iterate.
@@ -173,6 +179,37 @@ pub fn run_nodes(
                         return !stop;
                     }
                     true
+                });
+            RunOutput {
+                final_states: nodes.iter().map(|x| x.state().to_vec()).collect(),
+                rounds_completed: completed,
+                total_bytes: bus.total_bytes(),
+                dropped_messages: bus.total_dropped(),
+                sim_seconds: bus.sim_clock(),
+                metrics,
+            }
+        }
+        EngineKind::Pool { workers } => {
+            // Snapshot only on observed rounds; sharing `round_is_recorded`
+            // with the other engines keeps recorded metrics (and the
+            // saturation accumulation) bit-identical.
+            let want_cfg = *cfg;
+            let want =
+                move |round: usize| round_is_recorded(&want_cfg, round, total_rounds);
+            let (nodes, bus, completed) =
+                pool::run(nodes, rngs, bus, total_rounds, workers, want, |telem, snap, b| {
+                    let states: Vec<&[f64]> =
+                        snap.states.iter().map(|s| s.as_slice()).collect();
+                    let grad_steps = snap.grad_steps.iter().copied().max().unwrap_or(0);
+                    let rec = helper.record(&telem, &states, grad_steps, b);
+                    let stop = cfg.grad_tol.map(|t| rec.grad_norm <= t).unwrap_or(false);
+                    if telem.round % cfg.record_every.max(1) == 0
+                        || telem.round == total_rounds
+                        || stop
+                    {
+                        metrics.push(rec);
+                    }
+                    !stop
                 });
             RunOutput {
                 final_states: nodes.iter().map(|x| x.state().to_vec()).collect(),

@@ -1,8 +1,15 @@
 //! Experiment driver: configures a run, owns metric computation, selects
-//! the engine, and aggregates repeated trials.
+//! the engine, aggregates repeated trials — and hosts the declarative
+//! [`ScenarioSpec`] pathway, whose [`run_scenario`] is the single
+//! execution entry point for experiments, examples, and the CLI.
 
 mod config;
 mod driver;
+mod scenario;
 
 pub use config::{EngineKind, RunConfig};
 pub use driver::{run_nodes, run_trials, RunOutput};
+pub use scenario::{
+    run_scenario, CompressorSpec, ObjectiveSpec, PreparedScenario, ScenarioSpec, TopologySpec,
+    WeightSpec,
+};

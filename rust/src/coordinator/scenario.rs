@@ -1,0 +1,563 @@
+//! The declarative run pathway: a [`ScenarioSpec`] names an algorithm,
+//! topology, consensus weights, objectives, compressor, and run
+//! configuration (step schedule + engine), and [`run_scenario`] is the
+//! single execution entry point that turns it into a [`RunOutput`].
+//!
+//! Every experiment, example, and CLI invocation in the crate goes
+//! through this module; adding a new sweep is a data declaration, not
+//! new wiring. Components with no closed-form name (prebuilt graphs,
+//! exotic objectives, user compressors) ride along through the `Custom`
+//! escape hatches.
+
+use super::{run_nodes, RunConfig, RunOutput};
+use crate::algorithms::{AlgorithmKind, CompressorRef, ObjectiveRef};
+use crate::compress;
+use crate::consensus::{self, ConsensusMatrix};
+use crate::rng::Xoshiro256pp;
+use crate::topology::{self, Graph};
+use std::fmt;
+
+/// Which network topology to build.
+#[derive(Debug, Clone)]
+pub enum TopologySpec {
+    /// Two nodes, one link (the paper's Fig. 1 network).
+    Pair,
+    /// The paper's Fig. 3 four-node network.
+    Paper4,
+    /// Circle of `n` nodes.
+    Ring(usize),
+    /// Star with `n` nodes (node 0 is the hub).
+    Star(usize),
+    /// Complete graph on `n` nodes.
+    Complete(usize),
+    /// Path of `n` nodes.
+    Path(usize),
+    /// 2-D grid.
+    Grid {
+        /// Rows.
+        rows: usize,
+        /// Columns.
+        cols: usize,
+    },
+    /// Connected Erdős–Rényi graph.
+    ErdosRenyi {
+        /// Node count.
+        n: usize,
+        /// Edge probability.
+        p: f64,
+        /// Construction seed.
+        seed: u64,
+    },
+    /// Barabási–Albert scale-free graph.
+    BarabasiAlbert {
+        /// Node count.
+        n: usize,
+        /// Edges attached per new node.
+        m: usize,
+        /// Construction seed.
+        seed: u64,
+    },
+    /// A prebuilt graph.
+    Custom(Graph),
+}
+
+impl TopologySpec {
+    /// Materialize the graph.
+    pub fn build(&self) -> Graph {
+        match self {
+            TopologySpec::Pair => topology::pair(),
+            TopologySpec::Paper4 => topology::paper_four_node(),
+            TopologySpec::Ring(n) => topology::ring(*n),
+            TopologySpec::Star(n) => topology::star(*n),
+            TopologySpec::Complete(n) => topology::complete(*n),
+            TopologySpec::Path(n) => topology::path(*n),
+            TopologySpec::Grid { rows, cols } => topology::grid2d(*rows, *cols),
+            TopologySpec::ErdosRenyi { n, p, seed } => topology::erdos_renyi(*n, *p, *seed),
+            TopologySpec::BarabasiAlbert { n, m, seed } => {
+                topology::barabasi_albert(*n, *m, *seed)
+            }
+            TopologySpec::Custom(g) => g.clone(),
+        }
+    }
+
+    /// Parse a CLI topology name (`ring|star|complete|path|grid|er|ba|
+    /// pair|paper4`) with node count `n` and construction `seed`.
+    pub fn parse(name: &str, n: usize, seed: u64) -> Result<Self, String> {
+        Ok(match name {
+            "pair" => TopologySpec::Pair,
+            "paper4" => TopologySpec::Paper4,
+            "ring" => TopologySpec::Ring(n),
+            "star" => TopologySpec::Star(n),
+            "complete" => TopologySpec::Complete(n),
+            "path" => TopologySpec::Path(n),
+            "grid" => {
+                let side = (n as f64).sqrt().ceil() as usize;
+                TopologySpec::Grid { rows: side, cols: n.div_ceil(side) }
+            }
+            "er" => TopologySpec::ErdosRenyi { n, p: 0.3, seed },
+            "ba" => TopologySpec::BarabasiAlbert { n, m: 2, seed },
+            other => return Err(format!("unknown topology {other}")),
+        })
+    }
+}
+
+/// How to construct the consensus matrix `W` over the topology.
+#[derive(Debug, Clone, Default)]
+pub enum WeightSpec {
+    /// Metropolis–Hastings weights, except on [`TopologySpec::Paper4`]
+    /// where the paper's Fig. 4 matrix is used.
+    #[default]
+    Auto,
+    /// Metropolis–Hastings weights.
+    Metropolis,
+    /// Lazy Metropolis `(I + W)/2` (all eigenvalues nonnegative).
+    LazyMetropolis,
+    /// Max-degree weights.
+    MaxDegree,
+    /// A prebuilt, validated consensus matrix.
+    Custom(ConsensusMatrix),
+}
+
+impl WeightSpec {
+    /// Materialize `W` for `graph` (built from `topo`).
+    pub fn build(&self, topo: &TopologySpec, graph: &Graph) -> ConsensusMatrix {
+        match self {
+            WeightSpec::Auto => match topo {
+                TopologySpec::Paper4 => consensus::paper_four_node_w().1,
+                _ => consensus::metropolis(graph),
+            },
+            WeightSpec::Metropolis => consensus::metropolis(graph),
+            WeightSpec::LazyMetropolis => consensus::lazy_metropolis(graph),
+            WeightSpec::MaxDegree => consensus::max_degree(graph),
+            WeightSpec::Custom(w) => w.clone(),
+        }
+    }
+}
+
+/// Which per-node objectives to build.
+#[derive(Clone)]
+pub enum ObjectiveSpec {
+    /// The paper's Fig. 1 two-node objectives.
+    PaperPair,
+    /// The paper's Fig. 5 four-node objectives.
+    PaperFourNode,
+    /// Fig. 10's random scalar quadratics `aᵢ(x−bᵢ)²`, `a ~ U[0,10]`,
+    /// `b ~ U[0,1]`, drawn from a generator seeded with `seed`.
+    RandomCircle {
+        /// Objective-draw seed.
+        seed: u64,
+    },
+    /// Prebuilt objectives (one per node).
+    Custom(Vec<ObjectiveRef>),
+}
+
+impl ObjectiveSpec {
+    /// Materialize one objective per node.
+    pub fn build(&self, n: usize) -> Vec<ObjectiveRef> {
+        match self {
+            ObjectiveSpec::PaperPair => crate::experiments::paper_two_node_objectives(),
+            ObjectiveSpec::PaperFourNode => crate::experiments::paper_four_node_objectives(),
+            ObjectiveSpec::RandomCircle { seed } => {
+                let mut rng = Xoshiro256pp::seed_from_u64(*seed);
+                crate::experiments::random_circle_objectives(n, &mut rng)
+            }
+            ObjectiveSpec::Custom(objs) => objs.clone(),
+        }
+    }
+}
+
+impl fmt::Debug for ObjectiveSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ObjectiveSpec::PaperPair => write!(f, "PaperPair"),
+            ObjectiveSpec::PaperFourNode => write!(f, "PaperFourNode"),
+            ObjectiveSpec::RandomCircle { seed } => {
+                write!(f, "RandomCircle {{ seed: {seed} }}")
+            }
+            ObjectiveSpec::Custom(objs) => write!(f, "Custom({} objectives)", objs.len()),
+        }
+    }
+}
+
+/// Which compression operator the algorithm transmits through.
+#[derive(Clone, Default)]
+pub enum CompressorSpec {
+    /// No compressor (valid only for algorithms that do not compress).
+    #[default]
+    None,
+    /// Identity operator: raw f64 on the wire.
+    Identity,
+    /// Example 2: randomized rounding to the integer grid (σ² = 1/4).
+    RandomizedRounding,
+    /// Example 1: stochastic snap to a uniform grid with step `delta`.
+    LowPrecision {
+        /// Grid step Δ.
+        delta: f64,
+    },
+    /// Example 3: the quantization sparsifier on `B(0, m_bound)`.
+    Sparsifier {
+        /// Operator domain bound M.
+        m_bound: f64,
+        /// Partition levels m.
+        levels: usize,
+    },
+    /// TernGrad-style ternary quantization.
+    TernGrad,
+    /// QSGD-style quantization with the given level count.
+    Qsgd {
+        /// Quantization levels.
+        levels: usize,
+    },
+    /// Biased top-k sparsifier (for the Def.-1 ablations).
+    TopK {
+        /// Coordinates kept.
+        k: usize,
+    },
+    /// Biased 1-bit sign compressor (for the Def.-1 ablations).
+    SignOneBit,
+    /// A user-supplied operator.
+    Custom(CompressorRef),
+}
+
+impl CompressorSpec {
+    /// Materialize the operator (`None` when the spec is
+    /// [`CompressorSpec::None`]).
+    pub fn build(&self) -> Option<CompressorRef> {
+        use std::sync::Arc;
+        Some(match self {
+            CompressorSpec::None => return None,
+            CompressorSpec::Identity => Arc::new(compress::Identity::new()),
+            CompressorSpec::RandomizedRounding => Arc::new(compress::RandomizedRounding::new()),
+            CompressorSpec::LowPrecision { delta } => {
+                Arc::new(compress::LowPrecisionQuantizer::new(*delta))
+            }
+            CompressorSpec::Sparsifier { m_bound, levels } => {
+                Arc::new(compress::QuantizationSparsifier::new(*m_bound, *levels))
+            }
+            CompressorSpec::TernGrad => Arc::new(compress::TernGrad::new()),
+            CompressorSpec::Qsgd { levels } => Arc::new(compress::Qsgd::new(*levels)),
+            CompressorSpec::TopK { k } => Arc::new(compress::TopK::new(*k)),
+            CompressorSpec::SignOneBit => Arc::new(compress::SignOneBit::new()),
+            CompressorSpec::Custom(c) => c.clone(),
+        })
+    }
+
+    /// Parse a CLI compressor name
+    /// (`none|identity|randround|lowprec|sparsifier|terngrad|qsgd`),
+    /// binding `delta` (grid step) and `levels` where relevant.
+    pub fn parse(name: &str, delta: f64, levels: usize) -> Result<Self, String> {
+        Ok(match name {
+            "none" => CompressorSpec::None,
+            "identity" => CompressorSpec::Identity,
+            "randround" => CompressorSpec::RandomizedRounding,
+            "lowprec" => CompressorSpec::LowPrecision { delta },
+            "sparsifier" => CompressorSpec::Sparsifier { m_bound: delta * levels as f64, levels },
+            "terngrad" => CompressorSpec::TernGrad,
+            "qsgd" => CompressorSpec::Qsgd { levels },
+            other => return Err(format!("unknown compressor {other}")),
+        })
+    }
+}
+
+impl fmt::Debug for CompressorSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CompressorSpec::None => write!(f, "None"),
+            CompressorSpec::Identity => write!(f, "Identity"),
+            CompressorSpec::RandomizedRounding => write!(f, "RandomizedRounding"),
+            CompressorSpec::LowPrecision { delta } => {
+                write!(f, "LowPrecision {{ delta: {delta} }}")
+            }
+            CompressorSpec::Sparsifier { m_bound, levels } => {
+                write!(f, "Sparsifier {{ m_bound: {m_bound}, levels: {levels} }}")
+            }
+            CompressorSpec::TernGrad => write!(f, "TernGrad"),
+            CompressorSpec::Qsgd { levels } => write!(f, "Qsgd {{ levels: {levels} }}"),
+            CompressorSpec::TopK { k } => write!(f, "TopK {{ k: {k} }}"),
+            CompressorSpec::SignOneBit => write!(f, "SignOneBit"),
+            CompressorSpec::Custom(c) => write!(f, "Custom({})", c.name()),
+        }
+    }
+}
+
+/// A complete, declarative description of one run.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Algorithm + hyper-parameters.
+    pub algorithm: AlgorithmKind,
+    /// Network topology.
+    pub topology: TopologySpec,
+    /// Consensus-matrix construction.
+    pub weights: WeightSpec,
+    /// Per-node objectives.
+    pub objective: ObjectiveSpec,
+    /// Compression operator.
+    pub compressor: CompressorSpec,
+    /// Run configuration: iterations, step schedule, seed, metric
+    /// cadence, link model, and engine selection.
+    pub config: RunConfig,
+    /// Optional shared initial iterate (e.g. pretrained parameters).
+    pub init: Option<Vec<f64>>,
+}
+
+impl ScenarioSpec {
+    /// New spec with automatic weights, no compressor, and the default
+    /// [`RunConfig`].
+    pub fn new(algorithm: AlgorithmKind, topology: TopologySpec, objective: ObjectiveSpec) -> Self {
+        Self {
+            algorithm,
+            topology,
+            weights: WeightSpec::Auto,
+            objective,
+            compressor: CompressorSpec::None,
+            config: RunConfig::default(),
+            init: None,
+        }
+    }
+
+    /// The paper's four-node benchmark scenario (Fig. 3 network, Fig. 4
+    /// consensus matrix, Fig. 5 objectives).
+    pub fn paper4(algorithm: AlgorithmKind) -> Self {
+        Self::new(algorithm, TopologySpec::Paper4, ObjectiveSpec::PaperFourNode)
+    }
+
+    /// Set the compression operator.
+    pub fn with_compressor(mut self, compressor: CompressorSpec) -> Self {
+        self.compressor = compressor;
+        self
+    }
+
+    /// Set the consensus-matrix construction.
+    pub fn with_weights(mut self, weights: WeightSpec) -> Self {
+        self.weights = weights;
+        self
+    }
+
+    /// Set the run configuration.
+    pub fn with_config(mut self, config: RunConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Set the master seed (keeps the rest of the configuration).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.config.seed = seed;
+        self
+    }
+
+    /// Set the engine (keeps the rest of the configuration).
+    pub fn with_engine(mut self, engine: super::EngineKind) -> Self {
+        self.config.engine = engine;
+        self
+    }
+
+    /// Set the shared initial iterate.
+    pub fn with_init(mut self, x0: Vec<f64>) -> Self {
+        self.init = Some(x0);
+        self
+    }
+
+    /// Materialize the scenario: build graph, weights, objectives, and
+    /// compressor once so repeated (multi-trial, multi-engine) runs skip
+    /// the setup cost.
+    pub fn prepare(&self) -> PreparedScenario {
+        let graph = self.topology.build();
+        let weights = self.weights.build(&self.topology, &graph);
+        let n = graph.num_nodes();
+        assert_eq!(weights.n(), n, "consensus matrix does not match the topology size");
+        let objectives = self.objective.build(n);
+        assert_eq!(objectives.len(), n, "objective count does not match the topology size");
+        let compressor = self.compressor.build();
+        assert!(
+            compressor.is_some() || !self.algorithm.needs_compressor(),
+            "algorithm `{}` requires a compressor spec",
+            self.algorithm.name()
+        );
+        PreparedScenario {
+            algorithm: self.algorithm,
+            graph,
+            weights,
+            objectives,
+            compressor,
+            config: self.config,
+            init: self.init.clone(),
+        }
+    }
+}
+
+/// A materialized [`ScenarioSpec`]: graph, consensus matrix, objectives,
+/// and compressor built once, runnable many times.
+pub struct PreparedScenario {
+    algorithm: AlgorithmKind,
+    graph: Graph,
+    weights: ConsensusMatrix,
+    objectives: Vec<ObjectiveRef>,
+    compressor: Option<CompressorRef>,
+    config: RunConfig,
+    init: Option<Vec<f64>>,
+}
+
+impl PreparedScenario {
+    /// The built topology.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// The built (validated) consensus matrix.
+    pub fn weights(&self) -> &ConsensusMatrix {
+        &self.weights
+    }
+
+    /// The built per-node objectives.
+    pub fn objectives(&self) -> &[ObjectiveRef] {
+        &self.objectives
+    }
+
+    /// The run configuration the spec carried.
+    pub fn config(&self) -> &RunConfig {
+        &self.config
+    }
+
+    /// The algorithm this scenario runs.
+    pub fn algorithm(&self) -> AlgorithmKind {
+        self.algorithm
+    }
+
+    /// Execute one run with the spec's own configuration.
+    pub fn run(&self) -> RunOutput {
+        self.run_with(&self.config)
+    }
+
+    /// Execute one run with an overriding configuration (fresh nodes are
+    /// built per call — use this for trial loops that vary the seed or
+    /// engine without paying topology/spectral setup again).
+    pub fn run_with(&self, cfg: &RunConfig) -> RunOutput {
+        let nodes = self.algorithm.build_nodes(
+            &self.graph,
+            &self.weights,
+            &self.objectives,
+            self.compressor.as_ref(),
+            cfg.step_size,
+            self.init.as_deref(),
+        );
+        run_nodes(&self.graph, &self.objectives, nodes, cfg)
+    }
+}
+
+/// Run one scenario end-to-end: the crate's single execution entry
+/// point. Equivalent to `spec.prepare().run()`.
+pub fn run_scenario(spec: &ScenarioSpec) -> RunOutput {
+    spec.prepare().run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{AdcDgdOptions, StepSize};
+    use crate::coordinator::EngineKind;
+
+    fn quick_cfg() -> RunConfig {
+        RunConfig {
+            iterations: 200,
+            step_size: StepSize::Constant(0.02),
+            record_every: 50,
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn scenario_runs_paper4_adc() {
+        let spec = ScenarioSpec::paper4(AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }))
+            .with_compressor(CompressorSpec::RandomizedRounding)
+            .with_config(quick_cfg());
+        let out = run_scenario(&spec);
+        assert_eq!(out.rounds_completed, 200);
+        assert!(out.metrics.grad_norm.last().unwrap().is_finite());
+        // int16 wire: 6 directed link transmissions × 2 B × 200 rounds.
+        assert_eq!(out.total_bytes, 6 * 2 * 200);
+    }
+
+    #[test]
+    fn scenario_matches_direct_wiring() {
+        // The declarative pathway must reproduce the hand-wired run
+        // bit-for-bit (same seeds, same node construction order).
+        let cfg = quick_cfg();
+        let spec = ScenarioSpec::paper4(AlgorithmKind::Dgd).with_config(cfg);
+        let a = run_scenario(&spec);
+        let (g, w) = crate::consensus::paper_four_node_w();
+        let objs = crate::experiments::paper_four_node_objectives();
+        let nodes = AlgorithmKind::Dgd.build_nodes(&g, &w, &objs, None, cfg.step_size, None);
+        let b = crate::coordinator::run_nodes(&g, &objs, nodes, &cfg);
+        assert_eq!(a.final_states, b.final_states);
+        assert_eq!(a.metrics.grad_norm, b.metrics.grad_norm);
+    }
+
+    #[test]
+    fn prepared_scenario_reruns_with_fresh_nodes() {
+        let spec = ScenarioSpec::new(
+            AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+            TopologySpec::Ring(6),
+            ObjectiveSpec::RandomCircle { seed: 9 },
+        )
+        .with_compressor(CompressorSpec::TernGrad)
+        .with_config(quick_cfg());
+        let prepared = spec.prepare();
+        let a = prepared.run();
+        let b = prepared.run();
+        // Same seed ⇒ identical trajectories (nodes are rebuilt fresh).
+        assert_eq!(a.final_states, b.final_states);
+        // Different seed ⇒ different stochastic-compression realization.
+        let mut cfg2 = *prepared.config();
+        cfg2.seed = 123;
+        let c = prepared.run_with(&cfg2);
+        assert_ne!(a.final_states, c.final_states);
+    }
+
+    #[test]
+    fn engine_override_keeps_results() {
+        let spec = ScenarioSpec::new(
+            AlgorithmKind::Dgd,
+            TopologySpec::Ring(5),
+            ObjectiveSpec::RandomCircle { seed: 3 },
+        )
+        .with_config(quick_cfg());
+        let prepared = spec.prepare();
+        let seq = prepared.run();
+        let mut cfg = *prepared.config();
+        cfg.engine = EngineKind::pool();
+        let pool = prepared.run_with(&cfg);
+        assert_eq!(seq.final_states, pool.final_states);
+        assert_eq!(seq.total_bytes, pool.total_bytes);
+    }
+
+    #[test]
+    fn topology_parse_covers_cli_names() {
+        for name in ["pair", "paper4", "ring", "star", "complete", "path", "grid", "er", "ba"] {
+            let spec = TopologySpec::parse(name, 6, 1).unwrap();
+            let g = spec.build();
+            assert!(g.num_nodes() >= 2, "{name}");
+            assert!(g.is_connected(), "{name}");
+        }
+        assert!(TopologySpec::parse("bogus", 4, 0).is_err());
+    }
+
+    #[test]
+    fn compressor_specs_build() {
+        let specs = [
+            CompressorSpec::Identity,
+            CompressorSpec::RandomizedRounding,
+            CompressorSpec::LowPrecision { delta: 0.5 },
+            CompressorSpec::Sparsifier { m_bound: 4.0, levels: 8 },
+            CompressorSpec::TernGrad,
+            CompressorSpec::Qsgd { levels: 16 },
+            CompressorSpec::TopK { k: 2 },
+            CompressorSpec::SignOneBit,
+        ];
+        for s in specs {
+            assert!(s.build().is_some(), "{s:?}");
+        }
+        assert!(CompressorSpec::None.build().is_none());
+        assert!(CompressorSpec::parse("randround", 1.0, 4).is_ok());
+        assert!(CompressorSpec::parse("nope", 1.0, 4).is_err());
+    }
+}

@@ -1,15 +1,23 @@
 //! Execution engines.
 //!
-//! Two interchangeable engines run the same per-node [`NodeLogic`]:
+//! Three interchangeable engines run the same per-node [`NodeLogic`]:
 //!
 //! * [`sequential::run`] — single-threaded, deterministic; the reference
 //!   semantics used by tests and benches.
 //! * [`threaded::run`] — one OS thread per node with barrier-synchronized
-//!   rounds, exercising real contention on the shared bus. Bit-identical
-//!   to the sequential engine given the same seeds (per-node RNG streams
-//!   + hash-based loss injection), which is asserted by integration
-//!   tests.
+//!   rounds, exercising real contention on the shared bus.
+//! * [`pool::run`] — a sharded worker pool: `min(num_cpus, n)` workers,
+//!   nodes chunked contiguously across shards, barrier-per-round. Scales
+//!   to thousands of nodes where one-thread-per-node collapses.
+//!
+//! All three are bit-identical given the same seeds (per-node RNG
+//! streams + stateless-hash loss injection + sender-sorted inbox
+//! reduction), which is asserted by the integration tests in
+//! `rust/tests/engine_equivalence.rs`.
+//!
+//! [`NodeLogic`]: crate::algorithms::NodeLogic
 
+pub mod pool;
 pub mod sequential;
 pub mod threaded;
 
@@ -25,4 +33,14 @@ pub struct RoundTelemetry {
     /// Largest single payload this round in bytes (drives the simulated
     /// round clock).
     pub max_payload_bytes: usize,
+}
+
+/// Per-round snapshot passed to the observers of the parallel engines
+/// (node states are copied out at the barrier — the worker threads own
+/// the live state).
+pub struct Snapshot {
+    /// `x_i` per node.
+    pub states: Vec<Vec<f64>>,
+    /// Gradient iterations completed per node.
+    pub grad_steps: Vec<usize>,
 }

@@ -1,0 +1,317 @@
+//! Sharded worker-pool engine: `min(num_cpus, n)` workers, nodes chunked
+//! contiguously across shards, barrier-synchronized rounds.
+//!
+//! The per-thread engine ([`super::threaded`]) spawns one OS thread per
+//! node, which collapses for large networks (thousands of barrier
+//! participants, thousands of stacks). This engine keeps the exact same
+//! round semantics — emit barrier, consume barrier, observe barrier —
+//! but each worker owns a contiguous *shard* of (node, RNG) pairs and
+//! locks the shared bus once per shard per phase instead of once per
+//! node.
+//!
+//! Determinism: node RNG streams are owned per node (the worker only
+//! routes them), loss injection is a stateless hash of
+//! `(seed, src, dst, round)`, and inboxes are sorted by sender before
+//! consumption, so results are bit-identical to [`super::sequential`]
+//! regardless of worker count or interleaving (asserted in
+//! `rust/tests/engine_equivalence.rs`).
+//!
+//! As an additional large-n optimization the observer is only invoked —
+//! and node states are only copied out — on rounds where `want_observe`
+//! returns true (the driver passes its metric-recording cadence). The
+//! skipped rounds perform no per-node state copies at all.
+
+use super::{RoundTelemetry, Snapshot};
+use crate::algorithms::NodeLogic;
+use crate::compress::Payload;
+use crate::network::Bus;
+use crate::rng::Xoshiro256pp;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+/// Resolve the effective worker count: `workers` if nonzero, else the
+/// machine's available parallelism; never more than `n`, never zero.
+pub fn effective_workers(workers: usize, n: usize) -> usize {
+    let auto = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+    let w = if workers == 0 { auto } else { workers };
+    w.clamp(1, n.max(1))
+}
+
+/// Run `rounds` barrier-synchronized rounds on a sharded worker pool.
+///
+/// `workers == 0` selects the available-parallelism default. The
+/// observer runs on the coordinating thread, but only on rounds where
+/// `want_observe(round)` is true; it may return `false` to stop early.
+/// Returns `(nodes, bus, completed_rounds)` with nodes in their original
+/// order.
+#[allow(clippy::type_complexity)]
+pub fn run<F, P>(
+    mut nodes: Vec<Box<dyn NodeLogic>>,
+    mut rngs: Vec<Xoshiro256pp>,
+    bus: Bus,
+    rounds: usize,
+    workers: usize,
+    want_observe: P,
+    mut observer: F,
+) -> (Vec<Box<dyn NodeLogic>>, Bus, usize)
+where
+    F: FnMut(RoundTelemetry, &Snapshot, &Bus) -> bool,
+    P: Fn(usize) -> bool + Sync,
+{
+    let n = nodes.len();
+    assert_eq!(rngs.len(), n);
+    assert_eq!(bus.n(), n);
+    if n == 0 {
+        return (nodes, bus, 0);
+    }
+
+    // Contiguous shards: worker w owns nodes [w*chunk, (w+1)*chunk).
+    let chunk = n.div_ceil(effective_workers(workers, n));
+    let nw = n.div_ceil(chunk);
+    let mut shards: Vec<Vec<(usize, Box<dyn NodeLogic>, Xoshiro256pp)>> =
+        (0..nw).map(|_| Vec::with_capacity(chunk)).collect();
+    for (i, (node, rng)) in nodes.drain(..).zip(rngs.drain(..)).enumerate() {
+        shards[i / chunk].push((i, node, rng));
+    }
+
+    let bus = Mutex::new(bus);
+    // Three sync points per round, mirroring the per-thread engine: after
+    // broadcast, after consume(+snapshot), and after the observer's stop
+    // decision (so every worker reads the same `stop` for the round).
+    let after_send = Barrier::new(nw + 1);
+    let after_consume = Barrier::new(nw + 1);
+    let after_observe = Barrier::new(nw + 1);
+    let stop = AtomicBool::new(false);
+    let completed = AtomicUsize::new(0);
+
+    // Per-worker telemetry partials and per-node state slots (one writer
+    // per slot, then barrier).
+    let telem_slots: Vec<Mutex<(f64, usize, usize)>> =
+        (0..nw).map(|_| Mutex::new((0.0, 0, 0))).collect();
+    let state_slots: Vec<Mutex<(Vec<f64>, usize)>> =
+        (0..n).map(|_| Mutex::new((Vec::new(), 0))).collect();
+
+    let mut out_shards: Vec<Vec<(usize, Box<dyn NodeLogic>, Xoshiro256pp)>> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(nw);
+        for (w, mut shard) in shards.drain(..).enumerate() {
+            let bus = &bus;
+            let after_send = &after_send;
+            let after_consume = &after_consume;
+            let after_observe = &after_observe;
+            let stop = &stop;
+            let telem_slots = &telem_slots;
+            let state_slots = &state_slots;
+            let want_observe = &want_observe;
+            handles.push(scope.spawn(move || {
+                let mut outgoing: Vec<(usize, Arc<Payload>)> = Vec::with_capacity(shard.len());
+                for k in 1..=rounds {
+                    // Phase 1: emit every shard node, then broadcast the
+                    // whole shard under one bus lock.
+                    let mut max_tx = 0.0f64;
+                    let mut saturations = 0usize;
+                    let mut max_payload = 0usize;
+                    outgoing.clear();
+                    for (i, node, rng) in shard.iter_mut() {
+                        let out = node.make_message(k, rng);
+                        max_tx = max_tx.max(out.tx_magnitude);
+                        saturations += out.saturated;
+                        max_payload = max_payload.max(out.payload.wire_bytes());
+                        outgoing.push((*i, Arc::new(out.payload)));
+                    }
+                    {
+                        let mut b = bus.lock().unwrap();
+                        for (i, payload) in &outgoing {
+                            b.broadcast(*i, k, payload);
+                        }
+                    }
+                    *telem_slots[w].lock().unwrap() = (max_tx, saturations, max_payload);
+                    after_send.wait();
+                    // Coordinator advances the round clock here.
+                    let want = want_observe(k);
+                    // Phase 2: drain the shard's inboxes under one lock,
+                    // then consume. Sort by sender so floating-point
+                    // reduction order matches the sequential engine.
+                    let mut inboxes: Vec<Vec<(usize, Arc<Payload>)>> = {
+                        let mut b = bus.lock().unwrap();
+                        shard
+                            .iter()
+                            .map(|(i, _, _)| {
+                                b.collect(*i).into_iter().map(|m| (m.src, m.payload)).collect()
+                            })
+                            .collect()
+                    };
+                    for ((i, node, rng), inbox) in shard.iter_mut().zip(inboxes.iter_mut()) {
+                        inbox.sort_by_key(|(src, _)| *src);
+                        node.consume(k, inbox, rng);
+                        if want {
+                            let mut slot = state_slots[*i].lock().unwrap();
+                            slot.0.clear();
+                            slot.0.extend_from_slice(node.state());
+                            slot.1 = node.grad_steps();
+                        }
+                    }
+                    after_consume.wait();
+                    // Coordinator runs the observer here and sets `stop`.
+                    after_observe.wait();
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+                shard
+            }));
+        }
+
+        // Coordinating thread.
+        for k in 1..=rounds {
+            after_send.wait();
+            let mut max_tx = 0.0f64;
+            let mut saturations = 0usize;
+            let mut max_payload = 0usize;
+            for slot in telem_slots.iter() {
+                let (tx, sat, bytes) = *slot.lock().unwrap();
+                max_tx = max_tx.max(tx);
+                saturations += sat;
+                max_payload = max_payload.max(bytes);
+            }
+            bus.lock().unwrap().advance_round(max_payload);
+            after_consume.wait();
+            completed.store(k, Ordering::SeqCst);
+            let keep_going = if want_observe(k) {
+                let snapshot = Snapshot {
+                    states: state_slots.iter().map(|s| s.lock().unwrap().0.clone()).collect(),
+                    grad_steps: state_slots.iter().map(|s| s.lock().unwrap().1).collect(),
+                };
+                let telem = RoundTelemetry {
+                    round: k,
+                    max_transmitted: max_tx,
+                    saturations,
+                    max_payload_bytes: max_payload,
+                };
+                let b = bus.lock().unwrap();
+                observer(telem, &snapshot, &b)
+            } else {
+                true
+            };
+            if !keep_going || k == rounds {
+                stop.store(true, Ordering::SeqCst);
+            }
+            after_observe.wait();
+            if !keep_going {
+                break;
+            }
+        }
+
+        for h in handles {
+            out_shards.push(h.join().expect("pool worker panicked"));
+        }
+    });
+
+    // Shards are contiguous and joined in worker order, so concatenation
+    // restores the original node order.
+    for shard in out_shards {
+        for (i, node, rng) in shard {
+            debug_assert_eq!(i, nodes.len());
+            nodes.push(node);
+            rngs.push(rng);
+        }
+    }
+
+    let completed = completed.load(Ordering::SeqCst);
+    (nodes, bus.into_inner().unwrap(), completed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{DgdNode, StepSize};
+    use crate::network::LinkModel;
+    use crate::objective::ScalarQuadratic;
+    use crate::topology;
+    use std::sync::Arc as StdArc;
+
+    fn ring_nodes(n: usize) -> (Vec<Box<dyn NodeLogic>>, Vec<Xoshiro256pp>, Bus) {
+        let g = topology::ring(n);
+        let w = crate::consensus::metropolis(&g);
+        let nodes: Vec<Box<dyn NodeLogic>> = (0..n)
+            .map(|i| {
+                Box::new(DgdNode::new(
+                    i,
+                    w.row(i).to_vec(),
+                    StdArc::new(ScalarQuadratic::new(1.0 + i as f64, i as f64 / n as f64)),
+                    StepSize::Constant(0.02),
+                )) as Box<dyn NodeLogic>
+            })
+            .collect();
+        let rngs: Vec<Xoshiro256pp> =
+            (0..n).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
+        let bus = Bus::new(&g, LinkModel::default(), 0);
+        (nodes, rngs, bus)
+    }
+
+    #[test]
+    fn effective_worker_count_is_bounded() {
+        assert_eq!(effective_workers(3, 100), 3);
+        assert_eq!(effective_workers(8, 2), 2);
+        assert_eq!(effective_workers(1, 1), 1);
+        assert!(effective_workers(0, 1000) >= 1);
+    }
+
+    #[test]
+    fn pool_matches_sequential_on_ring() {
+        let n = 10;
+        let rounds = 200;
+        // Sequential reference.
+        let (mut snodes, mut srngs, mut sbus) = ring_nodes(n);
+        let done =
+            sequentialish(&mut snodes, &mut srngs, &mut sbus, rounds);
+        assert_eq!(done, rounds);
+        // Pool with a worker count that does not divide n evenly.
+        let (pnodes, prngs, pbus) = ring_nodes(n);
+        let (pnodes, pbus, completed) =
+            run(pnodes, prngs, pbus, rounds, 3, |_| false, |_t, _s, _b| true);
+        assert_eq!(completed, rounds);
+        assert_eq!(pbus.total_bytes(), sbus.total_bytes());
+        for (a, b) in snodes.iter().zip(pnodes.iter()) {
+            assert_eq!(a.state(), b.state());
+        }
+    }
+
+    fn sequentialish(
+        nodes: &mut [Box<dyn NodeLogic>],
+        rngs: &mut [Xoshiro256pp],
+        bus: &mut Bus,
+        rounds: usize,
+    ) -> usize {
+        crate::engine::sequential::run(nodes, rngs, bus, rounds, |_t, _n, _b| true)
+    }
+
+    #[test]
+    fn pool_early_stop_via_observer() {
+        let (nodes, rngs, bus) = ring_nodes(6);
+        let (_nodes, _bus, completed) =
+            run(nodes, rngs, bus, 1000, 2, |_| true, |t, _s, _b| t.round < 7);
+        assert_eq!(completed, 7);
+    }
+
+    #[test]
+    fn pool_observer_skipping_rounds_still_completes() {
+        let (nodes, rngs, bus) = ring_nodes(5);
+        let mut observed = Vec::new();
+        let (_nodes, _bus, completed) = run(
+            nodes,
+            rngs,
+            bus,
+            50,
+            0,
+            |k| k % 10 == 0,
+            |t, s, _b| {
+                observed.push(t.round);
+                assert_eq!(s.states.len(), 5);
+                true
+            },
+        );
+        assert_eq!(completed, 50);
+        assert_eq!(observed, vec![10, 20, 30, 40, 50]);
+    }
+}

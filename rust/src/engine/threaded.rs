@@ -6,22 +6,13 @@
 //! are bit-identical to the sequential engine regardless of thread
 //! interleaving (asserted in `rust/tests/engine_equivalence.rs`).
 
-use super::RoundTelemetry;
+use super::{RoundTelemetry, Snapshot};
 use crate::algorithms::NodeLogic;
 use crate::compress::Payload;
 use crate::network::Bus;
 use crate::rng::Xoshiro256pp;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex};
-
-/// Per-round snapshot passed to the threaded observer (node states are
-/// copied out at the barrier — the threads own the live state).
-pub struct Snapshot {
-    /// `x_i` per node.
-    pub states: Vec<Vec<f64>>,
-    /// Gradient iterations completed per node.
-    pub grad_steps: Vec<usize>,
-}
 
 /// Run `rounds` barrier-synchronized rounds with one thread per node.
 /// The observer runs on the coordinating thread between rounds and may

@@ -1,22 +1,24 @@
 //! Ablation studies backing the theory claims (DESIGN.md §4: AB-α, AB-C,
-//! AB-η).
+//! AB-η). All runs go through the declarative [`ScenarioSpec`] pathway.
 
-use super::{paper_four_node_objectives, FigureResult};
-use crate::algorithms::{run_adc_dgd, AdcDgdOptions, CompressorRef, StepSize};
-use crate::compress::{
-    LowPrecisionQuantizer, Qsgd, QuantizationSparsifier, RandomizedRounding, TernGrad,
+use super::FigureResult;
+use crate::algorithms::{AdcDgdOptions, AlgorithmKind, StepSize};
+use crate::coordinator::{
+    run_scenario, CompressorSpec, ObjectiveSpec, RunConfig, ScenarioSpec, TopologySpec,
 };
-use crate::consensus::paper_four_node_w;
-use crate::coordinator::RunConfig;
 use crate::metrics::MetricSeries;
 use std::sync::Arc;
+
+fn adc_paper4(compressor: CompressorSpec, cfg: RunConfig) -> ScenarioSpec {
+    ScenarioSpec::paper4(AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }))
+        .with_compressor(compressor)
+        .with_config(cfg)
+}
 
 /// AB-α — Theorem 2's error ball: with constant step α the limiting
 /// gradient norm scales like O(α) in norm (O(α²) in squared norm). Sweeps
 /// α and reports the tail-mean gradient norm.
 pub fn alpha_error_ball(alphas: &[f64], iterations: usize, seed: u64) -> FigureResult {
-    let (g, w) = paper_four_node_w();
-    let objs = paper_four_node_objectives();
     let mut fr = FigureResult { id: "ablation_alpha".into(), ..Default::default() };
     let mut tails = Vec::with_capacity(alphas.len());
     for &alpha in alphas {
@@ -27,14 +29,7 @@ pub fn alpha_error_ball(alphas: &[f64], iterations: usize, seed: u64) -> FigureR
             record_every: 1,
             ..RunConfig::default()
         };
-        let out = run_adc_dgd(
-            &g,
-            &w,
-            &objs,
-            Arc::new(RandomizedRounding::new()),
-            &AdcDgdOptions { gamma: 1.0 },
-            &cfg,
-        );
+        let out = run_scenario(&adc_paper4(CompressorSpec::RandomizedRounding, cfg));
         let gn = &out.metrics.grad_norm;
         let tail = &gn[gn.len() - gn.len() / 5..];
         tails.push(tail.iter().sum::<f64>() / tail.len() as f64);
@@ -47,14 +42,12 @@ pub fn alpha_error_ball(alphas: &[f64], iterations: usize, seed: u64) -> FigureR
 /// paper's Def.-1 operators (Examples 1–3) plus TernGrad and QSGD.
 /// Series: grad norm vs iteration per operator; notes: total bytes.
 pub fn compressor_comparison(iterations: usize, alpha: f64, seed: u64) -> FigureResult {
-    let (g, w) = paper_four_node_w();
-    let objs = paper_four_node_objectives();
-    let ops: Vec<(&str, CompressorRef)> = vec![
-        ("rand_round", Arc::new(RandomizedRounding::new())),
-        ("low_precision_0.5", Arc::new(LowPrecisionQuantizer::new(0.5))),
-        ("sparsifier", Arc::new(QuantizationSparsifier::new(64.0, 128))),
-        ("terngrad", Arc::new(TernGrad::new())),
-        ("qsgd_64", Arc::new(Qsgd::new(64))),
+    let ops: Vec<(&str, CompressorSpec)> = vec![
+        ("rand_round", CompressorSpec::RandomizedRounding),
+        ("low_precision_0.5", CompressorSpec::LowPrecision { delta: 0.5 }),
+        ("sparsifier", CompressorSpec::Sparsifier { m_bound: 64.0, levels: 128 }),
+        ("terngrad", CompressorSpec::TernGrad),
+        ("qsgd_64", CompressorSpec::Qsgd { levels: 64 }),
     ];
     let mut fr = FigureResult { id: "ablation_compressors".into(), ..Default::default() };
     for (name, op) in ops {
@@ -65,7 +58,7 @@ pub fn compressor_comparison(iterations: usize, alpha: f64, seed: u64) -> Figure
             record_every: 1,
             ..RunConfig::default()
         };
-        let out = run_adc_dgd(&g, &w, &objs, op, &AdcDgdOptions { gamma: 1.0 }, &cfg);
+        let out = run_scenario(&adc_paper4(op, cfg));
         fr.series.push(MetricSeries::new(
             format!("{name}/grad_norm"),
             out.metrics.rounds.iter().map(|&r| r as f64).collect(),
@@ -94,10 +87,6 @@ pub fn compressor_comparison(iterations: usize, alpha: f64, seed: u64) -> Figure
 /// operators. So Def. 1 is sufficient for the paper's *rate* guarantees
 /// but not necessary for convergence of the mechanism.
 pub fn def1_bias_ablation(iterations: usize, alpha: f64, seed: u64) -> FigureResult {
-    use crate::algorithms::run_naive_compressed;
-    use crate::compress::{SignOneBit, TopK};
-    let g = crate::topology::ring(6);
-    let w = crate::consensus::metropolis(&g);
     // Vector problem (P = 8) so top-k actually drops coordinates.
     let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(seed ^ 0xD1);
     let objs: Vec<crate::algorithms::ObjectiveRef> = (0..6)
@@ -108,11 +97,11 @@ pub fn def1_bias_ablation(iterations: usize, alpha: f64, seed: u64) -> FigureRes
                 as crate::algorithms::ObjectiveRef
         })
         .collect();
-    let ops: Vec<(&str, CompressorRef)> = vec![
-        ("unbiased_randround", Arc::new(RandomizedRounding::new())),
-        ("unbiased_lowprec", Arc::new(LowPrecisionQuantizer::new(0.05))),
-        ("biased_top2", Arc::new(TopK::new(2))),
-        ("biased_sign", Arc::new(SignOneBit::new())),
+    let ops: Vec<(&str, CompressorSpec)> = vec![
+        ("unbiased_randround", CompressorSpec::RandomizedRounding),
+        ("unbiased_lowprec", CompressorSpec::LowPrecision { delta: 0.05 }),
+        ("biased_top2", CompressorSpec::TopK { k: 2 }),
+        ("biased_sign", CompressorSpec::SignOneBit),
     ];
     let mut fr = FigureResult { id: "ablation_def1".into(), ..Default::default() };
     let cfg = RunConfig {
@@ -121,6 +110,15 @@ pub fn def1_bias_ablation(iterations: usize, alpha: f64, seed: u64) -> FigureRes
         seed,
         record_every: 1,
         ..RunConfig::default()
+    };
+    let ring6 = |algorithm, compressor| {
+        ScenarioSpec::new(
+            algorithm,
+            TopologySpec::Ring(6),
+            ObjectiveSpec::Custom(objs.clone()),
+        )
+        .with_compressor(compressor)
+        .with_config(cfg)
     };
     let push = |fr: &mut FigureResult, name: String, out: &crate::coordinator::RunOutput| {
         let gn = &out.metrics.grad_norm;
@@ -133,15 +131,18 @@ pub fn def1_bias_ablation(iterations: usize, alpha: f64, seed: u64) -> FigureRes
         ));
     };
     for (name, op) in ops {
-        let out = run_adc_dgd(&g, &w, &objs, op, &AdcDgdOptions { gamma: 1.0 }, &cfg);
+        let out = run_scenario(&ring6(
+            AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+            op,
+        ));
         push(&mut fr, format!("adc/{name}"), &out);
     }
     // Control: the same biased operators without the mirror feedback.
     for (name, op) in [
-        ("biased_top2", Arc::new(TopK::new(2)) as CompressorRef),
-        ("biased_sign", Arc::new(SignOneBit::new()) as CompressorRef),
+        ("biased_top2", CompressorSpec::TopK { k: 2 }),
+        ("biased_sign", CompressorSpec::SignOneBit),
     ] {
-        let out = run_naive_compressed(&g, &w, &objs, op, &cfg);
+        let out = run_scenario(&ring6(AlgorithmKind::NaiveCompressed, op));
         push(&mut fr, format!("naive/{name}"), &out);
     }
     fr
@@ -150,8 +151,6 @@ pub fn def1_bias_ablation(iterations: usize, alpha: f64, seed: u64) -> FigureRes
 /// AB-η — Theorem 3's diminishing-step regimes: η ∈ {0.5, 0.75, 1.0}.
 /// η = ½ should give the fastest asymptotic decay of the gradient norm.
 pub fn eta_sweep(etas: &[f64], iterations: usize, alpha0: f64, seed: u64) -> FigureResult {
-    let (g, w) = paper_four_node_w();
-    let objs = paper_four_node_objectives();
     let mut fr = FigureResult { id: "ablation_eta".into(), ..Default::default() };
     for &eta in etas {
         let cfg = RunConfig {
@@ -161,14 +160,7 @@ pub fn eta_sweep(etas: &[f64], iterations: usize, alpha0: f64, seed: u64) -> Fig
             record_every: 1,
             ..RunConfig::default()
         };
-        let out = run_adc_dgd(
-            &g,
-            &w,
-            &objs,
-            Arc::new(RandomizedRounding::new()),
-            &AdcDgdOptions { gamma: 1.0 },
-            &cfg,
-        );
+        let out = run_scenario(&adc_paper4(CompressorSpec::RandomizedRounding, cfg));
         fr.series.push(MetricSeries::new(
             format!("eta_{eta}/grad_norm"),
             out.metrics.rounds.iter().map(|&r| r as f64).collect(),

@@ -3,14 +3,12 @@
 //! (`f₁ = 4(x−2)²`, `f₂ = 2(x+3)²`, randomized-rounding quantizer),
 //! while exact DGD settles.
 
-use super::{paper_two_node_objectives, FigureResult};
-use crate::algorithms::{run_dgd, run_naive_compressed, StepSize};
-use crate::compress::RandomizedRounding;
-use crate::consensus::metropolis;
-use crate::coordinator::RunConfig;
+use super::FigureResult;
+use crate::algorithms::{AlgorithmKind, StepSize};
+use crate::coordinator::{
+    run_scenario, CompressorSpec, ObjectiveSpec, RunConfig, ScenarioSpec, TopologySpec,
+};
 use crate::metrics::MetricSeries;
-use crate::topology;
-use std::sync::Arc;
 
 /// Parameters (paper: 1000 iterations).
 #[derive(Debug, Clone, Copy)]
@@ -31,9 +29,6 @@ impl Default for Params {
 
 /// Run the Fig. 1 reproduction.
 pub fn run(p: &Params) -> FigureResult {
-    let g = topology::pair();
-    let w = metropolis(&g);
-    let objs = paper_two_node_objectives();
     let cfg = RunConfig {
         iterations: p.iterations,
         step_size: StepSize::Constant(p.alpha),
@@ -41,9 +36,17 @@ pub fn run(p: &Params) -> FigureResult {
         record_every: 1,
         ..RunConfig::default()
     };
+    let pair = |algorithm, compressor| {
+        ScenarioSpec::new(algorithm, TopologySpec::Pair, ObjectiveSpec::PaperPair)
+            .with_compressor(compressor)
+            .with_config(cfg)
+    };
 
-    let exact = run_dgd(&g, &w, &objs, &cfg);
-    let naive = run_naive_compressed(&g, &w, &objs, Arc::new(RandomizedRounding::new()), &cfg);
+    let exact = run_scenario(&pair(AlgorithmKind::Dgd, CompressorSpec::None));
+    let naive = run_scenario(&pair(
+        AlgorithmKind::NaiveCompressed,
+        CompressorSpec::RandomizedRounding,
+    ));
 
     let iters = |m: &crate::metrics::RunMetrics| m.rounds.iter().map(|&r| r as f64).collect();
 

@@ -2,15 +2,10 @@
 //! ADC-DGD (γ = 1) vs DGD vs DGD^t (t = 3, 5) under (a) constant α and
 //! (b) diminishing α/√k. Y-axis: global objective at the mean iterate.
 
-use super::{paper_four_node_objectives, FigureResult};
-use crate::algorithms::{
-    run_adc_dgd, run_dgd, run_dgd_t, AdcDgdOptions, StepSize,
-};
-use crate::compress::RandomizedRounding;
-use crate::consensus::paper_four_node_w;
-use crate::coordinator::{RunConfig, RunOutput};
+use super::FigureResult;
+use crate::algorithms::{AdcDgdOptions, AlgorithmKind, StepSize};
+use crate::coordinator::{run_scenario, CompressorSpec, RunConfig, RunOutput, ScenarioSpec};
 use crate::metrics::MetricSeries;
-use std::sync::Arc;
 
 /// Parameters.
 #[derive(Debug, Clone, Copy)]
@@ -40,8 +35,6 @@ fn objective_vs_grad_iteration(name: &str, out: &RunOutput) -> MetricSeries {
 
 /// Run the Fig. 5 reproduction.
 pub fn run(p: &Params) -> FigureResult {
-    let (g, w) = paper_four_node_w();
-    let objs = paper_four_node_objectives();
     let schedules: [(&str, StepSize); 2] = [
         ("const", StepSize::Constant(p.alpha)),
         ("dimin", StepSize::Diminishing { alpha0: p.alpha, eta: 0.5 }),
@@ -59,21 +52,20 @@ pub fn run(p: &Params) -> FigureResult {
             record_every: 1,
             ..RunConfig::default()
         };
-        let adc = run_adc_dgd(
-            &g,
-            &w,
-            &objs,
-            Arc::new(RandomizedRounding::new()),
-            &AdcDgdOptions { gamma: 1.0 },
-            &cfg,
+        let adc = run_scenario(
+            &ScenarioSpec::paper4(AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }))
+                .with_compressor(CompressorSpec::RandomizedRounding)
+                .with_config(cfg),
         );
         fr.series.push(objective_vs_grad_iteration(&format!("adc_dgd/{tag}"), &adc));
-        let dgd = run_dgd(&g, &w, &objs, &cfg);
+        let dgd = run_scenario(&ScenarioSpec::paper4(AlgorithmKind::Dgd).with_config(cfg));
         fr.series.push(objective_vs_grad_iteration(&format!("dgd/{tag}"), &dgd));
         for t in [3usize, 5] {
             let mut cfg_t = cfg;
             cfg_t.iterations = p.iterations * t; // same gradient budget
-            let out = run_dgd_t(&g, &w, &objs, t, &cfg_t);
+            let out = run_scenario(
+                &ScenarioSpec::paper4(AlgorithmKind::DgdT { t }).with_config(cfg_t),
+            );
             fr.series.push(objective_vs_grad_iteration(&format!("dgd_t{t}/{tag}"), &out));
         }
     }

@@ -3,13 +3,10 @@
 //! uncompressed 8 B/element (double) — the paper's §V-1 accounting,
 //! implemented by the wire codecs and metered per link by the bus.
 
-use super::{paper_four_node_objectives, FigureResult};
-use crate::algorithms::{run_adc_dgd, run_dgd, run_dgd_t, AdcDgdOptions, StepSize};
-use crate::compress::RandomizedRounding;
-use crate::consensus::paper_four_node_w;
-use crate::coordinator::{RunConfig, RunOutput};
+use super::FigureResult;
+use crate::algorithms::{AdcDgdOptions, AlgorithmKind, StepSize};
+use crate::coordinator::{run_scenario, CompressorSpec, RunConfig, RunOutput, ScenarioSpec};
 use crate::metrics::MetricSeries;
-use std::sync::Arc;
 
 /// Parameters.
 #[derive(Debug, Clone, Copy)]
@@ -37,8 +34,6 @@ fn bytes_vs_grad(name: &str, out: &RunOutput) -> MetricSeries {
 
 /// Run the Fig. 6 reproduction.
 pub fn run(p: &Params) -> FigureResult {
-    let (g, w) = paper_four_node_w();
-    let objs = paper_four_node_objectives();
     let cfg = RunConfig {
         iterations: p.iterations,
         step_size: StepSize::Constant(p.alpha),
@@ -46,36 +41,28 @@ pub fn run(p: &Params) -> FigureResult {
         record_every: 1,
         ..RunConfig::default()
     };
+    let adc_spec = |c: RunConfig| {
+        ScenarioSpec::paper4(AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }))
+            .with_compressor(CompressorSpec::RandomizedRounding)
+            .with_config(c)
+    };
 
     let mut fr = FigureResult { id: "fig6".into(), ..Default::default() };
-    let adc = run_adc_dgd(
-        &g,
-        &w,
-        &objs,
-        Arc::new(RandomizedRounding::new()),
-        &AdcDgdOptions { gamma: 1.0 },
-        &cfg,
-    );
+    let adc = run_scenario(&adc_spec(cfg));
     fr.series.push(bytes_vs_grad("adc_dgd/const", &adc));
     let adc_dim = {
         let mut c = cfg;
         c.step_size = StepSize::Diminishing { alpha0: p.alpha, eta: 0.5 };
-        run_adc_dgd(
-            &g,
-            &w,
-            &objs,
-            Arc::new(RandomizedRounding::new()),
-            &AdcDgdOptions { gamma: 1.0 },
-            &c,
-        )
+        run_scenario(&adc_spec(c))
     };
     fr.series.push(bytes_vs_grad("adc_dgd/dimin", &adc_dim));
-    let dgd = run_dgd(&g, &w, &objs, &cfg);
+    let dgd = run_scenario(&ScenarioSpec::paper4(AlgorithmKind::Dgd).with_config(cfg));
     fr.series.push(bytes_vs_grad("dgd/const", &dgd));
     for t in [3usize, 5] {
         let mut cfg_t = cfg;
         cfg_t.iterations = p.iterations * t;
-        let out = run_dgd_t(&g, &w, &objs, t, &cfg_t);
+        let out =
+            run_scenario(&ScenarioSpec::paper4(AlgorithmKind::DgdT { t }).with_config(cfg_t));
         fr.series.push(bytes_vs_grad(&format!("dgd_t{t}/const"), &out));
     }
 

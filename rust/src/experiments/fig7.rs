@@ -1,13 +1,10 @@
 //! Fig. 7 — effect of the amplifying exponent γ: average objective vs
 //! iteration over repeated trials for γ ∈ {0.6, 0.8, 1.0, 1.2}.
 
-use super::{paper_four_node_objectives, FigureResult};
-use crate::algorithms::{run_adc_dgd, AdcDgdOptions, StepSize};
-use crate::compress::RandomizedRounding;
-use crate::consensus::paper_four_node_w;
-use crate::coordinator::RunConfig;
+use super::FigureResult;
+use crate::algorithms::{AdcDgdOptions, AlgorithmKind, StepSize};
+use crate::coordinator::{CompressorSpec, RunConfig, ScenarioSpec};
 use crate::metrics::{aggregate_mean, MetricSeries};
-use std::sync::Arc;
 
 /// Parameters (paper: 100 trials).
 #[derive(Debug, Clone)]
@@ -38,29 +35,26 @@ impl Default for Params {
 
 /// Run the Fig. 7 reproduction.
 pub fn run(p: &Params) -> FigureResult {
-    let (g, w) = paper_four_node_w();
-    let objs = paper_four_node_objectives();
     let mut fr = FigureResult { id: "fig7".into(), ..Default::default() };
     fr.notes.push(("trials".into(), p.trials.to_string()));
 
+    let base_cfg = RunConfig {
+        iterations: p.iterations,
+        step_size: StepSize::Constant(p.alpha),
+        record_every: 1,
+        ..RunConfig::default()
+    };
     for &gamma in &p.gammas {
+        // Build the network once per γ; only the seed varies per trial.
+        let prepared = ScenarioSpec::paper4(AlgorithmKind::AdcDgd(AdcDgdOptions { gamma }))
+            .with_compressor(CompressorSpec::RandomizedRounding)
+            .with_config(base_cfg)
+            .prepare();
         let mut trials: Vec<Vec<f64>> = Vec::with_capacity(p.trials);
         for t in 0..p.trials {
-            let cfg = RunConfig {
-                iterations: p.iterations,
-                step_size: StepSize::Constant(p.alpha),
-                seed: p.seed.wrapping_add(t as u64),
-                record_every: 1,
-                ..RunConfig::default()
-            };
-            let out = run_adc_dgd(
-                &g,
-                &w,
-                &objs,
-                Arc::new(RandomizedRounding::new()),
-                &AdcDgdOptions { gamma },
-                &cfg,
-            );
+            let mut cfg = base_cfg;
+            cfg.seed = p.seed.wrapping_add(t as u64);
+            let out = prepared.run_with(&cfg);
             trials.push(out.metrics.objective.clone());
         }
         let mean = aggregate_mean(&trials);

@@ -2,43 +2,36 @@
 //! iteration for each γ: the overflow-risk side of the γ trade-off
 //! (Proposition 5: E‖k^γ y‖ = o(k^{γ−1/2})).
 
-use super::{paper_four_node_objectives, FigureResult};
-use crate::algorithms::{run_adc_dgd, AdcDgdOptions, StepSize};
-use crate::compress::RandomizedRounding;
-use crate::consensus::paper_four_node_w;
-use crate::coordinator::RunConfig;
+use super::FigureResult;
+use crate::algorithms::{AdcDgdOptions, AlgorithmKind, StepSize};
+use crate::coordinator::{CompressorSpec, RunConfig, ScenarioSpec};
 use crate::metrics::{aggregate_mean, MetricSeries};
-use std::sync::Arc;
 
 /// Parameters (shared shape with Fig. 7).
 pub type Params = super::fig7::Params;
 
 /// Run the Fig. 8 reproduction.
 pub fn run(p: &Params) -> FigureResult {
-    let (g, w) = paper_four_node_w();
-    let objs = paper_four_node_objectives();
     let mut fr = FigureResult { id: "fig8".into(), ..Default::default() };
     fr.notes.push(("trials".into(), p.trials.to_string()));
 
+    let base_cfg = RunConfig {
+        iterations: p.iterations,
+        step_size: StepSize::Constant(p.alpha),
+        record_every: 1,
+        ..RunConfig::default()
+    };
     for &gamma in &p.gammas {
+        let prepared = ScenarioSpec::paper4(AlgorithmKind::AdcDgd(AdcDgdOptions { gamma }))
+            .with_compressor(CompressorSpec::RandomizedRounding)
+            .with_config(base_cfg)
+            .prepare();
         let mut trials: Vec<Vec<f64>> = Vec::with_capacity(p.trials);
         let mut saturated_total = 0.0;
         for t in 0..p.trials {
-            let cfg = RunConfig {
-                iterations: p.iterations,
-                step_size: StepSize::Constant(p.alpha),
-                seed: p.seed.wrapping_add(t as u64),
-                record_every: 1,
-                ..RunConfig::default()
-            };
-            let out = run_adc_dgd(
-                &g,
-                &w,
-                &objs,
-                Arc::new(RandomizedRounding::new()),
-                &AdcDgdOptions { gamma },
-                &cfg,
-            );
+            let mut cfg = base_cfg;
+            cfg.seed = p.seed.wrapping_add(t as u64);
+            let out = prepared.run_with(&cfg);
             saturated_total += out.metrics.saturations.last().copied().unwrap_or(0.0);
             trials.push(out.metrics.max_transmitted.clone());
         }

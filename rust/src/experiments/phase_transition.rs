@@ -4,13 +4,10 @@
 //! hence overflow risk / dynamic-range cost) keeps growing. Below the
 //! γ = ½ theory threshold convergence degrades or fails.
 
-use super::{paper_four_node_objectives, FigureResult};
-use crate::algorithms::{run_adc_dgd, AdcDgdOptions, StepSize};
-use crate::compress::RandomizedRounding;
-use crate::consensus::paper_four_node_w;
-use crate::coordinator::RunConfig;
+use super::FigureResult;
+use crate::algorithms::{AdcDgdOptions, AlgorithmKind, StepSize};
+use crate::coordinator::{CompressorSpec, RunConfig, ScenarioSpec};
 use crate::metrics::MetricSeries;
-use std::sync::Arc;
 
 /// Parameters.
 #[derive(Debug, Clone)]
@@ -50,33 +47,29 @@ impl Default for Params {
 ///   converged the transmitted value is O(σ) for any γ, so the *peak
 ///   during the transient* is what grows with γ).
 pub fn run(p: &Params) -> FigureResult {
-    let (g, w) = paper_four_node_w();
-    let objs = paper_four_node_objectives();
     let mut fr = FigureResult { id: "phase_transition".into(), ..Default::default() };
     fr.notes.push(("threshold".into(), p.threshold.to_string()));
     fr.notes.push(("trials".into(), p.trials.to_string()));
 
+    let base_cfg = RunConfig {
+        iterations: p.iterations,
+        step_size: StepSize::Constant(p.alpha),
+        record_every: 1,
+        ..RunConfig::default()
+    };
     let mut iters_med = Vec::with_capacity(p.gammas.len());
     let mut tx_med = Vec::with_capacity(p.gammas.len());
     for &gamma in &p.gammas {
+        let prepared = ScenarioSpec::paper4(AlgorithmKind::AdcDgd(AdcDgdOptions { gamma }))
+            .with_compressor(CompressorSpec::RandomizedRounding)
+            .with_config(base_cfg)
+            .prepare();
         let mut iters: Vec<f64> = Vec::with_capacity(p.trials);
         let mut txs: Vec<f64> = Vec::with_capacity(p.trials);
         for t in 0..p.trials {
-            let cfg = RunConfig {
-                iterations: p.iterations,
-                step_size: StepSize::Constant(p.alpha),
-                seed: p.seed.wrapping_add(t as u64),
-                record_every: 1,
-                ..RunConfig::default()
-            };
-            let out = run_adc_dgd(
-                &g,
-                &w,
-                &objs,
-                Arc::new(RandomizedRounding::new()),
-                &AdcDgdOptions { gamma },
-                &cfg,
-            );
+            let mut cfg = base_cfg;
+            cfg.seed = p.seed.wrapping_add(t as u64);
+            let out = prepared.run_with(&cfg);
             let hit = out
                 .metrics
                 .rounds

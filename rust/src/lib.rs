@@ -17,35 +17,58 @@
 //!   matmul hot-spots, checked against a pure-jnp oracle.
 //!
 //! The rust binary executes HLO artifacts through the PJRT C API (`xla`
-//! crate) — python never runs on the request path.
+//! crate) — python never runs on the request path. (Offline builds link
+//! an inert vendored stub that reports PJRT unavailable; artifact-backed
+//! paths self-skip.)
+//!
+//! ## The ScenarioSpec model
+//!
+//! Every run in the crate — experiments, examples, the CLI, tests — is a
+//! *data declaration*: a [`coordinator::ScenarioSpec`] names the
+//! algorithm ([`algorithms::AlgorithmKind`]), topology
+//! ([`coordinator::TopologySpec`]), consensus-weight construction
+//! ([`coordinator::WeightSpec`]), per-node objectives
+//! ([`coordinator::ObjectiveSpec`]), compression operator
+//! ([`coordinator::CompressorSpec`]), and a [`coordinator::RunConfig`]
+//! (iterations, step schedule, seed, link model, engine). The single
+//! execution entry point [`coordinator::run_scenario`] materializes the
+//! spec through the [`algorithms::AlgorithmKind`] node-factory registry
+//! and executes it on the selected engine:
+//!
+//! | Engine | Threads | Use case |
+//! |---|---|---|
+//! | [`EngineKind::Sequential`] | 1 | reference semantics, tests |
+//! | [`EngineKind::Threaded`] | one per node | real contention, small n |
+//! | [`EngineKind::Pool`] | `min(num_cpus, n)` sharded workers | large n |
+//!
+//! All engines are bit-identical given the same seeds (per-node RNG
+//! streams, stateless-hash loss injection, sender-sorted reduction).
+//! For repeated trials, [`coordinator::ScenarioSpec::prepare`] builds
+//! the graph/weights/objectives once and
+//! [`coordinator::PreparedScenario::run_with`] reruns cheaply.
+//!
+//! [`EngineKind::Sequential`]: coordinator::EngineKind::Sequential
+//! [`EngineKind::Threaded`]: coordinator::EngineKind::Threaded
+//! [`EngineKind::Pool`]: coordinator::EngineKind::Pool
 //!
 //! ## Example
 //!
-//! Solve the paper's four-node consensus problem with ADC-DGD
-//! (`no_run`: rustdoc test binaries don't inherit the rpath to
-//! `libxla_extension.so`; the same flow executes in
+//! Solve the paper's four-node consensus problem with ADC-DGD (`no_run`
+//! to keep `cargo test` fast; the same flow executes in
 //! `examples/quickstart.rs` and the integration tests):
 //!
 //! ```no_run
 //! use adcdgd::prelude::*;
-//! use std::sync::Arc;
 //!
-//! let (graph, w) = paper_four_node_w();
-//! let objectives = adcdgd::experiments::paper_four_node_objectives();
-//! let cfg = RunConfig {
-//!     iterations: 600,
-//!     step_size: StepSize::Constant(0.02),
-//!     record_every: 100,
-//!     ..RunConfig::default()
-//! };
-//! let out = run_adc_dgd(
-//!     &graph,
-//!     &w,
-//!     &objectives,
-//!     Arc::new(RandomizedRounding::new()),
-//!     &AdcDgdOptions { gamma: 1.0 },
-//!     &cfg,
-//! );
+//! let spec = ScenarioSpec::paper4(AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }))
+//!     .with_compressor(CompressorSpec::RandomizedRounding)
+//!     .with_config(RunConfig {
+//!         iterations: 600,
+//!         step_size: StepSize::Constant(0.02),
+//!         record_every: 100,
+//!         ..RunConfig::default()
+//!     });
+//! let out = run_scenario(&spec);
 //! // Converges to the paper's optimum f* ≈ 0.292 while sending
 //! // 2 B/element instead of DGD's 8.
 //! assert!((out.metrics.objective.last().unwrap() - 0.292).abs() < 0.01);
@@ -70,16 +93,22 @@ pub mod util;
 
 /// Convenient glob-import surface.
 pub mod prelude {
+    #[allow(deprecated)]
     pub use crate::algorithms::{
-        run_adc_dgd, run_dgd, run_dgd_t, run_naive_compressed, run_qdgd, AdcDgdOptions,
-        CompressorRef, ObjectiveRef, QdgdOptions, StepSize,
+        run_adc_dgd, run_dgd, run_dgd_t, run_naive_compressed, run_qdgd,
+    };
+    pub use crate::algorithms::{
+        AdcDgdOptions, AlgorithmKind, CompressorRef, ObjectiveRef, QdgdOptions, StepSize,
     };
     pub use crate::compress::{
         Compressor, Identity, LowPrecisionQuantizer, Qsgd, QuantizationSparsifier,
         RandomizedRounding, TernGrad,
     };
     pub use crate::consensus::{metropolis, paper_four_node_w, ConsensusMatrix};
-    pub use crate::coordinator::{EngineKind, RunConfig, RunOutput};
+    pub use crate::coordinator::{
+        run_scenario, CompressorSpec, EngineKind, ObjectiveSpec, PreparedScenario, RunConfig,
+        RunOutput, ScenarioSpec, TopologySpec, WeightSpec,
+    };
     pub use crate::objective::{Objective, ScalarQuadratic};
     pub use crate::rng::Xoshiro256pp;
     pub use crate::topology::Graph;

@@ -8,7 +8,10 @@
 //! * `solve` — run one algorithm on a chosen topology/objective family
 //!   (`--algo adc|dgd|dgdt|naive|qdgd`, `--topology ring|star|complete|
 //!   grid|er|ba|paper4`, `--n`, `--gamma`, `--alpha`, `--eta`,
-//!   `--iters`, `--engine seq|threaded`, `--drop-prob`).
+//!   `--iters`, `--engine seq|threaded|pool`, `--workers`,
+//!   `--compressor randround|identity|lowprec|sparsifier|terngrad|qsgd`,
+//!   `--drop-prob`). Every solve is a `ScenarioSpec` run through
+//!   `run_scenario` — the CLI only assembles the declaration.
 //! * `train` — decentralized ML training from an AOT artifact
 //!   (`--artifacts <dir>`, `--model logistic|transformer`, see
 //!   `runtime` docs).
@@ -17,7 +20,6 @@
 use adcdgd::prelude::*;
 use adcdgd::util::args::Args;
 use adcdgd::{consensus, experiments, topology};
-use std::sync::Arc;
 
 fn main() {
     let args = match Args::from_env() {
@@ -181,35 +183,18 @@ fn cmd_solve(args: &Args) -> i32 {
     let n = args.get::<usize>("n", 10).unwrap();
     let topo = args.get_str("topology", "ring");
     let seed = args.get::<u64>("seed", 0).unwrap();
-    let g = match topo.as_str() {
-        "ring" => topology::ring(n),
-        "star" => topology::star(n),
-        "complete" => topology::complete(n),
-        "path" => topology::path(n),
-        "grid" => {
-            let side = (n as f64).sqrt().ceil() as usize;
-            topology::grid2d(side, n.div_ceil(side))
-        }
-        "er" => topology::erdos_renyi(n, 0.3, seed),
-        "ba" => topology::barabasi_albert(n, 2, seed),
-        "paper4" => topology::paper_four_node(),
-        other => {
-            eprintln!("unknown topology {other}");
+    let topology_spec = match TopologySpec::parse(&topo, n, seed) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
             return 2;
         }
     };
-    let n = g.num_nodes();
-    let w = if topo == "paper4" {
-        consensus::paper_four_node_w().1
-    } else {
-        consensus::metropolis(&g)
-    };
     // Random scalar quadratics (Fig. 10 family) unless paper4.
-    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x0BEC);
-    let objs: Vec<ObjectiveRef> = if topo == "paper4" {
-        experiments::paper_four_node_objectives()
+    let objective = if topo == "paper4" {
+        ObjectiveSpec::PaperFourNode
     } else {
-        experiments::random_circle_objectives(n, &mut rng)
+        ObjectiveSpec::RandomCircle { seed: seed ^ 0x0BEC }
     };
 
     let alpha = args.get::<f64>("alpha", 0.01).unwrap();
@@ -226,6 +211,7 @@ fn cmd_solve(args: &Args) -> i32 {
         record_every: args.get::<usize>("record-every", 10).unwrap(),
         engine: match args.get_str("engine", "seq").as_str() {
             "threaded" => EngineKind::Threaded,
+            "pool" => EngineKind::Pool { workers: args.get::<usize>("workers", 0).unwrap() },
             _ => EngineKind::Sequential,
         },
         link: adcdgd::network::LinkModel {
@@ -236,21 +222,43 @@ fn cmd_solve(args: &Args) -> i32 {
     };
     let gamma = args.get::<f64>("gamma", 1.0).unwrap();
     let algo = args.get_str("algo", "adc");
-    let comp: CompressorRef = Arc::new(RandomizedRounding::new());
-    let out = match algo.as_str() {
-        "adc" => run_adc_dgd(&g, &w, &objs, comp, &AdcDgdOptions { gamma }, &cfg),
-        "dgd" => run_dgd(&g, &w, &objs, &cfg),
-        "dgdt" => run_dgd_t(&g, &w, &objs, args.get::<usize>("t", 3).unwrap(), &cfg),
-        "naive" => run_naive_compressed(&g, &w, &objs, comp, &cfg),
-        "qdgd" => run_qdgd(&g, &w, &objs, comp, &QdgdOptions::default(), &cfg),
-        other => {
-            eprintln!("unknown algorithm {other}");
-            return 2;
+    let algorithm =
+        match AlgorithmKind::parse(&algo, args.get::<usize>("t", 3).unwrap(), gamma) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+    let compressor = if algorithm.needs_compressor() {
+        match CompressorSpec::parse(
+            &args.get_str("compressor", "randround"),
+            args.get::<f64>("delta", 1.0 / 64.0).unwrap(),
+            args.get::<usize>("levels", 64).unwrap(),
+        ) {
+            Ok(CompressorSpec::None) => {
+                eprintln!("algorithm {algo} requires a compressor (try --compressor randround)");
+                return 2;
+            }
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
         }
+    } else {
+        CompressorSpec::None
     };
+
+    let spec = ScenarioSpec::new(algorithm, topology_spec, objective)
+        .with_compressor(compressor)
+        .with_config(cfg);
+    let prepared = spec.prepare();
+    let n = prepared.graph().num_nodes();
+    let out = prepared.run();
     println!(
         "algo={algo} topology={topo} n={n} beta={:.4} rounds={} bytes={} dropped={} sim_time={:.3}s",
-        w.beta(),
+        prepared.weights().beta(),
         out.rounds_completed,
         out.total_bytes,
         out.dropped_messages,

@@ -6,12 +6,11 @@ use super::artifact::{read_f32_blob, Manifest};
 use super::corpus::TokenGen;
 use super::objectives::{TransformerObjective, XlaLogistic};
 use super::Runtime;
-use crate::algorithms::{AdcDgdNode, AdcDgdOptions, DgdNode, NodeLogic, ObjectiveRef, StepSize};
-use crate::compress::{LowPrecisionQuantizer, Qsgd, RandomizedRounding, TernGrad};
-use crate::consensus::metropolis;
-use crate::coordinator::{run_nodes, RunConfig};
+use crate::algorithms::{AdcDgdOptions, AlgorithmKind, ObjectiveRef, StepSize};
+use crate::coordinator::{
+    run_scenario, CompressorSpec, ObjectiveSpec, RunConfig, ScenarioSpec, TopologySpec,
+};
 use crate::rng::{Normal, Xoshiro256pp};
-use crate::topology;
 use anyhow::{bail, Result};
 use std::path::Path;
 use std::sync::Arc;
@@ -139,14 +138,14 @@ impl TrainReport {
     }
 }
 
-fn make_compressor(name: &str) -> Result<crate::algorithms::CompressorRef> {
+fn make_compressor(name: &str) -> Result<CompressorSpec> {
     Ok(match name {
         // 2 B/elt grid with Δ = 2^-10: fine enough that the Def.-1 noise
         // σ = Δ/2 ≈ 5e-4 does not swamp parameter-scale (~0.02) values.
-        "lowprec" => Arc::new(LowPrecisionQuantizer::new(1.0 / 1024.0)),
-        "randround" => Arc::new(RandomizedRounding::new()),
-        "qsgd" => Arc::new(Qsgd::new(8192)),
-        "terngrad" => Arc::new(TernGrad::new()),
+        "lowprec" => CompressorSpec::LowPrecision { delta: 1.0 / 1024.0 },
+        "randround" => CompressorSpec::RandomizedRounding,
+        "qsgd" => CompressorSpec::Qsgd { levels: 8192 },
+        "terngrad" => CompressorSpec::TernGrad,
         other => bail!("unknown compressor {other}"),
     })
 }
@@ -168,9 +167,7 @@ pub fn train_decentralized(dir: &Path, p: &TrainParams) -> Result<TrainReport> {
     let t0 = Instant::now();
     let rt = Runtime::cpu()?;
     let manifest = Manifest::load(dir)?;
-    let g = topology::ring(p.nodes.max(2));
-    let w = metropolis(&g);
-    let n = g.num_nodes();
+    let n = p.nodes.max(2);
     let comp = make_compressor(&p.compressor)?;
 
     // Build per-node objectives + shared init.
@@ -237,24 +234,22 @@ pub fn train_decentralized(dir: &Path, p: &TrainParams) -> Result<TrainReport> {
         ..RunConfig::default()
     };
 
-    // ADC-DGD nodes with shared warm init.
-    let nodes: Vec<Box<dyn NodeLogic>> = (0..n)
-        .map(|i| {
-            Box::new(
-                AdcDgdNode::new(
-                    i,
-                    w.row(i).to_vec(),
-                    g.neighbors(i).to_vec(),
-                    objectives[i].clone(),
-                    comp.clone(),
-                    cfg.step_size,
-                    AdcDgdOptions { gamma: p.gamma },
-                )
-                .with_init(x0.clone()),
-            ) as Box<dyn NodeLogic>
-        })
-        .collect();
-    let out = run_nodes(&g, &objectives, nodes, &cfg);
+    // ADC-DGD over a Metropolis ring with shared warm init — one
+    // scenario declaration, executed by the common pathway.
+    let spec = |algorithm: AlgorithmKind, compressor: CompressorSpec| {
+        ScenarioSpec::new(
+            algorithm,
+            TopologySpec::Ring(n),
+            ObjectiveSpec::Custom(objectives.clone()),
+        )
+        .with_compressor(compressor)
+        .with_config(cfg)
+        .with_init(x0.clone())
+    };
+    let out = run_scenario(&spec(
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: p.gamma }),
+        comp,
+    ));
     let mut points = points_from(&out);
     // Report mean per-node loss rather than the sum.
     for pt in points.iter_mut() {
@@ -263,15 +258,7 @@ pub fn train_decentralized(dir: &Path, p: &TrainParams) -> Result<TrainReport> {
 
     // Optional uncompressed-DGD baseline.
     let (baseline, baseline_bytes) = if p.baseline_dgd {
-        let nodes: Vec<Box<dyn NodeLogic>> = (0..n)
-            .map(|i| {
-                Box::new(
-                    DgdNode::new(i, w.row(i).to_vec(), objectives[i].clone(), cfg.step_size)
-                        .with_init(x0.clone()),
-                ) as Box<dyn NodeLogic>
-            })
-            .collect();
-        let bout = run_nodes(&g, &objectives, nodes, &cfg);
+        let bout = run_scenario(&spec(AlgorithmKind::Dgd, CompressorSpec::None));
         let mut bpts = points_from(&bout);
         for pt in bpts.iter_mut() {
             pt.loss /= n as f64;

@@ -72,6 +72,40 @@ fn solve_threaded_engine_works() {
 }
 
 #[test]
+fn solve_pool_engine_matches_sequential() {
+    let args = |engine: &str| {
+        vec![
+            "solve", "--algo", "adc", "--topology", "ring", "--n", "12", "--iters", "200",
+            "--record-every", "100", "--engine", engine, "--workers", "3",
+        ]
+    };
+    let (seq_out, _, seq_ok) = run(&args("seq"));
+    let (pool_out, _, pool_ok) = run(&args("pool"));
+    assert!(seq_ok, "{seq_out}");
+    assert!(pool_ok, "{pool_out}");
+    // Engines are bit-identical, so the printed metric lines must match
+    // exactly (the header line differs only in nothing — same spec).
+    assert_eq!(seq_out, pool_out, "pool output must match sequential");
+}
+
+#[test]
+fn solve_compressor_option_changes_bytes() {
+    let base = |comp: &str| {
+        let (out, _, ok) = run(&[
+            "solve", "--algo", "adc", "--topology", "ring", "--n", "6", "--iters", "100",
+            "--record-every", "100", "--compressor", comp,
+        ]);
+        assert!(ok, "{out}");
+        out
+    };
+    let rr = base("randround");
+    let tern = base("terngrad");
+    assert!(rr.contains("algo=adc") && tern.contains("algo=adc"));
+    // Different wire encodings must meter different byte totals.
+    assert_ne!(rr, tern);
+}
+
+#[test]
 fn run_writes_csv_when_out_given() {
     let dir = std::env::temp_dir().join(format!("adcdgd_cli_{}", std::process::id()));
     let (out, _, ok) = run(&[

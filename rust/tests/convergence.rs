@@ -1,6 +1,11 @@
 //! Integration: end-to-end convergence claims across algorithm ×
 //! topology × compressor combinations (the paper's Theorems 1–3
 //! checked empirically on the full stack).
+//!
+//! Deliberately exercises the deprecated `run_*` wrappers: they are the
+//! compatibility surface over `run_scenario`, so these convergence
+//! claims double as regression coverage for that pathway.
+#![allow(deprecated)]
 
 use adcdgd::algorithms::{
     run_adc_dgd, run_dgd, run_naive_compressed, run_qdgd, AdcDgdOptions, CompressorRef,

@@ -1,26 +1,14 @@
-//! The threaded engine must be bit-identical to the sequential engine:
-//! per-node RNG streams are thread-owned and loss injection is a
-//! stateless hash, so scheduling cannot leak into results.
+//! The threaded and pool engines must be bit-identical to the sequential
+//! engine: per-node RNG streams are engine-owned per node, loss injection
+//! is a stateless hash, and inboxes are sorted by sender before the
+//! floating-point reduction — so scheduling cannot leak into results.
 
-use adcdgd::algorithms::{
-    run_adc_dgd, run_dgd_t, run_qdgd, AdcDgdOptions, ObjectiveRef, QdgdOptions, StepSize,
+use adcdgd::algorithms::{AdcDgdOptions, AlgorithmKind, QdgdOptions};
+use adcdgd::algorithms::StepSize;
+use adcdgd::coordinator::{
+    CompressorSpec, EngineKind, ObjectiveSpec, RunConfig, RunOutput, ScenarioSpec, TopologySpec,
 };
-use adcdgd::compress::RandomizedRounding;
-use adcdgd::consensus::metropolis;
-use adcdgd::coordinator::{EngineKind, RunConfig};
-use adcdgd::experiments::random_circle_objectives;
 use adcdgd::network::LinkModel;
-use adcdgd::rng::Xoshiro256pp;
-use adcdgd::topology;
-use std::sync::Arc;
-
-fn setup(n: usize) -> (adcdgd::topology::Graph, adcdgd::consensus::ConsensusMatrix, Vec<ObjectiveRef>) {
-    let g = topology::ring(n);
-    let w = metropolis(&g);
-    let mut rng = Xoshiro256pp::seed_from_u64(77);
-    let objs = random_circle_objectives(n, &mut rng);
-    (g, w, objs)
-}
 
 fn cfg(engine: EngineKind, drop_prob: f64) -> RunConfig {
     RunConfig {
@@ -34,9 +22,170 @@ fn cfg(engine: EngineKind, drop_prob: f64) -> RunConfig {
     }
 }
 
+fn ring_spec(n: usize, algorithm: AlgorithmKind, compressor: CompressorSpec) -> ScenarioSpec {
+    ScenarioSpec::new(
+        algorithm,
+        TopologySpec::Ring(n),
+        ObjectiveSpec::RandomCircle { seed: 77 },
+    )
+    .with_compressor(compressor)
+}
+
+fn assert_identical(a: &RunOutput, b: &RunOutput, label: &str) {
+    assert_eq!(a.final_states, b.final_states, "{label}: final states");
+    assert_eq!(a.total_bytes, b.total_bytes, "{label}: bytes");
+    assert_eq!(a.dropped_messages, b.dropped_messages, "{label}: drops");
+    assert_eq!(a.rounds_completed, b.rounds_completed, "{label}: rounds");
+    assert_eq!(a.metrics.grad_norm, b.metrics.grad_norm, "{label}: grad norm");
+    assert_eq!(a.metrics.objective, b.metrics.objective, "{label}: objective");
+    assert_eq!(
+        a.metrics.consensus_error, b.metrics.consensus_error,
+        "{label}: consensus error"
+    );
+    assert_eq!(a.metrics.saturations, b.metrics.saturations, "{label}: saturations");
+}
+
+/// The tentpole equivalence: sequential ↔ threaded ↔ pool bit-identical
+/// on a 16-node ring running ADC-DGD with ternary compression.
 #[test]
-fn adc_dgd_engines_bit_identical() {
-    let (g, w, objs) = setup(6);
+fn all_engines_bit_identical_ring16_adc_ternary() {
+    let spec = ring_spec(
+        16,
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        CompressorSpec::TernGrad,
+    );
+    let prepared = spec.prepare();
+    let seq = prepared.run_with(&cfg(EngineKind::Sequential, 0.0));
+    let thr = prepared.run_with(&cfg(EngineKind::Threaded, 0.0));
+    let pool = prepared.run_with(&cfg(EngineKind::pool(), 0.0));
+    assert_identical(&seq, &thr, "threaded");
+    assert_identical(&seq, &pool, "pool");
+}
+
+/// Pool results must not depend on the worker count, including counts
+/// that do not divide the node count evenly.
+#[test]
+fn pool_is_invariant_to_worker_count() {
+    let spec = ring_spec(
+        16,
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        CompressorSpec::RandomizedRounding,
+    );
+    let prepared = spec.prepare();
+    let reference = prepared.run_with(&cfg(EngineKind::Sequential, 0.0));
+    for workers in [1usize, 2, 3, 5, 16, 64] {
+        let out = prepared.run_with(&cfg(EngineKind::Pool { workers }, 0.0));
+        assert_identical(&reference, &out, &format!("pool workers={workers}"));
+    }
+}
+
+#[test]
+fn engines_agree_under_message_loss() {
+    let spec = ring_spec(
+        5,
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        CompressorSpec::RandomizedRounding,
+    );
+    let prepared = spec.prepare();
+    let a = prepared.run_with(&cfg(EngineKind::Sequential, 0.10));
+    let b = prepared.run_with(&cfg(EngineKind::Threaded, 0.10));
+    let c = prepared.run_with(&cfg(EngineKind::Pool { workers: 2 }, 0.10));
+    assert!(a.dropped_messages > 0);
+    assert_identical(&a, &b, "threaded+loss");
+    assert_identical(&a, &c, "pool+loss");
+}
+
+#[test]
+fn dgd_t_and_qdgd_engines_agree() {
+    for (algorithm, compressor) in [
+        (AlgorithmKind::DgdT { t: 3 }, CompressorSpec::None),
+        (AlgorithmKind::Qdgd(QdgdOptions::default()), CompressorSpec::RandomizedRounding),
+    ] {
+        let prepared = ring_spec(4, algorithm, compressor).prepare();
+        let a = prepared.run_with(&cfg(EngineKind::Sequential, 0.0));
+        let b = prepared.run_with(&cfg(EngineKind::Threaded, 0.0));
+        let c = prepared.run_with(&cfg(EngineKind::pool(), 0.0));
+        assert_identical(&a, &b, algorithm.name());
+        assert_identical(&a, &c, algorithm.name());
+    }
+}
+
+/// Early stop via `grad_tol` must trigger at the same round on all
+/// engines (the pool engine observes every round in this mode).
+/// Homogeneous objectives: no consensus bias, so DGD's gradient norm at
+/// x̄ decays geometrically and the tolerance is reachable.
+#[test]
+fn grad_tol_early_stop_is_engine_invariant() {
+    use adcdgd::algorithms::ObjectiveRef;
+    use adcdgd::objective::ScalarQuadratic;
+    use std::sync::Arc;
+    let objs: Vec<ObjectiveRef> =
+        (0..6).map(|_| Arc::new(ScalarQuadratic::new(1.0, 1.0)) as ObjectiveRef).collect();
+    let spec = ScenarioSpec::new(
+        AlgorithmKind::Dgd,
+        TopologySpec::Ring(6),
+        ObjectiveSpec::Custom(objs),
+    );
+    let prepared = spec.prepare();
+    let run = |engine| {
+        let mut c = cfg(engine, 0.0);
+        c.iterations = 50_000;
+        c.grad_tol = Some(1e-3);
+        c.record_every = 1;
+        prepared.run_with(&c)
+    };
+    let seq = run(EngineKind::Sequential);
+    let pool = run(EngineKind::pool());
+    assert!(seq.rounds_completed < 50_000, "should stop early");
+    assert_eq!(seq.rounds_completed, pool.rounds_completed);
+    assert_eq!(seq.final_states, pool.final_states);
+}
+
+#[test]
+fn pool_engine_scales_to_many_nodes() {
+    let spec = ring_spec(
+        512,
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        CompressorSpec::RandomizedRounding,
+    );
+    let prepared = spec.prepare();
+    let mut c = cfg(EngineKind::pool(), 0.0);
+    c.iterations = 50;
+    c.record_every = 50;
+    let out = prepared.run_with(&c);
+    assert_eq!(out.rounds_completed, 50);
+    assert!(out.metrics.grad_norm.last().unwrap().is_finite());
+}
+
+#[test]
+fn threaded_engine_scales_to_many_nodes() {
+    let spec = ring_spec(
+        24,
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        CompressorSpec::RandomizedRounding,
+    );
+    let out = spec.prepare().run_with(&cfg(EngineKind::Threaded, 0.0));
+    assert_eq!(out.rounds_completed, 300);
+    assert!(out.metrics.grad_norm.last().unwrap().is_finite());
+}
+
+/// The deprecated wrappers must route through the same pathway and stay
+/// engine-invariant (compatibility surface for external callers).
+#[allow(deprecated)]
+#[test]
+fn legacy_wrappers_remain_engine_invariant() {
+    use adcdgd::algorithms::run_adc_dgd;
+    use adcdgd::compress::RandomizedRounding;
+    use adcdgd::consensus::metropolis;
+    use adcdgd::experiments::random_circle_objectives;
+    use adcdgd::rng::Xoshiro256pp;
+    use adcdgd::topology;
+    use std::sync::Arc;
+
+    let g = topology::ring(6);
+    let w = metropolis(&g);
+    let mut rng = Xoshiro256pp::seed_from_u64(77);
+    let objs = random_circle_objectives(6, &mut rng);
     let run = |engine| {
         run_adc_dgd(
             &g,
@@ -48,69 +197,6 @@ fn adc_dgd_engines_bit_identical() {
         )
     };
     let a = run(EngineKind::Sequential);
-    let b = run(EngineKind::Threaded);
-    assert_eq!(a.final_states, b.final_states);
-    assert_eq!(a.total_bytes, b.total_bytes);
-    assert_eq!(a.metrics.grad_norm, b.metrics.grad_norm);
-    assert_eq!(a.metrics.objective, b.metrics.objective);
-}
-
-#[test]
-fn engines_agree_under_message_loss() {
-    let (g, w, objs) = setup(5);
-    let run = |engine| {
-        run_adc_dgd(
-            &g,
-            &w,
-            &objs,
-            Arc::new(RandomizedRounding::new()),
-            &AdcDgdOptions { gamma: 1.0 },
-            &cfg(engine, 0.10),
-        )
-    };
-    let a = run(EngineKind::Sequential);
-    let b = run(EngineKind::Threaded);
-    assert!(a.dropped_messages > 0);
-    assert_eq!(a.dropped_messages, b.dropped_messages);
-    assert_eq!(a.final_states, b.final_states);
-}
-
-#[test]
-fn dgd_t_and_qdgd_engines_agree() {
-    let (g, w, objs) = setup(4);
-    let a = run_dgd_t(&g, &w, &objs, 3, &cfg(EngineKind::Sequential, 0.0));
-    let b = run_dgd_t(&g, &w, &objs, 3, &cfg(EngineKind::Threaded, 0.0));
-    assert_eq!(a.final_states, b.final_states);
-    let qa = run_qdgd(
-        &g,
-        &w,
-        &objs,
-        Arc::new(RandomizedRounding::new()),
-        &QdgdOptions::default(),
-        &cfg(EngineKind::Sequential, 0.0),
-    );
-    let qb = run_qdgd(
-        &g,
-        &w,
-        &objs,
-        Arc::new(RandomizedRounding::new()),
-        &QdgdOptions::default(),
-        &cfg(EngineKind::Threaded, 0.0),
-    );
-    assert_eq!(qa.final_states, qb.final_states);
-}
-
-#[test]
-fn threaded_engine_scales_to_many_nodes() {
-    let (g, w, objs) = setup(24);
-    let out = run_adc_dgd(
-        &g,
-        &w,
-        &objs,
-        Arc::new(RandomizedRounding::new()),
-        &AdcDgdOptions { gamma: 1.0 },
-        &cfg(EngineKind::Threaded, 0.0),
-    );
-    assert_eq!(out.rounds_completed, 300);
-    assert!(out.metrics.grad_norm.last().unwrap().is_finite());
+    let b = run(EngineKind::pool());
+    assert_identical(&a, &b, "legacy wrapper");
 }

@@ -261,6 +261,180 @@ fn random_json(rng: &mut Xoshiro256pp, depth: usize) -> json::Json {
     }
 }
 
+/// Random payloads of every kind round-trip through decode /
+/// decode_into / decode_axpy consistently, with byte accounting matching
+/// the declared wire formats.
+#[test]
+fn prop_payload_roundtrip_all_kinds() {
+    use adcdgd::compress::PayloadKind;
+    let mut rng = Xoshiro256pp::seed_from_u64(110);
+    for _ in 0..60 {
+        let p = 1 + rng.next_bounded(200) as usize;
+        let scale = 0.01 + rng.next_f64() * 4.0;
+        // One random payload per kind, plus the expected dense decode.
+        let mut cases: Vec<(Payload, Vec<f64>, usize)> = Vec::new();
+        let f64s: Vec<f64> = (0..p).map(|_| (rng.next_f64() - 0.5) * 100.0).collect();
+        cases.push((Payload::F64(f64s.clone()), f64s.clone(), 8 * p));
+        let f32s: Vec<f32> = (0..p).map(|_| (rng.next_f64() as f32 - 0.5) * 10.0).collect();
+        cases.push((
+            Payload::F32(f32s.clone()),
+            f32s.iter().map(|&v| v as f64).collect(),
+            4 * p,
+        ));
+        let i16s: Vec<i16> = (0..p).map(|_| rng.next_bounded(65536) as i64 as i16).collect();
+        cases.push((
+            Payload::I16 { scale, data: i16s.clone() },
+            i16s.iter().map(|&q| scale * q as f64).collect(),
+            2 * p,
+        ));
+        let i8s: Vec<i8> = (0..p).map(|_| rng.next_bounded(256) as i64 as i8).collect();
+        cases.push((
+            Payload::I8 { scale, data: i8s.clone() },
+            i8s.iter().map(|&q| scale * q as f64).collect(),
+            p,
+        ));
+        // Sparse: a random subset of strictly increasing indices.
+        let mut idx: Vec<u32> = Vec::new();
+        let mut val: Vec<i16> = Vec::new();
+        let mut expected = vec![0.0; p];
+        for i in 0..p {
+            if rng.next_f64() < 0.3 {
+                let q = rng.next_bounded(65536) as i64 as i16;
+                idx.push(i as u32);
+                val.push(q);
+                expected[i] = scale * q as f64;
+            }
+        }
+        let stored = idx.len();
+        cases.push((
+            Payload::SparseI16 { len: p, scale, idx, val },
+            expected,
+            4 * stored + 2 * stored,
+        ));
+        let tern: Vec<i8> = (0..p).map(|_| (rng.next_bounded(3) as i8) - 1).collect();
+        cases.push((
+            Payload::pack_ternary(p, scale, &tern),
+            tern.iter().map(|&t| scale * t as f64).collect(),
+            8 + p.div_ceil(4),
+        ));
+
+        for (payload, expected, wire) in cases {
+            let kind = payload.kind();
+            assert_eq!(payload.len(), p, "{kind:?}: len");
+            assert!(!payload.is_empty(), "{kind:?}: is_empty");
+            assert_eq!(payload.wire_bytes(), wire, "{kind:?}: wire bytes");
+            let dec = payload.decode();
+            assert_eq!(dec, expected, "{kind:?}: decode");
+            let mut buf = vec![f64::NAN; p];
+            payload.decode_into(&mut buf);
+            assert_eq!(buf, dec, "{kind:?}: decode_into");
+            // decode_axpy must equal decode-then-axpy exactly for the
+            // pure-accumulate kinds; integer-scaled kinds may reassociate
+            // (c = outer*scale), so allow 1-ulp-scale slack there.
+            let c = 0.5 + rng.next_f64();
+            let mut fused: Vec<f64> = (0..p).map(|i| i as f64).collect();
+            payload.decode_axpy(c, &mut fused);
+            for i in 0..p {
+                let reference = i as f64 + c * dec[i];
+                let tol = 1e-12 * (1.0 + reference.abs());
+                assert!(
+                    (fused[i] - reference).abs() <= tol,
+                    "{kind:?}: decode_axpy[{i}] {} vs {reference}",
+                    fused[i]
+                );
+            }
+            // Kind tags are stable.
+            assert!(matches!(
+                kind,
+                PayloadKind::F64
+                    | PayloadKind::F32
+                    | PayloadKind::I16
+                    | PayloadKind::I8
+                    | PayloadKind::SparseI16
+                    | PayloadKind::Ternary
+            ));
+        }
+    }
+}
+
+/// Saturation edge cases at the exact int16 boundary: values on the
+/// boundary encode exactly without being flagged; values beyond it clamp
+/// to the boundary and are counted.
+#[test]
+fn prop_codec_saturation_edges() {
+    let op = RandomizedRounding::new();
+    let mut rng = Xoshiro256pp::seed_from_u64(111);
+    // Exact boundaries: representable, never saturate, decode exactly.
+    let z = vec![i16::MAX as f64, i16::MIN as f64, 0.0];
+    for _ in 0..50 {
+        let c = op.compress(&z, &mut rng);
+        assert_eq!(c.saturated, 0, "boundary values must not saturate");
+        assert_eq!(c.decode(), z);
+    }
+    // One past the boundary: always saturates, decodes to the clamp.
+    let z = vec![i16::MAX as f64 + 1.0, i16::MIN as f64 - 1.0];
+    for _ in 0..50 {
+        let c = op.compress(&z, &mut rng);
+        assert_eq!(c.saturated, 2);
+        assert_eq!(c.decode(), vec![i16::MAX as f64, i16::MIN as f64]);
+    }
+    // Fractional values straddling the boundary may or may not round
+    // over it, but a saturated element always decodes to the clamp and
+    // the count matches the overflowed elements.
+    let z = vec![i16::MAX as f64 - 0.5, i16::MIN as f64 + 0.5];
+    for _ in 0..200 {
+        let c = op.compress(&z, &mut rng);
+        assert!(c.saturated == 0, "rounding within range must not saturate");
+        let dec = c.decode();
+        assert!(dec[0] >= i16::MAX as f64 - 1.0 && dec[0] <= i16::MAX as f64);
+        assert!(dec[1] <= i16::MIN as f64 + 1.0 && dec[1] >= i16::MIN as f64);
+    }
+    // The grid quantizer saturates in *grid units*: with Δ = 0.5 the
+    // range halves.
+    let lp = LowPrecisionQuantizer::new(0.5);
+    let c = lp.compress(&[0.5 * i16::MAX as f64 + 2.0], &mut rng);
+    assert_eq!(c.saturated, 1);
+    assert_eq!(c.decode()[0], 0.5 * i16::MAX as f64);
+    // QSGD with > 127 levels uses the i16 wire and cannot overflow it
+    // for in-range inputs (q ≤ levels ≪ i16::MAX).
+    let q = Qsgd::new(1000);
+    let c = q.compress(&[3.0, -4.0], &mut rng);
+    assert_eq!(c.saturated, 0);
+    assert!(matches!(c.payload, Payload::I16 { .. }));
+    // The sparsifier counts out-of-domain clamps as saturation.
+    let sp = QuantizationSparsifier::new(1.0, 4);
+    let mut saw_saturation = false;
+    for _ in 0..50 {
+        let c = sp.compress(&[5.0], &mut rng);
+        if c.saturated > 0 {
+            saw_saturation = true;
+        }
+    }
+    assert!(saw_saturation, "out-of-domain values must be flagged");
+}
+
+/// Ternary packing edge cases: lengths not divisible by 4, single
+/// elements, and the all-zero scale.
+#[test]
+fn prop_ternary_pack_edges() {
+    for p in [1usize, 2, 3, 4, 5, 7, 8, 9] {
+        let t: Vec<i8> = (0..p).map(|i| ((i % 3) as i8) - 1).collect();
+        let payload = Payload::pack_ternary(p, 1.5, &t);
+        assert_eq!(payload.len(), p);
+        assert_eq!(payload.wire_bytes(), 8 + p.div_ceil(4));
+        let dec = payload.decode();
+        for (a, b) in t.iter().zip(dec.iter()) {
+            assert_eq!(1.5 * *a as f64, *b, "p={p}");
+        }
+    }
+    // Zero scale decodes to exact zeros.
+    let z = Payload::pack_ternary(5, 0.0, &[1, -1, 0, 1, -1]);
+    assert_eq!(z.decode(), vec![0.0; 5]);
+    // Out-of-range ternary values are rejected loudly.
+    let r = std::panic::catch_unwind(|| Payload::pack_ternary(2, 1.0, &[2, 0]));
+    assert!(r.is_err(), "ternary packing must reject |t| > 1");
+}
+
 /// Saturation counting: values beyond the int16 range are flagged.
 #[test]
 fn prop_saturation_detection() {

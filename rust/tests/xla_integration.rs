@@ -1,6 +1,7 @@
 //! Cross-language integration: the AOT artifacts (JAX/Pallas → HLO →
 //! PJRT) must agree numerically with the pure-rust implementations.
 //! All tests self-skip when `make artifacts` has not been run.
+#![allow(deprecated)]
 
 use adcdgd::algorithms::{run_adc_dgd, AdcDgdOptions, ObjectiveRef, StepSize};
 use adcdgd::compress::{Compressor, RandomizedRounding};
