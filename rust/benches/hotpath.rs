@@ -1,11 +1,13 @@
 //! Hot-path micro-benchmarks (§Perf): per-round cost of each algorithm
 //! at increasing dimension P, compression/codec throughput, the
 //! per-thread vs worker-pool engine comparison (emits
-//! `BENCH_pool_engine.json`), and the XLA-backed paths when artifacts
+//! `BENCH_pool_engine.json`), the state-plane round-loop bench (emits
+//! `BENCH_state_plane.json`), and the XLA-backed paths when artifacts
 //! are present.
 //!
-//! Set `ADCDGD_BENCH_ONLY=pool` to run only the engine comparison (CI
-//! uses this to publish the JSON artifact quickly).
+//! Set `ADCDGD_BENCH_ONLY=pool` (engine comparison) or
+//! `ADCDGD_BENCH_ONLY=plane` (state-plane bench) to run a single
+//! section (CI uses these to publish the JSON artifacts quickly).
 
 use adcdgd::algorithms::{AdcDgdOptions, AlgorithmKind, ObjectiveRef, StepSize};
 use adcdgd::compress::{
@@ -155,6 +157,91 @@ fn pool_engine_comparison() {
     println!("engine comparison written to BENCH_pool_engine.json");
 }
 
+/// Round-loop wall-time of the arena-backed (state-plane + CSR) pathway
+/// at n ∈ {16, 256, 2048} with P = 64 vector iterates — ADC-DGD keeps
+/// `O(deg·P)` mirrors per node, so this is the layout the plane refactor
+/// targets. Emits `BENCH_state_plane.json` (compare against the
+/// pre-refactor `BENCH_pool_engine.json` history in CI).
+fn state_plane_comparison() {
+    println!("== state-plane round loop (sequential / threaded / pool) ==");
+    let rounds = 10;
+    let p_dim = 64;
+    let mut rows = Vec::new();
+    for n in [16usize, 256, 2048] {
+        let p_edge = (12.0 / n as f64).min(0.5);
+        let spec = ScenarioSpec::new(
+            AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+            TopologySpec::ErdosRenyi { n, p: p_edge, seed: 5 },
+            ObjectiveSpec::Custom(quad_objectives(n, p_dim, 9)),
+        )
+        .with_compressor(CompressorSpec::RandomizedRounding);
+        let prepared = spec.prepare();
+        let mk_cfg = |engine| RunConfig {
+            iterations: rounds,
+            step_size: StepSize::Constant(0.01),
+            record_every: rounds,
+            engine,
+            ..RunConfig::default()
+        };
+        let samples = if n >= 2048 { 5 } else { 10 };
+        let sequential = bench(
+            &format!("plane seq      n={n} P={p_dim} {rounds} rounds"),
+            1,
+            samples,
+            Duration::from_secs(120),
+            || {
+                std::hint::black_box(prepared.run_with(&mk_cfg(EngineKind::Sequential)));
+            },
+        );
+        println!("{}", sequential.summary());
+        let threaded = bench(
+            &format!("plane threaded n={n} P={p_dim} {rounds} rounds"),
+            1,
+            samples,
+            Duration::from_secs(120),
+            || {
+                std::hint::black_box(prepared.run_with(&mk_cfg(EngineKind::Threaded)));
+            },
+        );
+        println!("{}", threaded.summary());
+        let pool = bench(
+            &format!("plane pool     n={n} P={p_dim} {rounds} rounds"),
+            1,
+            samples,
+            Duration::from_secs(120),
+            || {
+                std::hint::black_box(prepared.run_with(&mk_cfg(EngineKind::pool())));
+            },
+        );
+        println!("{}", pool.summary());
+        let speedup = threaded.mean() / pool.mean();
+        println!("     -> pool speedup over per-thread at n={n}: {speedup:.2}x");
+        // The pool engine clamps its auto worker count to n, so record
+        // the per-row effective count, not the machine parallelism.
+        let row_workers = adcdgd::engine::pool::effective_workers(0, n);
+        rows.push(format!(
+            "    {{\"n\": {n}, \"p\": {p_dim}, \"rounds\": {rounds}, \
+             \"pool_workers\": {row_workers}, \
+             \"sequential_mean_s\": {:.6}, \"threaded_mean_s\": {:.6}, \
+             \"pool_mean_s\": {:.6}, \"pool_speedup\": {:.3}}}",
+            sequential.mean(),
+            threaded.mean(),
+            pool.mean(),
+            speedup
+        ));
+    }
+    let workers =
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(0);
+    let json = format!(
+        "{{\n  \"bench\": \"state_plane\",\n  \"pathway\": \"arena-backed StatePlane + CSR \
+         mixing\",\n  \"algorithm\": \"adc-dgd/randround\",\n  \
+         \"machine_parallelism\": {workers},\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_state_plane.json", &json).expect("write BENCH_state_plane.json");
+    println!("state-plane bench written to BENCH_state_plane.json");
+}
+
 fn xla_paths() {
     let dir = adcdgd::runtime::artifacts_dir(None);
     if !adcdgd::runtime::artifacts_available(&dir) {
@@ -205,6 +292,10 @@ fn main() {
         pool_engine_comparison();
         return;
     }
+    if only == "plane" {
+        state_plane_comparison();
+        return;
+    }
     println!("== L3 hot path ==");
     for p in [100usize, 10_000, 100_000] {
         round_throughput(p, 20);
@@ -212,6 +303,7 @@ fn main() {
     println!("== compression codecs ==");
     compressor_throughput(100_000);
     pool_engine_comparison();
+    state_plane_comparison();
     println!("== XLA-backed paths ==");
     xla_paths();
 }

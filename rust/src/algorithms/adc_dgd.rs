@@ -16,15 +16,26 @@
 //! The update then follows the DGD template on mirror estimates:
 //! `x_{i,k+1} = Σ_j W_ij x̃_{j,k} − α_k ∇f_i(x_{i,k})` (Eq. 6), including
 //! the node's own mirror `x̃_{i,k}` with weight `W_ii` — the compact form
-//! `x^{k+1} = Z x̃^k − α_k ∇f(x^k)` of Eq. (10) makes this explicit.
+//! `x^{k+1} = Z x̃^k − α_k ∇f(x^k)` of Eq. (10). Over the state plane
+//! this is one CSR row of the fleet-wide sparse × dense product
+//! ([`CsrWeights::mix_row_into`]).
+//!
+//! Mirror storage: the plane keeps one `x̃` row per *(receiver,
+//! neighbor)* pair — `O((deg(i)+1)·P)` per node, the paper's §IV-A
+//! remark i — because message loss makes each receiver's view of a
+//! neighbor diverge; a shared mirror would silently change results under
+//! loss.
 //!
 //! Initialization (paper): `x_{i,0} = x̃_{i,0} = 0`,
-//! `x_{i,1} = −α₁ ∇f_i(0)`.
+//! `x_{i,1} = −α₁ ∇f_i(0)` (applied by the fleet builder).
 
 use super::{CompressorRef, NodeLogic, ObjectiveRef, Outgoing, StepSize};
 use crate::compress::Payload;
+use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
 use crate::rng::Xoshiro256pp;
+use crate::state::NodeRows;
+use std::sync::Arc;
 
 /// ADC-DGD hyper-parameters.
 #[derive(Debug, Clone, Copy)]
@@ -42,75 +53,33 @@ impl Default for AdcDgdOptions {
     }
 }
 
-/// Per-node ADC-DGD state. Memory cost: one mirror vector per neighbor
-/// plus the node's own mirror — `O((deg(i)+1) · P)` (the paper's §IV-A
-/// remark i).
+/// Per-node ADC-DGD logic. The iterate, own mirror, neighbor mirrors,
+/// and amplification scratch all live in the run's state plane.
 pub struct AdcDgdNode {
     id: usize,
-    weights: Vec<f64>,
-    neighbors: Vec<usize>,
+    weights: Arc<CsrWeights>,
     objective: ObjectiveRef,
     compressor: CompressorRef,
     step: StepSize,
     opts: AdcDgdOptions,
-    /// Local iterate x_{i,k}.
-    x: Vec<f64>,
-    /// Own mirror x̃_{i,k−1→k} (what all receivers believe about us).
-    tilde_self: Vec<f64>,
-    /// Mirrors of each neighbor, indexed like `neighbors`.
-    tilde_neigh: Vec<Vec<f64>>,
-    grad: Vec<f64>,
-    amp: Vec<f64>,
-    mix: Vec<f64>,
     steps: usize,
 }
 
 impl AdcDgdNode {
-    /// Create node `id` with its dense weight row, sorted neighbor list,
-    /// objective and compression operator.
+    /// Create node `id` over the shared CSR weights, objective and
+    /// compression operator. The paper's `x_{i,1} = −α₁ ∇f_i(0)` init is
+    /// written into the plane by the fleet builder
+    /// ([`crate::algorithms::AlgorithmKind::build_fleet`]).
     pub fn new(
         id: usize,
-        weights: Vec<f64>,
-        neighbors: Vec<usize>,
+        weights: Arc<CsrWeights>,
         objective: ObjectiveRef,
         compressor: CompressorRef,
         step: StepSize,
         opts: AdcDgdOptions,
     ) -> Self {
         assert!(opts.gamma > 0.0, "gamma must be positive");
-        let p = objective.dim();
-        // Paper init: x_{i,1} = −α₁ ∇f_i(0).
-        let mut g0 = vec![0.0; p];
-        objective.grad_into(&vec![0.0; p], &mut g0);
-        let alpha1 = step.at(1);
-        let x: Vec<f64> = g0.iter().map(|g| -alpha1 * g).collect();
-        let deg = neighbors.len();
-        Self {
-            id,
-            weights,
-            neighbors,
-            objective,
-            compressor,
-            step,
-            opts,
-            x,
-            tilde_self: vec![0.0; p],
-            tilde_neigh: vec![vec![0.0; p]; deg],
-            grad: vec![0.0; p],
-            amp: vec![0.0; p],
-            mix: vec![0.0; p],
-            steps: 0,
-        }
-    }
-
-    /// Override the initial iterate (e.g. shared pretrained parameters).
-    /// Mirrors stay at 0, so the first differential transmits the full
-    /// (compressed, amplified) initial state — the protocol bootstraps
-    /// consistently because every receiver also starts its mirror at 0.
-    pub fn with_init(mut self, x0: Vec<f64>) -> Self {
-        assert_eq!(x0.len(), self.x.len());
-        self.x = x0;
-        self
+        Self { id, weights, objective, compressor, step, opts, steps: 0 }
     }
 
     /// The amplification factor `k^γ` at round `k`.
@@ -121,47 +90,49 @@ impl AdcDgdNode {
 }
 
 impl NodeLogic for AdcDgdNode {
-    fn make_message(&mut self, round: usize, rng: &mut Xoshiro256pp) -> Outgoing {
+    fn make_message(
+        &mut self,
+        round: usize,
+        rows: &mut NodeRows<'_>,
+        rng: &mut Xoshiro256pp,
+    ) -> Outgoing {
         let kg = self.amp_factor(round);
-        // Fused amplify: amp = k^γ (x_k − x̃_{k−1}) in one pass.
-        for ((a, xi), ti) in self.amp.iter_mut().zip(self.x.iter()).zip(self.tilde_self.iter()) {
-            *a = kg * (xi - ti);
-        }
-        let tx_magnitude = vecops::norm_inf(&self.amp);
-        let c = self.compressor.compress(&self.amp, rng);
+        // Fused amplify: scratch = k^γ (x_k − x̃_{k−1}) in one pass.
+        vecops::scaled_diff(kg, rows.x, rows.mirror_self, rows.scratch);
+        let tx_magnitude = vecops::norm_inf(rows.scratch);
+        let c = self.compressor.compress(rows.scratch, rng);
         // Integrate own mirror with the *same realization* receivers get:
         // x̃_k = x̃_{k−1} + decode(d)/k^γ (fused decode+axpy, no buffer).
-        c.payload.decode_axpy(1.0 / kg, &mut self.tilde_self);
+        c.payload.decode_axpy(1.0 / kg, rows.mirror_self);
         Outgoing { payload: c.payload, tx_magnitude, saturated: c.saturated }
     }
 
-    fn consume(&mut self, round: usize, inbox: &[(usize, std::sync::Arc<Payload>)], _rng: &mut Xoshiro256pp) {
+    fn consume(
+        &mut self,
+        round: usize,
+        inbox: &[(usize, std::sync::Arc<Payload>)],
+        rows: &mut NodeRows<'_>,
+        _rng: &mut Xoshiro256pp,
+    ) {
         let kg = self.amp_factor(round);
-        // Update neighbor mirrors from their differentials.
+        let w = &self.weights;
+        // Update neighbor mirrors from their differentials (sender-sorted
+        // inbox merged against the ascending CSR row).
+        let p = rows.p;
+        let mut slot = 0;
         for (j, payload) in inbox {
-            let slot = self
-                .neighbors
-                .iter()
-                .position(|&n| n == *j)
-                .expect("message from non-neighbor");
-            payload.decode_axpy(1.0 / kg, &mut self.tilde_neigh[slot]);
+            slot = w.slot_after(self.id, slot, *j);
+            payload.decode_axpy(1.0 / kg, &mut rows.mirrors[slot * p..(slot + 1) * p]);
+            slot += 1;
         }
-        // Compressed consensus: Σ_j W_ij x̃_j (self mirror included).
-        self.mix.copy_from_slice(&self.tilde_self);
-        vecops::scale(&mut self.mix, self.weights[self.id]);
-        for (slot, &j) in self.neighbors.iter().enumerate() {
-            vecops::axpy(self.weights[j], &self.tilde_neigh[slot], &mut self.mix);
-        }
+        // Compressed consensus — one CSR row of Z x̃ (self mirror
+        // included with weight W_ii).
+        w.mix_row_into(self.id, rows.mirror_self, rows.mirrors, rows.scratch);
         // Gradient step at the current iterate.
-        self.objective.grad_into(&self.x, &mut self.grad);
+        self.objective.grad_into(rows.x, rows.grad);
         let alpha = self.step.at(round);
-        std::mem::swap(&mut self.x, &mut self.mix);
-        vecops::axpy(-alpha, &self.grad, &mut self.x);
+        vecops::add_scaled(rows.scratch, -alpha, rows.grad, rows.x);
         self.steps += 1;
-    }
-
-    fn state(&self) -> &[f64] {
-        &self.x
     }
 
     fn grad_steps(&self) -> usize {
@@ -171,10 +142,29 @@ impl NodeLogic for AdcDgdNode {
 
 #[cfg(test)]
 mod tests {
+    use super::super::testutil::{pair_fleet, PairHarness};
+    use super::super::AlgorithmKind;
     use super::*;
     use crate::compress::{Identity, RandomizedRounding};
     use crate::objective::ScalarQuadratic;
     use std::sync::Arc;
+
+    fn pair_objectives() -> Vec<ObjectiveRef> {
+        vec![
+            Arc::new(ScalarQuadratic::new(4.0, 2.0)),
+            Arc::new(ScalarQuadratic::new(2.0, -3.0)),
+        ]
+    }
+
+    fn adc_pair(comp: CompressorRef, gamma: f64, step: StepSize, seed: u64) -> PairHarness {
+        pair_fleet(
+            AlgorithmKind::AdcDgd(AdcDgdOptions { gamma }),
+            &pair_objectives(),
+            Some(&comp),
+            step,
+            seed,
+        )
+    }
 
     fn run_pair(
         comp: CompressorRef,
@@ -183,32 +173,9 @@ mod tests {
         step: StepSize,
         seed: u64,
     ) -> Vec<f64> {
-        let w = [[0.5, 0.5], [0.5, 0.5]];
-        let objs: Vec<ObjectiveRef> = vec![
-            Arc::new(ScalarQuadratic::new(4.0, 2.0)),
-            Arc::new(ScalarQuadratic::new(2.0, -3.0)),
-        ];
-        let mut nodes: Vec<AdcDgdNode> = (0..2)
-            .map(|i| {
-                AdcDgdNode::new(
-                    i,
-                    w[i].to_vec(),
-                    vec![1 - i],
-                    objs[i].clone(),
-                    comp.clone(),
-                    step,
-                    AdcDgdOptions { gamma },
-                )
-            })
-            .collect();
-        let mut rng = Xoshiro256pp::seed_from_u64(seed);
-        for k in 1..=iters {
-            let msgs: Vec<Payload> =
-                nodes.iter_mut().map(|n| n.make_message(k, &mut rng).payload).collect();
-            nodes[0].consume(k, &[(1, Arc::new(msgs[1].clone()))], &mut rng);
-            nodes[1].consume(k, &[(0, Arc::new(msgs[0].clone()))], &mut rng);
-        }
-        nodes.iter().map(|n| n.state()[0]).collect()
+        let mut h = adc_pair(comp, gamma, step, seed);
+        h.run(iters);
+        vec![h.x(0), h.x(1)]
     }
 
     /// DGD's biased fixed point for this pair problem at α = 0.02
@@ -283,36 +250,19 @@ mod tests {
     /// E‖k^γ y‖ = o(k^{γ−1/2})).
     #[test]
     fn transmitted_magnitude_growth_is_subcritical() {
-        let w = [[0.5, 0.5], [0.5, 0.5]];
-        let objs: Vec<ObjectiveRef> = vec![
-            Arc::new(ScalarQuadratic::new(4.0, 2.0)),
-            Arc::new(ScalarQuadratic::new(2.0, -3.0)),
-        ];
-        let comp: CompressorRef = Arc::new(RandomizedRounding::new());
-        let mut nodes: Vec<AdcDgdNode> = (0..2)
-            .map(|i| {
-                AdcDgdNode::new(
-                    i,
-                    w[i].to_vec(),
-                    vec![1 - i],
-                    objs[i].clone(),
-                    comp.clone(),
-                    StepSize::Constant(0.02),
-                    AdcDgdOptions { gamma: 1.0 },
-                )
-            })
-            .collect();
-        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut h = adc_pair(
+            Arc::new(RandomizedRounding::new()),
+            1.0,
+            StepSize::Constant(0.02),
+            3,
+        );
         let mut max_tx: f64 = 0.0;
         for k in 1..=3000 {
-            let outs: Vec<Outgoing> =
-                nodes.iter_mut().map(|n| n.make_message(k, &mut rng)).collect();
+            let outs = h.step(k);
             for o in &outs {
                 max_tx = max_tx.max(o.tx_magnitude);
                 assert_eq!(o.saturated, 0, "int16 overflow at k={k}");
             }
-            nodes[0].consume(k, &[(1, Arc::new(outs[1].payload.clone()))], &mut rng);
-            nodes[1].consume(k, &[(0, Arc::new(outs[0].payload.clone()))], &mut rng);
         }
         // o(√k) with k=3000 and O(1) constants: comfortably below i16 max.
         assert!(max_tx < 3000.0, "max transmitted magnitude {max_tx}");

@@ -6,73 +6,65 @@
 
 use super::{NodeLogic, ObjectiveRef, Outgoing, StepSize};
 use crate::compress::Payload;
+use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
 use crate::rng::Xoshiro256pp;
+use crate::state::NodeRows;
+use std::sync::Arc;
 
-/// Per-node DGD state.
+/// Per-node DGD logic. Vector state (iterate, gradient, mixing scratch)
+/// lives in the run's state plane; the node holds only its id, the
+/// shared CSR weights, and counters.
 pub struct DgdNode {
     id: usize,
-    weights: Vec<f64>, // row i of W (dense, length N)
+    weights: Arc<CsrWeights>,
     objective: ObjectiveRef,
     step: StepSize,
-    x: Vec<f64>,
-    grad: Vec<f64>,
-    mix: Vec<f64>,
     steps: usize,
 }
 
 impl DgdNode {
-    /// Create node `id` with its dense mixing-weight row and local
-    /// objective. Initial iterate is `x = 0` (paper's convention).
-    pub fn new(id: usize, weights: Vec<f64>, objective: ObjectiveRef, step: StepSize) -> Self {
-        let p = objective.dim();
-        Self {
-            id,
-            weights,
-            objective,
-            step,
-            x: vec![0.0; p],
-            grad: vec![0.0; p],
-            mix: vec![0.0; p],
-            steps: 0,
-        }
-    }
-
-    /// Override the initial iterate.
-    pub fn with_init(mut self, x0: Vec<f64>) -> Self {
-        assert_eq!(x0.len(), self.x.len());
-        self.x = x0;
-        self
+    /// Create node `id` over the shared consensus weights and its local
+    /// objective. The initial iterate is whatever the plane holds
+    /// (zeros by default — the paper's convention).
+    pub fn new(
+        id: usize,
+        weights: Arc<CsrWeights>,
+        objective: ObjectiveRef,
+        step: StepSize,
+    ) -> Self {
+        Self { id, weights, objective, step, steps: 0 }
     }
 }
 
 impl NodeLogic for DgdNode {
-    fn make_message(&mut self, _round: usize, _rng: &mut Xoshiro256pp) -> Outgoing {
+    fn make_message(
+        &mut self,
+        _round: usize,
+        rows: &mut NodeRows<'_>,
+        _rng: &mut Xoshiro256pp,
+    ) -> Outgoing {
         Outgoing {
-            payload: Payload::F64(self.x.clone()),
-            tx_magnitude: vecops::norm_inf(&self.x),
+            payload: Payload::F64(rows.x.to_vec()),
+            tx_magnitude: vecops::norm_inf(rows.x),
             saturated: 0,
         }
     }
 
-    fn consume(&mut self, round: usize, inbox: &[(usize, std::sync::Arc<Payload>)], _rng: &mut Xoshiro256pp) {
-        // mix = W_ii x_i + Σ_j W_ij x_j
-        self.mix.copy_from_slice(&self.x);
-        vecops::scale(&mut self.mix, self.weights[self.id]);
-        for (j, payload) in inbox {
-            payload.decode_axpy(self.weights[*j], &mut self.mix);
-        }
-        // gradient step at the *current* iterate
-        self.objective.grad_into(&self.x, &mut self.grad);
+    fn consume(
+        &mut self,
+        round: usize,
+        inbox: &[(usize, std::sync::Arc<Payload>)],
+        rows: &mut NodeRows<'_>,
+        _rng: &mut Xoshiro256pp,
+    ) {
+        // scratch = W_ii x_i + Σ_j W_ij x_j (one CSR row of Z x).
+        self.weights.mix_inbox_into(self.id, rows.x, inbox, rows.scratch);
+        // Gradient step at the *current* iterate.
+        self.objective.grad_into(rows.x, rows.grad);
         let alpha = self.step.at(round);
-        // Pointer swap instead of copy: `mix` is recomputed next round.
-        std::mem::swap(&mut self.x, &mut self.mix);
-        vecops::axpy(-alpha, &self.grad, &mut self.x);
+        vecops::add_scaled(rows.scratch, -alpha, rows.grad, rows.x);
         self.steps += 1;
-    }
-
-    fn state(&self) -> &[f64] {
-        &self.x
     }
 
     fn grad_steps(&self) -> usize {
@@ -82,6 +74,8 @@ impl NodeLogic for DgdNode {
 
 #[cfg(test)]
 mod tests {
+    use super::super::testutil::pair_fleet;
+    use super::super::AlgorithmKind;
     use super::*;
     use crate::objective::ScalarQuadratic;
     use std::sync::Arc;
@@ -90,33 +84,21 @@ mod tests {
     /// global optimum of f1+f2 = 4(x−2)² + 2(x+3)² (minimum at x = −1/3).
     #[test]
     fn two_node_dgd_converges() {
-        let w = [[0.5, 0.5], [0.5, 0.5]];
         let objs: Vec<ObjectiveRef> = vec![
             Arc::new(ScalarQuadratic::new(4.0, 2.0)),
             Arc::new(ScalarQuadratic::new(2.0, -3.0)),
         ];
-        let mut nodes: Vec<DgdNode> = (0..2)
-            .map(|i| DgdNode::new(i, w[i].to_vec(), objs[i].clone(), StepSize::Constant(0.02)))
-            .collect();
-        let mut rng = Xoshiro256pp::seed_from_u64(0);
-        for k in 1..=2000 {
-            let msgs: Vec<Payload> =
-                nodes.iter_mut().map(|n| n.make_message(k, &mut rng).payload).collect();
-            let inbox0 = vec![(1usize, Arc::new(msgs[1].clone()))];
-            let inbox1 = vec![(0usize, Arc::new(msgs[0].clone()))];
-            nodes[0].consume(k, &inbox0, &mut rng);
-            nodes[1].consume(k, &inbox1, &mut rng);
-        }
+        let mut h = pair_fleet(AlgorithmKind::Dgd, &objs, None, StepSize::Constant(0.02), 0);
+        h.run(2000);
         // Constant-step DGD converges to a *biased* fixed point (the
         // O(α/(1−β)) error ball of the paper). For α = 0.02 the fixed
         // point solves 2x₁+x₂ = 1 and (x₁−x₂)/2 = −0.16(x₁−2):
         // x₁ ≈ 0.4940, x₂ ≈ 0.0120 around the optimum x* = 1/3.
-        let x1 = nodes[0].state()[0];
-        let x2 = nodes[1].state()[0];
+        let (x1, x2) = (h.x(0), h.x(1));
         assert!((x1 - 0.4940).abs() < 1e-3, "x1 = {x1}");
         assert!((x2 - 0.0120).abs() < 1e-3, "x2 = {x2}");
         // Ball shrinks with α ⇒ both within a loose ball of x* = 1/3.
         assert!((x1 - 1.0 / 3.0).abs() < 0.5);
-        assert_eq!(nodes[0].grad_steps(), 2000);
+        assert_eq!(h.nodes[0].grad_steps(), 2000);
     }
 }

@@ -8,20 +8,21 @@
 
 use super::{NodeLogic, ObjectiveRef, Outgoing, StepSize};
 use crate::compress::Payload;
+use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
 use crate::rng::Xoshiro256pp;
+use crate::state::NodeRows;
+use std::sync::Arc;
 
-/// Per-node DGD^t state.
+/// Per-node DGD^t logic. The captured `∇f(x^k)` persists across the `t`
+/// mixing rounds in the plane's gradient row.
 pub struct DgdTNode {
     id: usize,
-    weights: Vec<f64>,
+    weights: Arc<CsrWeights>,
     objective: ObjectiveRef,
     step: StepSize,
     t: usize,
     phase: usize, // 0..t within the current gradient iteration
-    x: Vec<f64>,
-    grad: Vec<f64>, // ∇f(x^k), captured at phase 0
-    mix: Vec<f64>,
     steps: usize,
 }
 
@@ -30,67 +31,52 @@ impl DgdTNode {
     /// step.
     pub fn new(
         id: usize,
-        weights: Vec<f64>,
+        weights: Arc<CsrWeights>,
         objective: ObjectiveRef,
         step: StepSize,
         t: usize,
     ) -> Self {
         assert!(t >= 1, "DGD^t needs t >= 1");
-        let p = objective.dim();
-        Self {
-            id,
-            weights,
-            objective,
-            step,
-            t,
-            phase: 0,
-            x: vec![0.0; p],
-            grad: vec![0.0; p],
-            mix: vec![0.0; p],
-            steps: 0,
-        }
-    }
-
-    /// Override the initial iterate (e.g. shared pretrained parameters).
-    pub fn with_init(mut self, x0: Vec<f64>) -> Self {
-        assert_eq!(x0.len(), self.x.len());
-        self.x = x0;
-        self
+        Self { id, weights, objective, step, t, phase: 0, steps: 0 }
     }
 }
 
 impl NodeLogic for DgdTNode {
-    fn make_message(&mut self, _round: usize, _rng: &mut Xoshiro256pp) -> Outgoing {
+    fn make_message(
+        &mut self,
+        _round: usize,
+        rows: &mut NodeRows<'_>,
+        _rng: &mut Xoshiro256pp,
+    ) -> Outgoing {
         if self.phase == 0 {
-            // Capture ∇f(x^k) before any mixing of this iteration.
-            self.objective.grad_into(&self.x, &mut self.grad);
+            // Capture ∇f(x^k) before any mixing of this iteration; the
+            // plane's grad row carries it across the t rounds.
+            self.objective.grad_into(rows.x, rows.grad);
         }
         Outgoing {
-            payload: Payload::F64(self.x.clone()),
-            tx_magnitude: vecops::norm_inf(&self.x),
+            payload: Payload::F64(rows.x.to_vec()),
+            tx_magnitude: vecops::norm_inf(rows.x),
             saturated: 0,
         }
     }
 
-    fn consume(&mut self, _round: usize, inbox: &[(usize, std::sync::Arc<Payload>)], _rng: &mut Xoshiro256pp) {
-        self.mix.copy_from_slice(&self.x);
-        vecops::scale(&mut self.mix, self.weights[self.id]);
-        for (j, payload) in inbox {
-            payload.decode_axpy(self.weights[*j], &mut self.mix);
-        }
-        std::mem::swap(&mut self.x, &mut self.mix);
+    fn consume(
+        &mut self,
+        _round: usize,
+        inbox: &[(usize, std::sync::Arc<Payload>)],
+        rows: &mut NodeRows<'_>,
+        _rng: &mut Xoshiro256pp,
+    ) {
+        self.weights.mix_inbox_into(self.id, rows.x, inbox, rows.scratch);
+        rows.x.copy_from_slice(rows.scratch);
         self.phase += 1;
         if self.phase == self.t {
             // Gradient step closes the iteration: x^{k+1} = W^t x^k − α g.
             self.steps += 1;
             let alpha = self.step.at(self.steps);
-            vecops::axpy(-alpha, &self.grad, &mut self.x);
+            vecops::axpy(-alpha, rows.grad, rows.x);
             self.phase = 0;
         }
-    }
-
-    fn state(&self) -> &[f64] {
-        &self.x
     }
 
     fn grad_steps(&self) -> usize {
@@ -100,72 +86,48 @@ impl NodeLogic for DgdTNode {
 
 #[cfg(test)]
 mod tests {
+    use super::super::testutil::pair_fleet;
+    use super::super::AlgorithmKind;
     use super::*;
-    use crate::objective::ScalarQuadratic;
+    use crate::objective::{Objective, ScalarQuadratic};
     use std::sync::Arc;
 
     #[test]
     fn dgd_t_equals_w_pow_t_update() {
         // On the pair graph with W = [[.5,.5],[.5,.5]], W^t = W for t≥1, so
         // after t rounds x should equal mean(x0) − α g(x0).
-        let w = [[0.5, 0.5], [0.5, 0.5]];
         let objs: Vec<ObjectiveRef> = vec![
             Arc::new(ScalarQuadratic::new(1.0, 1.0)),
             Arc::new(ScalarQuadratic::new(1.0, -1.0)),
         ];
         let t = 3;
-        let mut nodes: Vec<DgdTNode> = (0..2)
-            .map(|i| {
-                DgdTNode::new(i, w[i].to_vec(), objs[i].clone(), StepSize::Constant(0.1), t)
-            })
-            .collect();
-        // start from x = (2, 0): set by cheating through one manual grad-free path
-        nodes[0].x = vec![2.0];
-        nodes[1].x = vec![0.0];
+        let mut h =
+            pair_fleet(AlgorithmKind::DgdT { t }, &objs, None, StepSize::Constant(0.1), 0);
+        // start from x = (2, 0)
+        h.plane.x_row_mut(0)[0] = 2.0;
+        h.plane.x_row_mut(1)[0] = 0.0;
         let g0 = objs[0].grad(&[2.0])[0]; // 2(2−1) = 2
         let g1 = objs[1].grad(&[0.0])[0]; // 2(0+1) = 2
-        let mut rng = Xoshiro256pp::seed_from_u64(0);
-        for k in 1..=t {
-            let msgs: Vec<Payload> =
-                nodes.iter_mut().map(|n| n.make_message(k, &mut rng).payload).collect();
-            let inbox0 = vec![(1usize, Arc::new(msgs[1].clone()))];
-            let inbox1 = vec![(0usize, Arc::new(msgs[0].clone()))];
-            nodes[0].consume(k, &inbox0, &mut rng);
-            nodes[1].consume(k, &inbox1, &mut rng);
-        }
+        h.run(t);
         // W^t x0 = (1,1); minus α g evaluated at x0.
-        assert!((nodes[0].state()[0] - (1.0 - 0.1 * g0)).abs() < 1e-12);
-        assert!((nodes[1].state()[0] - (1.0 - 0.1 * g1)).abs() < 1e-12);
-        assert_eq!(nodes[0].grad_steps(), 1);
+        assert!((h.x(0) - (1.0 - 0.1 * g0)).abs() < 1e-12);
+        assert!((h.x(1) - (1.0 - 0.1 * g1)).abs() < 1e-12);
+        assert_eq!(h.nodes[0].grad_steps(), 1);
     }
 
     #[test]
     fn t_equals_one_matches_dgd() {
-        use super::super::DgdNode;
-        let w = [[0.5, 0.5], [0.5, 0.5]];
         let objs: Vec<ObjectiveRef> = vec![
             Arc::new(ScalarQuadratic::new(4.0, 2.0)),
             Arc::new(ScalarQuadratic::new(2.0, -3.0)),
         ];
         let step = StepSize::Constant(0.05);
-        let mut a: Vec<DgdTNode> = (0..2)
-            .map(|i| DgdTNode::new(i, w[i].to_vec(), objs[i].clone(), step, 1))
-            .collect();
-        let mut b: Vec<DgdNode> =
-            (0..2).map(|i| DgdNode::new(i, w[i].to_vec(), objs[i].clone(), step)).collect();
-        let mut rng = Xoshiro256pp::seed_from_u64(0);
-        for k in 1..=50 {
-            let ma: Vec<Payload> =
-                a.iter_mut().map(|n| n.make_message(k, &mut rng).payload).collect();
-            let mb: Vec<Payload> =
-                b.iter_mut().map(|n| n.make_message(k, &mut rng).payload).collect();
-            a[0].consume(k, &[(1, Arc::new(ma[1].clone()))], &mut rng);
-            a[1].consume(k, &[(0, Arc::new(ma[0].clone()))], &mut rng);
-            b[0].consume(k, &[(1, Arc::new(mb[1].clone()))], &mut rng);
-            b[1].consume(k, &[(0, Arc::new(mb[0].clone()))], &mut rng);
-        }
+        let mut a = pair_fleet(AlgorithmKind::DgdT { t: 1 }, &objs, None, step, 0);
+        let mut b = pair_fleet(AlgorithmKind::Dgd, &objs, None, step, 0);
+        a.run(50);
+        b.run(50);
         for i in 0..2 {
-            assert!((a[i].state()[0] - b[i].state()[0]).abs() < 1e-12);
+            assert!((a.x(i) - b.x(i)).abs() < 1e-12);
         }
     }
 }

@@ -7,6 +7,14 @@
 //! node logic runs unchanged on the deterministic sequential engine and on
 //! the multi-threaded engine.
 //!
+//! Nodes do **not** own their vectors: all per-node state lives in the
+//! run's [`crate::state::StatePlane`] arena, and each `make_message` /
+//! `consume` call borrows that node's rows as a
+//! [`crate::state::NodeRows`] view. Consensus weights are shared as a
+//! [`crate::consensus::CsrWeights`] (one `Arc` for the whole fleet)
+//! instead of a dense per-node row, so per-node overhead is `O(deg)`
+//! rather than `O(N)`.
+//!
 //! Implemented algorithms:
 //!
 //! * [`DgdNode`] — Algorithm 1 (Nedic–Ozdaglar DGD), raw f64 exchange.
@@ -36,11 +44,12 @@ pub use dgd::DgdNode;
 pub use dgd_t::DgdTNode;
 pub use naive_cdgd::NaiveCompressedNode;
 pub use qdgd::{QdgdNode, QdgdOptions};
-pub use registry::AlgorithmKind;
+pub use registry::{AlgorithmKind, Fleet};
 #[allow(deprecated)]
 pub use runners::{run_adc_dgd, run_dgd, run_dgd_t, run_naive_compressed, run_qdgd};
 
 use crate::compress::Payload;
+use crate::state::NodeRows;
 use std::sync::Arc as StdArc;
 use crate::rng::Xoshiro256pp;
 use std::sync::Arc;
@@ -85,31 +94,114 @@ pub struct Outgoing {
 }
 
 /// Per-node algorithm state machine. One engine round = one
-/// `make_message` + one `consume` on every node.
+/// `make_message` + one `consume` on every node. Vector state lives in
+/// the run's [`crate::state::StatePlane`]; the engine passes the node's
+/// row view into every call (see the borrowing rules in
+/// [`crate::state`]). The node itself holds only scalar state (ids,
+/// counters, shared handles).
 pub trait NodeLogic: Send {
     /// Produce this round's broadcast message. `round` is 1-based.
-    fn make_message(&mut self, round: usize, rng: &mut Xoshiro256pp) -> Outgoing;
+    fn make_message(
+        &mut self,
+        round: usize,
+        rows: &mut NodeRows<'_>,
+        rng: &mut Xoshiro256pp,
+    ) -> Outgoing;
 
     /// Consume the messages received this round (one per neighbor,
-    /// tagged with the sender id) and update local state.
-    fn consume(&mut self, round: usize, inbox: &[(usize, StdArc<Payload>)], rng: &mut Xoshiro256pp);
-
-    /// Current local iterate `x_i`.
-    fn state(&self) -> &[f64];
+    /// tagged with the sender id and sorted by sender) and update the
+    /// node's rows.
+    fn consume(
+        &mut self,
+        round: usize,
+        inbox: &[(usize, StdArc<Payload>)],
+        rows: &mut NodeRows<'_>,
+        rng: &mut Xoshiro256pp,
+    );
 
     /// Number of *gradient* iterations completed (differs from rounds for
     /// DGD^t, which performs `t` rounds per gradient step).
     fn grad_steps(&self) -> usize;
 }
 
-/// Factory that builds the per-node logic for node `i`. The engines call
-/// this once per node at startup.
-pub type NodeFactory<'a> = dyn Fn(usize) -> Box<dyn NodeLogic> + Sync + 'a;
-
 /// Shared handle types used across node implementations.
 pub type ObjectiveRef = Arc<dyn crate::objective::Objective>;
 /// Shared compressor handle.
 pub type CompressorRef = Arc<dyn crate::compress::Compressor>;
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Shared harness for the per-algorithm unit tests: a two-node fleet
+    //! on the pair graph with `W = [[.5,.5],[.5,.5]]`, driven with full
+    //! message delivery and one shared RNG (the historical hand-run
+    //! pattern these tests were written against).
+    use super::*;
+    use crate::consensus::ConsensusMatrix;
+    use crate::linalg::Matrix;
+    use crate::state::StatePlane;
+    use crate::topology;
+
+    /// A hand-driven two-node fleet.
+    pub struct PairHarness {
+        /// The fleet's state plane.
+        pub plane: StatePlane,
+        /// The two node state machines.
+        pub nodes: Vec<Box<dyn NodeLogic>>,
+        /// One shared RNG, drawn from in node order.
+        pub rng: Xoshiro256pp,
+    }
+
+    /// Build a pair fleet for `algorithm` over the given objectives.
+    pub fn pair_fleet(
+        algorithm: AlgorithmKind,
+        objectives: &[ObjectiveRef],
+        compressor: Option<&CompressorRef>,
+        step: StepSize,
+        seed: u64,
+    ) -> PairHarness {
+        let g = topology::pair();
+        let w = Matrix::from_rows(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
+        let w = ConsensusMatrix::new(w, &g).unwrap();
+        let fleet = algorithm.build_fleet(&g, &w, objectives, compressor, step, None);
+        PairHarness {
+            plane: fleet.plane,
+            nodes: fleet.nodes,
+            rng: Xoshiro256pp::seed_from_u64(seed),
+        }
+    }
+
+    impl PairHarness {
+        /// Run one synchronous round `k` with full delivery; returns the
+        /// two outgoing messages (for tx-magnitude inspection).
+        pub fn step(&mut self, k: usize) -> Vec<Outgoing> {
+            let outs: Vec<Outgoing> = (0..2)
+                .map(|i| {
+                    let mut rows = self.plane.rows(i);
+                    self.nodes[i].make_message(k, &mut rows, &mut self.rng)
+                })
+                .collect();
+            for i in 0..2 {
+                let j = 1 - i;
+                let inbox = vec![(j, StdArc::new(outs[j].payload.clone()))];
+                let mut rows = self.plane.rows(i);
+                self.nodes[i].consume(k, &inbox, &mut rows, &mut self.rng);
+            }
+            outs
+        }
+
+        /// Run rounds `1..=iters`.
+        pub fn run(&mut self, iters: usize) {
+            for k in 1..=iters {
+                self.step(k);
+            }
+        }
+
+        /// Node `i`'s scalar iterate.
+        pub fn x(&self, i: usize) -> f64 {
+            self.plane.x_row(i)[0]
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {

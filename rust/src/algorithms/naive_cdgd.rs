@@ -8,19 +8,19 @@
 
 use super::{CompressorRef, NodeLogic, ObjectiveRef, Outgoing, StepSize};
 use crate::compress::Payload;
+use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
 use crate::rng::Xoshiro256pp;
+use crate::state::NodeRows;
+use std::sync::Arc;
 
-/// Per-node state for naive compressed DGD.
+/// Per-node logic for naive compressed DGD.
 pub struct NaiveCompressedNode {
     id: usize,
-    weights: Vec<f64>,
+    weights: Arc<CsrWeights>,
     objective: ObjectiveRef,
     compressor: CompressorRef,
     step: StepSize,
-    x: Vec<f64>,
-    grad: Vec<f64>,
-    mix: Vec<f64>,
     steps: usize,
 }
 
@@ -28,59 +28,43 @@ impl NaiveCompressedNode {
     /// Create node `id`.
     pub fn new(
         id: usize,
-        weights: Vec<f64>,
+        weights: Arc<CsrWeights>,
         objective: ObjectiveRef,
         compressor: CompressorRef,
         step: StepSize,
     ) -> Self {
-        let p = objective.dim();
-        Self {
-            id,
-            weights,
-            objective,
-            compressor,
-            step,
-            x: vec![0.0; p],
-            grad: vec![0.0; p],
-            mix: vec![0.0; p],
-            steps: 0,
-        }
-    }
-
-    /// Override the initial iterate (e.g. shared pretrained parameters).
-    pub fn with_init(mut self, x0: Vec<f64>) -> Self {
-        assert_eq!(x0.len(), self.x.len());
-        self.x = x0;
-        self
+        Self { id, weights, objective, compressor, step, steps: 0 }
     }
 }
 
 impl NodeLogic for NaiveCompressedNode {
-    fn make_message(&mut self, _round: usize, rng: &mut Xoshiro256pp) -> Outgoing {
-        let c = self.compressor.compress(&self.x, rng);
+    fn make_message(
+        &mut self,
+        _round: usize,
+        rows: &mut NodeRows<'_>,
+        rng: &mut Xoshiro256pp,
+    ) -> Outgoing {
+        let c = self.compressor.compress(rows.x, rng);
         Outgoing {
-            tx_magnitude: vecops::norm_inf(&self.x),
+            tx_magnitude: vecops::norm_inf(rows.x),
             saturated: c.saturated,
             payload: c.payload,
         }
     }
 
-    fn consume(&mut self, round: usize, inbox: &[(usize, std::sync::Arc<Payload>)], _rng: &mut Xoshiro256pp) {
+    fn consume(
+        &mut self,
+        round: usize,
+        inbox: &[(usize, std::sync::Arc<Payload>)],
+        rows: &mut NodeRows<'_>,
+        _rng: &mut Xoshiro256pp,
+    ) {
         // Own term uncompressed (Eq. 5's noise comes from neighbors only).
-        self.mix.copy_from_slice(&self.x);
-        vecops::scale(&mut self.mix, self.weights[self.id]);
-        for (j, payload) in inbox {
-            payload.decode_axpy(self.weights[*j], &mut self.mix);
-        }
-        self.objective.grad_into(&self.x, &mut self.grad);
+        self.weights.mix_inbox_into(self.id, rows.x, inbox, rows.scratch);
+        self.objective.grad_into(rows.x, rows.grad);
         let alpha = self.step.at(round);
-        std::mem::swap(&mut self.x, &mut self.mix);
-        vecops::axpy(-alpha, &self.grad, &mut self.x);
+        vecops::add_scaled(rows.scratch, -alpha, rows.grad, rows.x);
         self.steps += 1;
-    }
-
-    fn state(&self) -> &[f64] {
-        &self.x
     }
 
     fn grad_steps(&self) -> usize {
@@ -90,6 +74,8 @@ impl NodeLogic for NaiveCompressedNode {
 
 #[cfg(test)]
 mod tests {
+    use super::super::testutil::pair_fleet;
+    use super::super::AlgorithmKind;
     use super::*;
     use crate::compress::RandomizedRounding;
     use crate::objective::ScalarQuadratic;
@@ -99,33 +85,24 @@ mod tests {
     /// compression-noise scale instead of settling.
     #[test]
     fn naive_compression_does_not_settle() {
-        let w = [[0.5, 0.5], [0.5, 0.5]];
         let objs: Vec<ObjectiveRef> = vec![
             Arc::new(ScalarQuadratic::new(4.0, 2.0)),
             Arc::new(ScalarQuadratic::new(2.0, -3.0)),
         ];
         let comp: CompressorRef = Arc::new(RandomizedRounding::new());
-        let mut nodes: Vec<NaiveCompressedNode> = (0..2)
-            .map(|i| {
-                NaiveCompressedNode::new(
-                    i,
-                    w[i].to_vec(),
-                    objs[i].clone(),
-                    comp.clone(),
-                    StepSize::Constant(0.02),
-                )
-            })
-            .collect();
-        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut h = pair_fleet(
+            AlgorithmKind::NaiveCompressed,
+            &objs,
+            Some(&comp),
+            StepSize::Constant(0.02),
+            1,
+        );
         let mut tail_dev: f64 = 0.0;
         for k in 1..=2000 {
-            let msgs: Vec<Payload> =
-                nodes.iter_mut().map(|n| n.make_message(k, &mut rng).payload).collect();
-            nodes[0].consume(k, &[(1, Arc::new(msgs[1].clone()))], &mut rng);
-            nodes[1].consume(k, &[(0, Arc::new(msgs[0].clone()))], &mut rng);
+            h.step(k);
             if k > 1500 {
                 // Distance to the true optimum x* = 1/3 stays noise-scale.
-                tail_dev = tail_dev.max((nodes[0].state()[0] - 1.0 / 3.0).abs());
+                tail_dev = tail_dev.max((h.x(0) - 1.0 / 3.0).abs());
             }
         }
         assert!(

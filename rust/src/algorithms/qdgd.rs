@@ -17,8 +17,11 @@
 
 use super::{CompressorRef, NodeLogic, ObjectiveRef, Outgoing, StepSize};
 use crate::compress::Payload;
+use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
 use crate::rng::Xoshiro256pp;
+use crate::state::NodeRows;
+use std::sync::Arc;
 
 /// QDGD hyper-parameters.
 #[derive(Debug, Clone, Copy)]
@@ -35,18 +38,15 @@ impl Default for QdgdOptions {
     }
 }
 
-/// Per-node QDGD state.
+/// Per-node QDGD logic (consensus correction lives in the plane's
+/// scratch row).
 pub struct QdgdNode {
-    #[allow(dead_code)] // kept for diagnostics parity with the other nodes
     id: usize,
-    weights: Vec<f64>,
+    weights: Arc<CsrWeights>,
     objective: ObjectiveRef,
     compressor: CompressorRef,
     step: StepSize,
     opts: QdgdOptions,
-    x: Vec<f64>,
-    grad: Vec<f64>,
-    corr: Vec<f64>,
     steps: usize,
 }
 
@@ -54,32 +54,13 @@ impl QdgdNode {
     /// Create node `id`.
     pub fn new(
         id: usize,
-        weights: Vec<f64>,
+        weights: Arc<CsrWeights>,
         objective: ObjectiveRef,
         compressor: CompressorRef,
         step: StepSize,
         opts: QdgdOptions,
     ) -> Self {
-        let p = objective.dim();
-        Self {
-            id,
-            weights,
-            objective,
-            compressor,
-            step,
-            opts,
-            x: vec![0.0; p],
-            grad: vec![0.0; p],
-            corr: vec![0.0; p],
-            steps: 0,
-        }
-    }
-
-    /// Override the initial iterate (e.g. shared pretrained parameters).
-    pub fn with_init(mut self, x0: Vec<f64>) -> Self {
-        assert_eq!(x0.len(), self.x.len());
-        self.x = x0;
-        self
+        Self { id, weights, objective, compressor, step, opts, steps: 0 }
     }
 
     #[inline]
@@ -89,35 +70,50 @@ impl QdgdNode {
 }
 
 impl NodeLogic for QdgdNode {
-    fn make_message(&mut self, _round: usize, rng: &mut Xoshiro256pp) -> Outgoing {
-        let c = self.compressor.compress(&self.x, rng);
+    fn make_message(
+        &mut self,
+        _round: usize,
+        rows: &mut NodeRows<'_>,
+        rng: &mut Xoshiro256pp,
+    ) -> Outgoing {
+        let c = self.compressor.compress(rows.x, rng);
         Outgoing {
-            tx_magnitude: vecops::norm_inf(&self.x),
+            tx_magnitude: vecops::norm_inf(rows.x),
             saturated: c.saturated,
             payload: c.payload,
         }
     }
 
-    fn consume(&mut self, round: usize, inbox: &[(usize, std::sync::Arc<Payload>)], _rng: &mut Xoshiro256pp) {
+    fn consume(
+        &mut self,
+        round: usize,
+        inbox: &[(usize, std::sync::Arc<Payload>)],
+        rows: &mut NodeRows<'_>,
+        _rng: &mut Xoshiro256pp,
+    ) {
         let eps = self.eps(round);
-        // corr = Σ_j W_ij (Q(x_j) − x_i); self term contributes 0 exactly
-        // (a node needn't quantize its own value).
-        vecops::fill(&mut self.corr, 0.0);
+        // scratch = Σ_j W_ij (Q(x_j) − x_i); self term contributes 0
+        // exactly (a node needn't quantize its own value). This is NOT
+        // the DGD-template sum (`CsrWeights::mix_inbox_into`): there is
+        // no diagonal term and the received weight mass must be
+        // accumulated to subtract `w_sum · x_i`.
+        let w = &self.weights;
+        vecops::fill(rows.scratch, 0.0);
+        let wts = w.row_weights(self.id);
         let mut w_sum = 0.0;
+        let mut slot = 0;
         for (j, payload) in inbox {
-            payload.decode_axpy(self.weights[*j], &mut self.corr);
-            w_sum += self.weights[*j];
+            slot = w.slot_after(self.id, slot, *j);
+            payload.decode_axpy(wts[slot], rows.scratch);
+            w_sum += wts[slot];
+            slot += 1;
         }
-        vecops::axpy(-w_sum, &self.x, &mut self.corr);
-        self.objective.grad_into(&self.x, &mut self.grad);
+        vecops::axpy(-w_sum, rows.x, rows.scratch);
+        self.objective.grad_into(rows.x, rows.grad);
         let alpha = self.step.at(round);
-        vecops::axpy(eps, &self.corr, &mut self.x);
-        vecops::axpy(-alpha, &self.grad, &mut self.x);
+        vecops::axpy(eps, rows.scratch, rows.x);
+        vecops::axpy(-alpha, rows.grad, rows.x);
         self.steps += 1;
-    }
-
-    fn state(&self) -> &[f64] {
-        &self.x
     }
 
     fn grad_steps(&self) -> usize {
@@ -127,6 +123,8 @@ impl NodeLogic for QdgdNode {
 
 #[cfg(test)]
 mod tests {
+    use super::super::testutil::pair_fleet;
+    use super::super::AlgorithmKind;
     use super::*;
     use crate::compress::RandomizedRounding;
     use crate::objective::ScalarQuadratic;
@@ -134,37 +132,25 @@ mod tests {
 
     #[test]
     fn qdgd_converges_on_pair_with_diminishing_steps() {
-        let w = [[0.5, 0.5], [0.5, 0.5]];
         let objs: Vec<ObjectiveRef> = vec![
             Arc::new(ScalarQuadratic::new(4.0, 2.0)),
             Arc::new(ScalarQuadratic::new(2.0, -3.0)),
         ];
         let comp: CompressorRef = Arc::new(RandomizedRounding::new());
-        let mut nodes: Vec<QdgdNode> = (0..2)
-            .map(|i| {
-                QdgdNode::new(
-                    i,
-                    w[i].to_vec(),
-                    objs[i].clone(),
-                    comp.clone(),
-                    StepSize::Diminishing { alpha0: 0.1, eta: 0.75 },
-                    QdgdOptions::default(),
-                )
-            })
-            .collect();
-        let mut rng = Xoshiro256pp::seed_from_u64(4);
-        for k in 1..=20000 {
-            let msgs: Vec<Payload> =
-                nodes.iter_mut().map(|n| n.make_message(k, &mut rng).payload).collect();
-            nodes[0].consume(k, &[(1, Arc::new(msgs[1].clone()))], &mut rng);
-            nodes[1].consume(k, &[(0, Arc::new(msgs[0].clone()))], &mut rng);
-        }
+        let mut h = pair_fleet(
+            AlgorithmKind::Qdgd(QdgdOptions::default()),
+            &objs,
+            Some(&comp),
+            StepSize::Diminishing { alpha0: 0.1, eta: 0.75 },
+            4,
+        );
+        h.run(20000);
         // QDGD converges, but slowly — accept a loose ball.
-        for n in &nodes {
+        for i in 0..2 {
             assert!(
-                (n.state()[0] - 1.0 / 3.0).abs() < 0.4,
+                (h.x(i) - 1.0 / 3.0).abs() < 0.4,
                 "x = {} (QDGD should be near 1/3)",
-                n.state()[0]
+                h.x(i)
             );
         }
     }

@@ -1,19 +1,33 @@
 //! The algorithm registry: every algorithm in the family is a value of
-//! [`AlgorithmKind`], and node construction for all of them goes through
-//! one factory ([`AlgorithmKind::build_nodes`]).
+//! [`AlgorithmKind`], and fleet construction for all of them goes through
+//! one factory ([`AlgorithmKind::build_fleet`]).
 //!
 //! This is the single place in the codebase that knows how to wire a
-//! per-node state machine from (consensus row, neighbor list, objective,
-//! compressor, step schedule). Everything above it — the scenario runner,
-//! experiments, examples, the CLI — declares *which* algorithm to run as
-//! data and never touches node constructors.
+//! run's state: it sizes the [`StatePlane`] arena (dense rows for every
+//! algorithm, mirror arenas for ADC-DGD), lowers the consensus matrix to
+//! its shared [`CsrWeights`] form, applies the per-algorithm iterate
+//! initialization, and builds the per-node state machines. Everything
+//! above it — the scenario runner, experiments, examples, the CLI —
+//! declares *which* algorithm to run as data and never touches node
+//! constructors.
 
 use super::{
     AdcDgdNode, AdcDgdOptions, CompressorRef, DgdNode, DgdTNode, NaiveCompressedNode, NodeLogic,
     ObjectiveRef, QdgdNode, QdgdOptions, StepSize,
 };
-use crate::consensus::ConsensusMatrix;
+use crate::consensus::{ConsensusMatrix, CsrWeights};
+use crate::state::{PlaneLayout, StatePlane};
 use crate::topology::Graph;
+use std::sync::Arc;
+
+/// A runnable fleet: the arena holding all per-node vectors plus the
+/// per-node state machines that borrow rows from it each round.
+pub struct Fleet {
+    /// Arena-backed per-node vector state.
+    pub plane: StatePlane,
+    /// Per-node algorithm logic, indexed like the graph's nodes.
+    pub nodes: Vec<Box<dyn NodeLogic>>,
+}
 
 /// Which algorithm to run, with its hyper-parameters.
 #[derive(Debug, Clone, Copy)]
@@ -56,6 +70,12 @@ impl AlgorithmKind {
         )
     }
 
+    /// Does this algorithm keep mirror estimates (and therefore need the
+    /// plane's mirror arenas)?
+    pub fn needs_mirrors(&self) -> bool {
+        matches!(self, AlgorithmKind::AdcDgd(_))
+    }
+
     /// Engine rounds consumed per gradient iteration (1 for everything
     /// except DGD^t).
     pub fn rounds_per_grad_step(&self) -> usize {
@@ -78,19 +98,14 @@ impl AlgorithmKind {
         })
     }
 
-    /// Build the per-node logic for node `i`. The compressor is required
-    /// when [`Self::needs_compressor`] holds; `init` optionally overrides
-    /// the zero initial iterate.
-    #[allow(clippy::too_many_arguments)]
-    pub fn build_node(
+    /// Build the state machine for node `i` over the shared CSR weights.
+    fn build_node(
         &self,
         i: usize,
-        graph: &Graph,
-        w: &ConsensusMatrix,
+        weights: &Arc<CsrWeights>,
         objectives: &[ObjectiveRef],
         compressor: Option<&CompressorRef>,
         step: StepSize,
-        init: Option<&[f64]>,
     ) -> Box<dyn NodeLogic> {
         let comp = || {
             compressor
@@ -99,59 +114,60 @@ impl AlgorithmKind {
                 })
                 .clone()
         };
-        let row = w.row(i).to_vec();
+        let w = Arc::clone(weights);
         let obj = objectives[i].clone();
-        let node: Box<dyn NodeLogic> = match self {
-            AlgorithmKind::Dgd => {
-                let n = DgdNode::new(i, row, obj, step);
-                match init {
-                    Some(x0) => Box::new(n.with_init(x0.to_vec())),
-                    None => Box::new(n),
-                }
-            }
-            AlgorithmKind::DgdT { t } => {
-                let n = DgdTNode::new(i, row, obj, step, *t);
-                match init {
-                    Some(x0) => Box::new(n.with_init(x0.to_vec())),
-                    None => Box::new(n),
-                }
-            }
+        match self {
+            AlgorithmKind::Dgd => Box::new(DgdNode::new(i, w, obj, step)),
+            AlgorithmKind::DgdT { t } => Box::new(DgdTNode::new(i, w, obj, step, *t)),
             AlgorithmKind::NaiveCompressed => {
-                let n = NaiveCompressedNode::new(i, row, obj, comp(), step);
-                match init {
-                    Some(x0) => Box::new(n.with_init(x0.to_vec())),
-                    None => Box::new(n),
-                }
+                Box::new(NaiveCompressedNode::new(i, w, obj, comp(), step))
             }
             AlgorithmKind::AdcDgd(opts) => {
-                let n = AdcDgdNode::new(
-                    i,
-                    row,
-                    graph.neighbors(i).to_vec(),
-                    obj,
-                    comp(),
-                    step,
-                    *opts,
-                );
-                match init {
-                    Some(x0) => Box::new(n.with_init(x0.to_vec())),
-                    None => Box::new(n),
-                }
+                Box::new(AdcDgdNode::new(i, w, obj, comp(), step, *opts))
             }
-            AlgorithmKind::Qdgd(opts) => {
-                let n = QdgdNode::new(i, row, obj, comp(), step, *opts);
-                match init {
-                    Some(x0) => Box::new(n.with_init(x0.to_vec())),
-                    None => Box::new(n),
-                }
-            }
-        };
-        node
+            AlgorithmKind::Qdgd(opts) => Box::new(QdgdNode::new(i, w, obj, comp(), step, *opts)),
+        }
     }
 
-    /// Build all nodes for a run, validating the (graph, W, objectives)
-    /// triple first.
-    pub fn build_nodes(
+    /// Write the algorithm's iterate initialization into the plane:
+    /// `init` overrides everything; otherwise ADC-DGD applies the
+    /// paper's `x_{i,1} = −α₁ ∇f_i(0)` and the rest start at zero.
+    /// Mirrors always start at zero, so a receiver's first differential
+    /// bootstraps consistently even under an `init` override.
+    fn init_plane(
+        &self,
+        plane: &mut StatePlane,
+        objectives: &[ObjectiveRef],
+        step: StepSize,
+        init: Option<&[f64]>,
+    ) {
+        let p = plane.p();
+        if let Some(x0) = init {
+            for i in 0..plane.n() {
+                plane.x_row_mut(i).copy_from_slice(x0);
+            }
+            return;
+        }
+        if let AlgorithmKind::AdcDgd(_) = self {
+            let zero = vec![0.0; p];
+            let mut g0 = vec![0.0; p];
+            let alpha1 = step.at(1);
+            for (i, obj) in objectives.iter().enumerate() {
+                obj.grad_into(&zero, &mut g0);
+                for (x, g) in plane.x_row_mut(i).iter_mut().zip(g0.iter()) {
+                    *x = -alpha1 * g;
+                }
+            }
+        }
+    }
+
+    /// Build the run's fleet: validate the (graph, W, objectives)
+    /// triple, lower `W` to CSR, allocate the state plane (with mirror
+    /// arenas when [`Self::needs_mirrors`]), initialize the iterates,
+    /// and construct every node's logic. The compressor is required when
+    /// [`Self::needs_compressor`] holds; `init` optionally overrides the
+    /// initial iterate of every node.
+    pub fn build_fleet(
         &self,
         graph: &Graph,
         w: &ConsensusMatrix,
@@ -159,17 +175,27 @@ impl AlgorithmKind {
         compressor: Option<&CompressorRef>,
         step: StepSize,
         init: Option<&[f64]>,
-    ) -> Vec<Box<dyn NodeLogic>> {
-        assert_eq!(graph.num_nodes(), w.n(), "graph/W size mismatch");
-        assert_eq!(graph.num_nodes(), objectives.len(), "graph/objectives mismatch");
+    ) -> Fleet {
+        let n = graph.num_nodes();
+        assert_eq!(n, w.n(), "graph/W size mismatch");
+        assert_eq!(n, objectives.len(), "graph/objectives mismatch");
         let p = objectives[0].dim();
         assert!(objectives.iter().all(|o| o.dim() == p), "objective dims differ");
         if let Some(x0) = init {
             assert_eq!(x0.len(), p, "init dim mismatch");
         }
-        (0..graph.num_nodes())
-            .map(|i| self.build_node(i, graph, w, objectives, compressor, step, init))
-            .collect()
+        let weights = Arc::new(CsrWeights::from_consensus(w, graph));
+        let layout = if self.needs_mirrors() {
+            PlaneLayout::with_mirrors(n, p, (0..n).map(|i| graph.degree(i)).collect())
+        } else {
+            PlaneLayout::dense(n, p)
+        };
+        let mut plane = StatePlane::new(&layout);
+        self.init_plane(&mut plane, objectives, step, init);
+        let nodes = (0..n)
+            .map(|i| self.build_node(i, &weights, objectives, compressor, step))
+            .collect();
+        Fleet { plane, nodes }
     }
 }
 
@@ -177,7 +203,7 @@ impl AlgorithmKind {
 mod tests {
     use super::*;
     use crate::compress::RandomizedRounding;
-    use crate::objective::ScalarQuadratic;
+    use crate::objective::{Objective, ScalarQuadratic};
     use std::sync::Arc;
 
     fn setup() -> (Graph, ConsensusMatrix, Vec<ObjectiveRef>) {
@@ -189,27 +215,44 @@ mod tests {
         (g, w, objs)
     }
 
-    #[test]
-    fn registry_builds_every_kind() {
-        let (g, w, objs) = setup();
-        let comp: CompressorRef = Arc::new(RandomizedRounding::new());
-        let kinds = [
+    fn all_kinds() -> [AlgorithmKind; 5] {
+        [
             AlgorithmKind::Dgd,
             AlgorithmKind::DgdT { t: 3 },
             AlgorithmKind::NaiveCompressed,
             AlgorithmKind::AdcDgd(AdcDgdOptions::default()),
             AlgorithmKind::Qdgd(QdgdOptions::default()),
-        ];
-        for kind in kinds {
-            let nodes = kind.build_nodes(
-                &g,
-                &w,
-                &objs,
-                Some(&comp),
-                StepSize::Constant(0.01),
-                None,
-            );
-            assert_eq!(nodes.len(), 4, "{}", kind.name());
+        ]
+    }
+
+    #[test]
+    fn registry_builds_every_kind() {
+        let (g, w, objs) = setup();
+        let comp: CompressorRef = Arc::new(RandomizedRounding::new());
+        for kind in all_kinds() {
+            let fleet = kind.build_fleet(&g, &w, &objs, Some(&comp), StepSize::Constant(0.01), None);
+            assert_eq!(fleet.nodes.len(), 4, "{}", kind.name());
+            assert_eq!(fleet.plane.n(), 4, "{}", kind.name());
+            assert_eq!(fleet.plane.p(), 1, "{}", kind.name());
+            assert_eq!(fleet.plane.has_mirrors(), kind.needs_mirrors(), "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn adc_paper_init_is_applied() {
+        let (g, w, objs) = setup();
+        let comp: CompressorRef = Arc::new(RandomizedRounding::new());
+        let step = StepSize::Constant(0.01);
+        let fleet = AlgorithmKind::AdcDgd(AdcDgdOptions::default())
+            .build_fleet(&g, &w, &objs, Some(&comp), step, None);
+        for (i, obj) in objs.iter().enumerate() {
+            let g0 = obj.grad(&[0.0])[0];
+            assert_eq!(fleet.plane.x_row(i), &[-0.01 * g0], "node {i}");
+        }
+        // Non-mirror algorithms start at zero.
+        let dgd = AlgorithmKind::Dgd.build_fleet(&g, &w, &objs, None, step, None);
+        for i in 0..4 {
+            assert_eq!(dgd.plane.x_row(i), &[0.0]);
         }
     }
 
@@ -218,14 +261,8 @@ mod tests {
         let (g, w, objs) = setup();
         let comp: CompressorRef = Arc::new(RandomizedRounding::new());
         let x0 = vec![0.75];
-        for kind in [
-            AlgorithmKind::Dgd,
-            AlgorithmKind::DgdT { t: 2 },
-            AlgorithmKind::NaiveCompressed,
-            AlgorithmKind::AdcDgd(AdcDgdOptions::default()),
-            AlgorithmKind::Qdgd(QdgdOptions::default()),
-        ] {
-            let nodes = kind.build_nodes(
+        for kind in all_kinds() {
+            let fleet = kind.build_fleet(
                 &g,
                 &w,
                 &objs,
@@ -233,8 +270,8 @@ mod tests {
                 StepSize::Constant(0.01),
                 Some(&x0),
             );
-            for n in &nodes {
-                assert_eq!(n.state(), &x0[..], "{}", kind.name());
+            for i in 0..4 {
+                assert_eq!(fleet.plane.x_row(i), &x0[..], "{}", kind.name());
             }
         }
     }
@@ -243,7 +280,7 @@ mod tests {
     #[should_panic(expected = "requires a compressor")]
     fn missing_compressor_panics_clearly() {
         let (g, w, objs) = setup();
-        let _ = AlgorithmKind::AdcDgd(AdcDgdOptions::default()).build_nodes(
+        let _ = AlgorithmKind::AdcDgd(AdcDgdOptions::default()).build_fleet(
             &g,
             &w,
             &objs,
@@ -256,7 +293,9 @@ mod tests {
     #[test]
     fn metadata_helpers() {
         assert!(AlgorithmKind::AdcDgd(AdcDgdOptions::default()).needs_compressor());
+        assert!(AlgorithmKind::AdcDgd(AdcDgdOptions::default()).needs_mirrors());
         assert!(!AlgorithmKind::Dgd.needs_compressor());
+        assert!(!AlgorithmKind::Dgd.needs_mirrors());
         assert_eq!(AlgorithmKind::DgdT { t: 5 }.rounds_per_grad_step(), 5);
         assert_eq!(AlgorithmKind::parse("adc", 3, 1.0).unwrap().name(), "adc");
         assert!(AlgorithmKind::parse("nope", 1, 1.0).is_err());

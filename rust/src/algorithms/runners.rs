@@ -1,6 +1,13 @@
 //! Legacy one-call runners, kept as thin deprecated wrappers over the
 //! declarative pathway so external callers and benches keep working.
 //!
+//! **Removal target:** these wrappers will be deleted in 0.4.0 once the
+//! remaining callers (`rust/tests/convergence.rs` and any external
+//! users) migrate to [`ScenarioSpec`]. Until then each wrapper has a
+//! smoke test pinning its delegation to [`run_scenario`]
+//! (`wrapper_smoke_*` below), so the compatibility surface cannot
+//! silently drift.
+//!
 //! Each function builds a [`ScenarioSpec`] with `Custom` topology /
 //! weights / objectives and delegates to
 //! [`crate::coordinator::run_scenario`] — there is no separate execution
@@ -34,7 +41,11 @@ fn spec_for(
 }
 
 /// Run classic DGD (Algorithm 1).
-#[deprecated(since = "0.2.0", note = "build a ScenarioSpec and call coordinator::run_scenario")]
+#[deprecated(
+    since = "0.2.0",
+    note = "build a ScenarioSpec and call coordinator::run_scenario; \
+            this wrapper is scheduled for removal in 0.4.0"
+)]
 pub fn run_dgd(
     graph: &Graph,
     w: &ConsensusMatrix,
@@ -54,7 +65,11 @@ pub fn run_dgd(
 /// Run DGD^t with `t` consensus exchanges per gradient step. Note
 /// `cfg.iterations` counts engine *rounds*; `t·K` rounds perform `K`
 /// gradient iterations.
-#[deprecated(since = "0.2.0", note = "build a ScenarioSpec and call coordinator::run_scenario")]
+#[deprecated(
+    since = "0.2.0",
+    note = "build a ScenarioSpec and call coordinator::run_scenario; \
+            this wrapper is scheduled for removal in 0.4.0"
+)]
 pub fn run_dgd_t(
     graph: &Graph,
     w: &ConsensusMatrix,
@@ -73,7 +88,11 @@ pub fn run_dgd_t(
 }
 
 /// Run DGD with directly compressed iterates (Eq. 5 — diverges; Fig. 1).
-#[deprecated(since = "0.2.0", note = "build a ScenarioSpec and call coordinator::run_scenario")]
+#[deprecated(
+    since = "0.2.0",
+    note = "build a ScenarioSpec and call coordinator::run_scenario; \
+            this wrapper is scheduled for removal in 0.4.0"
+)]
 pub fn run_naive_compressed(
     graph: &Graph,
     w: &ConsensusMatrix,
@@ -92,7 +111,11 @@ pub fn run_naive_compressed(
 }
 
 /// Run **ADC-DGD** (Algorithm 2 — the paper's method).
-#[deprecated(since = "0.2.0", note = "build a ScenarioSpec and call coordinator::run_scenario")]
+#[deprecated(
+    since = "0.2.0",
+    note = "build a ScenarioSpec and call coordinator::run_scenario; \
+            this wrapper is scheduled for removal in 0.4.0"
+)]
 pub fn run_adc_dgd(
     graph: &Graph,
     w: &ConsensusMatrix,
@@ -112,7 +135,11 @@ pub fn run_adc_dgd(
 }
 
 /// Run the QDGD-style baseline (Reisizadeh et al. 2018).
-#[deprecated(since = "0.2.0", note = "build a ScenarioSpec and call coordinator::run_scenario")]
+#[deprecated(
+    since = "0.2.0",
+    note = "build a ScenarioSpec and call coordinator::run_scenario; \
+            this wrapper is scheduled for removal in 0.4.0"
+)]
 pub fn run_qdgd(
     graph: &Graph,
     w: &ConsensusMatrix,
@@ -209,6 +236,91 @@ mod tests {
         );
         assert_eq!(out.rounds_completed, 500);
         assert!(out.metrics.grad_norm.last().unwrap().is_finite());
+    }
+
+    /// One smoke test per wrapper: delegation to `run_scenario` must
+    /// stay bit-exact (coverage required until the 0.4.0 removal).
+    fn assert_delegates(legacy: RunOutput, algorithm: AlgorithmKind, compressor: CompressorSpec) {
+        let (g, w, objs) = four_node();
+        let cfg = smoke_cfg();
+        let spec = ScenarioSpec {
+            algorithm,
+            topology: TopologySpec::Custom(g),
+            weights: WeightSpec::Custom(w),
+            objective: ObjectiveSpec::Custom(objs),
+            compressor,
+            config: cfg,
+            init: None,
+        };
+        let modern = run_scenario(&spec);
+        assert_eq!(legacy.final_states, modern.final_states, "{}", algorithm.name());
+        assert_eq!(legacy.total_bytes, modern.total_bytes, "{}", algorithm.name());
+        assert_eq!(
+            legacy.metrics.grad_norm,
+            modern.metrics.grad_norm,
+            "{}",
+            algorithm.name()
+        );
+    }
+
+    fn smoke_cfg() -> RunConfig {
+        RunConfig {
+            iterations: 60,
+            step_size: StepSize::Constant(0.02),
+            record_every: 20,
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn wrapper_smoke_run_dgd() {
+        let (g, w, objs) = four_node();
+        let legacy = run_dgd(&g, &w, &objs, &smoke_cfg());
+        assert_delegates(legacy, AlgorithmKind::Dgd, CompressorSpec::None);
+    }
+
+    #[test]
+    fn wrapper_smoke_run_dgd_t() {
+        let (g, w, objs) = four_node();
+        let legacy = run_dgd_t(&g, &w, &objs, 3, &smoke_cfg());
+        assert_delegates(legacy, AlgorithmKind::DgdT { t: 3 }, CompressorSpec::None);
+    }
+
+    #[test]
+    fn wrapper_smoke_run_naive_compressed() {
+        let (g, w, objs) = four_node();
+        let comp: CompressorRef = Arc::new(RandomizedRounding::new());
+        let legacy = run_naive_compressed(&g, &w, &objs, comp.clone(), &smoke_cfg());
+        assert_delegates(
+            legacy,
+            AlgorithmKind::NaiveCompressed,
+            CompressorSpec::Custom(comp),
+        );
+    }
+
+    #[test]
+    fn wrapper_smoke_run_adc_dgd() {
+        let (g, w, objs) = four_node();
+        let comp: CompressorRef = Arc::new(RandomizedRounding::new());
+        let legacy =
+            run_adc_dgd(&g, &w, &objs, comp.clone(), &AdcDgdOptions::default(), &smoke_cfg());
+        assert_delegates(
+            legacy,
+            AlgorithmKind::AdcDgd(AdcDgdOptions::default()),
+            CompressorSpec::Custom(comp),
+        );
+    }
+
+    #[test]
+    fn wrapper_smoke_run_qdgd() {
+        let (g, w, objs) = four_node();
+        let comp: CompressorRef = Arc::new(RandomizedRounding::new());
+        let legacy = run_qdgd(&g, &w, &objs, comp.clone(), &QdgdOptions::default(), &smoke_cfg());
+        assert_delegates(
+            legacy,
+            AlgorithmKind::Qdgd(QdgdOptions::default()),
+            CompressorSpec::Custom(comp),
+        );
     }
 
     /// The wrappers must agree with the declarative pathway exactly.

@@ -1,0 +1,251 @@
+//! Compressed-sparse-row view of a consensus matrix.
+//!
+//! The dense [`super::ConsensusMatrix`] costs `O(N²)` and forces every
+//! node to scan an `N`-length weight row; at thousands of nodes that is
+//! both the memory and the cache bottleneck of the mixing step. A
+//! [`CsrWeights`] stores only the `2E` off-diagonal entries plus the
+//! diagonal, in ascending-neighbor order per row — exactly the order the
+//! engines deliver (sender-sorted) inboxes in, so the fleet-wide mixing
+//! step `x^{k+1} = Z x̃^k − α_k ∇f(x^k)` (paper Eq. 10) becomes a
+//! row-parallel sparse-matrix × dense-matrix product over the state
+//! plane with bit-identical floating-point reduction order.
+
+use super::ConsensusMatrix;
+use crate::compress::Payload;
+use crate::linalg::vecops;
+use crate::topology::Graph;
+use std::sync::Arc;
+
+/// A consensus matrix in CSR form: per-row diagonal weight plus the
+/// off-diagonal (neighbor) weights in ascending column order.
+#[derive(Debug, Clone)]
+pub struct CsrWeights {
+    n: usize,
+    diag: Vec<f64>,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    weights: Vec<f64>,
+}
+
+impl CsrWeights {
+    /// Build the CSR view of a validated consensus matrix over its
+    /// topology. Row `i` lists `g.neighbors(i)` (already ascending) with
+    /// the matching `W_ij` entries.
+    pub fn from_consensus(w: &ConsensusMatrix, g: &Graph) -> Self {
+        let n = w.n();
+        assert_eq!(n, g.num_nodes(), "graph/W size mismatch");
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices = Vec::with_capacity(2 * g.num_edges());
+        let mut weights = Vec::with_capacity(2 * g.num_edges());
+        let mut diag = Vec::with_capacity(n);
+        indptr.push(0);
+        for i in 0..n {
+            for &j in g.neighbors(i) {
+                indices.push(j);
+                weights.push(w.weight(i, j));
+            }
+            indptr.push(indices.len());
+            diag.push(w.weight(i, i));
+        }
+        Self { n, diag, indptr, indices, weights }
+    }
+
+    /// Assemble from raw parts (tests / custom wiring). `indptr` has
+    /// `n + 1` entries; each row's `indices` must be strictly ascending.
+    pub fn from_parts(
+        diag: Vec<f64>,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        weights: Vec<f64>,
+    ) -> Self {
+        let n = diag.len();
+        assert_eq!(indptr.len(), n + 1, "indptr must have n+1 entries");
+        assert_eq!(indptr[0], 0, "indptr must start at 0");
+        assert_eq!(*indptr.last().unwrap(), indices.len(), "indptr must end at nnz");
+        assert_eq!(indices.len(), weights.len(), "indices/weights length mismatch");
+        for w in indptr.windows(2) {
+            assert!(w[0] <= w[1], "indptr must be non-decreasing");
+            assert!(
+                indices[w[0]..w[1]].windows(2).all(|c| c[0] < c[1]),
+                "row indices must be strictly ascending"
+            );
+        }
+        Self { n, diag, indptr, indices, weights }
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Stored off-diagonal entries (`2E`).
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Diagonal weight `W_ii`.
+    #[inline]
+    pub fn diag(&self, i: usize) -> f64 {
+        self.diag[i]
+    }
+
+    /// Row `i`'s neighbor columns (ascending).
+    #[inline]
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.indices[self.indptr[i]..self.indptr[i + 1]]
+    }
+
+    /// Row `i`'s off-diagonal weights, aligned with
+    /// [`Self::neighbors`].
+    #[inline]
+    pub fn row_weights(&self, i: usize) -> &[f64] {
+        &self.weights[self.indptr[i]..self.indptr[i + 1]]
+    }
+
+    /// Degree of node `i`.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// Off-diagonal weight `W_ij`, if `j` is a neighbor of `i`.
+    pub fn weight(&self, i: usize, j: usize) -> Option<f64> {
+        self.neighbors(i).binary_search(&j).ok().map(|s| self.row_weights(i)[s])
+    }
+
+    /// Resolve sender `j` to its slot in row `i`, resuming an in-order
+    /// merge from `from_slot`. Inboxes are sender-sorted and rows are
+    /// ascending, so a linear merge resolves a whole inbox in `O(deg)`.
+    #[inline]
+    pub fn slot_after(&self, i: usize, from_slot: usize, j: usize) -> usize {
+        let nbrs = self.neighbors(i);
+        let mut s = from_slot;
+        while s < nbrs.len() && nbrs[s] != j {
+            s += 1;
+        }
+        assert!(s < nbrs.len(), "message from non-neighbor {j}");
+        s
+    }
+
+    /// One row of the fleet-wide mixing product over a sender-sorted
+    /// inbox of encoded payloads:
+    /// `out = W_ii · x + Σ_{(j,d) ∈ inbox} W_ij · decode(d)` — the
+    /// DGD-template consensus sum (own term uncompressed, absent senders
+    /// — lost messages — contribute nothing). This is **the**
+    /// bit-identity-critical reduction: one shared implementation keeps
+    /// the accumulation order (diagonal first, then senders ascending)
+    /// uniform across every algorithm that mixes raw/quantized iterates.
+    pub fn mix_inbox_into(
+        &self,
+        i: usize,
+        x: &[f64],
+        inbox: &[(usize, Arc<Payload>)],
+        out: &mut [f64],
+    ) {
+        vecops::scale_into(self.diag[i], x, out);
+        let wts = self.row_weights(i);
+        let mut slot = 0;
+        for (j, payload) in inbox {
+            slot = self.slot_after(i, slot, *j);
+            payload.decode_axpy(wts[slot], out);
+            slot += 1;
+        }
+    }
+
+    /// One row of the fleet-wide mixing product over mirror rows:
+    /// `out = W_ii · self_row + Σ_s W_{i,nbr(s)} · mirrors[s]`, with
+    /// `mirrors` the flattened `deg × p` slot-ordered mirror rows.
+    /// Accumulation order (diagonal first, then ascending neighbors)
+    /// matches the historical per-node loop bit-for-bit.
+    pub fn mix_row_into(&self, i: usize, self_row: &[f64], mirrors: &[f64], out: &mut [f64]) {
+        let p = self_row.len();
+        debug_assert_eq!(mirrors.len(), self.degree(i) * p);
+        vecops::scale_into(self.diag[i], self_row, out);
+        for (s, &w) in self.row_weights(i).iter().enumerate() {
+            vecops::axpy(w, &mirrors[s * p..(s + 1) * p], out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::metropolis;
+    use crate::topology;
+
+    #[test]
+    fn csr_matches_dense_on_metropolis_ring() {
+        let g = topology::ring(6);
+        let w = metropolis(&g);
+        let csr = CsrWeights::from_consensus(&w, &g);
+        assert_eq!(csr.n(), 6);
+        assert_eq!(csr.nnz(), 12);
+        for i in 0..6 {
+            assert_eq!(csr.diag(i), w.weight(i, i));
+            assert_eq!(csr.neighbors(i), g.neighbors(i));
+            assert_eq!(csr.degree(i), 2);
+            for (&j, &wij) in csr.neighbors(i).iter().zip(csr.row_weights(i)) {
+                assert_eq!(wij, w.weight(i, j));
+                assert_eq!(csr.weight(i, j), Some(wij));
+            }
+        }
+        assert_eq!(csr.weight(0, 3), None);
+    }
+
+    #[test]
+    fn slot_merge_resolves_sorted_senders() {
+        let g = topology::star(5); // hub 0 with neighbors 1..=4
+        let w = metropolis(&g);
+        let csr = CsrWeights::from_consensus(&w, &g);
+        let mut s = 0;
+        for j in [1usize, 3, 4] {
+            s = csr.slot_after(0, s, j);
+            assert_eq!(csr.neighbors(0)[s], j);
+            s += 1;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-neighbor")]
+    fn slot_merge_rejects_strangers() {
+        let g = topology::path(3);
+        let w = metropolis(&g);
+        let csr = CsrWeights::from_consensus(&w, &g);
+        csr.slot_after(0, 0, 2);
+    }
+
+    #[test]
+    fn mix_row_matches_manual_loop() {
+        let g = topology::ring(4);
+        let w = metropolis(&g);
+        let csr = CsrWeights::from_consensus(&w, &g);
+        let p = 3;
+        let self_row = vec![1.0, -2.0, 0.5];
+        let mirrors: Vec<f64> = (0..csr.degree(0) * p).map(|k| k as f64 * 0.25).collect();
+        let mut out = vec![f64::NAN; p];
+        csr.mix_row_into(0, &self_row, &mirrors, &mut out);
+        let mut expect: Vec<f64> = self_row.iter().map(|v| v * csr.diag(0)).collect();
+        for (s, &wij) in csr.row_weights(0).iter().enumerate() {
+            for e in 0..p {
+                expect[e] += wij * mirrors[s * p + e];
+            }
+        }
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn from_parts_validates_shape() {
+        let csr = CsrWeights::from_parts(
+            vec![0.5, 0.5],
+            vec![0, 1, 2],
+            vec![1, 0],
+            vec![0.5, 0.5],
+        );
+        assert_eq!(csr.degree(0), 1);
+        assert_eq!(csr.weight(1, 0), Some(0.5));
+        let bad = std::panic::catch_unwind(|| {
+            CsrWeights::from_parts(vec![0.5], vec![0, 2], vec![1, 0], vec![0.5, 0.5])
+        });
+        assert!(bad.is_err(), "descending row indices must be rejected");
+    }
+}

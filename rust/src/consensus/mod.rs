@@ -7,7 +7,9 @@
 //! `β = max(|λ₂|, |λ_N|) < 1` governs consensus speed.
 
 mod builders;
+mod csr;
 mod matrix;
 
 pub use builders::{custom, lazy_metropolis, max_degree, metropolis, paper_four_node_w};
+pub use csr::CsrWeights;
 pub use matrix::{ConsensusMatrix, ValidationError};

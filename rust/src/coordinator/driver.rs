@@ -1,9 +1,9 @@
 //! The run driver: builds per-node RNG streams and the bus, executes the
-//! selected engine, computes derived metrics each recorded round, and
-//! aggregates repeated trials.
+//! selected engine over the fleet's state plane, computes derived
+//! metrics each recorded round, and aggregates repeated trials.
 
 use super::{EngineKind, RunConfig};
-use crate::algorithms::{NodeLogic, ObjectiveRef};
+use crate::algorithms::{Fleet, ObjectiveRef};
 use crate::engine::{pool, sequential, threaded, RoundTelemetry};
 use crate::linalg::vecops;
 use crate::metrics::{RoundRecord, RunMetrics};
@@ -112,17 +112,19 @@ impl<'a> MetricHelper<'a> {
     }
 }
 
-/// Run a set of prebuilt nodes over `graph` under `cfg`. `objectives[i]`
+/// Run a prebuilt fleet over `graph` under `cfg`. `objectives[i]`
 /// must be node `i`'s objective (used only for metric evaluation — the
 /// nodes own their own references for gradient computation).
-pub fn run_nodes(
+pub fn run_fleet(
     graph: &Graph,
     objectives: &[ObjectiveRef],
-    mut nodes: Vec<Box<dyn NodeLogic>>,
+    fleet: Fleet,
     cfg: &RunConfig,
 ) -> RunOutput {
+    let Fleet { mut plane, mut nodes } = fleet;
     let n = graph.num_nodes();
     assert_eq!(nodes.len(), n);
+    assert_eq!(plane.n(), n);
     assert_eq!(objectives.len(), n);
     let mut rngs = node_rngs(cfg.seed, n);
     let bus = Bus::new(graph, cfg.link, cfg.seed ^ 0xB0B);
@@ -133,10 +135,15 @@ pub fn run_nodes(
     match cfg.engine {
         EngineKind::Sequential => {
             let mut bus = bus;
-            let completed =
-                sequential::run(&mut nodes, &mut rngs, &mut bus, total_rounds, |telem, ns, b| {
+            let completed = sequential::run(
+                &mut nodes,
+                &mut plane,
+                &mut rngs,
+                &mut bus,
+                total_rounds,
+                |telem, ns, pl, b| {
                     if helper.should_record(&telem, total_rounds) {
-                        let states: Vec<&[f64]> = ns.iter().map(|x| x.state()).collect();
+                        let states: Vec<&[f64]> = (0..n).map(|i| pl.x_row(i)).collect();
                         let grad_steps = ns.iter().map(|x| x.grad_steps()).max().unwrap_or(0);
                         let rec = helper.record(&telem, &states, grad_steps, b);
                         let stop =
@@ -150,9 +157,10 @@ pub fn run_nodes(
                         return !stop;
                     }
                     true
-                });
+                },
+            );
             RunOutput {
-                final_states: nodes.iter().map(|x| x.state().to_vec()).collect(),
+                final_states: plane.states(),
                 rounds_completed: completed,
                 total_bytes: bus.total_bytes(),
                 dropped_messages: bus.total_dropped(),
@@ -161,8 +169,8 @@ pub fn run_nodes(
             }
         }
         EngineKind::Threaded => {
-            let (nodes, bus, completed) =
-                threaded::run(nodes, rngs, bus, total_rounds, |telem, snap, b| {
+            let (_nodes, bus, completed) =
+                threaded::run(nodes, &mut plane, rngs, bus, total_rounds, |telem, snap, b| {
                     if helper.should_record(&telem, total_rounds) {
                         let states: Vec<&[f64]> =
                             snap.states.iter().map(|s| s.as_slice()).collect();
@@ -181,7 +189,7 @@ pub fn run_nodes(
                     true
                 });
             RunOutput {
-                final_states: nodes.iter().map(|x| x.state().to_vec()).collect(),
+                final_states: plane.states(),
                 rounds_completed: completed,
                 total_bytes: bus.total_bytes(),
                 dropped_messages: bus.total_dropped(),
@@ -196,8 +204,15 @@ pub fn run_nodes(
             let want_cfg = *cfg;
             let want =
                 move |round: usize| round_is_recorded(&want_cfg, round, total_rounds);
-            let (nodes, bus, completed) =
-                pool::run(nodes, rngs, bus, total_rounds, workers, want, |telem, snap, b| {
+            let (_nodes, bus, completed) = pool::run(
+                nodes,
+                &mut plane,
+                rngs,
+                bus,
+                total_rounds,
+                workers,
+                want,
+                |telem, snap, b| {
                     let states: Vec<&[f64]> =
                         snap.states.iter().map(|s| s.as_slice()).collect();
                     let grad_steps = snap.grad_steps.iter().copied().max().unwrap_or(0);
@@ -210,9 +225,10 @@ pub fn run_nodes(
                         metrics.push(rec);
                     }
                     !stop
-                });
+                },
+            );
             RunOutput {
-                final_states: nodes.iter().map(|x| x.state().to_vec()).collect(),
+                final_states: plane.states(),
                 rounds_completed: completed,
                 total_bytes: bus.total_bytes(),
                 dropped_messages: bus.total_dropped(),
@@ -224,7 +240,7 @@ pub fn run_nodes(
 }
 
 /// Repeat a run `trials` times with seeds `seed0..seed0+trials`, building
-/// fresh nodes per trial via `factory(trial_seed)`. Returns all outputs
+/// a fresh fleet per trial via `factory(trial_seed)`. Returns all outputs
 /// (the experiment layer averages what it needs — the paper averages over
 /// 100 trials in Figs. 7/10).
 pub fn run_trials(
@@ -232,14 +248,14 @@ pub fn run_trials(
     objectives: &[ObjectiveRef],
     cfg: &RunConfig,
     trials: usize,
-    mut factory: impl FnMut(u64) -> Vec<Box<dyn NodeLogic>>,
+    mut factory: impl FnMut(u64) -> Fleet,
 ) -> Vec<RunOutput> {
     (0..trials)
         .map(|t| {
             let seed = cfg.seed.wrapping_add(t as u64);
             let mut c = *cfg;
             c.seed = seed;
-            run_nodes(graph, objectives, factory(seed), &c)
+            run_fleet(graph, objectives, factory(seed), &c)
         })
         .collect()
 }
@@ -247,26 +263,30 @@ pub fn run_trials(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algorithms::{DgdNode, StepSize};
+    use crate::algorithms::{AlgorithmKind, StepSize};
+    use crate::consensus::ConsensusMatrix;
+    use crate::linalg::Matrix;
     use crate::objective::ScalarQuadratic;
     use std::sync::Arc;
 
-    fn pair_setup() -> (Graph, Vec<ObjectiveRef>, [[f64; 2]; 2]) {
+    fn pair_setup() -> (Graph, Vec<ObjectiveRef>, ConsensusMatrix) {
         let g = crate::topology::pair();
         let objs: Vec<ObjectiveRef> = vec![
             Arc::new(ScalarQuadratic::new(4.0, 2.0)),
             Arc::new(ScalarQuadratic::new(2.0, -3.0)),
         ];
-        (g, objs, [[0.5, 0.5], [0.5, 0.5]])
+        let w = Matrix::from_rows(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
+        let w = ConsensusMatrix::new(w, &g).unwrap();
+        (g, objs, w)
     }
 
-    fn dgd_nodes(objs: &[ObjectiveRef], w: &[[f64; 2]; 2], step: StepSize) -> Vec<Box<dyn NodeLogic>> {
-        (0..2)
-            .map(|i| {
-                Box::new(DgdNode::new(i, w[i].to_vec(), objs[i].clone(), step))
-                    as Box<dyn NodeLogic>
-            })
-            .collect()
+    fn dgd_fleet(
+        g: &Graph,
+        objs: &[ObjectiveRef],
+        w: &ConsensusMatrix,
+        step: StepSize,
+    ) -> Fleet {
+        AlgorithmKind::Dgd.build_fleet(g, w, objs, None, step, None)
     }
 
     #[test]
@@ -278,8 +298,8 @@ mod tests {
             record_every: 10,
             ..RunConfig::default()
         };
-        let nodes = dgd_nodes(&objs, &w, cfg.step_size);
-        let out = run_nodes(&g, &objs, nodes, &cfg);
+        let fleet = dgd_fleet(&g, &objs, &w, cfg.step_size);
+        let out = run_fleet(&g, &objs, fleet, &cfg);
         assert_eq!(out.rounds_completed, 500);
         assert_eq!(out.metrics.len(), 50);
         let last = *out.metrics.grad_norm.last().unwrap();
@@ -297,7 +317,8 @@ mod tests {
             Arc::new(ScalarQuadratic::new(1.0, 1.0)),
             Arc::new(ScalarQuadratic::new(1.0, 1.0)),
         ];
-        let w = [[0.5, 0.5], [0.5, 0.5]];
+        let w = Matrix::from_rows(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
+        let w = ConsensusMatrix::new(w, &g).unwrap();
         let cfg = RunConfig {
             iterations: 100_000,
             step_size: StepSize::Constant(0.1),
@@ -305,8 +326,8 @@ mod tests {
             record_every: 1,
             ..RunConfig::default()
         };
-        let nodes = dgd_nodes(&objs, &w, cfg.step_size);
-        let out = run_nodes(&g, &objs, nodes, &cfg);
+        let fleet = dgd_fleet(&g, &objs, &w, cfg.step_size);
+        let out = run_fleet(&g, &objs, fleet, &cfg);
         assert!(out.rounds_completed < 1000, "should stop early");
         assert!(*out.metrics.grad_norm.last().unwrap() <= 1e-6);
     }
@@ -322,8 +343,8 @@ mod tests {
                 engine,
                 ..RunConfig::default()
             };
-            let nodes = dgd_nodes(&objs, &w, cfg.step_size);
-            run_nodes(&g, &objs, nodes, &cfg)
+            let fleet = dgd_fleet(&g, &objs, &w, cfg.step_size);
+            run_fleet(&g, &objs, fleet, &cfg)
         };
         let a = mk(EngineKind::Sequential);
         let b = mk(EngineKind::Threaded);
@@ -340,7 +361,8 @@ mod tests {
             record_every: 50,
             ..RunConfig::default()
         };
-        let outs = run_trials(&g, &objs, &cfg, 3, |_seed| dgd_nodes(&objs, &w, cfg.step_size));
+        let outs =
+            run_trials(&g, &objs, &cfg, 3, |_seed| dgd_fleet(&g, &objs, &w, cfg.step_size));
         assert_eq!(outs.len(), 3);
         // DGD is deterministic regardless of seed; final states agree.
         assert_eq!(outs[0].final_states, outs[1].final_states);

@@ -9,7 +9,7 @@
 //! exotic objectives, user compressors) ride along through the `Custom`
 //! escape hatches.
 
-use super::{run_nodes, RunConfig, RunOutput};
+use super::{run_fleet, RunConfig, RunOutput};
 use crate::algorithms::{AlgorithmKind, CompressorRef, ObjectiveRef};
 use crate::compress;
 use crate::consensus::{self, ConsensusMatrix};
@@ -428,11 +428,12 @@ impl PreparedScenario {
         self.run_with(&self.config)
     }
 
-    /// Execute one run with an overriding configuration (fresh nodes are
-    /// built per call — use this for trial loops that vary the seed or
-    /// engine without paying topology/spectral setup again).
+    /// Execute one run with an overriding configuration (a fresh fleet —
+    /// state plane plus nodes — is built per call; use this for trial
+    /// loops that vary the seed or engine without paying
+    /// topology/spectral setup again).
     pub fn run_with(&self, cfg: &RunConfig) -> RunOutput {
-        let nodes = self.algorithm.build_nodes(
+        let fleet = self.algorithm.build_fleet(
             &self.graph,
             &self.weights,
             &self.objectives,
@@ -440,7 +441,7 @@ impl PreparedScenario {
             cfg.step_size,
             self.init.as_deref(),
         );
-        run_nodes(&self.graph, &self.objectives, nodes, cfg)
+        run_fleet(&self.graph, &self.objectives, fleet, cfg)
     }
 }
 
@@ -486,8 +487,8 @@ mod tests {
         let a = run_scenario(&spec);
         let (g, w) = crate::consensus::paper_four_node_w();
         let objs = crate::experiments::paper_four_node_objectives();
-        let nodes = AlgorithmKind::Dgd.build_nodes(&g, &w, &objs, None, cfg.step_size, None);
-        let b = crate::coordinator::run_nodes(&g, &objs, nodes, &cfg);
+        let fleet = AlgorithmKind::Dgd.build_fleet(&g, &w, &objs, None, cfg.step_size, None);
+        let b = crate::coordinator::run_fleet(&g, &objs, fleet, &cfg);
         assert_eq!(a.final_states, b.final_states);
         assert_eq!(a.metrics.grad_norm, b.metrics.grad_norm);
     }

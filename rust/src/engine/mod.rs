@@ -1,21 +1,27 @@
 //! Execution engines.
 //!
-//! Three interchangeable engines run the same per-node [`NodeLogic`]:
+//! Three interchangeable engines run the same per-node [`NodeLogic`]
+//! over one shared [`StatePlane`] arena:
 //!
-//! * [`sequential::run`] — single-threaded, deterministic; the reference
+//! * [`sequential::run`] — single-threaded, deterministic; borrows the
+//!   whole plane and hands out one row view at a time. The reference
 //!   semantics used by tests and benches.
 //! * [`threaded::run`] — one OS thread per node with barrier-synchronized
-//!   rounds, exercising real contention on the shared bus.
+//!   rounds; each thread owns a single-node plane shard and real
+//!   contention happens only on the shared bus.
 //! * [`pool::run`] — a sharded worker pool: `min(num_cpus, n)` workers,
-//!   nodes chunked contiguously across shards, barrier-per-round. Scales
-//!   to thousands of nodes where one-thread-per-node collapses.
+//!   nodes chunked contiguously, each worker owning the matching
+//!   contiguous plane shard, barrier-per-round. Scales to thousands of
+//!   nodes where one-thread-per-node collapses.
 //!
 //! All three are bit-identical given the same seeds (per-node RNG
 //! streams + stateless-hash loss injection + sender-sorted inbox
-//! reduction), which is asserted by the integration tests in
-//! `rust/tests/engine_equivalence.rs`.
+//! reduction + fixed per-row mixing order), which is asserted by the
+//! integration tests in `rust/tests/engine_equivalence.rs`, including
+//! against golden pre-refactor snapshots.
 //!
 //! [`NodeLogic`]: crate::algorithms::NodeLogic
+//! [`StatePlane`]: crate::state::StatePlane
 
 pub mod pool;
 pub mod sequential;
@@ -36,8 +42,8 @@ pub struct RoundTelemetry {
 }
 
 /// Per-round snapshot passed to the observers of the parallel engines
-/// (node states are copied out at the barrier — the worker threads own
-/// the live state).
+/// (iterate rows are copied out of the plane shards at the barrier —
+/// the worker threads own the live state).
 pub struct Snapshot {
     /// `x_i` per node.
     pub states: Vec<Vec<f64>>,

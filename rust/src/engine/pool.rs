@@ -5,9 +5,10 @@
 //! node, which collapses for large networks (thousands of barrier
 //! participants, thousands of stacks). This engine keeps the exact same
 //! round semantics — emit barrier, consume barrier, observe barrier —
-//! but each worker owns a contiguous *shard* of (node, RNG) pairs and
-//! locks the shared bus once per shard per phase instead of once per
-//! node.
+//! but each worker owns a contiguous shard of (node, RNG) pairs *and the
+//! matching [`PlaneShard`] of the state plane*, so the shard's row loop
+//! walks contiguous memory and locks the shared bus once per shard per
+//! phase instead of once per node.
 //!
 //! Determinism: node RNG streams are owned per node (the worker only
 //! routes them), loss injection is a stateless hash of
@@ -17,15 +18,18 @@
 //! `rust/tests/engine_equivalence.rs`).
 //!
 //! As an additional large-n optimization the observer is only invoked —
-//! and node states are only copied out — on rounds where `want_observe`
+//! and plane rows are only copied out — on rounds where `want_observe`
 //! returns true (the driver passes its metric-recording cadence). The
 //! skipped rounds perform no per-node state copies at all.
+//!
+//! [`PlaneShard`]: crate::state::PlaneShard
 
 use super::{RoundTelemetry, Snapshot};
 use crate::algorithms::NodeLogic;
 use crate::compress::Payload;
 use crate::network::Bus;
 use crate::rng::Xoshiro256pp;
+use crate::state::StatePlane;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 
@@ -42,11 +46,12 @@ pub fn effective_workers(workers: usize, n: usize) -> usize {
 /// `workers == 0` selects the available-parallelism default. The
 /// observer runs on the coordinating thread, but only on rounds where
 /// `want_observe(round)` is true; it may return `false` to stop early.
-/// Returns `(nodes, bus, completed_rounds)` with nodes in their original
-/// order.
-#[allow(clippy::type_complexity)]
+/// Final iterates live in `plane`; returns (nodes, bus, completed)
+/// with nodes in their original order.
+#[allow(clippy::type_complexity, clippy::too_many_arguments)]
 pub fn run<F, P>(
     mut nodes: Vec<Box<dyn NodeLogic>>,
+    plane: &mut StatePlane,
     mut rngs: Vec<Xoshiro256pp>,
     bus: Bus,
     rounds: usize,
@@ -60,6 +65,7 @@ where
 {
     let n = nodes.len();
     assert_eq!(rngs.len(), n);
+    assert_eq!(plane.n(), n);
     assert_eq!(bus.n(), n);
     if n == 0 {
         return (nodes, bus, 0);
@@ -73,6 +79,10 @@ where
     for (i, (node, rng)) in nodes.drain(..).zip(rngs.drain(..)).enumerate() {
         shards[i / chunk].push((i, node, rng));
     }
+    // Matching plane shards at the same boundaries.
+    let mut bounds: Vec<usize> = (0..nw).map(|w| w * chunk).collect();
+    bounds.push(n);
+    let plane_shards = plane.shards(&bounds);
 
     let bus = Mutex::new(bus);
     // Three sync points per round, mirroring the per-thread engine: after
@@ -94,7 +104,8 @@ where
     let mut out_shards: Vec<Vec<(usize, Box<dyn NodeLogic>, Xoshiro256pp)>> = Vec::new();
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(nw);
-        for (w, mut shard) in shards.drain(..).enumerate() {
+        let iter = shards.drain(..).zip(plane_shards);
+        for (w, (mut shard, mut pshard)) in iter.enumerate() {
             let bus = &bus;
             let after_send = &after_send;
             let after_consume = &after_consume;
@@ -113,7 +124,10 @@ where
                     let mut max_payload = 0usize;
                     outgoing.clear();
                     for (i, node, rng) in shard.iter_mut() {
-                        let out = node.make_message(k, rng);
+                        let out = {
+                            let mut rows = pshard.rows(*i);
+                            node.make_message(k, &mut rows, rng)
+                        };
                         max_tx = max_tx.max(out.tx_magnitude);
                         saturations += out.saturated;
                         max_payload = max_payload.max(out.payload.wire_bytes());
@@ -143,11 +157,14 @@ where
                     };
                     for ((i, node, rng), inbox) in shard.iter_mut().zip(inboxes.iter_mut()) {
                         inbox.sort_by_key(|(src, _)| *src);
-                        node.consume(k, inbox, rng);
+                        {
+                            let mut rows = pshard.rows(*i);
+                            node.consume(k, inbox, &mut rows, rng);
+                        }
                         if want {
                             let mut slot = state_slots[*i].lock().unwrap();
                             slot.0.clear();
-                            slot.0.extend_from_slice(node.state());
+                            slot.0.extend_from_slice(pshard.x_row(*i));
                             slot.1 = node.grad_steps();
                         }
                     }
@@ -224,29 +241,27 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algorithms::{DgdNode, StepSize};
+    use crate::algorithms::{AlgorithmKind, Fleet, ObjectiveRef, StepSize};
     use crate::network::LinkModel;
     use crate::objective::ScalarQuadratic;
     use crate::topology;
     use std::sync::Arc as StdArc;
 
-    fn ring_nodes(n: usize) -> (Vec<Box<dyn NodeLogic>>, Vec<Xoshiro256pp>, Bus) {
+    fn ring_fleet(n: usize) -> (Fleet, Vec<Xoshiro256pp>, Bus) {
         let g = topology::ring(n);
         let w = crate::consensus::metropolis(&g);
-        let nodes: Vec<Box<dyn NodeLogic>> = (0..n)
+        let objs: Vec<ObjectiveRef> = (0..n)
             .map(|i| {
-                Box::new(DgdNode::new(
-                    i,
-                    w.row(i).to_vec(),
-                    StdArc::new(ScalarQuadratic::new(1.0 + i as f64, i as f64 / n as f64)),
-                    StepSize::Constant(0.02),
-                )) as Box<dyn NodeLogic>
+                StdArc::new(ScalarQuadratic::new(1.0 + i as f64, i as f64 / n as f64))
+                    as ObjectiveRef
             })
             .collect();
+        let fleet =
+            AlgorithmKind::Dgd.build_fleet(&g, &w, &objs, None, StepSize::Constant(0.02), None);
         let rngs: Vec<Xoshiro256pp> =
             (0..n).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
         let bus = Bus::new(&g, LinkModel::default(), 0);
-        (nodes, rngs, bus)
+        (fleet, rngs, bus)
     }
 
     #[test]
@@ -262,44 +277,56 @@ mod tests {
         let n = 10;
         let rounds = 200;
         // Sequential reference.
-        let (mut snodes, mut srngs, mut sbus) = ring_nodes(n);
-        let done =
-            sequentialish(&mut snodes, &mut srngs, &mut sbus, rounds);
+        let (mut sfleet, mut srngs, mut sbus) = ring_fleet(n);
+        let done = crate::engine::sequential::run(
+            &mut sfleet.nodes,
+            &mut sfleet.plane,
+            &mut srngs,
+            &mut sbus,
+            rounds,
+            |_t, _n, _p, _b| true,
+        );
         assert_eq!(done, rounds);
         // Pool with a worker count that does not divide n evenly.
-        let (pnodes, prngs, pbus) = ring_nodes(n);
-        let (pnodes, pbus, completed) =
-            run(pnodes, prngs, pbus, rounds, 3, |_| false, |_t, _s, _b| true);
+        let (mut pfleet, prngs, pbus) = ring_fleet(n);
+        let (_pnodes, pbus, completed) = run(
+            pfleet.nodes,
+            &mut pfleet.plane,
+            prngs,
+            pbus,
+            rounds,
+            3,
+            |_| false,
+            |_t, _s, _b| true,
+        );
         assert_eq!(completed, rounds);
         assert_eq!(pbus.total_bytes(), sbus.total_bytes());
-        for (a, b) in snodes.iter().zip(pnodes.iter()) {
-            assert_eq!(a.state(), b.state());
-        }
-    }
-
-    fn sequentialish(
-        nodes: &mut [Box<dyn NodeLogic>],
-        rngs: &mut [Xoshiro256pp],
-        bus: &mut Bus,
-        rounds: usize,
-    ) -> usize {
-        crate::engine::sequential::run(nodes, rngs, bus, rounds, |_t, _n, _b| true)
+        assert_eq!(sfleet.plane.states(), pfleet.plane.states());
     }
 
     #[test]
     fn pool_early_stop_via_observer() {
-        let (nodes, rngs, bus) = ring_nodes(6);
-        let (_nodes, _bus, completed) =
-            run(nodes, rngs, bus, 1000, 2, |_| true, |t, _s, _b| t.round < 7);
+        let (mut fleet, rngs, bus) = ring_fleet(6);
+        let (_nodes, _bus, completed) = run(
+            fleet.nodes,
+            &mut fleet.plane,
+            rngs,
+            bus,
+            1000,
+            2,
+            |_| true,
+            |t, _s, _b| t.round < 7,
+        );
         assert_eq!(completed, 7);
     }
 
     #[test]
     fn pool_observer_skipping_rounds_still_completes() {
-        let (nodes, rngs, bus) = ring_nodes(5);
+        let (mut fleet, rngs, bus) = ring_fleet(5);
         let mut observed = Vec::new();
         let (_nodes, _bus, completed) = run(
-            nodes,
+            fleet.nodes,
+            &mut fleet.plane,
             rngs,
             bus,
             50,

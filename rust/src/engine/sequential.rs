@@ -5,25 +5,30 @@ use crate::algorithms::NodeLogic;
 use crate::compress::Payload;
 use crate::network::Bus;
 use crate::rng::Xoshiro256pp;
+use crate::state::StatePlane;
 
-/// Run `rounds` synchronous rounds. After each round the observer is
-/// called with (telemetry, nodes, bus) — it typically records metrics.
+/// Run `rounds` synchronous rounds over the fleet's state plane. After
+/// each round the observer is called with (telemetry, nodes, plane, bus)
+/// — it typically records metrics from the plane's iterate rows.
 ///
-/// Per round: every node emits its broadcast, the bus meters and delivers
-/// copies per link, every node consumes its inbox. The observer may
-/// return `false` to stop early (convergence criterion).
+/// Per round: every node emits its broadcast (borrowing its plane rows),
+/// the bus meters and delivers copies per link, every node consumes its
+/// inbox. The observer may return `false` to stop early (convergence
+/// criterion).
 pub fn run<F>(
     nodes: &mut [Box<dyn NodeLogic>],
+    plane: &mut StatePlane,
     rngs: &mut [Xoshiro256pp],
     bus: &mut Bus,
     rounds: usize,
     mut observer: F,
 ) -> usize
 where
-    F: FnMut(RoundTelemetry, &[Box<dyn NodeLogic>], &Bus) -> bool,
+    F: FnMut(RoundTelemetry, &[Box<dyn NodeLogic>], &StatePlane, &Bus) -> bool,
 {
     let n = nodes.len();
     assert_eq!(rngs.len(), n);
+    assert_eq!(plane.n(), n);
     assert_eq!(bus.n(), n);
     let mut completed = 0;
     for k in 1..=rounds {
@@ -32,7 +37,8 @@ where
         let mut max_payload = 0usize;
         // Phase 1: emit + broadcast.
         for (i, node) in nodes.iter_mut().enumerate() {
-            let out = node.make_message(k, &mut rngs[i]);
+            let mut rows = plane.rows(i);
+            let out = node.make_message(k, &mut rows, &mut rngs[i]);
             max_tx = max_tx.max(out.tx_magnitude);
             saturations += out.saturated;
             max_payload = max_payload.max(out.payload.wire_bytes());
@@ -45,7 +51,8 @@ where
             let mut inbox: Vec<(usize, std::sync::Arc<Payload>)> =
                 bus.collect(i).into_iter().map(|m| (m.src, m.payload)).collect();
             inbox.sort_by_key(|(src, _)| *src);
-            node.consume(k, &inbox, &mut rngs[i]);
+            let mut rows = plane.rows(i);
+            node.consume(k, &inbox, &mut rows, &mut rngs[i]);
         }
         completed = k;
         let telem = RoundTelemetry {
@@ -54,7 +61,7 @@ where
             saturations,
             max_payload_bytes: max_payload,
         };
-        if !observer(telem, nodes, bus) {
+        if !observer(telem, nodes, plane, bus) {
             break;
         }
     }
@@ -64,34 +71,46 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algorithms::{DgdNode, StepSize};
+    use crate::algorithms::{AlgorithmKind, ObjectiveRef, StepSize};
+    use crate::consensus::ConsensusMatrix;
+    use crate::linalg::Matrix;
     use crate::network::LinkModel;
     use crate::objective::ScalarQuadratic;
     use crate::topology;
     use std::sync::Arc;
 
-    #[test]
-    fn engine_runs_dgd_to_consensus() {
+    fn pair_fleet() -> (crate::algorithms::Fleet, Vec<Xoshiro256pp>, Bus) {
         let g = topology::pair();
-        let w = [[0.5, 0.5], [0.5, 0.5]];
-        let mut nodes: Vec<Box<dyn NodeLogic>> = (0..2)
+        let w = Matrix::from_rows(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
+        let w = ConsensusMatrix::new(w, &g).unwrap();
+        let objs: Vec<ObjectiveRef> = (0..2)
             .map(|i| {
-                Box::new(DgdNode::new(
-                    i,
-                    w[i].to_vec(),
-                    Arc::new(ScalarQuadratic::new(4.0, 2.0 * (1.0 - 2.0 * i as f64))),
-                    StepSize::Constant(0.02),
-                )) as Box<dyn NodeLogic>
+                Arc::new(ScalarQuadratic::new(4.0, 2.0 * (1.0 - 2.0 * i as f64))) as ObjectiveRef
             })
             .collect();
-        let mut rngs: Vec<Xoshiro256pp> =
+        let fleet =
+            AlgorithmKind::Dgd.build_fleet(&g, &w, &objs, None, StepSize::Constant(0.02), None);
+        let rngs: Vec<Xoshiro256pp> =
             (0..2).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
-        let mut bus = Bus::new(&g, LinkModel::default(), 0);
-        let completed = run(&mut nodes, &mut rngs, &mut bus, 1000, |_t, _n, _b| true);
+        let bus = Bus::new(&g, LinkModel::default(), 0);
+        (fleet, rngs, bus)
+    }
+
+    #[test]
+    fn engine_runs_dgd_to_consensus() {
+        let (mut fleet, mut rngs, mut bus) = pair_fleet();
+        let completed = run(
+            &mut fleet.nodes,
+            &mut fleet.plane,
+            &mut rngs,
+            &mut bus,
+            1000,
+            |_t, _n, _p, _b| true,
+        );
         assert_eq!(completed, 1000);
         // Centers ±2 with equal curvature ⇒ optimum 0; the constant-step
         // DGD fixed point is symmetric: x₁ = −x₂ = 0.32/1.16 ≈ 0.2759.
-        let (x1, x2) = (nodes[0].state()[0], nodes[1].state()[0]);
+        let (x1, x2) = (fleet.plane.x_row(0)[0], fleet.plane.x_row(1)[0]);
         assert!((x1 + x2).abs() < 1e-9, "fixed point should be symmetric");
         assert!((x1 - 0.32 / 1.16).abs() < 1e-6, "x1={x1}");
         // bytes: 2 nodes × 1000 rounds × 8 bytes = 16000
@@ -100,22 +119,15 @@ mod tests {
 
     #[test]
     fn observer_can_stop_early() {
-        let g = topology::pair();
-        let w = [[0.5, 0.5], [0.5, 0.5]];
-        let mut nodes: Vec<Box<dyn NodeLogic>> = (0..2)
-            .map(|i| {
-                Box::new(DgdNode::new(
-                    i,
-                    w[i].to_vec(),
-                    Arc::new(ScalarQuadratic::new(1.0, 0.0)),
-                    StepSize::Constant(0.1),
-                )) as Box<dyn NodeLogic>
-            })
-            .collect();
-        let mut rngs: Vec<Xoshiro256pp> =
-            (0..2).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
-        let mut bus = Bus::new(&g, LinkModel::default(), 0);
-        let completed = run(&mut nodes, &mut rngs, &mut bus, 1000, |t, _n, _b| t.round < 10);
+        let (mut fleet, mut rngs, mut bus) = pair_fleet();
+        let completed = run(
+            &mut fleet.nodes,
+            &mut fleet.plane,
+            &mut rngs,
+            &mut bus,
+            1000,
+            |t, _n, _p, _b| t.round < 10,
+        );
         assert_eq!(completed, 10);
     }
 }

@@ -1,25 +1,34 @@
 //! Multi-threaded engine: one OS thread per node, barrier-synchronized
 //! rounds, shared bus behind a mutex.
 //!
+//! Each thread owns a single-node [`PlaneShard`] — its exclusive slice
+//! of the run's state plane — so per-node state is written without any
+//! locking; only the bus is shared.
+//!
 //! Determinism: node RNG streams are owned per-thread and the bus's loss
 //! injection is a stateless hash of `(seed, src, dst, round)`, so results
 //! are bit-identical to the sequential engine regardless of thread
 //! interleaving (asserted in `rust/tests/engine_equivalence.rs`).
+//!
+//! [`PlaneShard`]: crate::state::PlaneShard
 
 use super::{RoundTelemetry, Snapshot};
 use crate::algorithms::NodeLogic;
 use crate::compress::Payload;
 use crate::network::Bus;
 use crate::rng::Xoshiro256pp;
+use crate::state::StatePlane;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex};
 
 /// Run `rounds` barrier-synchronized rounds with one thread per node.
 /// The observer runs on the coordinating thread between rounds and may
-/// return `false` to stop. Returns (nodes, completed_rounds).
+/// return `false` to stop. Final iterates live in `plane`; returns
+/// (nodes, bus, completed_rounds).
 #[allow(clippy::type_complexity)]
 pub fn run<F>(
     mut nodes: Vec<Box<dyn NodeLogic>>,
+    plane: &mut StatePlane,
     mut rngs: Vec<Xoshiro256pp>,
     bus: Bus,
     rounds: usize,
@@ -30,10 +39,15 @@ where
 {
     let n = nodes.len();
     assert_eq!(rngs.len(), n);
+    assert_eq!(plane.n(), n);
     assert_eq!(bus.n(), n);
     if n == 0 {
         return (nodes, bus, 0);
     }
+
+    // One single-node shard per thread.
+    let bounds: Vec<usize> = (0..=n).collect();
+    let shards = plane.shards(&bounds);
 
     let bus = Mutex::new(bus);
     // Three sync points per round: after broadcast, after consume+snapshot,
@@ -53,7 +67,8 @@ where
 
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(n);
-        for (i, (node, rng)) in nodes.drain(..).zip(rngs.drain(..)).enumerate() {
+        let iter = nodes.drain(..).zip(rngs.drain(..)).zip(shards);
+        for (i, ((node, rng), mut shard)) in iter.enumerate() {
             let bus = &bus;
             let after_send = &after_send;
             let after_consume = &after_consume;
@@ -65,7 +80,10 @@ where
                 let mut node = node;
                 let mut rng = rng;
                 for k in 1..=rounds {
-                    let out = node.make_message(k, &mut rng);
+                    let out = {
+                        let mut rows = shard.rows(i);
+                        node.make_message(k, &mut rows, &mut rng)
+                    };
                     let bytes = out.payload.wire_bytes();
                     {
                         let payload = std::sync::Arc::new(out.payload);
@@ -82,10 +100,14 @@ where
                         b.collect(i).into_iter().map(|m| (m.src, m.payload)).collect()
                     };
                     inbox.sort_by_key(|(src, _)| *src);
-                    node.consume(k, &inbox, &mut rng);
+                    {
+                        let mut rows = shard.rows(i);
+                        node.consume(k, &inbox, &mut rows, &mut rng);
+                    }
                     {
                         let mut slot = state_slots[i].lock().unwrap();
-                        slot.0 = node.state().to_vec();
+                        slot.0.clear();
+                        slot.0.extend_from_slice(shard.x_row(i));
                         slot.1 = node.grad_steps();
                     }
                     after_consume.wait();
@@ -155,7 +177,9 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algorithms::{DgdNode, StepSize};
+    use crate::algorithms::{AlgorithmKind, ObjectiveRef, StepSize};
+    use crate::consensus::ConsensusMatrix;
+    use crate::linalg::Matrix;
     use crate::network::LinkModel;
     use crate::objective::ScalarQuadratic;
     use crate::topology;
@@ -163,24 +187,23 @@ mod tests {
 
     fn build(n_iters: usize, stop_at: Option<usize>) -> (Vec<Vec<f64>>, usize, usize) {
         let g = topology::pair();
-        let w = [[0.5, 0.5], [0.5, 0.5]];
-        let nodes: Vec<Box<dyn NodeLogic>> = (0..2)
+        let w = Matrix::from_rows(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
+        let w = ConsensusMatrix::new(w, &g).unwrap();
+        let objs: Vec<ObjectiveRef> = (0..2)
             .map(|i| {
-                Box::new(DgdNode::new(
-                    i,
-                    w[i].to_vec(),
-                    Arc::new(ScalarQuadratic::new(4.0, 2.0 * (1.0 - 2.0 * i as f64))),
-                    StepSize::Constant(0.02),
-                )) as Box<dyn NodeLogic>
+                Arc::new(ScalarQuadratic::new(4.0, 2.0 * (1.0 - 2.0 * i as f64))) as ObjectiveRef
             })
             .collect();
+        let mut fleet =
+            AlgorithmKind::Dgd.build_fleet(&g, &w, &objs, None, StepSize::Constant(0.02), None);
         let rngs: Vec<Xoshiro256pp> =
             (0..2).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
         let bus = Bus::new(&g, LinkModel::default(), 0);
-        let (nodes, bus, completed) = run(nodes, rngs, bus, n_iters, |t, _s, _b| {
-            stop_at.map(|s| t.round < s).unwrap_or(true)
-        });
-        (nodes.iter().map(|n| n.state().to_vec()).collect(), completed, bus.total_bytes())
+        let (_nodes, bus, completed) =
+            run(fleet.nodes, &mut fleet.plane, rngs, bus, n_iters, |t, _s, _b| {
+                stop_at.map(|s| t.round < s).unwrap_or(true)
+            });
+        (fleet.plane.states(), completed, bus.total_bytes())
     }
 
     #[test]

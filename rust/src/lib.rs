@@ -47,6 +47,20 @@
 //! the graph/weights/objectives once and
 //! [`coordinator::PreparedScenario::run_with`] reruns cheaply.
 //!
+//! ## The state plane
+//!
+//! All per-node vectors of a run — iterates, gradients, scratch, and
+//! ADC-DGD's mirror estimates — live in one arena, the
+//! [`state::StatePlane`], as contiguous row-major matrices; nodes
+//! borrow [`state::NodeRows`] views per call and the parallel engines
+//! split the plane into disjoint contiguous [`state::PlaneShard`]s (see
+//! [`state`] for the borrowing rules). Consensus weights are shared in
+//! CSR form ([`consensus::CsrWeights`], `O(E)` instead of `O(N²)`), so
+//! the fleet-wide mixing step `x^{k+1} = Z x̃^k − α_k ∇f(x^k)` (paper
+//! Eq. 10) executes as a row-parallel sparse × dense product with a
+//! fixed per-row reduction order — which is what keeps all three
+//! engines bit-identical.
+//!
 //! [`EngineKind::Sequential`]: coordinator::EngineKind::Sequential
 //! [`EngineKind::Threaded`]: coordinator::EngineKind::Threaded
 //! [`EngineKind::Pool`]: coordinator::EngineKind::Pool
@@ -88,6 +102,7 @@ pub mod network;
 pub mod objective;
 pub mod rng;
 pub mod runtime;
+pub mod state;
 pub mod topology;
 pub mod util;
 
@@ -98,18 +113,19 @@ pub mod prelude {
         run_adc_dgd, run_dgd, run_dgd_t, run_naive_compressed, run_qdgd,
     };
     pub use crate::algorithms::{
-        AdcDgdOptions, AlgorithmKind, CompressorRef, ObjectiveRef, QdgdOptions, StepSize,
+        AdcDgdOptions, AlgorithmKind, CompressorRef, Fleet, ObjectiveRef, QdgdOptions, StepSize,
     };
     pub use crate::compress::{
         Compressor, Identity, LowPrecisionQuantizer, Qsgd, QuantizationSparsifier,
         RandomizedRounding, TernGrad,
     };
-    pub use crate::consensus::{metropolis, paper_four_node_w, ConsensusMatrix};
+    pub use crate::consensus::{metropolis, paper_four_node_w, ConsensusMatrix, CsrWeights};
     pub use crate::coordinator::{
         run_scenario, CompressorSpec, EngineKind, ObjectiveSpec, PreparedScenario, RunConfig,
         RunOutput, ScenarioSpec, TopologySpec, WeightSpec,
     };
     pub use crate::objective::{Objective, ScalarQuadratic};
     pub use crate::rng::Xoshiro256pp;
+    pub use crate::state::{NodeRows, PlaneLayout, PlaneShard, StatePlane};
     pub use crate::topology::Graph;
 }

@@ -76,6 +76,52 @@ pub fn scale(x: &mut [f64], a: f64) {
     }
 }
 
+/// `out = a * x` (fused copy + scale over row views; replaces the
+/// `copy_from_slice` + [`scale`] pair bit-for-bit — IEEE multiplication
+/// is commutative).
+#[inline]
+pub fn scale_into(a: f64, x: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, xi) in out.iter_mut().zip(x.iter()) {
+        *o = a * *xi;
+    }
+}
+
+/// `out = base + a * x` — the plane-backed gradient-step kernel.
+/// Element-wise it performs `base[e] + (a * x[e])`, exactly the rounding
+/// sequence of the historical swap-then-[`axpy`] update.
+#[inline]
+pub fn add_scaled(base: &[f64], a: f64, x: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(base.len(), out.len());
+    debug_assert_eq!(x.len(), out.len());
+    for ((o, b), xi) in out.iter_mut().zip(base.iter()).zip(x.iter()) {
+        *o = *b + a * *xi;
+    }
+}
+
+/// `out = a * (x − y)` — the fused amplified-differential kernel
+/// (ADC-DGD's `k^γ (x_k − x̃_{k−1})`) over row views.
+#[inline]
+pub fn scaled_diff(a: f64, x: &[f64], y: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert_eq!(y.len(), out.len());
+    for ((o, xi), yi) in out.iter_mut().zip(x.iter()).zip(y.iter()) {
+        *o = a * (*xi - *yi);
+    }
+}
+
+/// Row `i` of a row-major `· × p` arena.
+#[inline]
+pub fn row(buf: &[f64], p: usize, i: usize) -> &[f64] {
+    &buf[i * p..(i + 1) * p]
+}
+
+/// Mutable row `i` of a row-major `· × p` arena.
+#[inline]
+pub fn row_mut(buf: &mut [f64], p: usize, i: usize) -> &mut [f64] {
+    &mut buf[i * p..(i + 1) * p]
+}
+
 /// Set all entries to `v`.
 #[inline]
 pub fn fill(x: &mut [f64], v: f64) {
@@ -179,5 +225,43 @@ mod tests {
     fn mean_handles_empty() {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+
+    #[test]
+    fn scale_into_matches_copy_then_scale() {
+        let x = [1.5, -2.0, 0.25];
+        let mut fused = [0.0; 3];
+        scale_into(0.3, &x, &mut fused);
+        let mut reference = x;
+        scale(&mut reference, 0.3);
+        assert_eq!(fused, reference);
+    }
+
+    #[test]
+    fn add_scaled_matches_swap_then_axpy() {
+        let base = [1.0, 2.0, 3.0];
+        let g = [0.5, -0.25, 4.0];
+        let mut fused = [0.0; 3];
+        add_scaled(&base, -0.1, &g, &mut fused);
+        let mut reference = base;
+        axpy(-0.1, &g, &mut reference);
+        assert_eq!(fused, reference);
+    }
+
+    #[test]
+    fn scaled_diff_is_elementwise() {
+        let x = [3.0, 1.0];
+        let y = [1.0, 4.0];
+        let mut out = [0.0; 2];
+        scaled_diff(2.0, &x, &y, &mut out);
+        assert_eq!(out, [4.0, -6.0]);
+    }
+
+    #[test]
+    fn row_views_index_row_major() {
+        let mut buf = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(row(&buf, 2, 1), &[2.0, 3.0]);
+        row_mut(&mut buf, 3, 1)[0] = 9.0;
+        assert_eq!(buf[3], 9.0);
     }
 }

@@ -6,7 +6,6 @@ use crate::compress::Payload;
 use std::sync::Arc;
 use crate::rng::SplitMix64;
 use crate::topology::Graph;
-use std::collections::HashMap;
 
 /// A message delivered to a destination node this round.
 #[derive(Debug, Clone)]
@@ -21,6 +20,11 @@ pub struct DeliveredMessage {
 /// [`Bus::broadcast`] enqueues one copy of a node's payload per incident
 /// link (metering each copy), and [`Bus::collect`] drains a node's inbox.
 ///
+/// Per-link counters live in one dense `Vec<LinkStats>` indexed by
+/// `link_off[src] + slot` (the sender's neighbor-offset table, CSR
+/// style) — the broadcast hot path already iterates neighbor slots, so
+/// metering is a direct index with no hashing.
+///
 /// Loss injection is a *stateless hash* of `(seed, src, dst, round)`, so
 /// drop decisions are identical regardless of message arrival order —
 /// this is what makes the threaded engine bit-identical to the
@@ -29,7 +33,11 @@ pub struct Bus {
     n: usize,
     neighbors: Vec<Vec<usize>>,
     model: LinkModel,
-    stats: HashMap<(usize, usize), LinkStats>,
+    /// Dense per-directed-link counters, `2E` entries.
+    stats: Vec<LinkStats>,
+    /// Prefix sums of out-degrees: link `src → neighbors[src][slot]` is
+    /// `stats[link_off[src] + slot]`.
+    link_off: Vec<usize>,
     inboxes: Vec<Vec<DeliveredMessage>>,
     total_bytes: usize,
     total_messages: usize,
@@ -43,16 +51,17 @@ impl Bus {
     /// derived deterministically from `seed`.
     pub fn new(g: &Graph, model: LinkModel, seed: u64) -> Self {
         let n = g.num_nodes();
-        let mut stats = HashMap::new();
-        for &(u, v) in g.edges() {
-            stats.insert((u, v), LinkStats::default());
-            stats.insert((v, u), LinkStats::default());
+        let mut link_off = Vec::with_capacity(n + 1);
+        link_off.push(0);
+        for i in 0..n {
+            link_off.push(link_off[i] + g.degree(i));
         }
         Self {
             n,
             neighbors: (0..n).map(|i| g.neighbors(i).to_vec()).collect(),
             model,
-            stats,
+            stats: vec![LinkStats::default(); link_off[n]],
+            link_off,
             inboxes: vec![Vec::new(); n],
             total_bytes: 0,
             total_messages: 0,
@@ -79,22 +88,26 @@ impl Bus {
     pub fn broadcast(&mut self, src: usize, round: usize, payload: &Arc<Payload>) -> usize {
         let mut delivered = 0;
         let bytes = payload.wire_bytes();
-        let neighbors = self.neighbors[src].clone();
-        for dst in neighbors {
+        // Take the adjacency row so `transmit` can borrow `self` mutably;
+        // nothing below touches `neighbors[src]`.
+        let row = std::mem::take(&mut self.neighbors[src]);
+        for (slot, &dst) in row.iter().enumerate() {
             let msg = Message { src, dst, round, payload: Arc::clone(payload) };
-            if self.transmit(msg, bytes) {
+            if self.transmit(msg, bytes, self.link_off[src] + slot) {
                 delivered += 1;
             }
         }
+        self.neighbors[src] = row;
         delivered
     }
 
-    fn transmit(&mut self, msg: Message, bytes: usize) -> bool {
-        let key = (msg.src, msg.dst);
+    /// Meter and (absent a drop) deliver one message on the directed
+    /// link whose dense stats index is `idx`.
+    fn transmit(&mut self, msg: Message, bytes: usize, idx: usize) -> bool {
         let dropped = self.model.drop_prob > 0.0
             && self.drop_roll(msg.src, msg.dst, msg.round) < self.model.drop_prob;
         let t = self.model.transmit_time(bytes);
-        let stats = self.stats.get_mut(&key).expect("transmit on non-link");
+        let stats = &mut self.stats[idx];
         stats.messages += 1;
         self.total_messages += 1;
         if dropped {
@@ -110,6 +123,12 @@ impl Bus {
         // `advance_round`. Track per-message time on stats only.
         self.inboxes[msg.dst].push(DeliveredMessage { src: msg.src, payload: msg.payload });
         true
+    }
+
+    /// Dense stats index of the directed link `src → dst` (None for
+    /// non-links).
+    fn stat_index(&self, src: usize, dst: usize) -> Option<usize> {
+        self.neighbors[src].binary_search(&dst).ok().map(|slot| self.link_off[src] + slot)
     }
 
     /// Drain the inbox of node `i`.
@@ -146,7 +165,7 @@ impl Bus {
 
     /// Stats for the directed link `src → dst`.
     pub fn link_stats(&self, src: usize, dst: usize) -> Option<LinkStats> {
-        self.stats.get(&(src, dst)).copied()
+        self.stat_index(src, dst).map(|idx| self.stats[idx])
     }
 
     /// Node count.
@@ -211,13 +230,14 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "non-link")]
-    fn transmit_on_non_link_panics() {
+    fn non_links_have_no_stats() {
         let g = topology::path(3); // 0-1, 1-2; no (0,2) link
-        let mut bus = Bus::new(&g, LinkModel::default(), 0);
-        bus.transmit(
-            Message { src: 0, dst: 2, round: 1, payload: Arc::new(Payload::F64(vec![])) },
-            0,
-        );
+        let bus = Bus::new(&g, LinkModel::default(), 0);
+        assert!(bus.stat_index(0, 2).is_none());
+        assert!(bus.link_stats(0, 2).is_none());
+        assert!(bus.link_stats(0, 1).is_some());
+        // Dense layout: 2 directed entries per undirected edge.
+        assert_eq!(bus.stats.len(), 4);
+        assert_eq!(bus.link_off, vec![0, 1, 3, 4]);
     }
 }

@@ -1,0 +1,373 @@
+//! The state plane: arena-backed storage for every per-node vector.
+//!
+//! Before this layer existed each node owned scattered heap vectors
+//! (`x`, `grad`, scratch, plus `O(deg·P)` mirror vectors for ADC-DGD),
+//! so the fleet-wide round loop was pointer-chasing and cache-hostile.
+//! A [`StatePlane`] instead owns all per-node state as contiguous
+//! row-major matrices:
+//!
+//! * `x` — the iterates, an `n × p` matrix (row `i` is node `i`'s `x_i`),
+//! * `grad` — gradient rows, `n × p`,
+//! * `scratch` — the mixing/amplification workspace, `n × p`,
+//! * `mirror_self` — each node's own mirror `x̃_i` (`n × p`, mirror
+//!   layouts only),
+//! * `mirrors` — per-receiver neighbor mirrors, a ragged CSR-style arena
+//!   of `Σ_i deg(i)` rows indexed by the neighbor-offset table
+//!   (mirror layouts only). Mirrors stay *per receiver* because message
+//!   loss makes each receiver's view of a neighbor diverge.
+//!
+//! ## Row-view borrowing rules
+//!
+//! Algorithms never own vectors; they borrow a [`NodeRows`] view of one
+//! node's rows for the duration of a single `make_message`/`consume`
+//! call. The engines hand out views so that aliasing is impossible:
+//!
+//! 1. The sequential engine borrows the whole plane mutably and creates
+//!    one short-lived [`NodeRows`] at a time ([`StatePlane::rows`]).
+//! 2. The parallel engines split the plane into disjoint contiguous
+//!    [`PlaneShard`]s at node-range boundaries ([`StatePlane::shards`]);
+//!    each worker owns its shard exclusively and creates views for its
+//!    own nodes only ([`PlaneShard::rows`]). Shards are plain disjoint
+//!    `&mut` slices, so the split is safe and zero-copy.
+//! 3. Observers read iterates through shared accessors
+//!    ([`StatePlane::x_row`], [`PlaneShard::x_row`]) strictly between
+//!    phases, never while a view is live.
+//!
+//! The consensus mixing step over this layout is a row-parallel sparse
+//! (CSR) × dense product — see [`crate::consensus::CsrWeights`].
+
+use crate::linalg::vecops;
+
+/// Shape of a [`StatePlane`]: node count, dimension, and (for mirror
+/// algorithms like ADC-DGD) the per-node neighbor-mirror counts.
+#[derive(Debug, Clone)]
+pub struct PlaneLayout {
+    n: usize,
+    p: usize,
+    mirror_counts: Option<Vec<usize>>,
+}
+
+impl PlaneLayout {
+    /// Layout with the three dense `n × p` arenas and no mirrors.
+    pub fn dense(n: usize, p: usize) -> Self {
+        assert!(n > 0 && p > 0, "plane must be non-empty");
+        Self { n, p, mirror_counts: None }
+    }
+
+    /// Layout that additionally allocates `mirror_self` plus
+    /// `counts[i]` neighbor-mirror rows for node `i`.
+    pub fn with_mirrors(n: usize, p: usize, counts: Vec<usize>) -> Self {
+        assert!(n > 0 && p > 0, "plane must be non-empty");
+        assert_eq!(counts.len(), n, "one mirror count per node");
+        Self { n, p, mirror_counts: Some(counts) }
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Per-node vector dimension.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+}
+
+/// The arena owning all per-node vectors of one run as contiguous
+/// row-major matrices. See the module docs for the borrowing rules.
+#[derive(Debug)]
+pub struct StatePlane {
+    n: usize,
+    p: usize,
+    x: Vec<f64>,
+    grad: Vec<f64>,
+    scratch: Vec<f64>,
+    mirror_self: Vec<f64>,
+    mirrors: Vec<f64>,
+    /// Prefix sums of per-node mirror counts (`n + 1` entries; all zero
+    /// for mirror-free layouts).
+    mirror_off: Vec<usize>,
+}
+
+impl StatePlane {
+    /// Allocate a zero-initialized plane for `layout`.
+    pub fn new(layout: &PlaneLayout) -> Self {
+        let (n, p) = (layout.n, layout.p);
+        let mut mirror_off = vec![0usize; n + 1];
+        let (mirror_self, mirrors) = match &layout.mirror_counts {
+            Some(counts) => {
+                for (i, c) in counts.iter().enumerate() {
+                    mirror_off[i + 1] = mirror_off[i] + c;
+                }
+                (vec![0.0; n * p], vec![0.0; mirror_off[n] * p])
+            }
+            None => (Vec::new(), Vec::new()),
+        };
+        Self {
+            n,
+            p,
+            x: vec![0.0; n * p],
+            grad: vec![0.0; n * p],
+            scratch: vec![0.0; n * p],
+            mirror_self,
+            mirrors,
+            mirror_off,
+        }
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Per-node vector dimension.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Does this plane carry mirror arenas?
+    pub fn has_mirrors(&self) -> bool {
+        !self.mirror_self.is_empty()
+    }
+
+    /// Node `i`'s iterate row.
+    #[inline]
+    pub fn x_row(&self, i: usize) -> &[f64] {
+        vecops::row(&self.x, self.p, i)
+    }
+
+    /// Node `i`'s iterate row, mutable (initialization / tests).
+    #[inline]
+    pub fn x_row_mut(&mut self, i: usize) -> &mut [f64] {
+        vecops::row_mut(&mut self.x, self.p, i)
+    }
+
+    /// Copy all iterates out as per-node vectors (the `final_states`
+    /// shape of [`crate::coordinator::RunOutput`]).
+    pub fn states(&self) -> Vec<Vec<f64>> {
+        (0..self.n).map(|i| self.x_row(i).to_vec()).collect()
+    }
+
+    /// Borrow node `i`'s rows as one mutable view. The borrow is scoped
+    /// to the returned view, so call sites interleave views and shared
+    /// reads freely (rule 1 of the module docs).
+    pub fn rows(&mut self, i: usize) -> NodeRows<'_> {
+        let p = self.p;
+        let (m0, m1) = (self.mirror_off[i] * p, self.mirror_off[i + 1] * p);
+        NodeRows {
+            x: vecops::row_mut(&mut self.x, p, i),
+            grad: vecops::row_mut(&mut self.grad, p, i),
+            scratch: vecops::row_mut(&mut self.scratch, p, i),
+            mirror_self: if self.mirror_self.is_empty() {
+                &mut self.mirror_self[..]
+            } else {
+                vecops::row_mut(&mut self.mirror_self, p, i)
+            },
+            mirrors: &mut self.mirrors[m0..m1],
+            p,
+        }
+    }
+
+    /// Split the plane into disjoint shards at the node boundaries
+    /// `bounds` (ascending, starting at 0, ending at `n`). Each shard
+    /// owns the rows of its node range exclusively (rule 2 of the
+    /// module docs).
+    pub fn shards(&mut self, bounds: &[usize]) -> Vec<PlaneShard<'_>> {
+        assert!(bounds.len() >= 2, "need at least one shard range");
+        assert_eq!(bounds[0], 0, "shard ranges must start at node 0");
+        assert_eq!(*bounds.last().unwrap(), self.n, "shard ranges must end at n");
+        let p = self.p;
+        let has_mirror_self = !self.mirror_self.is_empty();
+        let mut x = &mut self.x[..];
+        let mut grad = &mut self.grad[..];
+        let mut scratch = &mut self.scratch[..];
+        let mut mirror_self = &mut self.mirror_self[..];
+        let mut mirrors = &mut self.mirrors[..];
+        let mut out = Vec::with_capacity(bounds.len() - 1);
+        for w in bounds.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            assert!(a < b, "shard ranges must be non-empty and ascending");
+            let dense = (b - a) * p;
+            let (hx, tx) = std::mem::take(&mut x).split_at_mut(dense);
+            x = tx;
+            let (hg, tg) = std::mem::take(&mut grad).split_at_mut(dense);
+            grad = tg;
+            let (hs, ts) = std::mem::take(&mut scratch).split_at_mut(dense);
+            scratch = ts;
+            let (hms, tms) = std::mem::take(&mut mirror_self)
+                .split_at_mut(if has_mirror_self { dense } else { 0 });
+            mirror_self = tms;
+            let mlen = (self.mirror_off[b] - self.mirror_off[a]) * p;
+            let (hm, tm) = std::mem::take(&mut mirrors).split_at_mut(mlen);
+            mirrors = tm;
+            out.push(PlaneShard {
+                start: a,
+                p,
+                x: hx,
+                grad: hg,
+                scratch: hs,
+                mirror_self: hms,
+                mirrors: hm,
+                mirror_off: &self.mirror_off[a..=b],
+            });
+        }
+        out
+    }
+}
+
+/// A mutable view of one node's rows in the plane, handed to
+/// [`crate::algorithms::NodeLogic`] for the duration of one call.
+/// Fields are public so kernels can take disjoint borrows (e.g. read
+/// `scratch` while writing `x`).
+pub struct NodeRows<'a> {
+    /// The iterate row `x_i`.
+    pub x: &'a mut [f64],
+    /// The gradient row (persists across rounds — DGD^t captures
+    /// `∇f(x^k)` here at phase 0 and applies it at phase `t−1`).
+    pub grad: &'a mut [f64],
+    /// Workspace row (mixing / amplification / consensus correction).
+    /// Contents do not persist across calls.
+    pub scratch: &'a mut [f64],
+    /// Own mirror `x̃_i` (empty slice for mirror-free layouts).
+    pub mirror_self: &'a mut [f64],
+    /// Neighbor mirrors, flattened `deg × p` in ascending-neighbor slot
+    /// order (empty for mirror-free layouts). Slot `s` occupies
+    /// `mirrors[s*p..(s+1)*p]`.
+    pub mirrors: &'a mut [f64],
+    /// Row width.
+    pub p: usize,
+}
+
+/// A contiguous range of plane rows owned exclusively by one engine
+/// worker. Produced by [`StatePlane::shards`].
+pub struct PlaneShard<'a> {
+    start: usize,
+    p: usize,
+    x: &'a mut [f64],
+    grad: &'a mut [f64],
+    scratch: &'a mut [f64],
+    mirror_self: &'a mut [f64],
+    mirrors: &'a mut [f64],
+    /// Global mirror offsets for this shard's nodes (`len + 1` entries);
+    /// local offsets are rebased against `mirror_off[0]`.
+    mirror_off: &'a [usize],
+}
+
+impl PlaneShard<'_> {
+    /// First global node index of this shard.
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    /// Borrow the rows of global node `i` (must lie in this shard).
+    pub fn rows(&mut self, i: usize) -> NodeRows<'_> {
+        let l = i - self.start;
+        let p = self.p;
+        let base = self.mirror_off[0];
+        let m0 = (self.mirror_off[l] - base) * p;
+        let m1 = (self.mirror_off[l + 1] - base) * p;
+        NodeRows {
+            x: vecops::row_mut(self.x, p, l),
+            grad: vecops::row_mut(self.grad, p, l),
+            scratch: vecops::row_mut(self.scratch, p, l),
+            mirror_self: if self.mirror_self.is_empty() {
+                &mut self.mirror_self[..]
+            } else {
+                vecops::row_mut(self.mirror_self, p, l)
+            },
+            mirrors: &mut self.mirrors[m0..m1],
+            p,
+        }
+    }
+
+    /// Read the iterate row of global node `i` (must lie in this shard).
+    #[inline]
+    pub fn x_row(&self, i: usize) -> &[f64] {
+        vecops::row(self.x, self.p, i - self.start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_plane_rows_are_disjoint_and_indexed() {
+        let mut plane = StatePlane::new(&PlaneLayout::dense(3, 2));
+        for i in 0..3 {
+            let rows = plane.rows(i);
+            rows.x.copy_from_slice(&[i as f64, 10.0 + i as f64]);
+            rows.grad.fill(i as f64);
+            rows.scratch.fill(-(i as f64));
+            assert!(rows.mirror_self.is_empty());
+            assert!(rows.mirrors.is_empty());
+        }
+        assert_eq!(plane.x_row(1), &[1.0, 11.0]);
+        assert_eq!(plane.states(), vec![vec![0.0, 10.0], vec![1.0, 11.0], vec![2.0, 12.0]]);
+        assert!(!plane.has_mirrors());
+    }
+
+    #[test]
+    fn mirror_plane_slots_follow_offsets() {
+        // Degrees 1, 2, 1 → mirror rows at offsets [0, 1, 3, 4].
+        let mut plane = StatePlane::new(&PlaneLayout::with_mirrors(3, 2, vec![1, 2, 1]));
+        assert!(plane.has_mirrors());
+        {
+            let rows = plane.rows(1);
+            assert_eq!(rows.mirror_self.len(), 2);
+            assert_eq!(rows.mirrors.len(), 4); // 2 slots × p=2
+            rows.mirrors[2..4].copy_from_slice(&[7.0, 8.0]); // slot 1
+        }
+        let rows0 = plane.rows(0);
+        assert_eq!(rows0.mirrors.len(), 2);
+        assert_eq!(rows0.mirrors, &[0.0, 0.0]);
+        let rows1 = plane.rows(1);
+        assert_eq!(&rows1.mirrors[2..4], &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn shards_partition_the_plane() {
+        let mut plane = StatePlane::new(&PlaneLayout::with_mirrors(5, 1, vec![2, 2, 2, 2, 2]));
+        {
+            let mut shards = plane.shards(&[0, 2, 5]);
+            assert_eq!(shards.len(), 2);
+            assert_eq!(shards[0].start(), 0);
+            assert_eq!(shards[1].start(), 2);
+            // Write through shard views at global indices.
+            for i in 0..5 {
+                let shard = if i < 2 { &mut shards[0] } else { &mut shards[1] };
+                let rows = shard.rows(i);
+                rows.x[0] = 100.0 + i as f64;
+                rows.mirrors[0] = i as f64; // slot 0
+            }
+            assert_eq!(shards[1].x_row(4), &[104.0]);
+        }
+        for i in 0..5 {
+            assert_eq!(plane.x_row(i), &[100.0 + i as f64]);
+            assert_eq!(plane.rows(i).mirrors[0], i as f64);
+        }
+    }
+
+    #[test]
+    fn shards_cross_thread() {
+        let mut plane = StatePlane::new(&PlaneLayout::dense(4, 3));
+        let shards = plane.shards(&[0, 1, 2, 3, 4]);
+        std::thread::scope(|scope| {
+            for (w, mut shard) in shards.into_iter().enumerate() {
+                scope.spawn(move || {
+                    shard.rows(w).x.fill(w as f64 + 0.5);
+                });
+            }
+        });
+        for i in 0..4 {
+            assert_eq!(plane.x_row(i), &[i as f64 + 0.5; 3]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must end at n")]
+    fn shards_reject_partial_cover() {
+        let mut plane = StatePlane::new(&PlaneLayout::dense(4, 1));
+        let _ = plane.shards(&[0, 2]);
+    }
+}

@@ -169,6 +169,137 @@ fn threaded_engine_scales_to_many_nodes() {
     assert!(out.metrics.grad_norm.last().unwrap().is_finite());
 }
 
+/// Golden per-round snapshots captured from the **pre-refactor**
+/// sequential engine (before the state-plane/CSR rework): 16-node
+/// Metropolis ring, ADC-DGD (γ = 1) + ternary compression, 10% message
+/// loss, α = 0.01, master seed 5. Values are exact f64 bit patterns of
+/// every node's scalar iterate after rounds 40 / 80 / 120; the runs
+/// below must reproduce them bit-for-bit, pinning the plane-backed
+/// pathway to the historical semantics.
+const GOLDEN_R40: [u64; 16] = [
+    0x3fcfc3faff1e3660,
+    0x3fcaef50ff34cf06,
+    0x3fc9ce59d5f0f5f9,
+    0x3fd063d48e3a802a,
+    0x3fd6ef3ad03c5a7a,
+    0x3fce7c5dfcb36014,
+    0x3fc974ae9e22e37b,
+    0x3fce61b9413a99f5,
+    0x3fd034e065dc29b7,
+    0x3fd2cf6ceed41a43,
+    0x3fd424bbc17ac51b,
+    0x3fd38c7d1903ab52,
+    0x3fd3867e36e512e0,
+    0x3fcefced9d288bc4,
+    0x3fd2da75850edb75,
+    0x3fd5fa360496832a,
+];
+const GOLDEN_R80: [u64; 16] = [
+    0x3fcfc5b2412b7e21,
+    0x3fcaf113ce6f5bb5,
+    0x3fc9d06e937dcf27,
+    0x3fd06497823cfeb0,
+    0x3fd6efdb82f59b48,
+    0x3fce7d9ce5c2c894,
+    0x3fc9766325fe7808,
+    0x3fce6359c85c6e82,
+    0x3fd036023fe4404b,
+    0x3fd2d0facd6ee2e5,
+    0x3fd4273597f66dc9,
+    0x3fd38f42009b5194,
+    0x3fd388c95b60dc5c,
+    0x3fcf006bc1c80963,
+    0x3fd2dbc28d929c74,
+    0x3fd5fb2af80cafec,
+];
+const GOLDEN_R120: [u64; 16] = [
+    0x3fcfc5b2af3e2c7a,
+    0x3fcaf1142e54b7e1,
+    0x3fc9d06f00833d6e,
+    0x3fd06497a4904df5,
+    0x3fd6efdba87377ce,
+    0x3fce7d9d3c5ca413,
+    0x3fc976639c8b8358,
+    0x3fce635a34f05e23,
+    0x3fd03602844ba859,
+    0x3fd2d0fb34f6c6b2,
+    0x3fd42736340e5b54,
+    0x3fd38f42a600a345,
+    0x3fd388c9f417be47,
+    0x3fcf006ccfe00240,
+    0x3fd2dbc2eecd9c6f,
+    0x3fd5fb2b47ea6d2a,
+];
+/// Bus accounting of the same golden run: (16 nodes × 2 links × 120
+/// rounds − drops) × 9 wire bytes (ternary: 8 B scale + 1 packed byte).
+const GOLDEN_TOTAL_BYTES: usize = 31_158;
+const GOLDEN_DROPPED: usize = 378;
+
+fn golden_cfg(engine: EngineKind, iterations: usize) -> RunConfig {
+    RunConfig {
+        iterations,
+        step_size: StepSize::Constant(0.01),
+        record_every: 40,
+        seed: 5,
+        engine,
+        link: LinkModel { drop_prob: 0.10, ..LinkModel::default() },
+        ..RunConfig::default()
+    }
+}
+
+fn assert_bits(final_states: &[Vec<f64>], golden: &[u64; 16], label: &str) {
+    assert_eq!(final_states.len(), 16, "{label}");
+    for (i, (state, &bits)) in final_states.iter().zip(golden.iter()).enumerate() {
+        assert_eq!(state.len(), 1, "{label}: node {i} dim");
+        assert_eq!(
+            state[0].to_bits(),
+            bits,
+            "{label}: node {i} drifted: {} vs golden {}",
+            state[0],
+            f64::from_bits(bits)
+        );
+    }
+}
+
+/// The plane-backed pathway must reproduce the pre-refactor sequential
+/// engine bit-for-bit, checked against baked-in golden snapshots at
+/// rounds 40, 80, and 120 (runs are prefix-deterministic, so a
+/// k-iteration run's final state equals the k-round snapshot).
+#[test]
+fn plane_pathway_matches_pre_refactor_golden_snapshots() {
+    let spec = ring_spec(
+        16,
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        CompressorSpec::TernGrad,
+    );
+    let prepared = spec.prepare();
+    for (iters, golden) in [(40, &GOLDEN_R40), (80, &GOLDEN_R80), (120, &GOLDEN_R120)] {
+        let out = prepared.run_with(&golden_cfg(EngineKind::Sequential, iters));
+        assert_bits(&out.final_states, golden, &format!("sequential round {iters}"));
+    }
+    let out = prepared.run_with(&golden_cfg(EngineKind::Sequential, 120));
+    assert_eq!(out.total_bytes, GOLDEN_TOTAL_BYTES, "wire bytes");
+    assert_eq!(out.dropped_messages, GOLDEN_DROPPED, "loss injection");
+}
+
+/// The parallel engines must hit the same golden snapshots as the
+/// sequential reference.
+#[test]
+fn parallel_engines_match_golden_snapshots() {
+    let spec = ring_spec(
+        16,
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        CompressorSpec::TernGrad,
+    );
+    let prepared = spec.prepare();
+    for engine in [EngineKind::Threaded, EngineKind::pool(), EngineKind::Pool { workers: 3 }] {
+        let out = prepared.run_with(&golden_cfg(engine, 120));
+        assert_bits(&out.final_states, &GOLDEN_R120, &format!("{engine:?}"));
+        assert_eq!(out.total_bytes, GOLDEN_TOTAL_BYTES, "{engine:?} bytes");
+        assert_eq!(out.dropped_messages, GOLDEN_DROPPED, "{engine:?} drops");
+    }
+}
+
 /// The deprecated wrappers must route through the same pathway and stay
 /// engine-invariant (compatibility surface for external callers).
 #[allow(deprecated)]

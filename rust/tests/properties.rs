@@ -2,6 +2,7 @@
 //! driven by the library's own seeded PRNG, so failures reproduce
 //! exactly). Each test checks an invariant over many random instances.
 
+use adcdgd::algorithms::StepSize;
 use adcdgd::compress::{
     stats, Compressor, Identity, LowPrecisionQuantizer, Payload, Qsgd, QuantizationSparsifier,
     RandomizedRounding, TernGrad,
@@ -91,6 +92,90 @@ fn prop_ternary_pack_roundtrip() {
         for (a, b) in t.iter().zip(dec.iter()) {
             assert!((scale * *a as f64 - b).abs() < 1e-12);
         }
+    }
+}
+
+/// `StepSize::at` is positive and monotonically non-increasing in `k`
+/// for random (α₀, η) draws; constant schedules are exactly constant.
+#[test]
+fn prop_step_size_positive_and_monotone() {
+    let mut rng = Xoshiro256pp::seed_from_u64(112);
+    for _ in 0..40 {
+        let alpha0 = 0.01 + rng.next_f64() * 5.0;
+        let eta = 0.05 + rng.next_f64() * 1.45;
+        let s = StepSize::Diminishing { alpha0, eta };
+        let mut prev = f64::INFINITY;
+        for k in 1..=2000 {
+            let a = s.at(k);
+            assert!(a > 0.0, "α_{k} = {a} not positive (α₀={alpha0}, η={eta})");
+            assert!(a <= prev, "α_{k} = {a} > α_{{k−1}} = {prev} (η={eta})");
+            prev = a;
+        }
+        assert!((s.at(1) - alpha0).abs() < 1e-15, "α₁ must equal α₀");
+        let c = StepSize::Constant(alpha0);
+        for k in [1usize, 17, 400, 100_000] {
+            assert_eq!(c.at(k), alpha0);
+        }
+    }
+}
+
+/// Robbins–Monro shape on a sampled prefix for η ∈ (½, 1]: the partial
+/// sums Σ α_k keep growing (divergence: they dominate the integral lower
+/// bound and the tail blocks do not vanish), while Σ α_k² stays under
+/// its convergent closed-form bound α₀²·(1 + 1/(2η−1)) and its tail
+/// blocks shrink.
+#[test]
+fn prop_step_size_robbins_monro_shape() {
+    let mut rng = Xoshiro256pp::seed_from_u64(113);
+    let mut etas: Vec<f64> = (0..6).map(|_| 0.55 + rng.next_f64() * 0.40).collect();
+    etas.push(1.0); // the harmonic edge of the admissible range
+    for eta in etas {
+        let alpha0 = 0.1 + rng.next_f64() * 2.0;
+        let s = StepSize::Diminishing { alpha0, eta };
+        let n = 40_000usize;
+        let mut sum_4k = 0.0f64;
+        let mut sq_4h = 0.0f64;
+        let mut sq_4k = 0.0f64;
+        let mut sum = 0.0f64;
+        let mut sq = 0.0f64;
+        for k in 1..=n {
+            let a = s.at(k);
+            sum += a;
+            sq += a * a;
+            if k == 400 {
+                sq_4h = sq;
+            }
+            if k == 4_000 {
+                sum_4k = sum;
+                sq_4k = sq;
+            }
+        }
+        let (sum_n, sq_n) = (sum, sq);
+        // Divergent-sum shape: the prefix dominates the integral lower
+        // bound ∫₁^{N+1} α₀ x^{−η} dx and the late tail block is still a
+        // large multiple of a single late step.
+        let integral = if eta < 1.0 {
+            alpha0 * (((n + 1) as f64).powf(1.0 - eta) - 1.0) / (1.0 - eta)
+        } else {
+            alpha0 * ((n + 1) as f64).ln()
+        };
+        assert!(sum_n >= integral, "Σα = {sum_n} < integral bound {integral} (η={eta})");
+        let tail_block = sum_n - sum_4k;
+        assert!(
+            tail_block > 1_000.0 * s.at(n),
+            "tail Σα block {tail_block} too small vs α_N = {} (η={eta})",
+            s.at(n)
+        );
+        // Convergent-square-sum shape: under the closed-form bound and
+        // with geometrically shrinking tail blocks.
+        let sq_bound = alpha0 * alpha0 * (1.0 + 1.0 / (2.0 * eta - 1.0));
+        assert!(sq_n <= sq_bound, "Σα² = {sq_n} > bound {sq_bound} (η={eta})");
+        let sq_block_early = sq_4k - sq_4h;
+        let sq_block_late = sq_n - sq_4k;
+        assert!(
+            sq_block_late < sq_block_early,
+            "Σα² tail blocks must shrink: {sq_block_late} ≥ {sq_block_early} (η={eta})"
+        );
     }
 }
 
