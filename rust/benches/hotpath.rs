@@ -2,26 +2,66 @@
 //! at increasing dimension P, compression/codec throughput, the
 //! per-thread vs worker-pool engine comparison (emits
 //! `BENCH_pool_engine.json`), the state-plane round-loop bench (emits
-//! `BENCH_state_plane.json`), and the XLA-backed paths when artifacts
-//! are present.
+//! `BENCH_state_plane.json`), the mailbox-plane inbox bench with its
+//! allocation counter (emits `BENCH_mailbox_plane.json`), and the
+//! XLA-backed paths when artifacts are present.
 //!
-//! Set `ADCDGD_BENCH_ONLY=pool` (engine comparison) or
-//! `ADCDGD_BENCH_ONLY=plane` (state-plane bench) to run a single
+//! Set `ADCDGD_BENCH_ONLY=pool` (engine comparison),
+//! `ADCDGD_BENCH_ONLY=plane` (state-plane bench), or
+//! `ADCDGD_BENCH_ONLY=mailbox` (inbox machinery) to run a single
 //! section (CI uses these to publish the JSON artifacts quickly).
 
 use adcdgd::algorithms::{AdcDgdOptions, AlgorithmKind, ObjectiveRef, StepSize};
 use adcdgd::compress::{
-    Compressor, LowPrecisionQuantizer, Qsgd, RandomizedRounding, TernGrad,
+    Compressor, LowPrecisionQuantizer, Payload, Qsgd, RandomizedRounding, TernGrad,
 };
 use adcdgd::coordinator::{
     run_scenario, CompressorSpec, EngineKind, ObjectiveSpec, RunConfig, ScenarioSpec,
     TopologySpec,
 };
+use adcdgd::network::{Bus, LinkModel};
 use adcdgd::objective::DiagonalQuadratic;
 use adcdgd::rng::Xoshiro256pp;
 use adcdgd::util::bench::{bench, bench_print};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Counting allocator: the mailbox section asserts the broadcast → slot
+/// → consume path performs **zero** heap allocations after warm-up. One
+/// relaxed atomic per alloc — negligible against the benched work.
+mod alloc_counter {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    pub static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+    pub struct CountingAlloc;
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc_zeroed(layout)
+        }
+    }
+
+    pub fn count() -> usize {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: alloc_counter::CountingAlloc = alloc_counter::CountingAlloc;
 
 fn quad_objectives(n: usize, p: usize, seed: u64) -> Vec<ObjectiveRef> {
     let mut rng = Xoshiro256pp::seed_from_u64(seed);
@@ -242,6 +282,148 @@ fn state_plane_comparison() {
     println!("state-plane bench written to BENCH_state_plane.json");
 }
 
+/// One synchronous round over the bus: broadcast a fixed pre-encoded
+/// payload per node, advance/deliver, then walk each inbox through the
+/// chosen pathway. `collected` replicates the pre-mailbox inbox
+/// machinery (allocate a `Vec`, collect tagged payloads, sort by
+/// sender); the slot pathway iterates the view in place.
+fn mailbox_round(bus: &mut Bus, payloads: &[Arc<Payload>], k: usize, collected: bool) -> usize {
+    let n = bus.n();
+    for (i, p) in payloads.iter().enumerate() {
+        bus.broadcast(i, k, p);
+    }
+    bus.advance_round();
+    bus.deliver_round(k);
+    let mut heard = 0usize;
+    for i in 0..n {
+        if collected {
+            // Old-style: per-node allocation + collect + sort per round.
+            let mut inbox: Vec<(usize, Arc<Payload>)> = bus
+                .inbox_view(i)
+                .iter()
+                .map(|m| (m.src, Arc::clone(m.payload)))
+                .collect();
+            inbox.sort_by_key(|(src, _)| *src);
+            for (src, payload) in &inbox {
+                heard += std::hint::black_box(*src + payload.len());
+            }
+        } else {
+            for m in bus.inbox_view(i).iter() {
+                heard += std::hint::black_box(m.src + m.payload.len());
+            }
+        }
+        bus.clear_inbox(i);
+    }
+    heard
+}
+
+/// Old-style collected inboxes vs slot mailboxes at n ∈ {16, 256, 2048},
+/// plus the zero-allocation assertion (same-round *and* delayed
+/// delivery). Emits `BENCH_mailbox_plane.json`.
+fn mailbox_comparison() {
+    println!("== mailbox plane (collected inboxes vs slot mailboxes) ==");
+    let rounds = 50;
+    let p_dim = 64;
+    let mut rows = Vec::new();
+    for n in [16usize, 256, 2048] {
+        let p_edge = (12.0 / n as f64).min(0.5);
+        let g = adcdgd::topology::erdos_renyi(n, p_edge, 5);
+        // Fixed pre-encoded int16 payloads (the paper's compressed wire
+        // format): reusing them isolates the inbox machinery from
+        // per-round payload encoding.
+        let payloads: Vec<Arc<Payload>> = (0..n)
+            .map(|i| {
+                Arc::new(Payload::I16 {
+                    scale: 1.0 / 64.0,
+                    data: (0..p_dim).map(|e| ((i + e) % 251) as i16).collect(),
+                })
+            })
+            .collect();
+        let samples = if n >= 2048 { 5 } else { 10 };
+        let mut round_no = 0usize;
+        let mut bus = Bus::new(&g, LinkModel::default(), 7);
+        let collected = bench(
+            &format!("inbox collected+sorted n={n} {rounds} rounds"),
+            1,
+            samples,
+            Duration::from_secs(60),
+            || {
+                for _ in 0..rounds {
+                    round_no += 1;
+                    std::hint::black_box(mailbox_round(&mut bus, &payloads, round_no, true));
+                }
+            },
+        );
+        println!("{}", collected.summary());
+        let mut bus = Bus::new(&g, LinkModel::default(), 7);
+        let mut round_no = 0usize;
+        let slotted = bench(
+            &format!("inbox slot mailbox    n={n} {rounds} rounds"),
+            1,
+            samples,
+            Duration::from_secs(60),
+            || {
+                for _ in 0..rounds {
+                    round_no += 1;
+                    std::hint::black_box(mailbox_round(&mut bus, &payloads, round_no, false));
+                }
+            },
+        );
+        println!("{}", slotted.summary());
+        let speedup = collected.mean() / slotted.mean();
+        println!("     -> slot mailbox speedup over collected at n={n}: {speedup:.2}x");
+
+        // Zero-allocation assertion: after warm-up, the broadcast → slot
+        // → consume path must not touch the heap — neither at delay 0
+        // nor with the in-flight ring cycling at delay 2.
+        let mut allocs = [0usize; 2];
+        for (which, delay) in [(0usize, 0usize), (1, 2)] {
+            let model = if delay == 0 {
+                LinkModel::default()
+            } else {
+                LinkModel::with_delay(delay)
+            };
+            let mut bus = Bus::new(&g, model, 7);
+            for k in 1..=8 {
+                mailbox_round(&mut bus, &payloads, k, false);
+            }
+            let before = alloc_counter::count();
+            for k in 9..=28 {
+                mailbox_round(&mut bus, &payloads, k, false);
+            }
+            allocs[which] = alloc_counter::count() - before;
+            assert_eq!(
+                allocs[which], 0,
+                "slot pathway allocated {} times over 20 rounds (n={n}, delay={delay})",
+                allocs[which]
+            );
+        }
+        println!(
+            "     -> allocations over 20 post-warm-up rounds: delay0={} delay2={}",
+            allocs[0], allocs[1]
+        );
+
+        rows.push(format!(
+            "    {{\"n\": {n}, \"p\": {p_dim}, \"rounds\": {rounds}, \
+             \"collected_mean_s\": {:.6}, \"mailbox_mean_s\": {:.6}, \
+             \"mailbox_speedup\": {:.3}, \"allocs_after_warmup_delay0\": {}, \
+             \"allocs_after_warmup_delay2\": {}}}",
+            collected.mean(),
+            slotted.mean(),
+            speedup,
+            allocs[0],
+            allocs[1]
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"mailbox_plane\",\n  \"pathway\": \"slot-addressed inboxes + \
+         in-flight delay ring\",\n  \"wire\": \"int16 P=64\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_mailbox_plane.json", &json).expect("write BENCH_mailbox_plane.json");
+    println!("mailbox bench written to BENCH_mailbox_plane.json");
+}
+
 fn xla_paths() {
     let dir = adcdgd::runtime::artifacts_dir(None);
     if !adcdgd::runtime::artifacts_available(&dir) {
@@ -296,6 +478,10 @@ fn main() {
         state_plane_comparison();
         return;
     }
+    if only == "mailbox" {
+        mailbox_comparison();
+        return;
+    }
     println!("== L3 hot path ==");
     for p in [100usize, 10_000, 100_000] {
         round_throughput(p, 20);
@@ -304,6 +490,7 @@ fn main() {
     compressor_throughput(100_000);
     pool_engine_comparison();
     state_plane_comparison();
+    mailbox_comparison();
     println!("== XLA-backed paths ==");
     xla_paths();
 }

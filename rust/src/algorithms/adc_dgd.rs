@@ -30,9 +30,9 @@
 //! `x_{i,1} = −α₁ ∇f_i(0)` (applied by the fleet builder).
 
 use super::{CompressorRef, NodeLogic, ObjectiveRef, Outgoing, StepSize};
-use crate::compress::Payload;
 use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
+use crate::network::InboxView;
 use crate::rng::Xoshiro256pp;
 use crate::state::NodeRows;
 use std::sync::Arc;
@@ -110,20 +110,22 @@ impl NodeLogic for AdcDgdNode {
     fn consume(
         &mut self,
         round: usize,
-        inbox: &[(usize, std::sync::Arc<Payload>)],
+        inbox: &InboxView<'_>,
         rows: &mut NodeRows<'_>,
         _rng: &mut Xoshiro256pp,
     ) {
-        let kg = self.amp_factor(round);
         let w = &self.weights;
-        // Update neighbor mirrors from their differentials (sender-sorted
-        // inbox merged against the ascending CSR row).
+        // Update neighbor mirrors from their differentials. Inbox slots
+        // are laid out on the ascending CSR row, so a message's slot is
+        // its mirror slot directly. Each differential is unscaled by its
+        // *send* round's amplification — under deferred delivery a stale
+        // `d_{j,k'}` still integrates exactly `decode(d)/k'^γ`, keeping
+        // the mirror a (lagged) copy of the sender's own.
         let p = rows.p;
-        let mut slot = 0;
-        for (j, payload) in inbox {
-            slot = w.slot_after(self.id, slot, *j);
-            payload.decode_axpy(1.0 / kg, &mut rows.mirrors[slot * p..(slot + 1) * p]);
-            slot += 1;
+        for m in inbox.iter() {
+            let kg_sent = self.amp_factor(m.round);
+            m.payload
+                .decode_axpy(1.0 / kg_sent, &mut rows.mirrors[m.slot * p..(m.slot + 1) * p]);
         }
         // Compressed consensus — one CSR row of Z x̃ (self mirror
         // included with weight W_ii).

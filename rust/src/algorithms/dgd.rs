@@ -8,6 +8,7 @@ use super::{NodeLogic, ObjectiveRef, Outgoing, StepSize};
 use crate::compress::Payload;
 use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
+use crate::network::InboxView;
 use crate::rng::Xoshiro256pp;
 use crate::state::NodeRows;
 use std::sync::Arc;
@@ -54,7 +55,7 @@ impl NodeLogic for DgdNode {
     fn consume(
         &mut self,
         round: usize,
-        inbox: &[(usize, std::sync::Arc<Payload>)],
+        inbox: &InboxView<'_>,
         rows: &mut NodeRows<'_>,
         _rng: &mut Xoshiro256pp,
     ) {

@@ -10,6 +10,7 @@ use super::{NodeLogic, ObjectiveRef, Outgoing, StepSize};
 use crate::compress::Payload;
 use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
+use crate::network::InboxView;
 use crate::rng::Xoshiro256pp;
 use crate::state::NodeRows;
 use std::sync::Arc;
@@ -63,7 +64,7 @@ impl NodeLogic for DgdTNode {
     fn consume(
         &mut self,
         _round: usize,
-        inbox: &[(usize, std::sync::Arc<Payload>)],
+        inbox: &InboxView<'_>,
         rows: &mut NodeRows<'_>,
         _rng: &mut Xoshiro256pp,
     ) {

@@ -49,8 +49,8 @@ pub use registry::{AlgorithmKind, Fleet};
 pub use runners::{run_adc_dgd, run_dgd, run_dgd_t, run_naive_compressed, run_qdgd};
 
 use crate::compress::Payload;
+use crate::network::InboxView;
 use crate::state::NodeRows;
-use std::sync::Arc as StdArc;
 use crate::rng::Xoshiro256pp;
 use std::sync::Arc;
 
@@ -108,13 +108,17 @@ pub trait NodeLogic: Send {
         rng: &mut Xoshiro256pp,
     ) -> Outgoing;
 
-    /// Consume the messages received this round (one per neighbor,
-    /// tagged with the sender id and sorted by sender) and update the
-    /// node's rows.
+    /// Consume the messages visible this round and update the node's
+    /// rows. The inbox is a slot-addressed view: one slot per incoming
+    /// neighbor on the receiver's ascending adjacency row (so a filled
+    /// slot's index equals the CSR weight slot and the mirror-arena
+    /// slot), with empty slots for lost or still-in-flight messages.
+    /// Each message carries its *send* round — equal to `round` at
+    /// delay 0, earlier when the link model defers delivery.
     fn consume(
         &mut self,
         round: usize,
-        inbox: &[(usize, StdArc<Payload>)],
+        inbox: &InboxView<'_>,
         rows: &mut NodeRows<'_>,
         rng: &mut Xoshiro256pp,
     );
@@ -174,6 +178,7 @@ pub(crate) mod testutil {
         /// Run one synchronous round `k` with full delivery; returns the
         /// two outgoing messages (for tx-magnitude inspection).
         pub fn step(&mut self, k: usize) -> Vec<Outgoing> {
+            use crate::network::MailSlot;
             let outs: Vec<Outgoing> = (0..2)
                 .map(|i| {
                     let mut rows = self.plane.rows(i);
@@ -182,7 +187,9 @@ pub(crate) mod testutil {
                 .collect();
             for i in 0..2 {
                 let j = 1 - i;
-                let inbox = vec![(j, StdArc::new(outs[j].payload.clone()))];
+                let senders = [j];
+                let slots: [MailSlot; 1] = [Some((k, Arc::new(outs[j].payload.clone())))];
+                let inbox = InboxView::new(&senders, &slots);
                 let mut rows = self.plane.rows(i);
                 self.nodes[i].consume(k, &inbox, &mut rows, &mut self.rng);
             }

@@ -7,9 +7,9 @@
 //! motivating example). Implemented to reproduce exactly that failure.
 
 use super::{CompressorRef, NodeLogic, ObjectiveRef, Outgoing, StepSize};
-use crate::compress::Payload;
 use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
+use crate::network::InboxView;
 use crate::rng::Xoshiro256pp;
 use crate::state::NodeRows;
 use std::sync::Arc;
@@ -55,7 +55,7 @@ impl NodeLogic for NaiveCompressedNode {
     fn consume(
         &mut self,
         round: usize,
-        inbox: &[(usize, std::sync::Arc<Payload>)],
+        inbox: &InboxView<'_>,
         rows: &mut NodeRows<'_>,
         _rng: &mut Xoshiro256pp,
     ) {

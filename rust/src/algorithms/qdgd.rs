@@ -16,9 +16,9 @@
 //! α_k = α₀·k^{−3/4} (so that α_k/ε_k → 0 as their analysis requires).
 
 use super::{CompressorRef, NodeLogic, ObjectiveRef, Outgoing, StepSize};
-use crate::compress::Payload;
 use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
+use crate::network::InboxView;
 use crate::rng::Xoshiro256pp;
 use crate::state::NodeRows;
 use std::sync::Arc;
@@ -87,7 +87,7 @@ impl NodeLogic for QdgdNode {
     fn consume(
         &mut self,
         round: usize,
-        inbox: &[(usize, std::sync::Arc<Payload>)],
+        inbox: &InboxView<'_>,
         rows: &mut NodeRows<'_>,
         _rng: &mut Xoshiro256pp,
     ) {
@@ -96,17 +96,16 @@ impl NodeLogic for QdgdNode {
         // exactly (a node needn't quantize its own value). This is NOT
         // the DGD-template sum (`CsrWeights::mix_inbox_into`): there is
         // no diagonal term and the received weight mass must be
-        // accumulated to subtract `w_sum · x_i`.
+        // accumulated to subtract `w_sum · x_i`. Inbox slots sit on the
+        // ascending CSR row, so a message's slot indexes the weights
+        // directly.
         let w = &self.weights;
         vecops::fill(rows.scratch, 0.0);
         let wts = w.row_weights(self.id);
         let mut w_sum = 0.0;
-        let mut slot = 0;
-        for (j, payload) in inbox {
-            slot = w.slot_after(self.id, slot, *j);
-            payload.decode_axpy(wts[slot], rows.scratch);
-            w_sum += wts[slot];
-            slot += 1;
+        for m in inbox.iter() {
+            m.payload.decode_axpy(wts[m.slot], rows.scratch);
+            w_sum += wts[m.slot];
         }
         vecops::axpy(-w_sum, rows.x, rows.scratch);
         self.objective.grad_into(rows.x, rows.grad);

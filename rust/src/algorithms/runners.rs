@@ -1,17 +1,13 @@
-//! Legacy one-call runners, kept as thin deprecated wrappers over the
-//! declarative pathway so external callers and benches keep working.
+//! Legacy one-call runners: thin deprecated wrappers over
+//! [`run_scenario`], scheduled for removal in 0.4.0.
 //!
-//! **Removal target:** these wrappers will be deleted in 0.4.0 once the
-//! remaining callers (`rust/tests/convergence.rs` and any external
-//! users) migrate to [`ScenarioSpec`]. Until then each wrapper has a
-//! smoke test pinning its delegation to [`run_scenario`]
-//! (`wrapper_smoke_*` below), so the compatibility surface cannot
-//! silently drift.
-//!
-//! Each function builds a [`ScenarioSpec`] with `Custom` topology /
-//! weights / objectives and delegates to
-//! [`crate::coordinator::run_scenario`] — there is no separate execution
-//! path. New code should construct the spec directly.
+//! There is exactly one execution pathway in this crate — build a
+//! [`ScenarioSpec`] and call [`crate::coordinator::run_scenario`]; see
+//! that module (and the crate-level docs) for the worked example. The
+//! wrappers below only assemble `Custom` specs for callers that still
+//! hold a prebuilt `(graph, W, objectives)` triple. Each has a smoke
+//! test pinning its delegation (`wrapper_smoke_*` below), so the
+//! compatibility surface cannot silently drift before the removal.
 
 use super::{AdcDgdOptions, AlgorithmKind, CompressorRef, ObjectiveRef, QdgdOptions};
 use crate::consensus::ConsensusMatrix;
@@ -40,7 +36,7 @@ fn spec_for(
     }
 }
 
-/// Run classic DGD (Algorithm 1).
+/// Deprecated: see [`run_scenario`] with [`AlgorithmKind::Dgd`].
 #[deprecated(
     since = "0.2.0",
     note = "build a ScenarioSpec and call coordinator::run_scenario; \
@@ -62,9 +58,7 @@ pub fn run_dgd(
     ))
 }
 
-/// Run DGD^t with `t` consensus exchanges per gradient step. Note
-/// `cfg.iterations` counts engine *rounds*; `t·K` rounds perform `K`
-/// gradient iterations.
+/// Deprecated: see [`run_scenario`] with [`AlgorithmKind::DgdT`].
 #[deprecated(
     since = "0.2.0",
     note = "build a ScenarioSpec and call coordinator::run_scenario; \
@@ -87,7 +81,7 @@ pub fn run_dgd_t(
     ))
 }
 
-/// Run DGD with directly compressed iterates (Eq. 5 — diverges; Fig. 1).
+/// Deprecated: see [`run_scenario`] with [`AlgorithmKind::NaiveCompressed`].
 #[deprecated(
     since = "0.2.0",
     note = "build a ScenarioSpec and call coordinator::run_scenario; \
@@ -110,7 +104,7 @@ pub fn run_naive_compressed(
     ))
 }
 
-/// Run **ADC-DGD** (Algorithm 2 — the paper's method).
+/// Deprecated: see [`run_scenario`] with [`AlgorithmKind::AdcDgd`].
 #[deprecated(
     since = "0.2.0",
     note = "build a ScenarioSpec and call coordinator::run_scenario; \
@@ -134,7 +128,7 @@ pub fn run_adc_dgd(
     ))
 }
 
-/// Run the QDGD-style baseline (Reisizadeh et al. 2018).
+/// Deprecated: see [`run_scenario`] with [`AlgorithmKind::Qdgd`].
 #[deprecated(
     since = "0.2.0",
     note = "build a ScenarioSpec and call coordinator::run_scenario; \

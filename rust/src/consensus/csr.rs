@@ -4,17 +4,17 @@
 //! node to scan an `N`-length weight row; at thousands of nodes that is
 //! both the memory and the cache bottleneck of the mixing step. A
 //! [`CsrWeights`] stores only the `2E` off-diagonal entries plus the
-//! diagonal, in ascending-neighbor order per row — exactly the order the
-//! engines deliver (sender-sorted) inboxes in, so the fleet-wide mixing
-//! step `x^{k+1} = Z x̃^k − α_k ∇f(x^k)` (paper Eq. 10) becomes a
+//! diagonal, in ascending-neighbor order per row — the same order the
+//! mailbox plane lays inbox slots out in, so an [`InboxView`] slot index
+//! *is* the CSR row slot and the fleet-wide mixing step
+//! `x^{k+1} = Z x̃^k − α_k ∇f(x^k)` (paper Eq. 10) becomes a
 //! row-parallel sparse-matrix × dense-matrix product over the state
 //! plane with bit-identical floating-point reduction order.
 
 use super::ConsensusMatrix;
-use crate::compress::Payload;
 use crate::linalg::vecops;
+use crate::network::InboxView;
 use crate::topology::Graph;
-use std::sync::Arc;
 
 /// A consensus matrix in CSR form: per-row diagonal weight plus the
 /// off-diagonal (neighbor) weights in ascending column order.
@@ -114,8 +114,11 @@ impl CsrWeights {
     }
 
     /// Resolve sender `j` to its slot in row `i`, resuming an in-order
-    /// merge from `from_slot`. Inboxes are sender-sorted and rows are
-    /// ascending, so a linear merge resolves a whole inbox in `O(deg)`.
+    /// merge from `from_slot`. Rows are ascending, so a linear merge
+    /// resolves a sorted sender sequence in `O(deg)`. (The mailbox plane
+    /// already hands algorithms slot-addressed inboxes, so the hot paths
+    /// no longer need this; it remains for custom wiring over sorted
+    /// sender lists.)
     #[inline]
     pub fn slot_after(&self, i: usize, from_slot: usize, j: usize) -> usize {
         let nbrs = self.neighbors(i);
@@ -127,28 +130,24 @@ impl CsrWeights {
         s
     }
 
-    /// One row of the fleet-wide mixing product over a sender-sorted
+    /// One row of the fleet-wide mixing product over a slot-addressed
     /// inbox of encoded payloads:
-    /// `out = W_ii · x + Σ_{(j,d) ∈ inbox} W_ij · decode(d)` — the
+    /// `out = W_ii · x + Σ_{m ∈ inbox} W_{i,src(m)} · decode(m)` — the
     /// DGD-template consensus sum (own term uncompressed, absent senders
-    /// — lost messages — contribute nothing). This is **the**
-    /// bit-identity-critical reduction: one shared implementation keeps
-    /// the accumulation order (diagonal first, then senders ascending)
-    /// uniform across every algorithm that mixes raw/quantized iterates.
-    pub fn mix_inbox_into(
-        &self,
-        i: usize,
-        x: &[f64],
-        inbox: &[(usize, Arc<Payload>)],
-        out: &mut [f64],
-    ) {
+    /// — lost or still-in-flight messages — contribute nothing). Inbox
+    /// slots are laid out on the receiver's ascending adjacency row, so
+    /// `m.slot` indexes this row's weights directly (no merge). This is
+    /// **the** bit-identity-critical reduction: one shared
+    /// implementation keeps the accumulation order (diagonal first, then
+    /// filled slots ascending) uniform across every algorithm that mixes
+    /// raw/quantized iterates.
+    pub fn mix_inbox_into(&self, i: usize, x: &[f64], inbox: &InboxView<'_>, out: &mut [f64]) {
+        debug_assert_eq!(inbox.capacity(), self.degree(i), "inbox slots must match row degree");
+        debug_assert_eq!(inbox.senders(), self.neighbors(i), "slot/row misalignment");
         vecops::scale_into(self.diag[i], x, out);
         let wts = self.row_weights(i);
-        let mut slot = 0;
-        for (j, payload) in inbox {
-            slot = self.slot_after(i, slot, *j);
-            payload.decode_axpy(wts[slot], out);
-            slot += 1;
+        for m in inbox.iter() {
+            m.payload.decode_axpy(wts[m.slot], out);
         }
     }
 
@@ -212,6 +211,29 @@ mod tests {
         let w = metropolis(&g);
         let csr = CsrWeights::from_consensus(&w, &g);
         csr.slot_after(0, 0, 2);
+    }
+
+    #[test]
+    fn mix_inbox_skips_empty_slots_and_uses_slot_weights() {
+        use crate::compress::Payload;
+        use std::sync::Arc;
+        let g = topology::star(4); // hub 0 ↔ {1, 2, 3}
+        let w = metropolis(&g);
+        let csr = CsrWeights::from_consensus(&w, &g);
+        // Messages from senders 1 and 3; sender 2's slot stays empty
+        // (lost or in flight).
+        let slots: Vec<crate::network::MailSlot> = vec![
+            Some((1, Arc::new(Payload::F64(vec![2.0])))),
+            None,
+            Some((1, Arc::new(Payload::F64(vec![-4.0])))),
+        ];
+        let inbox = crate::network::InboxView::new(csr.neighbors(0), &slots);
+        let x = [10.0];
+        let mut out = [f64::NAN];
+        csr.mix_inbox_into(0, &x, &inbox, &mut out);
+        let wts = csr.row_weights(0);
+        let expect = csr.diag(0) * 10.0 + wts[0] * 2.0 + wts[2] * (-4.0);
+        assert_eq!(out[0], expect);
     }
 
     #[test]

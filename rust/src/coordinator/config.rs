@@ -44,7 +44,11 @@ pub struct RunConfig {
     /// Stop when `‖(1/N)Σ∇f_i(x̄)‖` falls at or below this threshold
     /// (None = run all iterations).
     pub grad_tol: Option<f64>,
-    /// Link model (bandwidth / latency / loss).
+    /// Link model (bandwidth / latency / loss / delivery delay). Setting
+    /// [`LinkModel::round_secs`] makes latency and bandwidth defer
+    /// message arrival by whole rounds — see
+    /// [`LinkModel::with_delay`] for the uniform-delay shorthand the
+    /// delayed-consensus ablation uses.
     pub link: LinkModel,
     /// Engine selection.
     pub engine: EngineKind,

@@ -24,6 +24,10 @@ pub struct RunOutput {
     pub total_bytes: usize,
     /// Total messages dropped by loss injection.
     pub dropped_messages: usize,
+    /// Messages overwritten in their mailbox slot by a fresher send
+    /// before being consumed (nonzero only when the link model gives
+    /// different payload sizes different delivery delays).
+    pub superseded_messages: usize,
     /// Simulated network seconds elapsed.
     pub sim_seconds: f64,
 }
@@ -164,6 +168,7 @@ pub fn run_fleet(
                 rounds_completed: completed,
                 total_bytes: bus.total_bytes(),
                 dropped_messages: bus.total_dropped(),
+                superseded_messages: bus.total_superseded(),
                 sim_seconds: bus.sim_clock(),
                 metrics,
             }
@@ -193,6 +198,7 @@ pub fn run_fleet(
                 rounds_completed: completed,
                 total_bytes: bus.total_bytes(),
                 dropped_messages: bus.total_dropped(),
+                superseded_messages: bus.total_superseded(),
                 sim_seconds: bus.sim_clock(),
                 metrics,
             }
@@ -232,6 +238,7 @@ pub fn run_fleet(
                 rounds_completed: completed,
                 total_bytes: bus.total_bytes(),
                 dropped_messages: bus.total_dropped(),
+                superseded_messages: bus.total_superseded(),
                 sim_seconds: bus.sim_clock(),
                 metrics,
             }

@@ -15,10 +15,11 @@
 //!   nodes where one-thread-per-node collapses.
 //!
 //! All three are bit-identical given the same seeds (per-node RNG
-//! streams + stateless-hash loss injection + sender-sorted inbox
-//! reduction + fixed per-row mixing order), which is asserted by the
-//! integration tests in `rust/tests/engine_equivalence.rs`, including
-//! against golden pre-refactor snapshots.
+//! streams + stateless-hash loss injection + slot-addressed mailbox
+//! inboxes in ascending-sender order + fixed per-row mixing order),
+//! which is asserted by the integration tests in
+//! `rust/tests/engine_equivalence.rs`, including against golden
+//! pre-refactor snapshots and under multi-round delivery delay.
 //!
 //! [`NodeLogic`]: crate::algorithms::NodeLogic
 //! [`StatePlane`]: crate::state::StatePlane

@@ -12,10 +12,11 @@
 //!
 //! Determinism: node RNG streams are owned per node (the worker only
 //! routes them), loss injection is a stateless hash of
-//! `(seed, src, dst, round)`, and inboxes are sorted by sender before
-//! consumption, so results are bit-identical to [`super::sequential`]
-//! regardless of worker count or interleaving (asserted in
-//! `rust/tests/engine_equivalence.rs`).
+//! `(seed, src, dst, round)`, and inbox slots are laid out in
+//! ascending-sender order by the mailbox plane (in-flight deliveries are
+//! slot-addressed, so the drain order cannot matter), so results are
+//! bit-identical to [`super::sequential`] regardless of worker count or
+//! interleaving (asserted in `rust/tests/engine_equivalence.rs`).
 //!
 //! As an additional large-n optimization the observer is only invoked —
 //! and plane rows are only copied out — on rounds where `want_observe`
@@ -27,7 +28,7 @@
 use super::{RoundTelemetry, Snapshot};
 use crate::algorithms::NodeLogic;
 use crate::compress::Payload;
-use crate::network::Bus;
+use crate::network::{Bus, InboxView, MailSlot};
 use crate::rng::Xoshiro256pp;
 use crate::state::StatePlane;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -84,6 +85,9 @@ where
     bounds.push(n);
     let plane_shards = plane.shards(&bounds);
 
+    // Shared slot geometry: each worker addresses one contiguous staging
+    // buffer for its shard's inbox slots and builds views lock-free.
+    let layout = bus.layout();
     let bus = Mutex::new(bus);
     // Three sync points per round, mirroring the per-thread engine: after
     // broadcast, after consume(+snapshot), and after the observer's stop
@@ -114,8 +118,16 @@ where
             let telem_slots = &telem_slots;
             let state_slots = &state_slots;
             let want_observe = &want_observe;
+            let layout = Arc::clone(&layout);
             handles.push(scope.spawn(move || {
                 let mut outgoing: Vec<(usize, Arc<Payload>)> = Vec::with_capacity(shard.len());
+                // Contiguous shard ⇒ contiguous slot range. One reusable
+                // staging buffer holds the whole shard's inbox slots,
+                // moved out under a single bus lock per collect phase.
+                let first = shard.first().expect("shards are non-empty").0;
+                let last = first + shard.len();
+                let lo = layout.offset(first);
+                let mut staging: Vec<MailSlot> = vec![None; layout.offset(last) - lo];
                 for k in 1..=rounds {
                     // Phase 1: emit every shard node, then broadcast the
                     // whole shard under one bus lock.
@@ -143,23 +155,23 @@ where
                     after_send.wait();
                     // Coordinator advances the round clock here.
                     let want = want_observe(k);
-                    // Phase 2: drain the shard's inboxes under one lock,
-                    // then consume. Sort by sender so floating-point
-                    // reduction order matches the sequential engine.
-                    let mut inboxes: Vec<Vec<(usize, Arc<Payload>)>> = {
+                    // Phase 2: move the shard's slot range into staging
+                    // under one lock (the first shard to arrive also
+                    // drains this round's in-flight deliveries), then
+                    // consume lock-free. Slots are ascending-sender by
+                    // construction, so the floating-point reduction
+                    // order matches the sequential engine without sorts.
+                    {
                         let mut b = bus.lock().unwrap();
-                        shard
-                            .iter()
-                            .map(|(i, _, _)| {
-                                b.collect(*i).into_iter().map(|m| (m.src, m.payload)).collect()
-                            })
-                            .collect()
-                    };
-                    for ((i, node, rng), inbox) in shard.iter_mut().zip(inboxes.iter_mut()) {
-                        inbox.sort_by_key(|(src, _)| *src);
+                        b.take_inbox_range(first, last, k, &mut staging);
+                    }
+                    for (i, node, rng) in shard.iter_mut() {
+                        let (s0, s1) =
+                            (layout.offset(*i) - lo, layout.offset(*i + 1) - lo);
+                        let inbox = InboxView::new(layout.senders(*i), &staging[s0..s1]);
                         {
                             let mut rows = pshard.rows(*i);
-                            node.consume(k, inbox, &mut rows, rng);
+                            node.consume(k, &inbox, &mut rows, rng);
                         }
                         if want {
                             let mut slot = state_slots[*i].lock().unwrap();
@@ -191,7 +203,7 @@ where
                 saturations += sat;
                 max_payload = max_payload.max(bytes);
             }
-            bus.lock().unwrap().advance_round(max_payload);
+            bus.lock().unwrap().advance_round();
             after_consume.wait();
             completed.store(k, Ordering::SeqCst);
             let keep_going = if want_observe(k) {

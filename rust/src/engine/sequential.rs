@@ -2,7 +2,6 @@
 
 use super::RoundTelemetry;
 use crate::algorithms::NodeLogic;
-use crate::compress::Payload;
 use crate::network::Bus;
 use crate::rng::Xoshiro256pp;
 use crate::state::StatePlane;
@@ -12,9 +11,10 @@ use crate::state::StatePlane;
 /// — it typically records metrics from the plane's iterate rows.
 ///
 /// Per round: every node emits its broadcast (borrowing its plane rows),
-/// the bus meters and delivers copies per link, every node consumes its
-/// inbox. The observer may return `false` to stop early (convergence
-/// criterion).
+/// the bus meters each copy into the receiver's dedicated mailbox slot
+/// (or the in-flight ring when the link defers arrival), and every node
+/// consumes its slot-addressed inbox view. The observer may return
+/// `false` to stop early (convergence criterion).
 pub fn run<F>(
     nodes: &mut [Box<dyn NodeLogic>],
     plane: &mut StatePlane,
@@ -44,15 +44,16 @@ where
             max_payload = max_payload.max(out.payload.wire_bytes());
             bus.broadcast(i, k, &std::sync::Arc::new(out.payload));
         }
-        bus.advance_round(max_payload);
-        // Phase 2: consume. Inboxes are sorted by sender so that
-        // floating-point reduction order is identical across engines.
+        bus.advance_round();
+        bus.deliver_round(k);
+        // Phase 2: consume. Mailbox slots sit in ascending-sender order,
+        // so the floating-point reduction order is identical across
+        // engines without any per-round sort.
         for (i, node) in nodes.iter_mut().enumerate() {
-            let mut inbox: Vec<(usize, std::sync::Arc<Payload>)> =
-                bus.collect(i).into_iter().map(|m| (m.src, m.payload)).collect();
-            inbox.sort_by_key(|(src, _)| *src);
+            let inbox = bus.inbox_view(i);
             let mut rows = plane.rows(i);
             node.consume(k, &inbox, &mut rows, &mut rngs[i]);
+            bus.clear_inbox(i);
         }
         completed = k;
         let telem = RoundTelemetry {

@@ -14,12 +14,11 @@
 
 use super::{RoundTelemetry, Snapshot};
 use crate::algorithms::NodeLogic;
-use crate::compress::Payload;
-use crate::network::Bus;
+use crate::network::{Bus, InboxView, MailSlot};
 use crate::rng::Xoshiro256pp;
 use crate::state::StatePlane;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Barrier, Mutex};
+use std::sync::{Arc, Barrier, Mutex};
 
 /// Run `rounds` barrier-synchronized rounds with one thread per node.
 /// The observer runs on the coordinating thread between rounds and may
@@ -49,6 +48,9 @@ where
     let bounds: Vec<usize> = (0..=n).collect();
     let shards = plane.shards(&bounds);
 
+    // Shared slot geometry: each thread addresses its own staging buffer
+    // and builds inbox views without holding the bus.
+    let layout = bus.layout();
     let bus = Mutex::new(bus);
     // Three sync points per round: after broadcast, after consume+snapshot,
     // and after the observer's stop decision (so every thread reads the
@@ -76,9 +78,14 @@ where
             let stop = &stop;
             let tx_slots = &tx_slots;
             let state_slots = &state_slots;
+            let layout = Arc::clone(&layout);
             handles.push(scope.spawn(move || {
                 let mut node = node;
                 let mut rng = rng;
+                // Reusable staging for this node's inbox slots: filled by
+                // one `Option::take` pass under the bus lock, consumed
+                // outside it. No per-round allocation.
+                let mut staging: Vec<MailSlot> = vec![None; layout.degree(i)];
                 for k in 1..=rounds {
                     let out = {
                         let mut rows = shard.rows(i);
@@ -92,15 +99,18 @@ where
                     }
                     *tx_slots[i].lock().unwrap() = (out.tx_magnitude, out.saturated, bytes);
                     after_send.wait();
-                    // Coordinator advances the round clock here.
-                    // Sort by sender: float reduction order must match
-                    // the sequential engine exactly (bit-identical runs).
-                    let mut inbox: Vec<(usize, std::sync::Arc<Payload>)> = {
-                        let mut b = bus.lock().unwrap();
-                        b.collect(i).into_iter().map(|m| (m.src, m.payload)).collect()
-                    };
-                    inbox.sort_by_key(|(src, _)| *src);
+                    // Coordinator advances the round clock here. Take the
+                    // node's slot range under one short lock (the first
+                    // taker also drains this round's in-flight arrivals);
+                    // slots are ascending-sender by construction, so the
+                    // float reduction order matches the sequential engine
+                    // exactly (bit-identical runs) without sorting.
                     {
+                        let mut b = bus.lock().unwrap();
+                        b.take_inbox_range(i, i + 1, k, &mut staging);
+                    }
+                    {
+                        let inbox = InboxView::new(layout.senders(i), &staging);
                         let mut rows = shard.rows(i);
                         node.consume(k, &inbox, &mut rows, &mut rng);
                     }
@@ -133,7 +143,7 @@ where
                 saturations += sat;
                 max_payload = max_payload.max(bytes);
             }
-            bus.lock().unwrap().advance_round(max_payload);
+            bus.lock().unwrap().advance_round();
             after_consume.wait();
             let snapshot = Snapshot {
                 states: state_slots.iter().map(|s| s.lock().unwrap().0.clone()).collect(),

@@ -6,6 +6,7 @@
 //! for the experiment index.
 
 pub mod ablations;
+pub mod delayed;
 pub mod fig1;
 pub mod fig10;
 pub mod fig5;

@@ -61,6 +61,21 @@
 //! fixed per-row reduction order — which is what keeps all three
 //! engines bit-identical.
 //!
+//! ## The mailbox plane
+//!
+//! Message delivery follows the same discipline ([`network::mailbox`]):
+//! every *(receiver, incoming-neighbor)* pair owns one fixed slot on
+//! the topology's neighbor-offset table, so inboxes are consumed as
+//! borrowed [`network::InboxView`]s in structural ascending-sender
+//! order — no per-round allocation, sorting, or sender merging on the
+//! broadcast → slot → consume path. When the link model sets a round
+//! cadence ([`network::LinkModel::round_secs`]), latency and bandwidth
+//! translate into messages that arrive whole rounds late through an
+//! in-flight ring of recycled buckets ([`network::LinkModel::with_delay`]
+//! pins a uniform delay; `adcdgd run --exp delay` sweeps the staleness
+//! axis), and every message carries its send round so algorithms can
+//! decode stale payloads exactly.
+//!
 //! [`EngineKind::Sequential`]: coordinator::EngineKind::Sequential
 //! [`EngineKind::Threaded`]: coordinator::EngineKind::Threaded
 //! [`EngineKind::Pool`]: coordinator::EngineKind::Pool
@@ -120,6 +135,7 @@ pub mod prelude {
         RandomizedRounding, TernGrad,
     };
     pub use crate::consensus::{metropolis, paper_four_node_w, ConsensusMatrix, CsrWeights};
+    pub use crate::network::{Bus, InboxMsg, InboxView, LinkModel, MailboxLayout};
     pub use crate::coordinator::{
         run_scenario, CompressorSpec, EngineKind, ObjectiveSpec, PreparedScenario, RunConfig,
         RunOutput, ScenarioSpec, TopologySpec, WeightSpec,

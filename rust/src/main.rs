@@ -2,16 +2,20 @@
 //!
 //! Subcommands:
 //!
-//! * `run --exp <fig1|fig5|fig6|fig7|fig8|fig10|phase|ablations|all>`
-//!   regenerate a paper figure (optionally `--out <dir>` for CSVs,
-//!   `--trials`, `--iters` to rescale).
+//! * `run --exp <fig1|fig5|fig6|fig7|fig8|fig10|phase|delay|ablations|all>`
+//!   regenerate a paper figure or ablation (optionally `--out <dir>` for
+//!   CSVs, `--trials`, `--iters` to rescale; `delay` is the
+//!   delayed-consensus sweep over the mailbox plane's in-flight ring).
 //! * `solve` — run one algorithm on a chosen topology/objective family
 //!   (`--algo adc|dgd|dgdt|naive|qdgd`, `--topology ring|star|complete|
 //!   grid|er|ba|paper4`, `--n`, `--gamma`, `--alpha`, `--eta`,
 //!   `--iters`, `--engine seq|threaded|pool`, `--workers`,
 //!   `--compressor randround|identity|lowprec|sparsifier|terngrad|qsgd`,
-//!   `--drop-prob`). Every solve is a `ScenarioSpec` run through
-//!   `run_scenario` — the CLI only assembles the declaration.
+//!   `--drop-prob`, and the link/delay axis: `--delay <rounds>` for a
+//!   uniform delivery delay, or `--latency <sec>` + `--bandwidth <B/s>`
+//!   + `--round-secs <sec>` to derive per-message delays from the link
+//!   model). Every solve is a `ScenarioSpec` run through `run_scenario`
+//!   — the CLI only assembles the declaration.
 //! * `train` — decentralized ML training from an AOT artifact
 //!   (`--artifacts <dir>`, `--model logistic|transformer`, see
 //!   `runtime` docs).
@@ -115,6 +119,13 @@ fn cmd_run(args: &Args) -> i32 {
         }
         results.push(experiments::phase_transition::run(&p));
     }
+    if want("delay") {
+        let mut p = experiments::delayed::Params::default();
+        if iters > 0 {
+            p.iterations = iters;
+        }
+        results.push(experiments::delayed::run(&p));
+    }
     if want("ablations") {
         results.push(experiments::ablations::alpha_error_ball(
             &[0.0025, 0.005, 0.01, 0.02],
@@ -158,14 +169,16 @@ fn cmd_solve(args: &Args) -> i32 {
                         }
                     }
                 }
-                for key in ["n", "iters", "seed", "record-every", "t"] {
+                for key in ["n", "iters", "seed", "record-every", "t", "delay"] {
                     if !args.options.contains_key(key) {
                         if let Some(adcdgd::util::config::Value::Num(v)) = cfg.get(key) {
                             args.options.insert(key.into(), format!("{}", *v as u64));
                         }
                     }
                 }
-                for key in ["alpha", "eta", "gamma", "drop-prob"] {
+                let float_keys =
+                    ["alpha", "eta", "gamma", "drop-prob", "latency", "bandwidth", "round-secs"];
+                for key in float_keys {
                     if !args.options.contains_key(key) {
                         if let Some(adcdgd::util::config::Value::Num(v)) = cfg.get(key) {
                             args.options.insert(key.into(), v.to_string());
@@ -204,6 +217,26 @@ fn cmd_solve(args: &Args) -> i32 {
     } else {
         StepSize::Constant(alpha)
     };
+    // Link model: raw knobs first; `--delay <rounds>` is the shorthand
+    // that overrides them with an exact uniform delivery delay.
+    let link = {
+        let mut l = adcdgd::network::LinkModel {
+            drop_prob: args.get::<f64>("drop-prob", 0.0).unwrap(),
+            ..adcdgd::network::LinkModel::default()
+        };
+        l.latency_sec = args.get::<f64>("latency", l.latency_sec).unwrap();
+        l.bandwidth_bytes_per_sec =
+            args.get::<f64>("bandwidth", l.bandwidth_bytes_per_sec).unwrap();
+        l.round_secs = args.get::<f64>("round-secs", l.round_secs).unwrap();
+        let delay = args.get::<usize>("delay", 0).unwrap();
+        if delay > 0 {
+            l = adcdgd::network::LinkModel {
+                drop_prob: l.drop_prob,
+                ..adcdgd::network::LinkModel::with_delay(delay)
+            };
+        }
+        l
+    };
     let cfg = RunConfig {
         iterations: args.get::<usize>("iters", 1000).unwrap(),
         step_size: step,
@@ -214,10 +247,7 @@ fn cmd_solve(args: &Args) -> i32 {
             "pool" => EngineKind::Pool { workers: args.get::<usize>("workers", 0).unwrap() },
             _ => EngineKind::Sequential,
         },
-        link: adcdgd::network::LinkModel {
-            drop_prob: args.get::<f64>("drop-prob", 0.0).unwrap(),
-            ..adcdgd::network::LinkModel::default()
-        },
+        link,
         grad_tol: None,
     };
     let gamma = args.get::<f64>("gamma", 1.0).unwrap();
@@ -257,11 +287,13 @@ fn cmd_solve(args: &Args) -> i32 {
     let n = prepared.graph().num_nodes();
     let out = prepared.run();
     println!(
-        "algo={algo} topology={topo} n={n} beta={:.4} rounds={} bytes={} dropped={} sim_time={:.3}s",
+        "algo={algo} topology={topo} n={n} beta={:.4} rounds={} bytes={} dropped={} \
+         superseded={} sim_time={:.3}s",
         prepared.weights().beta(),
         out.rounds_completed,
         out.total_bytes,
         out.dropped_messages,
+        out.superseded_messages,
         out.sim_seconds
     );
     let m = &out.metrics;

@@ -1,47 +1,47 @@
 //! The message bus: broadcast delivery over topology links with byte
-//! accounting, loss injection, and a simulated clock.
+//! accounting, loss injection, latency-aware (possibly multi-round)
+//! delivery, and a simulated clock.
 
-use super::{LinkModel, LinkStats, Message};
+use super::{InboxView, LinkModel, LinkStats, MailSlot, MailboxLayout, MailboxPlane};
 use crate::compress::Payload;
-use std::sync::Arc;
 use crate::rng::SplitMix64;
 use crate::topology::Graph;
+use std::sync::Arc;
 
-/// A message delivered to a destination node this round.
-#[derive(Debug, Clone)]
-pub struct DeliveredMessage {
-    /// Sender.
-    pub src: usize,
-    /// Payload (shared, not copied, across link deliveries).
-    pub payload: Arc<Payload>,
-}
-
-/// In-process network fabric for one topology. Delivery is per-round:
-/// [`Bus::broadcast`] enqueues one copy of a node's payload per incident
-/// link (metering each copy), and [`Bus::collect`] drains a node's inbox.
+/// In-process network fabric for one topology. Delivery is slot-based
+/// and per-round: [`Bus::broadcast`] meters one copy of a node's payload
+/// per incident link and places each copy in the receiver's dedicated
+/// per-sender slot (or the in-flight ring when the link model defers
+/// arrival — see [`MailboxPlane`]); the engines read inboxes through
+/// [`Bus::inbox_view`] / [`Bus::take_inbox_range`]. Slots are reused
+/// across rounds, so the steady-state broadcast → slot → consume path
+/// performs no heap allocation.
 ///
 /// Per-link counters live in one dense `Vec<LinkStats>` indexed by
-/// `link_off[src] + slot` (the sender's neighbor-offset table, CSR
-/// style) — the broadcast hot path already iterates neighbor slots, so
-/// metering is a direct index with no hashing.
+/// `off[src] + slot` (the sender's neighbor-offset table, shared with
+/// the mailbox layout) — the broadcast hot path already iterates
+/// neighbor slots, so metering is a direct index with no hashing.
 ///
 /// Loss injection is a *stateless hash* of `(seed, src, dst, round)`, so
 /// drop decisions are identical regardless of message arrival order —
-/// this is what makes the threaded engine bit-identical to the
-/// sequential one.
+/// this is what makes the parallel engines bit-identical to the
+/// sequential one. The bus also tracks the round's largest metered
+/// payload itself, so [`Bus::advance_round`] cannot desync the simulated
+/// clock from what was actually transmitted.
 pub struct Bus {
     n: usize,
-    neighbors: Vec<Vec<usize>>,
+    layout: Arc<MailboxLayout>,
+    mailbox: MailboxPlane,
     model: LinkModel,
-    /// Dense per-directed-link counters, `2E` entries.
+    /// Dense per-directed-link counters, `2E` entries (sender-side
+    /// indexing: link `src → neighbors(src)[slot]` is
+    /// `stats[off[src] + slot]`).
     stats: Vec<LinkStats>,
-    /// Prefix sums of out-degrees: link `src → neighbors[src][slot]` is
-    /// `stats[link_off[src] + slot]`.
-    link_off: Vec<usize>,
-    inboxes: Vec<Vec<DeliveredMessage>>,
     total_bytes: usize,
     total_messages: usize,
     total_dropped: usize,
+    /// Largest payload metered since the last [`Bus::advance_round`].
+    round_max_payload: usize,
     sim_clock: f64,
     seed: u64,
 }
@@ -50,25 +50,28 @@ impl Bus {
     /// Build a bus over `g` with per-link `model`. Loss injection is
     /// derived deterministically from `seed`.
     pub fn new(g: &Graph, model: LinkModel, seed: u64) -> Self {
-        let n = g.num_nodes();
-        let mut link_off = Vec::with_capacity(n + 1);
-        link_off.push(0);
-        for i in 0..n {
-            link_off.push(link_off[i] + g.degree(i));
-        }
+        let layout = Arc::new(MailboxLayout::from_graph(g));
+        let mailbox = MailboxPlane::new(Arc::clone(&layout));
+        let stats = vec![LinkStats::default(); layout.slots()];
         Self {
-            n,
-            neighbors: (0..n).map(|i| g.neighbors(i).to_vec()).collect(),
+            n: g.num_nodes(),
+            layout,
+            mailbox,
             model,
-            stats: vec![LinkStats::default(); link_off[n]],
-            link_off,
-            inboxes: vec![Vec::new(); n],
+            stats,
             total_bytes: 0,
             total_messages: 0,
             total_dropped: 0,
+            round_max_payload: 0,
             sim_clock: 0.0,
             seed,
         }
+    }
+
+    /// The shared slot geometry (engines clone the `Arc` to address
+    /// per-worker staging buffers without holding the bus).
+    pub fn layout(&self) -> Arc<MailboxLayout> {
+        Arc::clone(&self.layout)
     }
 
     /// Deterministic drop decision for `(src, dst, round)`.
@@ -84,63 +87,91 @@ impl Bus {
     }
 
     /// Broadcast `payload` from `src` to all its neighbors (one metered
-    /// copy per link). Returns the number of copies actually delivered.
+    /// copy per link). Copies land in each receiver's dedicated slot —
+    /// immediately at delay 0, otherwise in the in-flight ring for round
+    /// `round + delay`. Returns the number of copies that survived loss
+    /// injection (delayed copies count as delivered when sent).
     pub fn broadcast(&mut self, src: usize, round: usize, payload: &Arc<Payload>) -> usize {
-        let mut delivered = 0;
         let bytes = payload.wire_bytes();
-        // Take the adjacency row so `transmit` can borrow `self` mutably;
-        // nothing below touches `neighbors[src]`.
-        let row = std::mem::take(&mut self.neighbors[src]);
-        for (slot, &dst) in row.iter().enumerate() {
-            let msg = Message { src, dst, round, payload: Arc::clone(payload) };
-            if self.transmit(msg, bytes, self.link_off[src] + slot) {
-                delivered += 1;
-            }
-        }
-        self.neighbors[src] = row;
-        delivered
-    }
-
-    /// Meter and (absent a drop) deliver one message on the directed
-    /// link whose dense stats index is `idx`.
-    fn transmit(&mut self, msg: Message, bytes: usize, idx: usize) -> bool {
-        let dropped = self.model.drop_prob > 0.0
-            && self.drop_roll(msg.src, msg.dst, msg.round) < self.model.drop_prob;
+        self.round_max_payload = self.round_max_payload.max(bytes);
         let t = self.model.transmit_time(bytes);
-        let stats = &mut self.stats[idx];
-        stats.messages += 1;
-        self.total_messages += 1;
-        if dropped {
-            stats.dropped += 1;
-            self.total_dropped += 1;
-            return false;
+        let delay = self.model.delay_rounds_for_time(t);
+        let (q0, q1) = (self.layout.offset(src), self.layout.offset(src + 1));
+        let mut delivered = 0;
+        for q in q0..q1 {
+            let dst = self.layout.neighbor_at(q);
+            self.stats[q].messages += 1;
+            self.total_messages += 1;
+            let dropped = self.model.drop_prob > 0.0
+                && self.drop_roll(src, dst, round) < self.model.drop_prob;
+            if dropped {
+                self.stats[q].dropped += 1;
+                self.total_dropped += 1;
+                continue;
+            }
+            self.stats[q].bytes += bytes;
+            self.stats[q].sim_time += t;
+            self.total_bytes += bytes;
+            let slot = self.layout.in_slot(q);
+            if delay == 0 {
+                self.mailbox.place(slot, round, Arc::clone(payload));
+            } else {
+                self.mailbox.stash(round + delay, slot, round, Arc::clone(payload));
+            }
+            delivered += 1;
         }
-        stats.bytes += bytes;
-        stats.sim_time += t;
-        self.total_bytes += bytes;
-        // Links transmit in parallel: the round clock advances by the max
-        // link time, approximated here by accumulating per-round maxima in
-        // `advance_round`. Track per-message time on stats only.
-        self.inboxes[msg.dst].push(DeliveredMessage { src: msg.src, payload: msg.payload });
-        true
+        delivered
     }
 
     /// Dense stats index of the directed link `src → dst` (None for
     /// non-links).
     fn stat_index(&self, src: usize, dst: usize) -> Option<usize> {
-        self.neighbors[src].binary_search(&dst).ok().map(|slot| self.link_off[src] + slot)
+        self.layout
+            .senders(src)
+            .binary_search(&dst)
+            .ok()
+            .map(|slot| self.layout.offset(src) + slot)
     }
 
-    /// Drain the inbox of node `i`.
-    pub fn collect(&mut self, i: usize) -> Vec<DeliveredMessage> {
-        std::mem::take(&mut self.inboxes[i])
+    /// Drain in-flight messages arriving in rounds `..= round` into
+    /// their slots. Idempotent; the sequential engine calls it once per
+    /// round before consuming, the parallel engines go through
+    /// [`Bus::take_inbox_range`] which calls it lazily (first taker
+    /// under the lock drains — the result is slot-addressed, so the
+    /// triggering order cannot leak into results).
+    pub fn deliver_round(&mut self, round: usize) {
+        self.mailbox.deliver_through(round);
+    }
+
+    /// Borrow node `i`'s inbox: filled slots iterate in ascending-sender
+    /// order, no allocation, no sorting. [`Bus::deliver_round`] must
+    /// have covered the current round first.
+    pub fn inbox_view(&self, i: usize) -> InboxView<'_> {
+        self.mailbox.view(i)
+    }
+
+    /// Empty node `i`'s inbox slots (after its consume call).
+    pub fn clear_inbox(&mut self, i: usize) {
+        self.mailbox.clear(i);
+    }
+
+    /// Move the inbox slots of nodes `a..b` for `round` into `staging`
+    /// (sized `layout.offset(b) - layout.offset(a)`), emptying the bus's
+    /// slots. Performs the lazy [`Bus::deliver_round`] drain first, so
+    /// parallel workers need exactly one bus-lock acquisition per shard
+    /// per collect phase.
+    pub fn take_inbox_range(&mut self, a: usize, b: usize, round: usize, staging: &mut [MailSlot]) {
+        self.mailbox.deliver_through(round);
+        self.mailbox.take_range(a, b, staging);
     }
 
     /// Advance the simulated clock by one synchronous round: the round
-    /// time is the *max* transmit time over the payload sizes just sent
-    /// (synchronous barrier semantics).
-    pub fn advance_round(&mut self, max_payload_bytes: usize) {
-        self.sim_clock += self.model.transmit_time(max_payload_bytes);
+    /// time is the *max* transmit time over the payloads metered since
+    /// the previous call (synchronous barrier semantics), tracked by the
+    /// bus itself so callers cannot desync the clock from the traffic.
+    pub fn advance_round(&mut self) {
+        self.sim_clock += self.model.transmit_time(self.round_max_payload);
+        self.round_max_payload = 0;
     }
 
     /// Total payload bytes delivered so far.
@@ -156,6 +187,17 @@ impl Bus {
     /// Total messages dropped by failure injection.
     pub fn total_dropped(&self) -> usize {
         self.total_dropped
+    }
+
+    /// Messages overwritten in their slot by a fresher send before being
+    /// consumed (only possible when per-message delays differ).
+    pub fn total_superseded(&self) -> usize {
+        self.mailbox.superseded()
+    }
+
+    /// Messages currently in flight (sent, not yet visible).
+    pub fn in_flight(&self) -> usize {
+        self.mailbox.in_flight_len()
     }
 
     /// Simulated elapsed seconds.
@@ -179,6 +221,10 @@ mod tests {
     use super::*;
     use crate::topology;
 
+    fn inbox_of(bus: &Bus, i: usize) -> Vec<(usize, usize)> {
+        bus.inbox_view(i).iter().map(|m| (m.src, m.round)).collect()
+    }
+
     #[test]
     fn broadcast_meters_bytes_per_link() {
         let g = topology::star(4); // node 0 hub, 3 links
@@ -196,14 +242,18 @@ mod tests {
     }
 
     #[test]
-    fn collect_drains_inbox() {
-        let g = topology::pair();
+    fn slots_fill_in_sender_order_and_clear() {
+        let g = topology::star(4);
         let mut bus = Bus::new(&g, LinkModel::default(), 0);
-        bus.broadcast(0, 1, &Arc::new(Payload::F64(vec![5.0])));
-        let inbox = bus.collect(1);
-        assert_eq!(inbox.len(), 1);
-        assert_eq!(inbox[0].src, 0);
-        assert!(bus.collect(1).is_empty());
+        let p = Arc::new(Payload::F64(vec![5.0]));
+        // Leaves broadcast out of id order; the hub's view is sorted.
+        bus.broadcast(3, 1, &p);
+        bus.broadcast(1, 1, &p);
+        bus.deliver_round(1);
+        assert_eq!(inbox_of(&bus, 0), vec![(1, 1), (3, 1)]);
+        assert_eq!(bus.inbox_view(0).capacity(), 3);
+        bus.clear_inbox(0);
+        assert!(bus.inbox_view(0).is_empty());
     }
 
     #[test]
@@ -215,6 +265,8 @@ mod tests {
         let mut delivered = 0;
         for r in 1..=1000 {
             delivered += bus.broadcast(0, r, &p);
+            bus.deliver_round(r);
+            bus.clear_inbox(1);
         }
         assert!(bus.total_dropped() > 300, "dropped={}", bus.total_dropped());
         assert!(delivered > 300, "delivered={delivered}");
@@ -222,11 +274,79 @@ mod tests {
     }
 
     #[test]
-    fn sim_clock_advances() {
+    fn sim_clock_tracks_metered_payloads() {
         let g = topology::pair();
         let mut bus = Bus::new(&g, LinkModel::slow(), 0);
-        bus.advance_round(1_000_000);
-        assert!((bus.sim_clock() - 1.005).abs() < 1e-9);
+        bus.broadcast(0, 1, &Arc::new(Payload::F64(vec![0.0; 125_000]))); // 1 MB
+        bus.broadcast(1, 1, &Arc::new(Payload::F64(vec![0.0; 10]))); // smaller
+        bus.advance_round();
+        assert!((bus.sim_clock() - 1.005).abs() < 1e-9, "clock={}", bus.sim_clock());
+        // The per-round max resets: an empty round only costs latency.
+        bus.advance_round();
+        assert!((bus.sim_clock() - 1.010).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_defers_delivery_by_whole_rounds() {
+        let g = topology::pair();
+        let mut bus = Bus::new(&g, LinkModel::with_delay(2), 0);
+        let p = Arc::new(Payload::F64(vec![1.0]));
+        assert_eq!(bus.broadcast(0, 1, &p), 1, "delayed copies meter at send");
+        bus.deliver_round(1);
+        assert!(bus.inbox_view(1).is_empty());
+        assert_eq!(bus.in_flight(), 1);
+        bus.deliver_round(2);
+        assert!(bus.inbox_view(1).is_empty());
+        bus.deliver_round(3);
+        assert_eq!(inbox_of(&bus, 1), vec![(0, 1)], "arrives exactly 2 rounds late");
+        assert_eq!(bus.in_flight(), 0);
+        assert_eq!(bus.total_bytes(), 8);
+    }
+
+    #[test]
+    fn mixed_delays_keep_freshest_send() {
+        // 1 B/s bandwidth against a 10-second cadence: an 8-byte payload
+        // sent in round 1 takes 8 s → arrives round 1; a 16-byte payload
+        // takes 16 s → 1 round late. Sending big (round 1) then small
+        // (round 2) collides in round 2's slot; the fresher send wins.
+        let model = LinkModel {
+            bandwidth_bytes_per_sec: 1.0,
+            round_secs: 10.0,
+            ..LinkModel::default()
+        };
+        let g = topology::pair();
+        let mut bus = Bus::new(&g, model, 0);
+        bus.broadcast(0, 1, &Arc::new(Payload::F64(vec![1.0, 2.0]))); // 16 B, arrives r2
+        bus.deliver_round(1);
+        assert!(bus.inbox_view(1).is_empty());
+        bus.clear_inbox(1);
+        bus.broadcast(0, 2, &Arc::new(Payload::F64(vec![3.0]))); // 8 B, arrives r2
+        bus.deliver_round(2);
+        assert_eq!(inbox_of(&bus, 1), vec![(0, 2)]);
+        assert_eq!(bus.total_superseded(), 1);
+    }
+
+    #[test]
+    fn take_inbox_range_moves_a_shard_worth_of_slots() {
+        let g = topology::ring(4);
+        let mut bus = Bus::new(&g, LinkModel::default(), 0);
+        let p = Arc::new(Payload::F64(vec![1.0]));
+        for src in 0..4 {
+            bus.broadcast(src, 1, &p);
+        }
+        let layout = bus.layout();
+        let lo = layout.offset(1);
+        let mut staging: Vec<MailSlot> = vec![None; layout.offset(3) - lo];
+        bus.take_inbox_range(1, 3, 1, &mut staging);
+        for i in 1..3usize {
+            let (a, b) = (layout.offset(i) - lo, layout.offset(i + 1) - lo);
+            let view = InboxView::new(layout.senders(i), &staging[a..b]);
+            let senders: Vec<usize> = view.iter().map(|m| m.src).collect();
+            assert_eq!(senders, layout.senders(i), "node {i} hears both neighbors");
+            assert!(bus.inbox_view(i).is_empty(), "slots were taken");
+        }
+        // Untouched nodes keep their slots.
+        assert_eq!(bus.inbox_view(0).len(), 2);
     }
 
     #[test]
@@ -238,6 +358,7 @@ mod tests {
         assert!(bus.link_stats(0, 1).is_some());
         // Dense layout: 2 directed entries per undirected edge.
         assert_eq!(bus.stats.len(), 4);
-        assert_eq!(bus.link_off, vec![0, 1, 3, 4]);
+        assert_eq!(bus.layout.offset(1), 1);
+        assert_eq!(bus.layout.offset(2), 3);
     }
 }

@@ -1,4 +1,6 @@
-//! Link models: bandwidth/latency cost accounting and loss injection.
+//! Link models: bandwidth/latency cost accounting, loss injection, and
+//! the round-delay conversion that turns link latency into *deferred
+//! delivery* (messages landing one or more rounds late).
 
 /// Transmission characteristics of every link in the fabric.
 #[derive(Debug, Clone, Copy)]
@@ -11,20 +13,57 @@ pub struct LinkModel {
     pub latency_sec: f64,
     /// Probability a message is silently dropped (failure injection).
     pub drop_prob: f64,
+    /// Synchronous round cadence in seconds. When positive, a message's
+    /// transmit time is converted into whole rounds of *delivery delay*:
+    /// a message sent in round `k` arrives in round
+    /// `k + ⌊transmit_time / round_secs⌋` (see [`Self::delay_rounds`]),
+    /// so `latency_sec`/bandwidth produce genuinely stale consensus
+    /// inputs instead of only advancing the simulated clock. `0.0` (the
+    /// default) keeps the historical same-round delivery.
+    pub round_secs: f64,
 }
 
 impl Default for LinkModel {
     fn default() -> Self {
-        Self { bandwidth_bytes_per_sec: f64::INFINITY, latency_sec: 0.0, drop_prob: 0.0 }
+        Self {
+            bandwidth_bytes_per_sec: f64::INFINITY,
+            latency_sec: 0.0,
+            drop_prob: 0.0,
+            round_secs: 0.0,
+        }
     }
 }
 
 impl LinkModel {
     /// A "slow network" preset: the communication-bottleneck regime the
-    /// paper motivates (≈1 MB/s, 5 ms latency).
+    /// paper motivates (≈1 MB/s, 5 ms latency). Delivery stays
+    /// same-round; set [`Self::round_secs`] to turn the latency into
+    /// multi-round staleness.
     pub fn slow() -> Self {
-        Self { bandwidth_bytes_per_sec: 1e6, latency_sec: 5e-3, drop_prob: 0.0 }
+        Self {
+            bandwidth_bytes_per_sec: 1e6,
+            latency_sec: 5e-3,
+            drop_prob: 0.0,
+            round_secs: 0.0,
+        }
     }
+
+    /// A link whose every message arrives exactly `rounds` rounds late,
+    /// regardless of payload size: latency of `rounds` seconds against a
+    /// 1-second round cadence, with infinite bandwidth. `rounds = 0`
+    /// is same-round delivery. The delayed-consensus ablation and the
+    /// engine-equivalence tests pin their delay axis with this.
+    pub fn with_delay(rounds: usize) -> Self {
+        Self { latency_sec: rounds as f64, round_secs: 1.0, ..Self::default() }
+    }
+
+    /// Saturation bound for [`Self::delay_rounds`]: delays are capped at
+    /// this many rounds so degenerate link parameters (zero/negative
+    /// bandwidth, astronomically large latency) cannot blow up the
+    /// in-flight ring, whose memory is proportional to the largest
+    /// pending delay. Far beyond any simulated horizon of interest — a
+    /// message this stale is indistinguishable from a lost one.
+    pub const MAX_DELAY_ROUNDS: usize = 65_536;
 
     /// Simulated wall-clock cost of transmitting `bytes` on this link.
     pub fn transmit_time(&self, bytes: usize) -> f64 {
@@ -34,6 +73,32 @@ impl LinkModel {
             0.0
         };
         self.latency_sec + bw
+    }
+
+    /// Whole rounds a `bytes`-sized message spends in flight before it
+    /// becomes visible to its receiver: `⌊transmit_time / round_secs⌋`
+    /// when a round cadence is set, else 0 (same-round delivery).
+    /// Saturates at [`Self::MAX_DELAY_ROUNDS`].
+    pub fn delay_rounds(&self, bytes: usize) -> usize {
+        self.delay_rounds_for_time(self.transmit_time(bytes))
+    }
+
+    /// [`Self::delay_rounds`] for an already-computed transmit time `t`
+    /// (the broadcast hot path computes `t` once for metering and reuses
+    /// it here). Negative or NaN times count as 0; `+∞` (e.g. zero
+    /// bandwidth) saturates like any over-large delay.
+    pub fn delay_rounds_for_time(&self, t: f64) -> usize {
+        if self.round_secs > 0.0 {
+            let rounds = t / self.round_secs;
+            if rounds >= Self::MAX_DELAY_ROUNDS as f64 {
+                Self::MAX_DELAY_ROUNDS
+            } else {
+                // f64 → usize saturates negatives and NaN to 0.
+                rounds as usize
+            }
+        } else {
+            0
+        }
     }
 }
 
@@ -61,5 +126,54 @@ mod tests {
         let slow = LinkModel::slow();
         let t = slow.transmit_time(1_000_000);
         assert!((t - (1.0 + 0.005)).abs() < 1e-12, "t={t}");
+    }
+
+    #[test]
+    fn default_and_slow_deliver_same_round() {
+        assert_eq!(LinkModel::default().delay_rounds(1_000_000), 0);
+        assert_eq!(LinkModel::slow().delay_rounds(1_000_000), 0);
+    }
+
+    #[test]
+    fn with_delay_defers_by_exact_rounds() {
+        for d in [0usize, 1, 3, 7] {
+            let m = LinkModel::with_delay(d);
+            assert_eq!(m.delay_rounds(0), d);
+            assert_eq!(m.delay_rounds(1_000_000), d, "byte-size independent");
+            assert_eq!(m.drop_prob, 0.0);
+        }
+    }
+
+    #[test]
+    fn degenerate_links_saturate_instead_of_exploding() {
+        // Zero bandwidth ⇒ infinite transmit time ⇒ capped delay.
+        let broken = LinkModel {
+            bandwidth_bytes_per_sec: 0.0,
+            round_secs: 0.1,
+            ..LinkModel::default()
+        };
+        assert_eq!(broken.delay_rounds(100), LinkModel::MAX_DELAY_ROUNDS);
+        // Huge latency saturates too.
+        let laggy = LinkModel { latency_sec: 1e18, round_secs: 1e-3, ..LinkModel::default() };
+        assert_eq!(laggy.delay_rounds(8), LinkModel::MAX_DELAY_ROUNDS);
+        // Negative/NaN transmit times deliver same-round.
+        let weird = LinkModel { latency_sec: -5.0, round_secs: 1.0, ..LinkModel::default() };
+        assert_eq!(weird.delay_rounds(8), 0);
+        assert_eq!(weird.delay_rounds_for_time(f64::NAN), 0);
+    }
+
+    #[test]
+    fn round_cadence_converts_latency_and_bandwidth() {
+        // 1 MB/s, 10 ms latency, 100 ms rounds: a 1 MB payload takes
+        // 1.01 s in flight = 10 whole rounds; a 1 KB payload 11 ms = 0.
+        let m = LinkModel {
+            bandwidth_bytes_per_sec: 1e6,
+            latency_sec: 0.01,
+            round_secs: 0.1,
+            ..LinkModel::default()
+        };
+        assert_eq!(m.delay_rounds(1_000_000), 10);
+        assert_eq!(m.delay_rounds(1_000), 0);
+        assert_eq!(m.delay_rounds(95_000), 1);
     }
 }

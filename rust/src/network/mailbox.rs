@@ -1,0 +1,474 @@
+//! The mailbox plane: slot-addressed inboxes plus latency-aware
+//! in-flight delivery.
+//!
+//! Before this layer existed each node's inbox was a freshly allocated
+//! `Vec` that the engines drained, re-collected, and re-sorted by sender
+//! every round. A [`MailboxPlane`] instead gives every *(receiver,
+//! incoming-neighbor)* pair one fixed slot, laid out on the same
+//! neighbor-offset prefix-sum table (`off`, CSR style) the state plane
+//! and link stats already use:
+//!
+//! ```text
+//! slots:   [ r0·nbr0 | r0·nbr1 | r1·nbr0 | r1·nbr1 | r1·nbr2 | r2·nbr0 | … ]
+//!            └──── off[0]… ────┘└─────── off[1]… ──────────┘└─ off[2]… ─┘
+//! ```
+//!
+//! The slot for a message `j → i` is `off[i] + position of j in
+//! neighbors(i)`. Because adjacency rows are sorted ascending (a
+//! [`crate::topology::Graph`] invariant), walking a receiver's slot range
+//! in order visits filled slots in **ascending-sender order** — the
+//! per-round `sort_by_key` the engines used to perform is structural now.
+//! Writes from distinct senders touch disjoint slots, and the slot
+//! storage is reused across rounds: the broadcast → slot → consume path
+//! performs no steady-state heap allocation.
+//!
+//! ## In-flight delivery
+//!
+//! When the link model sets a round cadence ([`round_secs`]), a message
+//! of `b` bytes sent in round `k` arrives in round `k + delay_rounds(b)`.
+//! Messages with a positive delay are stashed in a ring of recycled
+//! buckets keyed by arrival round and drained into their slots the first
+//! time round `k`'s inboxes are opened ([`MailboxPlane::deliver_through`]
+//! is lazy and idempotent, so the drain happens exactly once per round
+//! under whatever lock the engine already holds — its result is
+//! slot-addressed and therefore independent of which worker triggers it).
+//!
+//! When delays vary with payload size, two messages on the same link can
+//! arrive in the same round. A slot keeps the message with the **newest
+//! send round** (ties are impossible: one message per link per round);
+//! the superseded message is counted (see
+//! [`MailboxPlane::superseded`]) and behaves like a loss — exactly the
+//! semantics of an overwriting single-slot mailbox in delay-tolerant
+//! gossip. The freshest-wins rule is commutative, so arrival order never
+//! leaks into results.
+//!
+//! ## Borrowing rules for [`InboxView`]
+//!
+//! 1. A view is a pair of slices (senders, slots) — building one never
+//!    allocates or copies payloads.
+//! 2. The sequential engine borrows views straight out of the bus's
+//!    plane ([`crate::network::Bus::inbox_view`]) and clears the range
+//!    after each consume.
+//! 3. The parallel engines move their shard's slot range into a
+//!    per-worker staging buffer under the bus lock
+//!    ([`crate::network::Bus::take_inbox_range`] — a plain `Option::take`
+//!    per slot, no refcount traffic) and build views over the staging
+//!    slices outside the lock, so consumes never serialize on the bus.
+//!
+//! [`round_secs`]: crate::network::LinkModel::round_secs
+
+use crate::compress::Payload;
+use crate::topology::Graph;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// One mailbox slot: empty, or the freshest message from this slot's
+/// sender as `(send_round, payload)`.
+pub type MailSlot = Option<(usize, Arc<Payload>)>;
+
+/// The shared slot geometry of one topology: neighbor-offset prefix
+/// sums, flattened sorted adjacency, and the precomputed map from each
+/// directed link's *sender-side* index to its *receiver-side* slot.
+/// Engines hold an `Arc` of this to address staging buffers and build
+/// [`InboxView`]s without touching the bus.
+#[derive(Debug)]
+pub struct MailboxLayout {
+    /// Prefix sums of degrees (`n + 1` entries).
+    off: Vec<usize>,
+    /// Flattened adjacency rows (ascending within each row), `off[n]`
+    /// entries.
+    nbr: Vec<usize>,
+    /// For the directed link at sender-side index `q = off[src] + s`
+    /// (the `s`-th neighbor of `src`): the receiver-side slot index
+    /// `off[dst] + position of src in neighbors(dst)`.
+    in_slot: Vec<usize>,
+}
+
+impl MailboxLayout {
+    /// Build the layout of `g` (rows must be sorted and deduplicated —
+    /// the [`Graph`] constructor guarantees both).
+    pub fn from_graph(g: &Graph) -> Self {
+        let n = g.num_nodes();
+        let mut off = Vec::with_capacity(n + 1);
+        off.push(0);
+        for i in 0..n {
+            off.push(off[i] + g.degree(i));
+        }
+        let mut nbr = Vec::with_capacity(off[n]);
+        for i in 0..n {
+            nbr.extend_from_slice(g.neighbors(i));
+        }
+        let mut in_slot = Vec::with_capacity(off[n]);
+        for src in 0..n {
+            for &dst in g.neighbors(src) {
+                let pos = g
+                    .neighbors(dst)
+                    .binary_search(&src)
+                    .expect("undirected graph: reverse link must exist");
+                in_slot.push(off[dst] + pos);
+            }
+        }
+        Self { off, nbr, in_slot }
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.off.len() - 1
+    }
+
+    /// Total slot count (`2E`).
+    pub fn slots(&self) -> usize {
+        *self.off.last().unwrap()
+    }
+
+    /// First slot index of node `i`'s inbox (`off[i]`; `offset(n)` is
+    /// the total slot count, so `offset(i)..offset(i + 1)` is node `i`'s
+    /// slot range).
+    #[inline]
+    pub fn offset(&self, i: usize) -> usize {
+        self.off[i]
+    }
+
+    /// Degree of node `i`.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        self.off[i + 1] - self.off[i]
+    }
+
+    /// Node `i`'s incoming neighbors (ascending) — one per slot.
+    #[inline]
+    pub fn senders(&self, i: usize) -> &[usize] {
+        &self.nbr[self.off[i]..self.off[i + 1]]
+    }
+
+    /// The neighbor at flattened adjacency index `q`.
+    #[inline]
+    pub fn neighbor_at(&self, q: usize) -> usize {
+        self.nbr[q]
+    }
+
+    /// Receiver-side slot of the directed link at sender-side index `q`.
+    #[inline]
+    pub fn in_slot(&self, q: usize) -> usize {
+        self.in_slot[q]
+    }
+}
+
+/// One filled inbox slot, yielded by [`InboxView::iter`].
+#[derive(Debug)]
+pub struct InboxMsg<'a> {
+    /// The slot index within the receiver's row — equal to the sender's
+    /// position in the receiver's (ascending) adjacency row, and
+    /// therefore directly usable as the [`crate::consensus::CsrWeights`]
+    /// row slot and the mirror-arena slot.
+    pub slot: usize,
+    /// Sender node id.
+    pub src: usize,
+    /// Round the message was *sent* in (equals the consuming round at
+    /// delay 0; earlier when the link defers delivery).
+    pub round: usize,
+    /// The payload (shared across link copies).
+    pub payload: &'a Arc<Payload>,
+}
+
+/// A borrowed view of one receiver's inbox slots for a single consume
+/// call: the receiver's ascending sender list alongside its slot range.
+/// Iteration yields filled slots in ascending-sender order without any
+/// allocation or sorting.
+#[derive(Debug, Clone, Copy)]
+pub struct InboxView<'a> {
+    senders: &'a [usize],
+    slots: &'a [MailSlot],
+}
+
+impl<'a> InboxView<'a> {
+    /// View over `slots` from the parallel `senders` (one slot per
+    /// incoming neighbor, ascending).
+    pub fn new(senders: &'a [usize], slots: &'a [MailSlot]) -> Self {
+        assert_eq!(senders.len(), slots.len(), "one slot per incoming neighbor");
+        debug_assert!(
+            senders.windows(2).all(|w| w[0] < w[1]),
+            "senders must be strictly ascending"
+        );
+        Self { senders, slots }
+    }
+
+    /// The receiver's incoming neighbors (ascending), one per slot.
+    pub fn senders(&self) -> &'a [usize] {
+        self.senders
+    }
+
+    /// Slot count (the receiver's degree), filled or not.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Number of filled slots (messages visible this round).
+    pub fn len(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// True when no slot is filled.
+    pub fn is_empty(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+
+    /// Iterate the filled slots in ascending-sender order.
+    pub fn iter(&self) -> impl Iterator<Item = InboxMsg<'a>> + 'a {
+        let senders: &'a [usize] = self.senders;
+        let slots: &'a [MailSlot] = self.slots;
+        slots.iter().enumerate().filter_map(move |(s, slot)| {
+            slot.as_ref().map(|(round, payload)| InboxMsg {
+                slot: s,
+                src: senders[s],
+                round: *round,
+                payload,
+            })
+        })
+    }
+}
+
+/// A message waiting in the in-flight ring for its arrival round.
+#[derive(Debug)]
+struct FlightMsg {
+    slot: usize,
+    round: usize,
+    payload: Arc<Payload>,
+}
+
+/// Slot storage plus the in-flight ring for one topology. Owned by the
+/// [`crate::network::Bus`]; see the module docs for layout, delay, and
+/// borrowing semantics.
+#[derive(Debug)]
+pub struct MailboxPlane {
+    layout: Arc<MailboxLayout>,
+    slots: Vec<MailSlot>,
+    /// Bucket `d` holds messages arriving in round
+    /// `delivered_through + 1 + d`. Buckets are recycled front-to-back
+    /// as rounds drain, so steady-state delivery allocates nothing.
+    in_flight: VecDeque<Vec<FlightMsg>>,
+    /// Rounds `1..=delivered_through` have been drained into slots.
+    delivered_through: usize,
+    superseded: usize,
+}
+
+impl MailboxPlane {
+    /// Allocate the (empty) slot plane for `layout`.
+    pub fn new(layout: Arc<MailboxLayout>) -> Self {
+        let slots = vec![None; layout.slots()];
+        Self {
+            layout,
+            slots,
+            in_flight: VecDeque::new(),
+            delivered_through: 0,
+            superseded: 0,
+        }
+    }
+
+    /// The shared slot geometry.
+    pub fn layout(&self) -> &Arc<MailboxLayout> {
+        &self.layout
+    }
+
+    /// Messages currently waiting in the in-flight ring.
+    pub fn in_flight_len(&self) -> usize {
+        self.in_flight.iter().map(Vec::len).sum()
+    }
+
+    /// Messages overwritten in their slot by a fresher send before being
+    /// consumed (only possible when per-message delays differ).
+    pub fn superseded(&self) -> usize {
+        self.superseded
+    }
+
+    /// Freshest-wins write into `slot`. Commutative in arrival order.
+    pub fn place(&mut self, slot: usize, round: usize, payload: Arc<Payload>) {
+        match self.slots[slot].as_ref().map(|(r, _)| *r) {
+            Some(r) if r >= round => self.superseded += 1,
+            Some(_) => {
+                self.superseded += 1;
+                self.slots[slot] = Some((round, payload));
+            }
+            None => self.slots[slot] = Some((round, payload)),
+        }
+    }
+
+    /// Queue a message sent in `round` for delivery into `slot` at
+    /// `arrival` (> the last delivered round).
+    pub fn stash(&mut self, arrival: usize, slot: usize, round: usize, payload: Arc<Payload>) {
+        debug_assert!(arrival > self.delivered_through, "arrival round already drained");
+        let idx = arrival - self.delivered_through - 1;
+        while self.in_flight.len() <= idx {
+            self.in_flight.push_back(Vec::new());
+        }
+        self.in_flight[idx].push(FlightMsg { slot, round, payload });
+    }
+
+    /// Drain every in-flight message arriving in rounds `..= round` into
+    /// its slot. Idempotent; must run before round `round`'s inboxes are
+    /// read (the engines trigger it through the bus's collect APIs).
+    pub fn deliver_through(&mut self, round: usize) {
+        while self.delivered_through < round {
+            self.delivered_through += 1;
+            if let Some(mut bucket) = self.in_flight.pop_front() {
+                for m in bucket.drain(..) {
+                    self.place(m.slot, m.round, m.payload);
+                }
+                // Recycle the bucket (and its capacity) at the ring's far
+                // end — steady-state delivery never allocates.
+                self.in_flight.push_back(bucket);
+            }
+        }
+    }
+
+    /// Borrow node `i`'s inbox as a view (filled slots iterate in
+    /// ascending-sender order).
+    pub fn view(&self, i: usize) -> InboxView<'_> {
+        let (a, b) = (self.layout.offset(i), self.layout.offset(i + 1));
+        InboxView::new(self.layout.senders(i), &self.slots[a..b])
+    }
+
+    /// Empty node `i`'s slots (after its consume call).
+    pub fn clear(&mut self, i: usize) {
+        let (a, b) = (self.layout.offset(i), self.layout.offset(i + 1));
+        for s in &mut self.slots[a..b] {
+            *s = None;
+        }
+    }
+
+    /// Move the slot contents of nodes `a..b` into `dst` (sized
+    /// `offset(b) - offset(a)`), emptying the plane's slots. `dst` is
+    /// overwritten wholesale, so a reused staging buffer never leaks
+    /// stale messages.
+    pub fn take_range(&mut self, a: usize, b: usize, dst: &mut [MailSlot]) {
+        let (s0, s1) = (self.layout.offset(a), self.layout.offset(b));
+        assert_eq!(dst.len(), s1 - s0, "staging buffer size mismatch");
+        for (d, s) in dst.iter_mut().zip(self.slots[s0..s1].iter_mut()) {
+            *d = s.take();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology;
+
+    fn payload(v: f64) -> Arc<Payload> {
+        Arc::new(Payload::F64(vec![v]))
+    }
+
+    #[test]
+    fn layout_mirrors_adjacency() {
+        let g = topology::path(3); // 0-1, 1-2
+        let l = MailboxLayout::from_graph(&g);
+        assert_eq!(l.n(), 3);
+        assert_eq!(l.slots(), 4);
+        assert_eq!((l.offset(0), l.offset(1), l.offset(2), l.offset(3)), (0, 1, 3, 4));
+        assert_eq!(l.senders(1), &[0, 2]);
+        assert_eq!(l.degree(1), 2);
+        // Sender-side link 0→1 (q = 0) lands in receiver 1's slot for
+        // neighbor 0 (global slot 1); link 1→0 (q = 1) in slot 0.
+        assert_eq!(l.neighbor_at(0), 1);
+        assert_eq!(l.in_slot(0), 1);
+        assert_eq!(l.in_slot(1), 0);
+        assert_eq!(l.in_slot(2), 3); // 1→2 fills receiver 2's only slot
+        assert_eq!(l.in_slot(3), 2); // 2→1 fills receiver 1's slot for 2
+    }
+
+    #[test]
+    fn view_iterates_filled_slots_in_sender_order() {
+        let g = topology::star(4); // hub 0 ↔ {1, 2, 3}
+        let l = Arc::new(MailboxLayout::from_graph(&g));
+        let mut mb = MailboxPlane::new(Arc::clone(&l));
+        // Fill hub slots for senders 3 and 1 (out of order) and skip 2.
+        mb.place(2, 7, payload(3.0)); // slot of sender 3
+        mb.place(0, 7, payload(1.0)); // slot of sender 1
+        let view = mb.view(0);
+        assert_eq!(view.capacity(), 3);
+        assert_eq!(view.len(), 2);
+        assert!(!view.is_empty());
+        let got: Vec<(usize, usize, usize)> =
+            view.iter().map(|m| (m.slot, m.src, m.round)).collect();
+        assert_eq!(got, vec![(0, 1, 7), (2, 3, 7)]);
+        mb.clear(0);
+        assert!(mb.view(0).is_empty());
+    }
+
+    #[test]
+    fn stash_defers_until_delivered_through() {
+        let g = topology::pair();
+        let l = Arc::new(MailboxLayout::from_graph(&g));
+        let mut mb = MailboxPlane::new(l);
+        // Sent in round 1, arriving in round 3 (slot 1 = inbox of node 1).
+        mb.stash(3, 1, 1, payload(9.0));
+        assert_eq!(mb.in_flight_len(), 1);
+        mb.deliver_through(1);
+        assert!(mb.view(1).is_empty());
+        mb.deliver_through(2);
+        assert!(mb.view(1).is_empty());
+        mb.deliver_through(3);
+        let got: Vec<(usize, usize)> = mb.view(1).iter().map(|m| (m.src, m.round)).collect();
+        assert_eq!(got, vec![(0, 1)]);
+        assert_eq!(mb.in_flight_len(), 0);
+        // Idempotent.
+        mb.deliver_through(3);
+        assert_eq!(mb.view(1).len(), 1);
+    }
+
+    #[test]
+    fn freshest_send_wins_slot_collisions() {
+        let g = topology::pair();
+        let l = Arc::new(MailboxLayout::from_graph(&g));
+        let mut mb = MailboxPlane::new(l);
+        // Round-2 message already in the slot; a stale round-1 arrival
+        // must not replace it — and the outcome is the same if the
+        // fresh one lands second (commutativity).
+        mb.place(1, 2, payload(2.0));
+        mb.place(1, 1, payload(1.0));
+        assert_eq!(mb.superseded(), 1);
+        let m: Vec<usize> = mb.view(1).iter().map(|m| m.round).collect();
+        assert_eq!(m, vec![2]);
+        mb.clear(1);
+        mb.place(1, 1, payload(1.0));
+        mb.place(1, 2, payload(2.0));
+        assert_eq!(mb.superseded(), 2);
+        let m: Vec<usize> = mb.view(1).iter().map(|m| m.round).collect();
+        assert_eq!(m, vec![2]);
+    }
+
+    #[test]
+    fn take_range_moves_and_clears() {
+        let g = topology::ring(4);
+        let l = Arc::new(MailboxLayout::from_graph(&g));
+        let mut mb = MailboxPlane::new(Arc::clone(&l));
+        mb.place(l.offset(1), 5, payload(0.5)); // node 1, first slot
+        let mut staging: Vec<MailSlot> = vec![None; l.offset(3) - l.offset(1)];
+        // Poison staging to prove it is overwritten wholesale.
+        staging[1] = Some((99, payload(-1.0)));
+        mb.take_range(1, 3, &mut staging);
+        let view = InboxView::new(l.senders(1), &staging[..l.degree(1)]);
+        assert_eq!(view.len(), 1);
+        assert_eq!(view.iter().next().unwrap().round, 5);
+        assert!(staging[1].is_none(), "unfilled slots overwrite stale staging");
+        assert!(mb.view(1).is_empty(), "take empties the plane's slots");
+    }
+
+    #[test]
+    fn in_flight_buckets_recycle_without_growth() {
+        let g = topology::pair();
+        let l = Arc::new(MailboxLayout::from_graph(&g));
+        let mut mb = MailboxPlane::new(l);
+        // Constant delay 2: after warm-up the ring cycles its buckets.
+        for k in 1..=20usize {
+            mb.stash(k + 2, 0, k, payload(k as f64));
+            mb.stash(k + 2, 1, k, payload(k as f64));
+            mb.deliver_through(k);
+            assert!(mb.in_flight.len() <= 3, "ring must not grow: {}", mb.in_flight.len());
+            mb.clear(0);
+            mb.clear(1);
+        }
+        assert_eq!(mb.in_flight_len(), 4); // two rounds' worth still in flight
+        assert_eq!(mb.superseded(), 0);
+    }
+}

@@ -3,26 +3,22 @@
 //! The paper's target regime is consensus over *low-speed* networks, so
 //! the fabric meters every transmission: per-link byte counters feed the
 //! Fig. 6 reproduction, and a configurable [`LinkModel`] adds latency
-//! (simulated clock) and random message loss for robustness experiments.
+//! (simulated clock), random message loss, and — when a round cadence
+//! ([`LinkModel::round_secs`]) is set — genuinely *deferred delivery*,
+//! where latency/bandwidth turn into messages that arrive one or more
+//! rounds late.
+//!
+//! Delivery is slot-addressed: every *(receiver, incoming-neighbor)*
+//! pair owns one fixed [`MailSlot`] in the [`MailboxPlane`], laid out on
+//! the topology's neighbor-offset table, so inboxes need no per-round
+//! allocation or sorting and algorithms consume them through borrowed
+//! [`InboxView`]s. See [`mailbox`] for the slot layout, the in-flight
+//! delay ring, and the view borrowing rules.
 
 mod bus;
 mod link;
+pub mod mailbox;
 
-pub use bus::{Bus, DeliveredMessage};
+pub use bus::Bus;
 pub use link::{LinkModel, LinkStats};
-
-use crate::compress::Payload;
-use std::sync::Arc;
-
-/// A message in flight.
-#[derive(Debug, Clone)]
-pub struct Message {
-    /// Sender node.
-    pub src: usize,
-    /// Receiver node.
-    pub dst: usize,
-    /// 1-based round in which it was sent.
-    pub round: usize,
-    /// Encoded payload (shared; one buffer serves every link copy).
-    pub payload: Arc<Payload>,
-}
+pub use mailbox::{InboxMsg, InboxView, MailSlot, MailboxLayout, MailboxPlane};

@@ -35,6 +35,18 @@ impl Graph {
         for a in adj.iter_mut() {
             a.sort_unstable();
         }
+        // Sorted, deduplicated adjacency rows are a crate-wide invariant:
+        // the bus's link-stats lookup binary-searches rows, the mailbox
+        // plane equates slot index with row position, and the CSR mixing
+        // order (ascending neighbors) is what keeps engines bit-identical.
+        // Edge dedup above plus this sort guarantee it; assert loudly so
+        // any future construction path cannot silently break it.
+        for (i, a) in adj.iter().enumerate() {
+            debug_assert!(
+                a.windows(2).all(|w| w[0] < w[1]),
+                "adjacency row {i} must be strictly ascending: {a:?}"
+            );
+        }
         Self { n, edges, adj }
     }
 
@@ -148,6 +160,27 @@ mod tests {
     #[should_panic(expected = "duplicate")]
     fn rejects_duplicate_edges() {
         let _ = Graph::new(2, vec![(0, 1), (1, 0)]);
+    }
+
+    /// Rows must come out sorted and deduplicated no matter how unruly
+    /// the edge list is — descending, flipped, interleaved. Both the
+    /// bus's binary-searched stats lookup and the CSR/mailbox slot
+    /// alignment silently rely on this.
+    #[test]
+    fn adjacency_rows_sorted_for_unsorted_edge_input() {
+        let g = Graph::new(5, vec![(4, 0), (3, 0), (2, 0), (1, 0), (4, 2), (1, 3)]);
+        for i in 0..5 {
+            let row = g.neighbors(i);
+            assert!(
+                row.windows(2).all(|w| w[0] < w[1]),
+                "row {i} not strictly ascending: {row:?}"
+            );
+        }
+        assert_eq!(g.neighbors(0), &[1, 2, 3, 4]);
+        assert_eq!(g.neighbors(2), &[0, 4]);
+        // Binary-search-backed lookups agree with membership.
+        assert!(g.has_edge(0, 4) && g.has_edge(4, 0));
+        assert!(!g.has_edge(2, 3));
     }
 
     #[test]

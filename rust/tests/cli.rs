@@ -89,6 +89,32 @@ fn solve_pool_engine_matches_sequential() {
 }
 
 #[test]
+fn solve_delay_flag_defers_delivery() {
+    let with_delay = |d: &str| {
+        let (out, _, ok) = run(&[
+            "solve", "--algo", "adc", "--topology", "ring", "--n", "6", "--iters", "150",
+            "--record-every", "75", "--delay", d,
+        ]);
+        assert!(ok, "{out}");
+        out
+    };
+    let zero = with_delay("0");
+    let two = with_delay("2");
+    assert!(two.contains("superseded=0"), "{two}");
+    // Two rounds of staleness must change the trajectory (same seed,
+    // same spec otherwise).
+    assert_ne!(zero, two);
+}
+
+#[test]
+fn run_delay_sweep_prints_series() {
+    let (out, _, ok) = run(&["run", "--exp", "delay", "--iters", "120"]);
+    assert!(ok, "{out}");
+    assert!(out.contains("delayed_consensus"), "{out}");
+    assert!(out.contains("delay_0/grad_norm") && out.contains("delay_4/grad_norm"), "{out}");
+}
+
+#[test]
 fn solve_compressor_option_changes_bytes() {
     let base = |comp: &str| {
         let (out, _, ok) = run(&[

@@ -1,7 +1,8 @@
 //! The threaded and pool engines must be bit-identical to the sequential
 //! engine: per-node RNG streams are engine-owned per node, loss injection
-//! is a stateless hash, and inboxes are sorted by sender before the
-//! floating-point reduction — so scheduling cannot leak into results.
+//! is a stateless hash, and mailbox slots hold messages in
+//! ascending-sender order (delayed deliveries included) — so scheduling
+//! cannot leak into the floating-point reduction.
 
 use adcdgd::algorithms::{AdcDgdOptions, AlgorithmKind, QdgdOptions};
 use adcdgd::algorithms::StepSize;
@@ -139,6 +140,44 @@ fn grad_tol_early_stop_is_engine_invariant() {
     assert!(seq.rounds_completed < 50_000, "should stop early");
     assert_eq!(seq.rounds_completed, pool.rounds_completed);
     assert_eq!(seq.final_states, pool.final_states);
+}
+
+/// Deferred delivery (latency → whole rounds of staleness) must stay
+/// bit-identical across all three engines: in-flight messages land in
+/// dedicated slots keyed by arrival round, so neither the worker that
+/// triggers the drain nor the lock acquisition order can leak into
+/// results — including combined with 10% loss.
+#[test]
+fn delayed_delivery_is_engine_invariant() {
+    for delay in [1usize, 3] {
+        let spec = ring_spec(
+            16,
+            AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+            CompressorSpec::TernGrad,
+        );
+        let prepared = spec.prepare();
+        let mk = |engine| {
+            let mut c = cfg(engine, 0.10);
+            c.link = LinkModel { drop_prob: 0.10, ..LinkModel::with_delay(delay) };
+            c.iterations = 150;
+            prepared.run_with(&c)
+        };
+        let seq = mk(EngineKind::Sequential);
+        let thr = mk(EngineKind::Threaded);
+        let pool = mk(EngineKind::Pool { workers: 3 });
+        let pool_auto = mk(EngineKind::pool());
+        assert!(seq.dropped_messages > 0, "loss active");
+        assert_identical(&seq, &thr, &format!("threaded delay={delay}"));
+        assert_identical(&seq, &pool, &format!("pool(3) delay={delay}"));
+        assert_identical(&seq, &pool_auto, &format!("pool(auto) delay={delay}"));
+        // Staleness must genuinely change the trajectory vs delay 0.
+        let mut c0 = cfg(EngineKind::Sequential, 0.10);
+        c0.iterations = 150;
+        let zero = prepared.run_with(&c0);
+        assert_ne!(seq.final_states, zero.final_states, "delay={delay} had no effect");
+        // Uniform delays never collide in a slot.
+        assert_eq!(seq.superseded_messages, 0);
+    }
 }
 
 #[test]

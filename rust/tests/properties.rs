@@ -520,6 +520,99 @@ fn prop_ternary_pack_edges() {
     assert!(r.is_err(), "ternary packing must reject |t| > 1");
 }
 
+/// Randomized fused-decode equivalence across **all six** payload
+/// kinds: `decode_axpy(c, out)` must equal `decode()` followed by a
+/// manual axpy for random lengths (ternary lengths deliberately biased
+/// off multiples of 4), random — including negative and zero — scales,
+/// and random starting accumulators.
+#[test]
+fn prop_decode_axpy_equivalence_randomized() {
+    let mut rng = Xoshiro256pp::seed_from_u64(114);
+    for trial in 0..80usize {
+        // 4k+1 / 4k+2 / 4k+3 lengths dominate so the ternary tail byte
+        // is exercised; every fourth trial uses an exact multiple.
+        let p = 1 + rng.next_bounded(64) as usize * 4 / 3 + (trial % 4);
+        let scale = 0.05 + rng.next_f64() * 3.0;
+        let c = match trial % 3 {
+            0 => (rng.next_f64() - 0.5) * 4.0, // signed
+            1 => 0.0,                          // degenerate
+            _ => 1.0 + rng.next_f64() * 99.0,  // large
+        };
+        let mut payloads: Vec<Payload> = vec![
+            Payload::F64((0..p).map(|_| (rng.next_f64() - 0.5) * 1e3).collect()),
+            Payload::F32((0..p).map(|_| (rng.next_f64() as f32 - 0.5) * 50.0).collect()),
+            Payload::I16 {
+                scale,
+                data: (0..p).map(|_| rng.next_bounded(65536) as i64 as i16).collect(),
+            },
+            Payload::I8 {
+                scale,
+                data: (0..p).map(|_| rng.next_bounded(256) as i64 as i8).collect(),
+            },
+            Payload::pack_ternary(
+                p,
+                scale,
+                &(0..p).map(|_| (rng.next_bounded(3) as i8) - 1).collect::<Vec<i8>>(),
+            ),
+        ];
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for i in 0..p {
+            if rng.next_f64() < 0.4 {
+                idx.push(i as u32);
+                val.push(rng.next_bounded(65536) as i64 as i16);
+            }
+        }
+        payloads.push(Payload::SparseI16 { len: p, scale, idx, val });
+
+        for payload in payloads.drain(..) {
+            let kind = payload.kind();
+            let start: Vec<f64> = (0..p).map(|_| (rng.next_f64() - 0.5) * 10.0).collect();
+            let mut fused = start.clone();
+            payload.decode_axpy(c, &mut fused);
+            let dec = payload.decode();
+            for i in 0..p {
+                let reference = start[i] + c * dec[i];
+                let tol = 1e-12 * (1.0 + reference.abs());
+                assert!(
+                    (fused[i] - reference).abs() <= tol,
+                    "{kind:?} p={p} c={c}: fused[{i}]={} vs {reference}",
+                    fused[i]
+                );
+            }
+        }
+    }
+}
+
+/// The ternary codec's trailing byte: positions past `len` in the last
+/// packed byte are never read, so garbage bits there must not leak into
+/// either decode pathway.
+#[test]
+fn prop_ternary_trailing_bits_ignored() {
+    for p in [1usize, 2, 3, 5, 6, 7, 9] {
+        let t: Vec<i8> = (0..p).map(|i| ((i % 3) as i8) - 1).collect();
+        let clean = Payload::pack_ternary(p, 2.0, &t);
+        let (len, scale, mut packed) = match clean {
+            Payload::Ternary { len, scale, packed } => (len, scale, packed),
+            other => panic!("pack_ternary produced {:?}", other.kind()),
+        };
+        // Set every bit above the last used position in the tail byte.
+        let used = p % 4;
+        if used != 0 {
+            let last = packed.len() - 1;
+            packed[last] |= 0xFFu8 << (used * 2);
+        }
+        let dirty = Payload::Ternary { len, scale, packed };
+        let expect: Vec<f64> = t.iter().map(|&v| scale * v as f64).collect();
+        assert_eq!(dirty.decode(), expect, "p={p}: decode read past len");
+        let mut fused = vec![1.0; p];
+        dirty.decode_axpy(1.0, &mut fused);
+        for (i, e) in expect.iter().enumerate() {
+            assert!((fused[i] - (1.0 + e)).abs() < 1e-15, "p={p}: decode_axpy leaked");
+        }
+    }
+}
+
 /// Saturation counting: values beyond the int16 range are flagged.
 #[test]
 fn prop_saturation_detection() {
