@@ -3,17 +3,21 @@
 //! per-thread vs worker-pool engine comparison (emits
 //! `BENCH_pool_engine.json`), the state-plane round-loop bench (emits
 //! `BENCH_state_plane.json`), the mailbox-plane inbox bench with its
-//! allocation counter (emits `BENCH_mailbox_plane.json`), and the
-//! XLA-backed paths when artifacts are present.
+//! allocation counter (emits `BENCH_mailbox_plane.json`), the
+//! encode-plane bench (fresh-alloc vs pooled `compress_into`, emits
+//! `BENCH_encode_plane.json`), and the XLA-backed paths when artifacts
+//! are present.
 //!
 //! Set `ADCDGD_BENCH_ONLY=pool` (engine comparison),
-//! `ADCDGD_BENCH_ONLY=plane` (state-plane bench), or
-//! `ADCDGD_BENCH_ONLY=mailbox` (inbox machinery) to run a single
+//! `ADCDGD_BENCH_ONLY=plane` (state-plane bench),
+//! `ADCDGD_BENCH_ONLY=mailbox` (inbox machinery), or
+//! `ADCDGD_BENCH_ONLY=encode` (encode plane: fresh-alloc vs pooled
+//! compress_into, emits `BENCH_encode_plane.json`) to run a single
 //! section (CI uses these to publish the JSON artifacts quickly).
 
 use adcdgd::algorithms::{AdcDgdOptions, AlgorithmKind, ObjectiveRef, StepSize};
 use adcdgd::compress::{
-    Compressor, LowPrecisionQuantizer, Payload, Qsgd, RandomizedRounding, TernGrad,
+    Compressor, LowPrecisionQuantizer, Payload, PayloadPool, Qsgd, RandomizedRounding, TernGrad,
 };
 use adcdgd::coordinator::{
     run_scenario, CompressorSpec, EngineKind, ObjectiveSpec, RunConfig, ScenarioSpec,
@@ -27,8 +31,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 /// Counting allocator: the mailbox section asserts the broadcast → slot
-/// → consume path performs **zero** heap allocations after warm-up. One
-/// relaxed atomic per alloc — negligible against the benched work.
+/// → consume path performs **zero** heap allocations after warm-up, and
+/// the encode section asserts the same for the full compress →
+/// broadcast → consume round through the payload pool. One relaxed
+/// atomic per alloc — negligible against the benched work.
 mod alloc_counter {
     use std::alloc::{GlobalAlloc, Layout, System};
     use std::sync::atomic::{AtomicUsize, Ordering};
@@ -424,6 +430,162 @@ fn mailbox_comparison() {
     println!("mailbox bench written to BENCH_mailbox_plane.json");
 }
 
+/// One full compress → broadcast → consume round. `pooled` selects the
+/// encode-plane pathway (`PayloadPool::encode` — recycled cells, zero
+/// steady-state allocation) vs the pre-encode-plane pathway (fresh
+/// `compress` + `Arc::new` per node per round). The consume side
+/// decode_axpy's each slot view into the receiver's accumulator row, so
+/// the measured loop is the real per-round message path.
+#[allow(clippy::too_many_arguments)]
+fn encode_round(
+    bus: &mut Bus,
+    op: &dyn Compressor,
+    zs: &[Vec<f64>],
+    rngs: &mut [Xoshiro256pp],
+    pool: &mut PayloadPool,
+    pooled: bool,
+    acc: &mut [f64],
+    p_dim: usize,
+    k: usize,
+) -> usize {
+    let n = bus.n();
+    for i in 0..n {
+        if pooled {
+            let (payload, _sat) = pool.encode(op, &zs[i], &mut rngs[i]);
+            bus.broadcast(i, k, &payload);
+        } else {
+            let c = op.compress(&zs[i], &mut rngs[i]);
+            bus.broadcast(i, k, &Arc::new(c.payload));
+        }
+    }
+    bus.advance_round();
+    bus.deliver_round(k);
+    let mut heard = 0usize;
+    for i in 0..n {
+        let row = &mut acc[i * p_dim..(i + 1) * p_dim];
+        for m in bus.inbox_view(i).iter() {
+            m.payload.decode_axpy(0.5, row);
+            heard += 1;
+        }
+        bus.clear_inbox(i);
+    }
+    if pooled {
+        // Encode-plane reclaim hook (empty drain on the pooled path).
+        bus.reclaim_retired(pool);
+    }
+    heard
+}
+
+/// Encode plane: fresh-allocation encode vs pooled `compress_into` on
+/// full compress → broadcast → consume rounds at n ∈ {16, 256, 2048},
+/// P = 64, for the int16 and ternary wire formats, plus the
+/// zero-steady-state-allocation assertion. Emits
+/// `BENCH_encode_plane.json` (first entry in the encode-plane perf
+/// trajectory).
+fn encode_plane_comparison() {
+    println!("== encode plane (fresh-alloc encode vs pooled compress_into) ==");
+    let rounds = 30;
+    let p_dim = 64usize;
+    let mut rows = Vec::new();
+    for n in [16usize, 256, 2048] {
+        let p_edge = (12.0 / n as f64).min(0.5);
+        let g = adcdgd::topology::erdos_renyi(n, p_edge, 5);
+        // Fixed per-node inputs: isolates encode + transport from
+        // objective evaluation; magnitudes keep the int16 grid in range.
+        let mut data_rng = Xoshiro256pp::seed_from_u64(11);
+        let zs: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..p_dim).map(|_| (data_rng.next_f64() - 0.5) * 40.0).collect())
+            .collect();
+        let samples = if n >= 2048 { 5 } else { 10 };
+        let ops: Vec<(&str, Box<dyn Compressor>)> = vec![
+            ("int16", Box::new(LowPrecisionQuantizer::new(1.0 / 64.0))),
+            ("ternary", Box::new(TernGrad::new())),
+        ];
+        for (wire, op) in ops {
+            let mut acc = vec![0.0f64; n * p_dim];
+            let run_bench = |pooled: bool, label: &str, acc: &mut Vec<f64>| {
+                let mut bus = Bus::new(&g, LinkModel::default(), 7);
+                let mut pool = PayloadPool::new();
+                let mut rngs: Vec<Xoshiro256pp> =
+                    (0..n).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
+                let mut k = 0usize;
+                bench(label, 1, samples, Duration::from_secs(60), || {
+                    for _ in 0..rounds {
+                        k += 1;
+                        std::hint::black_box(encode_round(
+                            &mut bus, &*op, &zs, &mut rngs, &mut pool, pooled, acc, p_dim, k,
+                        ));
+                    }
+                })
+            };
+            let fresh = run_bench(
+                false,
+                &format!("encode fresh  {wire:<7} n={n} {rounds} rounds"),
+                &mut acc,
+            );
+            println!("{}", fresh.summary());
+            let mut acc = vec![0.0f64; n * p_dim];
+            let pooled = run_bench(
+                true,
+                &format!("encode pooled {wire:<7} n={n} {rounds} rounds"),
+                &mut acc,
+            );
+            println!("{}", pooled.summary());
+            let speedup = fresh.mean() / pooled.mean();
+            println!("     -> pooled encode speedup over fresh at n={n} ({wire}): {speedup:.2}x");
+
+            // Zero-allocation assertion: after the pool covers the
+            // 2-round cell pipeline (and arenas reach message size), the
+            // full compress → broadcast → consume round must not touch
+            // the heap at all — including the Arc cells.
+            let mut bus = Bus::new(&g, LinkModel::default(), 7);
+            let mut pool = PayloadPool::new();
+            let mut rngs: Vec<Xoshiro256pp> =
+                (0..n).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
+            let mut acc = vec![0.0f64; n * p_dim];
+            for k in 1..=8 {
+                encode_round(&mut bus, &*op, &zs, &mut rngs, &mut pool, true, &mut acc, p_dim, k);
+            }
+            let cells_warm = pool.fresh_cells();
+            let before = alloc_counter::count();
+            for k in 9..=28 {
+                encode_round(&mut bus, &*op, &zs, &mut rngs, &mut pool, true, &mut acc, p_dim, k);
+            }
+            let allocs = alloc_counter::count() - before;
+            assert_eq!(
+                allocs, 0,
+                "pooled encode allocated {allocs} times over 20 rounds (n={n}, {wire})"
+            );
+            assert_eq!(
+                pool.fresh_cells(),
+                cells_warm,
+                "pool created cells after warm-up (n={n}, {wire})"
+            );
+            println!(
+                "     -> allocations over 20 post-warm-up rounds: {allocs} \
+                 (pool cells: {cells_warm})"
+            );
+
+            rows.push(format!(
+                "    {{\"n\": {n}, \"p\": {p_dim}, \"rounds\": {rounds}, \"wire\": \"{wire}\", \
+                 \"fresh_mean_s\": {:.6}, \"pooled_mean_s\": {:.6}, \
+                 \"pooled_speedup\": {:.3}, \"allocs_after_warmup\": {allocs}, \
+                 \"pool_cells\": {cells_warm}}}",
+                fresh.mean(),
+                pooled.mean(),
+                speedup,
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"encode_plane\",\n  \"pathway\": \"pooled compress_into + recycled \
+         Arc payload cells\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_encode_plane.json", &json).expect("write BENCH_encode_plane.json");
+    println!("encode-plane bench written to BENCH_encode_plane.json");
+}
+
 fn xla_paths() {
     let dir = adcdgd::runtime::artifacts_dir(None);
     if !adcdgd::runtime::artifacts_available(&dir) {
@@ -482,6 +644,10 @@ fn main() {
         mailbox_comparison();
         return;
     }
+    if only == "encode" {
+        encode_plane_comparison();
+        return;
+    }
     println!("== L3 hot path ==");
     for p in [100usize, 10_000, 100_000] {
         round_throughput(p, 20);
@@ -491,6 +657,7 @@ fn main() {
     pool_engine_comparison();
     state_plane_comparison();
     mailbox_comparison();
+    encode_plane_comparison();
     println!("== XLA-backed paths ==");
     xla_paths();
 }

@@ -30,6 +30,7 @@
 //! `x_{i,1} = −α₁ ∇f_i(0)` (applied by the fleet builder).
 
 use super::{CompressorRef, NodeLogic, ObjectiveRef, Outgoing, StepSize};
+use crate::compress::PayloadPool;
 use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
 use crate::network::InboxView;
@@ -95,16 +96,17 @@ impl NodeLogic for AdcDgdNode {
         round: usize,
         rows: &mut NodeRows<'_>,
         rng: &mut Xoshiro256pp,
+        pool: &mut PayloadPool,
     ) -> Outgoing {
         let kg = self.amp_factor(round);
         // Fused amplify: scratch = k^γ (x_k − x̃_{k−1}) in one pass.
         vecops::scaled_diff(kg, rows.x, rows.mirror_self, rows.scratch);
         let tx_magnitude = vecops::norm_inf(rows.scratch);
-        let c = self.compressor.compress(rows.scratch, rng);
+        let (payload, saturated) = pool.encode(&*self.compressor, rows.scratch, rng);
         // Integrate own mirror with the *same realization* receivers get:
         // x̃_k = x̃_{k−1} + decode(d)/k^γ (fused decode+axpy, no buffer).
-        c.payload.decode_axpy(1.0 / kg, rows.mirror_self);
-        Outgoing { payload: c.payload, tx_magnitude, saturated: c.saturated }
+        payload.decode_axpy(1.0 / kg, rows.mirror_self);
+        Outgoing { payload, tx_magnitude, saturated }
     }
 
     fn consume(

@@ -5,7 +5,7 @@
 //! its own `W_ii x_i`.
 
 use super::{NodeLogic, ObjectiveRef, Outgoing, StepSize};
-use crate::compress::Payload;
+use crate::compress::PayloadPool;
 use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
 use crate::network::InboxView;
@@ -44,9 +44,10 @@ impl NodeLogic for DgdNode {
         _round: usize,
         rows: &mut NodeRows<'_>,
         _rng: &mut Xoshiro256pp,
+        pool: &mut PayloadPool,
     ) -> Outgoing {
         Outgoing {
-            payload: Payload::F64(rows.x.to_vec()),
+            payload: pool.encode_f64(rows.x),
             tx_magnitude: vecops::norm_inf(rows.x),
             saturated: 0,
         }

@@ -7,7 +7,7 @@
 //! t ∈ {3, 5} in Figs. 5–6.
 
 use super::{NodeLogic, ObjectiveRef, Outgoing, StepSize};
-use crate::compress::Payload;
+use crate::compress::PayloadPool;
 use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
 use crate::network::InboxView;
@@ -48,6 +48,7 @@ impl NodeLogic for DgdTNode {
         _round: usize,
         rows: &mut NodeRows<'_>,
         _rng: &mut Xoshiro256pp,
+        pool: &mut PayloadPool,
     ) -> Outgoing {
         if self.phase == 0 {
             // Capture ∇f(x^k) before any mixing of this iteration; the
@@ -55,7 +56,7 @@ impl NodeLogic for DgdTNode {
             self.objective.grad_into(rows.x, rows.grad);
         }
         Outgoing {
-            payload: Payload::F64(rows.x.to_vec()),
+            payload: pool.encode_f64(rows.x),
             tx_magnitude: vecops::norm_inf(rows.x),
             saturated: 0,
         }

@@ -28,8 +28,15 @@
 //!   quantized neighbors with a damped mixing step.
 //!
 //! Node construction for the whole family is centralized in the
-//! [`AlgorithmKind`] registry; the `run_*` helpers are deprecated thin
-//! wrappers over [`crate::coordinator::run_scenario`].
+//! [`AlgorithmKind`] registry; there is exactly one execution pathway —
+//! build a [`crate::coordinator::ScenarioSpec`] and call
+//! [`crate::coordinator::run_scenario`] (the deprecated `run_*` wrappers
+//! were removed in 0.4.0 as scheduled).
+//!
+//! Every `make_message` encodes through the engine's
+//! [`crate::compress::PayloadPool`], so the outgoing payload is a
+//! recycled `Arc<Payload>` cell and steady-state rounds allocate nothing
+//! on the encode side (see the encode-plane notes in [`crate::compress`]).
 
 mod adc_dgd;
 mod dgd;
@@ -37,7 +44,6 @@ mod dgd_t;
 mod naive_cdgd;
 mod qdgd;
 mod registry;
-mod runners;
 
 pub use adc_dgd::{AdcDgdNode, AdcDgdOptions};
 pub use dgd::DgdNode;
@@ -45,10 +51,8 @@ pub use dgd_t::DgdTNode;
 pub use naive_cdgd::NaiveCompressedNode;
 pub use qdgd::{QdgdNode, QdgdOptions};
 pub use registry::{AlgorithmKind, Fleet};
-#[allow(deprecated)]
-pub use runners::{run_adc_dgd, run_dgd, run_dgd_t, run_naive_compressed, run_qdgd};
 
-use crate::compress::Payload;
+use crate::compress::{Payload, PayloadPool};
 use crate::network::InboxView;
 use crate::state::NodeRows;
 use crate::rng::Xoshiro256pp;
@@ -84,8 +88,10 @@ impl StepSize {
 #[derive(Debug, Clone)]
 pub struct Outgoing {
     /// Encoded message for every neighbor (broadcast semantics: the same
-    /// payload goes on each incident link).
-    pub payload: Payload,
+    /// payload goes on each incident link). A pooled cell: the engine
+    /// broadcasts clones and drops this handle; the pool's own clone
+    /// reclaims the cell once every receiver has consumed it.
+    pub payload: Arc<Payload>,
     /// `‖transmitted‖∞` *before* encoding — Fig. 8's y-axis (for ADC-DGD
     /// this is `max|k^γ y|`; for others the raw state magnitude).
     pub tx_magnitude: f64,
@@ -100,12 +106,14 @@ pub struct Outgoing {
 /// [`crate::state`]). The node itself holds only scalar state (ids,
 /// counters, shared handles).
 pub trait NodeLogic: Send {
-    /// Produce this round's broadcast message. `round` is 1-based.
+    /// Produce this round's broadcast message, encoding through the
+    /// engine's payload pool (`round` is 1-based).
     fn make_message(
         &mut self,
         round: usize,
         rows: &mut NodeRows<'_>,
         rng: &mut Xoshiro256pp,
+        pool: &mut PayloadPool,
     ) -> Outgoing;
 
     /// Consume the messages visible this round and update the node's
@@ -153,6 +161,8 @@ pub(crate) mod testutil {
         pub nodes: Vec<Box<dyn NodeLogic>>,
         /// One shared RNG, drawn from in node order.
         pub rng: Xoshiro256pp,
+        /// Shared payload pool (encode-plane cell recycling).
+        pub pool: PayloadPool,
     }
 
     /// Build a pair fleet for `algorithm` over the given objectives.
@@ -171,6 +181,7 @@ pub(crate) mod testutil {
             plane: fleet.plane,
             nodes: fleet.nodes,
             rng: Xoshiro256pp::seed_from_u64(seed),
+            pool: PayloadPool::new(),
         }
     }
 
@@ -182,13 +193,13 @@ pub(crate) mod testutil {
             let outs: Vec<Outgoing> = (0..2)
                 .map(|i| {
                     let mut rows = self.plane.rows(i);
-                    self.nodes[i].make_message(k, &mut rows, &mut self.rng)
+                    self.nodes[i].make_message(k, &mut rows, &mut self.rng, &mut self.pool)
                 })
                 .collect();
             for i in 0..2 {
                 let j = 1 - i;
                 let senders = [j];
-                let slots: [MailSlot; 1] = [Some((k, Arc::new(outs[j].payload.clone())))];
+                let slots: [MailSlot; 1] = [Some((k, Arc::clone(&outs[j].payload)))];
                 let inbox = InboxView::new(&senders, &slots);
                 let mut rows = self.plane.rows(i);
                 self.nodes[i].consume(k, &inbox, &mut rows, &mut self.rng);

@@ -7,6 +7,7 @@
 //! motivating example). Implemented to reproduce exactly that failure.
 
 use super::{CompressorRef, NodeLogic, ObjectiveRef, Outgoing, StepSize};
+use crate::compress::PayloadPool;
 use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
 use crate::network::InboxView;
@@ -43,13 +44,10 @@ impl NodeLogic for NaiveCompressedNode {
         _round: usize,
         rows: &mut NodeRows<'_>,
         rng: &mut Xoshiro256pp,
+        pool: &mut PayloadPool,
     ) -> Outgoing {
-        let c = self.compressor.compress(rows.x, rng);
-        Outgoing {
-            tx_magnitude: vecops::norm_inf(rows.x),
-            saturated: c.saturated,
-            payload: c.payload,
-        }
+        let (payload, saturated) = pool.encode(&*self.compressor, rows.x, rng);
+        Outgoing { tx_magnitude: vecops::norm_inf(rows.x), saturated, payload }
     }
 
     fn consume(

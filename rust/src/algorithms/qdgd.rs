@@ -16,6 +16,7 @@
 //! α_k = α₀·k^{−3/4} (so that α_k/ε_k → 0 as their analysis requires).
 
 use super::{CompressorRef, NodeLogic, ObjectiveRef, Outgoing, StepSize};
+use crate::compress::PayloadPool;
 use crate::consensus::CsrWeights;
 use crate::linalg::vecops;
 use crate::network::InboxView;
@@ -75,13 +76,10 @@ impl NodeLogic for QdgdNode {
         _round: usize,
         rows: &mut NodeRows<'_>,
         rng: &mut Xoshiro256pp,
+        pool: &mut PayloadPool,
     ) -> Outgoing {
-        let c = self.compressor.compress(rows.x, rng);
-        Outgoing {
-            tx_magnitude: vecops::norm_inf(rows.x),
-            saturated: c.saturated,
-            payload: c.payload,
-        }
+        let (payload, saturated) = pool.encode(&*self.compressor, rows.x, rng);
+        Outgoing { tx_magnitude: vecops::norm_inf(rows.x), saturated, payload }
     }
 
     fn consume(

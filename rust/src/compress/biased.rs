@@ -11,7 +11,9 @@
 //! error-feedback extensions (future work the paper's conclusion hints
 //! at).
 
-use super::{Compressed, Compressor, Payload};
+use super::codec::pack_codes;
+use super::operators::saturate_i16;
+use super::{CompressedRef, Compressor, PayloadBuf, PayloadKind};
 use crate::rng::Xoshiro256pp;
 
 /// Top-k magnitude sparsification: keeps the `k` largest-|z| entries
@@ -31,39 +33,34 @@ impl TopK {
 }
 
 impl Compressor for TopK {
-    fn compress(&self, z: &[f64], _rng: &mut Xoshiro256pp) -> Compressed {
+    fn compress_into(
+        &self,
+        z: &[f64],
+        _rng: &mut Xoshiro256pp,
+        buf: &mut PayloadBuf,
+    ) -> CompressedRef {
+        buf.reset();
         let k = self.k.min(z.len());
-        // Partial select of the k largest by |value|.
-        let mut order: Vec<usize> = (0..z.len()).collect();
-        order.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        // Partial select of the k largest by |value| over the reusable
+        // order scratch (no per-message order vector).
+        buf.scratch.clear();
+        buf.scratch.extend(0..z.len());
+        buf.scratch.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
             z[b].abs().partial_cmp(&z[a].abs()).unwrap()
         });
-        let mut idx: Vec<u32> = order[..k].iter().map(|&i| i as u32).collect();
-        idx.sort_unstable();
+        buf.idx.extend(buf.scratch[..k].iter().map(|&i| i as u32));
+        buf.idx.sort_unstable();
         // Values sent exactly (f32 precision on the wire via scale=1,
         // quantized i16 grid of 2^-8 — close enough to "exact" for the
         // ablation while keeping the sparse wire format).
         let scale = 1.0 / 256.0;
         let mut saturated = 0usize;
-        let val: Vec<i16> = idx
-            .iter()
-            .map(|&i| {
-                let q = (z[i as usize] / scale).round();
-                if q > i16::MAX as f64 {
-                    saturated += 1;
-                    i16::MAX
-                } else if q < i16::MIN as f64 {
-                    saturated += 1;
-                    i16::MIN
-                } else {
-                    q as i16
-                }
-            })
-            .collect();
-        Compressed {
-            payload: Payload::SparseI16 { len: z.len(), scale, idx, val },
-            saturated,
+        buf.i16s.reserve(k);
+        for &i in buf.idx.iter() {
+            let q = (z[i as usize] / scale).round();
+            buf.i16s.push(saturate_i16(q, &mut saturated));
         }
+        CompressedRef { kind: PayloadKind::SparseI16, len: z.len(), scale, saturated }
     }
 
     fn variance_bound(&self) -> Option<f64> {
@@ -92,11 +89,20 @@ impl SignOneBit {
 }
 
 impl Compressor for SignOneBit {
-    fn compress(&self, z: &[f64], _rng: &mut Xoshiro256pp) -> Compressed {
+    fn compress_into(
+        &self,
+        z: &[f64],
+        _rng: &mut Xoshiro256pp,
+        buf: &mut PayloadBuf,
+    ) -> CompressedRef {
+        buf.reset();
         let p = z.len();
         let scale = if p == 0 { 0.0 } else { z.iter().map(|v| v.abs()).sum::<f64>() / p as f64 };
-        let t: Vec<i8> = z.iter().map(|&v| if v >= 0.0 { 1 } else { -1 }).collect();
-        Compressed { payload: Payload::pack_ternary(p, scale, &t), saturated: 0 }
+        // Branchless whole-byte sign packing through the shared kernel:
+        // every element sends 0b01 (+1) or 0b10 (−1), i.e. `1 << (v < 0)`.
+        buf.u8s.reserve(p.div_ceil(4));
+        pack_codes(z.iter().map(|&v| 1u8 << ((v < 0.0) as u32)), &mut buf.u8s);
+        CompressedRef { kind: PayloadKind::Ternary, len: p, scale, saturated: 0 }
     }
 
     fn variance_bound(&self) -> Option<f64> {

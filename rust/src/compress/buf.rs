@@ -1,0 +1,223 @@
+//! [`PayloadBuf`] — the reusable tagged backing store every
+//! [`Compressor::compress_into`] call encodes through.
+//!
+//! One buffer holds one arena per wire representation (plus the raw
+//! block-RNG draw buffer). A `compress_into` implementation resets the
+//! buffer, block-fills `rand` with its per-element draws, writes the
+//! encoded message into the arena(s) of its wire kind, and returns a
+//! [`CompressedRef`] describing what it wrote. The arenas keep their
+//! capacity across messages, so after the first message of each size the
+//! encode path performs **zero heap allocation** — the property the
+//! [`crate::compress::PayloadPool`] cycle and the
+//! `ADCDGD_BENCH_ONLY=encode` hotpath section assert.
+//!
+//! [`Compressor::compress_into`]: crate::compress::Compressor::compress_into
+
+use super::{Payload, PayloadKind};
+
+/// Description of what a `compress_into` call wrote into a
+/// [`PayloadBuf`]: the wire kind, dense length, scale, and saturation
+/// count. The encoded data itself stays in the buffer's arenas until
+/// [`PayloadBuf::emit`] moves it into an owned [`Payload`].
+#[derive(Debug, Clone, Copy)]
+pub struct CompressedRef {
+    /// Which payload kind the live arenas encode.
+    pub kind: PayloadKind,
+    /// Dense element count of the message.
+    pub len: usize,
+    /// Grid step / scale factor (ignored for raw f64/f32 kinds).
+    pub scale: f64,
+    /// Elements saturated by the integer encoding (see
+    /// [`crate::compress::Compressed::saturated`]).
+    pub saturated: usize,
+}
+
+/// Reusable tagged backing store for one message encode. Fields are
+/// public so operator kernels (including external [`Compressor`]
+/// implementations) can take disjoint field borrows — e.g. read `rand`
+/// while pushing into `i16s` — without accessor gymnastics.
+///
+/// Arena-per-kind mapping (what [`Self::emit`] moves out):
+///
+/// | kind | arenas |
+/// |---|---|
+/// | `F64` | `f64s` |
+/// | `F32` | `f32s` |
+/// | `I16` | `i16s` |
+/// | `I8` | `i8s` |
+/// | `SparseI16` | `idx` (indices) + `i16s` (values) |
+/// | `Ternary` | `u8s` (2-bit packed) |
+///
+/// [`Compressor`]: crate::compress::Compressor
+#[derive(Debug, Default)]
+pub struct PayloadBuf {
+    /// Raw 64-bit RNG block for the current message (one entry per
+    /// stochastic per-element draw, filled via
+    /// [`crate::rng::Xoshiro256pp::fill_u64`], converted in consumption
+    /// order with [`crate::rng::block_f64`]).
+    pub rand: Vec<u64>,
+    /// f64 arena (`Payload::F64`).
+    pub f64s: Vec<f64>,
+    /// f32 arena (`Payload::F32`).
+    pub f32s: Vec<f32>,
+    /// i16 arena (`Payload::I16` data and `Payload::SparseI16` values).
+    pub i16s: Vec<i16>,
+    /// i8 arena (`Payload::I8`).
+    pub i8s: Vec<i8>,
+    /// u8 arena (`Payload::Ternary` packed codes).
+    pub u8s: Vec<u8>,
+    /// u32 index arena (`Payload::SparseI16` indices).
+    pub idx: Vec<u32>,
+    /// Index scratch for selection-style operators (e.g. top-k's partial
+    /// select order); never emitted.
+    pub scratch: Vec<usize>,
+}
+
+/// Keep whichever of the two buffers has the larger capacity (both
+/// logically empty afterwards). Used by [`PayloadBuf::reclaim`] so a
+/// recycled payload's backing `Vec` replaces a smaller arena instead of
+/// being freed.
+fn keep_larger<T>(dst: &mut Vec<T>, mut src: Vec<T>) {
+    src.clear();
+    if src.capacity() > dst.capacity() {
+        *dst = src;
+    }
+}
+
+impl PayloadBuf {
+    /// New buffer with empty arenas (they grow on first use and are
+    /// reused afterwards).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear every encode arena (capacity retained; `rand` and `scratch`
+    /// are managed by their fillers). `compress_into` implementations
+    /// call this first so stale contents can never leak into a message.
+    pub fn reset(&mut self) {
+        self.f64s.clear();
+        self.f32s.clear();
+        self.i16s.clear();
+        self.i8s.clear();
+        self.u8s.clear();
+        self.idx.clear();
+    }
+
+    /// Move the encoded message out of the arenas into an owned
+    /// [`Payload`]. The emitted arenas are left empty (capacity 0) —
+    /// pair with [`Self::reclaim`] on a retired payload to restore
+    /// capacity, which is exactly what [`crate::compress::PayloadPool`]
+    /// does every round.
+    pub fn emit(&mut self, r: &CompressedRef) -> Payload {
+        match r.kind {
+            PayloadKind::F64 => {
+                debug_assert_eq!(self.f64s.len(), r.len);
+                Payload::F64(std::mem::take(&mut self.f64s))
+            }
+            PayloadKind::F32 => {
+                debug_assert_eq!(self.f32s.len(), r.len);
+                Payload::F32(std::mem::take(&mut self.f32s))
+            }
+            PayloadKind::I16 => {
+                debug_assert_eq!(self.i16s.len(), r.len);
+                Payload::I16 { scale: r.scale, data: std::mem::take(&mut self.i16s) }
+            }
+            PayloadKind::I8 => {
+                debug_assert_eq!(self.i8s.len(), r.len);
+                Payload::I8 { scale: r.scale, data: std::mem::take(&mut self.i8s) }
+            }
+            PayloadKind::SparseI16 => {
+                debug_assert_eq!(self.idx.len(), self.i16s.len());
+                Payload::SparseI16 {
+                    len: r.len,
+                    scale: r.scale,
+                    idx: std::mem::take(&mut self.idx),
+                    val: std::mem::take(&mut self.i16s),
+                }
+            }
+            PayloadKind::Ternary => {
+                debug_assert_eq!(self.u8s.len(), r.len.div_ceil(4));
+                let packed = std::mem::take(&mut self.u8s);
+                Payload::Ternary { len: r.len, scale: r.scale, packed }
+            }
+        }
+    }
+
+    /// Salvage a retired payload's backing storage into the arenas
+    /// (keeping the larger capacity per arena) instead of freeing it.
+    /// Closes the pool cycle: `emit` drains an arena into a payload,
+    /// `reclaim` of the previous payload refills it.
+    pub fn reclaim(&mut self, payload: Payload) {
+        match payload {
+            Payload::F64(v) => keep_larger(&mut self.f64s, v),
+            Payload::F32(v) => keep_larger(&mut self.f32s, v),
+            Payload::I16 { data, .. } => keep_larger(&mut self.i16s, data),
+            Payload::I8 { data, .. } => keep_larger(&mut self.i8s, data),
+            Payload::SparseI16 { idx, val, .. } => {
+                keep_larger(&mut self.idx, idx);
+                keep_larger(&mut self.i16s, val);
+            }
+            Payload::Ternary { packed, .. } => keep_larger(&mut self.u8s, packed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_then_reclaim_recycles_capacity() {
+        let mut buf = PayloadBuf::new();
+        buf.i16s.extend_from_slice(&[1, -2, 3]);
+        let r = CompressedRef { kind: PayloadKind::I16, len: 3, scale: 0.5, saturated: 0 };
+        let p = buf.emit(&r);
+        assert_eq!(p.decode(), vec![0.5, -1.0, 1.5]);
+        assert_eq!(buf.i16s.capacity(), 0, "emit moves the arena out");
+        let cap_before = match &p {
+            Payload::I16 { data, .. } => data.capacity(),
+            _ => unreachable!(),
+        };
+        buf.reclaim(p);
+        assert!(buf.i16s.is_empty());
+        assert_eq!(buf.i16s.capacity(), cap_before, "reclaim restores the capacity");
+    }
+
+    #[test]
+    fn reclaim_keeps_the_larger_capacity() {
+        let mut buf = PayloadBuf::new();
+        buf.u8s.reserve(64);
+        let cap = buf.u8s.capacity();
+        buf.reclaim(Payload::Ternary { len: 4, scale: 1.0, packed: vec![0b0110] });
+        assert!(buf.u8s.capacity() >= cap, "smaller reclaimed vec must not shrink the arena");
+        buf.reclaim(Payload::Ternary { len: 4096, scale: 1.0, packed: vec![0; 1024] });
+        assert!(buf.u8s.capacity() >= 1024, "larger reclaimed vec is adopted");
+    }
+
+    #[test]
+    fn sparse_emit_moves_both_arenas() {
+        let mut buf = PayloadBuf::new();
+        buf.idx.extend_from_slice(&[1, 4]);
+        buf.i16s.extend_from_slice(&[7, -2]);
+        let r = CompressedRef { kind: PayloadKind::SparseI16, len: 5, scale: 1.0, saturated: 0 };
+        let p = buf.emit(&r);
+        assert_eq!(p.decode(), vec![0.0, 7.0, 0.0, 0.0, -2.0]);
+        assert!(buf.idx.is_empty() && buf.i16s.is_empty());
+        buf.reclaim(p);
+        assert!(buf.idx.capacity() >= 2 && buf.i16s.capacity() >= 2);
+    }
+
+    #[test]
+    fn reset_clears_all_encode_arenas() {
+        let mut buf = PayloadBuf::new();
+        buf.f64s.push(1.0);
+        buf.f32s.push(1.0);
+        buf.i16s.push(1);
+        buf.i8s.push(1);
+        buf.u8s.push(1);
+        buf.idx.push(1);
+        buf.reset();
+        assert!(buf.f64s.is_empty() && buf.f32s.is_empty() && buf.i16s.is_empty());
+        assert!(buf.i8s.is_empty() && buf.u8s.is_empty() && buf.idx.is_empty());
+    }
+}

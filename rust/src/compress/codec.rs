@@ -207,18 +207,53 @@ impl Payload {
 
     /// Pack a ternary slice (values in {−1, 0, 1}) into 2-bit codes.
     pub fn pack_ternary(len: usize, scale: f64, ternary: &[i8]) -> Payload {
+        let mut packed = Vec::new();
+        Payload::pack_ternary_into(len, ternary, &mut packed);
+        Payload::Ternary { len, scale, packed }
+    }
+
+    /// Pack a ternary slice (values in {−1, 0, 1}) into 2-bit codes
+    /// appended to a reusable buffer (cleared first, capacity retained —
+    /// the zero-alloc variant for `compress_into` implementations that
+    /// stage i8 codes).
+    pub fn pack_ternary_into(len: usize, ternary: &[i8], packed: &mut Vec<u8>) {
         assert_eq!(ternary.len(), len);
-        let mut packed = vec![0u8; len.div_ceil(4)];
-        for (i, &t) in ternary.iter().enumerate() {
-            let code: u8 = match t {
+        packed.clear();
+        packed.reserve(len.div_ceil(4));
+        pack_codes(
+            ternary.iter().map(|&t| match t {
                 1 => 0b01,
                 -1 => 0b10,
                 0 => 0b00,
                 other => panic!("ternary value out of range: {other}"),
-            };
-            packed[i / 4] |= code << ((i % 4) * 2);
+            }),
+            packed,
+        );
+    }
+}
+
+/// Pack an iterator of 2-bit codes (00 = 0, 01 = +1, 10 = −1) four per
+/// byte in ascending position order, appending whole bytes to `out` —
+/// the one kernel behind every ternary wire encoder (dense
+/// [`Payload::pack_ternary_into`], TernGrad's fused draw-and-pack, sign
+/// compression). Codes are consumed lazily, so callers fuse their
+/// per-element computation (RNG draw, sign test) into the iterator
+/// without staging an i8 vector.
+#[inline]
+pub(crate) fn pack_codes(codes: impl Iterator<Item = u8>, out: &mut Vec<u8>) {
+    let mut byte = 0u8;
+    let mut filled = 0u32;
+    for code in codes {
+        byte |= code << (filled * 2);
+        filled += 1;
+        if filled == 4 {
+            out.push(byte);
+            byte = 0;
+            filled = 0;
         }
-        Payload::Ternary { len, scale, packed }
+    }
+    if filled != 0 {
+        out.push(byte);
     }
 }
 

@@ -23,17 +23,32 @@
 //! integer payloads cost 2 B/element ('int16'), uncompressed values cost
 //! 8 B/element ('double'). [`Payload::wire_bytes`] implements exactly that
 //! (payload only, no framing), so Fig. 6's byte axis is reproducible.
+//!
+//! ## The encode plane
+//!
+//! The hot path never allocates: every operator's kernel is
+//! [`Compressor::compress_into`], which block-fills its RNG draws and
+//! writes into a reusable [`PayloadBuf`]; a [`PayloadPool`] recycles the
+//! `Arc<Payload>` cells (and their backing `Vec`s) across rounds once
+//! receivers release them. See [`PayloadPool`] for the cell cycle and
+//! the allocation-accounting rules, and [`crate::rng::block_f64`] for
+//! the draw-ordering contract that keeps pooled encoding bit-identical
+//! to fresh [`Compressor::compress`] calls.
 
 mod biased;
+mod buf;
 mod codec;
 mod operators;
+mod pool;
 pub mod stats;
 
 pub use biased::{SignOneBit, TopK};
+pub use buf::{CompressedRef, PayloadBuf};
 pub use codec::{Payload, PayloadKind};
 pub use operators::{
     Identity, LowPrecisionQuantizer, Qsgd, QuantizationSparsifier, RandomizedRounding, TernGrad,
 };
+pub use pool::PayloadPool;
 
 use crate::rng::Xoshiro256pp;
 
@@ -66,9 +81,34 @@ impl Compressed {
 }
 
 /// An unbiased stochastic compression operator (paper Definition 1).
+///
+/// Implementations provide [`Self::compress_into`] — the zero-alloc
+/// encode-plane kernel writing into a reusable [`PayloadBuf`] — and get
+/// [`Self::compress`] (fresh-allocation convenience) for free. The two
+/// are bit-identical by construction: `compress` *is* `compress_into`
+/// against a throwaway buffer, and stochastic kernels draw their
+/// randomness as one [`crate::rng::Xoshiro256pp::fill_u64`] block per
+/// message, converted per element with [`crate::rng::block_f64`] in the
+/// same order the scalar `next_f64` path consumed it.
 pub trait Compressor: Send + Sync {
-    /// Compress `z`, drawing any randomness from `rng`.
-    fn compress(&self, z: &[f64], rng: &mut Xoshiro256pp) -> Compressed;
+    /// Compress `z` into `buf`'s arenas, drawing any randomness from
+    /// `rng`, and describe the result. The implementation must
+    /// [`PayloadBuf::reset`] the buffer first; previous contents never
+    /// leak into the message.
+    fn compress_into(
+        &self,
+        z: &[f64],
+        rng: &mut Xoshiro256pp,
+        buf: &mut PayloadBuf,
+    ) -> CompressedRef;
+
+    /// Compress `z`, drawing any randomness from `rng` (allocating
+    /// convenience wrapper over [`Self::compress_into`]).
+    fn compress(&self, z: &[f64], rng: &mut Xoshiro256pp) -> Compressed {
+        let mut buf = PayloadBuf::new();
+        let r = self.compress_into(z, rng, &mut buf);
+        Compressed { payload: buf.emit(&r), saturated: r.saturated }
+    }
 
     /// Theoretical per-element variance bound σ², when known in closed
     /// form. `None` for operators whose bound depends on the input (e.g.

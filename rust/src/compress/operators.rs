@@ -1,10 +1,20 @@
 //! The compression operators themselves.
+//!
+//! Every operator implements the zero-alloc encode-plane kernel
+//! [`Compressor::compress_into`]: draw the message's randomness as one
+//! block ([`Xoshiro256pp::fill_u64`] into `buf.rand`, converted per
+//! element with [`block_f64`] in consumption order — bit-identical to
+//! the scalar `next_f64` sequence), then write the encoded data into
+//! the buffer's arenas. Operators that drew no randomness on some path
+//! (zero-vector TernGrad/QSGD, Identity) still draw none, so golden
+//! trajectories are preserved exactly.
 
-use super::{Compressed, Compressor, Payload};
-use crate::rng::Xoshiro256pp;
+use super::codec::pack_codes;
+use super::{CompressedRef, Compressor, PayloadBuf, PayloadKind};
+use crate::rng::{block_f64, Xoshiro256pp};
 
 #[inline]
-fn saturate_i16(q: f64, saturated: &mut usize) -> i16 {
+pub(crate) fn saturate_i16(q: f64, saturated: &mut usize) -> i16 {
     if q > i16::MAX as f64 {
         *saturated += 1;
         i16::MAX
@@ -29,6 +39,25 @@ fn saturate_i16_i64(q: i64, saturated: &mut usize) -> i16 {
     }
 }
 
+/// Clamp a signed quantized value to the i8 range, counting overflow —
+/// the i8 analogue of [`saturate_i16`]. Regression guard for the QSGD
+/// i8 path, which used to rely on the saturating `as i8` float cast and
+/// therefore clamped *silently*, leaving `Compressed::saturated` at 0
+/// while the i16 path counted the same event (§IV-D overflow
+/// accounting, Fig. 8).
+#[inline]
+pub(crate) fn saturate_i8(q: f64, saturated: &mut usize) -> i8 {
+    if q > i8::MAX as f64 {
+        *saturated += 1;
+        i8::MAX
+    } else if q < i8::MIN as f64 {
+        *saturated += 1;
+        i8::MIN
+    } else {
+        q as i8
+    }
+}
+
 /// Integer floor without the libm call (the `f64::floor` symbol does not
 /// inline and showed up at ~9% in the hot-path profile). Valid for the
 /// |g| < 2^62 range this code operates in.
@@ -38,24 +67,26 @@ fn fast_floor_i64(g: f64) -> i64 {
     t - (g < t as f64) as i64
 }
 
-/// Shared stochastic-rounding core: `round(z[i]*inv)` on the integer
-/// grid, rounding up with probability frac.
+/// Shared stochastic-rounding core over a pre-drawn block:
+/// `round(z[i]*inv)` on the integer grid, rounding up with probability
+/// frac (draw `i` decides element `i`, matching the scalar draw order).
 #[inline(always)]
-fn stochastic_round_i16(
+fn stochastic_round_i16_into(
     z: &[f64],
     inv: f64,
-    rng: &mut Xoshiro256pp,
+    rand: &[u64],
+    out: &mut Vec<i16>,
     saturated: &mut usize,
-) -> Vec<i16> {
-    z.iter()
-        .map(|&v| {
-            let g = v * inv;
-            let lo = fast_floor_i64(g);
-            let frac = g - lo as f64;
-            let up = (rng.next_f64() < frac) as i64;
-            saturate_i16_i64(lo + up, saturated)
-        })
-        .collect()
+) {
+    debug_assert_eq!(z.len(), rand.len());
+    out.reserve(z.len());
+    for (&v, &r) in z.iter().zip(rand.iter()) {
+        let g = v * inv;
+        let lo = fast_floor_i64(g);
+        let frac = g - lo as f64;
+        let up = (block_f64(r) < frac) as i64;
+        out.push(saturate_i16_i64(lo + up, saturated));
+    }
 }
 
 /// Example 1: low-precision quantizer on a uniform grid with step `delta`.
@@ -81,11 +112,18 @@ impl LowPrecisionQuantizer {
 }
 
 impl Compressor for LowPrecisionQuantizer {
-    fn compress(&self, z: &[f64], rng: &mut Xoshiro256pp) -> Compressed {
+    fn compress_into(
+        &self,
+        z: &[f64],
+        rng: &mut Xoshiro256pp,
+        buf: &mut PayloadBuf,
+    ) -> CompressedRef {
+        buf.reset();
+        rng.fill_u64(&mut buf.rand, z.len());
         let mut saturated = 0usize;
         let inv = 1.0 / self.delta; // multiply beats divide on the hot path
-        let data = stochastic_round_i16(z, inv, rng, &mut saturated);
-        Compressed { payload: Payload::I16 { scale: self.delta, data }, saturated }
+        stochastic_round_i16_into(z, inv, &buf.rand, &mut buf.i16s, &mut saturated);
+        CompressedRef { kind: PayloadKind::I16, len: z.len(), scale: self.delta, saturated }
     }
 
     fn variance_bound(&self) -> Option<f64> {
@@ -116,10 +154,17 @@ impl RandomizedRounding {
 }
 
 impl Compressor for RandomizedRounding {
-    fn compress(&self, z: &[f64], rng: &mut Xoshiro256pp) -> Compressed {
+    fn compress_into(
+        &self,
+        z: &[f64],
+        rng: &mut Xoshiro256pp,
+        buf: &mut PayloadBuf,
+    ) -> CompressedRef {
+        buf.reset();
+        rng.fill_u64(&mut buf.rand, z.len());
         let mut saturated = 0usize;
-        let data = stochastic_round_i16(z, 1.0, rng, &mut saturated);
-        Compressed { payload: Payload::I16 { scale: 1.0, data }, saturated }
+        stochastic_round_i16_into(z, 1.0, &buf.rand, &mut buf.i16s, &mut saturated);
+        CompressedRef { kind: PayloadKind::I16, len: z.len(), scale: 1.0, saturated }
     }
 
     fn variance_bound(&self) -> Option<f64> {
@@ -159,10 +204,19 @@ impl QuantizationSparsifier {
 }
 
 impl Compressor for QuantizationSparsifier {
-    fn compress(&self, z: &[f64], rng: &mut Xoshiro256pp) -> Compressed {
+    fn compress_into(
+        &self,
+        z: &[f64],
+        rng: &mut Xoshiro256pp,
+        buf: &mut PayloadBuf,
+    ) -> CompressedRef {
+        buf.reset();
+        rng.fill_u64(&mut buf.rand, z.len());
         let delta = self.delta();
-        let mut idx = Vec::new();
-        let mut val = Vec::new();
+        // Capacity hint: at most one stored element per input element,
+        // so after the first full-length message pushes never realloc.
+        buf.idx.reserve(z.len());
+        buf.i16s.reserve(z.len());
         let mut saturated = 0usize;
         for (i, &v) in z.iter().enumerate() {
             let a = v.abs();
@@ -175,19 +229,16 @@ impl Compressor for QuantizationSparsifier {
             let upper = ((a / delta).floor() + 1.0) * delta;
             let upper = upper.min(self.m_bound.max(delta));
             let p = (a / upper).min(1.0);
-            if rng.next_f64() < p {
+            if block_f64(buf.rand[i]) < p {
                 let q_units = (upper / delta).round();
                 let mut sat = 0usize;
                 let q = saturate_i16(q_units * v.signum(), &mut sat);
                 saturated += sat;
-                idx.push(i as u32);
-                val.push(q);
+                buf.idx.push(i as u32);
+                buf.i16s.push(q);
             }
         }
-        Compressed {
-            payload: Payload::SparseI16 { len: z.len(), scale: delta, idx, val },
-            saturated,
-        }
+        CompressedRef { kind: PayloadKind::SparseI16, len: z.len(), scale: delta, saturated }
     }
 
     fn variance_bound(&self) -> Option<f64> {
@@ -222,27 +273,38 @@ impl TernGrad {
 }
 
 impl Compressor for TernGrad {
-    fn compress(&self, z: &[f64], rng: &mut Xoshiro256pp) -> Compressed {
+    fn compress_into(
+        &self,
+        z: &[f64],
+        rng: &mut Xoshiro256pp,
+        buf: &mut PayloadBuf,
+    ) -> CompressedRef {
+        buf.reset();
+        let len = z.len();
         let s = z.iter().fold(0.0f64, |m, v| m.max(v.abs()));
         if s == 0.0 {
-            let t = vec![0i8; z.len()];
-            return Compressed { payload: Payload::pack_ternary(z.len(), 0.0, &t), saturated: 0 };
+            // Zero vector: all codes 0 and — scalar-path contract — no
+            // randomness drawn.
+            buf.u8s.resize(len.div_ceil(4), 0);
+            return CompressedRef { kind: PayloadKind::Ternary, len, scale: 0.0, saturated: 0 };
         }
-        let t: Vec<i8> = z
-            .iter()
-            .map(|&v| {
-                if rng.next_f64() < v.abs() / s {
-                    if v >= 0.0 {
-                        1
-                    } else {
-                        -1
-                    }
-                } else {
-                    0
-                }
-            })
-            .collect();
-        Compressed { payload: Payload::pack_ternary(z.len(), s, &t), saturated: 0 }
+        rng.fill_u64(&mut buf.rand, len);
+        // Branchless draw-and-pack fused into the shared whole-byte
+        // kernel: take = keep the coordinate, code 0b01 = +1 / 0b10 = −1,
+        // so the code is `take << (v < 0)` — no i8 staging vector, no
+        // per-code match (the draw `block_f64(rand[i]) < |v|/s` is the
+        // exact scalar comparison, division kept unhoisted for bit
+        // equality).
+        buf.u8s.reserve(len.div_ceil(4));
+        let rand = &buf.rand;
+        pack_codes(
+            z.iter().enumerate().map(|(i, &v)| {
+                let take = (block_f64(rand[i]) < v.abs() / s) as u8;
+                take << ((v < 0.0) as u32)
+            }),
+            &mut buf.u8s,
+        );
+        CompressedRef { kind: PayloadKind::Ternary, len, scale: s, saturated: 0 }
     }
 
     fn variance_bound(&self) -> Option<f64> {
@@ -276,39 +338,50 @@ impl Qsgd {
 }
 
 impl Compressor for Qsgd {
-    fn compress(&self, z: &[f64], rng: &mut Xoshiro256pp) -> Compressed {
+    fn compress_into(
+        &self,
+        z: &[f64],
+        rng: &mut Xoshiro256pp,
+        buf: &mut PayloadBuf,
+    ) -> CompressedRef {
+        buf.reset();
+        let len = z.len();
+        // Fused norm + quantize kernel: one norm reduction, then one
+        // rounding pass writing straight into the wire arena — no i8/i16
+        // staging vector between them. The per-element expression
+        // `s·|v|/norm` is kept unreassociated so quantization bits match
+        // the historical scalar path exactly.
         let norm = crate::linalg::vecops::norm2(z);
         if norm == 0.0 {
-            return Compressed {
-                payload: Payload::I8 { scale: 0.0, data: vec![0; z.len()] },
-                saturated: 0,
-            };
+            // No randomness drawn (scalar-path contract).
+            buf.i8s.resize(len, 0);
+            return CompressedRef { kind: PayloadKind::I8, len, scale: 0.0, saturated: 0 };
         }
+        rng.fill_u64(&mut buf.rand, len);
         let s = self.levels as f64;
         let scale = norm / s;
         let mut saturated = 0usize;
         if self.levels <= 127 {
-            let data: Vec<i8> = z
-                .iter()
-                .map(|&v| {
-                    let u = s * v.abs() / norm; // in [0, s]
-                    let lo = u.floor();
-                    let q = if rng.next_f64() < u - lo { lo + 1.0 } else { lo };
-                    (q as i8) * if v >= 0.0 { 1 } else { -1 }
-                })
-                .collect();
-            Compressed { payload: Payload::I8 { scale, data }, saturated }
+            buf.i8s.reserve(len);
+            for (i, &v) in z.iter().enumerate() {
+                let u = s * v.abs() / norm; // in [0, s]
+                let lo = u.floor();
+                let q = if block_f64(buf.rand[i]) < u - lo { lo + 1.0 } else { lo };
+                // Saturate the *signed* value (−128 is representable,
+                // +128 is not) and count the clamp — the silent
+                // `q as i8` float cast used to swallow it.
+                buf.i8s.push(saturate_i8(if v >= 0.0 { q } else { -q }, &mut saturated));
+            }
+            CompressedRef { kind: PayloadKind::I8, len, scale, saturated }
         } else {
-            let data: Vec<i16> = z
-                .iter()
-                .map(|&v| {
-                    let u = s * v.abs() / norm;
-                    let lo = u.floor();
-                    let q = if rng.next_f64() < u - lo { lo + 1.0 } else { lo };
-                    saturate_i16(q * v.signum(), &mut saturated)
-                })
-                .collect();
-            Compressed { payload: Payload::I16 { scale, data }, saturated }
+            buf.i16s.reserve(len);
+            for (i, &v) in z.iter().enumerate() {
+                let u = s * v.abs() / norm;
+                let lo = u.floor();
+                let q = if block_f64(buf.rand[i]) < u - lo { lo + 1.0 } else { lo };
+                buf.i16s.push(saturate_i16(q * v.signum(), &mut saturated));
+            }
+            CompressedRef { kind: PayloadKind::I16, len, scale, saturated }
         }
     }
 
@@ -342,8 +415,15 @@ impl Identity {
 }
 
 impl Compressor for Identity {
-    fn compress(&self, z: &[f64], _rng: &mut Xoshiro256pp) -> Compressed {
-        Compressed { payload: Payload::F64(z.to_vec()), saturated: 0 }
+    fn compress_into(
+        &self,
+        z: &[f64],
+        _rng: &mut Xoshiro256pp,
+        buf: &mut PayloadBuf,
+    ) -> CompressedRef {
+        buf.reset();
+        buf.f64s.extend_from_slice(z);
+        CompressedRef { kind: PayloadKind::F64, len: z.len(), scale: 0.0, saturated: 0 }
     }
 
     fn variance_bound(&self) -> Option<f64> {
@@ -363,9 +443,51 @@ impl Compressor for Identity {
 mod tests {
     use super::*;
     use crate::compress::stats::empirical_bias_and_variance;
+    use crate::compress::Payload;
 
     fn rng() -> Xoshiro256pp {
         Xoshiro256pp::seed_from_u64(2024)
+    }
+
+    /// Regression (QSGD i8 path): overflow past the i8 range must be
+    /// clamped *and counted*. The old code cast with `q as i8`, which
+    /// saturates silently — `Compressed::saturated` stayed 0 while the
+    /// i16 path counted the identical event.
+    #[test]
+    fn saturate_i8_counts_overflow_like_i16() {
+        let mut sat = 0usize;
+        assert_eq!(saturate_i8(128.0, &mut sat), 127);
+        assert_eq!(sat, 1, "positive overflow must be counted");
+        assert_eq!(saturate_i8(-129.0, &mut sat), -128);
+        assert_eq!(sat, 2, "negative overflow must be counted");
+        // Boundary values are representable and never counted.
+        assert_eq!(saturate_i8(127.0, &mut sat), 127);
+        assert_eq!(saturate_i8(-128.0, &mut sat), -128);
+        assert_eq!(saturate_i8(0.0, &mut sat), 0);
+        assert_eq!(sat, 2);
+        // Mirror of the i16 helper on the same inputs.
+        let mut sat16 = 0usize;
+        assert_eq!(saturate_i16(i16::MAX as f64 + 1.0, &mut sat16), i16::MAX);
+        assert_eq!(sat16, 1);
+    }
+
+    /// In-range QSGD i8 payloads report zero saturation and stay
+    /// bounded by the level count (the helper must not over-count).
+    #[test]
+    fn qsgd_i8_in_range_reports_no_saturation() {
+        let op = Qsgd::new(127);
+        let mut r = rng();
+        for _ in 0..200 {
+            let z = vec![3.0, -4.0, 0.25, 12.0];
+            let c = op.compress(&z, &mut r);
+            assert_eq!(c.saturated, 0);
+            match c.payload {
+                Payload::I8 { data, .. } => {
+                    assert!(data.iter().all(|&q| (-127..=127).contains(&(q as i32))))
+                }
+                other => panic!("expected i8 wire, got {:?}", other.kind()),
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! [`PayloadPool`] — recycles payload backing storage (including the
+//! `Arc` cells themselves) across rounds, so the steady-state encode
+//! path performs **zero** heap allocation.
+//!
+//! ## The cell cycle
+//!
+//! ```text
+//!          compress_into                 emit + Arc::get_mut swap
+//! z ──────▶ PayloadBuf arenas ─────────▶ Arc<Payload> cell ──clone──▶ bus slots
+//!              ▲                              │ (pool keeps one clone)      │
+//!              └── reclaim(previous payload) ◀┴── strong count back to 1 ◀──┘
+//!                                                  (receivers consumed + cleared)
+//! ```
+//!
+//! [`PayloadPool::encode`] runs one turn of the cycle: the operator
+//! encodes into the pool's [`PayloadBuf`]; the pool finds a **reusable
+//! cell** — a previously issued `Arc<Payload>` whose strong count
+//! returned to 1 once every mailbox slot holding a clone was consumed —
+//! and swaps the freshly encoded payload in through [`Arc::get_mut`]
+//! (no new `Arc` allocation), reclaiming the cell's previous payload
+//! `Vec`s back into the buffer's arenas (no deallocation either). Cells
+//! still referenced (in-flight under a delayed link model, or not yet
+//! consumed) are rotated to the back of the free list and new cells are
+//! allocated only until the population covers the pipeline depth —
+//! ~`2 + delay` cells per node — after which rounds allocate nothing.
+//!
+//! ## Allocation accounting
+//!
+//! Warm-up may allocate: fresh cells until the pipeline depth is
+//! covered, arena growth to the message size, free-list growth, and the
+//! mailbox's in-flight ring. Steady state allocates **nothing** — the
+//! `ADCDGD_BENCH_ONLY=encode` hotpath section runs full compress →
+//! broadcast → consume rounds at n ∈ {16, 256, 2048} under a counting
+//! global allocator and asserts exactly that for the I16 and ternary
+//! wire formats.
+//!
+//! A second, mailbox-side reclaim hook complements the cycle: when
+//! [`crate::network::mailbox::MailboxPlane`] clears or supersedes a slot
+//! whose `Arc<Payload>` it holds as the *last* reference (a payload no
+//! pool retained — external senders, tests), the plane retires the arc
+//! and [`crate::network::Bus::reclaim_retired`] funnels it back here,
+//! where [`Arc::try_unwrap`] salvages the `Vec`s into the arenas via
+//! [`PayloadPool::reclaim`] instead of dropping them.
+
+use super::{CompressedRef, Compressor, Payload, PayloadBuf, PayloadKind};
+use crate::rng::Xoshiro256pp;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// A pool of reusable payload cells plus the encode workspace. One pool
+/// per engine worker (the engines create one per shard); cells are
+/// interchangeable across the worker's nodes.
+#[derive(Debug, Default)]
+pub struct PayloadPool {
+    buf: PayloadBuf,
+    /// Issued cells, oldest first. A cell is reusable once its strong
+    /// count returns to 1 (only the pool's clone remains).
+    free: VecDeque<Arc<Payload>>,
+    /// Cells created by `Arc::new` (warm-up observability: must stop
+    /// growing once the pipeline depth is covered).
+    fresh_cells: usize,
+}
+
+impl PayloadPool {
+    /// New empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Encode `z` through `op` into a pooled payload cell. Returns the
+    /// cell (broadcast clones of it, then drop it — the pool retains its
+    /// own clone) and the saturation count.
+    pub fn encode(
+        &mut self,
+        op: &dyn Compressor,
+        z: &[f64],
+        rng: &mut Xoshiro256pp,
+    ) -> (Arc<Payload>, usize) {
+        let r = op.compress_into(z, rng, &mut self.buf);
+        (self.install(&r), r.saturated)
+    }
+
+    /// Encode a raw f64 message (the uncompressed DGD wire format)
+    /// into a pooled cell — the no-compressor analogue of
+    /// [`Self::encode`].
+    pub fn encode_f64(&mut self, z: &[f64]) -> Arc<Payload> {
+        self.buf.reset();
+        self.buf.f64s.extend_from_slice(z);
+        let r =
+            CompressedRef { kind: PayloadKind::F64, len: z.len(), scale: 0.0, saturated: 0 };
+        self.install(&r)
+    }
+
+    /// Move the encoded message out of the buffer into a cell: reuse a
+    /// returned cell in place when one is free, else allocate a fresh
+    /// one (warm-up only).
+    fn install(&mut self, r: &CompressedRef) -> Arc<Payload> {
+        for _ in 0..self.free.len() {
+            let mut cell = self.free.pop_front().expect("len-bounded loop");
+            match Arc::get_mut(&mut cell) {
+                Some(slot) => {
+                    // Swap the fresh payload in and salvage the cell's
+                    // previous Vecs back into the arenas — no alloc, no
+                    // dealloc, the Arc allocation itself is reused.
+                    let old = std::mem::replace(slot, self.buf.emit(r));
+                    self.buf.reclaim(old);
+                    self.free.push_back(Arc::clone(&cell));
+                    return cell;
+                }
+                // Still referenced (mailbox slot / in-flight ring):
+                // rotate to the back and keep looking.
+                None => self.free.push_back(cell),
+            }
+        }
+        let cell = Arc::new(self.buf.emit(r));
+        self.fresh_cells += 1;
+        self.free.push_back(Arc::clone(&cell));
+        cell
+    }
+
+    /// Salvage an orphaned payload's backing storage into the encode
+    /// arenas (the mailbox reclaim hook's funnel — see
+    /// [`crate::network::Bus::reclaim_retired`]).
+    pub fn reclaim(&mut self, payload: Payload) {
+        self.buf.reclaim(payload);
+    }
+
+    /// Cells currently owned by the pool (pipeline-depth high-water).
+    pub fn cells(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Cells ever created by `Arc::new` — stops growing once warm-up
+    /// covers the pipeline depth.
+    pub fn fresh_cells(&self) -> usize {
+        self.fresh_cells
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{LowPrecisionQuantizer, RandomizedRounding, TernGrad};
+
+    fn rng() -> Xoshiro256pp {
+        Xoshiro256pp::seed_from_u64(42)
+    }
+
+    #[test]
+    fn pooled_encode_is_bit_identical_to_fresh_compress() {
+        let op = LowPrecisionQuantizer::new(0.25);
+        let mut pool = PayloadPool::new();
+        let mut r_pool = rng();
+        let mut r_fresh = rng();
+        let z: Vec<f64> = (0..33).map(|i| (i as f64 - 16.0) * 0.3).collect();
+        for _ in 0..10 {
+            let (cell, sat) = pool.encode(&op, &z, &mut r_pool);
+            let fresh = op.compress(&z, &mut r_fresh);
+            assert_eq!(cell.decode(), fresh.decode());
+            assert_eq!(sat, fresh.saturated);
+        }
+    }
+
+    #[test]
+    fn cells_are_reused_once_receivers_release_them() {
+        let op = RandomizedRounding::new();
+        let mut pool = PayloadPool::new();
+        let mut r = rng();
+        let z = vec![1.5, -2.25, 3.0];
+        // Simulate the engine cycle: encode, hold "slot" clones for one
+        // round, release, encode again.
+        let (c1, _) = pool.encode(&op, &z, &mut r);
+        let slot_clone = Arc::clone(&c1);
+        drop(c1); // engine drops its handle after broadcast
+        let (c2, _) = pool.encode(&op, &z, &mut r); // c1 still in a slot
+        drop(slot_clone);
+        drop(c2);
+        let fresh_after_warmup = pool.fresh_cells();
+        for _ in 0..50 {
+            let (c, _) = pool.encode(&op, &z, &mut r);
+            drop(c);
+        }
+        assert_eq!(pool.fresh_cells(), fresh_after_warmup, "steady state reuses cells");
+        assert!(pool.cells() <= fresh_after_warmup);
+    }
+
+    #[test]
+    fn kind_changes_recycle_storage_through_reclaim() {
+        // Alternating operators force the cell's variant to flip each
+        // round; the swapped-out payload's Vecs must flow back into the
+        // arenas (observable: fresh cell count stays at the pipeline
+        // depth, and decode stays correct throughout).
+        let a = LowPrecisionQuantizer::new(0.5); // I16 wire
+        let b = TernGrad::new(); // Ternary wire
+        let mut pool = PayloadPool::new();
+        let mut r = rng();
+        let z = vec![0.5, -1.0, 0.25, 0.75];
+        let mut high_water = 0;
+        for round in 0..20 {
+            let (cell, _) = if round % 2 == 0 {
+                pool.encode(&a, &z, &mut r)
+            } else {
+                pool.encode(&b, &z, &mut r)
+            };
+            assert_eq!(cell.decode().len(), 4);
+            drop(cell);
+            if round == 2 {
+                high_water = pool.fresh_cells();
+            }
+        }
+        assert_eq!(pool.fresh_cells(), high_water, "variant flips must not leak cells");
+    }
+
+    #[test]
+    fn in_flight_cells_are_skipped_not_corrupted() {
+        let op = RandomizedRounding::new();
+        let mut pool = PayloadPool::new();
+        let mut r = rng();
+        let (held, _) = pool.encode(&op, &[7.0], &mut r);
+        let held_bits = held.decode();
+        // While `held` is alive, further encodes must not touch it.
+        for _ in 0..5 {
+            let (c, _) = pool.encode(&op, &[1.0], &mut r);
+            drop(c);
+        }
+        assert_eq!(held.decode(), held_bits, "in-flight cell was mutated");
+    }
+
+    #[test]
+    fn encode_f64_round_trips() {
+        let mut pool = PayloadPool::new();
+        let z = vec![1.25, -9.5];
+        let cell = pool.encode_f64(&z);
+        assert_eq!(cell.decode(), z);
+        assert_eq!(cell.wire_bytes(), 16);
+        drop(cell);
+        let again = pool.encode_f64(&z);
+        assert_eq!(again.decode(), z);
+        assert_eq!(pool.fresh_cells(), 1, "second encode reuses the cell");
+    }
+}

@@ -531,6 +531,100 @@ mod tests {
         assert_eq!(seq.total_bytes, pool.total_bytes);
     }
 
+    /// Migrated from the removed 0.4.0 `run_*` wrappers' smoke suite:
+    /// the paper-network behavior claims now pin the `run_scenario`
+    /// pathway directly.
+    #[test]
+    fn scenario_adc_dgd_beats_naive_on_paper_network() {
+        let cfg = RunConfig {
+            iterations: 1500,
+            step_size: StepSize::Constant(0.02),
+            record_every: 1500,
+            ..RunConfig::default()
+        };
+        let run = |algorithm| {
+            run_scenario(
+                &ScenarioSpec::paper4(algorithm)
+                    .with_compressor(CompressorSpec::RandomizedRounding)
+                    .with_config(cfg),
+            )
+        };
+        let adc = run(AlgorithmKind::AdcDgd(AdcDgdOptions::default()));
+        let naive = run(AlgorithmKind::NaiveCompressed);
+        let adc_g = *adc.metrics.grad_norm.last().unwrap();
+        let naive_g = *naive.metrics.grad_norm.last().unwrap();
+        assert!(adc_g < naive_g, "ADC {adc_g} should beat naive {naive_g}");
+        assert!(adc_g < 0.2, "ADC grad norm {adc_g}");
+    }
+
+    #[test]
+    fn scenario_dgd_t_uses_more_bytes_per_gradient_step() {
+        let cfg = RunConfig {
+            iterations: 300,
+            step_size: StepSize::Constant(0.02),
+            record_every: 300,
+            ..RunConfig::default()
+        };
+        let d1 = run_scenario(&ScenarioSpec::paper4(AlgorithmKind::Dgd).with_config(cfg));
+        let d3 = run_scenario(&ScenarioSpec::paper4(AlgorithmKind::DgdT { t: 3 }).with_config(cfg));
+        // Same number of rounds ⇒ same bytes, but 3× fewer gradient steps.
+        assert_eq!(d1.total_bytes, d3.total_bytes);
+        assert_eq!(
+            d3.metrics.grad_iterations.last().unwrap() * 3,
+            *d1.metrics.grad_iterations.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn scenario_qdgd_runs() {
+        let opts = crate::algorithms::QdgdOptions::default();
+        let spec = ScenarioSpec::paper4(AlgorithmKind::Qdgd(opts))
+            .with_compressor(CompressorSpec::RandomizedRounding)
+            .with_config(RunConfig {
+                iterations: 500,
+                step_size: StepSize::Diminishing { alpha0: 0.05, eta: 0.75 },
+                record_every: 500,
+                ..RunConfig::default()
+            });
+        let out = run_scenario(&spec);
+        assert_eq!(out.rounds_completed, 500);
+        assert!(out.metrics.grad_norm.last().unwrap().is_finite());
+    }
+
+    /// The `Custom` escape hatches (prebuilt graph + W + objectives +
+    /// operator) must reproduce the named-spec pathway bit-for-bit —
+    /// the contract external callers of the removed wrappers migrate to.
+    #[test]
+    fn custom_spec_matches_named_spec_bitwise() {
+        let cfg = RunConfig {
+            iterations: 400,
+            step_size: StepSize::Constant(0.02),
+            record_every: 100,
+            ..RunConfig::default()
+        };
+        let algorithm = AlgorithmKind::AdcDgd(AdcDgdOptions::default());
+        let named = run_scenario(
+            &ScenarioSpec::paper4(algorithm)
+                .with_compressor(CompressorSpec::RandomizedRounding)
+                .with_config(cfg),
+        );
+        let (g, w) = crate::consensus::paper_four_node_w();
+        let custom = run_scenario(&ScenarioSpec {
+            algorithm,
+            topology: TopologySpec::Custom(g),
+            weights: WeightSpec::Custom(w),
+            objective: ObjectiveSpec::Custom(crate::experiments::paper_four_node_objectives()),
+            compressor: CompressorSpec::Custom(std::sync::Arc::new(
+                compress::RandomizedRounding::new(),
+            )),
+            config: cfg,
+            init: None,
+        });
+        assert_eq!(named.final_states, custom.final_states);
+        assert_eq!(named.total_bytes, custom.total_bytes);
+        assert_eq!(named.metrics.grad_norm, custom.metrics.grad_norm);
+    }
+
     #[test]
     fn topology_parse_covers_cli_names() {
         for name in ["pair", "paper4", "ring", "star", "complete", "path", "grid", "er", "ba"] {

@@ -27,7 +27,7 @@
 
 use super::{RoundTelemetry, Snapshot};
 use crate::algorithms::NodeLogic;
-use crate::compress::Payload;
+use crate::compress::{Payload, PayloadPool};
 use crate::network::{Bus, InboxView, MailSlot};
 use crate::rng::Xoshiro256pp;
 use crate::state::StatePlane;
@@ -121,6 +121,10 @@ where
             let layout = Arc::clone(&layout);
             handles.push(scope.spawn(move || {
                 let mut outgoing: Vec<(usize, Arc<Payload>)> = Vec::with_capacity(shard.len());
+                // Per-shard payload pool: the shard's nodes share one
+                // cell population, recycled once receivers consume the
+                // clones — steady-state encode allocates nothing.
+                let mut pool = PayloadPool::new();
                 // Contiguous shard ⇒ contiguous slot range. One reusable
                 // staging buffer holds the whole shard's inbox slots,
                 // moved out under a single bus lock per collect phase.
@@ -134,16 +138,15 @@ where
                     let mut max_tx = 0.0f64;
                     let mut saturations = 0usize;
                     let mut max_payload = 0usize;
-                    outgoing.clear();
                     for (i, node, rng) in shard.iter_mut() {
                         let out = {
                             let mut rows = pshard.rows(*i);
-                            node.make_message(k, &mut rows, rng)
+                            node.make_message(k, &mut rows, rng, &mut pool)
                         };
                         max_tx = max_tx.max(out.tx_magnitude);
                         saturations += out.saturated;
                         max_payload = max_payload.max(out.payload.wire_bytes());
-                        outgoing.push((*i, Arc::new(out.payload)));
+                        outgoing.push((*i, out.payload));
                     }
                     {
                         let mut b = bus.lock().unwrap();
@@ -151,6 +154,9 @@ where
                             b.broadcast(*i, k, payload);
                         }
                     }
+                    // Release the shard's handles immediately so cells
+                    // return to the pool as soon as receivers consume.
+                    outgoing.clear();
                     *telem_slots[w].lock().unwrap() = (max_tx, saturations, max_payload);
                     after_send.wait();
                     // Coordinator advances the round clock here.

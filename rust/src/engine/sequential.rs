@@ -2,6 +2,7 @@
 
 use super::RoundTelemetry;
 use crate::algorithms::NodeLogic;
+use crate::compress::PayloadPool;
 use crate::network::Bus;
 use crate::rng::Xoshiro256pp;
 use crate::state::StatePlane;
@@ -10,7 +11,9 @@ use crate::state::StatePlane;
 /// each round the observer is called with (telemetry, nodes, plane, bus)
 /// — it typically records metrics from the plane's iterate rows.
 ///
-/// Per round: every node emits its broadcast (borrowing its plane rows),
+/// Per round: every node encodes its broadcast through the engine's
+/// shared [`PayloadPool`] (borrowing its plane rows; steady-state encode
+/// allocates nothing — cells recycle once receivers clear their slots),
 /// the bus meters each copy into the receiver's dedicated mailbox slot
 /// (or the in-flight ring when the link defers arrival), and every node
 /// consumes its slot-addressed inbox view. The observer may return
@@ -30,19 +33,22 @@ where
     assert_eq!(rngs.len(), n);
     assert_eq!(plane.n(), n);
     assert_eq!(bus.n(), n);
+    let mut pool = PayloadPool::new();
     let mut completed = 0;
     for k in 1..=rounds {
         let mut max_tx = 0.0f64;
         let mut saturations = 0usize;
         let mut max_payload = 0usize;
-        // Phase 1: emit + broadcast.
+        // Phase 1: emit + broadcast (pooled cells; the broadcast clones
+        // into slots and the local handle drops, so cells return to the
+        // pool once the consume phase clears the inboxes).
         for (i, node) in nodes.iter_mut().enumerate() {
             let mut rows = plane.rows(i);
-            let out = node.make_message(k, &mut rows, &mut rngs[i]);
+            let out = node.make_message(k, &mut rows, &mut rngs[i], &mut pool);
             max_tx = max_tx.max(out.tx_magnitude);
             saturations += out.saturated;
             max_payload = max_payload.max(out.payload.wire_bytes());
-            bus.broadcast(i, k, &std::sync::Arc::new(out.payload));
+            bus.broadcast(i, k, &out.payload);
         }
         bus.advance_round();
         bus.deliver_round(k);
@@ -55,6 +61,9 @@ where
             node.consume(k, &inbox, &mut rows, &mut rngs[i]);
             bus.clear_inbox(i);
         }
+        // Encode-plane reclaim hook: salvage any payloads the mailbox
+        // orphaned this round (a no-op for pool-encoded traffic).
+        bus.reclaim_retired(&mut pool);
         completed = k;
         let telem = RoundTelemetry {
             round: k,

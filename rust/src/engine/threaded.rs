@@ -14,6 +14,7 @@
 
 use super::{RoundTelemetry, Snapshot};
 use crate::algorithms::NodeLogic;
+use crate::compress::PayloadPool;
 use crate::network::{Bus, InboxView, MailSlot};
 use crate::rng::Xoshiro256pp;
 use crate::state::StatePlane;
@@ -82,6 +83,10 @@ where
             handles.push(scope.spawn(move || {
                 let mut node = node;
                 let mut rng = rng;
+                // Per-thread payload pool: this node's cells cycle back
+                // one round after receivers consume them, so steady-state
+                // encode allocates nothing.
+                let mut pool = PayloadPool::new();
                 // Reusable staging for this node's inbox slots: filled by
                 // one `Option::take` pass under the bus lock, consumed
                 // outside it. No per-round allocation.
@@ -89,14 +94,16 @@ where
                 for k in 1..=rounds {
                     let out = {
                         let mut rows = shard.rows(i);
-                        node.make_message(k, &mut rows, &mut rng)
+                        node.make_message(k, &mut rows, &mut rng, &mut pool)
                     };
                     let bytes = out.payload.wire_bytes();
                     {
-                        let payload = std::sync::Arc::new(out.payload);
                         let mut b = bus.lock().unwrap();
-                        b.broadcast(i, k, &payload);
+                        b.broadcast(i, k, &out.payload);
                     }
+                    // Release the local handle so only slot clones (and
+                    // the pool's cell) keep the payload alive.
+                    drop(out.payload);
                     *tx_slots[i].lock().unwrap() = (out.tx_magnitude, out.saturated, bytes);
                     after_send.wait();
                     // Coordinator advances the round clock here. Take the

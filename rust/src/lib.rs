@@ -76,6 +76,35 @@
 //! axis), and every message carries its send round so algorithms can
 //! decode stale payloads exactly.
 //!
+//! ## The encode plane
+//!
+//! The send side follows the same zero-allocation discipline as the
+//! state and mailbox planes. Every operator's kernel is
+//! [`compress::Compressor::compress_into`], which draws its randomness
+//! as one block per message ([`rng::Xoshiro256pp::fill_u64`], converted
+//! per element with [`rng::block_f64`] — bit-identical to the scalar
+//! `next_f64` sequence, so golden trajectories are preserved) and
+//! writes into a reusable [`compress::PayloadBuf`]. Each engine worker
+//! owns a [`compress::PayloadPool`] that recycles the outgoing
+//! `Arc<Payload>` cells in place once receivers clear their mailbox
+//! slots:
+//!
+//! ```text
+//!          compress_into                 emit + Arc::get_mut swap
+//! z ──────▶ PayloadBuf arenas ─────────▶ Arc<Payload> cell ──clone──▶ slots
+//!              ▲                              │ (pool keeps one clone)    │
+//!              └── reclaim(previous payload) ◀┴── strong count → 1 ◀──────┘
+//! ```
+//!
+//! Allocation accounting: warm-up may allocate (cells up to the
+//! pipeline depth of ~`2 + delay` per node, arena growth, ring
+//! buckets); steady-state rounds allocate **nothing** — asserted by the
+//! `ADCDGD_BENCH_ONLY=encode` hotpath section on full compress →
+//! broadcast → consume rounds at n ∈ {16, 256, 2048}. Payloads the
+//! mailbox drops as their last reference (non-pooled senders) are
+//! retired and salvaged back into the pool through
+//! [`network::Bus::reclaim_retired`].
+//!
 //! [`EngineKind::Sequential`]: coordinator::EngineKind::Sequential
 //! [`EngineKind::Threaded`]: coordinator::EngineKind::Threaded
 //! [`EngineKind::Pool`]: coordinator::EngineKind::Pool
@@ -123,16 +152,12 @@ pub mod util;
 
 /// Convenient glob-import surface.
 pub mod prelude {
-    #[allow(deprecated)]
-    pub use crate::algorithms::{
-        run_adc_dgd, run_dgd, run_dgd_t, run_naive_compressed, run_qdgd,
-    };
     pub use crate::algorithms::{
         AdcDgdOptions, AlgorithmKind, CompressorRef, Fleet, ObjectiveRef, QdgdOptions, StepSize,
     };
     pub use crate::compress::{
-        Compressor, Identity, LowPrecisionQuantizer, Qsgd, QuantizationSparsifier,
-        RandomizedRounding, TernGrad,
+        Compressor, Identity, LowPrecisionQuantizer, PayloadBuf, PayloadPool, Qsgd,
+        QuantizationSparsifier, RandomizedRounding, TernGrad,
     };
     pub use crate::consensus::{metropolis, paper_four_node_w, ConsensusMatrix, CsrWeights};
     pub use crate::network::{Bus, InboxMsg, InboxView, LinkModel, MailboxLayout};

@@ -195,6 +195,17 @@ impl Bus {
         self.mailbox.superseded()
     }
 
+    /// Encode-plane reclaim hook: salvage payloads the mailbox dropped
+    /// as their *last* `Arc` reference (cleared/superseded slots from
+    /// senders that did not retain a pool cell) into `pool`'s arenas via
+    /// `Arc::try_unwrap`, instead of freeing them. A no-op on the pooled
+    /// engine hot path — the pool's own clone keeps every engine-encoded
+    /// payload's count above 1 — so calling this once per round costs an
+    /// empty drain.
+    pub fn reclaim_retired(&mut self, pool: &mut crate::compress::PayloadPool) {
+        self.mailbox.reclaim_retired(|payload| pool.reclaim(payload));
+    }
+
     /// Messages currently in flight (sent, not yet visible).
     pub fn in_flight(&self) -> usize {
         self.mailbox.in_flight_len()

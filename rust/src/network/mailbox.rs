@@ -250,9 +250,23 @@ pub struct MailboxPlane {
     /// Rounds `1..=delivered_through` have been drained into slots.
     delivered_through: usize,
     superseded: usize,
+    /// Encode-plane reclaim hook: payloads this plane dropped as their
+    /// *last* `Arc` reference (cleared or superseded slots whose sender
+    /// did not retain a pool cell). Drained by
+    /// [`MailboxPlane::reclaim_retired`] so
+    /// [`Arc::try_unwrap`] can salvage the backing `Vec`s into a
+    /// [`crate::compress::PayloadPool`] instead of freeing them. Pool-
+    /// encoded payloads never land here (the pool's own clone keeps the
+    /// count above 1), so this stays empty on the engine hot path;
+    /// capped at `RETIRED_CAP` for non-pooled callers that never drain.
+    retired: Vec<Arc<Payload>>,
 }
 
 impl MailboxPlane {
+    /// Retired-orphan backlog bound: beyond this, orphans are freed
+    /// normally (only reachable by callers that never drain).
+    const RETIRED_CAP: usize = 128;
+
     /// Allocate the (empty) slot plane for `layout`.
     pub fn new(layout: Arc<MailboxLayout>) -> Self {
         let slots = vec![None; layout.slots()];
@@ -262,6 +276,34 @@ impl MailboxPlane {
             in_flight: VecDeque::new(),
             delivered_through: 0,
             superseded: 0,
+            retired: Vec::new(),
+        }
+    }
+
+    /// Drop one slot payload — unless this plane holds the last `Arc`
+    /// reference, in which case the payload is parked for
+    /// [`Self::reclaim_retired`] to salvage its `Vec`s into a pool.
+    #[inline]
+    fn drop_or_retire(&mut self, arc: Arc<Payload>) {
+        if Arc::strong_count(&arc) == 1 && self.retired.len() < Self::RETIRED_CAP {
+            self.retired.push(arc);
+        }
+    }
+
+    /// Orphaned payloads parked by cleared/superseded slots, awaiting
+    /// reclamation.
+    pub fn retired_len(&self) -> usize {
+        self.retired.len()
+    }
+
+    /// Feed every retired orphan to `salvage` (typically
+    /// [`crate::compress::PayloadPool::reclaim`]), unwrapping the `Arc`
+    /// so the payload's backing `Vec`s are recycled instead of freed.
+    pub fn reclaim_retired(&mut self, mut salvage: impl FnMut(Payload)) {
+        for arc in self.retired.drain(..) {
+            if let Ok(payload) = Arc::try_unwrap(arc) {
+                salvage(payload);
+            }
         }
     }
 
@@ -282,12 +324,20 @@ impl MailboxPlane {
     }
 
     /// Freshest-wins write into `slot`. Commutative in arrival order.
+    /// Whichever side loses the collision (the stale arrival or the
+    /// superseded occupant) goes through the retire hook so orphaned
+    /// backing storage can be reclaimed.
     pub fn place(&mut self, slot: usize, round: usize, payload: Arc<Payload>) {
         match self.slots[slot].as_ref().map(|(r, _)| *r) {
-            Some(r) if r >= round => self.superseded += 1,
+            Some(r) if r >= round => {
+                self.superseded += 1;
+                self.drop_or_retire(payload);
+            }
             Some(_) => {
                 self.superseded += 1;
-                self.slots[slot] = Some((round, payload));
+                if let Some((_, old)) = self.slots[slot].replace((round, payload)) {
+                    self.drop_or_retire(old);
+                }
             }
             None => self.slots[slot] = Some((round, payload)),
         }
@@ -328,11 +378,14 @@ impl MailboxPlane {
         InboxView::new(self.layout.senders(i), &self.slots[a..b])
     }
 
-    /// Empty node `i`'s slots (after its consume call).
+    /// Empty node `i`'s slots (after its consume call), retiring any
+    /// payload this plane dropped as the last reference.
     pub fn clear(&mut self, i: usize) {
         let (a, b) = (self.layout.offset(i), self.layout.offset(i + 1));
-        for s in &mut self.slots[a..b] {
-            *s = None;
+        for s in a..b {
+            if let Some((_, arc)) = self.slots[s].take() {
+                self.drop_or_retire(arc);
+            }
         }
     }
 
@@ -452,6 +505,35 @@ mod tests {
         assert_eq!(view.iter().next().unwrap().round, 5);
         assert!(staging[1].is_none(), "unfilled slots overwrite stale staging");
         assert!(mb.view(1).is_empty(), "take empties the plane's slots");
+    }
+
+    #[test]
+    fn clear_and_supersede_retire_last_reference_payloads() {
+        let g = topology::pair();
+        let l = Arc::new(MailboxLayout::from_graph(&g));
+        let mut mb = MailboxPlane::new(l);
+        // Orphan (this plane holds the only Arc): clearing retires it.
+        mb.place(1, 1, payload(1.0));
+        mb.clear(1);
+        assert_eq!(mb.retired_len(), 1, "last-reference payload must be retired");
+        // Non-orphan (caller keeps a clone): clearing just drops the ref.
+        let held = payload(2.0);
+        mb.place(1, 2, Arc::clone(&held));
+        mb.clear(1);
+        assert_eq!(mb.retired_len(), 1, "shared payload must not be retired");
+        drop(held);
+        // Supersede retires the displaced orphan, and the stale-arrival
+        // side of the collision too.
+        mb.place(1, 3, payload(3.0));
+        mb.place(1, 5, payload(5.0)); // displaces round 3
+        mb.place(1, 4, payload(4.0)); // stale arrival, dropped on entry
+        assert_eq!(mb.superseded(), 2);
+        assert_eq!(mb.retired_len(), 3);
+        // Reclaim funnels the payloads (Arc::try_unwrap succeeds) out.
+        let mut salvaged = Vec::new();
+        mb.reclaim_retired(|p| salvaged.push(p.decode()[0]));
+        assert_eq!(salvaged, vec![1.0, 3.0, 4.0]);
+        assert_eq!(mb.retired_len(), 0);
     }
 
     #[test]

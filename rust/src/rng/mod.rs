@@ -17,6 +17,18 @@ mod distributions;
 
 pub use distributions::{Bernoulli, Normal, Uniform};
 
+/// Map one raw 64-bit draw to the uniform `[0, 1)` value
+/// [`Xoshiro256pp::next_f64`] would have produced from it (53-bit
+/// resolution). This is the **block-draw ordering contract** the encode
+/// plane relies on: `next_f64() ≡ block_f64(next_u64())` bit-for-bit, so
+/// a kernel that block-fills a `u64` buffer with [`Xoshiro256pp::fill_u64`]
+/// and converts lazily consumes the *identical* `next_f64` sequence as
+/// the scalar path — golden bit patterns are preserved.
+#[inline(always)]
+pub fn block_f64(bits: u64) -> f64 {
+    (bits >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
 /// SplitMix64: a 64-bit state mixer. Primarily used to expand a single
 /// `u64` seed into the 256-bit state of [`Xoshiro256pp`].
 #[derive(Debug, Clone)]
@@ -79,10 +91,26 @@ impl Xoshiro256pp {
         (self.next_u64() >> 32) as u32
     }
 
-    /// Uniform `f64` in `[0, 1)` with 53-bit resolution.
+    /// Uniform `f64` in `[0, 1)` with 53-bit resolution. Defined as
+    /// `block_f64(next_u64())` so block-filled draws ([`Self::fill_u64`] +
+    /// [`block_f64`]) are bit-identical to scalar draws.
     #[inline]
     pub fn next_f64(&mut self) -> f64 {
-        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+        block_f64(self.next_u64())
+    }
+
+    /// Refill `buf` with exactly `n` raw 64-bit draws (clearing previous
+    /// contents, reusing capacity). Advances the generator state exactly
+    /// as `n` calls of [`Self::next_u64`] would — the encode plane's
+    /// quantization kernels draw one block per message and convert each
+    /// element with [`block_f64`] in consumption order, which preserves
+    /// the scalar `next_f64` sequence bit-for-bit.
+    pub fn fill_u64(&mut self, buf: &mut Vec<u64>, n: usize) {
+        buf.clear();
+        buf.reserve(n);
+        for _ in 0..n {
+            buf.push(self.next_u64());
+        }
     }
 
     /// Uniform `f32` in `[0, 1)` with 24-bit resolution.
@@ -162,6 +190,24 @@ mod tests {
         let zs: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
         assert_eq!(xs, ys);
         assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn block_draws_match_scalar_draws_bitwise() {
+        // The encode-plane contract: fill_u64 + block_f64 must reproduce
+        // the exact next_f64 sequence (values and state advancement).
+        let mut scalar = Xoshiro256pp::seed_from_u64(99);
+        let mut blocked = Xoshiro256pp::seed_from_u64(99);
+        let mut buf = Vec::new();
+        for block_len in [1usize, 7, 64, 3] {
+            blocked.fill_u64(&mut buf, block_len);
+            assert_eq!(buf.len(), block_len);
+            for &bits in &buf {
+                assert_eq!(block_f64(bits).to_bits(), scalar.next_f64().to_bits());
+            }
+        }
+        // Both generators end in the same state.
+        assert_eq!(scalar.next_u64(), blocked.next_u64());
     }
 
     #[test]

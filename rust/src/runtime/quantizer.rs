@@ -10,7 +10,7 @@
 //! noise.
 
 use super::executable::LoadedModel;
-use crate::compress::{Compressed, Compressor, Payload};
+use crate::compress::{CompressedRef, Compressor, PayloadBuf, PayloadKind};
 use crate::rng::Xoshiro256pp;
 use std::sync::Arc;
 
@@ -34,10 +34,19 @@ impl XlaQuantizer {
 }
 
 impl Compressor for XlaQuantizer {
-    fn compress(&self, z: &[f64], rng: &mut Xoshiro256pp) -> Compressed {
-        let mut data = Vec::with_capacity(z.len());
+    fn compress_into(
+        &self,
+        z: &[f64],
+        rng: &mut Xoshiro256pp,
+        buf: &mut PayloadBuf,
+    ) -> CompressedRef {
+        buf.reset();
+        buf.i16s.reserve(z.len());
         let mut saturated = 0usize;
-        // Process in artifact-sized blocks (pad the last one).
+        // Process in artifact-sized blocks (pad the last one). The PJRT
+        // boundary allocates its own literals — this operator is outside
+        // the encode plane's zero-alloc contract; only the int16 output
+        // lands in the pooled arena.
         for chunk in z.chunks(self.block) {
             let mut y: Vec<f32> = chunk.iter().map(|&v| v as f32).collect();
             y.resize(self.block, 0.0);
@@ -57,16 +66,16 @@ impl Compressor for XlaQuantizer {
                 let v = v as f64;
                 if v > i16::MAX as f64 {
                     saturated += 1;
-                    data.push(i16::MAX);
+                    buf.i16s.push(i16::MAX);
                 } else if v < i16::MIN as f64 {
                     saturated += 1;
-                    data.push(i16::MIN);
+                    buf.i16s.push(i16::MIN);
                 } else {
-                    data.push(v as i16);
+                    buf.i16s.push(v as i16);
                 }
             }
         }
-        Compressed { payload: Payload::I16 { scale: 1.0, data }, saturated }
+        CompressedRef { kind: PayloadKind::I16, len: z.len(), scale: 1.0, saturated }
     }
 
     fn variance_bound(&self) -> Option<f64> {

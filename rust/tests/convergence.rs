@@ -2,22 +2,25 @@
 //! topology × compressor combinations (the paper's Theorems 1–3
 //! checked empirically on the full stack).
 //!
-//! Deliberately exercises the deprecated `run_*` wrappers: they are the
-//! compatibility surface over `run_scenario`, so these convergence
-//! claims double as regression coverage for that pathway.
-#![allow(deprecated)]
+//! Every run goes through `run_scenario` with the `Custom` escape
+//! hatches (prebuilt graph + W + objectives + operator) — the migration
+//! target of the `run_*` wrappers removed in 0.4.0; the local `run_*`
+//! helpers below show the one-liner each wrapper became.
 
 use adcdgd::algorithms::{
-    run_adc_dgd, run_dgd, run_naive_compressed, run_qdgd, AdcDgdOptions, CompressorRef,
-    ObjectiveRef, QdgdOptions, StepSize,
+    AdcDgdOptions, AlgorithmKind, CompressorRef, ObjectiveRef, QdgdOptions, StepSize,
 };
 use adcdgd::compress::{LowPrecisionQuantizer, Qsgd, RandomizedRounding, TernGrad};
-use adcdgd::consensus::{lazy_metropolis, max_degree, metropolis};
-use adcdgd::coordinator::RunConfig;
+use adcdgd::consensus::{lazy_metropolis, max_degree, metropolis, ConsensusMatrix};
+use adcdgd::coordinator::{
+    run_scenario, CompressorSpec, ObjectiveSpec, RunConfig, RunOutput, ScenarioSpec,
+    TopologySpec, WeightSpec,
+};
 use adcdgd::experiments::{random_circle_objectives, scalar_quadratic_optimum};
 use adcdgd::objective::{LogisticRegression, Quadratic, ScalarQuadratic};
 use adcdgd::rng::Xoshiro256pp;
 use adcdgd::topology;
+use adcdgd::topology::Graph;
 use std::sync::Arc;
 
 fn cfg(iterations: usize, alpha: f64) -> RunConfig {
@@ -28,6 +31,61 @@ fn cfg(iterations: usize, alpha: f64) -> RunConfig {
         seed: 7,
         ..RunConfig::default()
     }
+}
+
+fn run_custom(
+    algorithm: AlgorithmKind,
+    g: &Graph,
+    w: &ConsensusMatrix,
+    objectives: &[ObjectiveRef],
+    compressor: CompressorSpec,
+    cfg: &RunConfig,
+) -> RunOutput {
+    run_scenario(&ScenarioSpec {
+        algorithm,
+        topology: TopologySpec::Custom(g.clone()),
+        weights: WeightSpec::Custom(w.clone()),
+        objective: ObjectiveSpec::Custom(objectives.to_vec()),
+        compressor,
+        config: *cfg,
+        init: None,
+    })
+}
+
+fn run_adc_dgd(
+    g: &Graph,
+    w: &ConsensusMatrix,
+    objs: &[ObjectiveRef],
+    comp: CompressorRef,
+    opts: &AdcDgdOptions,
+    cfg: &RunConfig,
+) -> RunOutput {
+    run_custom(AlgorithmKind::AdcDgd(*opts), g, w, objs, CompressorSpec::Custom(comp), cfg)
+}
+
+fn run_dgd(g: &Graph, w: &ConsensusMatrix, objs: &[ObjectiveRef], cfg: &RunConfig) -> RunOutput {
+    run_custom(AlgorithmKind::Dgd, g, w, objs, CompressorSpec::None, cfg)
+}
+
+fn run_naive_compressed(
+    g: &Graph,
+    w: &ConsensusMatrix,
+    objs: &[ObjectiveRef],
+    comp: CompressorRef,
+    cfg: &RunConfig,
+) -> RunOutput {
+    run_custom(AlgorithmKind::NaiveCompressed, g, w, objs, CompressorSpec::Custom(comp), cfg)
+}
+
+fn run_qdgd(
+    g: &Graph,
+    w: &ConsensusMatrix,
+    objs: &[ObjectiveRef],
+    comp: CompressorRef,
+    opts: &QdgdOptions,
+    cfg: &RunConfig,
+) -> RunOutput {
+    run_custom(AlgorithmKind::Qdgd(*opts), g, w, objs, CompressorSpec::Custom(comp), cfg)
 }
 
 /// ADC-DGD converges on every standard topology with every Def.-1

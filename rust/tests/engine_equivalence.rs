@@ -339,14 +339,14 @@ fn parallel_engines_match_golden_snapshots() {
     }
 }
 
-/// The deprecated wrappers must route through the same pathway and stay
-/// engine-invariant (compatibility surface for external callers).
-#[allow(deprecated)]
+/// Specs built through the `Custom` escape hatches (prebuilt graph +
+/// W + objectives + operator — the migration target of the 0.4.0
+/// wrapper removal) must stay engine-invariant like named specs.
 #[test]
-fn legacy_wrappers_remain_engine_invariant() {
-    use adcdgd::algorithms::run_adc_dgd;
+fn custom_specs_remain_engine_invariant() {
     use adcdgd::compress::RandomizedRounding;
     use adcdgd::consensus::metropolis;
+    use adcdgd::coordinator::WeightSpec;
     use adcdgd::experiments::random_circle_objectives;
     use adcdgd::rng::Xoshiro256pp;
     use adcdgd::topology;
@@ -356,17 +356,17 @@ fn legacy_wrappers_remain_engine_invariant() {
     let w = metropolis(&g);
     let mut rng = Xoshiro256pp::seed_from_u64(77);
     let objs = random_circle_objectives(6, &mut rng);
-    let run = |engine| {
-        run_adc_dgd(
-            &g,
-            &w,
-            &objs,
-            Arc::new(RandomizedRounding::new()),
-            &AdcDgdOptions { gamma: 1.0 },
-            &cfg(engine, 0.0),
-        )
+    let spec = ScenarioSpec {
+        algorithm: AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        topology: TopologySpec::Custom(g),
+        weights: WeightSpec::Custom(w),
+        objective: ObjectiveSpec::Custom(objs),
+        compressor: CompressorSpec::Custom(Arc::new(RandomizedRounding::new())),
+        config: cfg(EngineKind::Sequential, 0.0),
+        init: None,
     };
-    let a = run(EngineKind::Sequential);
-    let b = run(EngineKind::pool());
-    assert_identical(&a, &b, "legacy wrapper");
+    let prepared = spec.prepare();
+    let a = prepared.run_with(&cfg(EngineKind::Sequential, 0.0));
+    let b = prepared.run_with(&cfg(EngineKind::pool(), 0.0));
+    assert_identical(&a, &b, "custom spec");
 }

@@ -613,6 +613,132 @@ fn prop_ternary_trailing_bits_ignored() {
     }
 }
 
+/// Test-only operator covering the `F32` wire kind (no shipped operator
+/// emits it) so the pooled-vs-fresh equivalence sweep spans **all six**
+/// payload kinds; also exercises the external-implementor surface of
+/// `compress_into` (public `PayloadBuf` arenas).
+struct F32Cast;
+
+impl Compressor for F32Cast {
+    fn compress_into(
+        &self,
+        z: &[f64],
+        _rng: &mut Xoshiro256pp,
+        buf: &mut adcdgd::compress::PayloadBuf,
+    ) -> adcdgd::compress::CompressedRef {
+        buf.reset();
+        buf.f32s.extend(z.iter().map(|&v| v as f32));
+        adcdgd::compress::CompressedRef {
+            kind: adcdgd::compress::PayloadKind::F32,
+            len: z.len(),
+            scale: 0.0,
+            saturated: 0,
+        }
+    }
+    fn variance_bound(&self) -> Option<f64> {
+        None
+    }
+    fn name(&self) -> &'static str {
+        "f32cast"
+    }
+    fn bytes_per_element(&self) -> f64 {
+        4.0
+    }
+}
+
+/// Operator set spanning all six payload kinds (F64, F32, I16, I8,
+/// SparseI16, Ternary), including the biased operators and both QSGD
+/// wire widths.
+fn all_kind_compressors() -> Vec<(String, Box<dyn Compressor>)> {
+    let mut ops = all_compressors();
+    ops.push(("qsgd-i16".into(), Box::new(Qsgd::new(1000))));
+    ops.push(("topk".into(), Box::new(adcdgd::compress::TopK::new(3))));
+    ops.push(("sign1bit".into(), Box::new(adcdgd::compress::SignOneBit::new())));
+    ops.push(("f32cast".into(), Box::new(F32Cast)));
+    ops
+}
+
+fn payload_bits(p: &Payload) -> (adcdgd::compress::PayloadKind, usize, Vec<u64>) {
+    (p.kind(), p.wire_bytes(), p.decode().iter().map(|v| v.to_bits()).collect())
+}
+
+/// Encode-plane equivalence: `compress_into` through **one reused**
+/// `PayloadBuf` must be bit-identical to fresh-allocation `compress`
+/// across all six payload kinds, arbitrary message lengths, and
+/// repeated buffer reuse (emit → reclaim cycles, kind changes
+/// included), while consuming the exact same RNG stream.
+#[test]
+fn prop_compress_into_reused_buffer_bit_identical_to_fresh_compress() {
+    use adcdgd::compress::PayloadBuf;
+    let mut rng = Xoshiro256pp::seed_from_u64(115);
+    let mut shared = PayloadBuf::new();
+    for trial in 0..40 {
+        let p = 1 + rng.next_bounded(97) as usize;
+        let z: Vec<f64> = (0..p).map(|_| (rng.next_f64() - 0.5) * 12.0).collect();
+        for (name, op) in all_kind_compressors() {
+            let seed = rng.next_u64();
+            let mut r_pooled = Xoshiro256pp::seed_from_u64(seed);
+            let mut r_fresh = Xoshiro256pp::seed_from_u64(seed);
+            let r = op.compress_into(&z, &mut r_pooled, &mut shared);
+            let pooled = shared.emit(&r);
+            let fresh = op.compress(&z, &mut r_fresh);
+            assert_eq!(
+                payload_bits(&pooled),
+                payload_bits(&fresh.payload),
+                "{name} trial {trial} (p={p}): pooled != fresh"
+            );
+            assert_eq!(r.saturated, fresh.saturated, "{name} trial {trial}: saturation");
+            // Reclaim so the next operator reuses this message's storage.
+            shared.reclaim(pooled);
+            // Both pathways must have consumed the identical stream.
+            assert_eq!(
+                r_pooled.next_u64(),
+                r_fresh.next_u64(),
+                "{name} trial {trial}: RNG draw count diverged"
+            );
+        }
+    }
+}
+
+/// Pool-level equivalence across rounds: `PayloadPool::encode` (cells
+/// recycled in place, including while a previous round's cell is still
+/// held by a "mailbox slot") stays bit-identical to fresh `compress`
+/// for every operator.
+#[test]
+fn prop_payload_pool_encode_bit_identical_across_rounds() {
+    use adcdgd::compress::PayloadPool;
+    let mut rng = Xoshiro256pp::seed_from_u64(116);
+    for (name, op) in all_kind_compressors() {
+        let mut pool = PayloadPool::new();
+        let seed = rng.next_u64();
+        let mut r_pooled = Xoshiro256pp::seed_from_u64(seed);
+        let mut r_fresh = Xoshiro256pp::seed_from_u64(seed);
+        let p = 1 + rng.next_bounded(60) as usize;
+        // Previous round's cell, released one round later (mailbox-slot
+        // lifetime).
+        let mut in_flight: Option<std::sync::Arc<Payload>> = None;
+        for round in 0..30usize {
+            let z: Vec<f64> =
+                (0..p).map(|i| ((i + round) as f64 * 0.37 - 5.0) * 1.5).collect();
+            let (cell, sat) = pool.encode(&*op, &z, &mut r_pooled);
+            let fresh = op.compress(&z, &mut r_fresh);
+            assert_eq!(
+                payload_bits(&cell),
+                payload_bits(&fresh.payload),
+                "{name} round {round}: pooled encode != fresh"
+            );
+            assert_eq!(sat, fresh.saturated, "{name} round {round}: saturation");
+            drop(in_flight.replace(cell));
+        }
+        drop(in_flight);
+        assert!(
+            pool.fresh_cells() <= 3,
+            "{name}: pool allocated {} cells for a 1-deep pipeline",
+            pool.fresh_cells()
+        );
+    }
+}
+
 /// Saturation counting: values beyond the int16 range are flagged.
 #[test]
 fn prop_saturation_detection() {

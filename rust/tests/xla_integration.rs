@@ -1,12 +1,14 @@
 //! Cross-language integration: the AOT artifacts (JAX/Pallas → HLO →
 //! PJRT) must agree numerically with the pure-rust implementations.
 //! All tests self-skip when `make artifacts` has not been run.
-#![allow(deprecated)]
 
-use adcdgd::algorithms::{run_adc_dgd, AdcDgdOptions, ObjectiveRef, StepSize};
+use adcdgd::algorithms::{AdcDgdOptions, AlgorithmKind, ObjectiveRef, StepSize};
 use adcdgd::compress::{Compressor, RandomizedRounding};
 use adcdgd::consensus::metropolis;
-use adcdgd::coordinator::RunConfig;
+use adcdgd::coordinator::{
+    run_scenario, CompressorSpec, ObjectiveSpec, RunConfig, ScenarioSpec, TopologySpec,
+    WeightSpec,
+};
 use adcdgd::linalg::vecops;
 use adcdgd::objective::{LogisticRegression, Objective};
 use adcdgd::rng::{Normal, Xoshiro256pp};
@@ -154,14 +156,17 @@ fn adc_dgd_over_xla_objectives_converges() {
         seed: 1,
         ..RunConfig::default()
     };
-    let out = run_adc_dgd(
-        &g,
-        &w,
-        &objs,
-        Arc::new(adcdgd::compress::LowPrecisionQuantizer::new(1.0 / 128.0)),
-        &AdcDgdOptions { gamma: 1.0 },
-        &cfg,
-    );
+    let out = run_scenario(&ScenarioSpec {
+        algorithm: AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        topology: TopologySpec::Custom(g),
+        weights: WeightSpec::Custom(w),
+        objective: ObjectiveSpec::Custom(objs),
+        compressor: CompressorSpec::Custom(Arc::new(
+            adcdgd::compress::LowPrecisionQuantizer::new(1.0 / 128.0),
+        )),
+        config: cfg,
+        init: None,
+    });
     let first = out.metrics.grad_norm[0];
     let last = *out.metrics.grad_norm.last().unwrap();
     assert!(last < first * 0.3, "grad norm {first} -> {last}");
