@@ -10,12 +10,18 @@
 //!
 //! Set `ADCDGD_BENCH_ONLY=pool` (engine comparison),
 //! `ADCDGD_BENCH_ONLY=plane` (state-plane bench),
-//! `ADCDGD_BENCH_ONLY=mailbox` (inbox machinery), or
+//! `ADCDGD_BENCH_ONLY=mailbox` (inbox machinery),
 //! `ADCDGD_BENCH_ONLY=encode` (encode plane: fresh-alloc vs pooled
-//! compress_into, emits `BENCH_encode_plane.json`) to run a single
+//! compress_into, emits `BENCH_encode_plane.json`), or
+//! `ADCDGD_BENCH_ONLY=stochastic` (stochastic plane: oracle sampling +
+//! minibatch gradients + full CHOCO-SGD rounds with the zero-alloc
+//! assertion, emits `BENCH_stochastic_plane.json`) to run a single
 //! section (CI uses these to publish the JSON artifacts quickly).
 
-use adcdgd::algorithms::{AdcDgdOptions, AlgorithmKind, ObjectiveRef, StepSize};
+use adcdgd::algorithms::{
+    AdcDgdOptions, AlgorithmKind, ChocoSgdOptions, CompressorRef, ObjectiveRef, StepSize,
+};
+use adcdgd::stochastic::{DataPlane, SampleOracle, ShardObjective, StochasticObjective};
 use adcdgd::compress::{
     Compressor, LowPrecisionQuantizer, Payload, PayloadPool, Qsgd, RandomizedRounding, TernGrad,
 };
@@ -586,6 +592,157 @@ fn encode_plane_comparison() {
     println!("encode-plane bench written to BENCH_encode_plane.json");
 }
 
+/// One full stochastic round over a prebuilt CHOCO-SGD fleet: sample
+/// (oracle block) → minibatch gradient → compressed-difference encode →
+/// broadcast → slot consume. The whole path must be allocation-free in
+/// steady state — including the oracle's per-epoch reshuffles, which
+/// reuse their permutation and raw-draw buffers.
+fn stochastic_round(
+    nodes: &mut [Box<dyn adcdgd::algorithms::NodeLogic>],
+    plane: &mut adcdgd::state::StatePlane,
+    rngs: &mut [Xoshiro256pp],
+    bus: &mut Bus,
+    pool: &mut PayloadPool,
+    k: usize,
+) -> usize {
+    let n = nodes.len();
+    for (i, node) in nodes.iter_mut().enumerate() {
+        let mut rows = plane.rows(i);
+        let out = node.make_message(k, &mut rows, &mut rngs[i], pool);
+        bus.broadcast(i, k, &out.payload);
+    }
+    bus.advance_round();
+    bus.deliver_round(k);
+    for (i, node) in nodes.iter_mut().enumerate() {
+        let inbox = bus.inbox_view(i);
+        let mut rows = plane.rows(i);
+        node.consume(k, &inbox, &mut rows, &mut rngs[i]);
+        bus.clear_inbox(i);
+    }
+    bus.reclaim_retired(pool);
+    n
+}
+
+/// Stochastic plane: oracle sampling + minibatch gradient throughput,
+/// then full CHOCO-SGD rounds (sample → encode → consume) at
+/// n ∈ {16, 256, 2048} with the zero-steady-state-allocation assertion.
+/// Emits `BENCH_stochastic_plane.json`.
+fn stochastic_plane_bench() {
+    println!("== stochastic plane (oracle + minibatch grad + choco rounds) ==");
+    // Oracle block throughput: shard 1024, batch 64 (an epoch reshuffle
+    // every 16 blocks — the reshuffle path is part of the measurement).
+    let mut oracle = SampleOracle::new(1024, 64, 7);
+    let mut idx: Vec<usize> = Vec::new();
+    let res = bench_print("oracle next_block shard=1024 batch=64", || {
+        oracle.next_block(std::hint::black_box(&mut idx));
+    });
+    println!("     -> {:.1} M indices/s", 64.0 / res.mean() / 1e6);
+    // Minibatch gradient throughput on a wide shard.
+    let p_dim = 64usize;
+    let (grad_data, _) = DataPlane::synthetic_logistic(1, 4096, p_dim, 0.1, 3);
+    let grad_obj = ShardObjective::logistic(Arc::new(grad_data), 0, 1e-3);
+    let mut grad_oracle = SampleOracle::new(4096, 64, 9);
+    let x = vec![0.1; p_dim];
+    let mut g = vec![0.0; p_dim];
+    let res = bench_print(&format!("minibatch grad  batch=64 P={p_dim}"), || {
+        grad_oracle.next_block(&mut idx);
+        grad_obj.minibatch_grad_into(std::hint::black_box(&x), &idx, &mut g);
+    });
+    println!("     -> {:.1} M sample-dims/s", 64.0 * p_dim as f64 / res.mean() / 1e6);
+
+    // Full rounds: CHOCO-SGD + ternary over sharded logistic data.
+    let rounds = 30;
+    let dim = 16usize;
+    let shard = 128usize;
+    let batch = 16usize;
+    let mut rows_json = Vec::new();
+    for n in [16usize, 256, 2048] {
+        let p_edge = (12.0 / n as f64).min(0.5);
+        let g = adcdgd::topology::erdos_renyi(n, p_edge, 5);
+        let w = adcdgd::consensus::lazy_metropolis(&g);
+        let (data, _) = DataPlane::synthetic_logistic(n, shard, dim, 0.2, 9);
+        let data = Arc::new(data);
+        let objs: Vec<ObjectiveRef> = (0..n)
+            .map(|i| {
+                Arc::new(ShardObjective::logistic(Arc::clone(&data), i, 1e-3)) as ObjectiveRef
+            })
+            .collect();
+        let kind =
+            AlgorithmKind::ChocoSgd(ChocoSgdOptions { consensus_step: 0.4, batch });
+        let comp: CompressorRef = Arc::new(TernGrad::new());
+        let build = || {
+            let fleet =
+                kind.build_fleet(&g, &w, &objs, Some(&comp), StepSize::Constant(0.05), None);
+            let rngs: Vec<Xoshiro256pp> =
+                (0..n).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
+            let bus = Bus::new(&g, LinkModel::default(), 7);
+            (fleet, rngs, bus, PayloadPool::new())
+        };
+        let samples = if n >= 2048 { 5 } else { 10 };
+        let (mut fleet, mut rngs, mut bus, mut pool) = build();
+        let mut k = 0usize;
+        let timing = bench(
+            &format!("choco round n={n} batch={batch} {rounds} rounds"),
+            1,
+            samples,
+            Duration::from_secs(120),
+            || {
+                for _ in 0..rounds {
+                    k += 1;
+                    std::hint::black_box(stochastic_round(
+                        &mut fleet.nodes,
+                        &mut fleet.plane,
+                        &mut rngs,
+                        &mut bus,
+                        &mut pool,
+                        k,
+                    ));
+                }
+            },
+        );
+        println!("{}", timing.summary());
+
+        // Zero-allocation assertion on a fresh fleet: warm-up covers the
+        // oracle construction + first reshuffle, the idx buffers, the
+        // pool cells, and the encode arenas; the measured 20 rounds span
+        // multiple epoch reshuffles (epoch = shard/batch = 8 rounds) and
+        // must never touch the heap.
+        let (mut fleet, mut rngs, mut bus, mut pool) = build();
+        for k in 1..=10 {
+            stochastic_round(&mut fleet.nodes, &mut fleet.plane, &mut rngs, &mut bus, &mut pool, k);
+        }
+        let cells_warm = pool.fresh_cells();
+        let before = alloc_counter::count();
+        for k in 11..=30 {
+            stochastic_round(&mut fleet.nodes, &mut fleet.plane, &mut rngs, &mut bus, &mut pool, k);
+        }
+        let allocs = alloc_counter::count() - before;
+        assert_eq!(
+            allocs, 0,
+            "stochastic round allocated {allocs} times over 20 rounds (n={n})"
+        );
+        assert_eq!(pool.fresh_cells(), cells_warm, "pool created cells after warm-up (n={n})");
+        println!(
+            "     -> allocations over 20 post-warm-up rounds: {allocs} (pool cells: {cells_warm})"
+        );
+        rows_json.push(format!(
+            "    {{\"n\": {n}, \"dim\": {dim}, \"shard\": {shard}, \"batch\": {batch}, \
+             \"rounds\": {rounds}, \"round_mean_s\": {:.8}, \"allocs_after_warmup\": {allocs}, \
+             \"pool_cells\": {cells_warm}}}",
+            timing.mean() / rounds as f64,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"stochastic_plane\",\n  \"pathway\": \"oracle block sampling + \
+         minibatch grad + choco compressed-difference rounds\",\n  \"wire\": \"ternary\",\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    std::fs::write("BENCH_stochastic_plane.json", &json)
+        .expect("write BENCH_stochastic_plane.json");
+    println!("stochastic-plane bench written to BENCH_stochastic_plane.json");
+}
+
 fn xla_paths() {
     let dir = adcdgd::runtime::artifacts_dir(None);
     if !adcdgd::runtime::artifacts_available(&dir) {
@@ -648,6 +805,10 @@ fn main() {
         encode_plane_comparison();
         return;
     }
+    if only == "stochastic" {
+        stochastic_plane_bench();
+        return;
+    }
     println!("== L3 hot path ==");
     for p in [100usize, 10_000, 100_000] {
         round_throughput(p, 20);
@@ -658,6 +819,7 @@ fn main() {
     state_plane_comparison();
     mailbox_comparison();
     encode_plane_comparison();
+    stochastic_plane_bench();
     println!("== XLA-backed paths ==");
     xla_paths();
 }

@@ -1,0 +1,241 @@
+//! CEDAS-style compressed exact diffusion (after Huang & Pu,
+//! arXiv:2301.05872), implemented as CHOCO-style hat-variable difference
+//! compression applied to the exact-diffusion recursion of Yuan et al.
+//! ("Exact Diffusion for Distributed Optimization and Learning").
+//!
+//! Exact diffusion removes plain DGD's constant-step bias by carrying a
+//! one-round correction of the adapted iterate:
+//!
+//! ```text
+//! ψ_i^{k} = x_i^k − α ∇F_i(x_i^k; ξ)           (adapt, minibatch)
+//! φ_i^{k} = ψ_i^{k} + (x_i^k − ψ_i^{k−1})      (correct; ψ⁰ = x⁰)
+//! x_i^{k+1} = Σ_j W_ij φ_j^{k}                 (combine)
+//! ```
+//!
+//! Summing the recursion over nodes shows the invariant
+//! `x̄^{k+1} = x̄^k − α·ḡ^k`: the mean iterate performs exact gradient
+//! descent on the average gradient, so stationary points are exactly the
+//! first-order optima (no `O(α)` error ball). The combine step prefers a
+//! positive-semidefinite mixing matrix — pair it with
+//! [`crate::coordinator::WeightSpec::LazyMetropolis`] (`(I + W)/2`) on
+//! general topologies.
+//!
+//! The compressed version never transmits `φ` directly: like CHOCO-SGD
+//! (and ADC-DGD's mirrors), every node keeps a public estimate `ĥ_i` of
+//! its own `φ`, receivers keep the same estimates (mirror-arena rows),
+//! only compressed differences travel, and the combine becomes the
+//! damped gossip `x^{k+1} = φ + γ((Wĥ)_i − ĥ_i)`. The previous-round `ψ`
+//! lives in the state plane's `aux` arena — the persistent second row
+//! this algorithm adds to the plane layout.
+//!
+//! Like CHOCO-SGD, the minibatch gradient comes through the node's
+//! [`crate::stochastic::SampleOracle`] when the objective is stochastic;
+//! `batch = 0` (or a deterministic objective) takes exact gradients and
+//! draws nothing.
+
+use super::choco_sgd::stochastic_grad_into;
+use super::{CompressorRef, NodeLogic, ObjectiveRef, Outgoing, StepSize};
+use crate::compress::PayloadPool;
+use crate::consensus::CsrWeights;
+use crate::linalg::vecops;
+use crate::network::InboxView;
+use crate::rng::Xoshiro256pp;
+use crate::state::NodeRows;
+use crate::stochastic::SampleOracle;
+use std::sync::Arc;
+
+/// CEDAS hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct CedasOptions {
+    /// Consensus step size γ ∈ (0, 1]; `1` recovers uncompressed exact
+    /// diffusion, smaller values damp harsher compression noise.
+    pub consensus_step: f64,
+    /// Minibatch size per gradient step; `0` (or ≥ shard size) takes the
+    /// deterministic full-shard gradient.
+    pub batch: usize,
+}
+
+impl Default for CedasOptions {
+    fn default() -> Self {
+        Self { consensus_step: 0.5, batch: 0 }
+    }
+}
+
+/// Per-node CEDAS logic. The iterate, previous-round `ψ` (`aux` row),
+/// own estimate `ĥ_i` (`mirror_self` row), and neighbor estimates
+/// (mirror arena) live in the run's state plane.
+pub struct CedasNode {
+    id: usize,
+    weights: Arc<CsrWeights>,
+    objective: ObjectiveRef,
+    compressor: CompressorRef,
+    step: StepSize,
+    opts: CedasOptions,
+    steps: usize,
+    /// Lazily seeded from the node's RNG stream on the first stochastic
+    /// gradient (full-batch runs never create it and never draw).
+    oracle: Option<SampleOracle>,
+    /// Reused minibatch index block.
+    idx: Vec<usize>,
+}
+
+impl CedasNode {
+    /// Create node `id` over the shared CSR weights, objective, and
+    /// compression operator. The fleet builder seeds the `aux` row with
+    /// the initial iterate (the `ψ⁰ = x⁰` convention).
+    pub fn new(
+        id: usize,
+        weights: Arc<CsrWeights>,
+        objective: ObjectiveRef,
+        compressor: CompressorRef,
+        step: StepSize,
+        opts: CedasOptions,
+    ) -> Self {
+        assert!(
+            opts.consensus_step > 0.0 && opts.consensus_step <= 1.0,
+            "consensus step must lie in (0, 1]"
+        );
+        Self {
+            id,
+            weights,
+            objective,
+            compressor,
+            step,
+            opts,
+            steps: 0,
+            oracle: None,
+            idx: Vec::new(),
+        }
+    }
+}
+
+impl NodeLogic for CedasNode {
+    fn make_message(
+        &mut self,
+        round: usize,
+        rows: &mut NodeRows<'_>,
+        rng: &mut Xoshiro256pp,
+        pool: &mut PayloadPool,
+    ) -> Outgoing {
+        // Adapt: (mini)batch gradient at the current iterate.
+        stochastic_grad_into(
+            &self.objective,
+            self.opts.batch,
+            &mut self.oracle,
+            &mut self.idx,
+            rows.x,
+            rows.grad,
+            rng,
+        );
+        let alpha = self.step.at(round);
+        // Correct: ψ = x − α g; φ = ψ + (x − ψ_prev); ψ_prev ← ψ. The
+        // iterate row carries φ into the consume-phase combine (its x^k
+        // role is spent once the gradient and correction are taken).
+        for e in 0..rows.p {
+            let psi = rows.x[e] + (-alpha) * rows.grad[e];
+            let phi = psi + (rows.x[e] - rows.aux[e]);
+            rows.aux[e] = psi;
+            rows.x[e] = phi;
+        }
+        self.steps += 1;
+        // Compressed difference of φ against the node's own estimate,
+        // integrating ĥ with the same realization receivers apply.
+        vecops::sub(rows.x, rows.mirror_self, rows.scratch);
+        let tx_magnitude = vecops::norm_inf(rows.scratch);
+        let (payload, saturated) = pool.encode(&*self.compressor, rows.scratch, rng);
+        payload.decode_axpy(1.0, rows.mirror_self);
+        Outgoing { payload, tx_magnitude, saturated }
+    }
+
+    fn consume(
+        &mut self,
+        _round: usize,
+        inbox: &InboxView<'_>,
+        rows: &mut NodeRows<'_>,
+        _rng: &mut Xoshiro256pp,
+    ) {
+        // Update neighbor estimates from their differences.
+        let p = rows.p;
+        for m in inbox.iter() {
+            m.payload.decode_axpy(1.0, &mut rows.mirrors[m.slot * p..(m.slot + 1) * p]);
+        }
+        // Combine: x ← γ·(Wĥ)_i + (φ − γ·ĥ_i), the damped gossip over
+        // the estimates (same grouping as CHOCO-SGD's kernel).
+        self.weights.mix_row_into(self.id, rows.mirror_self, rows.mirrors, rows.scratch);
+        let gamma = self.opts.consensus_step;
+        for e in 0..p {
+            rows.x[e] = gamma * rows.scratch[e] + (rows.x[e] - gamma * rows.mirror_self[e]);
+        }
+    }
+
+    fn grad_steps(&self) -> usize {
+        self.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::pair_fleet;
+    use super::super::AlgorithmKind;
+    use super::*;
+    use crate::compress::{Identity, TernGrad};
+    use crate::objective::ScalarQuadratic;
+    use std::sync::Arc;
+
+    fn pair_objectives() -> Vec<ObjectiveRef> {
+        vec![
+            Arc::new(ScalarQuadratic::new(4.0, 2.0)),
+            Arc::new(ScalarQuadratic::new(2.0, -3.0)),
+        ]
+    }
+
+    /// Exact diffusion's headline property: with lossless compression and
+    /// a constant step, the iterates reach the exact optimum x* = 1/3 —
+    /// no O(α) bias ball (contrast with DGD's fixed point ≈ 0.494 /
+    /// 0.012 for the same problem; see `algorithms::dgd` tests).
+    #[test]
+    fn identity_cedas_removes_constant_step_bias() {
+        let comp: CompressorRef = Arc::new(Identity::new());
+        let mut h = pair_fleet(
+            AlgorithmKind::Cedas(CedasOptions { consensus_step: 1.0, batch: 0 }),
+            &pair_objectives(),
+            Some(&comp),
+            StepSize::Constant(0.02),
+            0,
+        );
+        h.run(4000);
+        for i in 0..2 {
+            assert!(
+                (h.x(i) - 1.0 / 3.0).abs() < 1e-5,
+                "node {i}: x = {} (want the exact optimum 1/3)",
+                h.x(i)
+            );
+        }
+        assert_eq!(h.nodes[0].grad_steps(), 4000);
+    }
+
+    /// Damped gossip with a genuinely lossy relative compressor stays
+    /// stable and lands near the optimum. (TernGrad on scalar problems is
+    /// lossless, so a 2-dim diagonal-quadratic fixture is used via the
+    /// scenario pathway in `coordinator::scenario` tests; here the pair
+    /// fixture just checks the γ < 1 recursion is stable.)
+    #[test]
+    fn damped_cedas_converges_on_pair() {
+        let comp: CompressorRef = Arc::new(TernGrad::new());
+        let mut h = pair_fleet(
+            AlgorithmKind::Cedas(CedasOptions { consensus_step: 0.5, batch: 0 }),
+            &pair_objectives(),
+            Some(&comp),
+            StepSize::Constant(0.02),
+            3,
+        );
+        h.run(6000);
+        for i in 0..2 {
+            assert!(
+                (h.x(i) - 1.0 / 3.0).abs() < 0.05,
+                "node {i}: x = {}",
+                h.x(i)
+            );
+        }
+    }
+}

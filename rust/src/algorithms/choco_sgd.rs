@@ -1,0 +1,302 @@
+//! CHOCO-SGD (Koloskova, Stich, Jaggi — arXiv:1902.00340; the
+//! communication-overlapped variant of arXiv:1907.09356 Algorithm 1).
+//!
+//! Every node keeps a public estimate `x̂_i` of its own iterate, and
+//! every receiver keeps the same estimate of each neighbor (mirror-arena
+//! rows of the state plane, exactly the layout ADC-DGD uses). Each round
+//! the node transmits only the compressed *difference* against its own
+//! estimate, then performs the gossip step on the estimates together
+//! with a (mini)batch gradient step:
+//!
+//! ```text
+//! q_i^k   = C(x_i^k − x̂_i^k)                        (compressed difference)
+//! x̂_j^{k+1} = x̂_j^k + q_j^k                          (all j, self included)
+//! x_i^{k+1} = x_i^k + γ Σ_j W_ij (x̂_j^{k+1} − x̂_i^{k+1}) − α_k ∇F_i(x_i^k; ξ)
+//! ```
+//!
+//! `γ` is the consensus step size (smaller for harsher compression), and
+//! `∇F(·; ξ)` is the minibatch gradient drawn through the node's
+//! [`SampleOracle`] when the objective is stochastic
+//! ([`crate::objective::Objective::as_stochastic`]); with `batch = 0`
+//! (full shard) or a deterministic objective the node takes exact
+//! gradients and draws nothing — CHOCO-GD.
+//!
+//! ## DGD reduction (bit-exact)
+//!
+//! With zero compression error (identity operator) the estimates track
+//! the iterates exactly, and with `γ = 1` the update collapses to
+//! `x^{k+1} = Σ_j W_ij x_j^k − α_k ∇f_i(x_i^k)` — plain DGD. The update
+//! kernel groups the arithmetic as
+//! `x ← (γ·(Wx̂)_i + (x − γ·x̂_i)) − α·g` so that this reduction holds to
+//! **f64 bit-exactness**: at `γ = 1` with `x̂_i == x_i` the parenthesized
+//! correction is exactly `+0.0` and the expression rounds identically to
+//! DGD's `add_scaled(mix, −α, g)`. The gossip reduction itself reuses
+//! [`CsrWeights::mix_row_into`] (diagonal first, ascending neighbors) —
+//! the same bit-identity-critical order as the rest of the family.
+//!
+//! Message loss leaves a receiver's estimate of the sender stale (CHOCO
+//! assumes reliable links); like ADC-DGD's mirrors, the estimates simply
+//! lag and the gossip degrades gracefully rather than diverging.
+
+use super::{CompressorRef, NodeLogic, ObjectiveRef, Outgoing, StepSize};
+use crate::compress::PayloadPool;
+use crate::consensus::CsrWeights;
+use crate::linalg::vecops;
+use crate::network::InboxView;
+use crate::rng::Xoshiro256pp;
+use crate::state::NodeRows;
+use crate::stochastic::SampleOracle;
+use std::sync::Arc;
+
+/// CHOCO-SGD hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ChocoSgdOptions {
+    /// Consensus step size γ ∈ (0, 1]; `1` recovers uncompressed gossip,
+    /// smaller values damp harsher compression noise.
+    pub consensus_step: f64,
+    /// Minibatch size per gradient step; `0` (or ≥ shard size) takes the
+    /// deterministic full-shard gradient.
+    pub batch: usize,
+}
+
+impl Default for ChocoSgdOptions {
+    fn default() -> Self {
+        Self { consensus_step: 0.5, batch: 0 }
+    }
+}
+
+/// Per-node CHOCO-SGD logic. The iterate, own estimate `x̂_i`
+/// (`mirror_self` row), and neighbor estimates (mirror arena) live in
+/// the run's state plane; the node holds only scalars, its sample
+/// oracle, and a reused index buffer.
+pub struct ChocoSgdNode {
+    id: usize,
+    weights: Arc<CsrWeights>,
+    objective: ObjectiveRef,
+    compressor: CompressorRef,
+    step: StepSize,
+    opts: ChocoSgdOptions,
+    steps: usize,
+    /// Lazily seeded from the node's RNG stream on the first stochastic
+    /// gradient (deterministic and engine-invariant; full-batch runs
+    /// never create it and never draw).
+    oracle: Option<SampleOracle>,
+    /// Reused minibatch index block.
+    idx: Vec<usize>,
+}
+
+impl ChocoSgdNode {
+    /// Create node `id` over the shared CSR weights, objective, and
+    /// compression operator.
+    pub fn new(
+        id: usize,
+        weights: Arc<CsrWeights>,
+        objective: ObjectiveRef,
+        compressor: CompressorRef,
+        step: StepSize,
+        opts: ChocoSgdOptions,
+    ) -> Self {
+        assert!(
+            opts.consensus_step > 0.0 && opts.consensus_step <= 1.0,
+            "consensus step must lie in (0, 1]"
+        );
+        Self {
+            id,
+            weights,
+            objective,
+            compressor,
+            step,
+            opts,
+            steps: 0,
+            oracle: None,
+            idx: Vec::new(),
+        }
+    }
+}
+
+/// Fill `grad` with the node's (mini)batch gradient at `x`: a seeded
+/// oracle block through `minibatch_grad_into` when the objective is
+/// stochastic and the batch is partial, the exact full gradient
+/// otherwise (drawing nothing). Shared by CHOCO-SGD and CEDAS.
+pub(crate) fn stochastic_grad_into(
+    objective: &ObjectiveRef,
+    batch: usize,
+    oracle: &mut Option<SampleOracle>,
+    idx: &mut Vec<usize>,
+    x: &[f64],
+    grad: &mut [f64],
+    rng: &mut Xoshiro256pp,
+) {
+    if let Some(sto) = objective.as_stochastic() {
+        let m = sto.num_samples();
+        let b = if batch == 0 { m } else { batch.min(m) };
+        if b < m {
+            if oracle.is_none() {
+                *oracle = Some(SampleOracle::new(m, b, rng.next_u64()));
+            }
+            let oracle = oracle.as_mut().expect("just seeded");
+            oracle.next_block(idx);
+            sto.minibatch_grad_into(x, idx, grad);
+            return;
+        }
+    }
+    objective.grad_into(x, grad);
+}
+
+impl NodeLogic for ChocoSgdNode {
+    fn make_message(
+        &mut self,
+        _round: usize,
+        rows: &mut NodeRows<'_>,
+        rng: &mut Xoshiro256pp,
+        pool: &mut PayloadPool,
+    ) -> Outgoing {
+        // q_k = C(x_k − x̂_k): compressed difference against the node's
+        // own public estimate.
+        vecops::sub(rows.x, rows.mirror_self, rows.scratch);
+        let tx_magnitude = vecops::norm_inf(rows.scratch);
+        let (payload, saturated) = pool.encode(&*self.compressor, rows.scratch, rng);
+        // Integrate the own estimate with the *same realization*
+        // receivers apply: x̂ ← x̂ + decode(q).
+        payload.decode_axpy(1.0, rows.mirror_self);
+        Outgoing { payload, tx_magnitude, saturated }
+    }
+
+    fn consume(
+        &mut self,
+        round: usize,
+        inbox: &InboxView<'_>,
+        rows: &mut NodeRows<'_>,
+        rng: &mut Xoshiro256pp,
+    ) {
+        // Update neighbor estimates from their differences (a message's
+        // slot is its mirror slot; absent messages leave the estimate
+        // stale).
+        let p = rows.p;
+        for m in inbox.iter() {
+            m.payload.decode_axpy(1.0, &mut rows.mirrors[m.slot * p..(m.slot + 1) * p]);
+        }
+        // Gossip reduction over the estimates: scratch = (W x̂)_i with
+        // the family's fixed diagonal-first ascending order.
+        self.weights.mix_row_into(self.id, rows.mirror_self, rows.mirrors, rows.scratch);
+        // (Mini)batch gradient at the current iterate.
+        stochastic_grad_into(
+            &self.objective,
+            self.opts.batch,
+            &mut self.oracle,
+            &mut self.idx,
+            rows.x,
+            rows.grad,
+            rng,
+        );
+        let gamma = self.opts.consensus_step;
+        let alpha = self.step.at(round);
+        // x ← (γ·(Wx̂)_i + (x − γ·x̂_i)) − α·g. The grouping makes the
+        // γ = 1 + exact-tracking case round exactly like DGD's
+        // add_scaled(mix, −α, g) (module docs).
+        for e in 0..p {
+            let v = gamma * rows.scratch[e] + (rows.x[e] - gamma * rows.mirror_self[e]);
+            rows.x[e] = v + (-alpha) * rows.grad[e];
+        }
+        self.steps += 1;
+    }
+
+    fn grad_steps(&self) -> usize {
+        self.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::pair_fleet;
+    use super::super::AlgorithmKind;
+    use super::*;
+    use crate::compress::{Identity, RandomizedRounding};
+    use crate::objective::ScalarQuadratic;
+    use std::sync::Arc;
+
+    fn pair_objectives() -> Vec<ObjectiveRef> {
+        vec![
+            Arc::new(ScalarQuadratic::new(4.0, 2.0)),
+            Arc::new(ScalarQuadratic::new(2.0, -3.0)),
+        ]
+    }
+
+    /// The documented DGD reduction, hand-driven: γ = 1 with the
+    /// identity operator must reproduce DGD's trajectory bit-for-bit.
+    ///
+    /// Positive-center objectives keep the from-zero trajectory monotone
+    /// and sign-stable, so the estimate's `x̂ += fl(x − x̂)` tracking is
+    /// exact by Sterbenz's lemma every round (at a zero crossing the
+    /// subtraction may round and exactness would be probabilistic only).
+    #[test]
+    fn identity_gamma_one_equals_dgd_bitwise() {
+        let objectives: Vec<ObjectiveRef> = vec![
+            Arc::new(ScalarQuadratic::new(4.0, 2.0)),
+            Arc::new(ScalarQuadratic::new(2.0, 3.0)),
+        ];
+        let comp: CompressorRef = Arc::new(Identity::new());
+        let step = StepSize::Constant(0.02);
+        let mut choco = pair_fleet(
+            AlgorithmKind::ChocoSgd(ChocoSgdOptions { consensus_step: 1.0, batch: 0 }),
+            &objectives,
+            Some(&comp),
+            step,
+            0,
+        );
+        let mut dgd = pair_fleet(AlgorithmKind::Dgd, &objectives, None, step, 0);
+        for k in 1..=500 {
+            choco.step(k);
+            dgd.step(k);
+            for i in 0..2 {
+                assert_eq!(
+                    choco.x(i).to_bits(),
+                    dgd.x(i).to_bits(),
+                    "node {i} diverged at round {k}: {} vs {}",
+                    choco.x(i),
+                    dgd.x(i)
+                );
+            }
+        }
+        assert_eq!(choco.nodes[0].grad_steps(), 500);
+    }
+
+    /// Damped gossip (γ = ½) with lossless compression still converges
+    /// to a neighborhood of the DGD fixed point.
+    #[test]
+    fn damped_identity_gossip_converges() {
+        let comp: CompressorRef = Arc::new(Identity::new());
+        let mut h = pair_fleet(
+            AlgorithmKind::ChocoSgd(ChocoSgdOptions { consensus_step: 0.5, batch: 0 }),
+            &pair_objectives(),
+            Some(&comp),
+            StepSize::Constant(0.02),
+            1,
+        );
+        h.run(5000);
+        for i in 0..2 {
+            assert!((h.x(i) - 1.0 / 3.0).abs() < 0.5, "x = {}", h.x(i));
+        }
+        assert!((h.x(0) - h.x(1)).abs() < 0.2, "consensus gap too wide");
+    }
+
+    /// Quantized differences with a damped consensus step stay bounded
+    /// and hover near the optimum (randomized rounding injects O(1)
+    /// noise per message, so the ball is loose).
+    #[test]
+    fn quantized_choco_stays_in_a_ball() {
+        let comp: CompressorRef = Arc::new(RandomizedRounding::new());
+        let mut h = pair_fleet(
+            AlgorithmKind::ChocoSgd(ChocoSgdOptions { consensus_step: 0.2, batch: 0 }),
+            &pair_objectives(),
+            Some(&comp),
+            StepSize::Diminishing { alpha0: 0.05, eta: 0.6 },
+            2,
+        );
+        h.run(8000);
+        for i in 0..2 {
+            assert!(h.x(i).is_finite());
+            assert!((h.x(i) - 1.0 / 3.0).abs() < 1.5, "x = {}", h.x(i));
+        }
+    }
+}

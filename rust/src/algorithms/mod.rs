@@ -26,6 +26,13 @@
 //!   amplified-differential compression.
 //! * [`QdgdNode`] — QDGD-style baseline (Reisizadeh et al. 2018):
 //!   quantized neighbors with a damped mixing step.
+//! * [`ChocoSgdNode`] — CHOCO-SGD (Koloskova et al. 2019/2020):
+//!   *stochastic* compressed-difference gossip over the estimate rows of
+//!   the mirror arena, minibatches drawn through the stochastic plane
+//!   ([`crate::stochastic`]).
+//! * [`CedasNode`] — CEDAS-style compressed exact diffusion (Huang & Pu
+//!   2023): removes the constant-step bias via the `ψ` correction kept
+//!   in the plane's `aux` row, with CHOCO-style difference compression.
 //!
 //! Node construction for the whole family is centralized in the
 //! [`AlgorithmKind`] registry; there is exactly one execution pathway —
@@ -39,6 +46,8 @@
 //! on the encode side (see the encode-plane notes in [`crate::compress`]).
 
 mod adc_dgd;
+mod cedas;
+mod choco_sgd;
 mod dgd;
 mod dgd_t;
 mod naive_cdgd;
@@ -46,6 +55,8 @@ mod qdgd;
 mod registry;
 
 pub use adc_dgd::{AdcDgdNode, AdcDgdOptions};
+pub use cedas::{CedasNode, CedasOptions};
+pub use choco_sgd::{ChocoSgdNode, ChocoSgdOptions};
 pub use dgd::DgdNode;
 pub use dgd_t::DgdTNode;
 pub use naive_cdgd::NaiveCompressedNode;

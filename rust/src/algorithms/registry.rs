@@ -12,8 +12,9 @@
 //! constructors.
 
 use super::{
-    AdcDgdNode, AdcDgdOptions, CompressorRef, DgdNode, DgdTNode, NaiveCompressedNode, NodeLogic,
-    ObjectiveRef, QdgdNode, QdgdOptions, StepSize,
+    AdcDgdNode, AdcDgdOptions, CedasNode, CedasOptions, ChocoSgdNode, ChocoSgdOptions,
+    CompressorRef, DgdNode, DgdTNode, NaiveCompressedNode, NodeLogic, ObjectiveRef, QdgdNode,
+    QdgdOptions, StepSize,
 };
 use crate::consensus::{ConsensusMatrix, CsrWeights};
 use crate::state::{PlaneLayout, StatePlane};
@@ -47,6 +48,13 @@ pub enum AlgorithmKind {
     AdcDgd(AdcDgdOptions),
     /// QDGD-style baseline (Reisizadeh et al. 2018).
     Qdgd(QdgdOptions),
+    /// CHOCO-SGD (Koloskova et al. 2019/2020): stochastic
+    /// compressed-difference gossip over estimate rows in the mirror
+    /// arena; minibatches through the stochastic plane.
+    ChocoSgd(ChocoSgdOptions),
+    /// CEDAS-style compressed exact diffusion (Huang & Pu 2023):
+    /// bias-free constant-step updates via the `aux`-row `ψ` correction.
+    Cedas(CedasOptions),
 }
 
 impl AlgorithmKind {
@@ -58,6 +66,8 @@ impl AlgorithmKind {
             AlgorithmKind::NaiveCompressed => "naive",
             AlgorithmKind::AdcDgd(_) => "adc",
             AlgorithmKind::Qdgd(_) => "qdgd",
+            AlgorithmKind::ChocoSgd(_) => "choco",
+            AlgorithmKind::Cedas(_) => "cedas",
         }
     }
 
@@ -66,14 +76,27 @@ impl AlgorithmKind {
     pub fn needs_compressor(&self) -> bool {
         matches!(
             self,
-            AlgorithmKind::NaiveCompressed | AlgorithmKind::AdcDgd(_) | AlgorithmKind::Qdgd(_)
+            AlgorithmKind::NaiveCompressed
+                | AlgorithmKind::AdcDgd(_)
+                | AlgorithmKind::Qdgd(_)
+                | AlgorithmKind::ChocoSgd(_)
+                | AlgorithmKind::Cedas(_)
         )
     }
 
     /// Does this algorithm keep mirror estimates (and therefore need the
     /// plane's mirror arenas)?
     pub fn needs_mirrors(&self) -> bool {
-        matches!(self, AlgorithmKind::AdcDgd(_))
+        matches!(
+            self,
+            AlgorithmKind::AdcDgd(_) | AlgorithmKind::ChocoSgd(_) | AlgorithmKind::Cedas(_)
+        )
+    }
+
+    /// Does this algorithm carry a second persistent per-node row (and
+    /// therefore need the plane's `aux` arena)?
+    pub fn needs_aux(&self) -> bool {
+        matches!(self, AlgorithmKind::Cedas(_))
     }
 
     /// Engine rounds consumed per gradient iteration (1 for everything
@@ -85,15 +108,33 @@ impl AlgorithmKind {
         }
     }
 
-    /// Parse a CLI algorithm name (`adc|dgd|dgdt|naive|qdgd`), binding
-    /// the relevant hyper-parameters.
-    pub fn parse(name: &str, t: usize, gamma: f64) -> Result<Self, String> {
+    /// Parse a CLI algorithm name (`adc|dgd|dgdt|naive|qdgd|choco|cedas`),
+    /// binding the relevant hyper-parameters: `t` is DGD^t's exchange
+    /// count, `gamma` is ADC-DGD's amplification exponent *or* the
+    /// consensus step size of the stochastic family, and `batch` is the
+    /// stochastic minibatch size (`0` = full shard).
+    pub fn parse(name: &str, t: usize, gamma: f64, batch: usize) -> Result<Self, String> {
         Ok(match name {
             "adc" => AlgorithmKind::AdcDgd(AdcDgdOptions { gamma }),
             "dgd" => AlgorithmKind::Dgd,
             "dgdt" => AlgorithmKind::DgdT { t },
             "naive" => AlgorithmKind::NaiveCompressed,
             "qdgd" => AlgorithmKind::Qdgd(QdgdOptions::default()),
+            "choco" | "cedas" => {
+                // Validate here so the CLI reports a clean error instead
+                // of hitting the node constructors' assert.
+                if !(gamma > 0.0 && gamma <= 1.0) {
+                    return Err(format!(
+                        "{name} consensus step γ must lie in (0, 1], got {gamma} \
+                         (--gamma doubles as γ for the stochastic family)"
+                    ));
+                }
+                if name == "choco" {
+                    AlgorithmKind::ChocoSgd(ChocoSgdOptions { consensus_step: gamma, batch })
+                } else {
+                    AlgorithmKind::Cedas(CedasOptions { consensus_step: gamma, batch })
+                }
+            }
             other => return Err(format!("unknown algorithm {other}")),
         })
     }
@@ -126,6 +167,12 @@ impl AlgorithmKind {
                 Box::new(AdcDgdNode::new(i, w, obj, comp(), step, *opts))
             }
             AlgorithmKind::Qdgd(opts) => Box::new(QdgdNode::new(i, w, obj, comp(), step, *opts)),
+            AlgorithmKind::ChocoSgd(opts) => {
+                Box::new(ChocoSgdNode::new(i, w, obj, comp(), step, *opts))
+            }
+            AlgorithmKind::Cedas(opts) => {
+                Box::new(CedasNode::new(i, w, obj, comp(), step, *opts))
+            }
         }
     }
 
@@ -133,7 +180,9 @@ impl AlgorithmKind {
     /// `init` overrides everything; otherwise ADC-DGD applies the
     /// paper's `x_{i,1} = −α₁ ∇f_i(0)` and the rest start at zero.
     /// Mirrors always start at zero, so a receiver's first differential
-    /// bootstraps consistently even under an `init` override.
+    /// bootstraps consistently even under an `init` override. Aux
+    /// layouts (CEDAS) additionally seed `aux` with the initial iterate
+    /// (the `ψ⁰ = x⁰` exact-diffusion convention).
     fn init_plane(
         &self,
         plane: &mut StatePlane,
@@ -146,9 +195,7 @@ impl AlgorithmKind {
             for i in 0..plane.n() {
                 plane.x_row_mut(i).copy_from_slice(x0);
             }
-            return;
-        }
-        if let AlgorithmKind::AdcDgd(_) = self {
+        } else if let AlgorithmKind::AdcDgd(_) = self {
             let zero = vec![0.0; p];
             let mut g0 = vec![0.0; p];
             let alpha1 = step.at(1);
@@ -158,6 +205,9 @@ impl AlgorithmKind {
                     *x = -alpha1 * g;
                 }
             }
+        }
+        if plane.has_aux() {
+            plane.seed_aux_from_x();
         }
     }
 
@@ -185,11 +235,14 @@ impl AlgorithmKind {
             assert_eq!(x0.len(), p, "init dim mismatch");
         }
         let weights = Arc::new(CsrWeights::from_consensus(w, graph));
-        let layout = if self.needs_mirrors() {
+        let mut layout = if self.needs_mirrors() {
             PlaneLayout::with_mirrors(n, p, (0..n).map(|i| graph.degree(i)).collect())
         } else {
             PlaneLayout::dense(n, p)
         };
+        if self.needs_aux() {
+            layout = layout.with_aux();
+        }
         let mut plane = StatePlane::new(&layout);
         self.init_plane(&mut plane, objectives, step, init);
         let nodes = (0..n)
@@ -215,13 +268,15 @@ mod tests {
         (g, w, objs)
     }
 
-    fn all_kinds() -> [AlgorithmKind; 5] {
+    fn all_kinds() -> [AlgorithmKind; 7] {
         [
             AlgorithmKind::Dgd,
             AlgorithmKind::DgdT { t: 3 },
             AlgorithmKind::NaiveCompressed,
             AlgorithmKind::AdcDgd(AdcDgdOptions::default()),
             AlgorithmKind::Qdgd(QdgdOptions::default()),
+            AlgorithmKind::ChocoSgd(ChocoSgdOptions::default()),
+            AlgorithmKind::Cedas(CedasOptions::default()),
         ]
     }
 
@@ -235,6 +290,7 @@ mod tests {
             assert_eq!(fleet.plane.n(), 4, "{}", kind.name());
             assert_eq!(fleet.plane.p(), 1, "{}", kind.name());
             assert_eq!(fleet.plane.has_mirrors(), kind.needs_mirrors(), "{}", kind.name());
+            assert_eq!(fleet.plane.has_aux(), kind.needs_aux(), "{}", kind.name());
         }
     }
 
@@ -294,10 +350,25 @@ mod tests {
     fn metadata_helpers() {
         assert!(AlgorithmKind::AdcDgd(AdcDgdOptions::default()).needs_compressor());
         assert!(AlgorithmKind::AdcDgd(AdcDgdOptions::default()).needs_mirrors());
+        assert!(!AlgorithmKind::AdcDgd(AdcDgdOptions::default()).needs_aux());
         assert!(!AlgorithmKind::Dgd.needs_compressor());
         assert!(!AlgorithmKind::Dgd.needs_mirrors());
+        let choco = AlgorithmKind::ChocoSgd(ChocoSgdOptions::default());
+        assert!(choco.needs_compressor() && choco.needs_mirrors() && !choco.needs_aux());
+        let cedas = AlgorithmKind::Cedas(CedasOptions::default());
+        assert!(cedas.needs_compressor() && cedas.needs_mirrors() && cedas.needs_aux());
         assert_eq!(AlgorithmKind::DgdT { t: 5 }.rounds_per_grad_step(), 5);
-        assert_eq!(AlgorithmKind::parse("adc", 3, 1.0).unwrap().name(), "adc");
-        assert!(AlgorithmKind::parse("nope", 1, 1.0).is_err());
+        assert_eq!(AlgorithmKind::parse("adc", 3, 1.0, 0).unwrap().name(), "adc");
+        match AlgorithmKind::parse("choco", 3, 0.4, 8).unwrap() {
+            AlgorithmKind::ChocoSgd(opts) => {
+                assert_eq!(opts.consensus_step, 0.4);
+                assert_eq!(opts.batch, 8);
+            }
+            other => panic!("parsed {}", other.name()),
+        }
+        assert_eq!(AlgorithmKind::parse("cedas", 3, 0.5, 4).unwrap().name(), "cedas");
+        assert!(AlgorithmKind::parse("choco", 3, 1.5, 0).is_err(), "γ > 1 must be rejected");
+        assert!(AlgorithmKind::parse("cedas", 3, 0.0, 0).is_err(), "γ = 0 must be rejected");
+        assert!(AlgorithmKind::parse("nope", 1, 1.0, 0).is_err());
     }
 }

@@ -28,6 +28,14 @@ pub struct RunOutput {
     /// before being consumed (nonzero only when the link model gives
     /// different payload sizes different delivery delays).
     pub superseded_messages: usize,
+    /// Payload cells created by `Arc::new` across every engine payload
+    /// pool (summed over worker/shard pools on the parallel engines).
+    /// The encode plane recycles cells once receivers clear their slots,
+    /// so this stays at the warm-up pipeline depth — `O(nodes)`, never
+    /// `O(nodes × rounds)` — making pool-recycling health observable
+    /// outside the benches (see
+    /// [`crate::compress::PayloadPool::fresh_cells`]).
+    pub fresh_payload_cells: usize,
     /// Simulated network seconds elapsed.
     pub sim_seconds: f64,
 }
@@ -139,7 +147,7 @@ pub fn run_fleet(
     match cfg.engine {
         EngineKind::Sequential => {
             let mut bus = bus;
-            let completed = sequential::run(
+            let (completed, fresh_payload_cells) = sequential::run(
                 &mut nodes,
                 &mut plane,
                 &mut rngs,
@@ -169,12 +177,13 @@ pub fn run_fleet(
                 total_bytes: bus.total_bytes(),
                 dropped_messages: bus.total_dropped(),
                 superseded_messages: bus.total_superseded(),
+                fresh_payload_cells,
                 sim_seconds: bus.sim_clock(),
                 metrics,
             }
         }
         EngineKind::Threaded => {
-            let (_nodes, bus, completed) =
+            let (_nodes, bus, completed, fresh_payload_cells) =
                 threaded::run(nodes, &mut plane, rngs, bus, total_rounds, |telem, snap, b| {
                     if helper.should_record(&telem, total_rounds) {
                         let states: Vec<&[f64]> =
@@ -199,6 +208,7 @@ pub fn run_fleet(
                 total_bytes: bus.total_bytes(),
                 dropped_messages: bus.total_dropped(),
                 superseded_messages: bus.total_superseded(),
+                fresh_payload_cells,
                 sim_seconds: bus.sim_clock(),
                 metrics,
             }
@@ -210,7 +220,7 @@ pub fn run_fleet(
             let want_cfg = *cfg;
             let want =
                 move |round: usize| round_is_recorded(&want_cfg, round, total_rounds);
-            let (_nodes, bus, completed) = pool::run(
+            let (_nodes, bus, completed, fresh_payload_cells) = pool::run(
                 nodes,
                 &mut plane,
                 rngs,
@@ -239,6 +249,7 @@ pub fn run_fleet(
                 total_bytes: bus.total_bytes(),
                 dropped_messages: bus.total_dropped(),
                 superseded_messages: bus.total_superseded(),
+                fresh_payload_cells,
                 sim_seconds: bus.sim_clock(),
                 metrics,
             }
@@ -313,6 +324,12 @@ mod tests {
         let first = out.metrics.grad_norm[0];
         assert!(last < first, "grad norm should decrease: {first} -> {last}");
         assert!(out.total_bytes > 0);
+        // Pool-recycling health: warm-up cells only, not O(rounds).
+        assert!(
+            out.fresh_payload_cells > 0 && out.fresh_payload_cells <= 8,
+            "fresh cells: {}",
+            out.fresh_payload_cells
+        );
     }
 
     #[test]

@@ -47,8 +47,10 @@ pub fn effective_workers(workers: usize, n: usize) -> usize {
 /// `workers == 0` selects the available-parallelism default. The
 /// observer runs on the coordinating thread, but only on rounds where
 /// `want_observe(round)` is true; it may return `false` to stop early.
-/// Final iterates live in `plane`; returns (nodes, bus, completed)
-/// with nodes in their original order.
+/// Final iterates live in `plane`; returns (nodes, bus, completed,
+/// fresh_payload_cells) with nodes in their original order — the last
+/// component sums [`PayloadPool::fresh_cells`] over the per-shard pools
+/// (the run-level pool-recycling health signal).
 #[allow(clippy::type_complexity, clippy::too_many_arguments)]
 pub fn run<F, P>(
     mut nodes: Vec<Box<dyn NodeLogic>>,
@@ -59,7 +61,7 @@ pub fn run<F, P>(
     workers: usize,
     want_observe: P,
     mut observer: F,
-) -> (Vec<Box<dyn NodeLogic>>, Bus, usize)
+) -> (Vec<Box<dyn NodeLogic>>, Bus, usize, usize)
 where
     F: FnMut(RoundTelemetry, &Snapshot, &Bus) -> bool,
     P: Fn(usize) -> bool + Sync,
@@ -69,7 +71,7 @@ where
     assert_eq!(plane.n(), n);
     assert_eq!(bus.n(), n);
     if n == 0 {
-        return (nodes, bus, 0);
+        return (nodes, bus, 0, 0);
     }
 
     // Contiguous shards: worker w owns nodes [w*chunk, (w+1)*chunk).
@@ -105,7 +107,7 @@ where
     let state_slots: Vec<Mutex<(Vec<f64>, usize)>> =
         (0..n).map(|_| Mutex::new((Vec::new(), 0))).collect();
 
-    let mut out_shards: Vec<Vec<(usize, Box<dyn NodeLogic>, Xoshiro256pp)>> = Vec::new();
+    let mut out_shards: Vec<(Vec<(usize, Box<dyn NodeLogic>, Xoshiro256pp)>, usize)> = Vec::new();
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(nw);
         let iter = shards.drain(..).zip(plane_shards);
@@ -193,7 +195,7 @@ where
                         break;
                     }
                 }
-                shard
+                (shard, pool.fresh_cells())
             }));
         }
 
@@ -244,7 +246,9 @@ where
 
     // Shards are contiguous and joined in worker order, so concatenation
     // restores the original node order.
-    for shard in out_shards {
+    let mut fresh_cells = 0usize;
+    for (shard, fresh) in out_shards {
+        fresh_cells += fresh;
         for (i, node, rng) in shard {
             debug_assert_eq!(i, nodes.len());
             nodes.push(node);
@@ -253,7 +257,7 @@ where
     }
 
     let completed = completed.load(Ordering::SeqCst);
-    (nodes, bus.into_inner().unwrap(), completed)
+    (nodes, bus.into_inner().unwrap(), completed, fresh_cells)
 }
 
 #[cfg(test)]
@@ -296,7 +300,7 @@ mod tests {
         let rounds = 200;
         // Sequential reference.
         let (mut sfleet, mut srngs, mut sbus) = ring_fleet(n);
-        let done = crate::engine::sequential::run(
+        let (done, _fresh) = crate::engine::sequential::run(
             &mut sfleet.nodes,
             &mut sfleet.plane,
             &mut srngs,
@@ -307,7 +311,7 @@ mod tests {
         assert_eq!(done, rounds);
         // Pool with a worker count that does not divide n evenly.
         let (mut pfleet, prngs, pbus) = ring_fleet(n);
-        let (_pnodes, pbus, completed) = run(
+        let (_pnodes, pbus, completed, fresh) = run(
             pfleet.nodes,
             &mut pfleet.plane,
             prngs,
@@ -318,6 +322,7 @@ mod tests {
             |_t, _s, _b| true,
         );
         assert_eq!(completed, rounds);
+        assert!(fresh >= 3, "each shard pool creates at least one cell: {fresh}");
         assert_eq!(pbus.total_bytes(), sbus.total_bytes());
         assert_eq!(sfleet.plane.states(), pfleet.plane.states());
     }
@@ -325,7 +330,7 @@ mod tests {
     #[test]
     fn pool_early_stop_via_observer() {
         let (mut fleet, rngs, bus) = ring_fleet(6);
-        let (_nodes, _bus, completed) = run(
+        let (_nodes, _bus, completed, _fresh) = run(
             fleet.nodes,
             &mut fleet.plane,
             rngs,
@@ -342,7 +347,7 @@ mod tests {
     fn pool_observer_skipping_rounds_still_completes() {
         let (mut fleet, rngs, bus) = ring_fleet(5);
         let mut observed = Vec::new();
-        let (_nodes, _bus, completed) = run(
+        let (_nodes, _bus, completed, _fresh) = run(
             fleet.nodes,
             &mut fleet.plane,
             rngs,

@@ -18,6 +18,12 @@ use crate::state::StatePlane;
 /// (or the in-flight ring when the link defers arrival), and every node
 /// consumes its slot-addressed inbox view. The observer may return
 /// `false` to stop early (convergence criterion).
+///
+/// Returns `(completed_rounds, fresh_payload_cells)` — the second
+/// component is the engine pool's [`PayloadPool::fresh_cells`] count
+/// (cells created by `Arc::new`; stops growing once warm-up covers the
+/// pipeline depth, so it is the run-level pool-recycling health signal
+/// surfaced as `RunOutput::fresh_payload_cells`).
 pub fn run<F>(
     nodes: &mut [Box<dyn NodeLogic>],
     plane: &mut StatePlane,
@@ -25,7 +31,7 @@ pub fn run<F>(
     bus: &mut Bus,
     rounds: usize,
     mut observer: F,
-) -> usize
+) -> (usize, usize)
 where
     F: FnMut(RoundTelemetry, &[Box<dyn NodeLogic>], &StatePlane, &Bus) -> bool,
 {
@@ -75,7 +81,7 @@ where
             break;
         }
     }
-    completed
+    (completed, pool.fresh_cells())
 }
 
 #[cfg(test)]
@@ -109,7 +115,7 @@ mod tests {
     #[test]
     fn engine_runs_dgd_to_consensus() {
         let (mut fleet, mut rngs, mut bus) = pair_fleet();
-        let completed = run(
+        let (completed, fresh_cells) = run(
             &mut fleet.nodes,
             &mut fleet.plane,
             &mut rngs,
@@ -118,6 +124,9 @@ mod tests {
             |_t, _n, _p, _b| true,
         );
         assert_eq!(completed, 1000);
+        // Warm-up creates a handful of pooled cells; steady state reuses
+        // them, so the count stays at the pipeline depth (not O(rounds)).
+        assert!(fresh_cells > 0 && fresh_cells <= 8, "fresh cells: {fresh_cells}");
         // Centers ±2 with equal curvature ⇒ optimum 0; the constant-step
         // DGD fixed point is symmetric: x₁ = −x₂ = 0.32/1.16 ≈ 0.2759.
         let (x1, x2) = (fleet.plane.x_row(0)[0], fleet.plane.x_row(1)[0]);
@@ -130,7 +139,7 @@ mod tests {
     #[test]
     fn observer_can_stop_early() {
         let (mut fleet, mut rngs, mut bus) = pair_fleet();
-        let completed = run(
+        let (completed, _fresh) = run(
             &mut fleet.nodes,
             &mut fleet.plane,
             &mut rngs,

@@ -24,7 +24,9 @@ use std::sync::{Arc, Barrier, Mutex};
 /// Run `rounds` barrier-synchronized rounds with one thread per node.
 /// The observer runs on the coordinating thread between rounds and may
 /// return `false` to stop. Final iterates live in `plane`; returns
-/// (nodes, bus, completed_rounds).
+/// (nodes, bus, completed_rounds, fresh_payload_cells) — the last
+/// component sums [`PayloadPool::fresh_cells`] over every per-node
+/// thread pool (the run-level pool-recycling health signal).
 #[allow(clippy::type_complexity)]
 pub fn run<F>(
     mut nodes: Vec<Box<dyn NodeLogic>>,
@@ -33,7 +35,7 @@ pub fn run<F>(
     bus: Bus,
     rounds: usize,
     mut observer: F,
-) -> (Vec<Box<dyn NodeLogic>>, Bus, usize)
+) -> (Vec<Box<dyn NodeLogic>>, Bus, usize, usize)
 where
     F: FnMut(RoundTelemetry, &Snapshot, &Bus) -> bool,
 {
@@ -42,7 +44,7 @@ where
     assert_eq!(plane.n(), n);
     assert_eq!(bus.n(), n);
     if n == 0 {
-        return (nodes, bus, 0);
+        return (nodes, bus, 0, 0);
     }
 
     // One single-node shard per thread.
@@ -68,6 +70,7 @@ where
     let state_slots: Vec<Mutex<(Vec<f64>, usize)>> =
         (0..n).map(|_| Mutex::new((Vec::new(), 0))).collect();
 
+    let mut fresh_cells = 0usize;
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(n);
         let iter = nodes.drain(..).zip(rngs.drain(..)).zip(shards);
@@ -134,7 +137,7 @@ where
                         break;
                     }
                 }
-                (node, rng)
+                (node, rng, pool.fresh_cells())
             }));
         }
 
@@ -178,17 +181,20 @@ where
 
         let mut out_nodes = Vec::with_capacity(n);
         let mut out_rngs = Vec::with_capacity(n);
+        let mut cells = 0usize;
         for h in handles {
-            let (node, rng) = h.join().expect("node thread panicked");
+            let (node, rng, fresh) = h.join().expect("node thread panicked");
             out_nodes.push(node);
             out_rngs.push(rng);
+            cells += fresh;
         }
         nodes = out_nodes;
         rngs = out_rngs;
+        fresh_cells = cells;
     });
 
     let completed = completed.load(Ordering::SeqCst);
-    (nodes, bus.into_inner().unwrap(), completed)
+    (nodes, bus.into_inner().unwrap(), completed, fresh_cells)
 }
 
 #[cfg(test)]
@@ -216,10 +222,11 @@ mod tests {
         let rngs: Vec<Xoshiro256pp> =
             (0..2).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
         let bus = Bus::new(&g, LinkModel::default(), 0);
-        let (_nodes, bus, completed) =
+        let (_nodes, bus, completed, fresh) =
             run(fleet.nodes, &mut fleet.plane, rngs, bus, n_iters, |t, _s, _b| {
                 stop_at.map(|s| t.round < s).unwrap_or(true)
             });
+        assert!(fresh >= 2, "per-thread pools must report their cells: {fresh}");
         (fleet.plane.states(), completed, bus.total_bytes())
     }
 

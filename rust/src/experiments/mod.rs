@@ -2,8 +2,11 @@
 //!
 //! Each submodule regenerates one figure of the paper's §V (there are no
 //! numbered tables): it returns the exact series the paper plots, which
-//! the bench binaries print and EXPERIMENTS.md records. See DESIGN.md §4
-//! for the experiment index.
+//! the bench binaries print and EXPERIMENTS.md records. Beyond the
+//! paper: [`delayed`] sweeps the staleness axis and [`stochastic`] runs
+//! the bytes-to-accuracy comparison of ADC-DGD against the stochastic
+//! compressed-consensus family (CHOCO-SGD, CEDAS) — `run --exp
+//! stochastic` in the CLI. See DESIGN.md §4 for the experiment index.
 
 pub mod ablations;
 pub mod delayed;
@@ -14,6 +17,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod phase_transition;
+pub mod stochastic;
 
 use crate::algorithms::ObjectiveRef;
 use crate::metrics::MetricSeries;

@@ -9,8 +9,10 @@
 //! * **rust coordinator** (this crate): the decentralized-consensus
 //!   runtime — topologies, consensus matrices, compression operators with
 //!   exact wire-byte accounting, the algorithm family (DGD, DGD^t, naive
-//!   compressed DGD, ADC-DGD, QDGD), a simulated network fabric, and the
-//!   experiment harness regenerating every figure in the paper.
+//!   compressed DGD, ADC-DGD, QDGD, plus the stochastic CHOCO-SGD and
+//!   CEDAS), a simulated network fabric, a stochastic data plane for
+//!   sharded minibatch workloads, and the experiment harness
+//!   regenerating every figure in the paper.
 //! * **JAX models** (`python/compile/model.py`): ML objectives
 //!   (logistic regression, transformer LM) AOT-lowered to HLO text.
 //! * **Pallas kernels** (`python/compile/kernels/`): the compression and
@@ -103,7 +105,34 @@
 //! broadcast → consume rounds at n ∈ {16, 256, 2048}. Payloads the
 //! mailbox drops as their last reference (non-pooled senders) are
 //! retired and salvaged back into the pool through
-//! [`network::Bus::reclaim_retired`].
+//! [`network::Bus::reclaim_retired`]. Every run surfaces its summed
+//! pool-cell creation count as
+//! [`coordinator::RunOutput::fresh_payload_cells`], so pool-recycling
+//! health is observable outside the benches.
+//!
+//! ## The stochastic plane
+//!
+//! The fourth plane ([`stochastic`]) opens the *minibatch* scenario
+//! axis: a [`stochastic::DataPlane`] holds every node's sample shard in
+//! one contiguous arena (CSR-style per-node offsets, synthesized from
+//! the driver's deterministic per-node streams), a
+//! [`stochastic::SampleOracle`] yields seeded minibatch index blocks on
+//! a fixed-draw-per-epoch contract (the sampling analogue of the encode
+//! plane's block-RNG contract — draws are bit-reproducible and
+//! independent of engine or worker count), and
+//! [`stochastic::ShardObjective`] layers logistic / least-squares
+//! losses over a shard with `minibatch_grad_into` writing straight into
+//! [`state::NodeRows`] rows. Two stochastic algorithms ride on it:
+//! CHOCO-SGD ([`algorithms::ChocoSgdNode`] — compressed-difference
+//! gossip whose estimate rows live in the plane's mirror arenas; with
+//! zero compression error and consensus step 1 it reduces to DGD
+//! *bit-exactly*) and CEDAS ([`algorithms::CedasNode`] — compressed
+//! exact diffusion, whose `ψ` correction occupies the plane's `aux`
+//! row and removes DGD's constant-step bias). `adcdgd run --exp
+//! stochastic` sweeps bytes-to-accuracy against ADC-DGD at matched
+//! compression budgets, and the `ADCDGD_BENCH_ONLY=stochastic` hotpath
+//! section asserts the sample → encode → consume round allocates
+//! nothing in steady state.
 //!
 //! [`EngineKind::Sequential`]: coordinator::EngineKind::Sequential
 //! [`EngineKind::Threaded`]: coordinator::EngineKind::Threaded
@@ -147,13 +176,15 @@ pub mod objective;
 pub mod rng;
 pub mod runtime;
 pub mod state;
+pub mod stochastic;
 pub mod topology;
 pub mod util;
 
 /// Convenient glob-import surface.
 pub mod prelude {
     pub use crate::algorithms::{
-        AdcDgdOptions, AlgorithmKind, CompressorRef, Fleet, ObjectiveRef, QdgdOptions, StepSize,
+        AdcDgdOptions, AlgorithmKind, CedasOptions, ChocoSgdOptions, CompressorRef, Fleet,
+        ObjectiveRef, QdgdOptions, StepSize,
     };
     pub use crate::compress::{
         Compressor, Identity, LowPrecisionQuantizer, PayloadBuf, PayloadPool, Qsgd,
@@ -168,5 +199,8 @@ pub mod prelude {
     pub use crate::objective::{Objective, ScalarQuadratic};
     pub use crate::rng::Xoshiro256pp;
     pub use crate::state::{NodeRows, PlaneLayout, PlaneShard, StatePlane};
+    pub use crate::stochastic::{
+        DataPlane, SampleOracle, ShardLoss, ShardObjective, StochasticObjective,
+    };
     pub use crate::topology::Graph;
 }

@@ -2,19 +2,24 @@
 //!
 //! Subcommands:
 //!
-//! * `run --exp <fig1|fig5|fig6|fig7|fig8|fig10|phase|delay|ablations|all>`
-//!   regenerate a paper figure or ablation (optionally `--out <dir>` for
-//!   CSVs, `--trials`, `--iters` to rescale; `delay` is the
-//!   delayed-consensus sweep over the mailbox plane's in-flight ring).
+//! * `run --exp <fig1|fig5|fig6|fig7|fig8|fig10|phase|delay|stochastic|
+//!   ablations|all>` regenerate a paper figure or ablation (optionally
+//!   `--out <dir>` for CSVs, `--trials`, `--iters` to rescale; `delay`
+//!   is the delayed-consensus sweep over the mailbox plane's in-flight
+//!   ring, `stochastic` the bytes-to-accuracy sweep of ADC-DGD vs
+//!   CHOCO-SGD vs CEDAS over the stochastic data plane).
 //! * `solve` — run one algorithm on a chosen topology/objective family
-//!   (`--algo adc|dgd|dgdt|naive|qdgd`, `--topology ring|star|complete|
-//!   grid|er|ba|paper4`, `--n`, `--gamma`, `--alpha`, `--eta`,
-//!   `--iters`, `--engine seq|threaded|pool`, `--workers`,
+//!   (`--algo adc|dgd|dgdt|naive|qdgd|choco|cedas`, `--topology
+//!   ring|star|complete|grid|er|ba|paper4`, `--n`, `--gamma`, `--alpha`,
+//!   `--eta`, `--iters`, `--engine seq|threaded|pool`, `--workers`,
 //!   `--compressor randround|identity|lowprec|sparsifier|terngrad|qsgd`,
-//!   `--drop-prob`, and the link/delay axis: `--delay <rounds>` for a
+//!   `--drop-prob`, the link/delay axis: `--delay <rounds>` for a
 //!   uniform delivery delay, or `--latency <sec>` + `--bandwidth <B/s>`
 //!   + `--round-secs <sec>` to derive per-message delays from the link
-//!   model). Every solve is a `ScenarioSpec` run through `run_scenario`
+//!   model — and, for the stochastic family, `--batch` (0 = full shard),
+//!   `--samples-per-node`, `--dim`, `--data-seed` selecting the sharded
+//!   synthetic logistic workload; `--gamma` doubles as their consensus
+//!   step γ). Every solve is a `ScenarioSpec` run through `run_scenario`
 //!   — the CLI only assembles the declaration.
 //! * `train` — decentralized ML training from an AOT artifact
 //!   (`--artifacts <dir>`, `--model logistic|transformer`, see
@@ -42,7 +47,9 @@ fn main() {
             eprintln!(
                 "usage: adcdgd <run|solve|train|info> [options]\n\
                  \n  adcdgd run --exp fig5 [--out results/] [--trials 100] [--iters 500]\
+                 \n  adcdgd run --exp stochastic [--iters 600]\
                  \n  adcdgd solve --algo adc --topology ring --n 10 --iters 1000 [--engine threaded]\
+                 \n  adcdgd solve --algo choco --batch 8 --samples-per-node 64 --gamma 0.4\
                  \n  adcdgd train --model logistic --artifacts artifacts/ --nodes 4 --steps 100\
                  \n  adcdgd info"
             );
@@ -126,6 +133,13 @@ fn cmd_run(args: &Args) -> i32 {
         }
         results.push(experiments::delayed::run(&p));
     }
+    if want("stochastic") {
+        let mut p = experiments::stochastic::Params::default();
+        if iters > 0 {
+            p.iterations = iters;
+        }
+        results.push(experiments::stochastic::run(&p));
+    }
     if want("ablations") {
         results.push(experiments::ablations::alpha_error_ball(
             &[0.0025, 0.005, 0.01, 0.02],
@@ -169,7 +183,11 @@ fn cmd_solve(args: &Args) -> i32 {
                         }
                     }
                 }
-                for key in ["n", "iters", "seed", "record-every", "t", "delay"] {
+                let int_keys = [
+                    "n", "iters", "seed", "record-every", "t", "delay", "batch",
+                    "samples-per-node", "dim", "data-seed",
+                ];
+                for key in int_keys {
                     if !args.options.contains_key(key) {
                         if let Some(adcdgd::util::config::Value::Num(v)) = cfg.get(key) {
                             args.options.insert(key.into(), format!("{}", *v as u64));
@@ -203,8 +221,24 @@ fn cmd_solve(args: &Args) -> i32 {
             return 2;
         }
     };
-    // Random scalar quadratics (Fig. 10 family) unless paper4.
-    let objective = if topo == "paper4" {
+    let algo = args.get_str("algo", "adc");
+    let batch = args.get::<usize>("batch", 0).unwrap();
+    // Objective family: the stochastic algorithms always get the
+    // sharded synthetic logistic workload (so `--batch` has samples to
+    // draw from — even on paper4, where silently falling back to the
+    // deterministic objectives would turn a requested minibatch run
+    // into full-gradient CHOCO-GD); paper4 keeps the paper's
+    // objectives otherwise; everything else runs the Fig. 10 random
+    // scalar quadratics.
+    let objective = if algo == "choco" || algo == "cedas" {
+        ObjectiveSpec::SyntheticLogistic {
+            samples_per_node: args.get::<usize>("samples-per-node", 64).unwrap(),
+            dim: args.get::<usize>("dim", 8).unwrap(),
+            noise_sd: 0.2,
+            lambda: 1e-3,
+            seed: args.get::<u64>("data-seed", 1).unwrap(),
+        }
+    } else if topo == "paper4" {
         ObjectiveSpec::PaperFourNode
     } else {
         ObjectiveSpec::RandomCircle { seed: seed ^ 0x0BEC }
@@ -250,10 +284,13 @@ fn cmd_solve(args: &Args) -> i32 {
         link,
         grad_tol: None,
     };
-    let gamma = args.get::<f64>("gamma", 1.0).unwrap();
-    let algo = args.get_str("algo", "adc");
+    // For the stochastic family `--gamma` is the consensus step γ, so a
+    // different safe default applies (1.0 is ADC's amplification sweet
+    // spot but too aggressive for compressed gossip).
+    let gamma_default = if algo == "choco" || algo == "cedas" { 0.4 } else { 1.0 };
+    let gamma = args.get::<f64>("gamma", gamma_default).unwrap();
     let algorithm =
-        match AlgorithmKind::parse(&algo, args.get::<usize>("t", 3).unwrap(), gamma) {
+        match AlgorithmKind::parse(&algo, args.get::<usize>("t", 3).unwrap(), gamma, batch) {
             Ok(a) => a,
             Err(e) => {
                 eprintln!("{e}");
@@ -296,6 +333,10 @@ fn cmd_solve(args: &Args) -> i32 {
         out.superseded_messages,
         out.sim_seconds
     );
+    // Encode-plane health on its own line: the cell count depends on the
+    // engine's pool sharding (one pool per worker/shard), so it is the
+    // one legitimately engine-dependent output.
+    println!("fresh_payload_cells={}", out.fresh_payload_cells);
     let m = &out.metrics;
     for i in 0..m.len() {
         println!(

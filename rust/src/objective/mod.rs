@@ -44,6 +44,16 @@ pub trait Objective: Send + Sync {
     fn lipschitz(&self) -> Option<f64> {
         None
     }
+
+    /// Downcast hook to the stochastic (minibatch) surface. Sharded
+    /// objectives ([`crate::stochastic::ShardObjective`]) return
+    /// `Some(self)`; deterministic objectives keep the `None` default,
+    /// and stochastic algorithms handed one fall back to full
+    /// gradients. This keeps the registry/scenario/engine layers on
+    /// plain [`Objective`] references.
+    fn as_stochastic(&self) -> Option<&dyn crate::stochastic::StochasticObjective> {
+        None
+    }
 }
 
 /// Numerical gradient check by central differences — test utility shared

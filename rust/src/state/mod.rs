@@ -14,7 +14,10 @@
 //! * `mirrors` — per-receiver neighbor mirrors, a ragged CSR-style arena
 //!   of `Σ_i deg(i)` rows indexed by the neighbor-offset table
 //!   (mirror layouts only). Mirrors stay *per receiver* because message
-//!   loss makes each receiver's view of a neighbor diverge.
+//!   loss makes each receiver's view of a neighbor diverge,
+//! * `aux` — one extra persistent row per node (`n × p`, aux layouts
+//!   only) for algorithms that carry a second state vector across
+//!   rounds (CEDAS keeps its exact-diffusion `ψ` history here).
 //!
 //! ## Row-view borrowing rules
 //!
@@ -45,13 +48,14 @@ pub struct PlaneLayout {
     n: usize,
     p: usize,
     mirror_counts: Option<Vec<usize>>,
+    aux: bool,
 }
 
 impl PlaneLayout {
     /// Layout with the three dense `n × p` arenas and no mirrors.
     pub fn dense(n: usize, p: usize) -> Self {
         assert!(n > 0 && p > 0, "plane must be non-empty");
-        Self { n, p, mirror_counts: None }
+        Self { n, p, mirror_counts: None, aux: false }
     }
 
     /// Layout that additionally allocates `mirror_self` plus
@@ -59,7 +63,14 @@ impl PlaneLayout {
     pub fn with_mirrors(n: usize, p: usize, counts: Vec<usize>) -> Self {
         assert!(n > 0 && p > 0, "plane must be non-empty");
         assert_eq!(counts.len(), n, "one mirror count per node");
-        Self { n, p, mirror_counts: Some(counts) }
+        Self { n, p, mirror_counts: Some(counts), aux: false }
+    }
+
+    /// Additionally allocate the `aux` arena (one persistent extra row
+    /// per node).
+    pub fn with_aux(mut self) -> Self {
+        self.aux = true;
+        self
     }
 
     /// Node count.
@@ -84,6 +95,7 @@ pub struct StatePlane {
     scratch: Vec<f64>,
     mirror_self: Vec<f64>,
     mirrors: Vec<f64>,
+    aux: Vec<f64>,
     /// Prefix sums of per-node mirror counts (`n + 1` entries; all zero
     /// for mirror-free layouts).
     mirror_off: Vec<usize>,
@@ -111,6 +123,7 @@ impl StatePlane {
             scratch: vec![0.0; n * p],
             mirror_self,
             mirrors,
+            aux: if layout.aux { vec![0.0; n * p] } else { Vec::new() },
             mirror_off,
         }
     }
@@ -128,6 +141,25 @@ impl StatePlane {
     /// Does this plane carry mirror arenas?
     pub fn has_mirrors(&self) -> bool {
         !self.mirror_self.is_empty()
+    }
+
+    /// Does this plane carry the auxiliary arena?
+    pub fn has_aux(&self) -> bool {
+        !self.aux.is_empty()
+    }
+
+    /// Node `i`'s auxiliary row (aux layouts only).
+    #[inline]
+    pub fn aux_row(&self, i: usize) -> &[f64] {
+        vecops::row(&self.aux, self.p, i)
+    }
+
+    /// Copy every node's iterate row into its auxiliary row — the
+    /// `ψ⁰ = x⁰` initialization convention of exact-diffusion-style
+    /// algorithms, applied by the fleet builder after iterate init.
+    pub fn seed_aux_from_x(&mut self) {
+        assert!(self.has_aux(), "layout has no aux arena");
+        self.aux.copy_from_slice(&self.x);
     }
 
     /// Node `i`'s iterate row.
@@ -164,6 +196,11 @@ impl StatePlane {
                 vecops::row_mut(&mut self.mirror_self, p, i)
             },
             mirrors: &mut self.mirrors[m0..m1],
+            aux: if self.aux.is_empty() {
+                &mut self.aux[..]
+            } else {
+                vecops::row_mut(&mut self.aux, p, i)
+            },
             p,
         }
     }
@@ -178,11 +215,13 @@ impl StatePlane {
         assert_eq!(*bounds.last().unwrap(), self.n, "shard ranges must end at n");
         let p = self.p;
         let has_mirror_self = !self.mirror_self.is_empty();
+        let has_aux = !self.aux.is_empty();
         let mut x = &mut self.x[..];
         let mut grad = &mut self.grad[..];
         let mut scratch = &mut self.scratch[..];
         let mut mirror_self = &mut self.mirror_self[..];
         let mut mirrors = &mut self.mirrors[..];
+        let mut aux = &mut self.aux[..];
         let mut out = Vec::with_capacity(bounds.len() - 1);
         for w in bounds.windows(2) {
             let (a, b) = (w[0], w[1]);
@@ -200,6 +239,9 @@ impl StatePlane {
             let mlen = (self.mirror_off[b] - self.mirror_off[a]) * p;
             let (hm, tm) = std::mem::take(&mut mirrors).split_at_mut(mlen);
             mirrors = tm;
+            let (ha, ta) =
+                std::mem::take(&mut aux).split_at_mut(if has_aux { dense } else { 0 });
+            aux = ta;
             out.push(PlaneShard {
                 start: a,
                 p,
@@ -208,6 +250,7 @@ impl StatePlane {
                 scratch: hs,
                 mirror_self: hms,
                 mirrors: hm,
+                aux: ha,
                 mirror_off: &self.mirror_off[a..=b],
             });
         }
@@ -234,6 +277,10 @@ pub struct NodeRows<'a> {
     /// order (empty for mirror-free layouts). Slot `s` occupies
     /// `mirrors[s*p..(s+1)*p]`.
     pub mirrors: &'a mut [f64],
+    /// Auxiliary persistent row (empty slice for aux-free layouts).
+    /// Unlike `scratch`, contents survive across rounds — CEDAS keeps
+    /// its previous-round `ψ` here.
+    pub aux: &'a mut [f64],
     /// Row width.
     pub p: usize,
 }
@@ -248,6 +295,7 @@ pub struct PlaneShard<'a> {
     scratch: &'a mut [f64],
     mirror_self: &'a mut [f64],
     mirrors: &'a mut [f64],
+    aux: &'a mut [f64],
     /// Global mirror offsets for this shard's nodes (`len + 1` entries);
     /// local offsets are rebased against `mirror_off[0]`.
     mirror_off: &'a [usize],
@@ -276,6 +324,11 @@ impl PlaneShard<'_> {
                 vecops::row_mut(self.mirror_self, p, l)
             },
             mirrors: &mut self.mirrors[m0..m1],
+            aux: if self.aux.is_empty() {
+                &mut self.aux[..]
+            } else {
+                vecops::row_mut(self.aux, p, l)
+            },
             p,
         }
     }
@@ -346,6 +399,36 @@ mod tests {
             assert_eq!(plane.x_row(i), &[100.0 + i as f64]);
             assert_eq!(plane.rows(i).mirrors[0], i as f64);
         }
+    }
+
+    #[test]
+    fn aux_rows_persist_and_shard() {
+        let mut plane = StatePlane::new(&PlaneLayout::dense(4, 2).with_aux());
+        assert!(plane.has_aux());
+        assert!(!plane.has_mirrors());
+        for i in 0..4 {
+            let rows = plane.rows(i);
+            assert_eq!(rows.aux.len(), 2);
+            rows.x.fill(i as f64);
+            rows.aux[1] = 10.0 + i as f64;
+        }
+        assert_eq!(plane.aux_row(2), &[0.0, 12.0]);
+        {
+            let mut shards = plane.shards(&[0, 2, 4]);
+            let rows = shards[1].rows(3);
+            assert_eq!(rows.aux, &[0.0, 13.0]);
+            rows.aux[0] = -1.0;
+        }
+        assert_eq!(plane.aux_row(3), &[-1.0, 13.0]);
+        // The ψ⁰ = x⁰ seeding convention copies iterates wholesale.
+        plane.seed_aux_from_x();
+        for i in 0..4 {
+            assert_eq!(plane.aux_row(i), plane.x_row(i));
+        }
+        // Aux-free layouts expose empty aux rows.
+        let mut dense = StatePlane::new(&PlaneLayout::dense(2, 2));
+        assert!(!dense.has_aux());
+        assert!(dense.rows(0).aux.is_empty());
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! [`DataPlane`] — per-node sample shards in one contiguous arena.
+//!
+//! The deterministic algorithm family evaluates closed-form objectives,
+//! so it never owns data. The stochastic family (CHOCO-SGD, CEDAS)
+//! trains on *sharded samples*: node `i` owns a local dataset shard and
+//! draws minibatches from it. Mirroring the state plane's layout
+//! discipline, all shards of one run live in a single arena:
+//!
+//! * `features` — one row-major `total_samples × dim` matrix,
+//! * `labels` — one `total_samples` vector,
+//! * `off` — CSR-style per-node prefix sums (`n + 1` entries), so node
+//!   `i`'s shard is the contiguous row range `off[i]..off[i+1]`.
+//!
+//! Synthesis is deterministic: node `i`'s samples are drawn from the
+//! run driver's per-node stream derivation (`seed ⊕ golden·(i+1)`,
+//! SplitMix-expanded) applied to a *data-domain-salted* seed — so a
+//! data plane is a pure function of
+//! `(n, samples_per_node, dim, noise_sd, seed)`, identical across
+//! engines, worker counts, and machines, while never aligning a node's
+//! runtime RNG stream with the stream that synthesized its shard.
+
+use crate::linalg::vecops;
+use crate::rng::{Normal, Xoshiro256pp};
+
+/// The per-node stream salt shared with the run driver's node RNG
+/// derivation (decorrelated streams, stable across engines).
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Domain salt separating data-synthesis streams from the run driver's
+/// node RNG streams. Without it, passing the same seed as both the data
+/// seed and the run seed would hand every node a runtime stream that
+/// starts at the exact state that synthesized its own shard —
+/// correlating compression/sampling noise with the dataset.
+const DATA_DOMAIN: u64 = 0xDA7A_0BEC_5EED_0001;
+
+/// All sample shards of one run in a single contiguous arena. See the
+/// module docs for the layout.
+#[derive(Debug, Clone)]
+pub struct DataPlane {
+    n: usize,
+    dim: usize,
+    /// Row-major `total_samples × dim` feature matrix.
+    features: Vec<f64>,
+    /// One label per sample (`±1` for classification, real-valued for
+    /// regression).
+    labels: Vec<f64>,
+    /// Per-node shard offsets (`n + 1` prefix sums).
+    off: Vec<usize>,
+}
+
+impl DataPlane {
+    /// Assemble a plane from raw parts (tests / external loaders).
+    /// `off` must be `n + 1` non-decreasing prefix sums ending at the
+    /// sample count, and every shard must be non-empty.
+    pub fn from_parts(dim: usize, features: Vec<f64>, labels: Vec<f64>, off: Vec<usize>) -> Self {
+        assert!(dim > 0, "feature dimension must be positive");
+        assert!(off.len() >= 2, "need at least one node");
+        assert_eq!(off[0], 0, "offsets must start at 0");
+        assert!(off.windows(2).all(|w| w[0] < w[1]), "every shard must be non-empty");
+        let total = *off.last().unwrap();
+        assert_eq!(labels.len(), total, "one label per sample");
+        assert_eq!(features.len(), total * dim, "features must be total × dim");
+        Self { n: off.len() - 1, dim, features, labels, off }
+    }
+
+    /// Synthesize a sharded binary-classification problem: a true weight
+    /// `w* ~ N(0, I)` is drawn from the master stream, then node `i`'s
+    /// shard comes from the per-node stream
+    /// `(seed ⊕ data-salt) ⊕ golden·(i+1)`: features `~ N(0, I)`,
+    /// labels `sign(w*·x + ε)`, `ε ~ N(0, noise_sd²)`. Returns
+    /// `(plane, w*)`.
+    pub fn synthetic_logistic(
+        n: usize,
+        samples_per_node: usize,
+        dim: usize,
+        noise_sd: f64,
+        seed: u64,
+    ) -> (Self, Vec<f64>) {
+        Self::synthesize(n, samples_per_node, dim, noise_sd, seed, true)
+    }
+
+    /// Synthesize a sharded least-squares problem: like
+    /// [`Self::synthetic_logistic`] but with real-valued labels
+    /// `y = w*·x + ε`. Returns `(plane, w*)`.
+    pub fn synthetic_least_squares(
+        n: usize,
+        samples_per_node: usize,
+        dim: usize,
+        noise_sd: f64,
+        seed: u64,
+    ) -> (Self, Vec<f64>) {
+        Self::synthesize(n, samples_per_node, dim, noise_sd, seed, false)
+    }
+
+    fn synthesize(
+        n: usize,
+        samples_per_node: usize,
+        dim: usize,
+        noise_sd: f64,
+        seed: u64,
+        classify: bool,
+    ) -> (Self, Vec<f64>) {
+        assert!(n > 0 && samples_per_node > 0 && dim > 0, "plane must be non-empty");
+        assert!(noise_sd >= 0.0, "noise must be non-negative");
+        let std = Normal::new(0.0, 1.0);
+        let noise = Normal::new(0.0, noise_sd);
+        // Salt the seed into the data domain so sharing one seed between
+        // the data plane and the run config never aligns a node's
+        // runtime stream with its synthesis stream.
+        let salted = seed ^ DATA_DOMAIN;
+        let mut master = Xoshiro256pp::seed_from_u64(salted);
+        let w_star = std.sample_vec(&mut master, dim);
+        let total = n * samples_per_node;
+        let mut features = Vec::with_capacity(total * dim);
+        let mut labels = Vec::with_capacity(total);
+        let mut off = Vec::with_capacity(n + 1);
+        off.push(0);
+        for i in 0..n {
+            let mut rng =
+                Xoshiro256pp::seed_from_u64(salted ^ GOLDEN.wrapping_mul(i as u64 + 1));
+            for _ in 0..samples_per_node {
+                let start = features.len();
+                for _ in 0..dim {
+                    features.push(std.sample(&mut rng));
+                }
+                let margin =
+                    vecops::dot(&w_star, &features[start..]) + noise.sample(&mut rng);
+                labels.push(if classify {
+                    if margin >= 0.0 {
+                        1.0
+                    } else {
+                        -1.0
+                    }
+                } else {
+                    margin
+                });
+            }
+            off.push(labels.len());
+        }
+        (Self { n, dim, features, labels, off }, w_star)
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Feature dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Samples across all shards.
+    pub fn total_samples(&self) -> usize {
+        *self.off.last().unwrap()
+    }
+
+    /// Node `i`'s shard size.
+    #[inline]
+    pub fn shard_len(&self, i: usize) -> usize {
+        self.off[i + 1] - self.off[i]
+    }
+
+    /// Feature row of node `i`'s local sample `j`.
+    #[inline]
+    pub fn feature_row(&self, i: usize, j: usize) -> &[f64] {
+        debug_assert!(j < self.shard_len(i), "sample index out of shard");
+        vecops::row(&self.features, self.dim, self.off[i] + j)
+    }
+
+    /// Label of node `i`'s local sample `j`.
+    #[inline]
+    pub fn label(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(j < self.shard_len(i), "sample index out of shard");
+        self.labels[self.off[i] + j]
+    }
+
+    /// Global classification accuracy of weights `w` over **all** shards
+    /// (sign agreement; meaningful for the `±1`-labeled classification
+    /// planes).
+    pub fn accuracy(&self, w: &[f64]) -> f64 {
+        assert_eq!(w.len(), self.dim, "weight dimension mismatch");
+        let total = self.total_samples();
+        let hits = (0..total)
+            .filter(|&s| {
+                let row = vecops::row(&self.features, self.dim, s);
+                vecops::dot(w, row) * self.labels[s] > 0.0
+            })
+            .count();
+        hits as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesis_is_deterministic_and_shaped() {
+        let (a, wa) = DataPlane::synthetic_logistic(3, 5, 4, 0.1, 42);
+        let (b, wb) = DataPlane::synthetic_logistic(3, 5, 4, 0.1, 42);
+        assert_eq!(wa, wb);
+        assert_eq!(a.n(), 3);
+        assert_eq!(a.dim(), 4);
+        assert_eq!(a.total_samples(), 15);
+        for i in 0..3 {
+            assert_eq!(a.shard_len(i), 5);
+            for j in 0..5 {
+                assert_eq!(a.feature_row(i, j), b.feature_row(i, j));
+                assert_eq!(a.label(i, j), b.label(i, j));
+                assert!(a.label(i, j) == 1.0 || a.label(i, j) == -1.0);
+            }
+        }
+        let (c, _) = DataPlane::synthetic_logistic(3, 5, 4, 0.1, 43);
+        assert_ne!(a.feature_row(0, 0), c.feature_row(0, 0), "seed must matter");
+    }
+
+    #[test]
+    fn true_weights_score_high_at_low_noise() {
+        let (plane, w_star) = DataPlane::synthetic_logistic(4, 64, 6, 0.01, 7);
+        assert!(plane.accuracy(&w_star) > 0.95, "acc = {}", plane.accuracy(&w_star));
+        // The zero vector classifies nothing correctly (no positive margin).
+        assert_eq!(plane.accuracy(&vec![0.0; 6]), 0.0);
+    }
+
+    #[test]
+    fn least_squares_labels_are_real_valued() {
+        let (plane, w_star) = DataPlane::synthetic_least_squares(2, 8, 3, 0.0, 9);
+        for j in 0..8 {
+            let row = plane.feature_row(1, j);
+            let y = plane.label(1, j);
+            assert!((vecops::dot(&w_star, row) - y).abs() < 1e-12, "noise-free labels");
+        }
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        let p = DataPlane::from_parts(2, vec![1.0, 2.0, 3.0, 4.0], vec![1.0, -1.0], vec![0, 1, 2]);
+        assert_eq!(p.n(), 2);
+        assert_eq!(p.feature_row(1, 0), &[3.0, 4.0]);
+        let bad = std::panic::catch_unwind(|| {
+            DataPlane::from_parts(2, vec![1.0, 2.0], vec![1.0], vec![0, 1, 1])
+        });
+        assert!(bad.is_err(), "empty shard must be rejected");
+    }
+}

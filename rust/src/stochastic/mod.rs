@@ -1,0 +1,42 @@
+//! The stochastic data plane: sharded sample arenas, seeded minibatch
+//! oracles, and the minibatch objective layer.
+//!
+//! The deterministic algorithm family (DGD, DGD^t, naive compressed,
+//! ADC-DGD, QDGD) runs full gradients of closed-form objectives. The
+//! strongest compressed-consensus baselines from the related literature
+//! — CHOCO-SGD (Koloskova et al., arXiv:1902.00340 / 1907.09356) and
+//! CEDAS (Huang & Pu, arXiv:2301.05872) — are *stochastic*: each node
+//! owns a data shard and steps on minibatch gradients. This module is
+//! the plane that makes those workloads first-class, following the same
+//! arena discipline as the state, mailbox, and encode planes:
+//!
+//! * [`DataPlane`] — every node's sample shard in one contiguous
+//!   row-major arena with CSR-style per-node offsets, synthesized
+//!   deterministically from the run driver's per-node stream derivation.
+//! * [`SampleOracle`] — per-node seeded minibatch index blocks: each
+//!   epoch is a random permutation of the shard drawn as **one
+//!   fixed-size raw `u64` block** (exactly `shard_len − 1` draws,
+//!   consumed in order through a rejection-free Fisher–Yates pass) — the
+//!   stochastic analogue of the encode plane's block-RNG contract, so
+//!   oracle draws are reproducible bit-for-bit and independent of
+//!   engine or worker count.
+//! * [`StochasticObjective`] / [`ShardObjective`] — the minibatch layer
+//!   over [`crate::objective`]: logistic classification and quadratic
+//!   least-squares over a shard, with `minibatch_grad_into` writing
+//!   straight into [`crate::state::NodeRows`] rows (zero allocation on
+//!   the sample → gradient path). Algorithms discover the surface
+//!   through [`crate::objective::Objective::as_stochastic`] and fall
+//!   back to full gradients on deterministic objectives.
+//!
+//! The algorithms riding on this plane live in [`crate::algorithms`]
+//! ([`crate::algorithms::ChocoSgdNode`], [`crate::algorithms::CedasNode`]);
+//! the `ADCDGD_BENCH_ONLY=stochastic` hotpath section asserts that
+//! steady-state sample → encode → consume rounds allocate nothing.
+
+mod data;
+mod objective;
+mod oracle;
+
+pub use data::DataPlane;
+pub use objective::{ShardLoss, ShardObjective, StochasticObjective, StochasticObjectiveRef};
+pub use oracle::SampleOracle;

@@ -1,0 +1,257 @@
+//! [`StochasticObjective`] — the minibatch layer over [`crate::objective`].
+//!
+//! A stochastic objective is a plain [`Objective`] (full-shard value and
+//! gradient, used by the metric pipeline and by full-batch algorithm
+//! runs) that can additionally evaluate a *minibatch* gradient over an
+//! explicit index block, writing straight into a caller-provided row
+//! (typically a [`crate::state::NodeRows`] row — no allocation on the
+//! sample → gradient path).
+//!
+//! [`ShardObjective`] is the concrete family: logistic classification
+//! and quadratic least-squares losses over one node's shard of a shared
+//! [`DataPlane`]. Algorithms discover the minibatch surface through
+//! [`Objective::as_stochastic`], so the registry, scenario, and engine
+//! layers keep passing plain `ObjectiveRef`s — a stochastic algorithm
+//! handed a deterministic objective simply falls back to full
+//! gradients.
+
+use super::DataPlane;
+use crate::linalg::vecops;
+use crate::objective::Objective;
+use std::sync::Arc;
+
+/// An objective that can evaluate minibatch gradients over explicit
+/// sample-index blocks (drawn by a [`super::SampleOracle`]).
+pub trait StochasticObjective: Objective {
+    /// Samples in this node's shard.
+    fn num_samples(&self) -> usize;
+
+    /// Minibatch gradient `∇F(x; B) = (1/|B|) Σ_{j∈B} ∇ℓ_j(x) + λx`
+    /// written into `out` (length `dim`). `idx` holds local shard
+    /// indices; duplicates are averaged like any other sample. Allocates
+    /// nothing.
+    fn minibatch_grad_into(&self, x: &[f64], idx: &[usize], out: &mut [f64]);
+}
+
+/// Shared handle to a stochastic objective.
+pub type StochasticObjectiveRef = Arc<dyn StochasticObjective>;
+
+/// Which per-sample loss a [`ShardObjective`] applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardLoss {
+    /// `ℓ_j(w) = log(1 + exp(−y_j · w·x_j))`, labels `±1`.
+    Logistic,
+    /// `ℓ_j(w) = ½ (w·x_j − y_j)²`.
+    LeastSquares,
+}
+
+/// One node's loss over its [`DataPlane`] shard:
+/// `f_i(w) = (1/m_i) Σ_j ℓ_j(w) + (λ/2)‖w‖²`.
+#[derive(Debug, Clone)]
+pub struct ShardObjective {
+    data: Arc<DataPlane>,
+    node: usize,
+    loss: ShardLoss,
+    lambda: f64,
+}
+
+impl ShardObjective {
+    /// Logistic-classification loss over node `node`'s shard.
+    pub fn logistic(data: Arc<DataPlane>, node: usize, lambda: f64) -> Self {
+        Self::new(data, node, ShardLoss::Logistic, lambda)
+    }
+
+    /// Least-squares loss over node `node`'s shard.
+    pub fn least_squares(data: Arc<DataPlane>, node: usize, lambda: f64) -> Self {
+        Self::new(data, node, ShardLoss::LeastSquares, lambda)
+    }
+
+    /// Generic constructor.
+    pub fn new(data: Arc<DataPlane>, node: usize, loss: ShardLoss, lambda: f64) -> Self {
+        assert!(node < data.n(), "node {node} outside the data plane");
+        assert!(lambda >= 0.0, "regularization must be non-negative");
+        Self { data, node, loss, lambda }
+    }
+
+    /// The backing data plane.
+    pub fn data(&self) -> &Arc<DataPlane> {
+        &self.data
+    }
+
+    /// Per-sample gradient coefficient: `∇ℓ_j(w) = coef · x_j`, already
+    /// divided by the batch size `inv_m`-style factor.
+    #[inline]
+    fn sample_coef(&self, x: &[f64], row: &[f64], y: f64, inv_m: f64) -> f64 {
+        match self.loss {
+            ShardLoss::Logistic => {
+                let margin = y * vecops::dot(x, row);
+                // σ(−margin) computed stably on both signs.
+                let s = if margin > 0.0 {
+                    let e = (-margin).exp();
+                    e / (1.0 + e)
+                } else {
+                    1.0 / (1.0 + margin.exp())
+                };
+                -y * s * inv_m
+            }
+            ShardLoss::LeastSquares => (vecops::dot(x, row) - y) * inv_m,
+        }
+    }
+
+    /// Per-sample loss value.
+    #[inline]
+    fn sample_loss(&self, x: &[f64], row: &[f64], y: f64) -> f64 {
+        match self.loss {
+            ShardLoss::Logistic => {
+                let margin = y * vecops::dot(x, row);
+                // log(1 + e^{−margin}) computed stably.
+                if margin > 0.0 {
+                    (-margin).exp().ln_1p()
+                } else {
+                    -margin + margin.exp().ln_1p()
+                }
+            }
+            ShardLoss::LeastSquares => {
+                let r = vecops::dot(x, row) - y;
+                0.5 * r * r
+            }
+        }
+    }
+}
+
+impl Objective for ShardObjective {
+    fn dim(&self) -> usize {
+        self.data.dim()
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let m = self.data.shard_len(self.node);
+        let mut loss = 0.0;
+        for j in 0..m {
+            let row = self.data.feature_row(self.node, j);
+            loss += self.sample_loss(x, row, self.data.label(self.node, j));
+        }
+        loss / m as f64 + 0.5 * self.lambda * vecops::norm2_sq(x)
+    }
+
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        let m = self.data.shard_len(self.node);
+        let inv_m = 1.0 / m as f64;
+        for (o, &wi) in out.iter_mut().zip(x.iter()) {
+            *o = self.lambda * wi;
+        }
+        for j in 0..m {
+            let row = self.data.feature_row(self.node, j);
+            let coef = self.sample_coef(x, row, self.data.label(self.node, j), inv_m);
+            vecops::axpy(coef, row, out);
+        }
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        let m = self.data.shard_len(self.node);
+        let s: f64 = (0..m)
+            .map(|j| vecops::norm2_sq(self.data.feature_row(self.node, j)))
+            .sum();
+        Some(match self.loss {
+            ShardLoss::Logistic => s / (4.0 * m as f64) + self.lambda,
+            ShardLoss::LeastSquares => s / m as f64 + self.lambda,
+        })
+    }
+
+    fn as_stochastic(&self) -> Option<&dyn StochasticObjective> {
+        Some(self)
+    }
+}
+
+impl StochasticObjective for ShardObjective {
+    fn num_samples(&self) -> usize {
+        self.data.shard_len(self.node)
+    }
+
+    fn minibatch_grad_into(&self, x: &[f64], idx: &[usize], out: &mut [f64]) {
+        assert!(!idx.is_empty(), "minibatch must be non-empty");
+        let inv_m = 1.0 / idx.len() as f64;
+        for (o, &wi) in out.iter_mut().zip(x.iter()) {
+            *o = self.lambda * wi;
+        }
+        for &j in idx {
+            let row = self.data.feature_row(self.node, j);
+            let coef = self.sample_coef(x, row, self.data.label(self.node, j), inv_m);
+            vecops::axpy(coef, row, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::check_gradient;
+
+    fn plane() -> Arc<DataPlane> {
+        Arc::new(DataPlane::synthetic_logistic(3, 12, 4, 0.1, 11).0)
+    }
+
+    #[test]
+    fn full_gradients_pass_the_numeric_check() {
+        let data = plane();
+        for node in 0..3 {
+            let log = ShardObjective::logistic(Arc::clone(&data), node, 0.01);
+            check_gradient(&log, &[0.2, -0.4, 0.1, 0.3], 1e-6, 1e-5).unwrap();
+        }
+        let (reg_data, _) = DataPlane::synthetic_least_squares(2, 10, 3, 0.2, 13);
+        let ls = ShardObjective::least_squares(Arc::new(reg_data), 1, 0.05);
+        check_gradient(&ls, &[0.5, -0.1, 0.2], 1e-6, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn in_order_full_minibatch_is_bitwise_the_full_gradient() {
+        // The full-batch fast path of the stochastic algorithms relies on
+        // this: a minibatch over the identity index block performs the
+        // exact accumulation sequence of `grad_into`.
+        let data = plane();
+        let obj = ShardObjective::logistic(Arc::clone(&data), 1, 0.001);
+        let x = [0.3, -0.2, 0.7, 0.05];
+        let idx: Vec<usize> = (0..obj.num_samples()).collect();
+        let (mut full, mut mini) = (vec![0.0; 4], vec![0.0; 4]);
+        obj.grad_into(&x, &mut full);
+        obj.minibatch_grad_into(&x, &idx, &mut mini);
+        for (a, b) in full.iter().zip(mini.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn minibatch_matches_manual_average() {
+        let data = plane();
+        let obj = ShardObjective::logistic(Arc::clone(&data), 0, 0.0);
+        let x = [0.1, 0.2, -0.3, 0.4];
+        let idx = [3usize, 7, 3];
+        let mut g = vec![0.0; 4];
+        obj.minibatch_grad_into(&x, &idx, &mut g);
+        // Manual: average of the per-sample gradients (duplicates count).
+        let mut expect = vec![0.0; 4];
+        for &j in &idx {
+            let row = data.feature_row(0, j);
+            let y = data.label(0, j);
+            let margin = y * vecops::dot(&x, row);
+            let s = 1.0 / (1.0 + margin.exp());
+            vecops::axpy(-y * s / 3.0, row, &mut expect);
+        }
+        for (a, b) in g.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn stochastic_surface_is_discoverable_through_objective() {
+        let data = plane();
+        let obj: crate::algorithms::ObjectiveRef =
+            Arc::new(ShardObjective::logistic(data, 2, 0.01));
+        let sto = obj.as_stochastic().expect("shard objective is stochastic");
+        assert_eq!(sto.num_samples(), 12);
+        // Plain objectives stay non-stochastic.
+        let plain: crate::algorithms::ObjectiveRef =
+            Arc::new(crate::objective::ScalarQuadratic::new(1.0, 0.0));
+        assert!(plain.as_stochastic().is_none());
+    }
+}

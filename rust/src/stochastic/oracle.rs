@@ -1,0 +1,158 @@
+//! [`SampleOracle`] — seeded minibatch index blocks over one shard.
+//!
+//! The oracle owns a private [`Xoshiro256pp`] stream and yields
+//! fixed-size index blocks that sweep the shard in *per-epoch random
+//! permutations*: positions `[e·m, (e+1)·m)` of the emitted index
+//! sequence cover every shard sample exactly once (shuffled sampling
+//! without replacement, the standard SGD epoch discipline). Blocks may
+//! straddle epoch boundaries when the batch size does not divide the
+//! shard.
+//!
+//! ## Fixed-draw block contract
+//!
+//! Mirroring the encode plane's block-RNG contract, each epoch consumes
+//! **exactly `shard_len − 1` raw `u64` draws**, taken as one
+//! [`Xoshiro256pp::fill_u64`] block and consumed in order: swap `t` of
+//! the Fisher–Yates pass maps draw `t` through Lemire's multiply-shift
+//! `(r · bound) >> 64` (no rejection loop, so the draw count never
+//! depends on the values drawn; the `< bound/2⁶⁴` mapping bias is
+//! negligible for shard-sized bounds). A fixed draw count per epoch —
+//! independent of batch size, engine, and worker count — is what lets a
+//! reseeded oracle reproduce its index blocks bit-for-bit and keeps
+//! stochastic runs bit-identical across engines (each node's oracle is
+//! routed with the node, exactly like its RNG stream).
+//!
+//! Steady-state sampling allocates nothing: the permutation and raw
+//! block buffers are sized at construction and reused by every reshuffle
+//! ([`Xoshiro256pp::fill_u64`] reuses capacity), and
+//! [`SampleOracle::next_block`] writes into a caller-owned buffer.
+
+use crate::rng::Xoshiro256pp;
+
+/// Seeded minibatch index generator for one node's shard. See the
+/// module docs for the epoch and block-draw contracts.
+#[derive(Debug, Clone)]
+pub struct SampleOracle {
+    shard_len: usize,
+    batch: usize,
+    rng: Xoshiro256pp,
+    /// Current epoch's permutation of `0..shard_len`.
+    perm: Vec<usize>,
+    /// Reused raw-draw block (`shard_len − 1` u64s per epoch).
+    block: Vec<u64>,
+    /// Next unread position in `perm`.
+    cursor: usize,
+}
+
+impl SampleOracle {
+    /// New oracle over a shard of `shard_len` samples yielding blocks of
+    /// `batch` indices (`1 ≤ batch ≤ shard_len`), seeded explicitly. The
+    /// first epoch's permutation is drawn immediately.
+    pub fn new(shard_len: usize, batch: usize, seed: u64) -> Self {
+        assert!(shard_len > 0, "shard must be non-empty");
+        assert!(
+            (1..=shard_len).contains(&batch),
+            "batch {batch} outside 1..={shard_len}"
+        );
+        let mut oracle = Self {
+            shard_len,
+            batch,
+            rng: Xoshiro256pp::seed_from_u64(seed),
+            perm: (0..shard_len).collect(),
+            block: Vec::new(),
+            cursor: 0,
+        };
+        oracle.reshuffle();
+        oracle
+    }
+
+    /// Shard size.
+    pub fn shard_len(&self) -> usize {
+        self.shard_len
+    }
+
+    /// Block size.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Raw `u64` draws consumed per epoch (the fixed-draw contract).
+    pub fn draws_per_epoch(&self) -> usize {
+        self.shard_len - 1
+    }
+
+    /// Draw the next epoch permutation: one fixed-size raw block,
+    /// consumed in order by a rejection-free Fisher–Yates pass.
+    fn reshuffle(&mut self) {
+        let m = self.shard_len;
+        self.rng.fill_u64(&mut self.block, m - 1);
+        for i in (1..m).rev() {
+            // Draw t = m − 1 − i pairs with swap position i (consumption
+            // order matches the block order).
+            let r = self.block[m - 1 - i];
+            let j = ((r as u128 * (i as u128 + 1)) >> 64) as usize;
+            self.perm.swap(i, j);
+        }
+        self.cursor = 0;
+    }
+
+    /// Fill `out` with the next `batch` sample indices (clearing it
+    /// first; capacity is reused). Blocks sweep per-epoch permutations
+    /// and may straddle an epoch boundary.
+    pub fn next_block(&mut self, out: &mut Vec<usize>) {
+        out.clear();
+        while out.len() < self.batch {
+            if self.cursor == self.shard_len {
+                self.reshuffle();
+            }
+            let take = (self.batch - out.len()).min(self.shard_len - self.cursor);
+            out.extend_from_slice(&self.perm[self.cursor..self.cursor + take]);
+            self.cursor += take;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_have_requested_size_and_range() {
+        let mut oracle = SampleOracle::new(10, 4, 1);
+        let mut out = Vec::new();
+        for _ in 0..25 {
+            oracle.next_block(&mut out);
+            assert_eq!(out.len(), 4);
+            assert!(out.iter().all(|&i| i < 10));
+        }
+    }
+
+    #[test]
+    fn single_sample_shard_always_yields_zero() {
+        let mut oracle = SampleOracle::new(1, 1, 5);
+        let mut out = Vec::new();
+        for _ in 0..5 {
+            oracle.next_block(&mut out);
+            assert_eq!(out, vec![0]);
+        }
+        assert_eq!(oracle.draws_per_epoch(), 0);
+    }
+
+    #[test]
+    fn same_seed_reproduces_blocks() {
+        let mut a = SampleOracle::new(17, 5, 99);
+        let mut b = SampleOracle::new(17, 5, 99);
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        for _ in 0..40 {
+            a.next_block(&mut oa);
+            b.next_block(&mut ob);
+            assert_eq!(oa, ob);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn oversized_batch_is_rejected() {
+        let _ = SampleOracle::new(4, 5, 0);
+    }
+}

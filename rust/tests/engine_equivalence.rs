@@ -4,7 +4,7 @@
 //! ascending-sender order (delayed deliveries included) — so scheduling
 //! cannot leak into the floating-point reduction.
 
-use adcdgd::algorithms::{AdcDgdOptions, AlgorithmKind, QdgdOptions};
+use adcdgd::algorithms::{AdcDgdOptions, AlgorithmKind, ChocoSgdOptions, QdgdOptions};
 use adcdgd::algorithms::StepSize;
 use adcdgd::coordinator::{
     CompressorSpec, EngineKind, ObjectiveSpec, RunConfig, RunOutput, ScenarioSpec, TopologySpec,
@@ -177,6 +177,52 @@ fn delayed_delivery_is_engine_invariant() {
         assert_ne!(seq.final_states, zero.final_states, "delay={delay} had no effect");
         // Uniform delays never collide in a slot.
         assert_eq!(seq.superseded_messages, 0);
+    }
+}
+
+/// Stochastic bit-identity: CHOCO-SGD minibatches on a 16-node ring
+/// (ternary compression, batch 8, 10% loss) must agree to exact f64
+/// bits across sequential / threaded / pool at rounds 40, 80, and 120.
+/// The per-node sample oracles are seeded from the node RNG streams and
+/// follow the fixed-draw-per-epoch block contract, so neither engine
+/// scheduling nor worker count can perturb the draws. (The ADC-DGD
+/// golden snapshots below are untouched by the stochastic plane.)
+#[test]
+fn stochastic_choco_bit_identical_across_engines() {
+    let spec = ScenarioSpec::new(
+        AlgorithmKind::ChocoSgd(ChocoSgdOptions { consensus_step: 0.5, batch: 8 }),
+        TopologySpec::Ring(16),
+        ObjectiveSpec::SyntheticLogistic {
+            samples_per_node: 32,
+            dim: 4,
+            noise_sd: 0.2,
+            lambda: 1e-3,
+            seed: 21,
+        },
+    )
+    .with_compressor(CompressorSpec::TernGrad);
+    let prepared = spec.prepare();
+    for iters in [40usize, 80, 120] {
+        let mk = |engine| {
+            let mut c = cfg(engine, 0.10);
+            c.iterations = iters;
+            c.record_every = 40;
+            prepared.run_with(&c)
+        };
+        let seq = mk(EngineKind::Sequential);
+        let thr = mk(EngineKind::Threaded);
+        let pool = mk(EngineKind::Pool { workers: 3 });
+        let pool_auto = mk(EngineKind::pool());
+        assert!(seq.dropped_messages > 0, "loss must be active");
+        assert_identical(&seq, &thr, &format!("stochastic threaded @{iters}"));
+        assert_identical(&seq, &pool, &format!("stochastic pool(3) @{iters}"));
+        assert_identical(&seq, &pool_auto, &format!("stochastic pool(auto) @{iters}"));
+        // Exact f64 bit agreement on every node's weight vector.
+        for (i, (a, b)) in seq.final_states.iter().zip(pool.final_states.iter()).enumerate() {
+            for (e, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "node {i} dim {e} @{iters}");
+            }
+        }
     }
 }
 
