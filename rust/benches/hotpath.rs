@@ -15,8 +15,12 @@
 //! compress_into, emits `BENCH_encode_plane.json`), or
 //! `ADCDGD_BENCH_ONLY=stochastic` (stochastic plane: oracle sampling +
 //! minibatch gradients + full CHOCO-SGD rounds with the zero-alloc
-//! assertion, emits `BENCH_stochastic_plane.json`) to run a single
-//! section (CI uses these to publish the JSON artifacts quickly).
+//! assertion, emits `BENCH_stochastic_plane.json`), or
+//! `ADCDGD_BENCH_ONLY=scale` (full ADC-DGD + ternary rounds at
+//! n ∈ {16 384, 131 072} on sparse k-regular topologies — 1 048 576
+//! with `ADCDGD_SCALE_FULL=1` — emits `BENCH_scale.json`) to run a
+//! single section (CI uses these to publish the JSON artifacts
+//! quickly).
 
 use adcdgd::algorithms::{
     AdcDgdOptions, AlgorithmKind, ChocoSgdOptions, CompressorRef, ObjectiveRef, StepSize,
@@ -659,7 +663,7 @@ fn stochastic_plane_bench() {
     for n in [16usize, 256, 2048] {
         let p_edge = (12.0 / n as f64).min(0.5);
         let g = adcdgd::topology::erdos_renyi(n, p_edge, 5);
-        let w = adcdgd::consensus::lazy_metropolis(&g);
+        let w = adcdgd::consensus::Weights::lazy_metropolis(&g);
         let (data, _) = DataPlane::synthetic_logistic(n, shard, dim, 0.2, 9);
         let data = Arc::new(data);
         let objs: Vec<ObjectiveRef> = (0..n)
@@ -743,6 +747,117 @@ fn stochastic_plane_bench() {
     println!("stochastic-plane bench written to BENCH_stochastic_plane.json");
 }
 
+/// Scale section: the full ADC-DGD + ternary round loop on sparse
+/// topologies at n ∈ {16 384, 131 072} (and 1 048 576 when
+/// `ADCDGD_SCALE_FULL=1`), entirely through the O(E) plane — k-regular
+/// pairing-model graphs, `*_csr`-built Metropolis weights (β is never
+/// read: the lazy contract means nothing dense or spectral runs), slot
+/// mailboxes, pooled ternary payloads. Reports rounds/sec and modeled
+/// wire throughput (2E directed messages × ternary wire bytes per
+/// round), asserts the steady-state round loop allocates nothing, and
+/// emits `BENCH_scale.json`.
+fn scale_bench() {
+    println!("== scale (adc-dgd + ternary over sparse O(E) plane) ==");
+    let full = std::env::var("ADCDGD_SCALE_FULL").map(|v| v == "1").unwrap_or(false);
+    let mut sizes = vec![16_384usize, 131_072];
+    if full {
+        sizes.push(1_048_576);
+    } else {
+        println!("(1M-node point skipped; set ADCDGD_SCALE_FULL=1 to include it)");
+    }
+    let p = 4usize; // per-node dimension: the wire term, not the bottleneck
+    let k_deg = 6usize;
+    let mut rows_json = Vec::new();
+    for &n in &sizes {
+        // Build phase — everything here must be O(E) or O(N); at n = 1M
+        // an accidental O(N²) would hang for hours, so wall-clock is the
+        // regression signal and gets reported alongside the round times.
+        let t0 = std::time::Instant::now();
+        let g = adcdgd::topology::k_regular(n, k_deg, 5);
+        let build_graph_s = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let w = adcdgd::consensus::Weights::metropolis(&g);
+        let build_weights_s = t0.elapsed().as_secs_f64();
+        let edges = g.edges().len();
+        println!(
+            "n={n} E={edges}: graph {build_graph_s:.3}s, weights(+O(E) validate) \
+             {build_weights_s:.3}s"
+        );
+        let objs = quad_objectives(n, p, 11);
+        let kind = AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 });
+        let comp: CompressorRef = Arc::new(TernGrad::new());
+        let fleet = kind.build_fleet(&g, &w, &objs, Some(&comp), StepSize::Constant(0.05), None);
+        let mut nodes = fleet.nodes;
+        let mut plane = fleet.plane;
+        let mut rngs: Vec<Xoshiro256pp> =
+            (0..n).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
+        let mut bus = Bus::new(&g, LinkModel::default(), 3);
+        let mut pool = PayloadPool::new();
+
+        // Warm-up fills the pool cells and arena growth, then the
+        // zero-allocation assertion: the scaled round loop must never
+        // touch the heap in steady state — same contract as the encode
+        // and stochastic sections, now at six orders of magnitude.
+        let mut k = 0usize;
+        for _ in 0..3 {
+            k += 1;
+            stochastic_round(&mut nodes, &mut plane, &mut rngs, &mut bus, &mut pool, k);
+        }
+        let cells_warm = pool.fresh_cells();
+        let before = alloc_counter::count();
+        for _ in 0..3 {
+            k += 1;
+            stochastic_round(&mut nodes, &mut plane, &mut rngs, &mut bus, &mut pool, k);
+        }
+        let allocs = alloc_counter::count() - before;
+        assert_eq!(allocs, 0, "scaled round loop allocated {allocs} times (n={n})");
+
+        let rounds = if n >= 1_000_000 { 2 } else { 5 };
+        let timing = bench(
+            &format!("adc-dgd round n={n} E={edges} P={p} {rounds} rounds"),
+            0,
+            3,
+            Duration::from_secs(300),
+            || {
+                for _ in 0..rounds {
+                    k += 1;
+                    std::hint::black_box(stochastic_round(
+                        &mut nodes, &mut plane, &mut rngs, &mut bus, &mut pool, k,
+                    ));
+                }
+            },
+        );
+        println!("{}", timing.summary());
+        let round_s = timing.mean() / rounds as f64;
+        // Modeled wire traffic: every round sends 2E directed ternary
+        // messages of 8 scale bytes + ⌈p/4⌉ packed bytes.
+        let bytes_per_round = 2 * edges * (8 + p.div_ceil(4));
+        let mbytes_per_sec = bytes_per_round as f64 / round_s / 1e6;
+        println!(
+            "     -> {:.2} rounds/s, modeled wire {:.1} MB/s, allocs after warm-up: {allocs}",
+            1.0 / round_s,
+            mbytes_per_sec
+        );
+        rows_json.push(format!(
+            "    {{\"n\": {n}, \"edges\": {edges}, \"p\": {p}, \"k_regular\": {k_deg}, \
+             \"build_graph_s\": {build_graph_s:.4}, \"build_weights_s\": {build_weights_s:.4}, \
+             \"round_mean_s\": {round_s:.6}, \"rounds_per_sec\": {:.4}, \
+             \"modeled_wire_bytes_per_round\": {bytes_per_round}, \
+             \"modeled_mbytes_per_sec\": {mbytes_per_sec:.2}, \
+             \"allocs_after_warmup\": {allocs}, \"pool_cells\": {cells_warm}}}",
+            1.0 / round_s,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"scale\",\n  \"pathway\": \"adc-dgd + terngrad full rounds over \
+         k-regular sparse topologies (csr weights, lazy beta untouched)\",\n  \
+         \"one_m_included\": {full},\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    std::fs::write("BENCH_scale.json", &json).expect("write BENCH_scale.json");
+    println!("scale bench written to BENCH_scale.json");
+}
+
 fn xla_paths() {
     let dir = adcdgd::runtime::artifacts_dir(None);
     if !adcdgd::runtime::artifacts_available(&dir) {
@@ -809,6 +924,10 @@ fn main() {
         stochastic_plane_bench();
         return;
     }
+    if only == "scale" {
+        scale_bench();
+        return;
+    }
     println!("== L3 hot path ==");
     for p in [100usize, 10_000, 100_000] {
         round_throughput(p, 20);
@@ -820,6 +939,7 @@ fn main() {
     mailbox_comparison();
     encode_plane_comparison();
     stochastic_plane_bench();
+    scale_bench();
     println!("== XLA-backed paths ==");
     xla_paths();
 }

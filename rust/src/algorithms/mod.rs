@@ -159,7 +159,7 @@ pub(crate) mod testutil {
     //! message delivery and one shared RNG (the historical hand-run
     //! pattern these tests were written against).
     use super::*;
-    use crate::consensus::ConsensusMatrix;
+    use crate::consensus::{ConsensusMatrix, Weights};
     use crate::linalg::Matrix;
     use crate::state::StatePlane;
     use crate::topology;
@@ -186,7 +186,7 @@ pub(crate) mod testutil {
     ) -> PairHarness {
         let g = topology::pair();
         let w = Matrix::from_rows(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
-        let w = ConsensusMatrix::new(w, &g).unwrap();
+        let w = Weights::from_dense(ConsensusMatrix::new(w, &g).unwrap(), &g);
         let fleet = algorithm.build_fleet(&g, &w, objectives, compressor, step, None);
         PairHarness {
             plane: fleet.plane,

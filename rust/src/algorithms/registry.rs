@@ -4,19 +4,19 @@
 //!
 //! This is the single place in the codebase that knows how to wire a
 //! run's state: it sizes the [`StatePlane`] arena (dense rows for every
-//! algorithm, mirror arenas for ADC-DGD), lowers the consensus matrix to
-//! its shared [`CsrWeights`] form, applies the per-algorithm iterate
-//! initialization, and builds the per-node state machines. Everything
-//! above it — the scenario runner, experiments, examples, the CLI —
-//! declares *which* algorithm to run as data and never touches node
-//! constructors.
+//! algorithm, mirror arenas for ADC-DGD), shares the [`Weights`]'
+//! canonical [`CsrWeights`] across all nodes, applies the per-algorithm
+//! iterate initialization, and builds the per-node state machines.
+//! Everything above it — the scenario runner, experiments, examples, the
+//! CLI — declares *which* algorithm to run as data and never touches
+//! node constructors.
 
 use super::{
     AdcDgdNode, AdcDgdOptions, CedasNode, CedasOptions, ChocoSgdNode, ChocoSgdOptions,
     CompressorRef, DgdNode, DgdTNode, NaiveCompressedNode, NodeLogic, ObjectiveRef, QdgdNode,
     QdgdOptions, StepSize,
 };
-use crate::consensus::{ConsensusMatrix, CsrWeights};
+use crate::consensus::{CsrWeights, Weights};
 use crate::state::{PlaneLayout, StatePlane};
 use crate::topology::Graph;
 use std::sync::Arc;
@@ -212,15 +212,16 @@ impl AlgorithmKind {
     }
 
     /// Build the run's fleet: validate the (graph, W, objectives)
-    /// triple, lower `W` to CSR, allocate the state plane (with mirror
-    /// arenas when [`Self::needs_mirrors`]), initialize the iterates,
-    /// and construct every node's logic. The compressor is required when
-    /// [`Self::needs_compressor`] holds; `init` optionally overrides the
-    /// initial iterate of every node.
+    /// triple, share the weights' canonical CSR form across the nodes
+    /// (no lowering — `Weights` is CSR already), allocate the state
+    /// plane (with mirror arenas when [`Self::needs_mirrors`]),
+    /// initialize the iterates, and construct every node's logic. The
+    /// compressor is required when [`Self::needs_compressor`] holds;
+    /// `init` optionally overrides the initial iterate of every node.
     pub fn build_fleet(
         &self,
         graph: &Graph,
-        w: &ConsensusMatrix,
+        w: &Weights,
         objectives: &[ObjectiveRef],
         compressor: Option<&CompressorRef>,
         step: StepSize,
@@ -234,7 +235,7 @@ impl AlgorithmKind {
         if let Some(x0) = init {
             assert_eq!(x0.len(), p, "init dim mismatch");
         }
-        let weights = Arc::new(CsrWeights::from_consensus(w, graph));
+        let weights = Arc::clone(w.csr());
         let mut layout = if self.needs_mirrors() {
             PlaneLayout::with_mirrors(n, p, (0..n).map(|i| graph.degree(i)).collect())
         } else {
@@ -259,9 +260,9 @@ mod tests {
     use crate::objective::{Objective, ScalarQuadratic};
     use std::sync::Arc;
 
-    fn setup() -> (Graph, ConsensusMatrix, Vec<ObjectiveRef>) {
+    fn setup() -> (Graph, Weights, Vec<ObjectiveRef>) {
         let g = crate::topology::ring(4);
-        let w = crate::consensus::metropolis(&g);
+        let w = Weights::metropolis(&g);
         let objs: Vec<ObjectiveRef> = (0..4)
             .map(|i| Arc::new(ScalarQuadratic::new(1.0 + i as f64, 0.1)) as ObjectiveRef)
             .collect();

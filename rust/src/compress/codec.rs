@@ -239,27 +239,56 @@ impl Payload {
 /// compression). Codes are consumed lazily, so callers fuse their
 /// per-element computation (RNG draw, sign test) into the iterator
 /// without staging an i8 vector.
+///
+/// Whole bytes are assembled four codes at a time with fixed shifts
+/// (no running `filled` counter, no per-code flush branch), which is
+/// bit-identical to the scalar accumulate-and-flush loop: a missing
+/// tail code contributes `0 << shift`, exactly the zero bits the
+/// partial byte would have carried.
 #[inline]
-pub(crate) fn pack_codes(codes: impl Iterator<Item = u8>, out: &mut Vec<u8>) {
-    let mut byte = 0u8;
-    let mut filled = 0u32;
-    for code in codes {
-        byte |= code << (filled * 2);
-        filled += 1;
-        if filled == 4 {
-            out.push(byte);
-            byte = 0;
-            filled = 0;
+pub(crate) fn pack_codes(mut codes: impl Iterator<Item = u8>, out: &mut Vec<u8>) {
+    while let Some(c0) = codes.next() {
+        let (c1, c2, c3) = (codes.next(), codes.next(), codes.next());
+        out.push(c0 | (c1.unwrap_or(0) << 2) | (c2.unwrap_or(0) << 4) | (c3.unwrap_or(0) << 6));
+        if c3.is_none() {
+            break;
         }
-    }
-    if filled != 0 {
-        out.push(byte);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Golden-bit: the 4-codes-per-byte kernel must emit exactly the
+    /// bytes of the historical accumulate-and-flush scalar loop on
+    /// every tail length (0..=9 covers empty, partial, and full bytes).
+    #[test]
+    fn pack_codes_matches_scalar_reference_on_all_tails() {
+        fn reference(codes: &[u8]) -> Vec<u8> {
+            let mut out = Vec::new();
+            let (mut byte, mut filled) = (0u8, 0u32);
+            for &code in codes {
+                byte |= code << (filled * 2);
+                filled += 1;
+                if filled == 4 {
+                    out.push(byte);
+                    byte = 0;
+                    filled = 0;
+                }
+            }
+            if filled != 0 {
+                out.push(byte);
+            }
+            out
+        }
+        for len in 0..=9usize {
+            let codes: Vec<u8> = (0..len).map(|i| ((i * 7 + 3) % 4) as u8).collect();
+            let mut got = Vec::new();
+            pack_codes(codes.iter().copied(), &mut got);
+            assert_eq!(got, reference(&codes), "len {len}");
+        }
+    }
 
     #[test]
     fn f64_roundtrip_and_bytes() {

@@ -361,25 +361,57 @@ impl Compressor for Qsgd {
         let s = self.levels as f64;
         let scale = norm / s;
         let mut saturated = 0usize;
+        // Two-phase chunked rounding: the FP phase fills an 8-wide
+        // register block (straight-line floor/compare/select, friendly
+        // to autovectorization), then a scalar phase saturates and
+        // pushes. Per-element arithmetic is exactly the scalar
+        // expression — `s·|v|/norm` unreassociated, one RNG word per
+        // coordinate in index order — so the emitted integers are
+        // bit-identical to the historical fused loop.
+        const CHUNK: usize = 8;
+        let tail = len - len % CHUNK;
+        let mut q = [0.0f64; CHUNK];
         if self.levels <= 127 {
             buf.i8s.reserve(len);
-            for (i, &v) in z.iter().enumerate() {
-                let u = s * v.abs() / norm; // in [0, s]
+            for (zs, rs) in z.chunks_exact(CHUNK).zip(buf.rand.chunks_exact(CHUNK)) {
+                for ((qk, &v), &r) in q.iter_mut().zip(zs).zip(rs) {
+                    let u = s * v.abs() / norm; // in [0, s]
+                    let lo = u.floor();
+                    let qq = if block_f64(r) < u - lo { lo + 1.0 } else { lo };
+                    *qk = if v >= 0.0 { qq } else { -qq };
+                }
+                for &qv in &q {
+                    // Saturate the *signed* value (−128 is representable,
+                    // +128 is not) and count the clamp — the silent
+                    // `q as i8` float cast used to swallow it.
+                    buf.i8s.push(saturate_i8(qv, &mut saturated));
+                }
+            }
+            for (&v, &r) in z[tail..].iter().zip(&buf.rand[tail..len]) {
+                let u = s * v.abs() / norm;
                 let lo = u.floor();
-                let q = if block_f64(buf.rand[i]) < u - lo { lo + 1.0 } else { lo };
-                // Saturate the *signed* value (−128 is representable,
-                // +128 is not) and count the clamp — the silent
-                // `q as i8` float cast used to swallow it.
-                buf.i8s.push(saturate_i8(if v >= 0.0 { q } else { -q }, &mut saturated));
+                let qq = if block_f64(r) < u - lo { lo + 1.0 } else { lo };
+                buf.i8s.push(saturate_i8(if v >= 0.0 { qq } else { -qq }, &mut saturated));
             }
             CompressedRef { kind: PayloadKind::I8, len, scale, saturated }
         } else {
             buf.i16s.reserve(len);
-            for (i, &v) in z.iter().enumerate() {
+            for (zs, rs) in z.chunks_exact(CHUNK).zip(buf.rand.chunks_exact(CHUNK)) {
+                for ((qk, &v), &r) in q.iter_mut().zip(zs).zip(rs) {
+                    let u = s * v.abs() / norm;
+                    let lo = u.floor();
+                    let qq = if block_f64(r) < u - lo { lo + 1.0 } else { lo };
+                    *qk = qq * v.signum();
+                }
+                for &qv in &q {
+                    buf.i16s.push(saturate_i16(qv, &mut saturated));
+                }
+            }
+            for (&v, &r) in z[tail..].iter().zip(&buf.rand[tail..len]) {
                 let u = s * v.abs() / norm;
                 let lo = u.floor();
-                let q = if block_f64(buf.rand[i]) < u - lo { lo + 1.0 } else { lo };
-                buf.i16s.push(saturate_i16(q * v.signum(), &mut saturated));
+                let qq = if block_f64(r) < u - lo { lo + 1.0 } else { lo };
+                buf.i16s.push(saturate_i16(qq * v.signum(), &mut saturated));
             }
             CompressedRef { kind: PayloadKind::I16, len, scale, saturated }
         }
@@ -575,6 +607,52 @@ mod tests {
         assert!(bias.abs() < 5e-3, "bias={bias}");
         let zero = op.compress(&[0.0; 4], &mut r);
         assert_eq!(zero.decode(), vec![0.0; 4]);
+    }
+
+    /// Golden-bit (chunked QSGD): the 8-wide two-phase kernel must emit
+    /// exactly the integers the scalar per-element expression produces,
+    /// on lengths covering full chunks, tails, and tiny inputs, for
+    /// both the i8 and i16 wire paths.
+    #[test]
+    fn qsgd_chunked_matches_scalar_reference_bitwise() {
+        for &levels in &[64usize, 1000] {
+            let op = Qsgd::new(levels);
+            for &len in &[1usize, 7, 8, 19, 32] {
+                let z: Vec<f64> = (0..len)
+                    .map(|i| {
+                        let sign = if i % 3 == 0 { -1.0 } else { 1.0 };
+                        sign * (0.37 * i as f64 + 0.11)
+                    })
+                    .collect();
+                let seed = 77 + len as u64;
+                let c = op.compress(&z, &mut Xoshiro256pp::seed_from_u64(seed));
+                // Replay the RNG stream and the scalar math.
+                let mut rand = Vec::new();
+                Xoshiro256pp::seed_from_u64(seed).fill_u64(&mut rand, len);
+                let norm = crate::linalg::vecops::norm2(&z);
+                let s = levels as f64;
+                let expect: Vec<f64> = z
+                    .iter()
+                    .zip(&rand)
+                    .map(|(&v, &r)| {
+                        let u = s * v.abs() / norm;
+                        let lo = u.floor();
+                        let q = if block_f64(r) < u - lo { lo + 1.0 } else { lo };
+                        if v >= 0.0 {
+                            q
+                        } else {
+                            -q
+                        }
+                    })
+                    .collect();
+                let got: Vec<f64> = match c.payload {
+                    Payload::I8 { data, .. } => data.iter().map(|&q| q as f64).collect(),
+                    Payload::I16 { data, .. } => data.iter().map(|&q| q as f64).collect(),
+                    other => panic!("unexpected wire kind {:?}", other.kind()),
+                };
+                assert_eq!(got, expect, "levels {levels}, len {len}");
+            }
+        }
     }
 
     #[test]

@@ -1,6 +1,16 @@
 //! Consensus-matrix constructions.
+//!
+//! Each named family comes in two shapes: the historical dense builder
+//! (`metropolis`, …) returning a validated [`ConsensusMatrix`], and an
+//! O(E) sparse builder (`metropolis_csr`, …) returning [`CsrWeights`]
+//! directly. The sparse builders never materialize an `N × N` matrix and
+//! are **bit-identical** to lowering the dense result through
+//! [`CsrWeights::from_consensus`]: per-edge entries use the same
+//! floating-point expressions, and diagonals are the same
+//! `1 − Σ_offdiag` summed in ascending-neighbor order (property-pinned
+//! in `tests/properties.rs`).
 
-use super::{ConsensusMatrix, ValidationError};
+use super::{ConsensusMatrix, CsrWeights, ValidationError};
 use crate::linalg::Matrix;
 use crate::topology::Graph;
 
@@ -57,6 +67,75 @@ pub fn max_degree(g: &Graph) -> ConsensusMatrix {
 /// A user-supplied matrix, validated.
 pub fn custom(w: Matrix, g: &Graph) -> Result<ConsensusMatrix, ValidationError> {
     ConsensusMatrix::new(w, g)
+}
+
+/// O(E) Metropolis–Hastings weights straight into CSR. Bit-identical to
+/// `CsrWeights::from_consensus(&metropolis(g), g)`: off-diagonals are the
+/// same per-edge `1/(1+max(dᵢ,dⱼ))` expression and the diagonal is
+/// `1 − Σ_offdiag` with the sum taken in ascending-neighbor order, the
+/// exact reduction the dense path performs.
+pub fn metropolis_csr(g: &Graph) -> CsrWeights {
+    let n = g.num_nodes();
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut indices = Vec::with_capacity(2 * g.num_edges());
+    let mut weights: Vec<f64> = Vec::with_capacity(2 * g.num_edges());
+    let mut diag = Vec::with_capacity(n);
+    indptr.push(0);
+    for i in 0..n {
+        let di = g.degree(i);
+        for &j in g.neighbors(i) {
+            indices.push(j);
+            weights.push(1.0 / (1.0 + di.max(g.degree(j)) as f64));
+        }
+        let off: f64 = weights[indptr[i]..].iter().sum();
+        diag.push(1.0 - off);
+        indptr.push(indices.len());
+    }
+    CsrWeights::from_parts(diag, indptr, indices, weights)
+}
+
+/// O(E) lazy Metropolis `(I + W_MH)/2` in CSR form. Off-diagonals are
+/// `0.5·v` (bitwise equal to the dense path's `0.5·v + 0.0` since
+/// `v > 0`), diagonals `0.5·W_MH(i,i) + 0.5` in the dense expression
+/// order.
+pub fn lazy_metropolis_csr(g: &Graph) -> CsrWeights {
+    let mh = metropolis_csr(g);
+    let n = g.num_nodes();
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut indices = Vec::with_capacity(mh.nnz());
+    let mut weights = Vec::with_capacity(mh.nnz());
+    let mut diag = Vec::with_capacity(n);
+    indptr.push(0);
+    for i in 0..n {
+        for (&j, &v) in mh.neighbors(i).iter().zip(mh.row_weights(i)) {
+            indices.push(j);
+            weights.push(0.5 * v);
+        }
+        diag.push(0.5 * mh.diag(i) + 0.5);
+        indptr.push(indices.len());
+    }
+    CsrWeights::from_parts(diag, indptr, indices, weights)
+}
+
+/// O(E) max-degree weights in CSR form: `1/(1+Δ)` on every link,
+/// diagonal `1 − v·dᵢ` exactly as in the dense builder.
+pub fn max_degree_csr(g: &Graph) -> CsrWeights {
+    let n = g.num_nodes();
+    let v = 1.0 / (1.0 + g.max_degree() as f64);
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut indices = Vec::with_capacity(2 * g.num_edges());
+    let mut weights = Vec::with_capacity(2 * g.num_edges());
+    let mut diag = Vec::with_capacity(n);
+    indptr.push(0);
+    for i in 0..n {
+        for &j in g.neighbors(i) {
+            indices.push(j);
+            weights.push(v);
+        }
+        diag.push(1.0 - v * g.degree(i) as f64);
+        indptr.push(indices.len());
+    }
+    CsrWeights::from_parts(diag, indptr, indices, weights)
 }
 
 /// The paper's Fig. 4 consensus matrix for the Fig. 3 four-node topology.
@@ -128,6 +207,29 @@ mod tests {
         let (g, cm) = paper_four_node_w();
         assert_eq!(g.num_nodes(), 4);
         assert!((cm.beta() - 0.75).abs() < 1e-6);
+    }
+
+    /// The sparse builders must match the dense-then-lower path bit for
+    /// bit (the full property sweep lives in `tests/properties.rs`).
+    #[test]
+    fn csr_builders_match_dense_lowering_on_grid() {
+        let g = topology::grid2d(3, 4);
+        let pairs: [(CsrWeights, ConsensusMatrix); 3] = [
+            (metropolis_csr(&g), metropolis(&g)),
+            (lazy_metropolis_csr(&g), lazy_metropolis(&g)),
+            (max_degree_csr(&g), max_degree(&g)),
+        ];
+        for (sparse, dense) in &pairs {
+            let lowered = CsrWeights::from_consensus(dense, &g);
+            assert_eq!(sparse.nnz(), lowered.nnz());
+            for i in 0..g.num_nodes() {
+                assert_eq!(sparse.diag(i).to_bits(), lowered.diag(i).to_bits(), "diag {i}");
+                assert_eq!(sparse.neighbors(i), lowered.neighbors(i));
+                for (a, b) in sparse.row_weights(i).iter().zip(lowered.row_weights(i)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "row {i}");
+                }
+            }
+        }
     }
 
     #[test]

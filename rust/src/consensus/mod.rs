@@ -5,11 +5,22 @@
 //! (positive on links and the diagonal may be positive; zero elsewhere),
 //! and symmetric. Its second-largest eigenvalue magnitude
 //! `β = max(|λ₂|, |λ_N|) < 1` governs consensus speed.
+//!
+//! The canonical runtime representation is [`Weights`]: an
+//! `Arc<CsrWeights>` built by the O(E) `*_csr` builders (bit-identical
+//! to lowering the dense builders), O(E)-validated, with β computed
+//! lazily by sparse power iteration. The dense [`ConsensusMatrix`]
+//! remains for user-supplied matrices and small-N analysis paths.
 
 mod builders;
 mod csr;
 mod matrix;
+mod weights;
 
-pub use builders::{custom, lazy_metropolis, max_degree, metropolis, paper_four_node_w};
+pub use builders::{
+    custom, lazy_metropolis, lazy_metropolis_csr, max_degree, max_degree_csr, metropolis,
+    metropolis_csr, paper_four_node_w,
+};
 pub use csr::CsrWeights;
 pub use matrix::{ConsensusMatrix, ValidationError};
+pub use weights::Weights;

@@ -1,0 +1,236 @@
+//! The canonical consensus-weight representation: CSR-first, lazily-β.
+//!
+//! [`Weights`] is what the coordinator and the algorithm registry carry
+//! end-to-end. It always holds an `Arc<CsrWeights>` — the form every
+//! engine mixes with — and only holds a dense [`ConsensusMatrix`] when
+//! one was supplied (the `WeightSpec::Custom` / Paper-4 pathways), so
+//! the named builder pathways are O(E) in both time and memory and a
+//! million-node fleet never touches an `N × N` structure.
+//!
+//! Two contracts matter here:
+//!
+//! - **O(E) validation.** [`Weights::from_csr`] checks the §III-A
+//!   properties directly on the sparse form: the sparsity pattern must
+//!   equal the topology's adjacency, link weights must be positive, each
+//!   row must sum to 1, and each undirected edge's paired entries must
+//!   agree (symmetry). Column sums then equal row sums by symmetry, so
+//!   no O(N²) column pass exists. Unlike the dense path, contraction
+//!   (`β < 1`) is *not* checked eagerly —
+//! - **lazy β.** Only step-size policies and experiment notes read β,
+//!   and at n = 10⁶ even the O(E)-per-step sparse power iteration is
+//!   work the round loop should never pay for. β is therefore computed
+//!   on first use through a [`OnceLock`] via
+//!   [`crate::linalg::estimate_beta_csr`] (implicit deflation, squared
+//!   operator). For validated Metropolis-family weights on a connected
+//!   graph β < 1 holds by construction.
+
+use super::builders;
+use super::{ConsensusMatrix, CsrWeights, ValidationError};
+use crate::linalg::estimate_beta_csr;
+use crate::topology::Graph;
+use std::sync::{Arc, OnceLock};
+
+const TOL: f64 = 1e-9;
+
+/// Validated consensus weights over a topology, CSR-canonical with an
+/// optional dense lowering and a lazily-computed spectral gap.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    csr: Arc<CsrWeights>,
+    dense: Option<ConsensusMatrix>,
+    beta: OnceLock<f64>,
+}
+
+impl Weights {
+    /// Validate a CSR candidate against `g` (O(E): pattern, positivity,
+    /// row sums, paired-edge symmetry) and wrap it. β stays lazy.
+    pub fn from_csr(csr: CsrWeights, g: &Graph) -> Result<Self, ValidationError> {
+        validate_csr(&csr, g)?;
+        Ok(Self { csr: Arc::new(csr), dense: None, beta: OnceLock::new() })
+    }
+
+    /// Wrap an already-validated dense matrix, keeping the dense form
+    /// available (Custom/paper pathways) and seeding β from its eager
+    /// estimate.
+    pub fn from_dense(w: ConsensusMatrix, g: &Graph) -> Self {
+        let csr = Arc::new(CsrWeights::from_consensus(&w, g));
+        let beta = OnceLock::new();
+        beta.set(w.beta()).expect("fresh OnceLock");
+        Self { csr, dense: Some(w), beta }
+    }
+
+    /// O(E) Metropolis–Hastings weights (always valid on any graph).
+    pub fn metropolis(g: &Graph) -> Self {
+        Self::from_csr(builders::metropolis_csr(g), g)
+            .expect("Metropolis weights are always valid")
+    }
+
+    /// O(E) lazy Metropolis `(I + W_MH)/2` (always valid; PSD spectrum).
+    pub fn lazy_metropolis(g: &Graph) -> Self {
+        Self::from_csr(builders::lazy_metropolis_csr(g), g)
+            .expect("lazy Metropolis weights are always valid")
+    }
+
+    /// O(E) max-degree weights (always valid).
+    pub fn max_degree(g: &Graph) -> Self {
+        Self::from_csr(builders::max_degree_csr(g), g)
+            .expect("max-degree weights are always valid")
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.csr.n()
+    }
+
+    /// The canonical CSR form (what the engines mix with).
+    pub fn csr(&self) -> &Arc<CsrWeights> {
+        &self.csr
+    }
+
+    /// The dense lowering, if this `Weights` was built from one.
+    pub fn dense(&self) -> Option<&ConsensusMatrix> {
+        self.dense.as_ref()
+    }
+
+    /// `β = max(|λ₂|, |λ_N|)`, computed sparsely on first use and cached.
+    pub fn beta(&self) -> f64 {
+        *self.beta.get_or_init(|| estimate_beta_csr(&self.csr))
+    }
+}
+
+/// O(E) §III-A validation on the CSR form. Column sums are implied by
+/// row sums + symmetry, so no column pass exists.
+fn validate_csr(w: &CsrWeights, g: &Graph) -> Result<(), ValidationError> {
+    let n = g.num_nodes();
+    if w.n() != n {
+        return Err(ValidationError::Shape { expected: n, rows: w.n(), cols: w.n() });
+    }
+    for i in 0..n {
+        let nbrs = w.neighbors(i);
+        let gn = g.neighbors(i);
+        if nbrs != gn {
+            // First column where the stored pattern departs from the
+            // topology's adjacency row.
+            let j = match nbrs.iter().zip(gn.iter()).find(|(a, b)| a != b) {
+                Some((&a, &b)) => a.min(b),
+                None if nbrs.len() > gn.len() => nbrs[gn.len()],
+                None => gn[nbrs.len()],
+            };
+            return Err(ValidationError::SparsityMismatch { i, j, value: 0.0 });
+        }
+        let wts = w.row_weights(i);
+        for (&j, &v) in nbrs.iter().zip(wts) {
+            if v <= 0.0 {
+                return Err(ValidationError::SparsityMismatch { i, j, value: v });
+            }
+        }
+        let sum = w.diag(i) + wts.iter().sum::<f64>();
+        if (sum - 1.0).abs() > TOL {
+            return Err(ValidationError::NotDoublyStochastic { axis: "row", index: i, sum });
+        }
+    }
+    // Paired-edge symmetry: each undirected link checked once via the
+    // mirror row's binary search.
+    for i in 0..n {
+        for (&j, &v) in w.neighbors(i).iter().zip(w.row_weights(i)) {
+            if j > i {
+                // The pattern pass above pinned every row to the graph's
+                // (undirected) adjacency, so the mirror entry exists.
+                let back = w.weight(j, i).expect("pattern already validated");
+                if (back - v).abs() > TOL {
+                    return Err(ValidationError::NotSymmetric { i, j });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::{lazy_metropolis, metropolis, metropolis_csr, paper_four_node_w};
+    use crate::topology;
+
+    #[test]
+    fn builder_pathways_validate_and_match_dense() {
+        let g = topology::erdos_renyi(14, 0.4, 21);
+        let sparse = Weights::metropolis(&g);
+        let dense = metropolis(&g);
+        assert_eq!(sparse.n(), 14);
+        assert!(sparse.dense().is_none());
+        let lowered = CsrWeights::from_consensus(&dense, &g);
+        for i in 0..14 {
+            assert_eq!(sparse.csr().diag(i).to_bits(), lowered.diag(i).to_bits());
+            for (a, b) in sparse.csr().row_weights(i).iter().zip(lowered.row_weights(i)) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_beta_matches_dense_estimate() {
+        let g = topology::ring(8);
+        let sparse = Weights::lazy_metropolis(&g);
+        let dense = lazy_metropolis(&g);
+        assert!((sparse.beta() - dense.beta()).abs() < 1e-9);
+        // Cached: second read returns the same bits.
+        assert_eq!(sparse.beta().to_bits(), sparse.beta().to_bits());
+    }
+
+    #[test]
+    fn from_dense_keeps_matrix_and_seeds_beta() {
+        let (g, cm) = paper_four_node_w();
+        let expect = cm.beta();
+        let w = Weights::from_dense(cm, &g);
+        assert!(w.dense().is_some());
+        assert_eq!(w.beta().to_bits(), expect.to_bits());
+        assert_eq!(w.csr().diag(1), 0.75);
+    }
+
+    #[test]
+    fn validation_rejects_bad_row_sum() {
+        let g = topology::pair();
+        let csr = CsrWeights::from_parts(vec![0.6, 0.5], vec![0, 1, 2], vec![1, 0], vec![0.5, 0.5]);
+        let err = Weights::from_csr(csr, &g).unwrap_err();
+        assert!(matches!(err, ValidationError::NotDoublyStochastic { axis: "row", index: 0, .. }));
+    }
+
+    #[test]
+    fn validation_rejects_asymmetric_pair() {
+        let g = topology::pair();
+        let csr = CsrWeights::from_parts(vec![0.6, 0.5], vec![0, 1, 2], vec![1, 0], vec![0.4, 0.5]);
+        let err = Weights::from_csr(csr, &g).unwrap_err();
+        assert!(matches!(err, ValidationError::NotSymmetric { i: 0, j: 1 }));
+    }
+
+    #[test]
+    fn validation_rejects_pattern_mismatch() {
+        let g = topology::path(3); // edges (0,1),(1,2)
+        // Pretend there's a weight on the absent (0,2) link.
+        let csr = CsrWeights::from_parts(
+            vec![0.4, 0.4, 0.4],
+            vec![0, 2, 4, 6],
+            vec![1, 2, 0, 2, 0, 1],
+            vec![0.3, 0.3, 0.3, 0.3, 0.3, 0.3],
+        );
+        let err = Weights::from_csr(csr, &g).unwrap_err();
+        assert!(matches!(err, ValidationError::SparsityMismatch { i: 0, j: 2, .. }));
+    }
+
+    #[test]
+    fn validation_rejects_nonpositive_link() {
+        let g = topology::pair();
+        let csr = CsrWeights::from_parts(vec![1.0, 1.0], vec![0, 1, 2], vec![1, 0], vec![0.0, 0.0]);
+        let err = Weights::from_csr(csr, &g).unwrap_err();
+        assert!(matches!(err, ValidationError::SparsityMismatch { i: 0, j: 1, .. }));
+    }
+
+    #[test]
+    fn validation_rejects_wrong_size() {
+        let g = topology::path(3);
+        let csr = metropolis_csr(&topology::pair());
+        let err = Weights::from_csr(csr, &g).unwrap_err();
+        assert!(matches!(err, ValidationError::Shape { expected: 3, .. }));
+    }
+}

@@ -282,26 +282,26 @@ pub fn run_trials(
 mod tests {
     use super::*;
     use crate::algorithms::{AlgorithmKind, StepSize};
-    use crate::consensus::ConsensusMatrix;
+    use crate::consensus::{ConsensusMatrix, Weights};
     use crate::linalg::Matrix;
     use crate::objective::ScalarQuadratic;
     use std::sync::Arc;
 
-    fn pair_setup() -> (Graph, Vec<ObjectiveRef>, ConsensusMatrix) {
+    fn pair_setup() -> (Graph, Vec<ObjectiveRef>, Weights) {
         let g = crate::topology::pair();
         let objs: Vec<ObjectiveRef> = vec![
             Arc::new(ScalarQuadratic::new(4.0, 2.0)),
             Arc::new(ScalarQuadratic::new(2.0, -3.0)),
         ];
         let w = Matrix::from_rows(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
-        let w = ConsensusMatrix::new(w, &g).unwrap();
+        let w = Weights::from_dense(ConsensusMatrix::new(w, &g).unwrap(), &g);
         (g, objs, w)
     }
 
     fn dgd_fleet(
         g: &Graph,
         objs: &[ObjectiveRef],
-        w: &ConsensusMatrix,
+        w: &Weights,
         step: StepSize,
     ) -> Fleet {
         AlgorithmKind::Dgd.build_fleet(g, w, objs, None, step, None)
@@ -342,7 +342,7 @@ mod tests {
             Arc::new(ScalarQuadratic::new(1.0, 1.0)),
         ];
         let w = Matrix::from_rows(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
-        let w = ConsensusMatrix::new(w, &g).unwrap();
+        let w = Weights::from_dense(ConsensusMatrix::new(w, &g).unwrap(), &g);
         let cfg = RunConfig {
             iterations: 100_000,
             step_size: StepSize::Constant(0.1),

@@ -12,7 +12,7 @@
 use super::{run_fleet, RunConfig, RunOutput};
 use crate::algorithms::{AlgorithmKind, CompressorRef, ObjectiveRef};
 use crate::compress;
-use crate::consensus::{self, ConsensusMatrix};
+use crate::consensus::{self, ConsensusMatrix, Weights};
 use crate::rng::Xoshiro256pp;
 use crate::topology::{self, Graph};
 use std::fmt;
@@ -57,6 +57,26 @@ pub enum TopologySpec {
         /// Construction seed.
         seed: u64,
     },
+    /// Random geometric graph on the unit square (nodes within `radius`
+    /// are linked), conditioned on connectivity.
+    RandomGeometric {
+        /// Node count.
+        n: usize,
+        /// Connection radius.
+        radius: f64,
+        /// Construction seed.
+        seed: u64,
+    },
+    /// Random `k`-regular graph via the pairing model, conditioned on
+    /// connectivity.
+    KRegular {
+        /// Node count.
+        n: usize,
+        /// Uniform degree.
+        k: usize,
+        /// Construction seed.
+        seed: u64,
+    },
     /// A prebuilt graph.
     Custom(Graph),
 }
@@ -76,12 +96,17 @@ impl TopologySpec {
             TopologySpec::BarabasiAlbert { n, m, seed } => {
                 topology::barabasi_albert(*n, *m, *seed)
             }
+            TopologySpec::RandomGeometric { n, radius, seed } => {
+                topology::random_geometric(*n, *radius, *seed)
+            }
+            TopologySpec::KRegular { n, k, seed } => topology::k_regular(*n, *k, *seed),
             TopologySpec::Custom(g) => g.clone(),
         }
     }
 
     /// Parse a CLI topology name (`ring|star|complete|path|grid|er|ba|
-    /// pair|paper4`) with node count `n` and construction `seed`.
+    /// rgg|kreg|pair|paper4`) with node count `n` and construction
+    /// `seed`.
     pub fn parse(name: &str, n: usize, seed: u64) -> Result<Self, String> {
         Ok(match name {
             "pair" => TopologySpec::Pair,
@@ -96,6 +121,17 @@ impl TopologySpec {
             }
             "er" => TopologySpec::ErdosRenyi { n, p: 0.3, seed },
             "ba" => TopologySpec::BarabasiAlbert { n, m: 2, seed },
+            "rgg" => {
+                // Default radius ~ √(2 ln n / (π n)): twice the RGG
+                // connectivity threshold area, so the retry loop
+                // converges quickly at any n.
+                let radius =
+                    (2.0 * (n as f64).ln() / (std::f64::consts::PI * n as f64)).sqrt().min(1.0);
+                TopologySpec::RandomGeometric { n, radius, seed }
+            }
+            // k = min(6, n−1) keeps n·k even automatically: if k is odd
+            // it equals n−1, which forces n even.
+            "kreg" => TopologySpec::KRegular { n, k: 6.min(n.saturating_sub(1)), seed },
             other => return Err(format!("unknown topology {other}")),
         })
     }
@@ -119,17 +155,22 @@ pub enum WeightSpec {
 }
 
 impl WeightSpec {
-    /// Materialize `W` for `graph` (built from `topo`).
-    pub fn build(&self, topo: &TopologySpec, graph: &Graph) -> ConsensusMatrix {
+    /// Materialize the weights for `graph` (built from `topo`). Named
+    /// families go through the O(E) sparse builders and never touch a
+    /// dense matrix; only [`WeightSpec::Custom`] (and Paper-4's pinned
+    /// matrix) lower from dense form.
+    pub fn build(&self, topo: &TopologySpec, graph: &Graph) -> Weights {
         match self {
             WeightSpec::Auto => match topo {
-                TopologySpec::Paper4 => consensus::paper_four_node_w().1,
-                _ => consensus::metropolis(graph),
+                TopologySpec::Paper4 => {
+                    Weights::from_dense(consensus::paper_four_node_w().1, graph)
+                }
+                _ => Weights::metropolis(graph),
             },
-            WeightSpec::Metropolis => consensus::metropolis(graph),
-            WeightSpec::LazyMetropolis => consensus::lazy_metropolis(graph),
-            WeightSpec::MaxDegree => consensus::max_degree(graph),
-            WeightSpec::Custom(w) => w.clone(),
+            WeightSpec::Metropolis => Weights::metropolis(graph),
+            WeightSpec::LazyMetropolis => Weights::lazy_metropolis(graph),
+            WeightSpec::MaxDegree => Weights::max_degree(graph),
+            WeightSpec::Custom(w) => Weights::from_dense(w.clone(), graph),
         }
     }
 }
@@ -472,12 +513,12 @@ impl ScenarioSpec {
     }
 }
 
-/// A materialized [`ScenarioSpec`]: graph, consensus matrix, objectives,
-/// and compressor built once, runnable many times.
+/// A materialized [`ScenarioSpec`]: graph, consensus weights,
+/// objectives, and compressor built once, runnable many times.
 pub struct PreparedScenario {
     algorithm: AlgorithmKind,
     graph: Graph,
-    weights: ConsensusMatrix,
+    weights: Weights,
     objectives: Vec<ObjectiveRef>,
     compressor: Option<CompressorRef>,
     config: RunConfig,
@@ -490,8 +531,9 @@ impl PreparedScenario {
         &self.graph
     }
 
-    /// The built (validated) consensus matrix.
-    pub fn weights(&self) -> &ConsensusMatrix {
+    /// The built (validated) consensus weights. β is computed lazily on
+    /// first [`Weights::beta`] read.
+    pub fn weights(&self) -> &Weights {
         &self.weights
     }
 
@@ -573,6 +615,7 @@ mod tests {
         let spec = ScenarioSpec::paper4(AlgorithmKind::Dgd).with_config(cfg);
         let a = run_scenario(&spec);
         let (g, w) = crate::consensus::paper_four_node_w();
+        let w = Weights::from_dense(w, &g);
         let objs = crate::experiments::paper_four_node_objectives();
         let fleet = AlgorithmKind::Dgd.build_fleet(&g, &w, &objs, None, cfg.step_size, None);
         let b = crate::coordinator::run_fleet(&g, &objs, fleet, &cfg);
@@ -788,7 +831,9 @@ mod tests {
 
     #[test]
     fn topology_parse_covers_cli_names() {
-        for name in ["pair", "paper4", "ring", "star", "complete", "path", "grid", "er", "ba"] {
+        for name in
+            ["pair", "paper4", "ring", "star", "complete", "path", "grid", "er", "ba", "rgg", "kreg"]
+        {
             let spec = TopologySpec::parse(name, 6, 1).unwrap();
             let g = spec.build();
             assert!(g.num_nodes() >= 2, "{name}");

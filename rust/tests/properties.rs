@@ -8,7 +8,7 @@ use adcdgd::compress::{
     RandomizedRounding, TernGrad,
 };
 use adcdgd::consensus::{lazy_metropolis, max_degree, metropolis};
-use adcdgd::linalg::{estimate_beta, vecops, Matrix};
+use adcdgd::linalg::{vecops, Matrix};
 use adcdgd::rng::{Normal, Uniform, Xoshiro256pp};
 use adcdgd::stochastic::SampleOracle;
 use adcdgd::topology;
@@ -276,6 +276,71 @@ fn prop_ring_beta_closed_form() {
             .fold(0.0f64, f64::max);
         assert!((w.beta() - beta_true).abs() < 1e-6, "n={n}: {} vs {beta_true}", w.beta());
     }
+}
+
+/// The direct O(E) sparse builders are **bit-identical** to lowering
+/// the dense builders, on random graphs from four families (ER, BA,
+/// ring, star). This is the contract that lets the runtime skip the
+/// dense matrix entirely: same diagonal reduction order, same per-link
+/// expressions, so every weight carries the exact historical bits.
+#[test]
+fn prop_csr_builders_bit_identical_to_dense() {
+    use adcdgd::consensus::{lazy_metropolis_csr, max_degree_csr, metropolis_csr, CsrWeights};
+    let mut rng = Xoshiro256pp::seed_from_u64(117);
+    for trial in 0..16 {
+        let n = 3 + rng.next_bounded(14) as usize;
+        let g = match trial % 4 {
+            0 => topology::erdos_renyi(n, 0.4, rng.next_u64()),
+            1 => topology::barabasi_albert(n.max(4), 2, rng.next_u64()),
+            2 => topology::ring(n),
+            _ => topology::star(n),
+        };
+        let pairs: [(&str, CsrWeights, CsrWeights); 3] = [
+            ("metropolis", metropolis_csr(&g), CsrWeights::from_consensus(&metropolis(&g), &g)),
+            ("lazy", lazy_metropolis_csr(&g), CsrWeights::from_consensus(&lazy_metropolis(&g), &g)),
+            ("maxdeg", max_degree_csr(&g), CsrWeights::from_consensus(&max_degree(&g), &g)),
+        ];
+        for (name, sparse, lowered) in pairs {
+            for i in 0..g.num_nodes() {
+                assert_eq!(
+                    sparse.diag(i).to_bits(),
+                    lowered.diag(i).to_bits(),
+                    "{name} trial {trial}: diag[{i}]"
+                );
+                assert_eq!(sparse.neighbors(i), lowered.neighbors(i), "{name}: pattern row {i}");
+                let (sw, lw) = (sparse.row_weights(i), lowered.row_weights(i));
+                for (a, b) in sw.iter().zip(lw) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{name} trial {trial}: row {i}");
+                }
+            }
+        }
+    }
+}
+
+/// Sparse β (implicitly-deflated CSR power iteration) agrees with the
+/// dense estimate to 1e-9 on the paper's four-node matrix and on a
+/// 256-node Erdős–Rényi graph — the precision contract that lets
+/// step-size policies read [`adcdgd::consensus::Weights::beta`]
+/// regardless of which representation built the weights.
+#[test]
+fn prop_sparse_beta_matches_dense() {
+    use adcdgd::consensus::{paper_four_node_w, CsrWeights, Weights};
+    use adcdgd::linalg::estimate_beta_csr;
+    let (g4, w4) = paper_four_node_w();
+    let sparse4 = estimate_beta_csr(&CsrWeights::from_consensus(&w4, &g4));
+    assert!(
+        (sparse4 - w4.beta()).abs() < 1e-9,
+        "paper4: sparse {sparse4} vs dense {}",
+        w4.beta()
+    );
+    let g = topology::erdos_renyi(256, 0.05, 11);
+    let dense = metropolis(&g);
+    let lazy_beta = Weights::metropolis(&g).beta();
+    assert!(
+        (lazy_beta - dense.beta()).abs() < 1e-9,
+        "er256: sparse {lazy_beta} vs dense {}",
+        dense.beta()
+    );
 }
 
 /// Graph builders produce valid graphs under random parameters.
