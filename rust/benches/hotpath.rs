@@ -18,16 +18,19 @@
 //! assertion, emits `BENCH_stochastic_plane.json`), or
 //! `ADCDGD_BENCH_ONLY=scale` (full ADC-DGD + ternary rounds at
 //! n ∈ {16 384, 131 072} on sparse k-regular topologies — 1 048 576
-//! with `ADCDGD_SCALE_FULL=1` — emits `BENCH_scale.json`) to run a
-//! single section (CI uses these to publish the JSON artifacts
-//! quickly).
+//! with `ADCDGD_SCALE_FULL=1` — emits `BENCH_scale.json`), or
+//! `ADCDGD_BENCH_ONLY=wire` (wire plane: serializer kernel throughput
+//! plus full rounds with materialized bytes and the zero-alloc
+//! assertion, emits `BENCH_wire_plane.json`) to run a single section
+//! (CI uses these to publish the JSON artifacts quickly).
 
 use adcdgd::algorithms::{
     AdcDgdOptions, AlgorithmKind, ChocoSgdOptions, CompressorRef, ObjectiveRef, StepSize,
 };
 use adcdgd::stochastic::{DataPlane, SampleOracle, ShardObjective, StochasticObjective};
 use adcdgd::compress::{
-    Compressor, LowPrecisionQuantizer, Payload, PayloadPool, Qsgd, RandomizedRounding, TernGrad,
+    decode_from, encode_into, Compressor, LowPrecisionQuantizer, Payload, PayloadBuf, PayloadPool,
+    Qsgd, RandomizedRounding, TernGrad, WireBuf,
 };
 use adcdgd::coordinator::{
     run_scenario, CompressorSpec, EngineKind, ObjectiveSpec, RunConfig, ScenarioSpec,
@@ -858,6 +861,192 @@ fn scale_bench() {
     println!("scale bench written to BENCH_scale.json");
 }
 
+/// One full compress → serialize → deserialize → consume round: pooled
+/// encode and broadcast as in [`encode_round`], but every delivered
+/// message is materialized as real wire bytes (`encode_into`), parsed
+/// back (`decode_from`) through the shared decode arena, folded into the
+/// receiver's accumulator row, and reclaimed. The bus additionally
+/// meters the same serialized stream per link, so measured-vs-modeled
+/// totals come for free.
+#[allow(clippy::too_many_arguments)]
+fn wire_round(
+    bus: &mut Bus,
+    op: &dyn Compressor,
+    zs: &[Vec<f64>],
+    rngs: &mut [Xoshiro256pp],
+    pool: &mut PayloadPool,
+    wire: &mut WireBuf,
+    pbuf: &mut PayloadBuf,
+    acc: &mut [f64],
+    p_dim: usize,
+    k: usize,
+) -> usize {
+    let n = bus.n();
+    for i in 0..n {
+        let (payload, _sat) = pool.encode(op, &zs[i], &mut rngs[i]);
+        bus.broadcast(i, k, &payload);
+    }
+    bus.advance_round();
+    bus.deliver_round(k);
+    let mut wire_bytes = 0usize;
+    for i in 0..n {
+        let row = &mut acc[i * p_dim..(i + 1) * p_dim];
+        for m in bus.inbox_view(i).iter() {
+            let bytes = encode_into(&m.payload, wire);
+            wire_bytes += bytes.len();
+            let decoded = decode_from(bytes, pbuf).expect("round trip");
+            decoded.decode_axpy(0.5, row);
+            pbuf.reclaim(decoded);
+        }
+        bus.clear_inbox(i);
+    }
+    bus.reclaim_retired(pool);
+    wire_bytes
+}
+
+/// Wire plane: serializer kernel throughput at P = 100 000 (ternary
+/// rANS and int16 raw, encode and decode), then full compress →
+/// serialize → deserialize → consume rounds at n ∈ {16, 256, 2048}
+/// with the measured-vs-modeled byte ratio from the bus meters and the
+/// zero-steady-state-allocation assertion over the whole materialized
+/// cycle. Emits `BENCH_wire_plane.json`.
+fn wire_plane_bench() {
+    println!("== wire plane (framed varint/rANS serializer) ==");
+    let p = 100_000usize;
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let z: Vec<f64> = (0..p).map(|_| (rng.next_f64() - 0.5) * 100.0).collect();
+    let mut wire = WireBuf::new();
+    let mut pbuf = PayloadBuf::new();
+    let mut kernel_rows = Vec::new();
+    let kernels: Vec<(&str, Payload)> = vec![
+        ("ternary", TernGrad::new().compress(&z, &mut rng).payload),
+        ("int16", LowPrecisionQuantizer::new(1.0 / 64.0).compress(&z, &mut rng).payload),
+    ];
+    for (name, payload) in &kernels {
+        let enc = bench_print(&format!("wire encode {name:<7} P={p}"), || {
+            std::hint::black_box(encode_into(payload, &mut wire));
+        });
+        let bytes = encode_into(payload, &mut wire).to_vec();
+        let enc_mbs = bytes.len() as f64 / enc.mean() / 1e6;
+        println!(
+            "     -> {} B on the wire (modeled {}), {enc_mbs:.1} MB/s",
+            bytes.len(),
+            payload.wire_bytes()
+        );
+        let dec = bench_print(&format!("wire decode {name:<7} P={p}"), || {
+            let d = decode_from(std::hint::black_box(&bytes), &mut pbuf).expect("round trip");
+            pbuf.reclaim(d);
+        });
+        let dec_mbs = bytes.len() as f64 / dec.mean() / 1e6;
+        println!("     -> {dec_mbs:.1} MB/s parse");
+        kernel_rows.push(format!(
+            "    {{\"wire\": \"{name}\", \"p\": {p}, \"encoded_bytes\": {}, \
+             \"modeled_bytes\": {}, \"encode_mb_s\": {enc_mbs:.1}, \
+             \"decode_mb_s\": {dec_mbs:.1}}}",
+            bytes.len(),
+            payload.wire_bytes()
+        ));
+    }
+
+    // Full rounds with materialized bytes: ternary wire over the same
+    // ER topologies and inputs as the encode-plane section, so the two
+    // JSON artifacts are directly comparable (the delta is the
+    // serialize + parse cost).
+    let rounds = 30;
+    let p_dim = 64usize;
+    let mut rows = Vec::new();
+    for n in [16usize, 256, 2048] {
+        let p_edge = (12.0 / n as f64).min(0.5);
+        let g = adcdgd::topology::erdos_renyi(n, p_edge, 5);
+        let mut data_rng = Xoshiro256pp::seed_from_u64(11);
+        let zs: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..p_dim).map(|_| (data_rng.next_f64() - 0.5) * 40.0).collect())
+            .collect();
+        let samples = if n >= 2048 { 5 } else { 10 };
+        let op = TernGrad::new();
+        let mut bus = Bus::new(&g, LinkModel::default(), 7);
+        let mut pool = PayloadPool::new();
+        let mut rngs: Vec<Xoshiro256pp> =
+            (0..n).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
+        let mut acc = vec![0.0f64; n * p_dim];
+        let mut k = 0usize;
+        let timing = bench(
+            &format!("wire round ternary n={n} {rounds} rounds"),
+            1,
+            samples,
+            Duration::from_secs(60),
+            || {
+                for _ in 0..rounds {
+                    k += 1;
+                    std::hint::black_box(wire_round(
+                        &mut bus,
+                        &op,
+                        &zs,
+                        &mut rngs,
+                        &mut pool,
+                        &mut wire,
+                        &mut pbuf,
+                        &mut acc,
+                        p_dim,
+                        k,
+                    ));
+                }
+            },
+        );
+        println!("{}", timing.summary());
+        let modeled = bus.total_bytes();
+        let measured = bus.total_measured_bytes();
+        let ratio = measured as f64 / modeled as f64;
+        println!("     -> measured/modeled wire bytes: {measured}/{modeled} = {ratio:.3}");
+
+        // Zero-allocation assertion: fresh bus + pool (reusing the now
+        // fully grown serializer arenas); after the warm-up covers the
+        // pool cells, the full compress → broadcast → serialize → parse
+        // → consume cycle must never touch the heap — entropy-stream
+        // size variance included, since the encoder reserves its
+        // worst-case bound up front.
+        let mut bus = Bus::new(&g, LinkModel::default(), 7);
+        let mut pool = PayloadPool::new();
+        let mut rngs: Vec<Xoshiro256pp> =
+            (0..n).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
+        let mut acc = vec![0.0f64; n * p_dim];
+        for k in 1..=8 {
+            wire_round(
+                &mut bus, &op, &zs, &mut rngs, &mut pool, &mut wire, &mut pbuf, &mut acc, p_dim, k,
+            );
+        }
+        let before = alloc_counter::count();
+        for k in 9..=28 {
+            wire_round(
+                &mut bus, &op, &zs, &mut rngs, &mut pool, &mut wire, &mut pbuf, &mut acc, p_dim, k,
+            );
+        }
+        let allocs = alloc_counter::count() - before;
+        assert_eq!(
+            allocs, 0,
+            "materialized wire round allocated {allocs} times over 20 rounds (n={n})"
+        );
+        println!("     -> allocations over 20 post-warm-up rounds: {allocs}");
+
+        rows.push(format!(
+            "    {{\"n\": {n}, \"p\": {p_dim}, \"rounds\": {rounds}, \"wire\": \"ternary\", \
+             \"round_mean_s\": {:.8}, \"modeled_bytes\": {modeled}, \
+             \"measured_bytes\": {measured}, \"measured_over_modeled\": {ratio:.3}, \
+             \"allocs_after_warmup\": {allocs}}}",
+            timing.mean() / rounds as f64,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"wire_plane\",\n  \"pathway\": \"framed varint/delta + rANS ternary \
+         serializer, pooled decode arenas\",\n  \"kernels\": [\n{}\n  ],\n  \"results\": \
+         [\n{}\n  ]\n}}\n",
+        kernel_rows.join(",\n"),
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_wire_plane.json", &json).expect("write BENCH_wire_plane.json");
+    println!("wire-plane bench written to BENCH_wire_plane.json");
+}
+
 fn xla_paths() {
     let dir = adcdgd::runtime::artifacts_dir(None);
     if !adcdgd::runtime::artifacts_available(&dir) {
@@ -928,6 +1117,10 @@ fn main() {
         scale_bench();
         return;
     }
+    if only == "wire" {
+        wire_plane_bench();
+        return;
+    }
     println!("== L3 hot path ==");
     for p in [100usize, 10_000, 100_000] {
         round_throughput(p, 20);
@@ -940,6 +1133,7 @@ fn main() {
     encode_plane_comparison();
     stochastic_plane_bench();
     scale_bench();
+    wire_plane_bench();
     println!("== XLA-backed paths ==");
     xla_paths();
 }

@@ -34,6 +34,19 @@
 //! the allocation-accounting rules, and [`crate::rng::block_f64`] for
 //! the draw-ordering contract that keeps pooled encoding bit-identical
 //! to fresh [`Compressor::compress`] calls.
+//!
+//! ## The wire plane
+//!
+//! Behind the quantizers sits a second codec stage ([`wire`]) that
+//! turns each [`Payload`] into real bytes: [`encode_into`] serializes
+//! into a reusable [`WireBuf`] (varint + delta coding for sparse
+//! indices, a static-model rANS entropy coder over ternary code
+//! streams, raw little-endian paths for dense kinds) and
+//! [`decode_from`] parses the stream back through the same
+//! [`PayloadBuf`] arenas, bit-exactly and without steady-state
+//! allocation. The [`crate::network::Bus`] runs every broadcast through
+//! this stage and meters *measured* wire bytes next to the modeled
+//! [`Payload::wire_bytes`] accounting.
 
 mod biased;
 mod buf;
@@ -41,6 +54,7 @@ mod codec;
 mod operators;
 mod pool;
 pub mod stats;
+pub mod wire;
 
 pub use biased::{SignOneBit, TopK};
 pub use buf::{CompressedRef, PayloadBuf};
@@ -49,6 +63,7 @@ pub use operators::{
     Identity, LowPrecisionQuantizer, Qsgd, QuantizationSparsifier, RandomizedRounding, TernGrad,
 };
 pub use pool::PayloadPool;
+pub use wire::{decode_from, encode_into, WireBuf, WireError, FRAME_BYTES};
 
 use crate::rng::Xoshiro256pp;
 

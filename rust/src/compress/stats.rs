@@ -2,7 +2,7 @@
 //! variance) for any [`Compressor`]. Used by unit tests and the
 //! compressor-comparison ablation.
 
-use super::Compressor;
+use super::{encode_into, Compressor, WireBuf};
 use crate::rng::Xoshiro256pp;
 
 /// Monte-Carlo estimate of the compression error moments for a fixed input
@@ -51,10 +51,29 @@ pub fn mean_wire_bytes_per_element(
     total as f64 / (trials * z.len()) as f64
 }
 
+/// Measured twin of [`mean_wire_bytes_per_element`]: runs every
+/// compressed message through the real serializer
+/// ([`crate::compress::encode_into`], frame + entropy coding included)
+/// and averages the resulting stream lengths per element. The gap
+/// between the two is the entropy dividend (or framing overhead) the
+/// modeled accounting cannot see.
+pub fn mean_measured_wire_bytes_per_element(
+    op: &dyn Compressor,
+    z: &[f64],
+    trials: usize,
+    rng: &mut Xoshiro256pp,
+) -> f64 {
+    let mut wire = WireBuf::new();
+    let total: usize = (0..trials)
+        .map(|_| encode_into(&op.compress(z, rng).payload, &mut wire).len())
+        .sum();
+    total as f64 / (trials * z.len()) as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::{Identity, RandomizedRounding};
+    use crate::compress::{Identity, RandomizedRounding, TernGrad};
 
     #[test]
     fn identity_has_zero_moments() {
@@ -70,5 +89,23 @@ mod tests {
         let bpe =
             mean_wire_bytes_per_element(&RandomizedRounding::new(), &[0.5; 10], 10, &mut rng);
         assert_eq!(bpe, 2.0);
+    }
+
+    /// Acceptance regression: on skewed inputs (a few large entries, the
+    /// rest near zero) TernGrad's ternary stream is dominated by zeros,
+    /// and the rANS stage must land at ≤ 0.8× the modeled 2-bit packed
+    /// size even after paying for the frame and counts header.
+    #[test]
+    fn measured_ternary_beats_modeled_on_skewed_inputs() {
+        let z: Vec<f64> = (0..512).map(|i| if i % 32 == 0 { 1.0 } else { 1e-6 }).collect();
+        let op = TernGrad::new();
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let modeled = mean_wire_bytes_per_element(&op, &z, 20, &mut rng);
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let measured = mean_measured_wire_bytes_per_element(&op, &z, 20, &mut rng);
+        assert!(
+            measured <= 0.8 * modeled,
+            "measured {measured:.4} B/elt should be <= 0.8 x modeled {modeled:.4} B/elt"
+        );
     }
 }

@@ -1,0 +1,885 @@
+//! The wire plane: true byte-stream serialization for every [`Payload`]
+//! variant, with a hand-rolled static-model rANS entropy stage for
+//! ternary code streams.
+//!
+//! [`Payload::wire_bytes`] is the paper's *modeled* byte accounting;
+//! this module materializes the bytes. [`encode_into`] serializes a
+//! payload into a reusable [`WireBuf`]; [`decode_from`] parses it back
+//! through the [`PayloadBuf`] arenas. Round trips are bit-exact for
+//! every payload kind (scales travel as raw f64 bits, so NaN, −0.0 and
+//! infinities survive), and both directions are zero-alloc in steady
+//! state: `encode_into` reserves a worst-case bound up front, so the
+//! round-to-round wiggle of entropy-stream sizes can never force a
+//! reallocation once the buffer is warm, and `decode_from` fills pooled
+//! arenas whose capacity is recycled via [`PayloadBuf::reclaim`].
+//!
+//! # Frame and body layout
+//!
+//! Every message starts with a fixed 5-byte frame ([`FRAME_BYTES`]):
+//!
+//! ```text
+//! [kind: u8] [len: u32 LE]                       -- frame, all kinds
+//! F64       : len x f64 LE
+//! F32       : len x f32 LE
+//! I16       : [scale: f64 bits LE] len x i16 LE
+//! I8        : [scale: f64 bits LE] len x i8
+//! SparseI16 : [scale] [nnz: varint] [idx0: varint] [gap_i: varint]...
+//!             nnz x i16 LE                       -- gaps >= 1 (ascending)
+//! Ternary   : [scale] [mode: u8] body
+//!   mode 0 (rANS)  : [c0: varint] [c1: varint] [state: u32 LE] stream
+//!   mode 1 (packed): ceil(len/4) verbatim 2-bit-packed bytes
+//! ```
+//!
+//! Varints are LEB128 over u32 (7 payload bits per byte, at most 5
+//! bytes). Sparse indices are delta-coded: the first index is absolute,
+//! every following varint is a gap `>= 1`, so strictly ascending index
+//! lists (what [`crate::compress`]'s operators emit) cost one byte per
+//! index until the vector grows past 128-wide gaps.
+//!
+//! # The rANS model
+//!
+//! Ternary codes (00 = 0, 01 = +1, 10 = −1) are entropy-coded with a
+//! byte-renormalizing rANS coder (state lower bound `L = 1 << 23`,
+//! 12-bit frequency scale). The model is static per message: the header
+//! carries the raw symbol counts `c0` and `c1` (`c2 = len − c0 − c1`)
+//! and both sides derive the same normalized frequency table
+//! deterministically, so no table is transmitted. Converged ADC-DGD
+//! differentials are heavily skewed toward zero, which is exactly where
+//! a 3-symbol entropy code (at most log2(3) ≈ 1.585 bits/symbol, far
+//! less when skewed) beats the fixed 2-bit packing. The encoder falls
+//! back to mode 1 (verbatim packed bytes) whenever the entropy stream
+//! would not be smaller — tiny messages where the count header dominates
+//! — or when the packed bytes contain the invalid code `11`, so every
+//! ternary payload round-trips regardless of its contents.
+//!
+//! # What is (and is not) on the wire
+//!
+//! The saturation count of a compressed message
+//! ([`crate::compress::Compressed::saturated`]) is encode-side
+//! telemetry, not message content — it is not serialized, and decoded
+//! payloads report it as 0. Dense values, indices, scales and lengths
+//! all round-trip bit-exactly.
+
+use super::{CompressedRef, Payload, PayloadBuf, PayloadKind};
+
+/// Fixed per-message frame size: 1-byte kind tag + 4-byte little-endian
+/// dense element count. Every wire message starts with this frame;
+/// [`Payload::framed_wire_bytes`] folds it into the modeled accounting.
+pub const FRAME_BYTES: usize = 5;
+
+const TAG_F64: u8 = 0;
+const TAG_F32: u8 = 1;
+const TAG_I16: u8 = 2;
+const TAG_I8: u8 = 3;
+const TAG_SPARSE_I16: u8 = 4;
+const TAG_TERNARY: u8 = 5;
+
+const MODE_RANS: u8 = 0;
+const MODE_PACKED: u8 = 1;
+
+/// Frequency scale bits: symbol frequencies sum to `1 << SCALE_BITS`.
+const SCALE_BITS: u32 = 12;
+const SCALE_TOTAL: u32 = 1 << SCALE_BITS;
+/// rANS state lower bound (byte-renormalizing: state in `[L, 256·L)`).
+const RANS_L: u32 = 1 << 23;
+
+/// Reusable wire byte buffer for [`encode_into`]. Holds the encoded
+/// message plus the rANS scratch stream; both keep their capacity
+/// across messages, so after warm-up every encode is allocation-free.
+#[derive(Debug, Default)]
+pub struct WireBuf {
+    /// The encoded message (frame + body).
+    bytes: Vec<u8>,
+    /// rANS renormalization bytes in emission order (reversed into
+    /// `bytes` so the decoder reads them forward).
+    tmp: Vec<u8>,
+}
+
+impl WireBuf {
+    /// New empty buffer (arenas grow on first use, then stay warm).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The most recently encoded message.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Byte length of the most recently encoded message.
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// True when nothing has been encoded yet.
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+}
+
+/// Why a byte stream failed to parse as a [`Payload`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// The stream ended before the body it promised.
+    Truncated,
+    /// Unknown payload kind tag in the frame.
+    BadKind(u8),
+    /// Unknown ternary body mode byte.
+    BadMode(u8),
+    /// Symbol or element counts exceed the frame length.
+    BadCounts,
+    /// A varint did not fit in u32.
+    BadVarint,
+    /// A sparse index was out of range or not strictly ascending.
+    BadIndex,
+    /// The entropy stream did not settle at the initial coder state.
+    BadStream,
+    /// Bytes remained after the payload body.
+    TrailingBytes,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "wire stream truncated"),
+            WireError::BadKind(t) => write!(f, "unknown payload kind tag {t}"),
+            WireError::BadMode(m) => write!(f, "unknown ternary body mode {m}"),
+            WireError::BadCounts => write!(f, "counts exceed the frame length"),
+            WireError::BadVarint => write!(f, "varint does not fit in u32"),
+            WireError::BadIndex => write!(f, "sparse index out of range or not ascending"),
+            WireError::BadStream => write!(f, "entropy stream does not settle at the base state"),
+            WireError::TrailingBytes => write!(f, "trailing bytes after the payload body"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Serialize `payload` into `w` and return the encoded bytes.
+///
+/// The buffer is cleared first and a worst-case size bound is reserved
+/// before any byte is written, so per-message stream-size variance never
+/// reallocates a warm buffer. Panics if the payload is internally
+/// inconsistent (more than `u32::MAX` elements, non-ascending sparse
+/// indices, or a packed ternary buffer of the wrong length) — all
+/// states the `compress_into` kernels cannot produce.
+pub fn encode_into<'a>(payload: &Payload, w: &'a mut WireBuf) -> &'a [u8] {
+    let len = payload.len();
+    assert!(len <= u32::MAX as usize, "payload too long for the u32 frame");
+    w.bytes.clear();
+    w.bytes.reserve(encoded_upper_bound(payload));
+    match payload {
+        Payload::F64(v) => {
+            push_frame(&mut w.bytes, TAG_F64, len);
+            for x in v {
+                w.bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Payload::F32(v) => {
+            push_frame(&mut w.bytes, TAG_F32, len);
+            for x in v {
+                w.bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Payload::I16 { scale, data } => {
+            push_frame(&mut w.bytes, TAG_I16, len);
+            push_f64_bits(&mut w.bytes, *scale);
+            encode_i16_slice(data, &mut w.bytes);
+        }
+        Payload::I8 { scale, data } => {
+            push_frame(&mut w.bytes, TAG_I8, len);
+            push_f64_bits(&mut w.bytes, *scale);
+            w.bytes.extend(data.iter().map(|&q| q as u8));
+        }
+        Payload::SparseI16 { len, scale, idx, val } => {
+            push_frame(&mut w.bytes, TAG_SPARSE_I16, *len);
+            push_f64_bits(&mut w.bytes, *scale);
+            encode_sparse(*len, idx, val, &mut w.bytes);
+        }
+        Payload::Ternary { len, scale, packed } => {
+            push_frame(&mut w.bytes, TAG_TERNARY, *len);
+            push_f64_bits(&mut w.bytes, *scale);
+            encode_ternary(*len, packed, w);
+        }
+    }
+    &w.bytes
+}
+
+/// Parse a wire message back into a [`Payload`], staging the decoded
+/// data in `buf`'s arenas (reset first; validation of lengths and
+/// counts happens *before* any arena reserves, so corrupt frames cannot
+/// trigger giant allocations). The emitted payload takes the arena
+/// storage with it — [`PayloadBuf::reclaim`] a retired payload into the
+/// same buffer to keep the decode path allocation-free.
+pub fn decode_from(bytes: &[u8], buf: &mut PayloadBuf) -> Result<Payload, WireError> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let tag = r.u8()?;
+    let len = r.u32_le()? as usize;
+    buf.reset();
+    let reference = match tag {
+        TAG_F64 => {
+            let data = r.take(8 * len)?;
+            buf.f64s.reserve(len);
+            let mut chunks = data.chunks_exact(8);
+            for c in &mut chunks {
+                let mut a = [0u8; 8];
+                a.copy_from_slice(c);
+                buf.f64s.push(f64::from_le_bytes(a));
+            }
+            CompressedRef { kind: PayloadKind::F64, len, scale: 0.0, saturated: 0 }
+        }
+        TAG_F32 => {
+            let data = r.take(4 * len)?;
+            buf.f32s.reserve(len);
+            let mut chunks = data.chunks_exact(4);
+            for c in &mut chunks {
+                buf.f32s.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            CompressedRef { kind: PayloadKind::F32, len, scale: 0.0, saturated: 0 }
+        }
+        TAG_I16 => {
+            let scale = r.f64_bits()?;
+            let data = r.take(2 * len)?;
+            buf.i16s.reserve(len);
+            decode_i16_slice(data, &mut buf.i16s);
+            CompressedRef { kind: PayloadKind::I16, len, scale, saturated: 0 }
+        }
+        TAG_I8 => {
+            let scale = r.f64_bits()?;
+            let data = r.take(len)?;
+            buf.i8s.reserve(len);
+            buf.i8s.extend(data.iter().map(|&b| b as i8));
+            CompressedRef { kind: PayloadKind::I8, len, scale, saturated: 0 }
+        }
+        TAG_SPARSE_I16 => {
+            let scale = r.f64_bits()?;
+            let nnz = r.varint()? as usize;
+            if nnz > len {
+                return Err(WireError::BadCounts);
+            }
+            if nnz > r.remaining() {
+                // Each stored element needs at least 3 more bytes (one
+                // varint byte + a 2-byte value); reject before reserving.
+                return Err(WireError::Truncated);
+            }
+            buf.idx.reserve(nnz);
+            let mut prev = 0u32;
+            for k in 0..nnz {
+                let v = r.varint()?;
+                let ix = if k == 0 {
+                    v
+                } else {
+                    if v == 0 {
+                        return Err(WireError::BadIndex);
+                    }
+                    prev.checked_add(v).ok_or(WireError::BadIndex)?
+                };
+                if ix as usize >= len {
+                    return Err(WireError::BadIndex);
+                }
+                buf.idx.push(ix);
+                prev = ix;
+            }
+            let vals = r.take(2 * nnz)?;
+            buf.i16s.reserve(nnz);
+            decode_i16_slice(vals, &mut buf.i16s);
+            CompressedRef { kind: PayloadKind::SparseI16, len, scale, saturated: 0 }
+        }
+        TAG_TERNARY => {
+            let scale = r.f64_bits()?;
+            let mode = r.u8()?;
+            let packed_len = len.div_ceil(4);
+            match mode {
+                MODE_PACKED => {
+                    let data = r.take(packed_len)?;
+                    buf.u8s.reserve(packed_len);
+                    buf.u8s.extend_from_slice(data);
+                }
+                MODE_RANS => {
+                    let c0 = r.varint()?;
+                    let c1 = r.varint()?;
+                    if (c0 as u64) + (c1 as u64) > len as u64 {
+                        return Err(WireError::BadCounts);
+                    }
+                    let mut x = r.u32_le()?;
+                    if len > 0 {
+                        let c2 = len as u32 - c0 - c1;
+                        let (freqs, cums) = normalized_freqs([c0, c1, c2], len);
+                        buf.u8s.reserve(packed_len);
+                        rans_decode(len, &freqs, &cums, &mut x, &mut r, &mut buf.u8s)?;
+                    }
+                    if x != RANS_L {
+                        return Err(WireError::BadStream);
+                    }
+                }
+                other => return Err(WireError::BadMode(other)),
+            }
+            CompressedRef { kind: PayloadKind::Ternary, len, scale, saturated: 0 }
+        }
+        other => return Err(WireError::BadKind(other)),
+    };
+    if r.remaining() != 0 {
+        return Err(WireError::TrailingBytes);
+    }
+    Ok(buf.emit(&reference))
+}
+
+/// Worst-case encoded size for `payload` (frame + body with every
+/// varint at its maximum width and the rANS stream at its 2-bytes-per
+/// -symbol renormalization ceiling). [`encode_into`] reserves this
+/// before writing, which is what makes warm-buffer encodes
+/// allocation-free regardless of per-round entropy variance.
+fn encoded_upper_bound(payload: &Payload) -> usize {
+    match payload {
+        Payload::F64(v) => FRAME_BYTES + 8 * v.len(),
+        Payload::F32(v) => FRAME_BYTES + 4 * v.len(),
+        Payload::I16 { data, .. } => FRAME_BYTES + 8 + 2 * data.len(),
+        Payload::I8 { data, .. } => FRAME_BYTES + 8 + data.len(),
+        Payload::SparseI16 { idx, val, .. } => FRAME_BYTES + 8 + 5 + 5 * idx.len() + 2 * val.len(),
+        Payload::Ternary { len, packed, .. } => {
+            FRAME_BYTES + 8 + 1 + 10 + 4 + packed.len().max(2 * len)
+        }
+    }
+}
+
+fn push_frame(out: &mut Vec<u8>, tag: u8, len: usize) {
+    out.push(tag);
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+}
+
+fn push_f64_bits(out: &mut Vec<u8>, x: f64) {
+    out.extend_from_slice(&x.to_bits().to_le_bytes());
+}
+
+fn push_varint(out: &mut Vec<u8>, mut v: u32) {
+    while v >= 0x80 {
+        out.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+/// Encoded LEB128 width of `v` (1..=5 bytes).
+fn varint_len(v: u32) -> usize {
+    (32 - v.leading_zeros()).max(1).div_ceil(7) as usize
+}
+
+/// Append a little-endian i16 slice, four values per iteration so the
+/// byte stores autovectorize (same chunking discipline as
+/// [`super::codec`]'s `pack_codes`).
+fn encode_i16_slice(data: &[i16], out: &mut Vec<u8>) {
+    let mut chunks = data.chunks_exact(4);
+    for c in &mut chunks {
+        let mut block = [0u8; 8];
+        for (b, q) in block.chunks_exact_mut(2).zip(c) {
+            b.copy_from_slice(&q.to_le_bytes());
+        }
+        out.extend_from_slice(&block);
+    }
+    for q in chunks.remainder() {
+        out.extend_from_slice(&q.to_le_bytes());
+    }
+}
+
+/// Inverse of [`encode_i16_slice`]: parse little-endian i16 values four
+/// at a time. `data.len()` must be even (callers take exact lengths).
+fn decode_i16_slice(data: &[u8], out: &mut Vec<i16>) {
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        out.extend_from_slice(&[
+            i16::from_le_bytes([c[0], c[1]]),
+            i16::from_le_bytes([c[2], c[3]]),
+            i16::from_le_bytes([c[4], c[5]]),
+            i16::from_le_bytes([c[6], c[7]]),
+        ]);
+    }
+    for c in chunks.remainder().chunks_exact(2) {
+        out.push(i16::from_le_bytes([c[0], c[1]]));
+    }
+}
+
+/// Delta-coded sparse body: `[nnz][idx0][gap...]` varints then raw
+/// values. Indices must be strictly ascending (the selection operators
+/// sort or emit in order; this is asserted, not silently repaired).
+fn encode_sparse(len: usize, idx: &[u32], val: &[i16], out: &mut Vec<u8>) {
+    assert_eq!(idx.len(), val.len(), "sparse index/value length mismatch");
+    assert!(idx.len() <= len, "sparse payload stores more elements than its dense length");
+    push_varint(out, idx.len() as u32);
+    let mut prev = 0u32;
+    for (k, &ix) in idx.iter().enumerate() {
+        assert!((ix as usize) < len, "sparse index out of range");
+        if k == 0 {
+            push_varint(out, ix);
+        } else {
+            assert!(ix > prev, "sparse indices must be strictly ascending");
+            push_varint(out, ix - prev);
+        }
+        prev = ix;
+    }
+    encode_i16_slice(val, out);
+}
+
+/// Ternary body: entropy-code through rANS when that wins, otherwise
+/// emit the packed bytes verbatim behind a mode byte. The verbatim
+/// escape also covers payloads containing the invalid code `11` (which
+/// the 3-symbol model cannot represent) and empty messages.
+fn encode_ternary(len: usize, packed: &[u8], w: &mut WireBuf) {
+    assert_eq!(packed.len(), len.div_ceil(4), "packed ternary length mismatch");
+    if len > 0 {
+        let (c0, c1, c3) = count_codes(len, packed);
+        if c3 == 0 {
+            let (freqs, cums) = normalized_freqs([c0, c1, len as u32 - c0 - c1], len);
+            w.tmp.clear();
+            w.tmp.reserve(2 * len);
+            let x = rans_encode(len, packed, &freqs, &cums, &mut w.tmp);
+            let rans_total = varint_len(c0) + varint_len(c1) + 4 + w.tmp.len();
+            if rans_total < packed.len() {
+                w.bytes.push(MODE_RANS);
+                push_varint(&mut w.bytes, c0);
+                push_varint(&mut w.bytes, c1);
+                w.bytes.extend_from_slice(&x.to_le_bytes());
+                // One reversal handles both intra- and inter-symbol byte
+                // order: the decoder consumes renorm bytes forward.
+                w.bytes.extend(w.tmp.iter().rev());
+                return;
+            }
+        }
+    }
+    w.bytes.push(MODE_PACKED);
+    w.bytes.extend_from_slice(packed);
+}
+
+/// Count codes 0, 1 and the invalid 3 over the first `len` positions of
+/// `packed` (code 2 follows by subtraction). Full bytes run four fixed
+/// 2-bit lanes so the tally autovectorizes; the tail is scalar.
+fn count_codes(len: usize, packed: &[u8]) -> (u32, u32, u32) {
+    let (mut c0, mut c1, mut c3) = (0u32, 0u32, 0u32);
+    let full = len / 4;
+    for &byte in &packed[..full] {
+        for shift in [0u32, 2, 4, 6] {
+            match (byte >> shift) & 0b11 {
+                0 => c0 += 1,
+                1 => c1 += 1,
+                3 => c3 += 1,
+                _ => {}
+            }
+        }
+    }
+    for i in full * 4..len {
+        match (packed[i / 4] >> ((i % 4) * 2)) & 0b11 {
+            0 => c0 += 1,
+            1 => c1 += 1,
+            3 => c3 += 1,
+            _ => {}
+        }
+    }
+    (c0, c1, c3)
+}
+
+/// Derive the normalized frequency table `(freqs, cums)` both coder
+/// sides share, from raw symbol counts summing to `len > 0`. Each
+/// present symbol gets `max(1, floor(count · 4096 / len))`; the largest
+/// entry absorbs the rounding residue (it is at least ~1365, so the
+/// ±2-count residue can never zero it). Absent symbols keep frequency
+/// 0 and a zero-width cum range the decoder cannot land in.
+fn normalized_freqs(counts: [u32; 3], len: usize) -> ([u32; 3], [u32; 3]) {
+    debug_assert!(len > 0);
+    let mut freqs = [0u32; 3];
+    for (f, &c) in freqs.iter_mut().zip(counts.iter()) {
+        if c > 0 {
+            *f = (((c as u64 * SCALE_TOTAL as u64) / len as u64) as u32).max(1);
+        }
+    }
+    let sum: u32 = freqs.iter().sum();
+    let largest = (0..3).max_by_key(|&s| freqs[s]).expect("three symbols");
+    freqs[largest] = freqs[largest] + SCALE_TOTAL - sum;
+    let cums = [0, freqs[0], freqs[0] + freqs[1]];
+    (freqs, cums)
+}
+
+/// rANS-encode `len` packed 2-bit codes in reverse order (so the
+/// decoder emits them forward), pushing renormalization bytes into
+/// `tmp` and returning the final coder state. State stays in
+/// `[L, 256·L)` throughout; with a 12-bit scale every quantity fits u32.
+fn rans_encode(
+    len: usize,
+    packed: &[u8],
+    freqs: &[u32; 3],
+    cums: &[u32; 3],
+    tmp: &mut Vec<u8>,
+) -> u32 {
+    let mut x: u32 = RANS_L;
+    for i in (0..len).rev() {
+        let code = ((packed[i >> 2] >> ((i & 3) * 2)) & 0b11) as usize;
+        let f = freqs[code];
+        let x_max = ((RANS_L >> SCALE_BITS) << 8) * f;
+        while x >= x_max {
+            tmp.push(x as u8);
+            x >>= 8;
+        }
+        x = ((x / f) << SCALE_BITS) + (x % f) + cums[code];
+    }
+    x
+}
+
+/// rANS-decode `len` 2-bit codes forward, repacking four per byte into
+/// `out` (tail bits zero, matching `pack_codes`). Consumes renorm bytes
+/// from the reader; errors only on stream underrun.
+fn rans_decode(
+    len: usize,
+    freqs: &[u32; 3],
+    cums: &[u32; 3],
+    x: &mut u32,
+    r: &mut Reader<'_>,
+    out: &mut Vec<u8>,
+) -> Result<(), WireError> {
+    let mut i = 0;
+    while i < len {
+        let lanes = (len - i).min(4);
+        let mut byte = 0u8;
+        for lane in 0..lanes {
+            let slot = *x & (SCALE_TOTAL - 1);
+            let code = if slot < cums[1] {
+                0
+            } else if slot < cums[2] {
+                1
+            } else {
+                2
+            };
+            *x = freqs[code] * (*x >> SCALE_BITS) + slot - cums[code];
+            while *x < RANS_L {
+                *x = (*x << 8) | r.u8()? as u32;
+            }
+            byte |= (code as u8) << (lane * 2);
+        }
+        out.push(byte);
+        i += lanes;
+    }
+    Ok(())
+}
+
+/// Bounds-checked forward cursor over the incoming byte stream.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn u8(&mut self) -> Result<u8, WireError> {
+        let b = *self.buf.get(self.pos).ok_or(WireError::Truncated)?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::Truncated)?;
+        let s = self.buf.get(self.pos..end).ok_or(WireError::Truncated)?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32_le(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64_bits(&mut self) -> Result<f64, WireError> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(f64::from_bits(u64::from_le_bytes(a)))
+    }
+
+    fn varint(&mut self) -> Result<u32, WireError> {
+        let mut v = 0u32;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            if shift == 28 && (b & 0x70) != 0 {
+                return Err(WireError::BadVarint);
+            }
+            v |= ((b & 0x7F) as u32) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 28 {
+                return Err(WireError::BadVarint);
+            }
+        }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One payload of every kind at dense length `n` (sparse uses `n`
+    /// stored elements inside a larger dense vector).
+    fn sample_payloads(n: usize) -> Vec<Payload> {
+        let f64s: Vec<f64> = (0..n).map(|i| i as f64 * 1.5 - 3.0).collect();
+        let f32s: Vec<f32> = (0..n).map(|i| i as f32 * 0.25 - 1.0).collect();
+        let i16s: Vec<i16> = (0..n).map(|i| i as i16 * 37 - 300).collect();
+        let i8s: Vec<i8> = (0..n).map(|i| (i as i8).wrapping_mul(29)).collect();
+        let idx: Vec<u32> = (0..n).map(|i| (i * 3) as u32).collect();
+        let val: Vec<i16> = (0..n).map(|i| i as i16 - 4).collect();
+        let tern: Vec<i8> = (0..n).map(|i| [0i8, 1, -1, 0, 1][i % 5]).collect();
+        vec![
+            Payload::F64(f64s),
+            Payload::F32(f32s),
+            Payload::I16 { scale: 0.125, data: i16s },
+            Payload::I8 { scale: -2.5, data: i8s },
+            Payload::SparseI16 { len: 3 * n + 1, scale: 0.5, idx, val },
+            Payload::pack_ternary(n, 1.5, &tern),
+        ]
+    }
+
+    /// Encode → decode → structural bit-equality, then re-encode and
+    /// require the identical byte stream. Returns the encoded bytes.
+    fn assert_roundtrip(p: &Payload) -> Vec<u8> {
+        let mut w = WireBuf::new();
+        let first = encode_into(p, &mut w).to_vec();
+        let mut buf = PayloadBuf::new();
+        let q = decode_from(&first, &mut buf).expect("round trip decode");
+        match (p, &q) {
+            (Payload::F64(a), Payload::F64(b)) => assert_eq!(a, b),
+            (Payload::F32(a), Payload::F32(b)) => assert_eq!(a, b),
+            (Payload::I16 { scale: sa, data: da }, Payload::I16 { scale: sb, data: db }) => {
+                assert_eq!(sa.to_bits(), sb.to_bits());
+                assert_eq!(da, db);
+            }
+            (Payload::I8 { scale: sa, data: da }, Payload::I8 { scale: sb, data: db }) => {
+                assert_eq!(sa.to_bits(), sb.to_bits());
+                assert_eq!(da, db);
+            }
+            (
+                Payload::SparseI16 { len: la, scale: sa, idx: ia, val: va },
+                Payload::SparseI16 { len: lb, scale: sb, idx: ib, val: vb },
+            ) => {
+                assert_eq!(la, lb);
+                assert_eq!(sa.to_bits(), sb.to_bits());
+                assert_eq!(ia, ib);
+                assert_eq!(va, vb);
+            }
+            (
+                Payload::Ternary { len: la, scale: sa, packed: pa },
+                Payload::Ternary { len: lb, scale: sb, packed: pb },
+            ) => {
+                assert_eq!(la, lb);
+                assert_eq!(sa.to_bits(), sb.to_bits());
+                assert_eq!(pa, pb);
+            }
+            (a, b) => panic!("kind changed across the wire: {:?} -> {:?}", a.kind(), b.kind()),
+        }
+        let second = encode_into(&q, &mut w).to_vec();
+        assert_eq!(first, second, "re-encode must reproduce the byte stream");
+        first
+    }
+
+    #[test]
+    fn roundtrip_all_kinds_on_all_tail_lengths() {
+        for n in 0..=9 {
+            for p in sample_payloads(n) {
+                assert_roundtrip(&p);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_empty_sparse_and_single_element_messages() {
+        assert_roundtrip(&Payload::SparseI16 { len: 7, scale: 0.25, idx: vec![], val: vec![] });
+        assert_roundtrip(&Payload::SparseI16 { len: 1, scale: 0.25, idx: vec![0], val: vec![-9] });
+        assert_roundtrip(&Payload::F64(vec![42.0]));
+        assert_roundtrip(&Payload::I8 { scale: 1.0, data: vec![-128] });
+        assert_roundtrip(&Payload::pack_ternary(1, 3.0, &[-1]));
+    }
+
+    #[test]
+    fn roundtrip_extreme_scales_bit_exactly() {
+        for scale in [f64::MAX, f64::MIN_POSITIVE, -0.0, f64::NAN, f64::INFINITY, -1e-300] {
+            assert_roundtrip(&Payload::I16 { scale, data: vec![1, -2, 3] });
+            assert_roundtrip(&Payload::pack_ternary(5, scale, &[1, 0, -1, 0, 0]));
+        }
+    }
+
+    #[test]
+    fn sparse_varint_gap_boundaries_roundtrip() {
+        let p = Payload::SparseI16 {
+            len: 40_000,
+            scale: 1.0,
+            idx: vec![0, 127, 128, 255, 16_511, 33_000],
+            val: vec![1, -1, 2, -2, 3, -3],
+        };
+        assert_roundtrip(&p);
+    }
+
+    #[test]
+    fn skewed_ternary_beats_packed_by_the_acceptance_margin() {
+        // 95% zeros — the shape of a converged ADC-DGD differential.
+        let n = 4096;
+        let tern: Vec<i8> = (0..n)
+            .map(|i| match i % 40 {
+                0 => 1,
+                20 => -1,
+                _ => 0,
+            })
+            .collect();
+        let p = Payload::pack_ternary(n, 0.01, &tern);
+        let bytes = assert_roundtrip(&p);
+        let packed_model = p.wire_bytes();
+        assert!(
+            bytes.len() as f64 <= 0.8 * packed_model as f64,
+            "entropy stage must be at most 0.8x packed on skewed codes: {} vs {}",
+            bytes.len(),
+            packed_model
+        );
+    }
+
+    #[test]
+    fn uniform_ternary_still_selects_the_entropy_mode() {
+        // log2(3) < 2 bits, so rANS wins even with zero skew once the
+        // message outgrows its count header.
+        let tern: Vec<i8> = (0..255).map(|i| [0i8, 1, -1][i % 3]).collect();
+        let p = Payload::pack_ternary(255, 1.0, &tern);
+        let bytes = assert_roundtrip(&p);
+        assert_eq!(bytes[13], MODE_RANS);
+        assert!(bytes.len() < FRAME_BYTES + 9 + 64, "got {}", bytes.len());
+    }
+
+    #[test]
+    fn all_zero_ternary_collapses_to_the_header() {
+        let p = Payload::pack_ternary(4096, 1.0, &[0i8; 4096]);
+        let bytes = assert_roundtrip(&p);
+        // frame 5 + scale 8 + mode 1 + varint(4096) 2 + varint(0) 1 + state 4
+        assert_eq!(bytes.len(), 21);
+    }
+
+    #[test]
+    fn tiny_ternary_escapes_to_packed_mode() {
+        let p = Payload::pack_ternary(4, 1.0, &[1, -1, 0, 1]);
+        let bytes = assert_roundtrip(&p);
+        assert_eq!(bytes[13], MODE_PACKED, "count header would dominate: must escape");
+        assert_eq!(bytes.len(), p.framed_wire_bytes());
+    }
+
+    #[test]
+    fn invalid_code_11_forces_the_verbatim_escape() {
+        // Hand-made payload whose packed bytes contain the undefined
+        // code 0b11 — must round-trip verbatim through mode 1.
+        let p = Payload::Ternary { len: 8, scale: 2.0, packed: vec![0b1101_0001, 0xFF] };
+        let bytes = assert_roundtrip(&p);
+        assert_eq!(bytes[13], MODE_PACKED);
+    }
+
+    #[test]
+    fn measured_never_exceeds_framed_model_for_ternary() {
+        let mut w = WireBuf::new();
+        for n in [0usize, 1, 3, 4, 64, 1000, 4096] {
+            let tern: Vec<i8> = (0..n).map(|i| [1i8, 0, 0, -1, 0][i % 5]).collect();
+            let p = Payload::pack_ternary(n, 0.5, &tern);
+            let m = encode_into(&p, &mut w).len();
+            let framed = p.framed_wire_bytes();
+            assert!(m <= framed, "n={n}: measured {m} > framed model {framed}");
+        }
+    }
+
+    #[test]
+    fn corrupted_streams_are_rejected() {
+        let mut buf = PayloadBuf::new();
+        assert_eq!(decode_from(&[], &mut buf).unwrap_err(), WireError::Truncated);
+        assert_eq!(decode_from(&[9, 0, 0, 0, 0], &mut buf).unwrap_err(), WireError::BadKind(9));
+
+        // Ternary frame (len 4) with an unknown body mode.
+        let mut bad_mode = vec![TAG_TERNARY, 4, 0, 0, 0];
+        bad_mode.extend_from_slice(&1.0f64.to_bits().to_le_bytes());
+        bad_mode.push(7);
+        assert_eq!(decode_from(&bad_mode, &mut buf).unwrap_err(), WireError::BadMode(7));
+
+        // rANS counts exceeding the frame length (c0 = 5 > len = 2).
+        let mut bad_counts = vec![TAG_TERNARY, 2, 0, 0, 0];
+        bad_counts.extend_from_slice(&0u64.to_le_bytes());
+        bad_counts.extend_from_slice(&[MODE_RANS, 5, 0]);
+        assert_eq!(decode_from(&bad_counts, &mut buf).unwrap_err(), WireError::BadCounts);
+
+        // Empty rANS body whose state is not the base state L.
+        let mut bad_stream = vec![TAG_TERNARY, 0, 0, 0, 0];
+        bad_stream.extend_from_slice(&0u64.to_le_bytes());
+        bad_stream.extend_from_slice(&[MODE_RANS, 0, 0]);
+        bad_stream.extend_from_slice(&[1, 0, 0x80, 0]); // L + 1
+        assert_eq!(decode_from(&bad_stream, &mut buf).unwrap_err(), WireError::BadStream);
+
+        // Sparse nnz varint overflowing u32 (5th byte carries bit 32+).
+        let mut bad_varint = vec![TAG_SPARSE_I16, 255, 255, 255, 255];
+        bad_varint.extend_from_slice(&0u64.to_le_bytes());
+        bad_varint.extend_from_slice(&[0xFF, 0xFF, 0xFF, 0xFF, 0x7F]);
+        assert_eq!(decode_from(&bad_varint, &mut buf).unwrap_err(), WireError::BadVarint);
+
+        // Sparse gap of 0 (duplicate index).
+        let mut gap0 = vec![TAG_SPARSE_I16, 4, 0, 0, 0];
+        gap0.extend_from_slice(&0u64.to_le_bytes());
+        gap0.extend_from_slice(&[2, 1, 0, 0, 0, 0, 0]);
+        assert_eq!(decode_from(&gap0, &mut buf).unwrap_err(), WireError::BadIndex);
+
+        // Sparse index beyond the dense length.
+        let mut oob = vec![TAG_SPARSE_I16, 4, 0, 0, 0];
+        oob.extend_from_slice(&0u64.to_le_bytes());
+        oob.extend_from_slice(&[1, 9, 0, 0]);
+        assert_eq!(decode_from(&oob, &mut buf).unwrap_err(), WireError::BadIndex);
+
+        // A valid message followed by a stray byte.
+        let mut w = WireBuf::new();
+        let mut bytes = encode_into(&Payload::F64(vec![1.0]), &mut w).to_vec();
+        bytes.push(0);
+        assert_eq!(decode_from(&bytes, &mut buf).unwrap_err(), WireError::TrailingBytes);
+    }
+
+    #[test]
+    fn every_truncated_prefix_is_rejected() {
+        let mut w = WireBuf::new();
+        let mut buf = PayloadBuf::new();
+        let mut cases = sample_payloads(9);
+        // Add an entropy-mode ternary so rANS stream truncation is hit.
+        let tern: Vec<i8> = (0..256).map(|i| if i % 16 == 0 { 1 } else { 0 }).collect();
+        cases.push(Payload::pack_ternary(256, 1.0, &tern));
+        for p in cases {
+            let full = encode_into(&p, &mut w).to_vec();
+            for cut in 0..full.len() {
+                let got = decode_from(&full[..cut], &mut buf);
+                assert!(got.is_err(), "prefix {cut} of {:?} must not parse", p.kind());
+            }
+        }
+    }
+
+    #[test]
+    fn decode_reuses_arena_capacity_across_messages() {
+        let mut w = WireBuf::new();
+        let mut buf = PayloadBuf::new();
+        let data: Vec<i16> = (0..512).map(|i| i as i16).collect();
+        let p = Payload::I16 { scale: 0.5, data };
+        let bytes = encode_into(&p, &mut w).to_vec();
+        let first = decode_from(&bytes, &mut buf).expect("decode");
+        buf.reclaim(first);
+        let cap = buf.i16s.capacity();
+        for _ in 0..8 {
+            let q = decode_from(&bytes, &mut buf).expect("decode");
+            buf.reclaim(q);
+            assert_eq!(buf.i16s.capacity(), cap, "steady-state decode must not reallocate");
+        }
+    }
+
+    #[test]
+    fn encoder_capacity_is_monotone_across_varying_streams() {
+        let mut w = WireBuf::new();
+        let dense: Vec<i8> = (0..4096).map(|i| [1i8, -1, 0][i % 3]).collect();
+        encode_into(&Payload::pack_ternary(4096, 1.0, &dense), &mut w);
+        let cap = w.bytes.capacity();
+        let sparse: Vec<i8> = (0..4096).map(|i| i8::from(i % 64 == 0)).collect();
+        encode_into(&Payload::pack_ternary(4096, 1.0, &sparse), &mut w);
+        encode_into(&Payload::pack_ternary(4096, 1.0, &dense), &mut w);
+        assert_eq!(w.bytes.capacity(), cap, "warm encoder must never regrow");
+    }
+}

@@ -20,8 +20,15 @@ pub struct RunOutput {
     pub final_states: Vec<Vec<f64>>,
     /// Rounds actually executed (≤ config.iterations on early stop).
     pub rounds_completed: usize,
-    /// Total payload bytes over all links.
+    /// Total payload bytes over all links (modeled accounting —
+    /// [`crate::compress::Payload::wire_bytes`]).
     pub total_bytes: usize,
+    /// Total *measured* wire bytes over all links: every broadcast
+    /// serialized through the real encoder
+    /// ([`crate::compress::encode_into`]) and the resulting stream
+    /// lengths summed per delivered copy. Engine-independent (the wire
+    /// stage is a pure encode/decode layer outside the algorithm).
+    pub measured_wire_bytes: usize,
     /// Total messages dropped by loss injection.
     pub dropped_messages: usize,
     /// Messages overwritten in their mailbox slot by a fresher send
@@ -118,6 +125,7 @@ impl<'a> MetricHelper<'a> {
             grad_norm,
             consensus_error,
             bytes_cumulative: bus.total_bytes(),
+            measured_bytes_cumulative: bus.total_measured_bytes(),
             max_transmitted: telem.max_transmitted,
             saturations: self.saturations_cum,
         }
@@ -175,6 +183,7 @@ pub fn run_fleet(
                 final_states: plane.states(),
                 rounds_completed: completed,
                 total_bytes: bus.total_bytes(),
+                measured_wire_bytes: bus.total_measured_bytes(),
                 dropped_messages: bus.total_dropped(),
                 superseded_messages: bus.total_superseded(),
                 fresh_payload_cells,
@@ -206,6 +215,7 @@ pub fn run_fleet(
                 final_states: plane.states(),
                 rounds_completed: completed,
                 total_bytes: bus.total_bytes(),
+                measured_wire_bytes: bus.total_measured_bytes(),
                 dropped_messages: bus.total_dropped(),
                 superseded_messages: bus.total_superseded(),
                 fresh_payload_cells,
@@ -247,6 +257,7 @@ pub fn run_fleet(
                 final_states: plane.states(),
                 rounds_completed: completed,
                 total_bytes: bus.total_bytes(),
+                measured_wire_bytes: bus.total_measured_bytes(),
                 dropped_messages: bus.total_dropped(),
                 superseded_messages: bus.total_superseded(),
                 fresh_payload_cells,
@@ -374,6 +385,8 @@ mod tests {
         let b = mk(EngineKind::Threaded);
         assert_eq!(a.final_states, b.final_states);
         assert_eq!(a.total_bytes, b.total_bytes);
+        assert_eq!(a.measured_wire_bytes, b.measured_wire_bytes);
+        assert!(a.measured_wire_bytes > a.total_bytes, "framing makes measured F64 larger");
     }
 
     #[test]

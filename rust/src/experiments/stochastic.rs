@@ -69,9 +69,11 @@ impl Default for Params {
 }
 
 /// Run the sweep. Series are named `<algo>_batch<±>/grad_norm` with
-/// cumulative bytes on the x-axis (`full` for the full-shard batch);
-/// notes record per-run tail gradient norm, final global accuracy,
-/// total bytes, and the pool-recycling cell count.
+/// cumulative *modeled* bytes on the x-axis (`full` for the full-shard
+/// batch) plus a `…/grad_norm_measured_bytes` twin whose x-axis is the
+/// *measured* serialized traffic; notes record per-run tail gradient
+/// norm, final global accuracy, total modeled and measured bytes, and
+/// the pool-recycling cell count.
 pub fn run(p: &Params) -> FigureResult {
     let mut fr = FigureResult { id: "stochastic_bytes_to_accuracy".into(), ..Default::default() };
     let (data, _w_star) =
@@ -141,10 +143,20 @@ pub fn run(p: &Params) -> FigureResult {
         fr.notes.push((format!("{name}/final_accuracy"), format!("{accuracy:.4}")));
         fr.notes.push((format!("{name}/total_bytes"), out.total_bytes.to_string()));
         fr.notes
+            .push((format!("{name}/measured_wire_bytes"), out.measured_wire_bytes.to_string()));
+        fr.notes
             .push((format!("{name}/fresh_payload_cells"), out.fresh_payload_cells.to_string()));
         fr.series.push(MetricSeries::new(
             format!("{name}/grad_norm"),
             out.metrics.bytes_cumulative.clone(),
+            gn.clone(),
+        ));
+        // The same trajectory against *measured* wire bytes: what the
+        // entropy stage actually put on the wire, next to the modeled
+        // column above.
+        fr.series.push(MetricSeries::new(
+            format!("{name}/grad_norm_measured_bytes"),
+            out.metrics.measured_bytes_cumulative.clone(),
             gn.clone(),
         ));
     }
@@ -166,8 +178,9 @@ mod tests {
             ..Params::default()
         };
         let fr = run(&p);
-        // One ADC baseline + (choco, cedas) × 2 batches.
-        assert_eq!(fr.series.len(), 5);
+        // One ADC baseline + (choco, cedas) × 2 batches, each with a
+        // modeled-bytes and a measured-bytes series.
+        assert_eq!(fr.series.len(), 10);
         for s in &fr.series {
             assert!(s.y.iter().all(|v| v.is_finite()), "{}: non-finite series", s.name);
             assert!(s.x.last().unwrap() > &0.0, "{}: byte axis empty", s.name);
@@ -184,6 +197,16 @@ mod tests {
         };
         assert!(acc("choco_batchfull") > 0.6, "choco accuracy {}", acc("choco_batchfull"));
         assert!(acc("cedas_batchfull") > 0.6, "cedas accuracy {}", acc("cedas_batchfull"));
+        // Measured wire bytes are recorded for every run.
+        let measured: f64 = fr
+            .notes
+            .iter()
+            .find(|(k, _)| k == "adc_full/measured_wire_bytes")
+            .unwrap()
+            .1
+            .parse()
+            .unwrap();
+        assert!(measured > 0.0);
         // Minibatch runs differ from full-batch runs (the oracle drew).
         let series = |name: &str| &fr.series.iter().find(|s| s.name == name).unwrap().y;
         assert_ne!(

@@ -134,6 +134,32 @@
 //! section asserts the sample → encode → consume round allocates
 //! nothing in steady state.
 //!
+//! ## The wire plane
+//!
+//! The paper's byte accounting ([`compress::Payload::wire_bytes`] —
+//! 2 B/element int16, 8 B/element double, 2 bits/element ternary) is a
+//! *model*; the wire plane ([`compress::wire`]) makes it *measurable*
+//! by serializing every payload into a real byte stream:
+//! [`compress::encode_into`] writes a 5-byte frame (kind tag + length),
+//! the quantization scale where one exists, then a variant-specific
+//! body — raw little-endian words for dense payloads, varint
+//! nnz/delta-coded indices for sparse ones, and a static-model **rANS
+//! entropy coder** over ternary code streams (per-message symbol counts
+//! in the header; a 1-byte mode escapes to verbatim packed bytes
+//! whenever entropy coding would not win, so the stream never exceeds
+//! the packed size plus the fixed header). [`compress::decode_from`]
+//! parses a stream back bit-exactly, validating every length, count,
+//! index gap, and the final coder state, into the same
+//! [`compress::PayloadBuf`] arenas the encode plane recycles — encode →
+//! wire → decode → consume allocates nothing in steady state
+//! ([`compress::WireBuf`] and the arenas reserve worst-case bounds up
+//! front; asserted by the `ADCDGD_BENCH_ONLY=wire` hotpath section).
+//! The [`network::Bus`] meters both columns per link: modeled bytes
+//! keep driving the simulated clock and the goldens, while
+//! [`coordinator::RunOutput::measured_wire_bytes`] reports what the
+//! serializer actually put on the wire (`solve` prints both; `run --exp
+//! stochastic` records both axes per trajectory).
+//!
 //! [`EngineKind::Sequential`]: coordinator::EngineKind::Sequential
 //! [`EngineKind::Threaded`]: coordinator::EngineKind::Threaded
 //! [`EngineKind::Pool`]: coordinator::EngineKind::Pool
@@ -187,8 +213,9 @@ pub mod prelude {
         ObjectiveRef, QdgdOptions, StepSize,
     };
     pub use crate::compress::{
-        Compressor, Identity, LowPrecisionQuantizer, PayloadBuf, PayloadPool, Qsgd,
-        QuantizationSparsifier, RandomizedRounding, TernGrad,
+        decode_from, encode_into, Compressor, Identity, LowPrecisionQuantizer, PayloadBuf,
+        PayloadPool, Qsgd, QuantizationSparsifier, RandomizedRounding, TernGrad, WireBuf,
+        WireError,
     };
     pub use crate::consensus::{
         metropolis, metropolis_csr, paper_four_node_w, ConsensusMatrix, CsrWeights, Weights,

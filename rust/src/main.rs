@@ -324,11 +324,12 @@ fn cmd_solve(args: &Args) -> i32 {
     let n = prepared.graph().num_nodes();
     let out = prepared.run();
     println!(
-        "algo={algo} topology={topo} n={n} beta={:.4} rounds={} bytes={} dropped={} \
-         superseded={} sim_time={:.3}s",
+        "algo={algo} topology={topo} n={n} beta={:.4} rounds={} bytes={} \
+         measured_wire_bytes={} dropped={} superseded={} sim_time={:.3}s",
         prepared.weights().beta(),
         out.rounds_completed,
         out.total_bytes,
+        out.measured_wire_bytes,
         out.dropped_messages,
         out.superseded_messages,
         out.sim_seconds
@@ -340,9 +341,14 @@ fn cmd_solve(args: &Args) -> i32 {
     let m = &out.metrics;
     for i in 0..m.len() {
         println!(
-            "round {:>6}  f(x̄) {:>12.6}  ‖∇f̄‖ {:>12.6e}  consensus {:>10.4e}  bytes {:>10}",
-            m.rounds[i], m.objective[i], m.grad_norm[i], m.consensus_error[i],
-            m.bytes_cumulative[i]
+            "round {:>6}  f(x̄) {:>12.6}  ‖∇f̄‖ {:>12.6e}  consensus {:>10.4e}  bytes {:>10}  \
+             wire {:>10}",
+            m.rounds[i],
+            m.objective[i],
+            m.grad_norm[i],
+            m.consensus_error[i],
+            m.bytes_cumulative[i],
+            m.measured_bytes_cumulative[i]
         );
     }
     0

@@ -20,8 +20,12 @@ pub struct RunMetrics {
     pub grad_norm: Vec<f64>,
     /// Consensus error `‖x − x̄‖` (Theorem 1's metric).
     pub consensus_error: Vec<f64>,
-    /// Cumulative payload bytes over all links (Fig. 6's x-axis).
+    /// Cumulative payload bytes over all links (Fig. 6's x-axis;
+    /// modeled accounting).
     pub bytes_cumulative: Vec<f64>,
+    /// Cumulative *measured* wire bytes (real serializer output) for
+    /// the same traffic — the materialized twin of `bytes_cumulative`.
+    pub measured_bytes_cumulative: Vec<f64>,
     /// Max transmitted magnitude this round over all nodes (Fig. 8).
     pub max_transmitted: Vec<f64>,
     /// Cumulative saturation (integer-overflow) events.
@@ -47,6 +51,7 @@ impl RunMetrics {
         self.grad_norm.push(r.grad_norm);
         self.consensus_error.push(r.consensus_error);
         self.bytes_cumulative.push(r.bytes_cumulative as f64);
+        self.measured_bytes_cumulative.push(r.measured_bytes_cumulative as f64);
         self.max_transmitted.push(r.max_transmitted);
         self.saturations.push(r.saturations as f64);
     }
@@ -54,17 +59,18 @@ impl RunMetrics {
     /// Write as CSV (header + one row per sample).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,grad_iterations,objective,grad_norm,consensus_error,bytes_cumulative,max_transmitted,saturations\n",
+            "round,grad_iterations,objective,grad_norm,consensus_error,bytes_cumulative,measured_bytes_cumulative,max_transmitted,saturations\n",
         );
         for i in 0..self.len() {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{}\n",
                 self.rounds[i],
                 self.grad_iterations[i],
                 self.objective[i],
                 self.grad_norm[i],
                 self.consensus_error[i],
                 self.bytes_cumulative[i],
+                self.measured_bytes_cumulative[i],
                 self.max_transmitted[i],
                 self.saturations[i]
             ));
@@ -87,12 +93,14 @@ mod tests {
             grad_norm: 3.0,
             consensus_error: 0.5,
             bytes_cumulative: 16,
+            measured_bytes_cumulative: 21,
             max_transmitted: 1.5,
             saturations: 0,
         });
         assert_eq!(m.len(), 1);
         let csv = m.to_csv();
         assert!(csv.starts_with("round,"));
-        assert!(csv.contains("1,1,2,3,0.5,16,1.5,0"));
+        assert!(csv.contains("measured_bytes_cumulative"));
+        assert!(csv.contains("1,1,2,3,0.5,16,21,1.5,0"));
     }
 }

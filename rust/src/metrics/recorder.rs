@@ -13,8 +13,11 @@ pub struct RoundRecord {
     pub grad_norm: f64,
     /// `‖x − x̄‖` over stacked states.
     pub consensus_error: f64,
-    /// Cumulative wire bytes.
+    /// Cumulative wire bytes (modeled, paper §V-1 accounting).
     pub bytes_cumulative: usize,
+    /// Cumulative *measured* wire bytes: the same traffic run through
+    /// the real serializer ([`crate::compress::encode_into`]).
+    pub measured_bytes_cumulative: usize,
     /// Max per-node transmitted magnitude this round.
     pub max_transmitted: f64,
     /// Cumulative saturation events.

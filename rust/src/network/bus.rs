@@ -3,7 +3,7 @@
 //! delivery, and a simulated clock.
 
 use super::{InboxView, LinkModel, LinkStats, MailSlot, MailboxLayout, MailboxPlane};
-use crate::compress::Payload;
+use crate::compress::{encode_into, Payload, WireBuf};
 use crate::rng::SplitMix64;
 use crate::topology::Graph;
 use std::sync::Arc;
@@ -37,7 +37,12 @@ pub struct Bus {
     /// indexing: link `src → neighbors(src)[slot]` is
     /// `stats[off[src] + slot]`).
     stats: Vec<LinkStats>,
+    /// Reusable wire buffer: every broadcast serializes its payload once
+    /// to meter *measured* bytes (warm after the first message, so the
+    /// hot path stays allocation-free).
+    wire: WireBuf,
     total_bytes: usize,
+    total_measured_bytes: usize,
     total_messages: usize,
     total_dropped: usize,
     /// Largest payload metered since the last [`Bus::advance_round`].
@@ -59,7 +64,9 @@ impl Bus {
             mailbox,
             model,
             stats,
+            wire: WireBuf::new(),
             total_bytes: 0,
+            total_measured_bytes: 0,
             total_messages: 0,
             total_dropped: 0,
             round_max_payload: 0,
@@ -93,6 +100,11 @@ impl Bus {
     /// injection (delayed copies count as delivered when sent).
     pub fn broadcast(&mut self, src: usize, round: usize, payload: &Arc<Payload>) -> usize {
         let bytes = payload.wire_bytes();
+        // Serialize once per broadcast (every link carries the same
+        // stream). Modeled bytes keep driving the simulated clock and
+        // delay conversion — the paper's convention — measured bytes are
+        // metered alongside.
+        let measured = encode_into(payload, &mut self.wire).len();
         self.round_max_payload = self.round_max_payload.max(bytes);
         let t = self.model.transmit_time(bytes);
         let delay = self.model.delay_rounds_for_time(t);
@@ -110,8 +122,10 @@ impl Bus {
                 continue;
             }
             self.stats[q].bytes += bytes;
+            self.stats[q].measured_bytes += measured;
             self.stats[q].sim_time += t;
             self.total_bytes += bytes;
+            self.total_measured_bytes += measured;
             let slot = self.layout.in_slot(q);
             if delay == 0 {
                 self.mailbox.place(slot, round, Arc::clone(payload));
@@ -174,9 +188,16 @@ impl Bus {
         self.round_max_payload = 0;
     }
 
-    /// Total payload bytes delivered so far.
+    /// Total payload bytes delivered so far (modeled accounting).
     pub fn total_bytes(&self) -> usize {
         self.total_bytes
+    }
+
+    /// Total *serialized* bytes delivered so far: the same messages as
+    /// [`Bus::total_bytes`], measured by running each broadcast through
+    /// the real wire encoder ([`crate::compress::encode_into`]).
+    pub fn total_measured_bytes(&self) -> usize {
+        self.total_measured_bytes
     }
 
     /// Total messages attempted.
@@ -250,6 +271,23 @@ mod tests {
         let d2 = bus.broadcast(2, 1, &p);
         assert_eq!(d2, 1);
         assert_eq!(bus.total_bytes(), 64);
+    }
+
+    #[test]
+    fn broadcast_meters_measured_wire_bytes_per_link() {
+        let g = topology::star(4);
+        let mut bus = Bus::new(&g, LinkModel::default(), 0);
+        // F64 of 2 elements: modeled 16 B, measured 5-byte frame + 16.
+        let p = Arc::new(Payload::F64(vec![1.0, 2.0]));
+        assert_eq!(bus.broadcast(0, 1, &p), 3);
+        assert_eq!(bus.total_measured_bytes(), 3 * 21);
+        assert_eq!(bus.link_stats(0, 1).unwrap().measured_bytes, 21);
+        assert_eq!(bus.link_stats(1, 0).unwrap().measured_bytes, 0);
+        // Dropped copies meter nothing, same as the modeled counter.
+        let model = LinkModel { drop_prob: 1.0, ..LinkModel::default() };
+        let mut lossy = Bus::new(&topology::pair(), model, 7);
+        assert_eq!(lossy.broadcast(0, 1, &p), 0);
+        assert_eq!(lossy.total_measured_bytes(), 0);
     }
 
     #[test]

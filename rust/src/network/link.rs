@@ -109,8 +109,13 @@ pub struct LinkStats {
     pub messages: usize,
     /// Messages dropped by failure injection.
     pub dropped: usize,
-    /// Payload bytes successfully delivered.
+    /// Payload bytes successfully delivered (modeled accounting,
+    /// [`crate::compress::Payload::wire_bytes`]).
     pub bytes: usize,
+    /// Serialized bytes successfully delivered — the size of the real
+    /// wire stream ([`crate::compress::encode_into`]) for the same
+    /// messages `bytes` counts.
+    pub measured_bytes: usize,
     /// Total simulated transmission time (seconds).
     pub sim_time: f64,
 }

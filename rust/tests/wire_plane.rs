@@ -1,0 +1,91 @@
+//! True-wire invariants at the run level: the measured byte meter must
+//! track the serializer exactly (framing included), stay identical
+//! across engines, and ride along without perturbing the modeled
+//! accounting or the trajectory — the wire stage is a pure
+//! encode/decode layer outside the algorithm.
+
+use adcdgd::algorithms::{AdcDgdOptions, AlgorithmKind, StepSize};
+use adcdgd::coordinator::{
+    CompressorSpec, EngineKind, ObjectiveSpec, RunConfig, ScenarioSpec, TopologySpec,
+};
+use adcdgd::network::LinkModel;
+
+fn cfg(engine: EngineKind, drop_prob: f64) -> RunConfig {
+    RunConfig {
+        iterations: 120,
+        step_size: StepSize::Constant(0.01),
+        record_every: 40,
+        seed: 5,
+        engine,
+        link: LinkModel { drop_prob, ..LinkModel::default() },
+        ..RunConfig::default()
+    }
+}
+
+fn ring_spec(n: usize, compressor: CompressorSpec) -> ScenarioSpec {
+    ScenarioSpec::new(
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        TopologySpec::Ring(n),
+        ObjectiveSpec::RandomCircle { seed: 77 },
+    )
+    .with_compressor(compressor)
+}
+
+/// RandomizedRounding puts int16 payloads on the wire; on the scalar
+/// circle objective every message models 2 B and serializes to exactly
+/// 15 B (5 B frame + 8 B scale + 2 B data), so the measured total must
+/// equal the modeled total plus 13 B per delivered copy — with loss
+/// active too, since dropped copies are never metered.
+#[test]
+fn measured_bytes_equal_modeled_plus_framing_per_delivered_copy() {
+    for drop_prob in [0.0, 0.10] {
+        let out = ring_spec(16, CompressorSpec::RandomizedRounding)
+            .prepare()
+            .run_with(&cfg(EngineKind::Sequential, drop_prob));
+        let delivered = out.total_bytes / 2; // 2 modeled bytes per delivered copy
+        assert_eq!(
+            out.measured_wire_bytes,
+            out.total_bytes + 13 * delivered,
+            "drop_prob={drop_prob}"
+        );
+        if drop_prob > 0.0 {
+            assert!(out.dropped_messages > 0, "loss must be active");
+        }
+    }
+}
+
+/// The measured meter is engine-independent: serialization draws no
+/// randomness and mutates nothing, so sequential, threaded, and pool
+/// runs must agree byte-for-byte — and metering must leave the
+/// trajectory itself untouched.
+#[test]
+fn measured_bytes_are_engine_invariant() {
+    let prepared = ring_spec(16, CompressorSpec::TernGrad).prepare();
+    let seq = prepared.run_with(&cfg(EngineKind::Sequential, 0.10));
+    let thr = prepared.run_with(&cfg(EngineKind::Threaded, 0.10));
+    let pool = prepared.run_with(&cfg(EngineKind::pool(), 0.10));
+    assert!(seq.measured_wire_bytes > 0);
+    assert_eq!(seq.measured_wire_bytes, thr.measured_wire_bytes);
+    assert_eq!(seq.measured_wire_bytes, pool.measured_wire_bytes);
+    assert_eq!(seq.final_states, thr.final_states);
+    assert_eq!(seq.final_states, pool.final_states);
+    assert_eq!(seq.total_bytes, thr.total_bytes);
+    assert_eq!(seq.total_bytes, pool.total_bytes);
+}
+
+/// The recorded cumulative series is monotone and lands on the run
+/// total; at P = 1 the ternary frame-plus-header dwarfs the single
+/// packed byte, so measured traffic must exceed the modeled 9 B/copy.
+#[test]
+fn cumulative_measured_series_is_monotone_and_lands_on_the_total() {
+    let prepared = ring_spec(8, CompressorSpec::TernGrad).prepare();
+    let out = prepared.run_with(&cfg(EngineKind::Sequential, 0.0));
+    let m = &out.metrics.measured_bytes_cumulative;
+    assert!(!m.is_empty());
+    assert!(m.windows(2).all(|w| w[0] <= w[1]), "cumulative meter must be nondecreasing");
+    assert_eq!(*m.last().unwrap() as usize, out.measured_wire_bytes);
+    assert!(
+        out.measured_wire_bytes > out.total_bytes,
+        "P=1 ternary framing must exceed the modeled payload bytes"
+    );
+}
