@@ -21,8 +21,12 @@
 //! with `ADCDGD_SCALE_FULL=1` — emits `BENCH_scale.json`), or
 //! `ADCDGD_BENCH_ONLY=wire` (wire plane: serializer kernel throughput
 //! plus full rounds with materialized bytes and the zero-alloc
-//! assertion, emits `BENCH_wire_plane.json`) to run a single section
-//! (CI uses these to publish the JSON artifacts quickly).
+//! assertion, emits `BENCH_wire_plane.json`), or
+//! `ADCDGD_BENCH_ONLY=dim` (dimension plane: ADC-DGD + ternary rounds
+//! on ring(16) at P ∈ {65 536, 1 048 576} through the dimension-tiled
+//! engine at 1/4/8/16 column tiles, with the zero-alloc assertion —
+//! emits `BENCH_dim_plane.json`) to run a single section (CI uses
+//! these to publish the JSON artifacts quickly).
 
 use adcdgd::algorithms::{
     AdcDgdOptions, AlgorithmKind, ChocoSgdOptions, CompressorRef, ObjectiveRef, StepSize,
@@ -795,6 +799,10 @@ fn scale_bench() {
         let mut rngs: Vec<Xoshiro256pp> =
             (0..n).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
         let mut bus = Bus::new(&g, LinkModel::default(), 3);
+        // Modeled-only accounting: at 2E directed messages per round the
+        // unconditional per-broadcast rANS pass would dominate the round
+        // time; the serializer has its own section (`wire`).
+        bus.set_measure_wire(false);
         let mut pool = PayloadPool::new();
 
         // Warm-up fills the pool cells and arena growth, then the
@@ -1047,6 +1055,106 @@ fn wire_plane_bench() {
     println!("wire-plane bench written to BENCH_wire_plane.json");
 }
 
+/// Dimension plane: full ADC-DGD + ternary rounds on ring(16) at
+/// P ∈ {65 536, 1 048 576} through the dimension-tiled engine at
+/// 1/4/8/16 column tiles (auto workers). The node axis alone caps
+/// parallelism at n = 16; the tile axis is what lets the engine use the
+/// rest of the machine, so rounds/sec vs tile count is the payoff
+/// curve. Timing runs over rounds 9–28 of one engine invocation
+/// (bracketed by the round-8/round-28 observer callbacks) with the
+/// zero-steady-state-allocation assertion over the same window. Runs
+/// modeled-only (`set_measure_wire(false)`) so the serializer — which
+/// has its own section — stays out of the compute measurement. Emits
+/// `BENCH_dim_plane.json`.
+fn dim_plane_bench() {
+    println!("== dimension plane (node x tile hybrid parallelism) ==");
+    let n = 16usize;
+    let rounds = 28usize;
+    let warmup = 8usize;
+    let g = adcdgd::topology::ring(n);
+    let w = adcdgd::consensus::Weights::metropolis(&g);
+    let machine = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(0);
+    let mut rows_json = Vec::new();
+    for p in [65_536usize, 1_048_576] {
+        let objs = quad_objectives(n, p, 13);
+        let kind = AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 });
+        let comp: CompressorRef = Arc::new(TernGrad::new());
+        let mut base_rps = 0.0f64;
+        for tiles in [1usize, 4, 8, 16] {
+            let fleet =
+                kind.build_fleet(&g, &w, &objs, Some(&comp), StepSize::Constant(0.05), None);
+            let mut plane = fleet.plane;
+            let ctxs: Vec<_> = fleet
+                .nodes
+                .iter()
+                .map(|nl| nl.tiled_ctx().expect("ADC-DGD exposes a tiled context"))
+                .collect();
+            let rngs: Vec<Xoshiro256pp> =
+                (0..n).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
+            let mut bus = Bus::new(&g, LinkModel::default(), 3);
+            bus.set_measure_wire(false);
+            let workers = adcdgd::engine::pool::effective_workers(0, n * tiles);
+            let mut t0: Option<std::time::Instant> = None;
+            let mut allocs0 = 0usize;
+            let mut elapsed = 0.0f64;
+            let mut allocs = usize::MAX;
+            let (_bus, stats) = adcdgd::engine::dim::run(
+                ctxs,
+                &mut plane,
+                rngs,
+                bus,
+                rounds,
+                0,
+                tiles,
+                |k| k == warmup || k == rounds,
+                |t, _s, _b| {
+                    // Round `warmup` opens the timed window (pool cells,
+                    // arenas, snapshot rows, and thread parking are warm
+                    // by now); round `rounds` closes it.
+                    if t.round == warmup {
+                        allocs0 = alloc_counter::count();
+                        t0 = Some(std::time::Instant::now());
+                    } else {
+                        elapsed = t0.expect("warm-up round observed").elapsed().as_secs_f64();
+                        allocs = alloc_counter::count() - allocs0;
+                    }
+                    true
+                },
+            );
+            assert_eq!(stats.completed, rounds);
+            assert_eq!(
+                allocs, 0,
+                "dim engine allocated {allocs} times over rounds {}..={rounds} \
+                 (P={p}, tiles={tiles})",
+                warmup + 1
+            );
+            let rps = (rounds - warmup) as f64 / elapsed;
+            if tiles == 1 {
+                base_rps = rps;
+            }
+            let speedup = rps / base_rps;
+            println!(
+                "dim P={p:<8} tiles={tiles:<3} workers={workers:<3} {rps:>8.2} rounds/s \
+                 (x{speedup:.2} vs 1 tile), allocs after warm-up: 0"
+            );
+            rows_json.push(format!(
+                "    {{\"n\": {n}, \"p\": {p}, \"tiles\": {tiles}, \"workers\": {workers}, \
+                 \"timed_rounds\": {}, \"rounds_per_sec\": {rps:.4}, \
+                 \"speedup_vs_1_tile\": {speedup:.3}, \"allocs_after_warmup\": {allocs}}}",
+                rounds - warmup
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"dim_plane\",\n  \"pathway\": \"dimension-tiled (node x tile) \
+         engine, adc-dgd + terngrad, modeled-only wire\",\n  \"topology\": \"ring(16)\",\n  \
+         \"machine_parallelism\": {machine},\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    std::fs::write("BENCH_dim_plane.json", &json).expect("write BENCH_dim_plane.json");
+    println!("dimension-plane bench written to BENCH_dim_plane.json");
+}
+
 fn xla_paths() {
     let dir = adcdgd::runtime::artifacts_dir(None);
     if !adcdgd::runtime::artifacts_available(&dir) {
@@ -1121,6 +1229,10 @@ fn main() {
         wire_plane_bench();
         return;
     }
+    if only == "dim" {
+        dim_plane_bench();
+        return;
+    }
     println!("== L3 hot path ==");
     for p in [100usize, 10_000, 100_000] {
         round_throughput(p, 20);
@@ -1134,6 +1246,7 @@ fn main() {
     stochastic_plane_bench();
     scale_bench();
     wire_plane_bench();
+    dim_plane_bench();
     println!("== XLA-backed paths ==");
     xla_paths();
 }

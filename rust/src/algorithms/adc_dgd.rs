@@ -142,6 +142,16 @@ impl NodeLogic for AdcDgdNode {
     fn grad_steps(&self) -> usize {
         self.steps
     }
+
+    fn tiled_ctx(&self) -> Option<super::TiledCtx> {
+        Some(super::TiledCtx {
+            weights: Arc::clone(&self.weights),
+            objective: Arc::clone(&self.objective),
+            compressor: Arc::clone(&self.compressor),
+            step: self.step,
+            gamma: self.opts.gamma,
+        })
+    }
 }
 
 #[cfg(test)]

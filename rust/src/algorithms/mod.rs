@@ -110,6 +110,28 @@ pub struct Outgoing {
     pub saturated: usize,
 }
 
+/// The shared handles and scalars the dimension-tiled engine
+/// ([`crate::engine::dim`]) needs to execute a node's round as
+/// `(node, tile)` work units. Tiling splits one `make_message`/`consume`
+/// pair across workers, so the engine cannot drive the [`NodeLogic`]
+/// calls themselves — instead it re-executes the ADC-DGD round
+/// structure (Algorithm 2) directly from this context, phase by phase,
+/// with bit-identical per-element math. Nodes that support this expose
+/// it via [`NodeLogic::tiled_ctx`].
+#[derive(Clone)]
+pub struct TiledCtx {
+    /// Fleet-shared CSR consensus weights.
+    pub weights: Arc<crate::consensus::CsrWeights>,
+    /// The node's local objective.
+    pub objective: ObjectiveRef,
+    /// The fleet's compression operator.
+    pub compressor: CompressorRef,
+    /// Step-size schedule `α_k`.
+    pub step: StepSize,
+    /// ADC-DGD amplification exponent γ (`amp(k) = k^γ`).
+    pub gamma: f64,
+}
+
 /// Per-node algorithm state machine. One engine round = one
 /// `make_message` + one `consume` on every node. Vector state lives in
 /// the run's [`crate::state::StatePlane`]; the engine passes the node's
@@ -145,6 +167,17 @@ pub trait NodeLogic: Send {
     /// Number of *gradient* iterations completed (differs from rounds for
     /// DGD^t, which performs `t` rounds per gradient step).
     fn grad_steps(&self) -> usize;
+
+    /// Hand the dimension-tiled engine the context to re-execute this
+    /// node's round as `(node, tile)` work units, or `None` (the
+    /// default) when the algorithm's round structure is not the plain
+    /// ADC-DGD template the tiled engine encodes. A `None` anywhere in
+    /// the fleet makes [`crate::coordinator::run_fleet`] fall back to
+    /// the node-parallel pool engine — bit-identical, just without the
+    /// dimension axis.
+    fn tiled_ctx(&self) -> Option<TiledCtx> {
+        None
+    }
 }
 
 /// Shared handle types used across node implementations.

@@ -247,6 +247,65 @@ impl Payload {
         }
     }
 
+    /// Column-range variant of [`Self::decode_axpy`]: fold only elements
+    /// `lo..hi` of the decoded payload into `out` (of length `hi − lo`,
+    /// aligned so `out[0]` is element `lo`). Per-element math is exactly
+    /// the full-vector pass — each element's contribution is independent
+    /// of its neighbors — so tiling a consume across disjoint ranges is
+    /// bit-identical to one whole-vector `decode_axpy` (pinned in
+    /// `rust/tests/properties.rs`). The dimension-tiled engine uses this
+    /// to let `(node, tile)` workers consume disjoint column blocks of
+    /// the same inbox payload concurrently.
+    pub fn decode_axpy_range(&self, scale: f64, lo: usize, hi: usize, out: &mut [f64]) {
+        assert!(lo <= hi && hi <= self.len(), "decode_axpy_range bounds");
+        assert_eq!(out.len(), hi - lo, "decode_axpy_range buffer size mismatch");
+        match self {
+            Payload::F64(v) => {
+                for (o, x) in out.iter_mut().zip(v[lo..hi].iter()) {
+                    *o += scale * *x;
+                }
+            }
+            Payload::F32(v) => {
+                for (o, x) in out.iter_mut().zip(v[lo..hi].iter()) {
+                    *o += scale * *x as f64;
+                }
+            }
+            Payload::I16 { scale: s, data } => {
+                let c = scale * *s;
+                for (o, q) in out.iter_mut().zip(data[lo..hi].iter()) {
+                    *o += c * *q as f64;
+                }
+            }
+            Payload::I8 { scale: s, data } => {
+                let c = scale * *s;
+                for (o, q) in out.iter_mut().zip(data[lo..hi].iter()) {
+                    *o += c * *q as f64;
+                }
+            }
+            Payload::SparseI16 { scale: s, idx, val, .. } => {
+                let c = scale * *s;
+                // Stored indices are strictly ascending: binary-search
+                // the window once, then walk it.
+                let a = idx.partition_point(|&i| (i as usize) < lo);
+                let b = idx.partition_point(|&i| (i as usize) < hi);
+                for (i, q) in idx[a..b].iter().zip(val[a..b].iter()) {
+                    out[*i as usize - lo] += c * *q as f64;
+                }
+            }
+            Payload::Ternary { scale: s, packed, .. } => {
+                let c = scale * *s;
+                for (o, i) in out.iter_mut().zip(lo..hi) {
+                    let code = (packed[i / 4] >> ((i % 4) * 2)) & 0b11;
+                    match code {
+                        0b01 => *o += c,
+                        0b10 => *o -= c,
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+
     /// Pack a ternary slice (values in {−1, 0, 1}) into 2-bit codes.
     pub fn pack_ternary(len: usize, scale: f64, ternary: &[i8]) -> Payload {
         let mut packed = Vec::new();

@@ -67,6 +67,44 @@ pub use wire::{decode_from, encode_into, WireBuf, WireError, FRAME_BYTES};
 
 use crate::rng::Xoshiro256pp;
 
+/// Result of phase one of a dimension-tiled encode (see
+/// [`Compressor::stage_into`]): the whole-vector reductions are done,
+/// the RNG block is drawn, and the output arena is sized — everything
+/// the per-tile [`Compressor::encode_tile`] kernels need, captured once
+/// per message.
+#[derive(Debug, Clone, Copy)]
+pub struct StagedEncode {
+    /// Arena/kind/scale description, exactly what the equivalent
+    /// [`Compressor::compress_into`] call would have returned (with
+    /// `saturated` still 0 — tiles report saturation incrementally).
+    pub cref: CompressedRef,
+    /// The whole-vector reduction the tile kernels quantize against
+    /// (TernGrad: `max|z|`; QSGD: `‖z‖₂`). Computed serially over the
+    /// full vector so non-associative reductions stay bit-exact.
+    pub reduced: f64,
+    /// Whether the tile kernels actually have work to do. `false` for
+    /// degenerate messages (e.g. the all-zero vector) that phase one
+    /// already encoded completely; the engine then skips
+    /// [`Compressor::encode_tile`] for this message.
+    pub tiled: bool,
+}
+
+/// Mutable view of one tile's slice of the encode arena, handed to
+/// [`Compressor::encode_tile`]. Variants mirror the wire-kind arenas of
+/// [`PayloadBuf`] that the tileable operators write (ternary packed
+/// bytes, QSGD's i8/i16 lanes).
+#[derive(Debug)]
+pub enum ArenaTileMut<'a> {
+    /// Packed-byte arena slice (`Payload::Ternary`). Tile bounds are
+    /// 8-aligned (see [`crate::state::tile_bounds`]), so each tile owns
+    /// whole bytes of the 4-codes-per-byte packing.
+    U8(&'a mut [u8]),
+    /// i8 arena slice (`Payload::I8`).
+    I8(&'a mut [i8]),
+    /// i16 arena slice (`Payload::I16`).
+    I16(&'a mut [i16]),
+}
+
 /// Result of compressing one vector.
 #[derive(Debug, Clone)]
 pub struct Compressed {
@@ -123,6 +161,59 @@ pub trait Compressor: Send + Sync {
         let mut buf = PayloadBuf::new();
         let r = self.compress_into(z, rng, &mut buf);
         Compressed { payload: buf.emit(&r), saturated: r.saturated }
+    }
+
+    /// Whether this operator supports the two-phase dimension-tiled
+    /// encode ([`Self::stage_into`] + [`Self::encode_tile`]). Default
+    /// `false`; the tiled engine falls back to whole-vector
+    /// [`Self::compress_into`] (bit-identical either way — tiling is
+    /// purely a scheduling choice).
+    fn tileable(&self) -> bool {
+        false
+    }
+
+    /// Phase one of a dimension-tiled encode: run the whole-vector
+    /// reductions **serially** (so non-associative folds like QSGD's
+    /// `‖z‖₂` keep their exact accumulation order), draw the message's
+    /// block-RNG randomness into `buf.rand` (same one-`fill_u64`-block
+    /// contract as [`Self::compress_into`]), and size the output arena
+    /// for the message. After this returns, disjoint tiles of `z` can be
+    /// quantized concurrently via [`Self::encode_tile`] with bit-exact
+    /// results. Returns `None` when the operator is not tileable.
+    ///
+    /// Implementations must [`PayloadBuf::reset`] the buffer first, just
+    /// like `compress_into`.
+    fn stage_into(
+        &self,
+        z: &[f64],
+        rng: &mut Xoshiro256pp,
+        buf: &mut PayloadBuf,
+    ) -> Option<StagedEncode> {
+        let _ = (z, rng, buf);
+        None
+    }
+
+    /// Phase two of a dimension-tiled encode: quantize the tile
+    /// `z_tile = z[lo..hi]` into its disjoint slice of the output arena,
+    /// consuming `rand_tile = buf.rand[lo..hi]` (the block draws for
+    /// exactly these elements). Per-element math must match
+    /// [`Self::compress_into`] exactly — each element's quantization may
+    /// depend only on its own value, its own draw, and the staged
+    /// whole-vector reduction — so any tiling of the column axis is
+    /// bit-identical to the serial pass. Returns the tile's saturation
+    /// count.
+    ///
+    /// Only called when [`Self::stage_into`] returned a staged encode
+    /// with `tiled == true`.
+    fn encode_tile(
+        &self,
+        z_tile: &[f64],
+        rand_tile: &[u64],
+        staged: &StagedEncode,
+        out: ArenaTileMut<'_>,
+    ) -> usize {
+        let _ = (z_tile, rand_tile, staged, out);
+        unimplemented!("encode_tile called on a non-tileable operator")
     }
 
     /// Theoretical per-element variance bound σ², when known in closed

@@ -10,7 +10,7 @@
 //! trajectories are preserved exactly.
 
 use super::codec::pack_codes;
-use super::{CompressedRef, Compressor, PayloadBuf, PayloadKind};
+use super::{ArenaTileMut, CompressedRef, Compressor, PayloadBuf, PayloadKind, StagedEncode};
 use crate::rng::{block_f64, Xoshiro256pp};
 
 #[inline]
@@ -307,6 +307,72 @@ impl Compressor for TernGrad {
         CompressedRef { kind: PayloadKind::Ternary, len, scale: s, saturated: 0 }
     }
 
+    fn tileable(&self) -> bool {
+        true
+    }
+
+    fn stage_into(
+        &self,
+        z: &[f64],
+        rng: &mut Xoshiro256pp,
+        buf: &mut PayloadBuf,
+    ) -> Option<StagedEncode> {
+        buf.reset();
+        let len = z.len();
+        // The whole-vector reduction (max-fold, exactly the serial
+        // fold order) and the message's single block-RNG draw happen
+        // here, serially per node; tiles then quantize independently.
+        let s = z.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        if s == 0.0 {
+            // Zero vector: fully encoded here, no randomness drawn
+            // (scalar-path contract), nothing left for the tiles.
+            buf.u8s.resize(len.div_ceil(4), 0);
+            return Some(StagedEncode {
+                cref: CompressedRef { kind: PayloadKind::Ternary, len, scale: 0.0, saturated: 0 },
+                reduced: 0.0,
+                tiled: false,
+            });
+        }
+        rng.fill_u64(&mut buf.rand, len);
+        buf.u8s.resize(len.div_ceil(4), 0);
+        Some(StagedEncode {
+            cref: CompressedRef { kind: PayloadKind::Ternary, len, scale: s, saturated: 0 },
+            reduced: s,
+            tiled: true,
+        })
+    }
+
+    fn encode_tile(
+        &self,
+        z_tile: &[f64],
+        rand_tile: &[u64],
+        staged: &StagedEncode,
+        out: ArenaTileMut<'_>,
+    ) -> usize {
+        let ArenaTileMut::U8(out) = out else {
+            unreachable!("terngrad stages a ternary (u8) arena")
+        };
+        debug_assert_eq!(out.len(), z_tile.len().div_ceil(4));
+        let s = staged.reduced;
+        // Same branchless draw/code expression as `compress_into`
+        // (division unhoisted for bit equality), assembled into whole
+        // bytes with the `pack_codes` shift layout. Tile bounds are
+        // 8-aligned, so this tile owns its bytes exclusively and the
+        // byte stream is identical to one whole-vector `pack_codes`.
+        let mut codes = z_tile.iter().zip(rand_tile.iter()).map(|(&v, &r)| {
+            let take = (block_f64(r) < v.abs() / s) as u8;
+            take << ((v < 0.0) as u32)
+        });
+        for b in out.iter_mut() {
+            let c0 = codes.next().unwrap_or(0);
+            let c1 = codes.next().unwrap_or(0);
+            let c2 = codes.next().unwrap_or(0);
+            let c3 = codes.next().unwrap_or(0);
+            *b = c0 | c1 << 2 | c2 << 4 | c3 << 6;
+        }
+        0
+    }
+
     fn variance_bound(&self) -> Option<f64> {
         None
     }
@@ -415,6 +481,83 @@ impl Compressor for Qsgd {
             }
             CompressedRef { kind: PayloadKind::I16, len, scale, saturated }
         }
+    }
+
+    fn tileable(&self) -> bool {
+        true
+    }
+
+    fn stage_into(
+        &self,
+        z: &[f64],
+        rng: &mut Xoshiro256pp,
+        buf: &mut PayloadBuf,
+    ) -> Option<StagedEncode> {
+        buf.reset();
+        let len = z.len();
+        // ‖z‖₂ is a sequential non-associative reduction: computing it
+        // here, serially over the whole vector, is what makes the tiled
+        // encode bit-exact at any tile count.
+        let norm = crate::linalg::vecops::norm2(z);
+        if norm == 0.0 {
+            // No randomness drawn (scalar-path contract); fully encoded.
+            buf.i8s.resize(len, 0);
+            return Some(StagedEncode {
+                cref: CompressedRef { kind: PayloadKind::I8, len, scale: 0.0, saturated: 0 },
+                reduced: 0.0,
+                tiled: false,
+            });
+        }
+        rng.fill_u64(&mut buf.rand, len);
+        let scale = norm / self.levels as f64;
+        let kind = if self.levels <= 127 {
+            buf.i8s.resize(len, 0);
+            PayloadKind::I8
+        } else {
+            buf.i16s.resize(len, 0);
+            PayloadKind::I16
+        };
+        Some(StagedEncode {
+            cref: CompressedRef { kind, len, scale, saturated: 0 },
+            reduced: norm,
+            tiled: true,
+        })
+    }
+
+    fn encode_tile(
+        &self,
+        z_tile: &[f64],
+        rand_tile: &[u64],
+        staged: &StagedEncode,
+        out: ArenaTileMut<'_>,
+    ) -> usize {
+        let norm = staged.reduced;
+        let s = self.levels as f64;
+        let mut saturated = 0usize;
+        // Exactly the scalar per-element expression of `compress_into`
+        // (`s·|v|/norm` unreassociated, draw `i` decides element `i`) —
+        // each element's chain is independent of chunk/tile boundaries,
+        // which the chunked-vs-scalar golden test already pins.
+        match out {
+            ArenaTileMut::I8(out) => {
+                for ((o, &v), &r) in out.iter_mut().zip(z_tile).zip(rand_tile) {
+                    let u = s * v.abs() / norm;
+                    let lo = u.floor();
+                    let qq = if block_f64(r) < u - lo { lo + 1.0 } else { lo };
+                    *o = saturate_i8(if v >= 0.0 { qq } else { -qq }, &mut saturated);
+                }
+            }
+            ArenaTileMut::I16(out) => {
+                for ((o, &v), &r) in out.iter_mut().zip(z_tile).zip(rand_tile) {
+                    let u = s * v.abs() / norm;
+                    let lo = u.floor();
+                    let qq = if block_f64(r) < u - lo { lo + 1.0 } else { lo };
+                    *o = saturate_i16(qq * v.signum(), &mut saturated);
+                }
+            }
+            ArenaTileMut::U8(_) => unreachable!("qsgd stages an i8/i16 arena, never ternary"),
+        }
+        saturated
     }
 
     fn variance_bound(&self) -> Option<f64> {

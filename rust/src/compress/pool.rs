@@ -91,6 +91,26 @@ impl PayloadPool {
         self.install(&r)
     }
 
+    /// Direct access to the encode workspace, for the dimension-tiled
+    /// encode path: the engine calls [`Compressor::stage_into`] /
+    /// [`Compressor::encode_tile`] against this buffer itself (tile
+    /// workers write disjoint arena slices), then seals the message
+    /// with [`Self::install_staged`].
+    ///
+    /// [`Compressor::stage_into`]: super::Compressor::stage_into
+    /// [`Compressor::encode_tile`]: super::Compressor::encode_tile
+    pub fn buf_mut(&mut self) -> &mut PayloadBuf {
+        &mut self.buf
+    }
+
+    /// Seal a staged (tile-encoded) message already sitting in
+    /// [`Self::buf_mut`]'s arenas into a pooled cell — the tail half of
+    /// [`Self::encode`] for the two-phase tiled encode path. Same cell
+    /// cycle, same zero-steady-state-allocation contract.
+    pub fn install_staged(&mut self, r: &CompressedRef) -> Arc<Payload> {
+        self.install(r)
+    }
+
     /// Move the encoded message out of the buffer into a cell: reuse a
     /// returned cell in place when one is free, else allocate a fresh
     /// one (warm-up only).

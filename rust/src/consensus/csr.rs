@@ -196,6 +196,59 @@ impl CsrWeights {
         }
     }
 
+    /// Column-range variant of [`Self::mix_row_into`]: compute only
+    /// coordinates `lo..hi` of the mixed row, writing them into `out`
+    /// (of length `hi − lo`). `self_row` and `mirrors` are the *full*
+    /// `p`-length row and flattened `deg × p` mirror block — only the
+    /// output is tiled. Each output coordinate's reduction chain
+    /// (`W_ii · x[e]`, then `+ W_is · mirrors[s·p + e]` over ascending
+    /// slots) is independent of its neighbors, so splitting the column
+    /// axis across tiles is bit-identical to one whole-row
+    /// [`Self::mix_row_into`] at any tile size (pinned in
+    /// `rust/tests/properties.rs`). The dimension-tiled engine's
+    /// `(node, tile)` mix units call this.
+    pub fn mix_row_range_into(
+        &self,
+        i: usize,
+        self_row: &[f64],
+        mirrors: &[f64],
+        lo: usize,
+        hi: usize,
+        out: &mut [f64],
+    ) {
+        const CHUNK: usize = 8;
+        let p = self_row.len();
+        debug_assert!(lo <= hi && hi <= p, "column range out of bounds");
+        debug_assert_eq!(out.len(), hi - lo);
+        debug_assert_eq!(mirrors.len(), self.degree(i) * p);
+        let d = self.diag[i];
+        let wts = self.row_weights(i);
+        let span = hi - lo;
+        let blocks = span / CHUNK;
+        for b in 0..blocks {
+            let e = lo + b * CHUNK;
+            let mut acc = [0.0f64; CHUNK];
+            for (a, &x) in acc.iter_mut().zip(&self_row[e..e + CHUNK]) {
+                *a = d * x;
+            }
+            for (s, &w) in wts.iter().enumerate() {
+                let m = &mirrors[s * p + e..s * p + e + CHUNK];
+                for (a, &mv) in acc.iter_mut().zip(m) {
+                    *a += w * mv;
+                }
+            }
+            out[b * CHUNK..(b + 1) * CHUNK].copy_from_slice(&acc);
+        }
+        let tail = blocks * CHUNK;
+        for (o, e) in out.iter_mut().zip(lo..hi).skip(tail) {
+            let mut a = d * self_row[e];
+            for (s, &w) in wts.iter().enumerate() {
+                a += w * mirrors[s * p + e];
+            }
+            *o = a;
+        }
+    }
+
     /// Sparse matrix–vector product `out = W v` in the canonical row
     /// reduction order (diagonal first, then ascending neighbors). This
     /// is the kernel behind [`crate::linalg::estimate_beta_csr`]'s

@@ -19,12 +19,32 @@ pub enum EngineKind {
         /// parallelism.
         workers: usize,
     },
+    /// Dimension-tiled hybrid engine: `(node, tile)` work units over a
+    /// shared worker pool, saturating cores even when `P ≫ n` leaves the
+    /// node axis too short. Bit-identical to the other engines. Falls
+    /// back to [`EngineKind::Pool`] when the fleet is not tileable (any
+    /// node without a [`crate::algorithms::TiledCtx`], a compressor
+    /// without staged tile kernels, or a non-separable objective).
+    Dim {
+        /// Worker-thread count; `0` selects the machine's available
+        /// parallelism (clamped to `n × tiles` work units).
+        workers: usize,
+        /// Column-tile count the dimension axis is split into (interior
+        /// tile boundaries are 8-aligned; `0` is treated as `1`).
+        tiles: usize,
+    },
 }
 
 impl EngineKind {
     /// The worker pool with the default (auto) worker count.
     pub fn pool() -> Self {
         EngineKind::Pool { workers: 0 }
+    }
+
+    /// The dimension-tiled engine with auto workers and one tile per
+    /// worker.
+    pub fn dim(tiles: usize) -> Self {
+        EngineKind::Dim { workers: 0, tiles }
     }
 }
 
@@ -52,6 +72,12 @@ pub struct RunConfig {
     pub link: LinkModel,
     /// Engine selection.
     pub engine: EngineKind,
+    /// Serialize every broadcast through the real byte encoder and meter
+    /// the stream lengths (`RunOutput::measured_wire_bytes`). Turning
+    /// this off skips the per-broadcast [`crate::compress::encode_into`]
+    /// pass — modeled byte accounting is unaffected, measured counters
+    /// read zero. Default `true`.
+    pub measure_wire: bool,
 }
 
 impl Default for RunConfig {
@@ -64,6 +90,7 @@ impl Default for RunConfig {
             grad_tol: None,
             link: LinkModel::default(),
             engine: EngineKind::Sequential,
+            measure_wire: true,
         }
     }
 }
@@ -79,5 +106,6 @@ mod tests {
         assert_eq!(c.record_every, 1);
         assert_eq!(c.engine, EngineKind::Sequential);
         assert!(c.grad_tol.is_none());
+        assert!(c.measure_wire, "wire metering must default on");
     }
 }

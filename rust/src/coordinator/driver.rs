@@ -3,8 +3,8 @@
 //! metrics each recorded round, and aggregates repeated trials.
 
 use super::{EngineKind, RunConfig};
-use crate::algorithms::{Fleet, ObjectiveRef};
-use crate::engine::{pool, sequential, threaded, RoundTelemetry};
+use crate::algorithms::{Fleet, ObjectiveRef, TiledCtx};
+use crate::engine::{dim, pool, sequential, threaded, RoundTelemetry, Snapshot};
 use crate::linalg::vecops;
 use crate::metrics::{RoundRecord, RunMetrics};
 use crate::network::Bus;
@@ -147,15 +147,15 @@ pub fn run_fleet(
     assert_eq!(plane.n(), n);
     assert_eq!(objectives.len(), n);
     let mut rngs = node_rngs(cfg.seed, n);
-    let bus = Bus::new(graph, cfg.link, cfg.seed ^ 0xB0B);
+    let mut bus = Bus::new(graph, cfg.link, cfg.seed ^ 0xB0B);
+    bus.set_measure_wire(cfg.measure_wire);
     let mut metrics = RunMetrics::default();
     let mut helper = MetricHelper::new(objectives, cfg);
     let total_rounds = cfg.iterations;
 
-    match cfg.engine {
+    let (bus, stats) = match cfg.engine {
         EngineKind::Sequential => {
-            let mut bus = bus;
-            let (completed, fresh_payload_cells) = sequential::run(
+            let stats = sequential::run(
                 &mut nodes,
                 &mut plane,
                 &mut rngs,
@@ -179,20 +179,10 @@ pub fn run_fleet(
                     true
                 },
             );
-            RunOutput {
-                final_states: plane.states(),
-                rounds_completed: completed,
-                total_bytes: bus.total_bytes(),
-                measured_wire_bytes: bus.total_measured_bytes(),
-                dropped_messages: bus.total_dropped(),
-                superseded_messages: bus.total_superseded(),
-                fresh_payload_cells,
-                sim_seconds: bus.sim_clock(),
-                metrics,
-            }
+            (bus, stats)
         }
         EngineKind::Threaded => {
-            let (_nodes, bus, completed, fresh_payload_cells) =
+            let (_nodes, bus, stats) =
                 threaded::run(nodes, &mut plane, rngs, bus, total_rounds, |telem, snap, b| {
                     if helper.should_record(&telem, total_rounds) {
                         let states: Vec<&[f64]> =
@@ -211,17 +201,7 @@ pub fn run_fleet(
                     }
                     true
                 });
-            RunOutput {
-                final_states: plane.states(),
-                rounds_completed: completed,
-                total_bytes: bus.total_bytes(),
-                measured_wire_bytes: bus.total_measured_bytes(),
-                dropped_messages: bus.total_dropped(),
-                superseded_messages: bus.total_superseded(),
-                fresh_payload_cells,
-                sim_seconds: bus.sim_clock(),
-                metrics,
-            }
+            (bus, stats)
         }
         EngineKind::Pool { workers } => {
             // Snapshot only on observed rounds; sharing `round_is_recorded`
@@ -230,7 +210,7 @@ pub fn run_fleet(
             let want_cfg = *cfg;
             let want =
                 move |round: usize| round_is_recorded(&want_cfg, round, total_rounds);
-            let (_nodes, bus, completed, fresh_payload_cells) = pool::run(
+            let (_nodes, bus, stats) = pool::run(
                 nodes,
                 &mut plane,
                 rngs,
@@ -253,18 +233,76 @@ pub fn run_fleet(
                     !stop
                 },
             );
-            RunOutput {
-                final_states: plane.states(),
-                rounds_completed: completed,
-                total_bytes: bus.total_bytes(),
-                measured_wire_bytes: bus.total_measured_bytes(),
-                dropped_messages: bus.total_dropped(),
-                superseded_messages: bus.total_superseded(),
-                fresh_payload_cells,
-                sim_seconds: bus.sim_clock(),
-                metrics,
+            (bus, stats)
+        }
+        EngineKind::Dim { workers, tiles } => {
+            let want_cfg = *cfg;
+            let want =
+                move |round: usize| round_is_recorded(&want_cfg, round, total_rounds);
+            let observer = |telem: RoundTelemetry, snap: &Snapshot, b: &Bus| -> bool {
+                let states: Vec<&[f64]> = snap.states.iter().map(|s| s.as_slice()).collect();
+                let grad_steps = snap.grad_steps.iter().copied().max().unwrap_or(0);
+                let rec = helper.record(&telem, &states, grad_steps, b);
+                let stop = cfg.grad_tol.map(|t| rec.grad_norm <= t).unwrap_or(false);
+                if telem.round % cfg.record_every.max(1) == 0
+                    || telem.round == total_rounds
+                    || stop
+                {
+                    metrics.push(rec);
+                }
+                !stop
+            };
+            // The dimension engine needs the whole round expressed as
+            // range kernels: a tiled context from every node, staged tile
+            // encoders on the compressor, coordinate-separable gradients,
+            // and a mirror bank. Anything else falls back to the node
+            // pool — bit-identical, just without the second axis.
+            let ctxs: Option<Vec<TiledCtx>> =
+                nodes.iter().map(|nl| nl.tiled_ctx()).collect();
+            let tileable = plane.has_mirrors()
+                && ctxs.as_ref().is_some_and(|cs| {
+                    cs.iter().all(|c| {
+                        c.compressor.tileable() && c.objective.supports_range_grad()
+                    })
+                });
+            match (tileable, ctxs) {
+                (true, Some(ctxs)) => dim::run(
+                    ctxs,
+                    &mut plane,
+                    rngs,
+                    bus,
+                    total_rounds,
+                    workers,
+                    tiles.max(1),
+                    want,
+                    observer,
+                ),
+                _ => {
+                    let (_nodes, bus, stats) = pool::run(
+                        nodes,
+                        &mut plane,
+                        rngs,
+                        bus,
+                        total_rounds,
+                        workers,
+                        want,
+                        observer,
+                    );
+                    (bus, stats)
+                }
             }
         }
+    };
+    RunOutput {
+        final_states: plane.states(),
+        rounds_completed: stats.completed,
+        total_bytes: bus.total_bytes(),
+        measured_wire_bytes: bus.total_measured_bytes(),
+        dropped_messages: bus.total_dropped(),
+        superseded_messages: bus.total_superseded(),
+        fresh_payload_cells: stats.fresh_payload_cells,
+        sim_seconds: bus.sim_clock(),
+        metrics,
     }
 }
 
@@ -387,6 +425,102 @@ mod tests {
         assert_eq!(a.total_bytes, b.total_bytes);
         assert_eq!(a.measured_wire_bytes, b.measured_wire_bytes);
         assert!(a.measured_wire_bytes > a.total_bytes, "framing makes measured F64 larger");
+    }
+
+    #[test]
+    fn dim_engine_falls_back_for_untileable_fleets_bitwise() {
+        // DGD nodes expose no TiledCtx, so the Dim arm must silently run
+        // the node pool and stay bit-identical to the sequential engine.
+        let (g, objs, w) = pair_setup();
+        let mk = |engine| {
+            let cfg = RunConfig {
+                iterations: 120,
+                step_size: StepSize::Constant(0.02),
+                record_every: 120,
+                engine,
+                ..RunConfig::default()
+            };
+            let fleet = dgd_fleet(&g, &objs, &w, cfg.step_size);
+            run_fleet(&g, &objs, fleet, &cfg)
+        };
+        let a = mk(EngineKind::Sequential);
+        let b = mk(EngineKind::Dim { workers: 2, tiles: 3 });
+        assert_eq!(a.final_states, b.final_states);
+        assert_eq!(a.total_bytes, b.total_bytes);
+        assert_eq!(a.measured_wire_bytes, b.measured_wire_bytes);
+    }
+
+    #[test]
+    fn dim_engine_runs_tiled_fleets_bitwise() {
+        use crate::algorithms::{AdcDgdOptions, CompressorRef};
+        use crate::compress::TernGrad;
+        use crate::objective::DiagonalQuadratic;
+
+        let g = crate::topology::ring(4);
+        let n = 4;
+        let p = 11;
+        let objs: Vec<ObjectiveRef> = (0..n)
+            .map(|i| {
+                let d: Vec<f64> = (0..p).map(|j| 1.0 + ((i + j) % 5) as f64 * 0.3).collect();
+                let b: Vec<f64> = (0..p).map(|j| ((i * 7 + j) % 9) as f64 - 4.0).collect();
+                Arc::new(DiagonalQuadratic::new(d, b)) as ObjectiveRef
+            })
+            .collect();
+        let w = Weights::metropolis(&g);
+        let comp: CompressorRef = Arc::new(TernGrad::new());
+        let mk = |engine| {
+            let cfg = RunConfig {
+                iterations: 60,
+                step_size: StepSize::Constant(0.01),
+                record_every: 20,
+                seed: 5,
+                engine,
+                ..RunConfig::default()
+            };
+            let fleet = AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }).build_fleet(
+                &g,
+                &w,
+                &objs,
+                Some(&comp),
+                cfg.step_size,
+                None,
+            );
+            run_fleet(&g, &objs, fleet, &cfg)
+        };
+        let a = mk(EngineKind::Sequential);
+        let b = mk(EngineKind::Dim { workers: 3, tiles: 4 });
+        assert_eq!(a.final_states, b.final_states);
+        assert_eq!(a.total_bytes, b.total_bytes);
+        assert_eq!(a.measured_wire_bytes, b.measured_wire_bytes);
+        assert_eq!(a.metrics.grad_norm, b.metrics.grad_norm);
+        // Pool recycling must hold on the dimension engine too.
+        assert!(
+            b.fresh_payload_cells > 0 && b.fresh_payload_cells <= 4 * n,
+            "fresh cells: {}",
+            b.fresh_payload_cells
+        );
+    }
+
+    #[test]
+    fn measure_wire_off_zeroes_measured_bytes_only() {
+        let (g, objs, w) = pair_setup();
+        let mk = |measure_wire| {
+            let cfg = RunConfig {
+                iterations: 80,
+                step_size: StepSize::Constant(0.02),
+                record_every: 80,
+                measure_wire,
+                ..RunConfig::default()
+            };
+            let fleet = dgd_fleet(&g, &objs, &w, cfg.step_size);
+            run_fleet(&g, &objs, fleet, &cfg)
+        };
+        let on = mk(true);
+        let off = mk(false);
+        assert_eq!(on.final_states, off.final_states, "metering must not perturb the run");
+        assert_eq!(on.total_bytes, off.total_bytes);
+        assert!(on.measured_wire_bytes > 0);
+        assert_eq!(off.measured_wire_bytes, 0, "modeled-only run skips the serializer");
     }
 
     #[test]

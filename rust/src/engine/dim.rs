@@ -1,0 +1,713 @@
+//! Dimension-tiled engine: `(node, tile)` work units over a worker
+//! pool, saturating cores in the paper's high-dimensional regime.
+//!
+//! The node-parallel engines ([`super::pool`], [`super::threaded`]) cap
+//! their useful parallelism at `n` workers — on a 16-node topology with
+//! `P = 2²⁰` coordinates, most cores of a large machine idle while each
+//! worker grinds through megabyte rows alone. This engine adds a second
+//! parallelism axis: the column dimension is split into 8-aligned
+//! contiguous tiles ([`crate::state::tile_bounds`]) and every round
+//! executes as a fixed sequence of phases whose units are either
+//! `(node, tile)` pairs (element-wise kernels) or whole nodes
+//! (reductions, bus traffic). Workers claim units dynamically from one
+//! shared atomic counter per phase, so `min(cores, n·tiles)` workers
+//! stay busy regardless of how node and tile counts divide.
+//!
+//! ## Round structure (barriers between every consecutive phase)
+//!
+//! | phase | units | work |
+//! |---|---|---|
+//! | A | node×tile | amplified differential `k^γ(x − x̃)` + partial `‖·‖∞` |
+//! | B | node | combine tile maxima; [`Compressor::stage_into`] (serial whole-vector reductions, one block-RNG draw, arena sizing) |
+//! | C | node×tile | [`Compressor::encode_tile`] into disjoint arena slices |
+//! | D | node | seal pooled payload, serialize on a per-worker [`WireBuf`] *outside* the bus lock, broadcast, telemetry |
+//! | D2 | node | collect the node's inbox slots off the bus |
+//! | E1 | node×tile | integrate own + neighbor mirrors (`decode_axpy_range`) |
+//! | E2 | node×tile | column-bounded consensus mix + gradient step |
+//!
+//! Whole-vector reductions are two-phase where associativity makes the
+//! tile combine exact (the `‖·‖∞` max fold) and deliberately *serial*
+//! where it does not (QSGD's `‖·‖₂` inside `stage_into`), so every
+//! per-element result is bit-identical to the untiled engines at every
+//! tile count — asserted against the golden snapshots in
+//! `rust/tests/engine_equivalence.rs`.
+//!
+//! The phases split writes from shared reads deliberately: E1 performs
+//! *all* mirror writes (tile-disjoint), E2 only *reads* full mirror rows
+//! while writing tile slices of `scratch`/`grad`/`x` — so no live
+//! `&mut` view ever overlaps a shared view (rule 4 of the
+//! [`crate::state`] borrowing rules).
+//!
+//! The engine re-executes the ADC-DGD round (Algorithm 2) directly from
+//! each node's [`TiledCtx`] — a single `make_message`/`consume` call
+//! cannot be split across workers — so it runs exactly the fleets whose
+//! every node reports [`NodeLogic::tiled_ctx`]`.is_some()`;
+//! [`crate::coordinator::run_fleet`] falls back to the pool engine
+//! otherwise (bit-identical, just without the dimension axis).
+//!
+//! Steady-state rounds allocate nothing: the per-node [`PayloadPool`]
+//! cell cycle, pre-sized staging buffers, warm wire buffers, and a
+//! reused observer snapshot (the `ADCDGD_BENCH_ONLY=dim` hotpath
+//! section asserts zero allocations over its timed window).
+//!
+//! [`Compressor::stage_into`]: crate::compress::Compressor::stage_into
+//! [`Compressor::encode_tile`]: crate::compress::Compressor::encode_tile
+//! [`NodeLogic::tiled_ctx`]: crate::algorithms::NodeLogic::tiled_ctx
+
+use super::{EngineStats, RoundTelemetry, Snapshot};
+use crate::algorithms::TiledCtx;
+use crate::compress::{
+    encode_into, ArenaTileMut, CompressedRef, PayloadKind, PayloadPool, StagedEncode, WireBuf,
+};
+use crate::linalg::vecops;
+use crate::network::{Bus, MailSlot};
+use crate::rng::Xoshiro256pp;
+use crate::state::{tile_bounds, StatePlane};
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+/// Phases with their own claim counter (A, B, C, D, D2, E1, E2).
+const NPHASES: usize = 7;
+
+/// Interior-mutability cell shared across the engine's workers. All
+/// synchronization is the phase contract: within one phase each cell is
+/// accessed by exactly one worker (`get_mut`) *or* only shared-read
+/// (`get_ref`), and the phase gates order the phases.
+struct SyncCell<T>(UnsafeCell<T>);
+
+// SAFETY: cross-thread access follows the phase contract above; the
+// gates' barrier synchronization provides the happens-before edges.
+unsafe impl<T: Send> Sync for SyncCell<T> {}
+
+impl<T> SyncCell<T> {
+    fn new(v: T) -> Self {
+        Self(UnsafeCell::new(v))
+    }
+
+    /// Exclusive access.
+    ///
+    /// # Safety
+    /// No other access to this cell may be live (one claimant per cell
+    /// per phase).
+    #[allow(clippy::mut_from_ref)] // phase-gated interior mutability
+    unsafe fn get_mut(&self) -> &mut T {
+        &mut *self.0.get()
+    }
+
+    /// Shared access.
+    ///
+    /// # Safety
+    /// No mutable access to this cell may be live in the current phase.
+    unsafe fn get_ref(&self) -> &T {
+        &*self.0.get()
+    }
+
+    fn into_inner(self) -> T {
+        self.0.into_inner()
+    }
+}
+
+/// Raw base pointer of the arena a staged encode writes, captured in
+/// phase B so phase C's tile workers can slice disjoint ranges without
+/// touching the owning [`PayloadPool`] buffer through a reference.
+#[derive(Clone, Copy)]
+enum ArenaPtr {
+    /// Degenerate message — phase C has nothing to write.
+    None,
+    /// Ternary packed codes (tile `t` owns bytes `lo/4 .. ⌈hi/4⌉`;
+    /// 8-aligned bounds make those whole disjoint bytes).
+    U8(*mut u8),
+    /// QSGD i8 lane.
+    I8(*mut i8),
+    /// QSGD i16 lane.
+    I16(*mut i16),
+}
+
+/// Everything phase C needs about a node's staged encode, written once
+/// per round in phase B and shared-read by the tile workers.
+#[derive(Clone, Copy)]
+struct StageInfo {
+    staged: StagedEncode,
+    rand: *const u64,
+    arena: ArenaPtr,
+}
+
+// SAFETY: the raw pointers view the node's own PayloadBuf arenas; the
+// phase contract serializes every cross-thread access to them.
+unsafe impl Send for StageInfo {}
+
+/// Per-node mutable round state. Exclusive in phases B/D/D2, shared
+/// (payload + staging reads) in E1.
+struct NodeStage {
+    rng: Xoshiro256pp,
+    pool: PayloadPool,
+    /// This round's sealed broadcast payload (kept one phase past the
+    /// broadcast so E1 can integrate the own mirror from the *same
+    /// realization* receivers got; released at the next round's stage).
+    payload: Option<Arc<crate::compress::Payload>>,
+    /// The node's inbox slots, moved off the bus in D2 (slot-addressed:
+    /// index = CSR slot = mirror slot).
+    staging: Vec<MailSlot>,
+    /// `‖k^γ(x − x̃)‖∞`, combined from the phase-A tile maxima.
+    tx_magnitude: f64,
+}
+
+/// Drain one phase's work queue: claim unit indices from the shared
+/// counter until the queue is exhausted. Dynamic stealing, so a ragged
+/// final tile or a slow node never idles a worker while peers hold
+/// unstarted units.
+fn claim(counter: &AtomicUsize, units: usize, mut work: impl FnMut(usize)) {
+    loop {
+        let u = counter.fetch_add(1, Ordering::Relaxed);
+        if u >= units {
+            break;
+        }
+        work(u);
+    }
+}
+
+/// Run `rounds` dimension-tiled rounds of the ADC-DGD template over the
+/// fleet's state plane: `ctxs[i]` is node `i`'s [`TiledCtx`] (every
+/// node's compressor must be tileable and its objective separable —
+/// asserted). `workers == 0` selects the available-parallelism default,
+/// capped at `n × tiles`; `tiles` is a request, large `P` permitting
+/// (see [`tile_bounds`]). The observer runs on the coordinating thread
+/// on rounds where `want_observe(round)` is true and may return `false`
+/// to stop early. Final iterates live in `plane`; returns the bus and
+/// the run's [`EngineStats`].
+///
+/// Results are bit-identical to running the same fleet on any other
+/// engine, for every `workers`/`tiles` combination.
+#[allow(clippy::too_many_arguments)]
+pub fn run<F, P>(
+    ctxs: Vec<TiledCtx>,
+    plane: &mut StatePlane,
+    rngs: Vec<Xoshiro256pp>,
+    bus: Bus,
+    rounds: usize,
+    workers: usize,
+    tiles: usize,
+    want_observe: P,
+    mut observer: F,
+) -> (Bus, EngineStats)
+where
+    F: FnMut(RoundTelemetry, &Snapshot, &Bus) -> bool,
+    P: Fn(usize) -> bool,
+{
+    let n = ctxs.len();
+    assert_eq!(rngs.len(), n);
+    assert_eq!(plane.n(), n);
+    assert_eq!(bus.n(), n);
+    assert!(plane.has_mirrors(), "the ADC-DGD template needs mirror arenas");
+    assert!(tiles > 0, "need at least one tile");
+    for c in &ctxs {
+        assert!(c.compressor.tileable(), "dim engine needs a tileable compressor");
+        assert!(c.objective.supports_range_grad(), "dim engine needs a separable objective");
+    }
+    if rounds == 0 {
+        return (bus, EngineStats::default());
+    }
+
+    let p = plane.p();
+    let bounds = tile_bounds(p, tiles);
+    let t = bounds.len() - 1; // granted tile count (≤ requested)
+    let units = n * t;
+    let nw = super::pool::effective_workers(workers, units);
+
+    let layout = bus.layout();
+    let measure = bus.measure_wire();
+    let cols = plane.node_columns();
+    let bus = Mutex::new(bus);
+
+    let stages: Vec<SyncCell<NodeStage>> = rngs
+        .into_iter()
+        .enumerate()
+        .map(|(i, rng)| {
+            SyncCell::new(NodeStage {
+                rng,
+                pool: PayloadPool::new(),
+                payload: None,
+                staging: vec![None; layout.degree(i)],
+                tx_magnitude: 0.0,
+            })
+        })
+        .collect();
+    let infos: Vec<SyncCell<StageInfo>> = (0..n)
+        .map(|_| {
+            SyncCell::new(StageInfo {
+                staged: StagedEncode {
+                    cref: CompressedRef {
+                        kind: PayloadKind::Ternary,
+                        len: 0,
+                        scale: 0.0,
+                        saturated: 0,
+                    },
+                    reduced: 0.0,
+                    tiled: false,
+                },
+                rand: std::ptr::null(),
+                arena: ArenaPtr::None,
+            })
+        })
+        .collect();
+    // Flat per-(node, tile) partials: written by one tile worker each,
+    // combined by the node's phase-B/D worker.
+    let partial_max: Vec<SyncCell<f64>> = (0..units).map(|_| SyncCell::new(0.0)).collect();
+    let sat_counts: Vec<SyncCell<usize>> = (0..units).map(|_| SyncCell::new(0)).collect();
+    let telem_slots: Vec<Mutex<(f64, usize, usize)>> =
+        (0..n).map(|_| Mutex::new((0.0, 0, 0))).collect();
+
+    // One claim counter per phase, ping-ponged on round parity: workers
+    // use `claims[k & 1]` for round k while the coordinator resets the
+    // other bank for round k+1 during the observe window (every worker
+    // is then blocked at the final gate, and last touched that bank in
+    // round k−1).
+    let claims: [[AtomicUsize; NPHASES]; 2] =
+        std::array::from_fn(|_| std::array::from_fn(|_| AtomicUsize::new(0)));
+    // One gate after every phase plus the observe gate.
+    let gates: Vec<Barrier> = (0..NPHASES + 1).map(|_| Barrier::new(nw + 1)).collect();
+    let stop = AtomicBool::new(false);
+    let mut completed = 0usize;
+
+    std::thread::scope(|scope| {
+        for _ in 0..nw {
+            let (ctxs, cols, bounds) = (&ctxs, &cols, &bounds);
+            let (stages, infos) = (&stages, &infos);
+            let (partial_max, sat_counts) = (&partial_max, &sat_counts);
+            let (telem_slots, bus) = (&telem_slots, &bus);
+            let (claims, gates, stop) = (&claims, &gates, &stop);
+            scope.spawn(move || {
+                // Per-worker wire buffer: serialization for measured-byte
+                // metering runs outside the bus lock.
+                let mut wire = WireBuf::new();
+                let mut k = 1usize;
+                loop {
+                    let par = k & 1;
+                    // Phase A: amplified differential + partial ‖·‖∞.
+                    claim(&claims[par][0], units, |u| {
+                        let (i, ti) = (u / t, u % t);
+                        let (lo, hi) = (bounds[ti], bounds[ti + 1]);
+                        let kg = (k as f64).powf(ctxs[i].gamma);
+                        // SAFETY: this worker owns (i, ti) for this
+                        // phase; x and mirror_self are only read, the
+                        // scratch tile only written here (rule 4).
+                        unsafe {
+                            let x = &cols[i].x_row()[lo..hi];
+                            let ms = &cols[i].mirror_self_row()[lo..hi];
+                            let scratch = cols[i].scratch_tile(lo, hi);
+                            vecops::scaled_diff(kg, x, ms, scratch);
+                            *partial_max[u].get_mut() = vecops::norm_inf(scratch);
+                        }
+                    });
+                    gates[0].wait();
+                    // Phase B: serial reductions + arena staging.
+                    claim(&claims[par][1], n, |i| {
+                        // SAFETY: one claimant per node; scratch row is
+                        // read-only this phase; the partials were sealed
+                        // by the phase-A gate.
+                        unsafe {
+                            let st = stages[i].get_mut();
+                            // Release last round's payload handle so the
+                            // pool cell can recycle once receivers clear.
+                            st.payload = None;
+                            let mut tx = 0.0f64;
+                            for j in 0..t {
+                                tx = tx.max(*partial_max[i * t + j].get_ref());
+                            }
+                            st.tx_magnitude = tx;
+                            let z = cols[i].scratch_row();
+                            let staged = ctxs[i]
+                                .compressor
+                                .stage_into(z, &mut st.rng, st.pool.buf_mut())
+                                .expect("compressor advertised tileable()");
+                            let buf = st.pool.buf_mut();
+                            let arena = match staged.cref.kind {
+                                PayloadKind::Ternary => ArenaPtr::U8(buf.u8s.as_mut_ptr()),
+                                PayloadKind::I8 => ArenaPtr::I8(buf.i8s.as_mut_ptr()),
+                                PayloadKind::I16 => ArenaPtr::I16(buf.i16s.as_mut_ptr()),
+                                _ => ArenaPtr::None,
+                            };
+                            *infos[i].get_mut() =
+                                StageInfo { staged, rand: buf.rand.as_ptr(), arena };
+                        }
+                    });
+                    gates[1].wait();
+                    // Phase C: quantize tiles into disjoint arena slices.
+                    claim(&claims[par][2], units, |u| {
+                        let (i, ti) = (u / t, u % t);
+                        let (lo, hi) = (bounds[ti], bounds[ti + 1]);
+                        // SAFETY: info/scratch/rand are read-only this
+                        // phase; the arena slice below is this tile's
+                        // disjoint range (8-aligned bounds ⇒ whole bytes
+                        // even for the 2-bit ternary packing).
+                        let sat = unsafe {
+                            let info = *infos[i].get_ref();
+                            if info.staged.tiled {
+                                let z = &cols[i].scratch_row()[lo..hi];
+                                let rand = std::slice::from_raw_parts(info.rand.add(lo), hi - lo);
+                                let out = match info.arena {
+                                    ArenaPtr::U8(b) => ArenaTileMut::U8(
+                                        std::slice::from_raw_parts_mut(
+                                            b.add(lo / 4),
+                                            hi.div_ceil(4) - lo / 4,
+                                        ),
+                                    ),
+                                    ArenaPtr::I8(b) => ArenaTileMut::I8(
+                                        std::slice::from_raw_parts_mut(b.add(lo), hi - lo),
+                                    ),
+                                    ArenaPtr::I16(b) => ArenaTileMut::I16(
+                                        std::slice::from_raw_parts_mut(b.add(lo), hi - lo),
+                                    ),
+                                    ArenaPtr::None => {
+                                        unreachable!("tiled staged encode without an arena")
+                                    }
+                                };
+                                ctxs[i].compressor.encode_tile(z, rand, &info.staged, out)
+                            } else {
+                                0
+                            }
+                        };
+                        // SAFETY: one claimant per (i, ti).
+                        unsafe {
+                            *sat_counts[u].get_mut() = sat;
+                        }
+                    });
+                    gates[2].wait();
+                    // Phase D: seal + serialize (outside the lock) +
+                    // broadcast + telemetry.
+                    claim(&claims[par][3], n, |i| {
+                        // SAFETY: one claimant per node; the sat partials
+                        // were sealed by the phase-C gate.
+                        unsafe {
+                            let st = stages[i].get_mut();
+                            let info = infos[i].get_ref();
+                            let mut sat = 0usize;
+                            for j in 0..t {
+                                sat += *sat_counts[i * t + j].get_ref();
+                            }
+                            let cref = CompressedRef { saturated: sat, ..info.staged.cref };
+                            let payload = st.pool.install_staged(&cref);
+                            let bytes = payload.wire_bytes();
+                            let measured = if measure {
+                                encode_into(&payload, &mut wire).len()
+                            } else {
+                                0
+                            };
+                            {
+                                let mut b = bus.lock().unwrap();
+                                b.broadcast_premeasured(i, k, &payload, measured);
+                            }
+                            *telem_slots[i].lock().unwrap() = (st.tx_magnitude, sat, bytes);
+                            st.payload = Some(payload);
+                        }
+                    });
+                    gates[3].wait();
+                    // (Coordinator aggregates telemetry and advances the
+                    // bus round here, concurrent with D2's collection —
+                    // both sides hold the bus lock for their touch.)
+                    // Phase D2: move the node's inbox slots off the bus.
+                    claim(&claims[par][4], n, |i| {
+                        // SAFETY: one claimant per node.
+                        unsafe {
+                            let st = stages[i].get_mut();
+                            let mut b = bus.lock().unwrap();
+                            b.take_inbox_range(i, i + 1, k, &mut st.staging);
+                        }
+                    });
+                    gates[4].wait();
+                    // Phase E1: mirror integration — every write this
+                    // phase lands in a tile-disjoint mirror range.
+                    claim(&claims[par][5], units, |u| {
+                        let (i, ti) = (u / t, u % t);
+                        let (lo, hi) = (bounds[ti], bounds[ti + 1]);
+                        let gamma = ctxs[i].gamma;
+                        // SAFETY: stage is shared-read (sealed by the D2
+                        // gate); mirror tiles are this unit's exclusive
+                        // write ranges.
+                        unsafe {
+                            let st = stages[i].get_ref();
+                            let own = st.payload.as_ref().expect("sealed in phase D");
+                            let kg = (k as f64).powf(gamma);
+                            own.decode_axpy_range(
+                                1.0 / kg,
+                                lo,
+                                hi,
+                                cols[i].mirror_self_tile(lo, hi),
+                            );
+                            // Each differential unscales by its *send*
+                            // round's amplification (stale deliveries
+                            // under loss/latency integrate exactly).
+                            for (s, slot) in st.staging.iter().enumerate() {
+                                if let Some((sent, payload)) = slot {
+                                    let kg_sent = (*sent as f64).powf(gamma);
+                                    payload.decode_axpy_range(
+                                        1.0 / kg_sent,
+                                        lo,
+                                        hi,
+                                        cols[i].mirror_tile(s, lo, hi),
+                                    );
+                                }
+                            }
+                        }
+                    });
+                    gates[5].wait();
+                    // Phase E2: column-bounded consensus mix + gradient
+                    // step. Mirror rows are read-only now (all writes
+                    // happened in E1), scratch/grad/x writes are
+                    // tile-disjoint.
+                    claim(&claims[par][6], units, |u| {
+                        let (i, ti) = (u / t, u % t);
+                        let (lo, hi) = (bounds[ti], bounds[ti + 1]);
+                        let ctx = &ctxs[i];
+                        let alpha = ctx.step.at(k);
+                        // SAFETY: shared full-row mirror reads vs.
+                        // exclusive tile writes of different arenas —
+                        // the E1/E2 split exists precisely so these
+                        // never overlap.
+                        unsafe {
+                            let mirrors =
+                                if cols[i].deg() > 0 { cols[i].mirrors_rows() } else { &[][..] };
+                            let scratch = cols[i].scratch_tile(lo, hi);
+                            ctx.weights.mix_row_range_into(
+                                i,
+                                cols[i].mirror_self_row(),
+                                mirrors,
+                                lo,
+                                hi,
+                                scratch,
+                            );
+                            let x = cols[i].x_tile(lo, hi);
+                            let grad = cols[i].grad_tile(lo, hi);
+                            ctx.objective.grad_range_into(x, lo, grad);
+                            vecops::add_scaled(scratch, -alpha, grad, x);
+                        }
+                    });
+                    gates[6].wait();
+                    // (Coordinator snapshots + observes here.)
+                    gates[NPHASES].wait();
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    k += 1;
+                }
+            });
+        }
+
+        // Coordinating thread. The observer snapshot is reused across
+        // rounds (clear + extend keeps the capacity), so observed rounds
+        // allocate nothing once warm.
+        let mut snapshot = Snapshot {
+            states: (0..n).map(|_| Vec::new()).collect(),
+            grad_steps: vec![0; n],
+        };
+        for k in 1..=rounds {
+            let par = k & 1;
+            gates[0].wait();
+            gates[1].wait();
+            gates[2].wait();
+            gates[3].wait();
+            let mut max_tx = 0.0f64;
+            let mut saturations = 0usize;
+            let mut max_payload = 0usize;
+            for slot in telem_slots.iter() {
+                let (tx, sat, bytes) = *slot.lock().unwrap();
+                max_tx = max_tx.max(tx);
+                saturations += sat;
+                max_payload = max_payload.max(bytes);
+            }
+            bus.lock().unwrap().advance_round();
+            gates[4].wait();
+            gates[5].wait();
+            gates[6].wait();
+            completed = k;
+            let keep_going = if want_observe(k) {
+                for (i, row) in snapshot.states.iter_mut().enumerate() {
+                    row.clear();
+                    // SAFETY: every worker is blocked at the final gate;
+                    // no plane view is live.
+                    row.extend_from_slice(unsafe { cols[i].x_row() });
+                    // One gradient step per round in the ADC-DGD
+                    // template (the NodeLogic counters are not driven by
+                    // this engine).
+                    snapshot.grad_steps[i] = k;
+                }
+                let telem = RoundTelemetry {
+                    round: k,
+                    max_transmitted: max_tx,
+                    saturations,
+                    max_payload_bytes: max_payload,
+                };
+                let b = bus.lock().unwrap();
+                observer(telem, &snapshot, &b)
+            } else {
+                true
+            };
+            if !keep_going || k == rounds {
+                stop.store(true, Ordering::SeqCst);
+            }
+            // Reset the other counter bank for round k+1 while every
+            // worker is parked at the final gate.
+            for c in &claims[1 - par] {
+                c.store(0, Ordering::Relaxed);
+            }
+            gates[NPHASES].wait();
+            if !keep_going {
+                break;
+            }
+        }
+    });
+
+    let fresh: usize = stages.into_iter().map(|c| c.into_inner().pool.fresh_cells()).sum();
+    (bus.into_inner().unwrap(), EngineStats { completed, fresh_payload_cells: fresh })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{AdcDgdOptions, AlgorithmKind, CompressorRef, ObjectiveRef, StepSize};
+    use crate::compress::{Qsgd, TernGrad};
+    use crate::consensus::Weights;
+    use crate::network::LinkModel;
+    use crate::objective::DiagonalQuadratic;
+    use crate::topology;
+
+    const P: usize = 37; // non-dividing tail: 37 % 8 ≠ 0
+
+    fn ring_objectives(n: usize) -> Vec<ObjectiveRef> {
+        (0..n)
+            .map(|i| {
+                let d: Vec<f64> = (0..P).map(|e| 0.5 + ((i * 31 + e * 7) % 11) as f64 * 0.1).collect();
+                let b: Vec<f64> = (0..P).map(|e| ((i * 13 + e) % 7) as f64 - 3.0).collect();
+                Arc::new(DiagonalQuadratic::new(d, b)) as ObjectiveRef
+            })
+            .collect()
+    }
+
+    fn run_engine(
+        comp: &CompressorRef,
+        tiles: Option<(usize, usize)>, // (workers, tiles); None = sequential
+        rounds: usize,
+    ) -> (Vec<Vec<f64>>, usize, usize, usize) {
+        let n = 4;
+        let g = topology::ring(n);
+        let w = Weights::metropolis(&g);
+        let mut fleet = AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }).build_fleet(
+            &g,
+            &w,
+            &ring_objectives(n),
+            Some(comp),
+            StepSize::Constant(0.05),
+            None,
+        );
+        let mut rngs: Vec<Xoshiro256pp> =
+            (0..n).map(|i| Xoshiro256pp::seed_from_u64(1000 + i as u64)).collect();
+        let model = LinkModel { drop_prob: 0.15, ..LinkModel::default() };
+        let bus = Bus::new(&g, model, 9);
+        match tiles {
+            None => {
+                let mut bus = bus;
+                let stats = super::super::sequential::run(
+                    &mut fleet.nodes,
+                    &mut fleet.plane,
+                    &mut rngs,
+                    &mut bus,
+                    rounds,
+                    |_t, _n, _p, _b| true,
+                );
+                (fleet.plane.states(), bus.total_bytes(), bus.total_measured_bytes(), stats.completed)
+            }
+            Some((workers, tiles)) => {
+                let ctxs: Vec<_> =
+                    fleet.nodes.iter().map(|nl| nl.tiled_ctx().expect("ADC-DGD is tileable")).collect();
+                let (bus, stats) = run(
+                    ctxs,
+                    &mut fleet.plane,
+                    rngs,
+                    bus,
+                    rounds,
+                    workers,
+                    tiles,
+                    |_| true,
+                    |_t, _s, _b| true,
+                );
+                (fleet.plane.states(), bus.total_bytes(), bus.total_measured_bytes(), stats.completed)
+            }
+        }
+    }
+
+    /// The hard constraint of the dimension plane: bit-identical to the
+    /// sequential engine at every tile/worker combination, including a
+    /// ragged final tile (P = 37), under message loss, for both the
+    /// ternary and the QSGD (i8 and i16) wire paths.
+    #[test]
+    fn dim_engine_matches_sequential_bitwise() {
+        let comps: Vec<CompressorRef> = vec![
+            Arc::new(TernGrad::new()),
+            Arc::new(Qsgd::new(4)),    // i8 lane
+            Arc::new(Qsgd::new(1000)), // i16 lane
+        ];
+        for comp in &comps {
+            let (seq, seq_bytes, seq_measured, _) = run_engine(comp, None, 40);
+            for &(workers, tiles) in &[(1usize, 1usize), (2, 3), (3, 4), (2, 64)] {
+                let (dim, bytes, measured, completed) =
+                    run_engine(comp, Some((workers, tiles)), 40);
+                assert_eq!(completed, 40);
+                assert_eq!(bytes, seq_bytes, "modeled bytes diverged (w={workers} t={tiles})");
+                assert_eq!(measured, seq_measured, "measured bytes diverged");
+                for (i, (a, b)) in seq.iter().zip(dim.iter()).enumerate() {
+                    for (e, (va, vb)) in a.iter().zip(b.iter()).enumerate() {
+                        assert_eq!(
+                            va.to_bits(),
+                            vb.to_bits(),
+                            "node {i} coord {e} diverged (w={workers} t={tiles})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The observer's `false` stops the run at the observed round.
+    #[test]
+    fn dim_engine_early_stop_and_fresh_cells() {
+        let comp: CompressorRef = Arc::new(TernGrad::new());
+        let n = 4;
+        let g = topology::ring(n);
+        let w = Weights::metropolis(&g);
+        let mut fleet = AlgorithmKind::AdcDgd(AdcDgdOptions::default()).build_fleet(
+            &g,
+            &w,
+            &ring_objectives(n),
+            Some(&comp),
+            StepSize::Constant(0.05),
+            None,
+        );
+        let rngs: Vec<Xoshiro256pp> =
+            (0..n).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
+        let ctxs: Vec<_> = fleet.nodes.iter().map(|nl| nl.tiled_ctx().unwrap()).collect();
+        let bus = Bus::new(&g, LinkModel::default(), 0);
+        let (_bus, stats) = run(
+            ctxs,
+            &mut fleet.plane,
+            rngs,
+            bus,
+            100,
+            2,
+            2,
+            |_| true,
+            |t, s, _b| {
+                assert_eq!(s.states.len(), n);
+                assert_eq!(s.grad_steps[0], t.round);
+                t.round < 7
+            },
+        );
+        assert_eq!(stats.completed, 7);
+        // Per-node pools warm up to the pipeline depth and stop.
+        assert!(
+            stats.fresh_payload_cells >= n && stats.fresh_payload_cells <= 4 * n,
+            "fresh cells: {}",
+            stats.fresh_payload_cells
+        );
+    }
+}

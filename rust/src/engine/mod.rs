@@ -1,6 +1,6 @@
 //! Execution engines.
 //!
-//! Three interchangeable engines run the same per-node [`NodeLogic`]
+//! Four interchangeable engines run the same per-node [`NodeLogic`]
 //! over one shared [`StatePlane`] arena:
 //!
 //! * [`sequential::run`] — single-threaded, deterministic; borrows the
@@ -13,20 +13,44 @@
 //!   nodes chunked contiguously, each worker owning the matching
 //!   contiguous plane shard, barrier-per-round. Scales to thousands of
 //!   nodes where one-thread-per-node collapses.
+//! * [`dim::run`] — the dimension-tiled engine: splits the column axis
+//!   into 8-aligned tiles and schedules `(node, tile)` work units over a
+//!   worker pool, saturating cores in the paper's high-dimensional
+//!   regime (large `P`, modest `n`) where node-sharding caps at `n`
+//!   workers. ADC-DGD-template fleets only; whole-vector reductions run
+//!   as two-phase tile-reduce passes.
 //!
-//! All three are bit-identical given the same seeds (per-node RNG
+//! All four are bit-identical given the same seeds (per-node RNG
 //! streams + stateless-hash loss injection + slot-addressed mailbox
-//! inboxes in ascending-sender order + fixed per-row mixing order),
-//! which is asserted by the integration tests in
-//! `rust/tests/engine_equivalence.rs`, including against golden
-//! pre-refactor snapshots and under multi-round delivery delay.
+//! inboxes in ascending-sender order + fixed per-row mixing order —
+//! plus, for the tiled engine, serial whole-vector reductions and
+//! per-element-independent tile kernels), which is asserted by the
+//! integration tests in `rust/tests/engine_equivalence.rs`, including
+//! against golden pre-refactor snapshots and under multi-round delivery
+//! delay.
 //!
 //! [`NodeLogic`]: crate::algorithms::NodeLogic
 //! [`StatePlane`]: crate::state::StatePlane
 
+pub mod dim;
 pub mod pool;
 pub mod sequential;
 pub mod threaded;
+
+/// Run-level counters every engine returns, threaded into
+/// [`crate::coordinator::RunOutput`] by the driver. One struct instead
+/// of the historical grow-by-one tuples, so adding a counter is a
+/// field, not a signature change at every call site.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    /// Rounds actually executed (equals the requested count unless an
+    /// observer stopped the run early).
+    pub completed: usize,
+    /// Payload cells created by `Arc::new` across the engine's pools —
+    /// stops growing once warm-up covers the pipeline depth, so it is
+    /// the run-level encode-pool recycling health signal.
+    pub fresh_payload_cells: usize,
+}
 
 /// Telemetry handed to the per-round observer callback.
 #[derive(Debug, Clone, Copy)]

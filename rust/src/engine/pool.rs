@@ -25,7 +25,7 @@
 //!
 //! [`PlaneShard`]: crate::state::PlaneShard
 
-use super::{RoundTelemetry, Snapshot};
+use super::{EngineStats, RoundTelemetry, Snapshot};
 use crate::algorithms::NodeLogic;
 use crate::compress::{Payload, PayloadPool};
 use crate::network::{Bus, InboxView, MailSlot};
@@ -47,10 +47,10 @@ pub fn effective_workers(workers: usize, n: usize) -> usize {
 /// `workers == 0` selects the available-parallelism default. The
 /// observer runs on the coordinating thread, but only on rounds where
 /// `want_observe(round)` is true; it may return `false` to stop early.
-/// Final iterates live in `plane`; returns (nodes, bus, completed,
-/// fresh_payload_cells) with nodes in their original order — the last
-/// component sums [`PayloadPool::fresh_cells`] over the per-shard pools
-/// (the run-level pool-recycling health signal).
+/// Final iterates live in `plane`; returns `(nodes, bus, stats)` with
+/// nodes in their original order — the stats' `fresh_payload_cells`
+/// sums [`PayloadPool::fresh_cells`] over the per-shard pools (the
+/// run-level pool-recycling health signal).
 #[allow(clippy::type_complexity, clippy::too_many_arguments)]
 pub fn run<F, P>(
     mut nodes: Vec<Box<dyn NodeLogic>>,
@@ -61,7 +61,7 @@ pub fn run<F, P>(
     workers: usize,
     want_observe: P,
     mut observer: F,
-) -> (Vec<Box<dyn NodeLogic>>, Bus, usize, usize)
+) -> (Vec<Box<dyn NodeLogic>>, Bus, EngineStats)
 where
     F: FnMut(RoundTelemetry, &Snapshot, &Bus) -> bool,
     P: Fn(usize) -> bool + Sync,
@@ -71,7 +71,7 @@ where
     assert_eq!(plane.n(), n);
     assert_eq!(bus.n(), n);
     if n == 0 {
-        return (nodes, bus, 0, 0);
+        return (nodes, bus, EngineStats::default());
     }
 
     // Contiguous shards: worker w owns nodes [w*chunk, (w+1)*chunk).
@@ -257,7 +257,8 @@ where
     }
 
     let completed = completed.load(Ordering::SeqCst);
-    (nodes, bus.into_inner().unwrap(), completed, fresh_cells)
+    let stats = EngineStats { completed, fresh_payload_cells: fresh_cells };
+    (nodes, bus.into_inner().unwrap(), stats)
 }
 
 #[cfg(test)]
@@ -300,7 +301,7 @@ mod tests {
         let rounds = 200;
         // Sequential reference.
         let (mut sfleet, mut srngs, mut sbus) = ring_fleet(n);
-        let (done, _fresh) = crate::engine::sequential::run(
+        let sstats = crate::engine::sequential::run(
             &mut sfleet.nodes,
             &mut sfleet.plane,
             &mut srngs,
@@ -308,10 +309,10 @@ mod tests {
             rounds,
             |_t, _n, _p, _b| true,
         );
-        assert_eq!(done, rounds);
+        assert_eq!(sstats.completed, rounds);
         // Pool with a worker count that does not divide n evenly.
         let (mut pfleet, prngs, pbus) = ring_fleet(n);
-        let (_pnodes, pbus, completed, fresh) = run(
+        let (_pnodes, pbus, stats) = run(
             pfleet.nodes,
             &mut pfleet.plane,
             prngs,
@@ -321,7 +322,8 @@ mod tests {
             |_| false,
             |_t, _s, _b| true,
         );
-        assert_eq!(completed, rounds);
+        assert_eq!(stats.completed, rounds);
+        let fresh = stats.fresh_payload_cells;
         assert!(fresh >= 3, "each shard pool creates at least one cell: {fresh}");
         assert_eq!(pbus.total_bytes(), sbus.total_bytes());
         assert_eq!(sfleet.plane.states(), pfleet.plane.states());
@@ -330,7 +332,7 @@ mod tests {
     #[test]
     fn pool_early_stop_via_observer() {
         let (mut fleet, rngs, bus) = ring_fleet(6);
-        let (_nodes, _bus, completed, _fresh) = run(
+        let (_nodes, _bus, stats) = run(
             fleet.nodes,
             &mut fleet.plane,
             rngs,
@@ -340,14 +342,14 @@ mod tests {
             |_| true,
             |t, _s, _b| t.round < 7,
         );
-        assert_eq!(completed, 7);
+        assert_eq!(stats.completed, 7);
     }
 
     #[test]
     fn pool_observer_skipping_rounds_still_completes() {
         let (mut fleet, rngs, bus) = ring_fleet(5);
         let mut observed = Vec::new();
-        let (_nodes, _bus, completed, _fresh) = run(
+        let (_nodes, _bus, stats) = run(
             fleet.nodes,
             &mut fleet.plane,
             rngs,
@@ -361,7 +363,7 @@ mod tests {
                 true
             },
         );
-        assert_eq!(completed, 50);
+        assert_eq!(stats.completed, 50);
         assert_eq!(observed, vec![10, 20, 30, 40, 50]);
     }
 }

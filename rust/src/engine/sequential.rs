@@ -1,6 +1,6 @@
 //! Deterministic single-threaded engine.
 
-use super::RoundTelemetry;
+use super::{EngineStats, RoundTelemetry};
 use crate::algorithms::NodeLogic;
 use crate::compress::PayloadPool;
 use crate::network::Bus;
@@ -19,11 +19,11 @@ use crate::state::StatePlane;
 /// consumes its slot-addressed inbox view. The observer may return
 /// `false` to stop early (convergence criterion).
 ///
-/// Returns `(completed_rounds, fresh_payload_cells)` — the second
-/// component is the engine pool's [`PayloadPool::fresh_cells`] count
-/// (cells created by `Arc::new`; stops growing once warm-up covers the
-/// pipeline depth, so it is the run-level pool-recycling health signal
-/// surfaced as `RunOutput::fresh_payload_cells`).
+/// Returns the run's [`EngineStats`]: completed rounds plus the engine
+/// pool's [`PayloadPool::fresh_cells`] count (cells created by
+/// `Arc::new`; stops growing once warm-up covers the pipeline depth, so
+/// it is the run-level pool-recycling health signal surfaced as
+/// `RunOutput::fresh_payload_cells`).
 pub fn run<F>(
     nodes: &mut [Box<dyn NodeLogic>],
     plane: &mut StatePlane,
@@ -31,7 +31,7 @@ pub fn run<F>(
     bus: &mut Bus,
     rounds: usize,
     mut observer: F,
-) -> (usize, usize)
+) -> EngineStats
 where
     F: FnMut(RoundTelemetry, &[Box<dyn NodeLogic>], &StatePlane, &Bus) -> bool,
 {
@@ -81,7 +81,7 @@ where
             break;
         }
     }
-    (completed, pool.fresh_cells())
+    EngineStats { completed, fresh_payload_cells: pool.fresh_cells() }
 }
 
 #[cfg(test)]
@@ -115,7 +115,7 @@ mod tests {
     #[test]
     fn engine_runs_dgd_to_consensus() {
         let (mut fleet, mut rngs, mut bus) = pair_fleet();
-        let (completed, fresh_cells) = run(
+        let stats = run(
             &mut fleet.nodes,
             &mut fleet.plane,
             &mut rngs,
@@ -123,9 +123,10 @@ mod tests {
             1000,
             |_t, _n, _p, _b| true,
         );
-        assert_eq!(completed, 1000);
+        assert_eq!(stats.completed, 1000);
         // Warm-up creates a handful of pooled cells; steady state reuses
         // them, so the count stays at the pipeline depth (not O(rounds)).
+        let fresh_cells = stats.fresh_payload_cells;
         assert!(fresh_cells > 0 && fresh_cells <= 8, "fresh cells: {fresh_cells}");
         // Centers ±2 with equal curvature ⇒ optimum 0; the constant-step
         // DGD fixed point is symmetric: x₁ = −x₂ = 0.32/1.16 ≈ 0.2759.
@@ -139,7 +140,7 @@ mod tests {
     #[test]
     fn observer_can_stop_early() {
         let (mut fleet, mut rngs, mut bus) = pair_fleet();
-        let (completed, _fresh) = run(
+        let stats = run(
             &mut fleet.nodes,
             &mut fleet.plane,
             &mut rngs,
@@ -147,6 +148,6 @@ mod tests {
             1000,
             |t, _n, _p, _b| t.round < 10,
         );
-        assert_eq!(completed, 10);
+        assert_eq!(stats.completed, 10);
     }
 }

@@ -12,7 +12,7 @@
 //!
 //! [`PlaneShard`]: crate::state::PlaneShard
 
-use super::{RoundTelemetry, Snapshot};
+use super::{EngineStats, RoundTelemetry, Snapshot};
 use crate::algorithms::NodeLogic;
 use crate::compress::PayloadPool;
 use crate::network::{Bus, InboxView, MailSlot};
@@ -24,9 +24,9 @@ use std::sync::{Arc, Barrier, Mutex};
 /// Run `rounds` barrier-synchronized rounds with one thread per node.
 /// The observer runs on the coordinating thread between rounds and may
 /// return `false` to stop. Final iterates live in `plane`; returns
-/// (nodes, bus, completed_rounds, fresh_payload_cells) — the last
-/// component sums [`PayloadPool::fresh_cells`] over every per-node
-/// thread pool (the run-level pool-recycling health signal).
+/// (nodes, bus, [`EngineStats`]) — the stats' `fresh_payload_cells`
+/// sums [`PayloadPool::fresh_cells`] over every per-node thread pool
+/// (the run-level pool-recycling health signal).
 #[allow(clippy::type_complexity)]
 pub fn run<F>(
     mut nodes: Vec<Box<dyn NodeLogic>>,
@@ -35,7 +35,7 @@ pub fn run<F>(
     bus: Bus,
     rounds: usize,
     mut observer: F,
-) -> (Vec<Box<dyn NodeLogic>>, Bus, usize, usize)
+) -> (Vec<Box<dyn NodeLogic>>, Bus, EngineStats)
 where
     F: FnMut(RoundTelemetry, &Snapshot, &Bus) -> bool,
 {
@@ -44,7 +44,7 @@ where
     assert_eq!(plane.n(), n);
     assert_eq!(bus.n(), n);
     if n == 0 {
-        return (nodes, bus, 0, 0);
+        return (nodes, bus, EngineStats::default());
     }
 
     // One single-node shard per thread.
@@ -194,7 +194,8 @@ where
     });
 
     let completed = completed.load(Ordering::SeqCst);
-    (nodes, bus.into_inner().unwrap(), completed, fresh_cells)
+    let stats = EngineStats { completed, fresh_payload_cells: fresh_cells };
+    (nodes, bus.into_inner().unwrap(), stats)
 }
 
 #[cfg(test)]
@@ -222,12 +223,13 @@ mod tests {
         let rngs: Vec<Xoshiro256pp> =
             (0..2).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
         let bus = Bus::new(&g, LinkModel::default(), 0);
-        let (_nodes, bus, completed, fresh) =
+        let (_nodes, bus, stats) =
             run(fleet.nodes, &mut fleet.plane, rngs, bus, n_iters, |t, _s, _b| {
                 stop_at.map(|s| t.round < s).unwrap_or(true)
             });
+        let fresh = stats.fresh_payload_cells;
         assert!(fresh >= 2, "per-thread pools must report their cells: {fresh}");
-        (fleet.plane.states(), completed, bus.total_bytes())
+        (fleet.plane.states(), stats.completed, bus.total_bytes())
     }
 
     #[test]

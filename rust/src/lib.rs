@@ -42,6 +42,7 @@
 //! | [`EngineKind::Sequential`] | 1 | reference semantics, tests |
 //! | [`EngineKind::Threaded`] | one per node | real contention, small n |
 //! | [`EngineKind::Pool`] | `min(num_cpus, n)` sharded workers | large n |
+//! | [`EngineKind::Dim`] | `min(num_cpus, n × tiles)` over `(node, tile)` units | large P, small n |
 //!
 //! All engines are bit-identical given the same seeds (per-node RNG
 //! streams, stateless-hash loss injection, sender-sorted reduction).
@@ -160,9 +161,44 @@
 //! serializer actually put on the wire (`solve` prints both; `run --exp
 //! stochastic` records both axes per trajectory).
 //!
+//! ## The dimension plane
+//!
+//! The pool engine parallelizes over *nodes*, so a 16-node fleet can
+//! never occupy more than 16 cores — even when each round moves
+//! megabytes per node. The dimension plane ([`engine::dim`],
+//! [`EngineKind::Dim`]) adds the second axis: the coordinate range
+//! `0..P` is split into contiguous 8-aligned column tiles
+//! ([`state::tile_bounds`]) and the per-round hot path — consensus mix
+//! ([`consensus::CsrWeights::mix_row_range_into`]), gradient + step
+//! ([`objective::Objective::grad_range_into`]), payload consume
+//! ([`compress::Payload::decode_axpy_range`]), and quantization
+//! ([`compress::Compressor::encode_tile`]) — executes as `(node, tile)`
+//! work units claimed dynamically from a shared queue by
+//! `min(cores, n × tiles)` workers. Whole-vector reductions that are
+//! not associativity-safe (TernGrad's `max|z|` is; QSGD's `‖z‖₂` is
+//! not) stay serial per node inside
+//! [`compress::Compressor::stage_into`], which also draws the
+//! message's single block-RNG batch — so every tile count reproduces
+//! the sequential engine **bit-for-bit** (pinned against the golden
+//! trajectories in `tests/engine_equivalence.rs` and kernel-by-kernel
+//! in `tests/properties.rs`). Fleets that are not tileable (no
+//! [`algorithms::TiledCtx`], a compressor without staged kernels, or a
+//! non-separable objective) silently fall back to the pool engine.
+//! Steady-state rounds allocate nothing — asserted by the
+//! `ADCDGD_BENCH_ONLY=dim` hotpath section, which sweeps
+//! n = 16 × P ∈ {65 536, 1 048 576} × tiles ∈ {1, 4, 8, 16} and writes
+//! `BENCH_dim_plane.json`.
+//!
+//! Related: [`coordinator::RunConfig::measure_wire`] (default on)
+//! controls whether every broadcast additionally runs the wire plane's
+//! real serializer for measured byte counts; modeled-only studies and
+//! the scale bench turn it off (`--no-measure-wire`) to keep the round
+//! loop free of the per-message rANS pass.
+//!
 //! [`EngineKind::Sequential`]: coordinator::EngineKind::Sequential
 //! [`EngineKind::Threaded`]: coordinator::EngineKind::Threaded
 //! [`EngineKind::Pool`]: coordinator::EngineKind::Pool
+//! [`EngineKind::Dim`]: coordinator::EngineKind::Dim
 //!
 //! ## Example
 //!

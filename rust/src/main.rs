@@ -11,7 +11,9 @@
 //! * `solve` — run one algorithm on a chosen topology/objective family
 //!   (`--algo adc|dgd|dgdt|naive|qdgd|choco|cedas`, `--topology
 //!   ring|star|complete|grid|er|ba|paper4`, `--n`, `--gamma`, `--alpha`,
-//!   `--eta`, `--iters`, `--engine seq|threaded|pool`, `--workers`,
+//!   `--eta`, `--iters`, `--engine seq|threaded|pool|dim`, `--workers`,
+//!   `--tiles` (column tiles for `--engine dim`), `--no-measure-wire`
+//!   (skip the per-broadcast byte serializer; measured counters read 0),
 //!   `--compressor randround|identity|lowprec|sparsifier|terngrad|qsgd`,
 //!   `--drop-prob`, the link/delay axis: `--delay <rounds>` for a
 //!   uniform delivery delay, or `--latency <sec>` + `--bandwidth <B/s>`
@@ -279,10 +281,17 @@ fn cmd_solve(args: &Args) -> i32 {
         engine: match args.get_str("engine", "seq").as_str() {
             "threaded" => EngineKind::Threaded,
             "pool" => EngineKind::Pool { workers: args.get::<usize>("workers", 0).unwrap() },
+            "dim" => EngineKind::Dim {
+                workers: args.get::<usize>("workers", 0).unwrap(),
+                tiles: args.get::<usize>("tiles", 0).unwrap(),
+            },
             _ => EngineKind::Sequential,
         },
         link,
         grad_tol: None,
+        // `--no-measure-wire` skips the per-broadcast serializer so
+        // modeled-only solves pay no wire-metering cost.
+        measure_wire: !args.has_flag("no-measure-wire"),
     };
     // For the stochastic family `--gamma` is the consensus step γ, so a
     // different safe default applies (1.0 is ADC's amplification sweet

@@ -41,6 +41,11 @@ pub struct Bus {
     /// to meter *measured* bytes (warm after the first message, so the
     /// hot path stays allocation-free).
     wire: WireBuf,
+    /// Whether [`Bus::broadcast`] runs the real wire encoder per message.
+    /// On by default; modeled-only runs switch it off
+    /// ([`Bus::set_measure_wire`]) to skip the rANS/serialization work —
+    /// the `measured_bytes` counters then simply stay 0.
+    measure_wire: bool,
     total_bytes: usize,
     total_measured_bytes: usize,
     total_messages: usize,
@@ -65,6 +70,7 @@ impl Bus {
             model,
             stats,
             wire: WireBuf::new(),
+            measure_wire: true,
             total_bytes: 0,
             total_measured_bytes: 0,
             total_messages: 0,
@@ -79,6 +85,21 @@ impl Bus {
     /// per-worker staging buffers without holding the bus).
     pub fn layout(&self) -> Arc<MailboxLayout> {
         Arc::clone(&self.layout)
+    }
+
+    /// Enable or disable per-broadcast wire measurement (on by default).
+    /// With it off, broadcasts skip the serializer entirely and every
+    /// `measured_bytes` counter stays 0 — the modeled accounting
+    /// ([`Bus::total_bytes`], the simulated clock) is unaffected.
+    pub fn set_measure_wire(&mut self, on: bool) {
+        self.measure_wire = on;
+    }
+
+    /// Whether broadcasts meter measured (serialized) bytes. Engines
+    /// that serialize outside the bus lock ([`Bus::broadcast_premeasured`])
+    /// read this to decide whether to run the encoder at all.
+    pub fn measure_wire(&self) -> bool {
+        self.measure_wire
     }
 
     /// Deterministic drop decision for `(src, dst, round)`.
@@ -99,12 +120,31 @@ impl Bus {
     /// `round + delay`. Returns the number of copies that survived loss
     /// injection (delayed copies count as delivered when sent).
     pub fn broadcast(&mut self, src: usize, round: usize, payload: &Arc<Payload>) -> usize {
-        let bytes = payload.wire_bytes();
         // Serialize once per broadcast (every link carries the same
         // stream). Modeled bytes keep driving the simulated clock and
         // delay conversion — the paper's convention — measured bytes are
-        // metered alongside.
-        let measured = encode_into(payload, &mut self.wire).len();
+        // metered alongside (unless measurement is switched off).
+        let measured = if self.measure_wire {
+            encode_into(payload, &mut self.wire).len()
+        } else {
+            0
+        };
+        self.broadcast_premeasured(src, round, payload, measured)
+    }
+
+    /// [`Bus::broadcast`] with the serialized size already measured by
+    /// the caller — the dimension-tiled engine's workers run the wire
+    /// encoder against per-worker buffers *outside* the bus lock and
+    /// hand the result in, so serialization never contends on the bus.
+    /// Pass 0 when measurement is off ([`Bus::measure_wire`]).
+    pub fn broadcast_premeasured(
+        &mut self,
+        src: usize,
+        round: usize,
+        payload: &Arc<Payload>,
+        measured: usize,
+    ) -> usize {
+        let bytes = payload.wire_bytes();
         self.round_max_payload = self.round_max_payload.max(bytes);
         let t = self.model.transmit_time(bytes);
         let delay = self.model.delay_rounds_for_time(t);
@@ -288,6 +328,22 @@ mod tests {
         let mut lossy = Bus::new(&topology::pair(), model, 7);
         assert_eq!(lossy.broadcast(0, 1, &p), 0);
         assert_eq!(lossy.total_measured_bytes(), 0);
+    }
+
+    #[test]
+    fn measure_wire_off_skips_the_serializer_but_not_delivery() {
+        let g = topology::star(4);
+        let mut bus = Bus::new(&g, LinkModel::default(), 0);
+        assert!(bus.measure_wire());
+        bus.set_measure_wire(false);
+        let p = Arc::new(Payload::F64(vec![1.0, 2.0]));
+        assert_eq!(bus.broadcast(0, 1, &p), 3, "delivery is unaffected");
+        assert_eq!(bus.total_bytes(), 48, "modeled accounting is unaffected");
+        assert_eq!(bus.total_measured_bytes(), 0, "no serialization happened");
+        assert_eq!(bus.link_stats(0, 1).unwrap().measured_bytes, 0);
+        // Premeasured broadcasts meter exactly what the caller hands in.
+        bus.broadcast_premeasured(1, 1, &p, 21);
+        assert_eq!(bus.total_measured_bytes(), 21);
     }
 
     #[test]

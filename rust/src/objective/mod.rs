@@ -38,6 +38,28 @@ pub trait Objective: Send + Sync {
         g
     }
 
+    /// Whether [`Self::grad_range_into`] is implemented — i.e. the
+    /// gradient is *coordinate-separable*, so a column range of it can
+    /// be computed from the matching column range of `x` alone. The
+    /// dimension-tiled engine requires this to split the gradient step
+    /// into `(node, tile)` units; objectives with cross-coordinate
+    /// coupling (dense quadratics, logistic losses) keep the `false`
+    /// default and run untiled.
+    fn supports_range_grad(&self) -> bool {
+        false
+    }
+
+    /// Coordinates `lo..lo + out.len()` of `∇f_i`, computed from the
+    /// matching iterate columns `x_tile = x[lo..lo + out.len()]` and
+    /// written into `out`. Per-coordinate math must be exactly
+    /// [`Self::grad_into`]'s, so any column tiling of the gradient step
+    /// is bit-identical to the whole-vector pass. Only called when
+    /// [`Self::supports_range_grad`] returns `true`.
+    fn grad_range_into(&self, x_tile: &[f64], lo: usize, out: &mut [f64]) {
+        let _ = (x_tile, lo, out);
+        unimplemented!("grad_range_into called on a non-separable objective")
+    }
+
     /// Best known Lipschitz constant of the gradient, if available
     /// (Assumption 1). Used to pick the Theorem-2 step-size bound
     /// `α < (1+λ_N(W))/L`.

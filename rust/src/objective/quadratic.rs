@@ -42,6 +42,17 @@ impl Objective for ScalarQuadratic {
         out[0] = 2.0 * self.a * (x[0] - self.b);
     }
 
+    fn supports_range_grad(&self) -> bool {
+        true
+    }
+
+    fn grad_range_into(&self, x_tile: &[f64], lo: usize, out: &mut [f64]) {
+        // P = 1: the only non-empty range is the whole gradient.
+        debug_assert_eq!(lo, 0);
+        debug_assert_eq!(x_tile.len(), 1);
+        out[0] = 2.0 * self.a * (x_tile[0] - self.b);
+    }
+
     fn lipschitz(&self) -> Option<f64> {
         Some(2.0 * self.a.abs())
     }
@@ -144,6 +155,22 @@ impl Objective for DiagonalQuadratic {
         }
     }
 
+    fn supports_range_grad(&self) -> bool {
+        true
+    }
+
+    fn grad_range_into(&self, x_tile: &[f64], lo: usize, out: &mut [f64]) {
+        // Diagonal curvature is coordinate-separable: coordinate e of
+        // the gradient is d_e (x_e − b_e), exactly the grad_into
+        // expression, so column tiling is bit-exact.
+        debug_assert!(lo + out.len() <= self.d.len());
+        debug_assert_eq!(x_tile.len(), out.len());
+        for (j, (o, &xv)) in out.iter_mut().zip(x_tile).enumerate() {
+            let e = lo + j;
+            *o = self.d[e] * (xv - self.b[e]);
+        }
+    }
+
     fn lipschitz(&self) -> Option<f64> {
         Some(self.lipschitz)
     }
@@ -200,6 +227,31 @@ mod tests {
         assert_eq!(sparse.grad(&x), dense.grad(&x));
         assert!((sparse.lipschitz().unwrap() - 4.0).abs() < 1e-12);
         check_gradient(&sparse, &x, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn range_grad_matches_whole_vector_bitwise() {
+        let p = 19;
+        let d: Vec<f64> = (0..p).map(|i| 0.5 + 0.07 * i as f64).collect();
+        let b: Vec<f64> = (0..p).map(|i| (i as f64 * 0.3).sin()).collect();
+        let q = DiagonalQuadratic::new(d, b);
+        assert!(q.supports_range_grad());
+        let x: Vec<f64> = (0..p).map(|i| (i as f64 * 0.7).cos()).collect();
+        let full = q.grad(&x);
+        for bounds in [vec![0usize, p], vec![0, 8, 16, p], vec![0, 8, p]] {
+            let mut tiled = vec![0.0; p];
+            for w in bounds.windows(2) {
+                q.grad_range_into(&x[w[0]..w[1]], w[0], &mut tiled[w[0]..w[1]]);
+            }
+            for (a, f) in tiled.iter().zip(&full) {
+                assert_eq!(a.to_bits(), f.to_bits(), "tiled gradient diverged");
+            }
+        }
+        let s = ScalarQuadratic::new(3.0, 0.25);
+        assert!(s.supports_range_grad());
+        let mut out = [0.0];
+        s.grad_range_into(&[1.5], 0, &mut out);
+        assert_eq!(out[0], s.grad(&[1.5])[0]);
     }
 
     #[test]

@@ -35,11 +35,40 @@
 //! 3. Observers read iterates through shared accessors
 //!    ([`StatePlane::x_row`], [`PlaneShard::x_row`]) strictly between
 //!    phases, never while a view is live.
+//! 4. The dimension-tiled engine schedules `(node, tile)` work units, so
+//!    two workers may touch *the same node's* rows concurrently — in
+//!    disjoint column ranges. Plain `&mut` splits cannot express that
+//!    (rows interleave across arenas), so [`StatePlane::node_columns`]
+//!    hands out raw-pointer [`NodeColumns`] handles whose unsafe
+//!    accessors materialize short-lived column sub-views; the engine's
+//!    phase barriers guarantee every live view is disjoint.
 //!
 //! The consensus mixing step over this layout is a row-parallel sparse
 //! (CSR) × dense product — see [`crate::consensus::CsrWeights`].
 
 use crate::linalg::vecops;
+
+/// 8-aligned contiguous column-tile boundaries for dimension `p` split
+/// into at most `tiles` tiles: `[0, step, 2·step, …, p]` with
+/// `step = ⌈⌈p/tiles⌉/8⌉·8`. Every interior boundary is a multiple of 8
+/// so (a) tiles line up with the 8-wide chunked kernels
+/// ([`crate::consensus::CsrWeights::mix_row_into`], the QSGD rounding
+/// blocks) and (b) a ternary tile's 2-bit codes occupy whole bytes of
+/// the 4-codes-per-byte packing, letting tile workers write disjoint
+/// byte ranges of one shared arena. Small `p` simply yields fewer tiles
+/// than requested (degenerating to `[0, p]`), never an empty tile.
+pub fn tile_bounds(p: usize, tiles: usize) -> Vec<usize> {
+    assert!(p > 0 && tiles > 0, "tile_bounds needs p > 0 and tiles > 0");
+    let step = p.div_ceil(tiles).div_ceil(8) * 8;
+    let mut bounds = vec![0usize];
+    let mut e = step;
+    while e < p {
+        bounds.push(e);
+        e += step;
+    }
+    bounds.push(p);
+    bounds
+}
 
 /// Shape of a [`StatePlane`]: node count, dimension, and (for mirror
 /// algorithms like ADC-DGD) the per-node neighbor-mirror counts.
@@ -205,6 +234,43 @@ impl StatePlane {
         }
     }
 
+    /// Raw column-view handles for every node, for the dimension-tiled
+    /// engine (rule 4: `(node, tile)` work units). Unlike
+    /// [`Self::shards`] — whose `&mut` slices force whole-node
+    /// exclusivity — a [`NodeColumns`] carries raw row-base pointers so
+    /// workers can materialize *column-range* sub-views of the same
+    /// node's rows concurrently; the engine's phase barriers are what
+    /// make those views disjoint (see [`NodeColumns`] for the
+    /// contract). The plane must outlive the handles and must not be
+    /// accessed through any other path while they are in use.
+    pub fn node_columns(&mut self) -> Vec<NodeColumns> {
+        let p = self.p;
+        let has_ms = !self.mirror_self.is_empty();
+        let mut out = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            let deg = self.mirror_off[i + 1] - self.mirror_off[i];
+            let moff = self.mirror_off[i] * p;
+            out.push(NodeColumns {
+                x: unsafe { self.x.as_mut_ptr().add(i * p) },
+                grad: unsafe { self.grad.as_mut_ptr().add(i * p) },
+                scratch: unsafe { self.scratch.as_mut_ptr().add(i * p) },
+                mirror_self: if has_ms {
+                    unsafe { self.mirror_self.as_mut_ptr().add(i * p) }
+                } else {
+                    std::ptr::null_mut()
+                },
+                mirrors: if deg > 0 {
+                    unsafe { self.mirrors.as_mut_ptr().add(moff) }
+                } else {
+                    std::ptr::null_mut()
+                },
+                p,
+                deg,
+            });
+        }
+        out
+    }
+
     /// Split the plane into disjoint shards at the node boundaries
     /// `bounds` (ascending, starting at 0, ending at `n`). Each shard
     /// owns the rows of its node range exclusively (rule 2 of the
@@ -283,6 +349,158 @@ pub struct NodeRows<'a> {
     pub aux: &'a mut [f64],
     /// Row width.
     pub p: usize,
+}
+
+/// Raw column-view handle for one node's plane rows, produced by
+/// [`StatePlane::node_columns`] (rule 4 of the module docs). Copyable
+/// and `Send + Sync` so every worker of the dimension-tiled engine can
+/// hold handles for *all* nodes; safety comes from the engine's phase
+/// discipline, not the type system:
+///
+/// * **Tile accessors** (`*_tile`, [`Self::mirror_tile`]) return `&mut`
+///   column sub-views. Two live views must never overlap — the engine
+///   guarantees this by assigning each `(node, tile)` unit to exactly
+///   one worker per phase and separating phases with barriers.
+/// * **Row accessors** (`*_row`) return shared full-row views for
+///   whole-vector reductions (serial norm passes, the mix phase's
+///   reads, observer snapshots). They must not be live while any
+///   `&mut` tile view of the same arena row exists — again enforced by
+///   phase placement (writes and full-row reads sit in different
+///   barrier-separated phases).
+#[derive(Debug, Clone, Copy)]
+pub struct NodeColumns {
+    x: *mut f64,
+    grad: *mut f64,
+    scratch: *mut f64,
+    mirror_self: *mut f64,
+    mirrors: *mut f64,
+    p: usize,
+    deg: usize,
+}
+
+// SAFETY: the handle is only a bundle of pointers into the plane's
+// arenas; all dereferences go through the unsafe accessors below, whose
+// disjointness contract the dimension-tiled engine upholds with phase
+// barriers (module docs, rule 4).
+unsafe impl Send for NodeColumns {}
+unsafe impl Sync for NodeColumns {}
+
+impl NodeColumns {
+    /// Row width `p`.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Neighbor-mirror slot count (the node's degree; 0 for mirror-free
+    /// layouts).
+    pub fn deg(&self) -> usize {
+        self.deg
+    }
+
+    #[inline]
+    unsafe fn tile(base: *mut f64, p: usize, lo: usize, hi: usize) -> &'static mut [f64] {
+        debug_assert!(lo <= hi && hi <= p, "column range out of bounds");
+        std::slice::from_raw_parts_mut(base.add(lo), hi - lo)
+    }
+
+    /// Mutable column sub-view `x[lo..hi]` of the iterate row.
+    ///
+    /// # Safety
+    /// No other live view (mutable or shared) may overlap these columns
+    /// of this node's `x` row; the plane must be alive and otherwise
+    /// unborrowed (rule 4).
+    #[allow(clippy::mut_from_ref)] // raw-pointer view; disjointness is the caller's contract
+    #[inline]
+    pub unsafe fn x_tile(&self, lo: usize, hi: usize) -> &mut [f64] {
+        Self::tile(self.x, self.p, lo, hi)
+    }
+
+    /// Mutable column sub-view of the gradient row.
+    ///
+    /// # Safety
+    /// Same contract as [`Self::x_tile`], for the `grad` arena.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn grad_tile(&self, lo: usize, hi: usize) -> &mut [f64] {
+        Self::tile(self.grad, self.p, lo, hi)
+    }
+
+    /// Mutable column sub-view of the scratch row.
+    ///
+    /// # Safety
+    /// Same contract as [`Self::x_tile`], for the `scratch` arena.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn scratch_tile(&self, lo: usize, hi: usize) -> &mut [f64] {
+        Self::tile(self.scratch, self.p, lo, hi)
+    }
+
+    /// Mutable column sub-view of the own-mirror row `x̃_i` (mirror
+    /// layouts only).
+    ///
+    /// # Safety
+    /// Same contract as [`Self::x_tile`], for the `mirror_self` arena.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn mirror_self_tile(&self, lo: usize, hi: usize) -> &mut [f64] {
+        assert!(!self.mirror_self.is_null(), "layout has no mirror arenas");
+        Self::tile(self.mirror_self, self.p, lo, hi)
+    }
+
+    /// Mutable column sub-view of neighbor-mirror slot `slot` (mirror
+    /// layouts only).
+    ///
+    /// # Safety
+    /// Same contract as [`Self::x_tile`], for columns `lo..hi` of mirror
+    /// slot `slot`.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn mirror_tile(&self, slot: usize, lo: usize, hi: usize) -> &mut [f64] {
+        debug_assert!(slot < self.deg, "mirror slot out of range");
+        Self::tile(self.mirrors.add(slot * self.p), self.p, lo, hi)
+    }
+
+    /// Shared full iterate row (observer snapshots, whole-vector
+    /// reductions).
+    ///
+    /// # Safety
+    /// No live `&mut` view of this node's `x` row may exist (rule 4).
+    #[inline]
+    pub unsafe fn x_row(&self) -> &[f64] {
+        std::slice::from_raw_parts(self.x, self.p)
+    }
+
+    /// Shared full scratch row (serial reductions over the staged
+    /// compress input).
+    ///
+    /// # Safety
+    /// No live `&mut` view of this node's `scratch` row may exist.
+    #[inline]
+    pub unsafe fn scratch_row(&self) -> &[f64] {
+        std::slice::from_raw_parts(self.scratch, self.p)
+    }
+
+    /// Shared full own-mirror row (the mix phase's `self_row` input).
+    ///
+    /// # Safety
+    /// No live `&mut` view of this node's `mirror_self` row may exist.
+    #[inline]
+    pub unsafe fn mirror_self_row(&self) -> &[f64] {
+        assert!(!self.mirror_self.is_null(), "layout has no mirror arenas");
+        std::slice::from_raw_parts(self.mirror_self, self.p)
+    }
+
+    /// Shared flattened `deg × p` neighbor-mirror block (the mix
+    /// phase's `mirrors` input).
+    ///
+    /// # Safety
+    /// No live `&mut` view of any of this node's mirror slots may
+    /// exist.
+    #[inline]
+    pub unsafe fn mirrors_rows(&self) -> &[f64] {
+        assert!(self.deg > 0, "node has no mirror slots");
+        std::slice::from_raw_parts(self.mirrors, self.deg * self.p)
+    }
 }
 
 /// A contiguous range of plane rows owned exclusively by one engine
@@ -452,5 +670,56 @@ mod tests {
     fn shards_reject_partial_cover() {
         let mut plane = StatePlane::new(&PlaneLayout::dense(4, 1));
         let _ = plane.shards(&[0, 2]);
+    }
+
+    #[test]
+    fn tile_bounds_are_8_aligned_and_cover() {
+        for &(p, tiles) in &[(37usize, 5usize), (64, 4), (1, 5), (8, 1), (1 << 20, 16), (19, 2)] {
+            let b = tile_bounds(p, tiles);
+            assert_eq!(b[0], 0);
+            assert_eq!(*b.last().unwrap(), p);
+            assert!(b.len() - 1 <= tiles, "p={p} tiles={tiles}: too many tiles");
+            for w in b.windows(2) {
+                assert!(w[0] < w[1], "empty tile at p={p} tiles={tiles}");
+            }
+            for &e in &b[1..b.len() - 1] {
+                assert_eq!(e % 8, 0, "interior boundary {e} not 8-aligned");
+            }
+        }
+        // Exact split when everything divides.
+        assert_eq!(tile_bounds(32, 4), vec![0, 8, 16, 24, 32]);
+        // Small p degenerates to one tile.
+        assert_eq!(tile_bounds(3, 4), vec![0, 3]);
+    }
+
+    #[test]
+    fn node_columns_views_alias_the_plane_rows() {
+        let mut plane = StatePlane::new(&PlaneLayout::with_mirrors(3, 10, vec![2, 1, 2]));
+        for i in 0..3 {
+            let rows = plane.rows(i);
+            for (e, v) in rows.x.iter_mut().enumerate() {
+                *v = (i * 100 + e) as f64;
+            }
+            rows.mirror_self.fill(i as f64 + 0.5);
+            rows.mirrors.fill(-(i as f64));
+        }
+        let cols = plane.node_columns();
+        assert_eq!(cols.len(), 3);
+        assert_eq!(cols[1].p(), 10);
+        assert_eq!(cols[1].deg(), 1);
+        // SAFETY (test): single thread, views created and dropped one at
+        // a time, plane untouched while handles are live.
+        unsafe {
+            assert_eq!(cols[2].x_tile(8, 10), &[208.0, 209.0]);
+            assert_eq!(&cols[1].x_row()[..2], &[100.0, 101.0]);
+            assert_eq!(cols[0].mirror_self_row(), &[0.5; 10]);
+            assert_eq!(cols[2].mirror_tile(1, 0, 3), &[-2.0; 3]);
+            assert_eq!(cols[2].mirrors_rows().len(), 20);
+            cols[0].scratch_tile(0, 8).fill(7.0);
+            cols[0].grad_tile(3, 5).fill(9.0);
+        }
+        drop(cols);
+        assert_eq!(plane.rows(0).scratch[..8], [7.0; 8]);
+        assert_eq!(plane.rows(0).grad[3..5], [9.0; 2]);
     }
 }

@@ -385,6 +385,65 @@ fn parallel_engines_match_golden_snapshots() {
     }
 }
 
+/// The dimension-tiled engine must hit the same golden snapshots at
+/// every tile count — including tile counts that do not divide P
+/// (here P = 1, so every tile count collapses to one non-empty tile,
+/// which pins the degenerate-tiling path) — and at rounds 40/80/120,
+/// with byte accounting intact. This is the hard bit-identity gate for
+/// the `(node, tile)` work-unit decomposition.
+#[test]
+fn dim_engine_matches_golden_snapshots() {
+    let spec = ring_spec(
+        16,
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        CompressorSpec::TernGrad,
+    );
+    let prepared = spec.prepare();
+    for tiles in [2usize, 5] {
+        for (iters, golden) in [(40, &GOLDEN_R40), (80, &GOLDEN_R80), (120, &GOLDEN_R120)] {
+            let out = prepared.run_with(&golden_cfg(EngineKind::dim(tiles), iters));
+            assert_bits(&out.final_states, golden, &format!("dim({tiles}) round {iters}"));
+        }
+        let out = prepared.run_with(&golden_cfg(EngineKind::Dim { workers: 3, tiles }, 120));
+        assert_bits(&out.final_states, &GOLDEN_R120, &format!("dim(3 workers, {tiles})"));
+        assert_eq!(out.total_bytes, GOLDEN_TOTAL_BYTES, "dim({tiles}) bytes");
+        assert_eq!(out.dropped_messages, GOLDEN_DROPPED, "dim({tiles}) drops");
+    }
+}
+
+/// The dimension-tiled engine on a genuinely multi-dimensional fleet
+/// (P = 37, which no tested tile count divides evenly) must agree with
+/// the sequential engine bit-for-bit across worker and tile counts,
+/// including loss + quantizer saturation accounting. Tile counts past
+/// P exercise the degenerate bounds where trailing tiles are empty.
+#[test]
+fn dim_engine_is_invariant_to_workers_and_tiles() {
+    use adcdgd::algorithms::ObjectiveRef;
+    use adcdgd::objective::DiagonalQuadratic;
+    use std::sync::Arc;
+    let p = 37;
+    let objs: Vec<ObjectiveRef> = (0..16)
+        .map(|i| {
+            let d: Vec<f64> = (0..p).map(|e| 0.5 + ((i * p + e) % 7) as f64 * 0.25).collect();
+            let b: Vec<f64> = (0..p).map(|e| ((e + i) % 5) as f64 - 2.0).collect();
+            Arc::new(DiagonalQuadratic::new(d, b)) as ObjectiveRef
+        })
+        .collect();
+    let spec = ScenarioSpec::new(
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        TopologySpec::Ring(16),
+        ObjectiveSpec::Custom(objs),
+    )
+    .with_compressor(CompressorSpec::TernGrad);
+    let prepared = spec.prepare();
+    let reference = prepared.run_with(&cfg(EngineKind::Sequential, 0.10));
+    assert!(reference.dropped_messages > 0, "loss active");
+    for (workers, tiles) in [(1usize, 1usize), (2, 3), (0, 8), (3, 64)] {
+        let out = prepared.run_with(&cfg(EngineKind::Dim { workers, tiles }, 0.10));
+        assert_identical(&reference, &out, &format!("dim workers={workers} tiles={tiles}"));
+    }
+}
+
 /// Specs built through the `Custom` escape hatches (prebuilt graph +
 /// W + objectives + operator — the migration target of the 0.4.0
 /// wrapper removal) must stay engine-invariant like named specs.

@@ -927,6 +927,214 @@ fn prop_sample_oracle_reseed_reproduces_blocks() {
     }
 }
 
+/// Dimension-tiled consensus mixing: computing the mixed row tile by
+/// tile via `mix_row_range_into` must be **bit-identical** to one
+/// whole-row `mix_row_into`, for every tile count — the engine's
+/// 8-aligned [`adcdgd::state::tile_bounds`] partitions *and* arbitrary
+/// unaligned cuts — on random graphs, dimensions (non-dividing tails
+/// included), and node rows. This is the contract that lets `(node,
+/// tile)` workers mix disjoint column blocks concurrently.
+#[test]
+fn prop_mix_row_range_bit_identical_to_full_row() {
+    use adcdgd::consensus::metropolis_csr;
+    use adcdgd::state::tile_bounds;
+    let mut rng = Xoshiro256pp::seed_from_u64(119);
+    let gen = Normal::new(0.0, 3.0);
+    for trial in 0..12 {
+        let n = 3 + rng.next_bounded(10) as usize;
+        let g = match trial % 3 {
+            0 => topology::erdos_renyi(n, 0.5, rng.next_u64()),
+            1 => topology::star(n),
+            _ => topology::ring(n),
+        };
+        let w = metropolis_csr(&g);
+        let p = 1 + rng.next_bounded(70) as usize;
+        for i in 0..g.num_nodes() {
+            let self_row = gen.sample_vec(&mut rng, p);
+            let mirrors = gen.sample_vec(&mut rng, w.degree(i) * p);
+            let mut full = vec![0.0; p];
+            w.mix_row_into(i, &self_row, &mirrors, &mut full);
+            for tiles in [1usize, 2, 3, 8, 64] {
+                let mut tiled = vec![f64::NAN; p];
+                for win in tile_bounds(p, tiles).windows(2) {
+                    let (lo, hi) = (win[0], win[1]);
+                    w.mix_row_range_into(i, &self_row, &mirrors, lo, hi, &mut tiled[lo..hi]);
+                }
+                for e in 0..p {
+                    assert_eq!(
+                        tiled[e].to_bits(),
+                        full[e].to_bits(),
+                        "trial {trial} node {i} p={p} tiles={tiles}: column {e}"
+                    );
+                }
+            }
+            // An arbitrary unaligned cut must agree too: the kernel's
+            // contract is any `lo ≤ hi`, not just 8-aligned tiles.
+            let mid = 1 + rng.next_bounded(p as u64) as usize;
+            let mut split = vec![f64::NAN; p];
+            w.mix_row_range_into(i, &self_row, &mirrors, 0, mid, &mut split[..mid]);
+            w.mix_row_range_into(i, &self_row, &mirrors, mid, p, &mut split[mid..]);
+            for e in 0..p {
+                assert_eq!(
+                    split[e].to_bits(),
+                    full[e].to_bits(),
+                    "trial {trial} node {i} p={p} cut {mid}: column {e}"
+                );
+            }
+        }
+    }
+}
+
+/// Dimension-tiled encode: `stage_into` (serial whole-vector reduction
+/// + one block-RNG draw) followed by per-tile `encode_tile` calls over
+/// the engine's 8-aligned tile partition, sealed with the summed
+/// saturation count, must be **bit-identical** to fresh one-shot
+/// `compress` — for every tileable operator (TernGrad's ternary arena,
+/// QSGD's i8 and i16 wire widths), every tile count (non-dividing
+/// tails included), the all-zero degenerate message, and with both
+/// pathways consuming the identical RNG stream.
+#[test]
+fn prop_staged_tiled_encode_bit_identical_to_compress() {
+    use adcdgd::compress::{ArenaTileMut, CompressedRef, PayloadBuf, PayloadKind};
+    use adcdgd::state::tile_bounds;
+    let ops: Vec<(&str, Box<dyn Compressor>)> = vec![
+        ("terngrad", Box::new(TernGrad::new())),
+        ("qsgd-i8", Box::new(Qsgd::new(4))),
+        ("qsgd-i16", Box::new(Qsgd::new(1000))),
+    ];
+    let mut rng = Xoshiro256pp::seed_from_u64(118);
+    let mut buf = PayloadBuf::new();
+    for trial in 0..30usize {
+        let p = 1 + rng.next_bounded(200) as usize;
+        // Every tenth trial is the all-zero message: stage_into encodes
+        // it completely (staged.tiled == false) and the tile loop skips.
+        let z: Vec<f64> = if trial % 10 == 9 {
+            vec![0.0; p]
+        } else {
+            (0..p).map(|_| (rng.next_f64() - 0.5) * 20.0).collect()
+        };
+        for tiles in [1usize, 2, 3, 5, 16] {
+            for (name, op) in &ops {
+                assert!(op.tileable(), "{name} must advertise tileable");
+                let seed = rng.next_u64();
+                let mut r_staged = Xoshiro256pp::seed_from_u64(seed);
+                let mut r_fresh = Xoshiro256pp::seed_from_u64(seed);
+                let staged = op
+                    .stage_into(&z, &mut r_staged, &mut buf)
+                    .unwrap_or_else(|| panic!("{name}: stage_into returned None"));
+                let mut sat = staged.cref.saturated;
+                if staged.tiled {
+                    for w in tile_bounds(p, tiles).windows(2) {
+                        let (lo, hi) = (w[0], w[1]);
+                        // Disjoint arena slices, exactly as the engine
+                        // carves them (8-aligned bounds → whole packed
+                        // bytes for the ternary arena).
+                        let rand = &buf.rand[lo..hi];
+                        let out = match staged.cref.kind {
+                            PayloadKind::Ternary => {
+                                ArenaTileMut::U8(&mut buf.u8s[lo / 4..hi.div_ceil(4)])
+                            }
+                            PayloadKind::I8 => ArenaTileMut::I8(&mut buf.i8s[lo..hi]),
+                            PayloadKind::I16 => ArenaTileMut::I16(&mut buf.i16s[lo..hi]),
+                            k => panic!("{name}: unexpected staged kind {k:?}"),
+                        };
+                        sat += op.encode_tile(&z[lo..hi], rand, &staged, out);
+                    }
+                }
+                let sealed = buf.emit(&CompressedRef { saturated: sat, ..staged.cref });
+                let fresh = op.compress(&z, &mut r_fresh);
+                assert_eq!(
+                    payload_bits(&sealed),
+                    payload_bits(&fresh.payload),
+                    "{name} trial {trial} (p={p} tiles={tiles}): staged != fresh"
+                );
+                assert_eq!(sat, fresh.saturated, "{name} trial {trial}: saturation");
+                assert_eq!(
+                    r_staged.next_u64(),
+                    r_fresh.next_u64(),
+                    "{name} trial {trial}: RNG draw count diverged"
+                );
+                buf.reclaim(sealed);
+            }
+        }
+    }
+}
+
+/// Dimension-tiled consume: folding a payload into an accumulator tile
+/// by tile via `decode_axpy_range` must be **bit-identical** to one
+/// whole-vector `decode_axpy`, across all six payload kinds, every tile
+/// count, and arbitrary unaligned cuts (ternary lengths and cuts
+/// deliberately biased off multiples of 4 so the shared packed byte at
+/// a range boundary is exercised from both sides).
+#[test]
+fn prop_decode_axpy_range_bit_identical_to_full() {
+    use adcdgd::state::tile_bounds;
+    let mut rng = Xoshiro256pp::seed_from_u64(122);
+    for trial in 0..40usize {
+        let p = 1 + rng.next_bounded(120) as usize * 4 / 3 + (trial % 4);
+        let scale = 0.05 + rng.next_f64() * 3.0;
+        let c = (rng.next_f64() - 0.5) * 4.0;
+        let mut payloads: Vec<Payload> = vec![
+            Payload::F64((0..p).map(|_| (rng.next_f64() - 0.5) * 1e3).collect()),
+            Payload::F32((0..p).map(|_| (rng.next_f64() as f32 - 0.5) * 50.0).collect()),
+            Payload::I16 {
+                scale,
+                data: (0..p).map(|_| rng.next_bounded(65536) as i64 as i16).collect(),
+            },
+            Payload::I8 {
+                scale,
+                data: (0..p).map(|_| rng.next_bounded(256) as i64 as i8).collect(),
+            },
+            Payload::pack_ternary(
+                p,
+                scale,
+                &(0..p).map(|_| (rng.next_bounded(3) as i8) - 1).collect::<Vec<i8>>(),
+            ),
+        ];
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for i in 0..p {
+            if rng.next_f64() < 0.4 {
+                idx.push(i as u32);
+                val.push(rng.next_bounded(65536) as i64 as i16);
+            }
+        }
+        payloads.push(Payload::SparseI16 { len: p, scale, idx, val });
+
+        for payload in payloads.drain(..) {
+            let kind = payload.kind();
+            let start: Vec<f64> = (0..p).map(|_| (rng.next_f64() - 0.5) * 10.0).collect();
+            let mut full = start.clone();
+            payload.decode_axpy(c, &mut full);
+            for tiles in [1usize, 2, 3, 5, 16] {
+                let mut tiled = start.clone();
+                for w in tile_bounds(p, tiles).windows(2) {
+                    payload.decode_axpy_range(c, w[0], w[1], &mut tiled[w[0]..w[1]]);
+                }
+                for i in 0..p {
+                    assert_eq!(
+                        tiled[i].to_bits(),
+                        full[i].to_bits(),
+                        "{kind:?} p={p} tiles={tiles}: element {i}"
+                    );
+                }
+            }
+            // One random unaligned cut, including mid-packed-byte splits.
+            let mid = rng.next_bounded(p as u64 + 1) as usize;
+            let mut cut = start.clone();
+            payload.decode_axpy_range(c, 0, mid, &mut cut[..mid]);
+            payload.decode_axpy_range(c, mid, p, &mut cut[mid..]);
+            for i in 0..p {
+                assert_eq!(
+                    cut[i].to_bits(),
+                    full[i].to_bits(),
+                    "{kind:?} p={p} cut {mid}: element {i}"
+                );
+            }
+        }
+    }
+}
+
 /// Saturation counting: values beyond the int16 range are flagged.
 #[test]
 fn prop_saturation_detection() {

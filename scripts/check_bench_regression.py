@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Gate dimension-plane benchmark throughput against a committed baseline.
+
+Compares the freshly produced ``BENCH_dim_plane.json`` (written by
+``ADCDGD_BENCH_ONLY=dim cargo bench --bench hotpath``) against the
+snapshot committed under ``BENCH_baseline/``. The gate fails when any
+(n, p, tiles) configuration regresses by more than the allowed margin
+(default: rounds/sec below 75% of baseline, i.e. a >25% regression), or
+when a baseline configuration disappeared from the current run.
+
+Modes:
+
+* Baseline missing  -> bootstrap: pass, and print the command that
+  records one. CI stays green until a baseline is deliberately
+  committed; numbers are never invented here.
+* ``--update``      -> copy the current JSON into ``BENCH_baseline/``
+  (run on a quiet, representative machine, then commit the result).
+
+Exit codes: 0 pass / bootstrap, 1 regression, 2 usage or parse error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_CURRENT = REPO_ROOT / "BENCH_dim_plane.json"
+DEFAULT_BASELINE = REPO_ROOT / "BENCH_baseline" / "BENCH_dim_plane.json"
+# A configuration fails when current rounds/sec drops below this
+# fraction of the baseline (0.75 => >25% regression fails).
+DEFAULT_THRESHOLD = 0.75
+
+
+def load_results(path: Path) -> dict[tuple[int, int, int], dict]:
+    """Index a bench JSON's result rows by (n, p, tiles)."""
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"error: cannot read {path}: {e}")
+    rows = doc.get("results")
+    if not isinstance(rows, list) or not rows:
+        sys.exit(f"error: {path} has no 'results' rows")
+    indexed = {}
+    for row in rows:
+        try:
+            key = (int(row["n"]), int(row["p"]), int(row["tiles"]))
+            float(row["rounds_per_sec"])
+        except (KeyError, TypeError, ValueError) as e:
+            sys.exit(f"error: malformed result row in {path}: {row!r} ({e})")
+        indexed[key] = row
+    return indexed
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", type=Path, default=DEFAULT_CURRENT,
+                    help="bench JSON produced by the current run")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="committed baseline JSON to compare against")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="minimum allowed current/baseline rounds/sec ratio")
+    ap.add_argument("--update", action="store_true",
+                    help="record the current JSON as the new baseline")
+    args = ap.parse_args()
+
+    if not args.current.exists():
+        sys.exit(f"error: {args.current} not found — run "
+                 "ADCDGD_BENCH_ONLY=dim cargo bench --bench hotpath first")
+    current = load_results(args.current)
+
+    if args.update:
+        args.baseline.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated: {args.baseline} "
+              f"({len(current)} configurations)")
+        return 0
+
+    if not args.baseline.exists():
+        print(f"no baseline at {args.baseline} — bootstrap pass.")
+        print("record one on a quiet, representative machine with:")
+        print("  ADCDGD_BENCH_ONLY=dim cargo bench --bench hotpath")
+        print("  python3 scripts/check_bench_regression.py --update")
+        return 0
+
+    baseline = load_results(args.baseline)
+    failures = []
+    for key, base_row in sorted(baseline.items()):
+        n, p, tiles = key
+        label = f"n={n} p={p} tiles={tiles}"
+        cur_row = current.get(key)
+        if cur_row is None:
+            failures.append(f"{label}: configuration missing from current run")
+            continue
+        base_rps = float(base_row["rounds_per_sec"])
+        cur_rps = float(cur_row["rounds_per_sec"])
+        ratio = cur_rps / base_rps if base_rps > 0 else float("inf")
+        verdict = "ok" if ratio >= args.threshold else "REGRESSION"
+        print(f"{label}: {cur_rps:.2f} vs baseline {base_rps:.2f} rounds/s "
+              f"(x{ratio:.3f}) {verdict}")
+        if ratio < args.threshold:
+            failures.append(
+                f"{label}: {cur_rps:.2f} rounds/s is below "
+                f"{args.threshold:.0%} of baseline {base_rps:.2f}")
+    for key in sorted(set(current) - set(baseline)):
+        n, p, tiles = key
+        print(f"n={n} p={p} tiles={tiles}: new configuration (no baseline)")
+
+    if failures:
+        print(f"\n{len(failures)} regression(s) beyond the "
+              f"{1 - args.threshold:.0%} margin:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("dim-plane throughput within margin of baseline.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
