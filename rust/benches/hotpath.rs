@@ -25,8 +25,12 @@
 //! `ADCDGD_BENCH_ONLY=dim` (dimension plane: ADC-DGD + ternary rounds
 //! on ring(16) at P ∈ {65 536, 1 048 576} through the dimension-tiled
 //! engine at 1/4/8/16 column tiles, with the zero-alloc assertion —
-//! emits `BENCH_dim_plane.json`) to run a single section (CI uses
-//! these to publish the JSON artifacts quickly).
+//! emits `BENCH_dim_plane.json`), or `ADCDGD_BENCH_ONLY=churn` (churn
+//! plane: incremental-relayout cost per epoch boundary and steady-state
+//! rounds/sec under 1% crash/rejoin churn per epoch at n ∈ {256, 2048},
+//! with the zero-alloc assertion on in-epoch rounds — emits
+//! `BENCH_churn_plane.json`) to run a single section (CI uses these to
+//! publish the JSON artifacts quickly).
 
 use adcdgd::algorithms::{
     AdcDgdOptions, AlgorithmKind, ChocoSgdOptions, CompressorRef, ObjectiveRef, StepSize,
@@ -1155,6 +1159,187 @@ fn dim_plane_bench() {
     println!("dimension-plane bench written to BENCH_dim_plane.json");
 }
 
+/// One alive-masked round over the fault-filtered bus — exactly the
+/// engines' churn semantics: dead nodes neither send nor consume (their
+/// RNGs freeze), live nodes run the full pooled compress → broadcast →
+/// consume path, and the reclaim hook drains after every round.
+fn churn_round(
+    nodes: &mut [Box<dyn adcdgd::algorithms::NodeLogic>],
+    plane: &mut adcdgd::state::StatePlane,
+    rngs: &mut [Xoshiro256pp],
+    bus: &mut Bus,
+    pool: &mut PayloadPool,
+    alive: &[bool],
+    k: usize,
+) -> usize {
+    let mut live = 0usize;
+    for (i, node) in nodes.iter_mut().enumerate() {
+        if !alive[i] {
+            continue;
+        }
+        let mut rows = plane.rows(i);
+        let out = node.make_message(k, &mut rows, &mut rngs[i], pool);
+        bus.broadcast(i, k, &out.payload);
+        live += 1;
+    }
+    bus.advance_round();
+    bus.deliver_round(k);
+    for (i, node) in nodes.iter_mut().enumerate() {
+        if !alive[i] {
+            continue;
+        }
+        let inbox = bus.inbox_view(i);
+        let mut rows = plane.rows(i);
+        node.consume(k, &inbox, &mut rows, &mut rngs[i]);
+        bus.clear_inbox(i);
+    }
+    bus.reclaim_retired(pool);
+    live
+}
+
+/// Churn plane: the incremental-relayout cost of an epoch boundary
+/// (crash + rejoin hygiene, in-flight retirement, O(E) live-subgraph
+/// Metropolis reweight into the two-buffer Arc bank, fleet rebind) and
+/// the steady-state round throughput under churn, at n ∈ {256, 2048}
+/// with 1% of the fleet crashing per epoch and rejoining one epoch
+/// later. In-epoch rounds (from the second churned epoch on, once pool
+/// cells and boundary scratch are warm) must allocate **nothing** — the
+/// boundary owns all churn bookkeeping. Emits `BENCH_churn_plane.json`.
+fn churn_plane_bench() {
+    println!("== churn plane (epoch boundaries + alive-masked rounds) ==");
+    let p_dim = 64usize;
+    let epoch_len = 25usize;
+    let epochs = 8usize; // churned epochs; epoch 0 is the pristine warm-up
+    let mut rows_json = Vec::new();
+    for n in [256usize, 2048] {
+        let p_edge = (12.0 / n as f64).min(0.5);
+        let g = adcdgd::topology::erdos_renyi(n, p_edge, 5);
+        let w = adcdgd::consensus::Weights::metropolis(&g);
+        let objs = quad_objectives(n, p_dim, 17);
+        let kind = AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 });
+        let comp: CompressorRef = Arc::new(TernGrad::new());
+        let fleet = kind.build_fleet(&g, &w, &objs, Some(&comp), StepSize::Constant(0.01), None);
+        let mut nodes = fleet.nodes;
+        let mut plane = fleet.plane;
+        let mut rngs: Vec<Xoshiro256pp> =
+            (0..n).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
+        let mut bus = Bus::new(&g, LinkModel::default(), 7);
+        bus.set_measure_wire(false);
+        bus.enable_faults(0xC0C0);
+        let mut pool = PayloadPool::new();
+
+        // Two-buffer weight bank + reweight scratch, as in the driver:
+        // two CSR allocations total, every boundary an in-place rewrite.
+        let mut current = Arc::new(adcdgd::consensus::metropolis_csr(&g));
+        let mut spare = Arc::new(adcdgd::consensus::metropolis_csr(&g));
+        let mut live_deg: Vec<usize> = Vec::new();
+        let mut alive = vec![true; n];
+
+        // 1% of the fleet churns per epoch: epoch e crashes a rotating
+        // disjoint block of c nodes, which rejoin (cold) at e + 1.
+        let c = (n / 100).max(1);
+        let victims =
+            |e: usize| -> Vec<usize> { (0..c).map(|j| ((e - 1) * c + j) % n).collect() };
+
+        // Epoch 0: pristine warm-up (pool cells, arenas, inboxes).
+        let mut k = 0usize;
+        for _ in 0..epoch_len {
+            k += 1;
+            churn_round(&mut nodes, &mut plane, &mut rngs, &mut bus, &mut pool, &alive, k);
+        }
+        let cells_warm = pool.fresh_cells();
+
+        let mut relayout_s = 0.0f64;
+        let mut rounds_s = 0.0f64;
+        let mut allocs_in_epoch = 0usize;
+        let mut retired_total = 0usize;
+        for e in 1..=epochs {
+            // ---- Boundary e (timed): rejoin last epoch's victims,
+            // crash this epoch's, retire + reweight + rebind. ----
+            let t0 = std::time::Instant::now();
+            if e > 1 {
+                for &v in &victims(e - 1) {
+                    alive[v] = true;
+                    plane.mask_node(v, true);
+                    for &u in g.neighbors(v) {
+                        let slot =
+                            g.neighbors(u).binary_search(&v).expect("adjacency is symmetric");
+                        plane.zero_mirror_slot(u, slot);
+                    }
+                    bus.clear_inbox(v);
+                }
+            }
+            for &v in &victims(e) {
+                alive[v] = false;
+                bus.clear_inbox(v);
+            }
+            for (i, &a) in alive.iter().enumerate() {
+                bus.set_alive(i, a);
+            }
+            retired_total += bus.retire_dead_in_flight();
+            bus.reclaim_retired(&mut pool);
+            std::mem::swap(&mut current, &mut spare);
+            Arc::get_mut(&mut current)
+                .expect("weight bank invariant: the inactive buffer is unshared")
+                .reweight_metropolis_live(&alive, false, &mut live_deg);
+            for node in nodes.iter_mut() {
+                node.rebind_weights(&current);
+            }
+            relayout_s += t0.elapsed().as_secs_f64();
+
+            // ---- In-epoch rounds (timed; alloc-checked once the churn
+            // machinery itself is warm, i.e. from the first epoch that
+            // has both a crash and a rejoin behind it). ----
+            let before = alloc_counter::count();
+            let t0 = std::time::Instant::now();
+            for _ in 0..epoch_len {
+                k += 1;
+                std::hint::black_box(churn_round(
+                    &mut nodes, &mut plane, &mut rngs, &mut bus, &mut pool, &alive, k,
+                ));
+            }
+            rounds_s += t0.elapsed().as_secs_f64();
+            if e >= 2 {
+                let allocs = alloc_counter::count() - before;
+                allocs_in_epoch += allocs;
+                assert_eq!(
+                    allocs, 0,
+                    "in-epoch rounds allocated {allocs} times (n={n}, epoch {e})"
+                );
+            }
+        }
+        assert_eq!(
+            pool.fresh_cells(),
+            cells_warm,
+            "churned epochs created pool cells after warm-up (n={n})"
+        );
+        let relayout_mean = relayout_s / epochs as f64;
+        let round_mean = rounds_s / (epochs * epoch_len) as f64;
+        let rps = 1.0 / round_mean;
+        println!(
+            "churn n={n:<5} c={c:<3} relayout {:.1} us/epoch, {rps:>8.2} rounds/s \
+             (boundary/epoch overhead {:.2}%), allocs in-epoch: {allocs_in_epoch}",
+            relayout_mean * 1e6,
+            100.0 * relayout_mean / (relayout_mean + epoch_len as f64 * round_mean)
+        );
+        rows_json.push(format!(
+            "    {{\"n\": {n}, \"p\": {p_dim}, \"epoch_len\": {epoch_len}, \
+             \"epochs\": {epochs}, \"churn_per_epoch\": {c}, \
+             \"relayout_mean_s\": {relayout_mean:.8}, \"round_mean_s\": {round_mean:.8}, \
+             \"rounds_per_sec\": {rps:.4}, \"retired_in_flight\": {retired_total}, \
+             \"allocs_in_epoch\": {allocs_in_epoch}, \"pool_cells\": {cells_warm}}}"
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"churn_plane\",\n  \"pathway\": \"epoch-boundary incremental relayout \
+         (live-subgraph metropolis reweight, two-buffer arc bank) + alive-masked adc-dgd \
+         rounds\",\n  \"wire\": \"ternary P=64\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    std::fs::write("BENCH_churn_plane.json", &json).expect("write BENCH_churn_plane.json");
+    println!("churn-plane bench written to BENCH_churn_plane.json");
+}
+
 fn xla_paths() {
     let dir = adcdgd::runtime::artifacts_dir(None);
     if !adcdgd::runtime::artifacts_available(&dir) {
@@ -1233,6 +1418,10 @@ fn main() {
         dim_plane_bench();
         return;
     }
+    if only == "churn" {
+        churn_plane_bench();
+        return;
+    }
     println!("== L3 hot path ==");
     for p in [100usize, 10_000, 100_000] {
         round_throughput(p, 20);
@@ -1247,6 +1436,7 @@ fn main() {
     scale_bench();
     wire_plane_bench();
     dim_plane_bench();
+    churn_plane_bench();
     println!("== XLA-backed paths ==");
     xla_paths();
 }

@@ -152,6 +152,10 @@ impl NodeLogic for AdcDgdNode {
             gamma: self.opts.gamma,
         })
     }
+
+    fn rebind_weights(&mut self, w: &Arc<CsrWeights>) {
+        self.weights = Arc::clone(w);
+    }
 }
 
 #[cfg(test)]

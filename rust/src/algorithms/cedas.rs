@@ -171,6 +171,10 @@ impl NodeLogic for CedasNode {
     fn grad_steps(&self) -> usize {
         self.steps
     }
+
+    fn rebind_weights(&mut self, w: &Arc<CsrWeights>) {
+        self.weights = Arc::clone(w);
+    }
 }
 
 #[cfg(test)]

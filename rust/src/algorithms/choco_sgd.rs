@@ -204,6 +204,10 @@ impl NodeLogic for ChocoSgdNode {
     fn grad_steps(&self) -> usize {
         self.steps
     }
+
+    fn rebind_weights(&mut self, w: &Arc<CsrWeights>) {
+        self.weights = Arc::clone(w);
+    }
 }
 
 #[cfg(test)]

@@ -84,6 +84,10 @@ impl NodeLogic for DgdTNode {
     fn grad_steps(&self) -> usize {
         self.steps
     }
+
+    fn rebind_weights(&mut self, w: &Arc<CsrWeights>) {
+        self.weights = Arc::clone(w);
+    }
 }
 
 #[cfg(test)]

@@ -178,6 +178,16 @@ pub trait NodeLogic: Send {
     fn tiled_ctx(&self) -> Option<TiledCtx> {
         None
     }
+
+    /// Churn-plane relayout hook: swap in the epoch's reweighted
+    /// consensus matrix. The driver calls this on every node at each
+    /// epoch boundary after
+    /// [`crate::consensus::CsrWeights::reweight_metropolis_live`];
+    /// implementations that hold a weights handle replace it with a
+    /// clone of `w`. Default is a no-op for weight-free logics.
+    fn rebind_weights(&mut self, w: &Arc<crate::consensus::CsrWeights>) {
+        let _ = w;
+    }
 }
 
 /// Shared handle types used across node implementations.

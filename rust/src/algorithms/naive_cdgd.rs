@@ -68,6 +68,10 @@ impl NodeLogic for NaiveCompressedNode {
     fn grad_steps(&self) -> usize {
         self.steps
     }
+
+    fn rebind_weights(&mut self, w: &Arc<CsrWeights>) {
+        self.weights = Arc::clone(w);
+    }
 }
 
 #[cfg(test)]

@@ -266,6 +266,68 @@ impl CsrWeights {
             *o = acc;
         }
     }
+
+    /// Churn-plane incremental relayout: rewrite the Metropolis(-Hastings)
+    /// weights of the **live subgraph** in place, over the existing CSR
+    /// pattern — `O(E)`, zero allocation, arenas reused (`live_deg` is
+    /// caller-owned scratch, resized once).
+    ///
+    /// Live links get `1/(1 + max(d̃ᵢ, d̃ⱼ))` with `d̃` the *live* degree
+    /// (neighbors alive on both ends); links touching a dead node get
+    /// weight `0.0`; dead rows collapse to the identity (`diag = 1`).
+    /// Live diagonals are `1 − Σ_offdiag` accumulated in
+    /// ascending-neighbor order — the exact reduction of
+    /// [`super::metropolis_csr`], so an all-alive reweight reproduces the
+    /// builder **bit for bit** (pinned below). With `lazy`, entries
+    /// follow [`super::lazy_metropolis_csr`]'s expressions
+    /// (`0.5·v` off-diagonal, `0.5·(1 − Σ) + 0.5` diagonal), again
+    /// bit-identical on the all-alive subgraph.
+    ///
+    /// The result restricted to live rows/columns is symmetric and
+    /// doubly stochastic (each live row sums to 1), so consensus over
+    /// the survivors keeps the paper's contraction guarantees whenever
+    /// the live subgraph stays connected.
+    pub fn reweight_metropolis_live(
+        &mut self,
+        alive: &[bool],
+        lazy: bool,
+        live_deg: &mut Vec<usize>,
+    ) {
+        assert_eq!(alive.len(), self.n, "alive mask must cover the fleet");
+        live_deg.clear();
+        live_deg.resize(self.n, 0);
+        for i in 0..self.n {
+            if alive[i] {
+                live_deg[i] = self.indices[self.indptr[i]..self.indptr[i + 1]]
+                    .iter()
+                    .filter(|&&j| alive[j])
+                    .count();
+            }
+        }
+        for i in 0..self.n {
+            let row = self.indptr[i]..self.indptr[i + 1];
+            if !alive[i] {
+                self.weights[row].fill(0.0);
+                self.diag[i] = 1.0;
+                continue;
+            }
+            let di = live_deg[i];
+            // Accumulate the *unhalved* off-diagonal sum in ascending
+            // order — the builders' exact reduction for both families.
+            let mut off = 0.0f64;
+            for q in row {
+                let j = self.indices[q];
+                if alive[j] {
+                    let v = 1.0 / (1.0 + di.max(live_deg[j]) as f64);
+                    off += v;
+                    self.weights[q] = if lazy { 0.5 * v } else { v };
+                } else {
+                    self.weights[q] = 0.0;
+                }
+            }
+            self.diag[i] = if lazy { 0.5 * (1.0 - off) + 0.5 } else { 1.0 - off };
+        }
+    }
 }
 
 #[cfg(test)]
@@ -411,5 +473,76 @@ mod tests {
             CsrWeights::from_parts(vec![0.5], vec![0, 2], vec![1, 0], vec![0.5, 0.5])
         });
         assert!(bad.is_err(), "descending row indices must be rejected");
+    }
+
+    #[test]
+    fn all_alive_reweight_reproduces_the_builders_bitwise() {
+        use crate::consensus::{lazy_metropolis_csr, metropolis_csr};
+        let g = topology::grid2d(3, 4);
+        let alive = vec![true; g.n()];
+        let mut scratch = Vec::new();
+        for lazy in [false, true] {
+            let reference = if lazy {
+                lazy_metropolis_csr(&g)
+            } else {
+                metropolis_csr(&g)
+            };
+            // Start from deliberately wrong values over the same pattern.
+            let mut w = reference.clone();
+            w.reweight_metropolis_live(&vec![false; g.n()], lazy, &mut scratch);
+            w.reweight_metropolis_live(&alive, lazy, &mut scratch);
+            for i in 0..g.n() {
+                assert_eq!(
+                    w.diag(i).to_bits(),
+                    reference.diag(i).to_bits(),
+                    "diag {i} must match the builder bit for bit (lazy={lazy})"
+                );
+                for (a, b) in w.row_weights(i).iter().zip(reference.row_weights(i)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "row {i} (lazy={lazy})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partial_reweight_is_stochastic_symmetric_and_isolates_the_dead() {
+        use crate::consensus::metropolis_csr;
+        let g = topology::grid2d(3, 4);
+        let mut alive = vec![true; g.n()];
+        alive[0] = false;
+        alive[7] = false;
+        let mut w = metropolis_csr(&g);
+        let mut scratch = Vec::new();
+        w.reweight_metropolis_live(&alive, false, &mut scratch);
+        for i in 0..g.n() {
+            if !alive[i] {
+                assert_eq!(w.diag(i), 1.0, "dead row {i} must be identity");
+                assert!(w.row_weights(i).iter().all(|&v| v == 0.0));
+                continue;
+            }
+            let row_sum: f64 = w.diag(i) + w.row_weights(i).iter().sum::<f64>();
+            assert!((row_sum - 1.0).abs() < 1e-12, "live row {i} sums to 1");
+            for (&j, &wij) in w.neighbors(i).iter().zip(w.row_weights(i)) {
+                if alive[j] {
+                    assert_eq!(
+                        wij.to_bits(),
+                        w.weight(j, i).unwrap().to_bits(),
+                        "live block must stay symmetric"
+                    );
+                    assert!(wij > 0.0);
+                } else {
+                    assert_eq!(wij, 0.0, "dead column {j} must not mix into {i}");
+                }
+            }
+        }
+        // Lazy variant keeps the same live structure with halved coupling.
+        let mut lw = metropolis_csr(&g);
+        lw.reweight_metropolis_live(&alive, true, &mut scratch);
+        for i in (0..g.n()).filter(|&i| alive[i]) {
+            assert_eq!(
+                lw.weight(i, 1).map(f64::to_bits),
+                w.weight(i, 1).map(|v| (0.5 * v).to_bits())
+            );
+        }
     }
 }

@@ -4,12 +4,15 @@
 
 use super::{EngineKind, RunConfig};
 use crate::algorithms::{Fleet, ObjectiveRef, TiledCtx};
+use crate::compress::PayloadPool;
+use crate::consensus::{lazy_metropolis_csr, metropolis_csr, CsrWeights};
 use crate::engine::{dim, pool, sequential, threaded, RoundTelemetry, Snapshot};
 use crate::linalg::vecops;
 use crate::metrics::{RoundRecord, RunMetrics};
-use crate::network::Bus;
+use crate::network::{Bus, ChurnCounters, ChurnEventKind, RejoinPolicy, TopologySchedule};
 use crate::rng::Xoshiro256pp;
 use crate::topology::Graph;
+use std::sync::Arc;
 
 /// Everything a run produces.
 #[derive(Debug, Clone)]
@@ -45,6 +48,12 @@ pub struct RunOutput {
     pub fresh_payload_cells: usize,
     /// Simulated network seconds elapsed.
     pub sim_seconds: f64,
+    /// Churn-plane fault counters: epochs executed, crashes, rejoins,
+    /// link flaps, copies dropped to dead/link-down destinations,
+    /// straggler-delayed broadcasts, and in-flight messages retired into
+    /// the payload-reclaim hook at epoch boundaries. All zero for
+    /// churn-free runs.
+    pub churn: ChurnCounters,
 }
 
 /// Derive per-node RNG streams from a master seed: stream `i` is the
@@ -74,16 +83,34 @@ struct MetricHelper<'a> {
     saturations_cum: usize,
     grad_acc: Vec<f64>,
     grad_buf: Vec<f64>,
+    /// Churn-plane liveness mask. Empty (the default) keeps the legacy
+    /// unmasked reductions — bit-identical to the pre-churn driver. Under
+    /// churn the driver refreshes this at every epoch boundary and all
+    /// derived metrics (x̄, consensus error, objective, gradient) reduce
+    /// over the live nodes only, with an `n_live` divisor.
+    alive: Vec<bool>,
 }
 
 impl<'a> MetricHelper<'a> {
     fn new(objectives: &'a [ObjectiveRef], cfg: &'a RunConfig) -> Self {
         let p = objectives[0].dim();
-        Self { objectives, cfg, saturations_cum: 0, grad_acc: vec![0.0; p], grad_buf: vec![0.0; p] }
+        Self {
+            objectives,
+            cfg,
+            saturations_cum: 0,
+            grad_acc: vec![0.0; p],
+            grad_buf: vec![0.0; p],
+            alive: Vec::new(),
+        }
     }
 
     fn should_record(&self, telem: &RoundTelemetry, total_rounds: usize) -> bool {
         round_is_recorded(self.cfg, telem.round, total_rounds)
+    }
+
+    #[inline]
+    fn is_live(&self, i: usize) -> bool {
+        self.alive.is_empty() || self.alive[i]
     }
 
     /// Compute the derived metrics at the mean iterate.
@@ -97,27 +124,39 @@ impl<'a> MetricHelper<'a> {
         self.saturations_cum += telem.saturations;
         let n = states.len();
         let p = states[0].len();
-        // x̄
+        let n_live = if self.alive.is_empty() {
+            n
+        } else {
+            self.alive.iter().filter(|&&a| a).count()
+        };
+        // x̄ over the live fleet
         let mut xbar = vec![0.0; p];
-        for s in states {
-            vecops::axpy(1.0, s, &mut xbar);
+        for (i, s) in states.iter().enumerate() {
+            if self.is_live(i) {
+                vecops::axpy(1.0, s, &mut xbar);
+            }
         }
-        vecops::scale(&mut xbar, 1.0 / n as f64);
-        // consensus error ‖x − x̄‖
+        vecops::scale(&mut xbar, 1.0 / n_live as f64);
+        // consensus error ‖x − x̄‖ over the live fleet
         let consensus_error = states
             .iter()
-            .map(|s| s.iter().zip(xbar.iter()).map(|(a, b)| (a - b) * (a - b)).sum::<f64>())
+            .enumerate()
+            .filter(|&(i, _)| self.is_live(i))
+            .map(|(_, s)| s.iter().zip(xbar.iter()).map(|(a, b)| (a - b) * (a - b)).sum::<f64>())
             .sum::<f64>()
             .sqrt();
-        // objective and mean-grad norm at x̄
+        // objective and mean-grad norm at x̄, live objectives only
         let mut objective = 0.0;
         vecops::fill(&mut self.grad_acc, 0.0);
-        for obj in self.objectives {
+        for (i, obj) in self.objectives.iter().enumerate() {
+            if !self.is_live(i) {
+                continue;
+            }
             objective += obj.value(&xbar);
             obj.grad_into(&xbar, &mut self.grad_buf);
             vecops::axpy(1.0, &self.grad_buf, &mut self.grad_acc);
         }
-        let grad_norm = vecops::norm2(&self.grad_acc) / n as f64;
+        let grad_norm = vecops::norm2(&self.grad_acc) / n_live as f64;
         RoundRecord {
             round: telem.round,
             grad_iterations: grad_steps,
@@ -141,6 +180,47 @@ pub fn run_fleet(
     fleet: Fleet,
     cfg: &RunConfig,
 ) -> RunOutput {
+    run_fleet_churn(graph, objectives, fleet, cfg, None)
+}
+
+/// [`run_fleet`] with an optional churn plane. With `Some(schedule)`
+/// the run executes as a sequence of epoch-long engine segments; at
+/// every epoch boundary the driver (single-threaded, engine-agnostic):
+///
+/// 1. applies the schedule's scripted joins/leaves in order and
+///    advances the Markov link-flap chain one step per edge,
+/// 2. pushes the liveness/link state into the bus fault filter and
+///    drains newly dead nodes' inbox and in-flight traffic through the
+///    payload-reclaim hook (counted in
+///    [`ChurnCounters::retired_in_flight`], never leaked),
+/// 3. rewrites the Metropolis(-Hastings) weights of the live subgraph
+///    *in place* over a two-buffer [`CsrWeights`] bank
+///    ([`CsrWeights::reweight_metropolis_live`]; under churn the
+///    schedule's Metropolis family replaces the scenario's weight spec)
+///    and rebinds every node via
+///    [`crate::algorithms::NodeLogic::rebind_weights`],
+/// 4. resets rejoining nodes' mirror channels on both ends
+///    ([`crate::state::StatePlane::mask_node`]), cold or warm per
+///    [`RejoinPolicy`].
+///
+/// Round indices stay absolute across segments, so loss rolls,
+/// straggler draws, and ADC-DGD's `k^γ` amplification are one
+/// continuous deterministic trace — identical on every engine. Under
+/// churn, metrics reduce over live nodes only and
+/// `grad_iterations` reports the round index (uniform across engines).
+/// Node crashes only affect the consensus weights through liveness;
+/// link flaps are transient transport loss and do not trigger
+/// reweighting.
+pub fn run_fleet_churn(
+    graph: &Graph,
+    objectives: &[ObjectiveRef],
+    fleet: Fleet,
+    cfg: &RunConfig,
+    churn: Option<&TopologySchedule>,
+) -> RunOutput {
+    if let Some(sched) = churn {
+        return run_fleet_epochs(graph, objectives, fleet, cfg, sched);
+    }
     let Fleet { mut plane, mut nodes } = fleet;
     let n = graph.num_nodes();
     assert_eq!(nodes.len(), n);
@@ -303,6 +383,319 @@ pub fn run_fleet(
         fresh_payload_cells: stats.fresh_payload_cells,
         sim_seconds: bus.sim_clock(),
         metrics,
+        churn: ChurnCounters::default(),
+    }
+}
+
+/// The churn execution path: epoch-long engine segments with
+/// incremental relayout between them (see [`run_fleet_churn`]).
+fn run_fleet_epochs(
+    graph: &Graph,
+    objectives: &[ObjectiveRef],
+    fleet: Fleet,
+    cfg: &RunConfig,
+    sched: &TopologySchedule,
+) -> RunOutput {
+    let Fleet { mut plane, mut nodes } = fleet;
+    let n = graph.num_nodes();
+    assert_eq!(nodes.len(), n);
+    assert_eq!(plane.n(), n);
+    assert_eq!(objectives.len(), n);
+    sched.validate(n).expect("invalid churn schedule");
+    let lazy = sched.lazy_weights;
+    let churn_seed = cfg.seed ^ 0xC0C0;
+
+    let mut rngs = node_rngs(cfg.seed, n);
+    let mut bus = Bus::new(graph, cfg.link, cfg.seed ^ 0xB0B);
+    bus.set_measure_wire(cfg.measure_wire);
+    bus.enable_faults(churn_seed);
+    for &(node, dist) in &sched.stragglers {
+        bus.set_straggler(node, Some(dist));
+    }
+
+    let mut metrics = RunMetrics::default();
+    let mut helper = MetricHelper::new(objectives, cfg);
+    let total_rounds = cfg.iterations;
+
+    // Two-buffer weight bank: the inactive buffer is reweighted in
+    // place at each boundary (`Arc::get_mut`), then every node rebinds
+    // to it. Exactly two CSR allocations for the whole run; all later
+    // relayouts are O(E) in-place rewrites.
+    let build = || {
+        Arc::new(if lazy { lazy_metropolis_csr(graph) } else { metropolis_csr(graph) })
+    };
+    let mut current: Arc<CsrWeights> = build();
+    let mut spare: Arc<CsrWeights> = build();
+    let mut live_deg: Vec<usize> = Vec::new();
+
+    let mut alive = vec![true; n];
+    let mut edge_up = vec![true; graph.num_edges()];
+    let mut counters = ChurnCounters::default();
+    // Boundary-time salvage pool for retired in-flight payload cells
+    // (the PR-4 reclaim hook): orphans drain here instead of leaking.
+    let mut boundary_pool = PayloadPool::new();
+
+    let epoch_len = sched.epoch_len.max(1);
+    let mut first = 0usize;
+    let mut fresh_cells = 0usize;
+    let mut completed = 0usize;
+    let mut e = 0usize;
+    loop {
+        // ---- Boundary e: applied before epoch e's first round. ----
+        counters.epochs += 1;
+        let mut newly_dead: Vec<usize> = Vec::new();
+        for ev in sched.events_at(e) {
+            match ev.kind {
+                ChurnEventKind::Leave => {
+                    if alive[ev.node] {
+                        alive[ev.node] = false;
+                        counters.crashes += 1;
+                        newly_dead.push(ev.node);
+                    }
+                }
+                ChurnEventKind::Join => {
+                    if !alive[ev.node] {
+                        alive[ev.node] = true;
+                        counters.rejoins += 1;
+                        // Reset the rejoiner's compression channel on
+                        // both ends so mirrors restart from one origin.
+                        plane.mask_node(ev.node, sched.rejoin == RejoinPolicy::Cold);
+                        for &u in graph.neighbors(ev.node) {
+                            let slot = graph
+                                .neighbors(u)
+                                .binary_search(&ev.node)
+                                .expect("adjacency is symmetric");
+                            plane.zero_mirror_slot(u, slot);
+                        }
+                        // Stale pre-crash deliveries must not be read.
+                        bus.clear_inbox(ev.node);
+                    }
+                }
+            }
+        }
+        assert!(alive.iter().any(|&a| a), "churn schedule killed every node");
+        // Markov link flaps: one chain step per edge per boundary after
+        // the pristine epoch 0. Flaps are transport faults only — they
+        // never trigger reweighting.
+        if let Some(f) = sched.flap {
+            if e > 0 {
+                for (ei, &(u, v)) in graph.edges().iter().enumerate() {
+                    let now = f.step(churn_seed, e, ei, edge_up[ei]);
+                    if now != edge_up[ei] {
+                        edge_up[ei] = now;
+                        counters.link_flaps += 1;
+                        bus.set_edge_up(u, v, now);
+                    }
+                }
+            }
+        }
+        for (i, &a) in alive.iter().enumerate() {
+            bus.set_alive(i, a);
+        }
+        // Hygiene: drain newly dead nodes' mailboxes and their in-flight
+        // traffic through the payload-reclaim hook — counted, not leaked.
+        for &v in &newly_dead {
+            bus.clear_inbox(v);
+            bus.reclaim_retired(&mut boundary_pool);
+        }
+        if !newly_dead.is_empty() {
+            counters.retired_in_flight += bus.retire_dead_in_flight();
+            bus.reclaim_retired(&mut boundary_pool);
+        }
+        // Incremental relayout: rewrite the inactive weight buffer for
+        // the live subgraph and rebind the fleet.
+        std::mem::swap(&mut current, &mut spare);
+        Arc::get_mut(&mut current)
+            .expect("weight bank invariant: the inactive buffer is unshared")
+            .reweight_metropolis_live(&alive, lazy, &mut live_deg);
+        for node in nodes.iter_mut() {
+            node.rebind_weights(&current);
+        }
+        helper.alive.clear();
+        helper.alive.extend_from_slice(&alive);
+
+        // ---- Epoch e's segment: absolute rounds first+1 ..= first+len. ----
+        let len = epoch_len.min(total_rounds - first);
+        let observer_grad_tol = cfg.grad_tol;
+        let record_every = cfg.record_every.max(1);
+        let stats = match cfg.engine {
+            EngineKind::Sequential => sequential::run_segment(
+                &mut nodes,
+                &mut plane,
+                &mut rngs,
+                &mut bus,
+                first,
+                len,
+                Some(&alive),
+                |telem, _ns, pl, b| {
+                    if helper.should_record(&telem, total_rounds) {
+                        let states: Vec<&[f64]> = (0..n).map(|i| pl.x_row(i)).collect();
+                        let rec = helper.record(&telem, &states, telem.round, b);
+                        let stop =
+                            observer_grad_tol.map(|t| rec.grad_norm <= t).unwrap_or(false);
+                        if telem.round % record_every == 0
+                            || telem.round == total_rounds
+                            || stop
+                        {
+                            metrics.push(rec);
+                        }
+                        return !stop;
+                    }
+                    true
+                },
+            ),
+            EngineKind::Threaded => {
+                let (rn, rb, stats) = threaded::run_segment(
+                    nodes,
+                    &mut plane,
+                    &mut rngs,
+                    bus,
+                    first,
+                    len,
+                    Some(&alive),
+                    |telem, snap, b| {
+                        if helper.should_record(&telem, total_rounds) {
+                            let states: Vec<&[f64]> =
+                                snap.states.iter().map(|s| s.as_slice()).collect();
+                            let rec = helper.record(&telem, &states, telem.round, b);
+                            let stop =
+                                observer_grad_tol.map(|t| rec.grad_norm <= t).unwrap_or(false);
+                            if telem.round % record_every == 0
+                                || telem.round == total_rounds
+                                || stop
+                            {
+                                metrics.push(rec);
+                            }
+                            return !stop;
+                        }
+                        true
+                    },
+                );
+                nodes = rn;
+                bus = rb;
+                stats
+            }
+            EngineKind::Pool { workers } => {
+                let want_cfg = *cfg;
+                let want =
+                    move |round: usize| round_is_recorded(&want_cfg, round, total_rounds);
+                let (rn, rb, stats) = pool::run_segment(
+                    nodes,
+                    &mut plane,
+                    &mut rngs,
+                    bus,
+                    first,
+                    len,
+                    Some(&alive),
+                    workers,
+                    want,
+                    |telem, snap, b| {
+                        let states: Vec<&[f64]> =
+                            snap.states.iter().map(|s| s.as_slice()).collect();
+                        let rec = helper.record(&telem, &states, telem.round, b);
+                        let stop =
+                            observer_grad_tol.map(|t| rec.grad_norm <= t).unwrap_or(false);
+                        if telem.round % record_every == 0
+                            || telem.round == total_rounds
+                            || stop
+                        {
+                            metrics.push(rec);
+                        }
+                        !stop
+                    },
+                );
+                nodes = rn;
+                bus = rb;
+                stats
+            }
+            EngineKind::Dim { workers, tiles } => {
+                let want_cfg = *cfg;
+                let want =
+                    move |round: usize| round_is_recorded(&want_cfg, round, total_rounds);
+                let observer = |telem: RoundTelemetry, snap: &Snapshot, b: &Bus| -> bool {
+                    let states: Vec<&[f64]> =
+                        snap.states.iter().map(|s| s.as_slice()).collect();
+                    let rec = helper.record(&telem, &states, telem.round, b);
+                    let stop = observer_grad_tol.map(|t| rec.grad_norm <= t).unwrap_or(false);
+                    if telem.round % record_every == 0 || telem.round == total_rounds || stop
+                    {
+                        metrics.push(rec);
+                    }
+                    !stop
+                };
+                // Contexts are re-collected per segment: each TiledCtx
+                // carries the epoch's rebound weights handle.
+                let ctxs: Option<Vec<TiledCtx>> =
+                    nodes.iter().map(|nl| nl.tiled_ctx()).collect();
+                let tileable = plane.has_mirrors()
+                    && ctxs.as_ref().is_some_and(|cs| {
+                        cs.iter().all(|c| {
+                            c.compressor.tileable() && c.objective.supports_range_grad()
+                        })
+                    });
+                match (tileable, ctxs) {
+                    (true, Some(ctxs)) => {
+                        let (rb, stats) = dim::run_segment(
+                            ctxs,
+                            &mut plane,
+                            &mut rngs,
+                            bus,
+                            first,
+                            len,
+                            Some(&alive),
+                            workers,
+                            tiles.max(1),
+                            want,
+                            observer,
+                        );
+                        bus = rb;
+                        stats
+                    }
+                    _ => {
+                        let (rn, rb, stats) = pool::run_segment(
+                            nodes,
+                            &mut plane,
+                            &mut rngs,
+                            bus,
+                            first,
+                            len,
+                            Some(&alive),
+                            workers,
+                            want,
+                            observer,
+                        );
+                        nodes = rn;
+                        bus = rb;
+                        stats
+                    }
+                }
+            }
+        };
+        fresh_cells += stats.fresh_payload_cells;
+        completed = stats.completed;
+        let stopped_early = stats.completed < first + len;
+        first += len;
+        e += 1;
+        if stopped_early || first >= total_rounds {
+            break;
+        }
+    }
+
+    let (dropped_dead, dropped_link_down, straggler_delayed) = bus.fault_counts();
+    counters.dropped_dead = dropped_dead;
+    counters.dropped_link_down = dropped_link_down;
+    counters.straggler_delayed = straggler_delayed;
+    RunOutput {
+        final_states: plane.states(),
+        rounds_completed: completed,
+        total_bytes: bus.total_bytes(),
+        measured_wire_bytes: bus.total_measured_bytes(),
+        dropped_messages: bus.total_dropped(),
+        superseded_messages: bus.total_superseded(),
+        fresh_payload_cells: fresh_cells,
+        sim_seconds: bus.sim_clock(),
+        metrics,
+        churn: counters,
     }
 }
 

@@ -8,7 +8,7 @@ mod driver;
 mod scenario;
 
 pub use config::{EngineKind, RunConfig};
-pub use driver::{run_fleet, run_trials, RunOutput};
+pub use driver::{run_fleet, run_fleet_churn, run_trials, RunOutput};
 pub use scenario::{
     run_scenario, CompressorSpec, ObjectiveSpec, PreparedScenario, ScenarioSpec, TopologySpec,
     WeightSpec,

@@ -9,10 +9,11 @@
 //! exotic objectives, user compressors) ride along through the `Custom`
 //! escape hatches.
 
-use super::{run_fleet, RunConfig, RunOutput};
+use super::{run_fleet_churn, RunConfig, RunOutput};
 use crate::algorithms::{AlgorithmKind, CompressorRef, ObjectiveRef};
 use crate::compress;
 use crate::consensus::{self, ConsensusMatrix, Weights};
+use crate::network::TopologySchedule;
 use crate::rng::Xoshiro256pp;
 use crate::topology::{self, Graph};
 use std::fmt;
@@ -426,6 +427,10 @@ pub struct ScenarioSpec {
     pub config: RunConfig,
     /// Optional shared initial iterate (e.g. pretrained parameters).
     pub init: Option<Vec<f64>>,
+    /// Optional churn plane: epoch-versioned topology schedule (node
+    /// crashes/rejoins, Markov link flaps, stragglers). `None` runs the
+    /// churn-free pathway, bit-identical to earlier releases.
+    pub churn: Option<TopologySchedule>,
 }
 
 impl ScenarioSpec {
@@ -440,6 +445,7 @@ impl ScenarioSpec {
             compressor: CompressorSpec::None,
             config: RunConfig::default(),
             init: None,
+            churn: None,
         }
     }
 
@@ -485,6 +491,15 @@ impl ScenarioSpec {
         self
     }
 
+    /// Attach a churn schedule (see
+    /// [`crate::network::TopologySchedule`]). The run then executes as a
+    /// sequence of epoch-long engine segments with incremental relayout
+    /// at the boundaries.
+    pub fn with_churn(mut self, churn: TopologySchedule) -> Self {
+        self.churn = Some(churn);
+        self
+    }
+
     /// Materialize the scenario: build graph, weights, objectives, and
     /// compressor once so repeated (multi-trial, multi-engine) runs skip
     /// the setup cost.
@@ -501,6 +516,9 @@ impl ScenarioSpec {
             "algorithm `{}` requires a compressor spec",
             self.algorithm.name()
         );
+        if let Some(sched) = &self.churn {
+            sched.validate(n).expect("churn schedule does not fit the topology");
+        }
         PreparedScenario {
             algorithm: self.algorithm,
             graph,
@@ -509,6 +527,7 @@ impl ScenarioSpec {
             compressor,
             config: self.config,
             init: self.init.clone(),
+            churn: self.churn.clone(),
         }
     }
 }
@@ -523,6 +542,7 @@ pub struct PreparedScenario {
     compressor: Option<CompressorRef>,
     config: RunConfig,
     init: Option<Vec<f64>>,
+    churn: Option<TopologySchedule>,
 }
 
 impl PreparedScenario {
@@ -570,7 +590,7 @@ impl PreparedScenario {
             cfg.step_size,
             self.init.as_deref(),
         );
-        run_fleet(&self.graph, &self.objectives, fleet, cfg)
+        run_fleet_churn(&self.graph, &self.objectives, fleet, cfg, self.churn.as_ref())
     }
 }
 
@@ -749,6 +769,7 @@ mod tests {
             )),
             config: cfg,
             init: None,
+            churn: None,
         });
         assert_eq!(named.final_states, custom.final_states);
         assert_eq!(named.total_bytes, custom.total_bytes);
@@ -827,6 +848,42 @@ mod tests {
         assert_eq!(out.rounds_completed, 400);
         let gn = *out.metrics.grad_norm.last().unwrap();
         assert!(gn.is_finite() && gn < 10.0, "grad norm {gn}");
+    }
+
+    /// The churn plane rides the declarative pathway: a scripted
+    /// leave/rejoin schedule with a straggler runs to completion, counts
+    /// its faults, and stays reproducible under the same seed.
+    #[test]
+    fn churned_scenario_runs_and_counts_faults() {
+        use crate::network::{DelayDist, TopologySchedule};
+        let sched = TopologySchedule::new(50)
+            .leave(1, 2)
+            .leave(2, 5)
+            .join(4, 2)
+            .with_straggler(1, DelayDist::Fixed(2));
+        let spec = ScenarioSpec::new(
+            AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+            TopologySpec::Ring(8),
+            ObjectiveSpec::RandomCircle { seed: 7 },
+        )
+        .with_compressor(CompressorSpec::TernGrad)
+        .with_config(RunConfig {
+            iterations: 300,
+            step_size: StepSize::Constant(0.02),
+            record_every: 100,
+            ..RunConfig::default()
+        })
+        .with_churn(sched);
+        let a = run_scenario(&spec);
+        assert_eq!(a.rounds_completed, 300);
+        assert_eq!(a.churn.epochs, 6);
+        assert_eq!(a.churn.crashes, 2);
+        assert_eq!(a.churn.rejoins, 1);
+        assert!(a.churn.dropped_dead > 0, "dead destinations must eat copies");
+        assert!(a.churn.straggler_delayed > 0, "the straggler must fire");
+        assert!(a.metrics.grad_norm.last().unwrap().is_finite());
+        let b = run_scenario(&spec);
+        assert_eq!(a.final_states, b.final_states, "churn must be deterministic");
     }
 
     #[test]

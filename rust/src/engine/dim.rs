@@ -138,9 +138,10 @@ struct StageInfo {
 unsafe impl Send for StageInfo {}
 
 /// Per-node mutable round state. Exclusive in phases B/D/D2, shared
-/// (payload + staging reads) in E1.
-struct NodeStage {
-    rng: Xoshiro256pp,
+/// (payload + staging reads) in E1. The RNG is borrowed from the
+/// caller's slice so node streams persist across churn epoch segments.
+struct NodeStage<'a> {
+    rng: &'a mut Xoshiro256pp,
     pool: PayloadPool,
     /// This round's sealed broadcast payload (kept one phase past the
     /// broadcast so E1 can integrate the own mirror from the *same
@@ -183,9 +184,38 @@ fn claim(counter: &AtomicUsize, units: usize, mut work: impl FnMut(usize)) {
 pub fn run<F, P>(
     ctxs: Vec<TiledCtx>,
     plane: &mut StatePlane,
-    rngs: Vec<Xoshiro256pp>,
+    mut rngs: Vec<Xoshiro256pp>,
     bus: Bus,
     rounds: usize,
+    workers: usize,
+    tiles: usize,
+    want_observe: P,
+    observer: F,
+) -> (Bus, EngineStats)
+where
+    F: FnMut(RoundTelemetry, &Snapshot, &Bus) -> bool,
+    P: Fn(usize) -> bool,
+{
+    run_segment(ctxs, plane, &mut rngs, bus, 0, rounds, None, workers, tiles, want_observe, observer)
+}
+
+/// Churn-aware segment variant of [`run`]: absolute rounds
+/// `first_round + 1 ..= first_round + rounds` (so `k^γ` amplification
+/// and round-keyed loss/straggler hashes continue seamlessly across
+/// epoch boundaries), RNG streams borrowed so they persist between
+/// segments, and dead nodes' work units skipped in every phase — no
+/// stage, no broadcast, no RNG draw, no mirror integration; their
+/// telemetry slots stay zero and their frozen rows still snapshot.
+/// `alive = None` is the fault-free path, bit-identical to [`run`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_segment<F, P>(
+    ctxs: Vec<TiledCtx>,
+    plane: &mut StatePlane,
+    rngs: &mut [Xoshiro256pp],
+    bus: Bus,
+    first_round: usize,
+    rounds: usize,
+    alive: Option<&[bool]>,
     workers: usize,
     tiles: usize,
     want_observe: P,
@@ -201,12 +231,15 @@ where
     assert_eq!(bus.n(), n);
     assert!(plane.has_mirrors(), "the ADC-DGD template needs mirror arenas");
     assert!(tiles > 0, "need at least one tile");
+    if let Some(a) = alive {
+        assert_eq!(a.len(), n);
+    }
     for c in &ctxs {
         assert!(c.compressor.tileable(), "dim engine needs a tileable compressor");
         assert!(c.objective.supports_range_grad(), "dim engine needs a separable objective");
     }
     if rounds == 0 {
-        return (bus, EngineStats::default());
+        return (bus, EngineStats { completed: first_round, fresh_payload_cells: 0 });
     }
 
     let p = plane.p();
@@ -220,8 +253,8 @@ where
     let cols = plane.node_columns();
     let bus = Mutex::new(bus);
 
-    let stages: Vec<SyncCell<NodeStage>> = rngs
-        .into_iter()
+    let stages: Vec<SyncCell<NodeStage<'_>>> = rngs
+        .iter_mut()
         .enumerate()
         .map(|(i, rng)| {
             SyncCell::new(NodeStage {
@@ -268,7 +301,7 @@ where
     // One gate after every phase plus the observe gate.
     let gates: Vec<Barrier> = (0..NPHASES + 1).map(|_| Barrier::new(nw + 1)).collect();
     let stop = AtomicBool::new(false);
-    let mut completed = 0usize;
+    let mut completed = first_round;
 
     std::thread::scope(|scope| {
         for _ in 0..nw {
@@ -281,12 +314,18 @@ where
                 // Per-worker wire buffer: serialization for measured-byte
                 // metering runs outside the bus lock.
                 let mut wire = WireBuf::new();
-                let mut k = 1usize;
+                // Churn mask: dead nodes' units are claimed (keeping the
+                // counters uniform) but do no work and draw no RNG.
+                let is_alive = |i: usize| alive.map_or(true, |a| a[i]);
+                let mut k = first_round + 1;
                 loop {
                     let par = k & 1;
                     // Phase A: amplified differential + partial ‖·‖∞.
                     claim(&claims[par][0], units, |u| {
                         let (i, ti) = (u / t, u % t);
+                        if !is_alive(i) {
+                            return;
+                        }
                         let (lo, hi) = (bounds[ti], bounds[ti + 1]);
                         let kg = (k as f64).powf(ctxs[i].gamma);
                         // SAFETY: this worker owns (i, ti) for this
@@ -303,6 +342,9 @@ where
                     gates[0].wait();
                     // Phase B: serial reductions + arena staging.
                     claim(&claims[par][1], n, |i| {
+                        if !is_alive(i) {
+                            return;
+                        }
                         // SAFETY: one claimant per node; scratch row is
                         // read-only this phase; the partials were sealed
                         // by the phase-A gate.
@@ -319,7 +361,7 @@ where
                             let z = cols[i].scratch_row();
                             let staged = ctxs[i]
                                 .compressor
-                                .stage_into(z, &mut st.rng, st.pool.buf_mut())
+                                .stage_into(z, &mut *st.rng, st.pool.buf_mut())
                                 .expect("compressor advertised tileable()");
                             let buf = st.pool.buf_mut();
                             let arena = match staged.cref.kind {
@@ -336,6 +378,9 @@ where
                     // Phase C: quantize tiles into disjoint arena slices.
                     claim(&claims[par][2], units, |u| {
                         let (i, ti) = (u / t, u % t);
+                        if !is_alive(i) {
+                            return;
+                        }
                         let (lo, hi) = (bounds[ti], bounds[ti + 1]);
                         // SAFETY: info/scratch/rand are read-only this
                         // phase; the arena slice below is this tile's
@@ -377,6 +422,9 @@ where
                     // Phase D: seal + serialize (outside the lock) +
                     // broadcast + telemetry.
                     claim(&claims[par][3], n, |i| {
+                        if !is_alive(i) {
+                            return;
+                        }
                         // SAFETY: one claimant per node; the sat partials
                         // were sealed by the phase-C gate.
                         unsafe {
@@ -408,6 +456,9 @@ where
                     // both sides hold the bus lock for their touch.)
                     // Phase D2: move the node's inbox slots off the bus.
                     claim(&claims[par][4], n, |i| {
+                        if !is_alive(i) {
+                            return;
+                        }
                         // SAFETY: one claimant per node.
                         unsafe {
                             let st = stages[i].get_mut();
@@ -420,6 +471,9 @@ where
                     // phase lands in a tile-disjoint mirror range.
                     claim(&claims[par][5], units, |u| {
                         let (i, ti) = (u / t, u % t);
+                        if !is_alive(i) {
+                            return;
+                        }
                         let (lo, hi) = (bounds[ti], bounds[ti + 1]);
                         let gamma = ctxs[i].gamma;
                         // SAFETY: stage is shared-read (sealed by the D2
@@ -458,6 +512,9 @@ where
                     // tile-disjoint.
                     claim(&claims[par][6], units, |u| {
                         let (i, ti) = (u / t, u % t);
+                        if !is_alive(i) {
+                            return;
+                        }
                         let (lo, hi) = (bounds[ti], bounds[ti + 1]);
                         let ctx = &ctxs[i];
                         let alpha = ctx.step.at(k);
@@ -501,7 +558,7 @@ where
             states: (0..n).map(|_| Vec::new()).collect(),
             grad_steps: vec![0; n],
         };
-        for k in 1..=rounds {
+        for k in first_round + 1..=first_round + rounds {
             let par = k & 1;
             gates[0].wait();
             gates[1].wait();
@@ -543,7 +600,7 @@ where
             } else {
                 true
             };
-            if !keep_going || k == rounds {
+            if !keep_going || k == first_round + rounds {
                 stop.store(true, Ordering::SeqCst);
             }
             // Reset the other counter bank for round k+1 while every

@@ -53,11 +53,37 @@ pub fn effective_workers(workers: usize, n: usize) -> usize {
 /// run-level pool-recycling health signal).
 #[allow(clippy::type_complexity, clippy::too_many_arguments)]
 pub fn run<F, P>(
-    mut nodes: Vec<Box<dyn NodeLogic>>,
+    nodes: Vec<Box<dyn NodeLogic>>,
     plane: &mut StatePlane,
     mut rngs: Vec<Xoshiro256pp>,
     bus: Bus,
     rounds: usize,
+    workers: usize,
+    want_observe: P,
+    observer: F,
+) -> (Vec<Box<dyn NodeLogic>>, Bus, EngineStats)
+where
+    F: FnMut(RoundTelemetry, &Snapshot, &Bus) -> bool,
+    P: Fn(usize) -> bool + Sync,
+{
+    run_segment(nodes, plane, &mut rngs, bus, 0, rounds, None, workers, want_observe, observer)
+}
+
+/// Churn-aware segment variant of [`run`]: absolute rounds
+/// `first_round + 1 ..= first_round + rounds`, RNG streams borrowed in
+/// place so they persist across epoch segments, and dead nodes skipped
+/// inside each shard's row loops (no message, no RNG draw, no consume;
+/// their frozen rows still snapshot). `alive = None` is the fault-free
+/// path, bit-identical to [`run`].
+#[allow(clippy::type_complexity, clippy::too_many_arguments)]
+pub fn run_segment<F, P>(
+    mut nodes: Vec<Box<dyn NodeLogic>>,
+    plane: &mut StatePlane,
+    rngs: &mut [Xoshiro256pp],
+    bus: Bus,
+    first_round: usize,
+    rounds: usize,
+    alive: Option<&[bool]>,
     workers: usize,
     want_observe: P,
     mut observer: F,
@@ -70,6 +96,9 @@ where
     assert_eq!(rngs.len(), n);
     assert_eq!(plane.n(), n);
     assert_eq!(bus.n(), n);
+    if let Some(a) = alive {
+        assert_eq!(a.len(), n);
+    }
     if n == 0 {
         return (nodes, bus, EngineStats::default());
     }
@@ -77,9 +106,9 @@ where
     // Contiguous shards: worker w owns nodes [w*chunk, (w+1)*chunk).
     let chunk = n.div_ceil(effective_workers(workers, n));
     let nw = n.div_ceil(chunk);
-    let mut shards: Vec<Vec<(usize, Box<dyn NodeLogic>, Xoshiro256pp)>> =
+    let mut shards: Vec<Vec<(usize, Box<dyn NodeLogic>, &mut Xoshiro256pp)>> =
         (0..nw).map(|_| Vec::with_capacity(chunk)).collect();
-    for (i, (node, rng)) in nodes.drain(..).zip(rngs.drain(..)).enumerate() {
+    for (i, (node, rng)) in nodes.drain(..).zip(rngs.iter_mut()).enumerate() {
         shards[i / chunk].push((i, node, rng));
     }
     // Matching plane shards at the same boundaries.
@@ -98,7 +127,7 @@ where
     let after_consume = Barrier::new(nw + 1);
     let after_observe = Barrier::new(nw + 1);
     let stop = AtomicBool::new(false);
-    let completed = AtomicUsize::new(0);
+    let completed = AtomicUsize::new(first_round);
 
     // Per-worker telemetry partials and per-node state slots (one writer
     // per slot, then barrier).
@@ -107,7 +136,7 @@ where
     let state_slots: Vec<Mutex<(Vec<f64>, usize)>> =
         (0..n).map(|_| Mutex::new((Vec::new(), 0))).collect();
 
-    let mut out_shards: Vec<(Vec<(usize, Box<dyn NodeLogic>, Xoshiro256pp)>, usize)> = Vec::new();
+    let mut out_shards: Vec<(Vec<(usize, Box<dyn NodeLogic>)>, usize)> = Vec::new();
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(nw);
         let iter = shards.drain(..).zip(plane_shards);
@@ -134,13 +163,19 @@ where
                 let last = first + shard.len();
                 let lo = layout.offset(first);
                 let mut staging: Vec<MailSlot> = vec![None; layout.offset(last) - lo];
-                for k in 1..=rounds {
+                // Churn mask: dead shard nodes do no work and draw no
+                // randomness (frozen streams for warm rejoin).
+                let is_alive = |i: usize| alive.map_or(true, |a| a[i]);
+                for k in first_round + 1..=first_round + rounds {
                     // Phase 1: emit every shard node, then broadcast the
                     // whole shard under one bus lock.
                     let mut max_tx = 0.0f64;
                     let mut saturations = 0usize;
                     let mut max_payload = 0usize;
                     for (i, node, rng) in shard.iter_mut() {
+                        if !is_alive(*i) {
+                            continue;
+                        }
                         let out = {
                             let mut rows = pshard.rows(*i);
                             node.make_message(k, &mut rows, rng, &mut pool)
@@ -174,10 +209,10 @@ where
                         b.take_inbox_range(first, last, k, &mut staging);
                     }
                     for (i, node, rng) in shard.iter_mut() {
-                        let (s0, s1) =
-                            (layout.offset(*i) - lo, layout.offset(*i + 1) - lo);
-                        let inbox = InboxView::new(layout.senders(*i), &staging[s0..s1]);
-                        {
+                        if is_alive(*i) {
+                            let (s0, s1) =
+                                (layout.offset(*i) - lo, layout.offset(*i + 1) - lo);
+                            let inbox = InboxView::new(layout.senders(*i), &staging[s0..s1]);
                             let mut rows = pshard.rows(*i);
                             node.consume(k, &inbox, &mut rows, rng);
                         }
@@ -195,12 +230,14 @@ where
                         break;
                     }
                 }
-                (shard, pool.fresh_cells())
+                let owned: Vec<(usize, Box<dyn NodeLogic>)> =
+                    shard.into_iter().map(|(i, node, _rng)| (i, node)).collect();
+                (owned, pool.fresh_cells())
             }));
         }
 
         // Coordinating thread.
-        for k in 1..=rounds {
+        for k in first_round + 1..=first_round + rounds {
             after_send.wait();
             let mut max_tx = 0.0f64;
             let mut saturations = 0usize;
@@ -230,7 +267,7 @@ where
             } else {
                 true
             };
-            if !keep_going || k == rounds {
+            if !keep_going || k == first_round + rounds {
                 stop.store(true, Ordering::SeqCst);
             }
             after_observe.wait();
@@ -245,14 +282,13 @@ where
     });
 
     // Shards are contiguous and joined in worker order, so concatenation
-    // restores the original node order.
+    // restores the original node order (RNGs were mutated in place).
     let mut fresh_cells = 0usize;
     for (shard, fresh) in out_shards {
         fresh_cells += fresh;
-        for (i, node, rng) in shard {
+        for (i, node) in shard {
             debug_assert_eq!(i, nodes.len());
             nodes.push(node);
-            rngs.push(rng);
         }
     }
 

@@ -30,6 +30,32 @@ pub fn run<F>(
     rngs: &mut [Xoshiro256pp],
     bus: &mut Bus,
     rounds: usize,
+    observer: F,
+) -> EngineStats
+where
+    F: FnMut(RoundTelemetry, &[Box<dyn NodeLogic>], &StatePlane, &Bus) -> bool,
+{
+    run_segment(nodes, plane, rngs, bus, 0, rounds, None, observer)
+}
+
+/// Churn-aware segment variant of [`run`]: executes the *absolute*
+/// rounds `first_round + 1 ..= first_round + rounds`, so round-keyed
+/// draws (loss rolls, straggler hashes, ADC-DGD's `k^γ` amplification)
+/// continue seamlessly across epoch boundaries, and skips nodes marked
+/// dead in `alive` (no message, no RNG draw, no consume — their RNG
+/// streams stay frozen for a later warm rejoin). `alive = None` is the
+/// fault-free fast path, bit-identical to [`run`]. The driver calls
+/// this once per churn epoch with the same fleet, plane, RNGs, and bus,
+/// performing relayout in between.
+#[allow(clippy::too_many_arguments)]
+pub fn run_segment<F>(
+    nodes: &mut [Box<dyn NodeLogic>],
+    plane: &mut StatePlane,
+    rngs: &mut [Xoshiro256pp],
+    bus: &mut Bus,
+    first_round: usize,
+    rounds: usize,
+    alive: Option<&[bool]>,
     mut observer: F,
 ) -> EngineStats
 where
@@ -39,9 +65,13 @@ where
     assert_eq!(rngs.len(), n);
     assert_eq!(plane.n(), n);
     assert_eq!(bus.n(), n);
+    if let Some(a) = alive {
+        assert_eq!(a.len(), n);
+    }
+    let is_alive = |i: usize| alive.map_or(true, |a| a[i]);
     let mut pool = PayloadPool::new();
-    let mut completed = 0;
-    for k in 1..=rounds {
+    let mut completed = first_round;
+    for k in first_round + 1..=first_round + rounds {
         let mut max_tx = 0.0f64;
         let mut saturations = 0usize;
         let mut max_payload = 0usize;
@@ -49,6 +79,9 @@ where
         // into slots and the local handle drops, so cells return to the
         // pool once the consume phase clears the inboxes).
         for (i, node) in nodes.iter_mut().enumerate() {
+            if !is_alive(i) {
+                continue;
+            }
             let mut rows = plane.rows(i);
             let out = node.make_message(k, &mut rows, &mut rngs[i], &mut pool);
             max_tx = max_tx.max(out.tx_magnitude);
@@ -62,6 +95,9 @@ where
         // so the floating-point reduction order is identical across
         // engines without any per-round sort.
         for (i, node) in nodes.iter_mut().enumerate() {
+            if !is_alive(i) {
+                continue;
+            }
             let inbox = bus.inbox_view(i);
             let mut rows = plane.rows(i);
             node.consume(k, &inbox, &mut rows, &mut rngs[i]);

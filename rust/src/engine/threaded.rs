@@ -29,11 +29,34 @@ use std::sync::{Arc, Barrier, Mutex};
 /// (the run-level pool-recycling health signal).
 #[allow(clippy::type_complexity)]
 pub fn run<F>(
-    mut nodes: Vec<Box<dyn NodeLogic>>,
+    nodes: Vec<Box<dyn NodeLogic>>,
     plane: &mut StatePlane,
     mut rngs: Vec<Xoshiro256pp>,
     bus: Bus,
     rounds: usize,
+    observer: F,
+) -> (Vec<Box<dyn NodeLogic>>, Bus, EngineStats)
+where
+    F: FnMut(RoundTelemetry, &Snapshot, &Bus) -> bool,
+{
+    run_segment(nodes, plane, &mut rngs, bus, 0, rounds, None, observer)
+}
+
+/// Churn-aware segment variant of [`run`]: absolute rounds
+/// `first_round + 1 ..= first_round + rounds`, RNG streams borrowed so
+/// they persist across epoch segments, and dead nodes' threads idle at
+/// the barriers (no message, no RNG draw, no consume) while still
+/// publishing their frozen iterate row to the snapshot. `alive = None`
+/// is the fault-free path, bit-identical to [`run`].
+#[allow(clippy::type_complexity, clippy::too_many_arguments)]
+pub fn run_segment<F>(
+    mut nodes: Vec<Box<dyn NodeLogic>>,
+    plane: &mut StatePlane,
+    rngs: &mut [Xoshiro256pp],
+    bus: Bus,
+    first_round: usize,
+    rounds: usize,
+    alive: Option<&[bool]>,
     mut observer: F,
 ) -> (Vec<Box<dyn NodeLogic>>, Bus, EngineStats)
 where
@@ -43,6 +66,9 @@ where
     assert_eq!(rngs.len(), n);
     assert_eq!(plane.n(), n);
     assert_eq!(bus.n(), n);
+    if let Some(a) = alive {
+        assert_eq!(a.len(), n);
+    }
     if n == 0 {
         return (nodes, bus, EngineStats::default());
     }
@@ -62,7 +88,7 @@ where
     let after_consume = Barrier::new(n + 1);
     let after_observe = Barrier::new(n + 1);
     let stop = AtomicBool::new(false);
-    let completed = AtomicUsize::new(0);
+    let completed = AtomicUsize::new(first_round);
 
     // Shared per-round telemetry slots (one writer per slot, then barrier).
     let tx_slots: Vec<Mutex<(f64, usize, usize)>> =
@@ -73,7 +99,7 @@ where
     let mut fresh_cells = 0usize;
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(n);
-        let iter = nodes.drain(..).zip(rngs.drain(..)).zip(shards);
+        let iter = nodes.drain(..).zip(rngs.iter_mut()).zip(shards);
         for (i, ((node, rng), mut shard)) in iter.enumerate() {
             let bus = &bus;
             let after_send = &after_send;
@@ -83,9 +109,13 @@ where
             let tx_slots = &tx_slots;
             let state_slots = &state_slots;
             let layout = Arc::clone(&layout);
+            // Churn mask: a dead node's thread still keeps the barrier
+            // count but does no work and draws no randomness, so its RNG
+            // stream is frozen for a later warm rejoin.
+            let node_alive = alive.map_or(true, |a| a[i]);
             handles.push(scope.spawn(move || {
                 let mut node = node;
-                let mut rng = rng;
+                let rng = rng;
                 // Per-thread payload pool: this node's cells cycle back
                 // one round after receivers consume them, so steady-state
                 // encode allocates nothing.
@@ -94,20 +124,22 @@ where
                 // one `Option::take` pass under the bus lock, consumed
                 // outside it. No per-round allocation.
                 let mut staging: Vec<MailSlot> = vec![None; layout.degree(i)];
-                for k in 1..=rounds {
-                    let out = {
-                        let mut rows = shard.rows(i);
-                        node.make_message(k, &mut rows, &mut rng, &mut pool)
-                    };
-                    let bytes = out.payload.wire_bytes();
-                    {
-                        let mut b = bus.lock().unwrap();
-                        b.broadcast(i, k, &out.payload);
+                for k in first_round + 1..=first_round + rounds {
+                    if node_alive {
+                        let out = {
+                            let mut rows = shard.rows(i);
+                            node.make_message(k, &mut rows, rng, &mut pool)
+                        };
+                        let bytes = out.payload.wire_bytes();
+                        {
+                            let mut b = bus.lock().unwrap();
+                            b.broadcast(i, k, &out.payload);
+                        }
+                        // Release the local handle so only slot clones
+                        // (and the pool's cell) keep the payload alive.
+                        drop(out.payload);
+                        *tx_slots[i].lock().unwrap() = (out.tx_magnitude, out.saturated, bytes);
                     }
-                    // Release the local handle so only slot clones (and
-                    // the pool's cell) keep the payload alive.
-                    drop(out.payload);
-                    *tx_slots[i].lock().unwrap() = (out.tx_magnitude, out.saturated, bytes);
                     after_send.wait();
                     // Coordinator advances the round clock here. Take the
                     // node's slot range under one short lock (the first
@@ -115,14 +147,16 @@ where
                     // slots are ascending-sender by construction, so the
                     // float reduction order matches the sequential engine
                     // exactly (bit-identical runs) without sorting.
-                    {
-                        let mut b = bus.lock().unwrap();
-                        b.take_inbox_range(i, i + 1, k, &mut staging);
-                    }
-                    {
-                        let inbox = InboxView::new(layout.senders(i), &staging);
-                        let mut rows = shard.rows(i);
-                        node.consume(k, &inbox, &mut rows, &mut rng);
+                    if node_alive {
+                        {
+                            let mut b = bus.lock().unwrap();
+                            b.take_inbox_range(i, i + 1, k, &mut staging);
+                        }
+                        {
+                            let inbox = InboxView::new(layout.senders(i), &staging);
+                            let mut rows = shard.rows(i);
+                            node.consume(k, &inbox, &mut rows, rng);
+                        }
                     }
                     {
                         let mut slot = state_slots[i].lock().unwrap();
@@ -137,12 +171,12 @@ where
                         break;
                     }
                 }
-                (node, rng, pool.fresh_cells())
+                (node, pool.fresh_cells())
             }));
         }
 
         // Coordinating thread.
-        for k in 1..=rounds {
+        for k in first_round + 1..=first_round + rounds {
             after_send.wait();
             let mut max_tx = 0.0f64;
             let mut saturations = 0usize;
@@ -170,7 +204,7 @@ where
                 let b = bus.lock().unwrap();
                 observer(telem, &snapshot, &b)
             };
-            if !keep_going || k == rounds {
+            if !keep_going || k == first_round + rounds {
                 stop.store(true, Ordering::SeqCst);
             }
             after_observe.wait();
@@ -180,16 +214,13 @@ where
         }
 
         let mut out_nodes = Vec::with_capacity(n);
-        let mut out_rngs = Vec::with_capacity(n);
         let mut cells = 0usize;
         for h in handles {
-            let (node, rng, fresh) = h.join().expect("node thread panicked");
+            let (node, fresh) = h.join().expect("node thread panicked");
             out_nodes.push(node);
-            out_rngs.push(rng);
             cells += fresh;
         }
         nodes = out_nodes;
-        rngs = out_rngs;
         fresh_cells = cells;
     });
 

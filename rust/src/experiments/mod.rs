@@ -6,9 +6,12 @@
 //! paper: [`delayed`] sweeps the staleness axis and [`stochastic`] runs
 //! the bytes-to-accuracy comparison of ADC-DGD against the stochastic
 //! compressed-consensus family (CHOCO-SGD, CEDAS) — `run --exp
-//! stochastic` in the CLI. See DESIGN.md §4 for the experiment index.
+//! stochastic` in the CLI. [`churn`] sweeps join/leave storms over the
+//! churn plane (`run --exp churn`). See DESIGN.md §4 for the experiment
+//! index.
 
 pub mod ablations;
+pub mod churn;
 pub mod delayed;
 pub mod fig1;
 pub mod fig10;

@@ -189,6 +189,52 @@
 //! n = 16 × P ∈ {65 536, 1 048 576} × tiles ∈ {1, 4, 8, 16} and writes
 //! `BENCH_dim_plane.json`.
 //!
+//! ## The churn plane
+//!
+//! Real deployments lose nodes mid-run; the churn plane
+//! ([`network::TopologySchedule`]) makes membership a *scenario axis*
+//! rather than a rewrite. A schedule scripts planned joins and leaves
+//! on an epoch cadence ([`network::ChurnEvent`]), a Markov per-link
+//! up/down chain ([`network::LinkFlap`]), and per-node straggler delay
+//! distributions ([`network::DelayDist`]) that ride the mailbox plane's
+//! existing in-flight ring. Attach it with
+//! [`coordinator::ScenarioSpec::with_churn`] (CLI: the `--churn-*`
+//! flags) and the driver runs the fleet in epoch segments:
+//!
+//! ```text
+//! epoch e boundary (single-threaded, engine-agnostic)
+//!   1. apply scripted leaves/joins; rejoiners get their compression
+//!      channel reset on both ends (mask_node + neighbor mirror slots)
+//!   2. step the per-edge Markov flap chain (transport-only)
+//!   3. hygiene: drain dead inboxes, retire in-flight traffic to dead
+//!      destinations through the encode plane's reclaim hook (counted
+//!      in RunOutput::churn, never leaked)
+//!   4. incremental relayout: O(E) in-place Metropolis reweight of the
+//!      live subgraph into the inactive buffer of a two-buffer Arc
+//!      weight bank (CsrWeights::reweight_metropolis_live), then every
+//!      node rebinds — two CSR allocations for the whole run
+//! epoch e rounds (any engine, alive-masked run_segment)
+//!   dead nodes neither send, consume, nor draw randomness — their
+//!   iterates and RNG streams freeze, so a warm rejoin resumes exactly
+//!   where the crash left them; cold rejoin restarts from x = 0
+//!   ([`network::RejoinPolicy`])
+//! ```
+//!
+//! **Determinism contract**: every fault draw — who is down, which
+//! links flap, which broadcasts straggle — is a stateless hash of the
+//! churn seed (`cfg.seed ^ 0xC0C0`), never a stateful RNG, and the loss
+//! trace keys on global `(src, dst, round)`; so all four engines unfold
+//! a scripted fault trace **bit-identically** (pinned in
+//! `tests/churn_plane.rs`), and an attached-but-empty schedule
+//! reproduces the churn-free pathway bit-for-bit. Fault totals surface
+//! as [`coordinator::RunOutput::churn`]
+//! ([`network::ChurnCounters`]). `adcdgd run --exp churn` sweeps
+//! join/leave storms ([`network::TopologySchedule::storm`]), and the
+//! `ADCDGD_BENCH_ONLY=churn` hotpath section measures relayout cost per
+//! boundary and alive-masked round throughput at n ∈ {256, 2048} with
+//! 1% churn per epoch, asserting in-epoch rounds allocate nothing
+//! (`BENCH_churn_plane.json`).
+//!
 //! Related: [`coordinator::RunConfig::measure_wire`] (default on)
 //! controls whether every broadcast additionally runs the wire plane's
 //! real serializer for measured byte counts; modeled-only studies and

@@ -3,11 +3,13 @@
 //! Subcommands:
 //!
 //! * `run --exp <fig1|fig5|fig6|fig7|fig8|fig10|phase|delay|stochastic|
-//!   ablations|all>` regenerate a paper figure or ablation (optionally
-//!   `--out <dir>` for CSVs, `--trials`, `--iters` to rescale; `delay`
-//!   is the delayed-consensus sweep over the mailbox plane's in-flight
-//!   ring, `stochastic` the bytes-to-accuracy sweep of ADC-DGD vs
-//!   CHOCO-SGD vs CEDAS over the stochastic data plane).
+//!   churn|ablations|all>` regenerate a paper figure or ablation
+//!   (optionally `--out <dir>` for CSVs, `--trials`, `--iters` to
+//!   rescale; `delay` is the delayed-consensus sweep over the mailbox
+//!   plane's in-flight ring, `stochastic` the bytes-to-accuracy sweep of
+//!   ADC-DGD vs CHOCO-SGD vs CEDAS over the stochastic data plane, and
+//!   `churn` the join/leave-storm convergence sweep over the churn
+//!   plane).
 //! * `solve` — run one algorithm on a chosen topology/objective family
 //!   (`--algo adc|dgd|dgdt|naive|qdgd|choco|cedas`, `--topology
 //!   ring|star|complete|grid|er|ba|paper4`, `--n`, `--gamma`, `--alpha`,
@@ -21,8 +23,14 @@
 //!   model — and, for the stochastic family, `--batch` (0 = full shard),
 //!   `--samples-per-node`, `--dim`, `--data-seed` selecting the sharded
 //!   synthetic logistic workload; `--gamma` doubles as their consensus
-//!   step γ). Every solve is a `ScenarioSpec` run through `run_scenario`
-//!   — the CLI only assembles the declaration.
+//!   step γ — and the churn plane: `--churn-epoch <rounds>` enables
+//!   epoching, `--churn-events leave@E:NODE,join@E:NODE,...` scripts
+//!   membership, `--churn-storm LEAVES:DOWN_EPOCHS` generates a storm,
+//!   `--churn-flap PDOWN:PUP` flaps links, `--churn-straggle
+//!   NODE:LO[-HI]` delays one node's broadcasts, `--churn-rejoin
+//!   cold|warm` picks the restart policy, `--churn-lazy` reweights with
+//!   lazy Metropolis). Every solve is a `ScenarioSpec` run through
+//!   `run_scenario` — the CLI only assembles the declaration.
 //! * `train` — decentralized ML training from an AOT artifact
 //!   (`--artifacts <dir>`, `--model logistic|transformer`, see
 //!   `runtime` docs).
@@ -52,6 +60,7 @@ fn main() {
                  \n  adcdgd run --exp stochastic [--iters 600]\
                  \n  adcdgd solve --algo adc --topology ring --n 10 --iters 1000 [--engine threaded]\
                  \n  adcdgd solve --algo choco --batch 8 --samples-per-node 64 --gamma 0.4\
+                 \n  adcdgd solve --algo adc --churn-epoch 50 --churn-storm 2:2 --churn-rejoin warm\
                  \n  adcdgd train --model logistic --artifacts artifacts/ --nodes 4 --steps 100\
                  \n  adcdgd info"
             );
@@ -134,6 +143,13 @@ fn cmd_run(args: &Args) -> i32 {
             p.iterations = iters;
         }
         results.push(experiments::delayed::run(&p));
+    }
+    if want("churn") {
+        let mut p = experiments::churn::Params::default();
+        if iters > 0 {
+            p.iterations = iters;
+        }
+        results.push(experiments::churn::run(&p));
     }
     if want("stochastic") {
         let mut p = experiments::stochastic::Params::default();
@@ -326,9 +342,89 @@ fn cmd_solve(args: &Args) -> i32 {
         CompressorSpec::None
     };
 
-    let spec = ScenarioSpec::new(algorithm, topology_spec, objective)
+    // Churn plane: `--churn-epoch N` turns on epoching; the other
+    // `--churn-*` options ride on it (see network::TopologySchedule).
+    let churn = {
+        let epoch_len = args.get::<usize>("churn-epoch", 0).unwrap();
+        if epoch_len == 0 {
+            None
+        } else {
+            let mut sched = adcdgd::network::TopologySchedule::new(epoch_len);
+            // --churn-events leave@1:2,join@3:2 (comma-separated script)
+            for ev in args
+                .get_str("churn-events", "")
+                .split(',')
+                .filter(|s| !s.is_empty())
+            {
+                match adcdgd::network::ChurnEvent::parse(ev) {
+                    Ok(e) => sched.events.push(e),
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                }
+            }
+            // --churn-storm LEAVES:DOWN — generated join/leave storm.
+            if let Some(spec) = args.options.get("churn-storm") {
+                let Some((l, d)) = spec.split_once(':') else {
+                    eprintln!("bad --churn-storm '{spec}' (want LEAVES:DOWN_EPOCHS)");
+                    return 2;
+                };
+                let (Ok(leaves), Ok(down)) = (l.parse::<usize>(), d.parse::<usize>()) else {
+                    eprintln!("bad --churn-storm '{spec}' (want LEAVES:DOWN_EPOCHS)");
+                    return 2;
+                };
+                // Storm victims must fit the *built* topology (paper4
+                // and grid sizes differ from the raw --n).
+                let n_nodes = topology_spec.build().num_nodes();
+                let storm = adcdgd::network::TopologySchedule::storm(
+                    n_nodes,
+                    epoch_len,
+                    cfg.iterations / epoch_len,
+                    leaves,
+                    down,
+                    seed,
+                );
+                sched.events.extend(storm.events);
+            }
+            // --churn-flap PDOWN:PUP — Markov link up/down chain.
+            if let Some(spec) = args.options.get("churn-flap") {
+                let parsed = spec
+                    .split_once(':')
+                    .and_then(|(a, b)| Some((a.parse::<f64>().ok()?, b.parse::<f64>().ok()?)));
+                let Some((p_down, p_up)) = parsed else {
+                    eprintln!("bad --churn-flap '{spec}' (want PDOWN:PUP)");
+                    return 2;
+                };
+                sched = sched.with_flap(p_down, p_up);
+            }
+            // --churn-straggle NODE:LO[-HI] — per-node straggler delay.
+            if let Some(spec) = args.options.get("churn-straggle") {
+                let parsed = spec.split_once(':').and_then(|(v, d)| {
+                    Some((v.parse::<usize>().ok()?, adcdgd::network::DelayDist::parse(d).ok()?))
+                });
+                let Some((node, dist)) = parsed else {
+                    eprintln!("bad --churn-straggle '{spec}' (want NODE:LO or NODE:LO-HI)");
+                    return 2;
+                };
+                sched = sched.with_straggler(node, dist);
+            }
+            if args.get_str("churn-rejoin", "cold") == "warm" {
+                sched = sched.with_rejoin(adcdgd::network::RejoinPolicy::Warm);
+            }
+            if args.has_flag("churn-lazy") {
+                sched = sched.with_lazy_weights(true);
+            }
+            Some(sched)
+        }
+    };
+
+    let mut spec = ScenarioSpec::new(algorithm, topology_spec, objective)
         .with_compressor(compressor)
         .with_config(cfg);
+    if let Some(sched) = churn {
+        spec = spec.with_churn(sched);
+    }
     let prepared = spec.prepare();
     let n = prepared.graph().num_nodes();
     let out = prepared.run();
@@ -347,6 +443,21 @@ fn cmd_solve(args: &Args) -> i32 {
     // engine's pool sharding (one pool per worker/shard), so it is the
     // one legitimately engine-dependent output.
     println!("fresh_payload_cells={}", out.fresh_payload_cells);
+    if out.churn.epochs > 0 {
+        let c = &out.churn;
+        println!(
+            "churn epochs={} crashes={} rejoins={} link_flaps={} dropped_dead={} \
+             dropped_link_down={} straggler_delayed={} retired_in_flight={}",
+            c.epochs,
+            c.crashes,
+            c.rejoins,
+            c.link_flaps,
+            c.dropped_dead,
+            c.dropped_link_down,
+            c.straggler_delayed,
+            c.retired_in_flight
+        );
+    }
     let m = &out.metrics;
     for i in 0..m.len() {
         println!(

@@ -2,11 +2,39 @@
 //! accounting, loss injection, latency-aware (possibly multi-round)
 //! delivery, and a simulated clock.
 
+use super::schedule::{fault_u01, DelayDist, STRAGGLE_SALT};
 use super::{InboxView, LinkModel, LinkStats, MailSlot, MailboxLayout, MailboxPlane};
 use crate::compress::{encode_into, Payload, WireBuf};
 use crate::rng::SplitMix64;
 use crate::topology::Graph;
 use std::sync::Arc;
+
+/// The churn plane's per-message fault state, allocated only when a run
+/// carries a [`super::TopologySchedule`] ([`Bus::enable_faults`]).
+/// Membership and link state are pushed in at epoch boundaries by the
+/// coordinator; straggler delays are drawn per broadcast from the
+/// stateless hash stream. Without a filter the broadcast hot path is
+/// untouched (one `Option` check per broadcast).
+#[derive(Debug)]
+struct FaultFilter {
+    /// Seed of the fault hash stream (decoupled from the loss seed so
+    /// enabling churn never perturbs the drop trace — see
+    /// [`Bus::drop_roll`]).
+    churn_seed: u64,
+    /// Live nodes. Copies to dead destinations are suppressed.
+    alive: Vec<bool>,
+    /// Per directed slot `q` (sender-side index): whether the link is
+    /// up. Flapped-down links eat copies in both directions.
+    link_up: Vec<bool>,
+    /// Per-node straggler delay distribution (indexed by sender).
+    straggle: Vec<Option<DelayDist>>,
+    /// Copies suppressed because the destination was dead.
+    dropped_dead: usize,
+    /// Copies suppressed because the link was down.
+    dropped_link_down: usize,
+    /// Copies given extra straggler delay.
+    straggler_delayed: usize,
+}
 
 /// In-process network fabric for one topology. Delivery is slot-based
 /// and per-round: [`Bus::broadcast`] meters one copy of a node's payload
@@ -54,6 +82,8 @@ pub struct Bus {
     round_max_payload: usize,
     sim_clock: f64,
     seed: u64,
+    /// Churn-plane fault state (None on fault-free runs).
+    faults: Option<FaultFilter>,
 }
 
 impl Bus {
@@ -78,7 +108,67 @@ impl Bus {
             round_max_payload: 0,
             sim_clock: 0.0,
             seed,
+            faults: None,
         }
+    }
+
+    /// Switch the churn-plane fault filter on: everyone alive, every
+    /// link up, no stragglers. Fault draws (straggler delays) come from
+    /// `churn_seed`'s hash stream, *not* the loss seed — the drop trace
+    /// of [`Bus::drop_roll`] is invariant to enabling churn.
+    pub fn enable_faults(&mut self, churn_seed: u64) {
+        self.faults = Some(FaultFilter {
+            churn_seed,
+            alive: vec![true; self.n],
+            link_up: vec![true; self.layout.slots()],
+            straggle: vec![None; self.n],
+            dropped_dead: 0,
+            dropped_link_down: 0,
+            straggler_delayed: 0,
+        });
+    }
+
+    /// Mark node `i` live or dead (requires [`Bus::enable_faults`]).
+    /// Dead destinations silently eat copies; dead sources are the
+    /// engines' responsibility (they skip the node's round entirely).
+    pub fn set_alive(&mut self, i: usize, alive: bool) {
+        self.faults.as_mut().expect("enable_faults first").alive[i] = alive;
+    }
+
+    /// Set the up/down state of the undirected link `{u, v}` (both
+    /// directed slots). Panics if the link does not exist.
+    pub fn set_edge_up(&mut self, u: usize, v: usize, up: bool) {
+        let quv = self.stat_index(u, v).expect("link must exist");
+        let qvu = self.stat_index(v, u).expect("link must exist");
+        let f = self.faults.as_mut().expect("enable_faults first");
+        f.link_up[quv] = up;
+        f.link_up[qvu] = up;
+    }
+
+    /// Give node `i` a straggler delay distribution (None clears it).
+    pub fn set_straggler(&mut self, i: usize, dist: Option<DelayDist>) {
+        self.faults.as_mut().expect("enable_faults first").straggle[i] = dist;
+    }
+
+    /// Churn-filter counters `(dropped_dead, dropped_link_down,
+    /// straggler_delayed)`; zeros when faults were never enabled.
+    pub fn fault_counts(&self) -> (usize, usize, usize) {
+        match &self.faults {
+            Some(f) => (f.dropped_dead, f.dropped_link_down, f.straggler_delayed),
+            None => (0, 0, 0),
+        }
+    }
+
+    /// Retire every in-flight message addressed to a currently dead
+    /// node (crash boundary hygiene): the copies leave the delay ring
+    /// through the same retire hook cleared slots use, so
+    /// [`Bus::reclaim_retired`] can salvage their backing storage into a
+    /// pool instead of leaking or freeing it. Returns the retired count.
+    pub fn retire_dead_in_flight(&mut self) -> usize {
+        let Bus { faults, mailbox, layout, .. } = self;
+        let Some(f) = faults else { return 0 };
+        let alive = &f.alive;
+        mailbox.retire_in_flight_if(|slot| !alive[layout.slot_owner(slot)])
     }
 
     /// The shared slot geometry (engines clone the `Arc` to address
@@ -147,13 +237,40 @@ impl Bus {
         let bytes = payload.wire_bytes();
         self.round_max_payload = self.round_max_payload.max(bytes);
         let t = self.model.transmit_time(bytes);
-        let delay = self.model.delay_rounds_for_time(t);
+        let model_delay = self.model.delay_rounds_for_time(t);
+        // Straggler delay: one draw per broadcast (a slow node delays
+        // every copy it sends that round alike), keyed statelessly by
+        // (churn seed, src, round) so the draw is identical on every
+        // engine regardless of scheduling. Rides the same in-flight
+        // ring as link latency.
+        let extra = match &self.faults {
+            Some(f) => match f.straggle[src] {
+                Some(d) => d.draw(fault_u01(f.churn_seed, STRAGGLE_SALT, src as u64, round as u64)),
+                None => 0,
+            },
+            None => 0,
+        };
+        let delay = (model_delay + extra).min(LinkModel::MAX_DELAY_ROUNDS);
         let (q0, q1) = (self.layout.offset(src), self.layout.offset(src + 1));
         let mut delivered = 0;
+        let (mut dead, mut down, mut straggled) = (0usize, 0usize, 0usize);
         for q in q0..q1 {
             let dst = self.layout.neighbor_at(q);
             self.stats[q].messages += 1;
             self.total_messages += 1;
+            // Churn filter: dead destinations and flapped-down links eat
+            // the copy before loss injection (counted separately from
+            // loss — the drop trace on unaffected links is invariant).
+            if let Some(f) = &self.faults {
+                if !f.alive[dst] {
+                    dead += 1;
+                    continue;
+                }
+                if !f.link_up[q] {
+                    down += 1;
+                    continue;
+                }
+            }
             let dropped = self.model.drop_prob > 0.0
                 && self.drop_roll(src, dst, round) < self.model.drop_prob;
             if dropped {
@@ -171,8 +288,16 @@ impl Bus {
                 self.mailbox.place(slot, round, Arc::clone(payload));
             } else {
                 self.mailbox.stash(round + delay, slot, round, Arc::clone(payload));
+                if extra > 0 {
+                    straggled += 1;
+                }
             }
             delivered += 1;
+        }
+        if let Some(f) = &mut self.faults {
+            f.dropped_dead += dead;
+            f.dropped_link_down += down;
+            f.straggler_delayed += straggled;
         }
         delivered
     }
@@ -465,5 +590,113 @@ mod tests {
         assert_eq!(bus.stats.len(), 4);
         assert_eq!(bus.layout.offset(1), 1);
         assert_eq!(bus.layout.offset(2), 3);
+    }
+
+    #[test]
+    fn dead_destinations_eat_copies_without_touching_loss_stats() {
+        let g = topology::star(4);
+        let mut bus = Bus::new(&g, LinkModel::default(), 0);
+        bus.enable_faults(99);
+        bus.set_alive(2, false);
+        let p = Arc::new(Payload::F64(vec![1.0]));
+        // Hub broadcast reaches only the two live leaves.
+        assert_eq!(bus.broadcast(0, 1, &p), 2);
+        assert_eq!(bus.fault_counts(), (1, 0, 0));
+        assert_eq!(bus.total_dropped(), 0, "churn suppression is not loss");
+        bus.deliver_round(1);
+        assert!(bus.inbox_view(2).is_empty());
+        assert_eq!(bus.inbox_view(1).len(), 1);
+        // Rejoin: copies flow again.
+        bus.set_alive(2, true);
+        assert_eq!(bus.broadcast(0, 2, &p), 3);
+    }
+
+    #[test]
+    fn flapped_links_eat_copies_both_ways() {
+        let g = topology::ring(4);
+        let mut bus = Bus::new(&g, LinkModel::default(), 0);
+        bus.enable_faults(5);
+        bus.set_edge_up(0, 1, false);
+        let p = Arc::new(Payload::F64(vec![2.0]));
+        assert_eq!(bus.broadcast(0, 1, &p), 1, "only the 0→3 copy survives");
+        assert_eq!(bus.broadcast(1, 1, &p), 1, "only the 1→2 copy survives");
+        assert_eq!(bus.fault_counts(), (0, 2, 0));
+        bus.set_edge_up(0, 1, true);
+        assert_eq!(bus.broadcast(0, 2, &p), 2);
+    }
+
+    #[test]
+    fn stragglers_defer_whole_broadcasts_deterministically() {
+        let g = topology::pair();
+        let mut bus = Bus::new(&g, LinkModel::default(), 0);
+        bus.enable_faults(7);
+        bus.set_straggler(0, Some(super::super::schedule::DelayDist::Fixed(2)));
+        let p = Arc::new(Payload::F64(vec![3.0]));
+        assert_eq!(bus.broadcast(0, 1, &p), 1, "delayed copies meter at send");
+        bus.deliver_round(1);
+        assert!(bus.inbox_view(1).is_empty());
+        assert_eq!(bus.in_flight(), 1);
+        bus.deliver_round(3);
+        assert_eq!(bus.inbox_view(1).len(), 1, "arrives exactly 2 rounds late");
+        assert_eq!(bus.fault_counts().2, 1);
+        // The un-straggled direction is unaffected.
+        bus.broadcast(1, 3, &p);
+        bus.deliver_round(3);
+        assert_eq!(bus.inbox_view(0).len(), 1);
+    }
+
+    /// Satellite regression pin: the loss trace is keyed by global
+    /// `(seed, src, dst, round)` ids only, so enabling the churn filter,
+    /// killing an unrelated node, or flapping an unrelated link must
+    /// leave every drop decision on an untouched link bit-identical.
+    #[test]
+    fn drop_trace_is_invariant_to_churn_relayout() {
+        let model = LinkModel { drop_prob: 0.4, ..LinkModel::default() };
+        let p = Arc::new(Payload::F64(vec![1.0]));
+        let trace = |churn: bool| -> Vec<usize> {
+            let g = topology::ring(5);
+            let mut bus = Bus::new(&g, model, 1234);
+            if churn {
+                bus.enable_faults(777);
+                bus.set_alive(3, false); // unrelated to link 0↔1
+                bus.set_edge_up(2, 3, false);
+            }
+            (1..=200)
+                .map(|r| {
+                    let d = bus.broadcast(0, r, &p);
+                    bus.deliver_round(r);
+                    bus.clear_inbox(1);
+                    bus.clear_inbox(4);
+                    d
+                })
+                .collect()
+        };
+        let plain = trace(false);
+        let churned = trace(true);
+        // Per-round delivered counts differ (node 3 is not 0's neighbor
+        // in ring(5), so here they match exactly); the pin is on the
+        // 0→1 link's drop decisions, which must be identical.
+        assert_eq!(plain, churned, "drop trace must be churn-invariant");
+    }
+
+    #[test]
+    fn retire_dead_in_flight_reclaims_into_a_pool() {
+        let g = topology::pair();
+        let mut bus = Bus::new(&g, LinkModel::with_delay(3), 0);
+        bus.enable_faults(1);
+        let p = Arc::new(Payload::F64(vec![9.0]));
+        bus.broadcast(0, 1, &p);
+        drop(p); // the in-flight ring holds the last reference
+        assert_eq!(bus.in_flight(), 1);
+        bus.set_alive(1, false);
+        assert_eq!(bus.retire_dead_in_flight(), 1);
+        assert_eq!(bus.in_flight(), 0);
+        let mut pool = crate::compress::PayloadPool::new();
+        bus.reclaim_retired(&mut pool);
+        assert_eq!(bus.mailbox.retired_len(), 0, "retired orphans were salvaged");
+        // Nothing addressed to live nodes is touched.
+        let p2 = Arc::new(Payload::F64(vec![8.0]));
+        bus.broadcast(1, 2, &p2); // 1 is dead but can still *send* at the bus level
+        assert_eq!(bus.retire_dead_in_flight(), 0);
     }
 }

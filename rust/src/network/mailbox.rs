@@ -152,6 +152,15 @@ impl MailboxLayout {
     pub fn in_slot(&self, q: usize) -> usize {
         self.in_slot[q]
     }
+
+    /// The node whose inbox owns global `slot`
+    /// (`offset(i) <= slot < offset(i + 1)`). O(log n); the churn
+    /// plane's boundary hygiene uses this to map in-flight messages back
+    /// to their receivers.
+    pub fn slot_owner(&self, slot: usize) -> usize {
+        debug_assert!(slot < self.slots());
+        self.off.partition_point(|&o| o <= slot) - 1
+    }
 }
 
 /// One filled inbox slot, yielded by [`InboxView::iter`].
@@ -354,6 +363,34 @@ impl MailboxPlane {
         self.in_flight[idx].push(FlightMsg { slot, round, payload });
     }
 
+    /// Remove every in-flight message whose destination slot satisfies
+    /// `dead` (churn boundaries: traffic addressed to crashed/departed
+    /// nodes), routing each removed payload through the retire hook so
+    /// [`Self::reclaim_retired`] can salvage its backing storage into a
+    /// pool — counted, never leaked. Bucket order is irrelevant
+    /// (freshest-wins placement is commutative), so the swap-removal is
+    /// safe. Returns the number of messages retired.
+    pub fn retire_in_flight_if(&mut self, mut dead: impl FnMut(usize) -> bool) -> usize {
+        let mut retired = 0;
+        let mut orphans = Vec::new();
+        for bucket in self.in_flight.iter_mut() {
+            let mut i = 0;
+            while i < bucket.len() {
+                if dead(bucket[i].slot) {
+                    let m = bucket.swap_remove(i);
+                    orphans.push(m.payload);
+                    retired += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        for arc in orphans {
+            self.drop_or_retire(arc);
+        }
+        retired
+    }
+
     /// Drain every in-flight message arriving in rounds `..= round` into
     /// its slot. Idempotent; must run before round `round`'s inboxes are
     /// read (the engines trigger it through the bus's collect APIs).
@@ -552,5 +589,41 @@ mod tests {
         }
         assert_eq!(mb.in_flight_len(), 4); // two rounds' worth still in flight
         assert_eq!(mb.superseded(), 0);
+    }
+
+    #[test]
+    fn slot_owner_inverts_the_offset_table() {
+        let g = topology::star(4); // hub 0 (slots 0..3), leaves 1..=3
+        let l = MailboxLayout::from_graph(&g);
+        for i in 0..4 {
+            for s in l.offset(i)..l.offset(i + 1) {
+                assert_eq!(l.slot_owner(s), i, "slot {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn retire_in_flight_drains_dead_destinations_into_the_pool_hook() {
+        let g = topology::star(4);
+        let l = Arc::new(MailboxLayout::from_graph(&g));
+        let mut mb = MailboxPlane::new(Arc::clone(&l));
+        // Three in-flight messages: two to the hub (node 0), one to
+        // leaf 2. Kill the hub; its traffic must retire, leaf 2's must
+        // survive.
+        mb.stash(3, l.offset(0), 1, payload(1.0));
+        mb.stash(4, l.offset(0) + 1, 1, payload(2.0));
+        mb.stash(3, l.offset(2), 1, payload(3.0));
+        let retired = mb.retire_in_flight_if(|slot| l.slot_owner(slot) == 0);
+        assert_eq!(retired, 2);
+        assert_eq!(mb.in_flight_len(), 1, "live destination keeps its message");
+        // The retired orphans are salvageable (this plane held the last
+        // Arc), not leaked.
+        let mut got = Vec::new();
+        mb.reclaim_retired(|p| got.push(p.decode()[0]));
+        got.sort_by(f64::total_cmp);
+        assert_eq!(got, vec![1.0, 2.0]);
+        // The surviving message still delivers.
+        mb.deliver_through(3);
+        assert_eq!(mb.view(2).len(), 1);
     }
 }

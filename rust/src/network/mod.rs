@@ -14,11 +14,22 @@
 //! allocation or sorting and algorithms consume them through borrowed
 //! [`InboxView`]s. See [`mailbox`] for the slot layout, the in-flight
 //! delay ring, and the view borrowing rules.
+//!
+//! The churn plane ([`schedule`]) scripts epoch-versioned faults on top
+//! of this fabric — node joins/leaves, Markov link flapping, straggler
+//! delays — which the bus enforces per message copy through its fault
+//! filter ([`Bus::enable_faults`]), all drawn from stateless hashes so
+//! fault traces are identical on every engine.
 
 mod bus;
 mod link;
 pub mod mailbox;
+pub mod schedule;
 
 pub use bus::Bus;
 pub use link::{LinkModel, LinkStats};
 pub use mailbox::{InboxMsg, InboxView, MailSlot, MailboxLayout, MailboxPlane};
+pub use schedule::{
+    ChurnCounters, ChurnEvent, ChurnEventKind, DelayDist, LinkFlap, RejoinPolicy,
+    TopologySchedule,
+};

@@ -1,0 +1,464 @@
+//! The churn plane's scenario axis: epoch-versioned fault schedules —
+//! scripted node joins/leaves, crash/restart rejoin policies, Markov
+//! per-link up/down, and per-node straggler delay distributions.
+//!
+//! A [`TopologySchedule`] scripts *when* the fleet changes; the
+//! coordinator applies it at **epoch boundaries** (every
+//! [`TopologySchedule::epoch_len`] rounds) by masking — never
+//! rebuilding — the existing planes: Metropolis reweighting on the live
+//! subgraph into the same CSR arenas
+//! ([`crate::consensus::CsrWeights::reweight_metropolis_live`]),
+//! mailbox slots and in-flight traffic of departed nodes drained through
+//! the payload-reclaim hook, and state-plane row masks per the
+//! [`RejoinPolicy`].
+//!
+//! ## Determinism contract
+//!
+//! Every fault decision is a *stateless hash* of the churn seed
+//! ([`fault_u01`], the same construction as the bus's loss injection):
+//! straggler delays key on `(node, round)`, link flaps on
+//! `(edge, epoch)`, storm victims on `(epoch, draw)`. No fault draw
+//! consumes engine or node RNG state, so the schedule unfolds
+//! bit-identically on every engine at every worker/tile count — the
+//! churn plane's determinism contract, pinned by
+//! `rust/tests/churn_plane.rs`.
+
+use crate::rng::SplitMix64;
+
+/// Hash-stream salt for straggler delay draws (one salt per fault axis
+/// so the axes never alias each other or the bus's loss stream).
+pub const STRAGGLE_SALT: u64 = 0x5354_5241_4747_4C45;
+/// Hash-stream salt for Markov link-flap draws.
+pub const FLAP_SALT: u64 = 0x464C_4150_4C49_4E4B;
+/// Hash-stream salt for the storm generator's victim draws.
+const STORM_SALT: u64 = 0x53_544F_524D_4743;
+
+/// Deterministic fault roll in `[0, 1)` for `(seed, salt, a, b)`.
+/// Stateless — independent of call order, engine scheduling, and every
+/// other fault axis — which is what keeps a scripted churn trace
+/// identical across engines.
+pub fn fault_u01(seed: u64, salt: u64, a: u64, b: u64) -> f64 {
+    let mix = seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(salt.rotate_left(31))
+        .wrapping_add(a.wrapping_mul(0x0100_0000_01B3))
+        .wrapping_add(b);
+    let mut sm = SplitMix64::new(mix);
+    (sm.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Per-node straggler delay distribution: extra whole rounds added to
+/// every broadcast's in-flight delay, drawn per `(node, round)` by
+/// [`fault_u01`]. Rides the existing in-flight delay ring, so straggler
+/// traffic obeys the same freshest-wins slot semantics as link latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DelayDist {
+    /// Every broadcast arrives exactly this many extra rounds late.
+    Fixed(usize),
+    /// Uniform on `lo..=hi` extra rounds.
+    Uniform {
+        /// Smallest extra delay (inclusive).
+        lo: usize,
+        /// Largest extra delay (inclusive).
+        hi: usize,
+    },
+}
+
+impl DelayDist {
+    /// Map a uniform roll `u ∈ [0, 1)` to a delay draw.
+    pub fn draw(&self, u: f64) -> usize {
+        match *self {
+            DelayDist::Fixed(d) => d,
+            DelayDist::Uniform { lo, hi } => {
+                let span = hi.saturating_sub(lo) + 1;
+                lo + ((u * span as f64) as usize).min(span - 1)
+            }
+        }
+    }
+
+    /// Parse `"3"` (fixed) or `"1-4"` (uniform, inclusive).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.split_once('-') {
+            None => s
+                .parse::<usize>()
+                .map(DelayDist::Fixed)
+                .map_err(|_| format!("bad delay '{s}' (want N or LO-HI)")),
+            Some((a, b)) => {
+                let lo = a.parse::<usize>().map_err(|_| format!("bad delay lo '{a}'"))?;
+                let hi = b.parse::<usize>().map_err(|_| format!("bad delay hi '{b}'"))?;
+                if hi < lo {
+                    return Err(format!("delay range {lo}-{hi} is empty"));
+                }
+                Ok(DelayDist::Uniform { lo, hi })
+            }
+        }
+    }
+}
+
+/// State a node rejoins with after a crash.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RejoinPolicy {
+    /// Restart from scratch: the node's `x`/`grad` (and aux) rows are
+    /// zeroed along with its mirror channel.
+    #[default]
+    Cold,
+    /// Resume from the last-known iterate: `x` survives the crash, but
+    /// the mirror channel is still resynchronized to zero on both ends
+    /// (a crash loses the in-memory compression state).
+    Warm,
+}
+
+/// What happens to a node at an epoch boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnEventKind {
+    /// The node crashes/departs: it stops sending, consuming, and
+    /// stepping; its mixing weight collapses onto the survivors.
+    Leave,
+    /// The node restarts/rejoins per the schedule's [`RejoinPolicy`].
+    Join,
+}
+
+/// One scripted membership change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChurnEvent {
+    /// Epoch boundary the event fires at. Epoch `e` covers rounds
+    /// `e·epoch_len + 1 ..= (e+1)·epoch_len`; boundary `e` is applied
+    /// before the first round of epoch `e` (so epoch-0 events fire
+    /// before round 1).
+    pub epoch: usize,
+    /// Node id.
+    pub node: usize,
+    /// Leave or join.
+    pub kind: ChurnEventKind,
+}
+
+impl ChurnEvent {
+    /// Parse `"leave@E:NODE"` / `"join@E:NODE"`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let (kind, rest) = s.split_once('@').ok_or_else(|| format!("bad event '{s}'"))?;
+        let kind = match kind {
+            "leave" => ChurnEventKind::Leave,
+            "join" => ChurnEventKind::Join,
+            _ => return Err(format!("bad event kind '{kind}' (want leave|join)")),
+        };
+        let (e, v) = rest.split_once(':').ok_or_else(|| format!("bad event '{s}'"))?;
+        let epoch = e.parse::<usize>().map_err(|_| format!("bad epoch '{e}'"))?;
+        let node = v.parse::<usize>().map_err(|_| format!("bad node '{v}'"))?;
+        Ok(ChurnEvent { epoch, node, kind })
+    }
+}
+
+/// Two-state Markov chain per undirected link, stepped once per epoch.
+/// A down link silently eats every message in both directions until it
+/// flaps back up; membership weights are *not* affected (flaps model
+/// transient transport faults, not departures).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFlap {
+    /// P(up → down) per epoch.
+    pub p_down: f64,
+    /// P(down → up) per epoch.
+    pub p_up: f64,
+}
+
+impl LinkFlap {
+    /// Next state of `edge` at `epoch`, given the current state `up`.
+    /// Stateless in everything but the chain state itself.
+    pub fn step(&self, seed: u64, epoch: usize, edge: usize, up: bool) -> bool {
+        let u = fault_u01(seed, FLAP_SALT, edge as u64, epoch as u64);
+        if up {
+            u >= self.p_down
+        } else {
+            u < self.p_up
+        }
+    }
+}
+
+/// Fault counters for one run, reported in
+/// [`crate::coordinator::RunOutput::churn`]. All-zero (`Default`) when
+/// the run had no schedule.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChurnCounters {
+    /// Epoch boundaries applied (including the epoch-0 pre-pass when it
+    /// had events).
+    pub epochs: usize,
+    /// Leave events applied.
+    pub crashes: usize,
+    /// Join events applied.
+    pub rejoins: usize,
+    /// Link state *changes* from the Markov flap chain (an edge going
+    /// down and later up counts twice).
+    pub link_flaps: usize,
+    /// Message copies suppressed because the destination was dead.
+    pub dropped_dead: usize,
+    /// Message copies suppressed because the link was flapped down.
+    pub dropped_link_down: usize,
+    /// Message copies given extra straggler delay.
+    pub straggler_delayed: usize,
+    /// In-flight messages to dead destinations retired at boundaries
+    /// (drained into the payload pool — counted, never leaked).
+    pub retired_in_flight: usize,
+}
+
+/// A scripted churn trace: the epoch cadence plus membership events,
+/// optional link flapping, stragglers, and the rejoin policy. Cloneable
+/// and engine-agnostic; the coordinator owns applying it.
+#[derive(Debug, Clone)]
+pub struct TopologySchedule {
+    /// Rounds per epoch (boundaries between them); clamped to ≥ 1.
+    pub epoch_len: usize,
+    /// Scripted membership changes (applied in order within an epoch).
+    pub events: Vec<ChurnEvent>,
+    /// Markov per-link up/down chain (None = links never flap).
+    pub flap: Option<LinkFlap>,
+    /// Per-node straggler delay distributions.
+    pub stragglers: Vec<(usize, DelayDist)>,
+    /// State policy for rejoining nodes.
+    pub rejoin: RejoinPolicy,
+    /// Reweight the live subgraph with *lazy* Metropolis weights
+    /// (`(I + W)/2`) instead of plain Metropolis — matches fleets built
+    /// for CHOCO/CEDAS-style lazy mixing.
+    pub lazy_weights: bool,
+}
+
+impl TopologySchedule {
+    /// An empty schedule with the given epoch length.
+    pub fn new(epoch_len: usize) -> Self {
+        Self {
+            epoch_len: epoch_len.max(1),
+            events: Vec::new(),
+            flap: None,
+            stragglers: Vec::new(),
+            rejoin: RejoinPolicy::default(),
+            lazy_weights: false,
+        }
+    }
+
+    /// Add a leave event.
+    pub fn leave(mut self, epoch: usize, node: usize) -> Self {
+        self.events.push(ChurnEvent { epoch, node, kind: ChurnEventKind::Leave });
+        self
+    }
+
+    /// Add a join event.
+    pub fn join(mut self, epoch: usize, node: usize) -> Self {
+        self.events.push(ChurnEvent { epoch, node, kind: ChurnEventKind::Join });
+        self
+    }
+
+    /// Enable Markov link flapping.
+    pub fn with_flap(mut self, p_down: f64, p_up: f64) -> Self {
+        self.flap = Some(LinkFlap { p_down, p_up });
+        self
+    }
+
+    /// Give `node` a straggler delay distribution.
+    pub fn with_straggler(mut self, node: usize, dist: DelayDist) -> Self {
+        self.stragglers.push((node, dist));
+        self
+    }
+
+    /// Set the rejoin policy.
+    pub fn with_rejoin(mut self, rejoin: RejoinPolicy) -> Self {
+        self.rejoin = rejoin;
+        self
+    }
+
+    /// Reweight with the lazy Metropolis family.
+    pub fn with_lazy_weights(mut self, lazy: bool) -> Self {
+        self.lazy_weights = lazy;
+        self
+    }
+
+    /// The events firing at epoch boundary `e`, in script order.
+    pub fn events_at(&self, epoch: usize) -> impl Iterator<Item = &ChurnEvent> {
+        self.events.iter().filter(move |ev| ev.epoch == epoch)
+    }
+
+    /// Largest epoch any event fires at.
+    pub fn max_epoch(&self) -> usize {
+        self.events.iter().map(|e| e.epoch).max().unwrap_or(0)
+    }
+
+    /// Sanity-check node ids against the fleet size.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        for ev in &self.events {
+            if ev.node >= n {
+                return Err(format!("churn event references node {} (fleet has {n})", ev.node));
+            }
+        }
+        for &(node, _) in &self.stragglers {
+            if node >= n {
+                return Err(format!("straggler references node {node} (fleet has {n})"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Generate a join/leave storm: at every epoch `1..=epochs`,
+    /// `leaves_per_epoch` distinct live nodes crash and rejoin
+    /// `down_epochs` boundaries later. Victims are drawn from the
+    /// stateless hash stream, never exceed half the fleet concurrently,
+    /// and the generated trace is a pure function of `(n, seed)` — the
+    /// `run --exp churn` sweep and the churn bench both script with
+    /// this.
+    pub fn storm(
+        n: usize,
+        epoch_len: usize,
+        epochs: usize,
+        leaves_per_epoch: usize,
+        down_epochs: usize,
+        seed: u64,
+    ) -> Self {
+        let mut s = Self::new(epoch_len);
+        let down_epochs = down_epochs.max(1);
+        let mut alive = vec![true; n];
+        let mut down = 0usize;
+        // (rejoin epoch, node), kept sorted by construction.
+        let mut pending: Vec<(usize, usize)> = Vec::new();
+        for e in 1..=epochs {
+            let mut i = 0;
+            while i < pending.len() {
+                if pending[i].0 == e {
+                    let (_, v) = pending.remove(i);
+                    s.events.push(ChurnEvent { epoch: e, node: v, kind: ChurnEventKind::Join });
+                    alive[v] = true;
+                    down -= 1;
+                } else {
+                    i += 1;
+                }
+            }
+            for l in 0..leaves_per_epoch {
+                if down + 1 > n / 2 {
+                    break; // never take down more than half the fleet
+                }
+                let mut victim = None;
+                for t in 0..4 * n as u64 {
+                    let u = fault_u01(seed, STORM_SALT, e as u64, (l as u64) << 32 | t);
+                    let v = ((u * n as f64) as usize).min(n - 1);
+                    if alive[v] {
+                        victim = Some(v);
+                        break;
+                    }
+                }
+                let Some(v) = victim else { break };
+                s.events.push(ChurnEvent { epoch: e, node: v, kind: ChurnEventKind::Leave });
+                alive[v] = false;
+                down += 1;
+                pending.push((e + down_epochs, v));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_u01_is_deterministic_and_salted() {
+        let a = fault_u01(7, STRAGGLE_SALT, 3, 41);
+        let b = fault_u01(7, STRAGGLE_SALT, 3, 41);
+        assert_eq!(a.to_bits(), b.to_bits(), "stateless hash must be pure");
+        assert!((0.0..1.0).contains(&a));
+        let c = fault_u01(7, FLAP_SALT, 3, 41);
+        assert_ne!(a.to_bits(), c.to_bits(), "salts must decorrelate the axes");
+    }
+
+    #[test]
+    fn delay_dist_draw_stays_in_bounds() {
+        let f = DelayDist::Fixed(3);
+        assert_eq!(f.draw(0.0), 3);
+        assert_eq!(f.draw(0.999), 3);
+        let u = DelayDist::Uniform { lo: 1, hi: 4 };
+        for k in 0..100 {
+            let d = u.draw(k as f64 / 100.0);
+            assert!((1..=4).contains(&d), "draw {d} out of bounds");
+        }
+        assert_eq!(u.draw(0.0), 1);
+        assert_eq!(u.draw(0.999_999), 4);
+    }
+
+    #[test]
+    fn delay_dist_parses_both_forms() {
+        assert_eq!(DelayDist::parse("5").unwrap(), DelayDist::Fixed(5));
+        assert_eq!(DelayDist::parse("1-4").unwrap(), DelayDist::Uniform { lo: 1, hi: 4 });
+        assert!(DelayDist::parse("4-1").is_err());
+        assert!(DelayDist::parse("x").is_err());
+    }
+
+    #[test]
+    fn churn_event_parses() {
+        let e = ChurnEvent::parse("leave@2:5").unwrap();
+        assert_eq!(e, ChurnEvent { epoch: 2, node: 5, kind: ChurnEventKind::Leave });
+        let j = ChurnEvent::parse("join@4:5").unwrap();
+        assert_eq!(j.kind, ChurnEventKind::Join);
+        assert!(ChurnEvent::parse("kill@1:2").is_err());
+        assert!(ChurnEvent::parse("leave@1").is_err());
+    }
+
+    #[test]
+    fn link_flap_is_a_proper_two_state_chain() {
+        let flap = LinkFlap { p_down: 0.0, p_up: 1.0 };
+        // p_down = 0: an up link never flaps down; p_up = 1: a down link
+        // always recovers.
+        for e in 0..50 {
+            assert!(flap.step(9, e, 0, true));
+            assert!(flap.step(9, e, 0, false));
+        }
+        // Deterministic per (seed, epoch, edge).
+        let f = LinkFlap { p_down: 0.5, p_up: 0.5 };
+        for e in 0..20 {
+            assert_eq!(f.step(1, e, 3, true), f.step(1, e, 3, true));
+        }
+    }
+
+    #[test]
+    fn storm_is_deterministic_and_bounded() {
+        let a = TopologySchedule::storm(16, 10, 8, 2, 2, 42);
+        let b = TopologySchedule::storm(16, 10, 8, 2, 2, 42);
+        assert_eq!(a.events, b.events, "storm must be a pure function of its inputs");
+        assert!(a.events.iter().any(|e| e.kind == ChurnEventKind::Leave));
+        assert!(a.events.iter().any(|e| e.kind == ChurnEventKind::Join));
+        assert!(a.validate(16).is_ok());
+        // Replay the trace: never more than half the fleet down, every
+        // join matches an earlier leave.
+        let mut alive = vec![true; 16];
+        for e in 0..=a.max_epoch() {
+            for ev in a.events_at(e) {
+                match ev.kind {
+                    ChurnEventKind::Leave => {
+                        assert!(alive[ev.node], "leave of a dead node");
+                        alive[ev.node] = false;
+                    }
+                    ChurnEventKind::Join => {
+                        assert!(!alive[ev.node], "join of a live node");
+                        alive[ev.node] = true;
+                    }
+                }
+            }
+            let down = alive.iter().filter(|a| !**a).count();
+            assert!(down <= 8, "epoch {e}: {down} nodes down");
+        }
+    }
+
+    #[test]
+    fn schedule_builders_compose() {
+        let s = TopologySchedule::new(25)
+            .leave(1, 3)
+            .leave(2, 0)
+            .join(3, 3)
+            .with_flap(0.2, 0.7)
+            .with_straggler(2, DelayDist::Fixed(2))
+            .with_rejoin(RejoinPolicy::Warm)
+            .with_lazy_weights(true);
+        assert_eq!(s.epoch_len, 25);
+        assert_eq!(s.events_at(1).count(), 1);
+        assert_eq!(s.events_at(2).count(), 1);
+        assert_eq!(s.max_epoch(), 3);
+        assert_eq!(s.rejoin, RejoinPolicy::Warm);
+        assert!(s.lazy_weights);
+        assert!(s.validate(4).is_ok());
+        assert!(s.validate(3).is_err(), "node 3 out of range");
+    }
+}

@@ -209,6 +209,46 @@ impl StatePlane {
         (0..self.n).map(|i| self.x_row(i).to_vec()).collect()
     }
 
+    /// Churn-plane rejoin masking: reset node `i`'s *own* compression
+    /// channel — its mirror row `x̃_i` drops to zero so the next
+    /// broadcast re-amplifies from a known origin. With `cold`, the
+    /// node's persistent rows (`x`, `grad`, and `aux` when present) are
+    /// also zeroed, modeling a crash that lost local state; a warm
+    /// rejoin keeps them (last-known restart). The node's mirrors *of
+    /// its neighbors* are never touched here — those views re-converge
+    /// through normal message flow. Callers must pair this with
+    /// [`Self::zero_mirror_slot`] on every live neighbor so both ends
+    /// of each mirror channel restart from the same origin.
+    pub fn mask_node(&mut self, i: usize, cold: bool) {
+        assert!(i < self.n, "node out of range");
+        let p = self.p;
+        if self.has_mirrors() {
+            vecops::row_mut(&mut self.mirror_self, p, i).fill(0.0);
+        }
+        if cold {
+            vecops::row_mut(&mut self.x, p, i).fill(0.0);
+            vecops::row_mut(&mut self.grad, p, i).fill(0.0);
+            if self.has_aux() {
+                vecops::row_mut(&mut self.aux, p, i).fill(0.0);
+            }
+        }
+    }
+
+    /// Churn-plane rejoin masking, receiver side: zero receiver `u`'s
+    /// mirror of neighbor slot `slot` (ascending-neighbor order), so
+    /// `u`'s view of a rejoined neighbor matches that neighbor's freshly
+    /// reset [`mask_node`](Self::mask_node) mirror. No-op on
+    /// mirror-free layouts.
+    pub fn zero_mirror_slot(&mut self, u: usize, slot: usize) {
+        if !self.has_mirrors() {
+            return;
+        }
+        let deg = self.mirror_off[u + 1] - self.mirror_off[u];
+        assert!(slot < deg, "mirror slot out of range");
+        let base = (self.mirror_off[u] + slot) * self.p;
+        self.mirrors[base..base + self.p].fill(0.0);
+    }
+
     /// Borrow node `i`'s rows as one mutable view. The borrow is scoped
     /// to the returned view, so call sites interleave views and shared
     /// reads freely (rule 1 of the module docs).
@@ -690,6 +730,55 @@ mod tests {
         assert_eq!(tile_bounds(32, 4), vec![0, 8, 16, 24, 32]);
         // Small p degenerates to one tile.
         assert_eq!(tile_bounds(3, 4), vec![0, 3]);
+    }
+
+    #[test]
+    fn mask_node_resets_the_rejoin_channel_only() {
+        // Degrees 2, 1, 1 on a path-ish layout; p = 2.
+        let mut plane = StatePlane::new(&PlaneLayout::with_mirrors(3, 2, vec![2, 1, 1]).with_aux());
+        for i in 0..3 {
+            let rows = plane.rows(i);
+            rows.x.fill(1.0 + i as f64);
+            rows.grad.fill(2.0);
+            rows.mirror_self.fill(3.0);
+            rows.mirrors.fill(4.0);
+            rows.aux.fill(5.0);
+        }
+        // Warm rejoin of node 1: own mirror drops, x/grad/aux survive,
+        // mirrors-of-others survive.
+        plane.mask_node(1, false);
+        {
+            let rows = plane.rows(1);
+            assert_eq!(rows.mirror_self, &[0.0, 0.0]);
+            assert_eq!(rows.x, &[2.0, 2.0]);
+            assert_eq!(rows.grad, &[2.0, 2.0]);
+            assert_eq!(rows.aux, &[5.0, 5.0]);
+            assert_eq!(rows.mirrors, &[4.0, 4.0]);
+        }
+        // Receiver side: node 0 zeroes its mirror slot 1 (of node 1,
+        // say); slot 0 is untouched.
+        plane.zero_mirror_slot(0, 1);
+        {
+            let rows = plane.rows(0);
+            assert_eq!(&rows.mirrors[..2], &[4.0, 4.0]);
+            assert_eq!(&rows.mirrors[2..], &[0.0, 0.0]);
+        }
+        // Cold rejoin of node 2 wipes persistent rows too.
+        plane.mask_node(2, true);
+        {
+            let rows = plane.rows(2);
+            assert_eq!(rows.x, &[0.0, 0.0]);
+            assert_eq!(rows.grad, &[0.0, 0.0]);
+            assert_eq!(rows.aux, &[0.0, 0.0]);
+            assert_eq!(rows.mirror_self, &[0.0, 0.0]);
+        }
+        // Mirror-free layouts: mask still clears dense rows, slot-zero
+        // is a no-op.
+        let mut dense = StatePlane::new(&PlaneLayout::dense(2, 2));
+        dense.rows(0).x.fill(9.0);
+        dense.zero_mirror_slot(0, 0);
+        dense.mask_node(0, true);
+        assert_eq!(dense.x_row(0), &[0.0, 0.0]);
     }
 
     #[test]

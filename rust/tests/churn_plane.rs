@@ -1,0 +1,218 @@
+//! Churn-plane contract tests: a scripted fault trace (crashes,
+//! rejoins, link flaps, stragglers) must unfold bit-identically on all
+//! four engines, converge for the compressed-consensus algorithms
+//! through a join/leave storm, keep the payload-reclaim accounting
+//! airtight across epoch boundaries, and leave the churn-free pathway
+//! untouched.
+
+use adcdgd::algorithms::{AdcDgdOptions, AlgorithmKind, ChocoSgdOptions, StepSize};
+use adcdgd::coordinator::{
+    CompressorSpec, EngineKind, ObjectiveSpec, RunConfig, RunOutput, ScenarioSpec, TopologySpec,
+};
+use adcdgd::network::{DelayDist, LinkModel, RejoinPolicy, TopologySchedule};
+
+fn cfg(engine: EngineKind, iterations: usize) -> RunConfig {
+    RunConfig {
+        iterations,
+        step_size: StepSize::Constant(0.01),
+        record_every: 25,
+        seed: 5,
+        engine,
+        ..RunConfig::default()
+    }
+}
+
+/// The issue's scripted trace: two leaves, one rejoin, one straggler,
+/// and Markov link flaps, on a 25-round epoch cadence.
+fn scripted_schedule() -> TopologySchedule {
+    TopologySchedule::new(25)
+        .leave(1, 3)
+        .leave(2, 10)
+        .join(3, 3)
+        .with_straggler(5, DelayDist::Fixed(1))
+        .with_flap(0.05, 0.8)
+}
+
+fn adc_ring_spec(n: usize) -> ScenarioSpec {
+    ScenarioSpec::new(
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        TopologySpec::Ring(n),
+        ObjectiveSpec::RandomCircle { seed: 77 },
+    )
+    .with_compressor(CompressorSpec::TernGrad)
+}
+
+fn assert_identical(a: &RunOutput, b: &RunOutput, label: &str) {
+    assert_eq!(a.rounds_completed, b.rounds_completed, "{label}: rounds");
+    assert_eq!(a.total_bytes, b.total_bytes, "{label}: bytes");
+    assert_eq!(a.dropped_messages, b.dropped_messages, "{label}: drops");
+    assert_eq!(a.churn, b.churn, "{label}: fault counters");
+    assert_eq!(a.metrics.grad_norm, b.metrics.grad_norm, "{label}: grad norm");
+    assert_eq!(a.metrics.consensus_error, b.metrics.consensus_error, "{label}: consensus");
+    for (i, (x, y)) in a.final_states.iter().zip(b.final_states.iter()).enumerate() {
+        for (e, (p, q)) in x.iter().zip(y.iter()).enumerate() {
+            assert_eq!(p.to_bits(), q.to_bits(), "{label}: node {i} dim {e}");
+        }
+    }
+}
+
+/// The tentpole determinism gate: the scripted churn trace must produce
+/// exact f64 bit-identity on sequential / threaded / pool / dim — the
+/// whole fault axis (who crashed when, which links flapped, which
+/// broadcasts straggled) is a stateless hash of the churn seed, so no
+/// engine scheduling can leak into the trajectory.
+#[test]
+fn scripted_churn_is_bit_identical_on_all_four_engines() {
+    let spec = adc_ring_spec(16).with_churn(scripted_schedule());
+    let prepared = spec.prepare();
+    let seq = prepared.run_with(&cfg(EngineKind::Sequential, 100));
+    // The trace actually exercised every fault axis.
+    assert_eq!(seq.churn.epochs, 4);
+    assert_eq!(seq.churn.crashes, 2);
+    assert_eq!(seq.churn.rejoins, 1);
+    assert!(seq.churn.dropped_dead > 0, "dead destinations must eat copies");
+    assert!(seq.churn.straggler_delayed > 0, "the straggler must fire");
+    let thr = prepared.run_with(&cfg(EngineKind::Threaded, 100));
+    let pool = prepared.run_with(&cfg(EngineKind::Pool { workers: 3 }, 100));
+    let dim = prepared.run_with(&cfg(EngineKind::Dim { workers: 3, tiles: 2 }, 100));
+    assert_identical(&seq, &thr, "threaded");
+    assert_identical(&seq, &pool, "pool(3)");
+    assert_identical(&seq, &dim, "dim(3,2)");
+}
+
+/// An attached-but-empty schedule must reproduce the churn-free pathway
+/// bit-for-bit: epoch segmentation, the enabled fault filter, the
+/// boundary reweighting (all-alive Metropolis), and the masked metric
+/// reductions are all exact no-ops when nothing ever faults. This also
+/// pins the drop trace: loss rolls key on global (src, dst, round), so
+/// epoch relayout cannot shift them.
+#[test]
+fn empty_schedule_is_bit_identical_to_no_schedule() {
+    let base = adc_ring_spec(12);
+    let churned = base.clone().with_churn(TopologySchedule::new(30));
+    let mut c = cfg(EngineKind::Sequential, 120);
+    c.link = LinkModel { drop_prob: 0.10, ..LinkModel::default() };
+    let a = base.prepare().run_with(&c);
+    let b = churned.prepare().run_with(&c);
+    assert!(a.dropped_messages > 0, "loss must be active");
+    assert_eq!(a.dropped_messages, b.dropped_messages, "drop trace must not shift");
+    assert_eq!(a.total_bytes, b.total_bytes);
+    assert_eq!(a.final_states, b.final_states, "empty churn must be a no-op");
+    assert_eq!(b.churn.crashes + b.churn.rejoins + b.churn.link_flaps, 0);
+    assert_eq!(b.churn.epochs, 4, "the epoch machinery itself must have run");
+}
+
+/// ADC-DGD with ternary compression converges through a join/leave
+/// storm: repeated crashes and rejoins perturb but do not break the
+/// error-ball convergence of the amplified differential scheme.
+#[test]
+fn adc_ternary_converges_through_a_storm() {
+    let storm = TopologySchedule::storm(16, 50, 30, 2, 2, 42);
+    let spec = ScenarioSpec::new(
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        TopologySpec::Grid { rows: 4, cols: 4 },
+        ObjectiveSpec::RandomCircle { seed: 9 },
+    )
+    .with_compressor(CompressorSpec::TernGrad)
+    .with_churn(storm);
+    let mut c = cfg(EngineKind::Sequential, 1500);
+    c.step_size = StepSize::Constant(0.02);
+    let out = spec.prepare().run_with(&c);
+    assert_eq!(out.rounds_completed, 1500);
+    assert!(out.churn.crashes >= 10, "storm must churn: {:?}", out.churn);
+    assert!(out.churn.rejoins >= 10, "crashed nodes must come back: {:?}", out.churn);
+    let gn = &out.metrics.grad_norm;
+    let tail_len = (gn.len() / 5).max(1);
+    let tail = gn[gn.len() - tail_len..].iter().sum::<f64>() / tail_len as f64;
+    let head = gn[0];
+    assert!(tail.is_finite() && tail < head, "grad norm should decrease: {head} -> {tail}");
+    assert!(tail < 10.0, "storm tail grad norm {tail} (diverged?)");
+}
+
+/// CHOCO-SGD (full-shard gradients, ternary gossip) survives the same
+/// storm: the mirror resynchronization on rejoin keeps the gossip
+/// channel consistent, so the method still contracts.
+#[test]
+fn choco_converges_through_a_storm() {
+    let storm = TopologySchedule::storm(16, 50, 20, 2, 2, 7);
+    let spec = ScenarioSpec::new(
+        AlgorithmKind::ChocoSgd(ChocoSgdOptions { consensus_step: 0.4, batch: 0 }),
+        TopologySpec::Grid { rows: 4, cols: 4 },
+        ObjectiveSpec::RandomCircle { seed: 13 },
+    )
+    .with_compressor(CompressorSpec::TernGrad)
+    .with_churn(storm);
+    let mut c = cfg(EngineKind::Sequential, 1000);
+    c.step_size = StepSize::Constant(0.02);
+    let out = spec.prepare().run_with(&c);
+    assert_eq!(out.rounds_completed, 1000);
+    assert!(out.churn.crashes >= 5, "storm must churn: {:?}", out.churn);
+    let gn = &out.metrics.grad_norm;
+    let tail_len = (gn.len() / 5).max(1);
+    let tail = gn[gn.len() - tail_len..].iter().sum::<f64>() / tail_len as f64;
+    assert!(tail.is_finite() && tail < gn[0], "grad norm should decrease: {} -> {tail}", gn[0]);
+}
+
+/// Satellite 1 — payload-cell leak audit. With delayed links, a crash
+/// strands in-flight messages addressed to the dead node; the boundary
+/// must retire them through the reclaim hook (counted), and the pool
+/// health counter must stay at warm-up scale per epoch segment — cells
+/// never accumulate O(rounds) across boundaries.
+#[test]
+fn epoch_boundaries_retire_in_flight_payloads_without_leaking() {
+    let sched = TopologySchedule::new(20).leave(1, 4).leave(2, 11).join(3, 4);
+    let spec = adc_ring_spec(16).with_churn(sched);
+    let mut c = cfg(EngineKind::Sequential, 120);
+    c.link = LinkModel::with_delay(2);
+    let out = spec.prepare().run_with(&c);
+    assert_eq!(out.rounds_completed, 120);
+    assert!(
+        out.churn.retired_in_flight > 0,
+        "a crash under 2-round delay must strand in-flight traffic: {:?}",
+        out.churn
+    );
+    // 6 epoch segments, each with its own engine pool: warm-up covers
+    // the pipeline depth (n broadcasts alive for delay + 2 rounds) per
+    // segment, never O(rounds) — 120 rounds would mean ~1900 cells if
+    // the pool leaked one per broadcast.
+    let segments = 120 / 20;
+    let depth = 16 * (2 + 2);
+    assert!(
+        out.fresh_payload_cells > 0 && out.fresh_payload_cells <= segments * depth,
+        "fresh cells {} exceed {segments} segments x depth {depth}",
+        out.fresh_payload_cells
+    );
+}
+
+/// Cold and warm rejoin genuinely differ: cold restarts the node from
+/// x = 0 while warm resumes the last-known iterate, so the trajectories
+/// split after the rejoin boundary.
+#[test]
+fn cold_and_warm_rejoin_policies_differ() {
+    let mk = |policy| {
+        let sched = TopologySchedule::new(25).leave(1, 4).join(3, 4).with_rejoin(policy);
+        let spec = adc_ring_spec(8).with_churn(sched);
+        spec.prepare().run_with(&cfg(EngineKind::Sequential, 150))
+    };
+    let cold = mk(RejoinPolicy::Cold);
+    let warm = mk(RejoinPolicy::Warm);
+    assert_eq!(cold.churn.rejoins, 1);
+    assert_eq!(warm.churn.rejoins, 1);
+    assert_ne!(cold.final_states, warm.final_states, "rejoin policy must matter");
+}
+
+/// Dead nodes freeze: a node that leaves and never rejoins keeps the
+/// iterate it had at the crash boundary, while the survivors keep
+/// moving — and the run's metrics reduce over the survivors only.
+#[test]
+fn crashed_nodes_freeze_and_survivors_keep_converging() {
+    let base = adc_ring_spec(8);
+    let frozen = base.clone().with_churn(TopologySchedule::new(50).leave(1, 2));
+    let baseline = base.prepare().run_with(&cfg(EngineKind::Sequential, 200));
+    let out = frozen.prepare().run_with(&cfg(EngineKind::Sequential, 200));
+    // Node 2's state is its round-50 iterate, not the baseline's final.
+    assert_ne!(out.final_states[2], baseline.final_states[2], "dead node must freeze");
+    assert!(out.metrics.grad_norm.last().unwrap().is_finite());
+    assert_eq!(out.churn.crashes, 1);
+    assert_eq!(out.churn.rejoins, 0);
+}

@@ -167,6 +167,33 @@ fn solve_compressor_option_changes_bytes() {
 }
 
 #[test]
+fn solve_churn_flags_report_fault_counters() {
+    let (out, err, ok) = run(&[
+        "solve", "--algo", "adc", "--topology", "ring", "--n", "8", "--iters", "120",
+        "--record-every", "60", "--churn-epoch", "30", "--churn-events", "leave@1:2,join@3:2",
+    ]);
+    assert!(ok, "stdout: {out}\nstderr: {err}");
+    assert!(out.contains("churn epochs=4"), "{out}");
+    assert!(out.contains("crashes=1") && out.contains("rejoins=1"), "{out}");
+    // Without churn flags the counter line must not appear.
+    let (plain, _, plain_ok) = run(&[
+        "solve", "--algo", "adc", "--topology", "ring", "--n", "8", "--iters", "120",
+        "--record-every", "60",
+    ]);
+    assert!(plain_ok, "{plain}");
+    assert!(!plain.contains("churn epochs="), "{plain}");
+}
+
+#[test]
+fn run_churn_sweep_prints_series() {
+    let (out, _, ok) = run(&["run", "--exp", "churn", "--iters", "150"]);
+    assert!(ok, "{out}");
+    assert!(out.contains("churn_storm"), "{out}");
+    assert!(out.contains("adc_leaves_0/grad_norm"), "{out}");
+    assert!(out.contains("choco_leaves_2/grad_norm"), "{out}");
+}
+
+#[test]
 fn run_writes_csv_when_out_given() {
     let dir = std::env::temp_dir().join(format!("adcdgd_cli_{}", std::process::id()));
     let (out, _, ok) = run(&[

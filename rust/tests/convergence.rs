@@ -49,6 +49,7 @@ fn run_custom(
         compressor,
         config: *cfg,
         init: None,
+        churn: None,
     })
 }
 

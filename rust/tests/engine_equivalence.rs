@@ -469,6 +469,7 @@ fn custom_specs_remain_engine_invariant() {
         compressor: CompressorSpec::Custom(Arc::new(RandomizedRounding::new())),
         config: cfg(EngineKind::Sequential, 0.0),
         init: None,
+        churn: None,
     };
     let prepared = spec.prepare();
     let a = prepared.run_with(&cfg(EngineKind::Sequential, 0.0));

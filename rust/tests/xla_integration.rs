@@ -166,6 +166,7 @@ fn adc_dgd_over_xla_objectives_converges() {
         )),
         config: cfg,
         init: None,
+        churn: None,
     });
     let first = out.metrics.grad_norm[0];
     let last = *out.metrics.grad_norm.last().unwrap();

@@ -1,20 +1,34 @@
 #!/usr/bin/env python3
-"""Gate dimension-plane benchmark throughput against a committed baseline.
+"""Gate benchmark throughput against the committed ``BENCH_baseline/``.
 
-Compares the freshly produced ``BENCH_dim_plane.json`` (written by
-``ADCDGD_BENCH_ONLY=dim cargo bench --bench hotpath``) against the
-snapshot committed under ``BENCH_baseline/``. The gate fails when any
-(n, p, tiles) configuration regresses by more than the allowed margin
-(default: rounds/sec below 75% of baseline, i.e. a >25% regression), or
-when a baseline configuration disappeared from the current run.
+Every ``BENCH_*.json`` plane with a snapshot under ``BENCH_baseline/``
+is gated: the freshly produced JSON in the repo root (written by the
+``ADCDGD_BENCH_ONLY=<section> cargo bench --bench hotpath`` runs) is
+compared row by row against its baseline. A row is identified by its
+shape fields (n, p, tiles, wire, ...; machine-dependent fields such as
+worker counts are excluded), and every metric in it is checked:
+
+* ``rounds_per_sec`` — higher is better; fails below ``threshold``
+  times the baseline (default 0.75, i.e. a >25% regression).
+* ``*_mean_s`` — lower is better; fails when the baseline-to-current
+  ratio drops below the same threshold.
+
+Speedup ratios and allocation counters are not gated here (the
+allocation contracts are hard ``assert_eq!(allocs, 0)`` in the bench
+binary itself).
 
 Modes:
 
-* Baseline missing  -> bootstrap: pass, and print the command that
-  records one. CI stays green until a baseline is deliberately
+* Baseline missing entirely -> bootstrap: pass, and print the command
+  that records one. CI stays green until a baseline is deliberately
   committed; numbers are never invented here.
-* ``--update``      -> copy the current JSON into ``BENCH_baseline/``
-  (run on a quiet, representative machine, then commit the result).
+* Baseline present for a plane whose current JSON is absent -> that
+  plane is reported and skipped (the gate only judges what this run
+  produced).
+* ``--update``             -> copy every current ``BENCH_*.json`` into
+  ``BENCH_baseline/`` (run on a quiet, representative machine, then
+  commit the result).
+* ``--current/--baseline`` -> legacy single-pair mode, unchanged.
 
 Exit codes: 0 pass / bootstrap, 1 regression, 2 usage or parse error.
 """
@@ -28,15 +42,41 @@ import sys
 from pathlib import Path
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
-DEFAULT_CURRENT = REPO_ROOT / "BENCH_dim_plane.json"
-DEFAULT_BASELINE = REPO_ROOT / "BENCH_baseline" / "BENCH_dim_plane.json"
-# A configuration fails when current rounds/sec drops below this
+BASELINE_DIR = REPO_ROOT / "BENCH_baseline"
+# A metric fails when its better-is-higher ratio drops below this
 # fraction of the baseline (0.75 => >25% regression fails).
 DEFAULT_THRESHOLD = 0.75
 
+# Row-shape fields: stable identifiers of a configuration. Anything
+# machine-dependent (pool_workers, workers, machine_parallelism) must
+# stay out, or a baseline recorded on one box can never match another.
+KEY_FIELDS = (
+    "n", "p", "dim", "tiles", "wire", "rounds", "timed_rounds", "shard",
+    "batch", "edges", "k_regular", "epoch_len", "epochs", "churn_per_epoch",
+)
 
-def load_results(path: Path) -> dict[tuple[int, int, int], dict]:
-    """Index a bench JSON's result rows by (n, p, tiles)."""
+
+def row_key(row: dict) -> tuple:
+    return tuple((f, row[f]) for f in KEY_FIELDS if f in row)
+
+
+def row_label(key: tuple) -> str:
+    return " ".join(f"{f}={v}" for f, v in key) or "(single row)"
+
+
+def row_metrics(row: dict) -> dict[str, tuple[float, bool]]:
+    """Gated metrics of a row: name -> (value, higher_is_better)."""
+    out = {}
+    for name, value in row.items():
+        if name == "rounds_per_sec":
+            out[name] = (float(value), True)
+        elif name.endswith("_mean_s"):
+            out[name] = (float(value), False)
+    return out
+
+
+def load_results(path: Path) -> dict[tuple, dict]:
+    """Index a bench JSON's result rows by their shape fields."""
     try:
         doc = json.loads(path.read_text())
     except (OSError, json.JSONDecodeError) as e:
@@ -47,75 +87,120 @@ def load_results(path: Path) -> dict[tuple[int, int, int], dict]:
     indexed = {}
     for row in rows:
         try:
-            key = (int(row["n"]), int(row["p"]), int(row["tiles"]))
-            float(row["rounds_per_sec"])
+            key = row_key(row)
+            if not row_metrics(row):
+                raise ValueError("no gatable metric")
         except (KeyError, TypeError, ValueError) as e:
             sys.exit(f"error: malformed result row in {path}: {row!r} ({e})")
         indexed[key] = row
     return indexed
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--current", type=Path, default=DEFAULT_CURRENT,
-                    help="bench JSON produced by the current run")
-    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
-                    help="committed baseline JSON to compare against")
-    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
-                    help="minimum allowed current/baseline rounds/sec ratio")
-    ap.add_argument("--update", action="store_true",
-                    help="record the current JSON as the new baseline")
-    args = ap.parse_args()
-
-    if not args.current.exists():
-        sys.exit(f"error: {args.current} not found — run "
-                 "ADCDGD_BENCH_ONLY=dim cargo bench --bench hotpath first")
-    current = load_results(args.current)
-
-    if args.update:
-        args.baseline.parent.mkdir(parents=True, exist_ok=True)
-        shutil.copyfile(args.current, args.baseline)
-        print(f"baseline updated: {args.baseline} "
-              f"({len(current)} configurations)")
-        return 0
-
-    if not args.baseline.exists():
-        print(f"no baseline at {args.baseline} — bootstrap pass.")
-        print("record one on a quiet, representative machine with:")
-        print("  ADCDGD_BENCH_ONLY=dim cargo bench --bench hotpath")
-        print("  python3 scripts/check_bench_regression.py --update")
-        return 0
-
-    baseline = load_results(args.baseline)
+def gate_pair(current_path: Path, baseline_path: Path,
+              threshold: float) -> list[str]:
+    """Compare one plane; returns the failure messages (empty = pass)."""
+    plane = current_path.name
+    current = load_results(current_path)
+    baseline = load_results(baseline_path)
     failures = []
     for key, base_row in sorted(baseline.items()):
-        n, p, tiles = key
-        label = f"n={n} p={p} tiles={tiles}"
+        label = f"{plane} {row_label(key)}"
         cur_row = current.get(key)
         if cur_row is None:
             failures.append(f"{label}: configuration missing from current run")
             continue
-        base_rps = float(base_row["rounds_per_sec"])
-        cur_rps = float(cur_row["rounds_per_sec"])
-        ratio = cur_rps / base_rps if base_rps > 0 else float("inf")
-        verdict = "ok" if ratio >= args.threshold else "REGRESSION"
-        print(f"{label}: {cur_rps:.2f} vs baseline {base_rps:.2f} rounds/s "
-              f"(x{ratio:.3f}) {verdict}")
-        if ratio < args.threshold:
-            failures.append(
-                f"{label}: {cur_rps:.2f} rounds/s is below "
-                f"{args.threshold:.0%} of baseline {base_rps:.2f}")
+        cur_metrics = row_metrics(cur_row)
+        for name, (base_val, higher_better) in sorted(
+                row_metrics(base_row).items()):
+            if name not in cur_metrics:
+                failures.append(f"{label}: metric {name} missing")
+                continue
+            cur_val = cur_metrics[name][0]
+            if higher_better:
+                ratio = cur_val / base_val if base_val > 0 else float("inf")
+            else:
+                ratio = base_val / cur_val if cur_val > 0 else float("inf")
+            verdict = "ok" if ratio >= threshold else "REGRESSION"
+            print(f"{label} {name}: {cur_val:.4g} vs baseline "
+                  f"{base_val:.4g} (x{ratio:.3f}) {verdict}")
+            if ratio < threshold:
+                failures.append(
+                    f"{label}: {name} {cur_val:.4g} is beyond the "
+                    f"{1 - threshold:.0%} margin of baseline {base_val:.4g}")
     for key in sorted(set(current) - set(baseline)):
-        n, p, tiles = key
-        print(f"n={n} p={p} tiles={tiles}: new configuration (no baseline)")
+        print(f"{plane} {row_label(key)}: new configuration (no baseline)")
+    return failures
 
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", type=Path, default=None,
+                    help="gate one bench JSON instead of every plane")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="baseline JSON for --current (default: the "
+                         "same file name under BENCH_baseline/)")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="minimum allowed current/baseline metric ratio")
+    ap.add_argument("--update", action="store_true",
+                    help="record the current JSON(s) as the new baseline")
+    args = ap.parse_args()
+
+    # Legacy single-pair mode.
+    if args.current is not None:
+        baseline = args.baseline or BASELINE_DIR / args.current.name
+        if not args.current.exists():
+            sys.exit(f"error: {args.current} not found — run the matching "
+                     "ADCDGD_BENCH_ONLY=<section> cargo bench first")
+        if args.update:
+            baseline.parent.mkdir(parents=True, exist_ok=True)
+            shutil.copyfile(args.current, baseline)
+            print(f"baseline updated: {baseline} "
+                  f"({len(load_results(args.current))} configurations)")
+            return 0
+        if not baseline.exists():
+            print(f"no baseline at {baseline} — bootstrap pass.")
+            return 0
+        failures = gate_pair(args.current, baseline, args.threshold)
+        return report(failures, args.threshold)
+
+    # Fleet mode: every BENCH_*.json plane.
+    current_planes = sorted(REPO_ROOT.glob("BENCH_*.json"))
+    if args.update:
+        if not current_planes:
+            sys.exit("error: no BENCH_*.json in the repo root — run the "
+                     "bench sections first")
+        BASELINE_DIR.mkdir(parents=True, exist_ok=True)
+        for path in current_planes:
+            shutil.copyfile(path, BASELINE_DIR / path.name)
+            print(f"baseline updated: {BASELINE_DIR / path.name}")
+        return 0
+
+    baselines = sorted(BASELINE_DIR.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"no baselines under {BASELINE_DIR} — bootstrap pass.")
+        print("record them on a quiet, representative machine with:")
+        print("  ADCDGD_BENCH_ONLY=<section> cargo bench --bench hotpath")
+        print("  python3 scripts/check_bench_regression.py --update")
+        return 0
+
+    failures = []
+    for baseline in baselines:
+        current = REPO_ROOT / baseline.name
+        if not current.exists():
+            print(f"{baseline.name}: not produced by this run — skipped")
+            continue
+        failures += gate_pair(current, baseline, args.threshold)
+    return report(failures, args.threshold)
+
+
+def report(failures: list[str], threshold: float) -> int:
     if failures:
         print(f"\n{len(failures)} regression(s) beyond the "
-              f"{1 - args.threshold:.0%} margin:", file=sys.stderr)
+              f"{1 - threshold:.0%} margin:", file=sys.stderr)
         for f in failures:
             print(f"  {f}", file=sys.stderr)
         return 1
-    print("dim-plane throughput within margin of baseline.")
+    print("bench throughput within margin of baseline.")
     return 0
 
 
