@@ -29,8 +29,12 @@
 //! plane: incremental-relayout cost per epoch boundary and steady-state
 //! rounds/sec under 1% crash/rejoin churn per epoch at n ∈ {256, 2048},
 //! with the zero-alloc assertion on in-epoch rounds — emits
-//! `BENCH_churn_plane.json`) to run a single section (CI uses these to
-//! publish the JSON artifacts quickly).
+//! `BENCH_churn_plane.json`), or `ADCDGD_BENCH_ONLY=telemetry`
+//! (telemetry plane: sequential rounds at n ∈ {16, 256, 2048} with
+//! phase timers off vs on, the zero-steady-state-allocation assertion
+//! with telemetry enabled, and the sealed-registry update kernel —
+//! emits `BENCH_telemetry_plane.json`) to run a single section (CI
+//! uses these to publish the JSON artifacts quickly).
 
 use adcdgd::algorithms::{
     AdcDgdOptions, AlgorithmKind, ChocoSgdOptions, CompressorRef, ObjectiveRef, StepSize,
@@ -1111,6 +1115,7 @@ fn dim_plane_bench() {
                 0,
                 tiles,
                 |k| k == warmup || k == rounds,
+                None,
                 |t, _s, _b| {
                     // Round `warmup` opens the timed window (pool cells,
                     // arenas, snapshot rows, and thread parking are warm
@@ -1340,6 +1345,124 @@ fn churn_plane_bench() {
     println!("churn-plane bench written to BENCH_churn_plane.json");
 }
 
+/// Telemetry plane: full sequential ADC-DGD + ternary rounds at
+/// n ∈ {16, 256, 2048} with phase timers off vs on. The timed window
+/// (rounds 9–28, bracketed by observer callbacks as in the dim section)
+/// must allocate **nothing** with telemetry enabled — `PhaseTimers`
+/// records through plain `Cell` stores and `Instant` reads — and the
+/// rounds/sec overhead is the artifact CI gates on. A sealed-registry
+/// kernel check (counter add + gauge store + histogram observe) pins
+/// the `Registry` update path to zero allocations as well. Emits
+/// `BENCH_telemetry_plane.json`.
+fn telemetry_plane_bench() {
+    use adcdgd::telemetry::PhaseTimers;
+    println!("== telemetry plane (phase timers off vs on) ==");
+
+    // Registry update kernel: one counter add, one gauge store, one
+    // histogram observe per iteration — zero heap traffic after seal.
+    let mut reg = adcdgd::telemetry::Registry::new();
+    let events = reg.counter("bench_events_total");
+    let level = reg.gauge("bench_level");
+    let lat = reg.histogram("bench_latency_s", &[1e-6, 1e-4, 1e-2]);
+    reg.seal();
+    reg.add(events, 1); // warm nothing — the path is allocation-free from the start
+    let before = alloc_counter::count();
+    for i in 0..100_000u64 {
+        reg.add(events, 1);
+        reg.set_gauge(level, i as f64);
+        reg.observe(lat, (i % 97) as f64 * 1e-5);
+    }
+    let reg_allocs = alloc_counter::count() - before;
+    assert_eq!(reg_allocs, 0, "sealed registry allocated {reg_allocs} times over 100k updates");
+    println!("registry kernel: 100k counter/gauge/histogram updates, allocs: {reg_allocs}");
+
+    let rounds = 28usize;
+    let warmup = 8usize;
+    let p_dim = 64usize;
+    let mut rows_json = Vec::new();
+    for n in [16usize, 256, 2048] {
+        let p_edge = (12.0 / n as f64).min(0.5);
+        let g = adcdgd::topology::erdos_renyi(n, p_edge, 5);
+        let w = adcdgd::consensus::Weights::metropolis(&g);
+        let objs = quad_objectives(n, p_dim, 19);
+        let kind = AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 });
+        let comp: CompressorRef = Arc::new(TernGrad::new());
+        let mut rps = [0.0f64; 2]; // [off, on]
+        let mut allocs_on = usize::MAX;
+        for (which, telemetry) in [(0usize, false), (1, true)] {
+            let fleet =
+                kind.build_fleet(&g, &w, &objs, Some(&comp), StepSize::Constant(0.01), None);
+            let mut nodes = fleet.nodes;
+            let mut plane = fleet.plane;
+            let mut rngs: Vec<Xoshiro256pp> =
+                (0..n).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
+            let mut bus = Bus::new(&g, LinkModel::default(), 3);
+            bus.set_measure_wire(false);
+            let timers = telemetry.then(PhaseTimers::new);
+            let mut t0: Option<std::time::Instant> = None;
+            let mut allocs0 = 0usize;
+            let mut elapsed = 0.0f64;
+            let mut allocs = usize::MAX;
+            let stats = adcdgd::engine::sequential::run(
+                &mut nodes,
+                &mut plane,
+                &mut rngs,
+                &mut bus,
+                rounds,
+                timers.as_ref(),
+                |t, _nodes, _plane, _bus| {
+                    if t.round == warmup {
+                        allocs0 = alloc_counter::count();
+                        t0 = Some(std::time::Instant::now());
+                    } else if t.round == rounds {
+                        elapsed = t0.expect("warm-up round observed").elapsed().as_secs_f64();
+                        allocs = alloc_counter::count() - allocs0;
+                    }
+                    true
+                },
+            );
+            assert_eq!(stats.completed, rounds);
+            assert_eq!(
+                allocs, 0,
+                "sequential rounds allocated {allocs} times over rounds {}..={rounds} \
+                 (n={n}, telemetry={telemetry})",
+                warmup + 1
+            );
+            rps[which] = (rounds - warmup) as f64 / elapsed;
+            if telemetry {
+                allocs_on = allocs;
+                let t = timers.as_ref().expect("telemetry on");
+                // Six sequential phases, each spanned every timed round.
+                assert_eq!(t.names().len(), 6);
+                assert!(t.total_nanos() > 0, "timers recorded nothing");
+            }
+        }
+        let overhead_pct = 100.0 * (1.0 - rps[1] / rps[0]);
+        println!(
+            "telemetry n={n:<5} off {:>8.2} rounds/s, on {:>8.2} rounds/s \
+             (overhead {overhead_pct:.2}%), allocs in timed window: {allocs_on}",
+            rps[0], rps[1]
+        );
+        for (telemetry, r) in [("off", rps[0]), ("on", rps[1])] {
+            rows_json.push(format!(
+                "    {{\"n\": {n}, \"p\": {p_dim}, \"timed_rounds\": {}, \
+                 \"telemetry\": \"{telemetry}\", \"rounds_per_sec\": {r:.4}, \
+                 \"overhead_pct\": {overhead_pct:.3}, \"allocs_after_warmup\": {allocs_on}, \
+                 \"registry_kernel_allocs\": {reg_allocs}}}",
+                rounds - warmup
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"telemetry_plane\",\n  \"pathway\": \"sequential adc-dgd + terngrad \
+         rounds, Cell-backed phase timers + sealed registry\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    std::fs::write("BENCH_telemetry_plane.json", &json)
+        .expect("write BENCH_telemetry_plane.json");
+    println!("telemetry-plane bench written to BENCH_telemetry_plane.json");
+}
+
 fn xla_paths() {
     let dir = adcdgd::runtime::artifacts_dir(None);
     if !adcdgd::runtime::artifacts_available(&dir) {
@@ -1422,6 +1545,10 @@ fn main() {
         churn_plane_bench();
         return;
     }
+    if only == "telemetry" {
+        telemetry_plane_bench();
+        return;
+    }
     println!("== L3 hot path ==");
     for p in [100usize, 10_000, 100_000] {
         round_throughput(p, 20);
@@ -1437,6 +1564,7 @@ fn main() {
     wire_plane_bench();
     dim_plane_bench();
     churn_plane_bench();
+    telemetry_plane_bench();
     println!("== XLA-backed paths ==");
     xla_paths();
 }

@@ -78,6 +78,14 @@ pub struct RunConfig {
     /// pass — modeled byte accounting is unaffected, measured counters
     /// read zero. Default `true`.
     pub measure_wire: bool,
+    /// Run with the telemetry plane on: engine phase timers (wall
+    /// clock, outside the simulated clock), fleet counter rollups, and
+    /// per-node transport rollups in [`RunOutput::telemetry`]. Strictly
+    /// observational — results are bit-identical with it off; off skips
+    /// every clock read. Default `true`.
+    ///
+    /// [`RunOutput::telemetry`]: super::RunOutput::telemetry
+    pub telemetry: bool,
 }
 
 impl Default for RunConfig {
@@ -91,6 +99,7 @@ impl Default for RunConfig {
             link: LinkModel::default(),
             engine: EngineKind::Sequential,
             measure_wire: true,
+            telemetry: true,
         }
     }
 }
@@ -107,5 +116,6 @@ mod tests {
         assert_eq!(c.engine, EngineKind::Sequential);
         assert!(c.grad_tol.is_none());
         assert!(c.measure_wire, "wire metering must default on");
+        assert!(c.telemetry, "telemetry plane must default on");
     }
 }

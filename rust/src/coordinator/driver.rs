@@ -11,6 +11,7 @@ use crate::linalg::vecops;
 use crate::metrics::{RoundRecord, RunMetrics};
 use crate::network::{Bus, ChurnCounters, ChurnEventKind, RejoinPolicy, TopologySchedule};
 use crate::rng::Xoshiro256pp;
+use crate::telemetry::{PhaseStat, PhaseTimers, TelemetrySummary};
 use crate::topology::Graph;
 use std::sync::Arc;
 
@@ -54,6 +55,48 @@ pub struct RunOutput {
     /// the payload-reclaim hook at epoch boundaries. All zero for
     /// churn-free runs.
     pub churn: ChurnCounters,
+    /// Telemetry-plane rollup: wall-clock phase breakdown from the
+    /// engine's [`PhaseTimers`], fleet-wide transport counters, and
+    /// per-node send/drop/byte/supersede rollups harvested from the bus
+    /// after the run. `enabled = false` (all zeros) when
+    /// [`RunConfig::telemetry`] is off. Strictly observational: the
+    /// simulated clock, metrics, and iterates are bit-identical either
+    /// way.
+    pub telemetry: TelemetrySummary,
+}
+
+/// Harvest the run's [`TelemetrySummary`] after the engine returns:
+/// phase wall-times from the timers, fleet totals and per-node rollups
+/// from the bus. `timers = None` (telemetry disabled) yields the
+/// all-zero `enabled = false` summary.
+fn harvest_telemetry(
+    timers: Option<&PhaseTimers>,
+    bus: &Bus,
+    fresh_cells: usize,
+) -> TelemetrySummary {
+    let Some(t) = timers else {
+        return TelemetrySummary::default();
+    };
+    let phases: Vec<PhaseStat> = t
+        .snapshot()
+        .into_iter()
+        .map(|(name, total_secs, count)| PhaseStat { name, total_secs, count })
+        .collect();
+    let total_phase_secs = phases.iter().map(|p| p.total_secs).sum();
+    let (_, _, straggler_delayed) = bus.fault_counts();
+    TelemetrySummary {
+        enabled: true,
+        phases,
+        total_phase_secs,
+        sends: bus.total_messages() as u64,
+        drops: bus.total_dropped() as u64,
+        superseded: bus.total_superseded() as u64,
+        straggler_delayed: straggler_delayed as u64,
+        modeled_bytes: bus.total_bytes() as u64,
+        measured_bytes: bus.total_measured_bytes() as u64,
+        fresh_payload_cells: fresh_cells as u64,
+        node_rollups: (0..bus.n()).map(|i| bus.node_rollup(i)).collect(),
+    }
 }
 
 /// Derive per-node RNG streams from a master seed: stream `i` is the
@@ -232,6 +275,11 @@ pub fn run_fleet_churn(
     let mut metrics = RunMetrics::default();
     let mut helper = MetricHelper::new(objectives, cfg);
     let total_rounds = cfg.iterations;
+    // One set of phase timers for the whole run; the engine binds its
+    // own phase table. `None` when telemetry is off — the engines then
+    // skip every clock read.
+    let timers = cfg.telemetry.then(PhaseTimers::new);
+    let tel = timers.as_ref();
 
     let (bus, stats) = match cfg.engine {
         EngineKind::Sequential => {
@@ -241,6 +289,7 @@ pub fn run_fleet_churn(
                 &mut rngs,
                 &mut bus,
                 total_rounds,
+                tel,
                 |telem, ns, pl, b| {
                     if helper.should_record(&telem, total_rounds) {
                         let states: Vec<&[f64]> = (0..n).map(|i| pl.x_row(i)).collect();
@@ -263,7 +312,7 @@ pub fn run_fleet_churn(
         }
         EngineKind::Threaded => {
             let (_nodes, bus, stats) =
-                threaded::run(nodes, &mut plane, rngs, bus, total_rounds, |telem, snap, b| {
+                threaded::run(nodes, &mut plane, rngs, bus, total_rounds, tel, |telem, snap, b| {
                     if helper.should_record(&telem, total_rounds) {
                         let states: Vec<&[f64]> =
                             snap.states.iter().map(|s| s.as_slice()).collect();
@@ -298,6 +347,7 @@ pub fn run_fleet_churn(
                 total_rounds,
                 workers,
                 want,
+                tel,
                 |telem, snap, b| {
                     let states: Vec<&[f64]> =
                         snap.states.iter().map(|s| s.as_slice()).collect();
@@ -355,6 +405,7 @@ pub fn run_fleet_churn(
                     workers,
                     tiles.max(1),
                     want,
+                    tel,
                     observer,
                 ),
                 _ => {
@@ -366,6 +417,7 @@ pub fn run_fleet_churn(
                         total_rounds,
                         workers,
                         want,
+                        tel,
                         observer,
                     );
                     (bus, stats)
@@ -384,6 +436,7 @@ pub fn run_fleet_churn(
         sim_seconds: bus.sim_clock(),
         metrics,
         churn: ChurnCounters::default(),
+        telemetry: harvest_telemetry(timers.as_ref(), &bus, stats.fresh_payload_cells),
     }
 }
 
@@ -416,6 +469,9 @@ fn run_fleet_epochs(
     let mut metrics = RunMetrics::default();
     let mut helper = MetricHelper::new(objectives, cfg);
     let total_rounds = cfg.iterations;
+    // One set of phase timers for the whole run: laps accumulate across
+    // epoch segments (the engine's `bind` is idempotent per table).
+    let timers = cfg.telemetry.then(PhaseTimers::new);
 
     // Two-buffer weight bank: the inactive buffer is reweighted in
     // place at each boundary (`Arc::get_mut`), then every node rebinds
@@ -518,6 +574,7 @@ fn run_fleet_epochs(
         let len = epoch_len.min(total_rounds - first);
         let observer_grad_tol = cfg.grad_tol;
         let record_every = cfg.record_every.max(1);
+        let tel = timers.as_ref();
         let stats = match cfg.engine {
             EngineKind::Sequential => sequential::run_segment(
                 &mut nodes,
@@ -527,6 +584,7 @@ fn run_fleet_epochs(
                 first,
                 len,
                 Some(&alive),
+                tel,
                 |telem, _ns, pl, b| {
                     if helper.should_record(&telem, total_rounds) {
                         let states: Vec<&[f64]> = (0..n).map(|i| pl.x_row(i)).collect();
@@ -553,6 +611,7 @@ fn run_fleet_epochs(
                     first,
                     len,
                     Some(&alive),
+                    tel,
                     |telem, snap, b| {
                         if helper.should_record(&telem, total_rounds) {
                             let states: Vec<&[f64]> =
@@ -589,6 +648,7 @@ fn run_fleet_epochs(
                     Some(&alive),
                     workers,
                     want,
+                    tel,
                     |telem, snap, b| {
                         let states: Vec<&[f64]> =
                             snap.states.iter().map(|s| s.as_slice()).collect();
@@ -646,6 +706,7 @@ fn run_fleet_epochs(
                             workers,
                             tiles.max(1),
                             want,
+                            tel,
                             observer,
                         );
                         bus = rb;
@@ -662,6 +723,7 @@ fn run_fleet_epochs(
                             Some(&alive),
                             workers,
                             want,
+                            tel,
                             observer,
                         );
                         nodes = rn;
@@ -696,6 +758,7 @@ fn run_fleet_epochs(
         sim_seconds: bus.sim_clock(),
         metrics,
         churn: counters,
+        telemetry: harvest_telemetry(timers.as_ref(), &bus, fresh_cells),
     }
 }
 
@@ -772,6 +835,38 @@ mod tests {
             "fresh cells: {}",
             out.fresh_payload_cells
         );
+    }
+
+    #[test]
+    fn telemetry_summary_harvests_bus_and_timers() {
+        let (g, objs, w) = pair_setup();
+        let mk = |telemetry| {
+            let cfg = RunConfig {
+                iterations: 50,
+                step_size: StepSize::Constant(0.02),
+                record_every: 10,
+                telemetry,
+                ..RunConfig::default()
+            };
+            let fleet = dgd_fleet(&g, &objs, &w, cfg.step_size);
+            run_fleet(&g, &objs, fleet, &cfg)
+        };
+        let on = mk(true);
+        let off = mk(false);
+        assert_eq!(on.final_states, off.final_states, "telemetry must be observational");
+        let t = &on.telemetry;
+        assert!(t.enabled && !off.telemetry.enabled);
+        // Pair graph: 2 nodes × 50 rounds × 1 neighbor copy each.
+        assert_eq!(t.sends, 100);
+        assert_eq!(t.drops, 0);
+        assert_eq!(t.modeled_bytes, on.total_bytes as u64);
+        assert_eq!(t.measured_bytes, on.measured_wire_bytes as u64);
+        assert_eq!(t.fresh_payload_cells, on.fresh_payload_cells as u64);
+        assert_eq!(t.node_rollups.len(), 2);
+        assert_eq!(t.node_rollups.iter().map(|r| r.sends).sum::<u64>(), t.sends);
+        assert_eq!(t.phases.len(), 6, "sequential engine binds its six-phase table");
+        assert!(t.phases.iter().all(|p| p.count >= 50));
+        assert_eq!(off.telemetry, TelemetrySummary::default());
     }
 
     #[test]

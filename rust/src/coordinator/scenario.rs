@@ -485,6 +485,14 @@ impl ScenarioSpec {
         self
     }
 
+    /// Toggle the telemetry plane (keeps the rest of the
+    /// configuration). Off skips the engine phase timers and the
+    /// post-run counter rollups; results are bit-identical either way.
+    pub fn with_telemetry(mut self, telemetry: bool) -> Self {
+        self.config.telemetry = telemetry;
+        self
+    }
+
     /// Set the shared initial iterate.
     pub fn with_init(mut self, x0: Vec<f64>) -> Self {
         self.init = Some(x0);

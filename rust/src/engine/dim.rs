@@ -63,12 +63,27 @@ use crate::linalg::vecops;
 use crate::network::{Bus, MailSlot};
 use crate::rng::Xoshiro256pp;
 use crate::state::{tile_bounds, StatePlane};
+use crate::telemetry::{PhaseTimers, DIM_PHASES};
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 
 /// Phases with their own claim counter (A, B, C, D, D2, E1, E2).
 const NPHASES: usize = 7;
+
+// Indices into [`DIM_PHASES`]. Each is the coordinator's gate-to-gate
+// interval for the matching claim phase (D2 also covers the
+// coordinator's own telemetry aggregation + `advance_round`, which run
+// concurrently with the workers' inbox collection); `observe` is the
+// snapshot/observer window plus claim-bank reset.
+const PH_A: usize = 0;
+const PH_B: usize = 1;
+const PH_C: usize = 2;
+const PH_D: usize = 3;
+const PH_D2: usize = 4;
+const PH_E1: usize = 5;
+const PH_E2: usize = 6;
+const PH_OBS: usize = 7;
 
 /// Interior-mutability cell shared across the engine's workers. All
 /// synchronization is the phase contract: within one phase each cell is
@@ -190,13 +205,27 @@ pub fn run<F, P>(
     workers: usize,
     tiles: usize,
     want_observe: P,
+    tel: Option<&PhaseTimers>,
     observer: F,
 ) -> (Bus, EngineStats)
 where
     F: FnMut(RoundTelemetry, &Snapshot, &Bus) -> bool,
     P: Fn(usize) -> bool,
 {
-    run_segment(ctxs, plane, &mut rngs, bus, 0, rounds, None, workers, tiles, want_observe, observer)
+    run_segment(
+        ctxs,
+        plane,
+        &mut rngs,
+        bus,
+        0,
+        rounds,
+        None,
+        workers,
+        tiles,
+        want_observe,
+        tel,
+        observer,
+    )
 }
 
 /// Churn-aware segment variant of [`run`]: absolute rounds
@@ -219,6 +248,7 @@ pub fn run_segment<F, P>(
     workers: usize,
     tiles: usize,
     want_observe: P,
+    tel: Option<&PhaseTimers>,
     mut observer: F,
 ) -> (Bus, EngineStats)
 where
@@ -233,6 +263,9 @@ where
     assert!(tiles > 0, "need at least one tile");
     if let Some(a) = alive {
         assert_eq!(a.len(), n);
+    }
+    if let Some(t) = tel {
+        t.bind(DIM_PHASES);
     }
     for c in &ctxs {
         assert!(c.compressor.tileable(), "dim engine needs a tileable compressor");
@@ -560,10 +593,18 @@ where
         };
         for k in first_round + 1..=first_round + rounds {
             let par = k & 1;
+            // Telemetry spans are the coordinator's gate-to-gate
+            // intervals (`tel` is `!Sync` by design — the tile workers
+            // never touch it).
+            let span = tel.map(|t| t.start());
             gates[0].wait();
+            let span = tel.map(|t| t.lap(PH_A, span.unwrap()));
             gates[1].wait();
+            let span = tel.map(|t| t.lap(PH_B, span.unwrap()));
             gates[2].wait();
+            let span = tel.map(|t| t.lap(PH_C, span.unwrap()));
             gates[3].wait();
+            let span = tel.map(|t| t.lap(PH_D, span.unwrap()));
             let mut max_tx = 0.0f64;
             let mut saturations = 0usize;
             let mut max_payload = 0usize;
@@ -575,8 +616,11 @@ where
             }
             bus.lock().unwrap().advance_round();
             gates[4].wait();
+            let span = tel.map(|t| t.lap(PH_D2, span.unwrap()));
             gates[5].wait();
+            let span = tel.map(|t| t.lap(PH_E1, span.unwrap()));
             gates[6].wait();
+            let span = tel.map(|t| t.lap(PH_E2, span.unwrap()));
             completed = k;
             let keep_going = if want_observe(k) {
                 for (i, row) in snapshot.states.iter_mut().enumerate() {
@@ -609,6 +653,9 @@ where
                 c.store(0, Ordering::Relaxed);
             }
             gates[NPHASES].wait();
+            if let Some(t) = tel {
+                t.lap(PH_OBS, span.unwrap());
+            }
             if !keep_going {
                 break;
             }
@@ -670,6 +717,7 @@ mod tests {
                     &mut rngs,
                     &mut bus,
                     rounds,
+                    None,
                     |_t, _n, _p, _b| true,
                 );
                 (fleet.plane.states(), bus.total_bytes(), bus.total_measured_bytes(), stats.completed)
@@ -686,6 +734,7 @@ mod tests {
                     workers,
                     tiles,
                     |_| true,
+                    None,
                     |_t, _s, _b| true,
                 );
                 (fleet.plane.states(), bus.total_bytes(), bus.total_measured_bytes(), stats.completed)
@@ -744,6 +793,7 @@ mod tests {
             (0..n).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
         let ctxs: Vec<_> = fleet.nodes.iter().map(|nl| nl.tiled_ctx().unwrap()).collect();
         let bus = Bus::new(&g, LinkModel::default(), 0);
+        let timers = PhaseTimers::new();
         let (_bus, stats) = run(
             ctxs,
             &mut fleet.plane,
@@ -753,6 +803,7 @@ mod tests {
             2,
             2,
             |_| true,
+            Some(&timers),
             |t, s, _b| {
                 assert_eq!(s.states.len(), n);
                 assert_eq!(s.grad_steps[0], t.round);
@@ -760,6 +811,11 @@ mod tests {
             },
         );
         assert_eq!(stats.completed, 7);
+        // Every gate-to-gate phase recorded one span per completed round.
+        assert_eq!(timers.names(), DIM_PHASES);
+        for ph in 0..DIM_PHASES.len() {
+            assert_eq!(timers.phase_count(ph), 7, "phase {}", DIM_PHASES[ph]);
+        }
         // Per-node pools warm up to the pipeline depth and stop.
         assert!(
             stats.fresh_payload_cells >= n && stats.fresh_payload_cells <= 4 * n,

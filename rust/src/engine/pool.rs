@@ -31,8 +31,15 @@ use crate::compress::{Payload, PayloadPool};
 use crate::network::{Bus, InboxView, MailSlot};
 use crate::rng::Xoshiro256pp;
 use crate::state::StatePlane;
+use crate::telemetry::{PhaseTimers, WORKER_PHASES};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
+
+// Indices into [`WORKER_PHASES`] — the coordinator's barrier-to-barrier
+// segments, same meaning as in [`super::threaded`].
+const PH_SEND: usize = 0;
+const PH_DELIVER_CONSUME: usize = 1;
+const PH_OBSERVE: usize = 2;
 
 /// Resolve the effective worker count: `workers` if nonzero, else the
 /// machine's available parallelism; never more than `n`, never zero.
@@ -60,13 +67,26 @@ pub fn run<F, P>(
     rounds: usize,
     workers: usize,
     want_observe: P,
+    tel: Option<&PhaseTimers>,
     observer: F,
 ) -> (Vec<Box<dyn NodeLogic>>, Bus, EngineStats)
 where
     F: FnMut(RoundTelemetry, &Snapshot, &Bus) -> bool,
     P: Fn(usize) -> bool + Sync,
 {
-    run_segment(nodes, plane, &mut rngs, bus, 0, rounds, None, workers, want_observe, observer)
+    run_segment(
+        nodes,
+        plane,
+        &mut rngs,
+        bus,
+        0,
+        rounds,
+        None,
+        workers,
+        want_observe,
+        tel,
+        observer,
+    )
 }
 
 /// Churn-aware segment variant of [`run`]: absolute rounds
@@ -86,6 +106,7 @@ pub fn run_segment<F, P>(
     alive: Option<&[bool]>,
     workers: usize,
     want_observe: P,
+    tel: Option<&PhaseTimers>,
     mut observer: F,
 ) -> (Vec<Box<dyn NodeLogic>>, Bus, EngineStats)
 where
@@ -98,6 +119,9 @@ where
     assert_eq!(bus.n(), n);
     if let Some(a) = alive {
         assert_eq!(a.len(), n);
+    }
+    if let Some(t) = tel {
+        t.bind(WORKER_PHASES);
     }
     if n == 0 {
         return (nodes, bus, EngineStats::default());
@@ -236,9 +260,12 @@ where
             }));
         }
 
-        // Coordinating thread.
+        // Coordinating thread. Telemetry spans are its barrier-to-barrier
+        // segments (`tel` is `!Sync` by design — workers never touch it).
         for k in first_round + 1..=first_round + rounds {
+            let span = tel.map(|t| t.start());
             after_send.wait();
+            let span = tel.map(|t| t.lap(PH_SEND, span.unwrap()));
             let mut max_tx = 0.0f64;
             let mut saturations = 0usize;
             let mut max_payload = 0usize;
@@ -250,6 +277,7 @@ where
             }
             bus.lock().unwrap().advance_round();
             after_consume.wait();
+            let span = tel.map(|t| t.lap(PH_DELIVER_CONSUME, span.unwrap()));
             completed.store(k, Ordering::SeqCst);
             let keep_going = if want_observe(k) {
                 let snapshot = Snapshot {
@@ -271,6 +299,9 @@ where
                 stop.store(true, Ordering::SeqCst);
             }
             after_observe.wait();
+            if let Some(t) = tel {
+                t.lap(PH_OBSERVE, span.unwrap());
+            }
             if !keep_going {
                 break;
             }
@@ -343,11 +374,13 @@ mod tests {
             &mut srngs,
             &mut sbus,
             rounds,
+            None,
             |_t, _n, _p, _b| true,
         );
         assert_eq!(sstats.completed, rounds);
         // Pool with a worker count that does not divide n evenly.
         let (mut pfleet, prngs, pbus) = ring_fleet(n);
+        let timers = PhaseTimers::new();
         let (_pnodes, pbus, stats) = run(
             pfleet.nodes,
             &mut pfleet.plane,
@@ -356,8 +389,16 @@ mod tests {
             rounds,
             3,
             |_| false,
+            Some(&timers),
             |_t, _s, _b| true,
         );
+        // Telemetry is observational: timed pool run stays bit-identical
+        // to the untimed sequential reference, and each barrier segment
+        // records exactly one span per round.
+        assert_eq!(timers.names(), WORKER_PHASES);
+        assert_eq!(timers.phase_count(PH_SEND), rounds as u64);
+        assert_eq!(timers.phase_count(PH_DELIVER_CONSUME), rounds as u64);
+        assert_eq!(timers.phase_count(PH_OBSERVE), rounds as u64);
         assert_eq!(stats.completed, rounds);
         let fresh = stats.fresh_payload_cells;
         assert!(fresh >= 3, "each shard pool creates at least one cell: {fresh}");
@@ -376,6 +417,7 @@ mod tests {
             1000,
             2,
             |_| true,
+            None,
             |t, _s, _b| t.round < 7,
         );
         assert_eq!(stats.completed, 7);
@@ -393,6 +435,7 @@ mod tests {
             50,
             0,
             |k| k % 10 == 0,
+            None,
             |t, s, _b| {
                 observed.push(t.round);
                 assert_eq!(s.states.len(), 5);

@@ -6,6 +6,15 @@ use crate::compress::PayloadPool;
 use crate::network::Bus;
 use crate::rng::Xoshiro256pp;
 use crate::state::StatePlane;
+use crate::telemetry::{PhaseTimers, SEQUENTIAL_PHASES};
+
+// Indices into [`SEQUENTIAL_PHASES`].
+const PH_COMPRESS: usize = 0;
+const PH_BROADCAST: usize = 1;
+const PH_DELIVER: usize = 2;
+const PH_CONSUME: usize = 3;
+const PH_RECLAIM: usize = 4;
+const PH_OBSERVE: usize = 5;
 
 /// Run `rounds` synchronous rounds over the fleet's state plane. After
 /// each round the observer is called with (telemetry, nodes, plane, bus)
@@ -30,12 +39,13 @@ pub fn run<F>(
     rngs: &mut [Xoshiro256pp],
     bus: &mut Bus,
     rounds: usize,
+    tel: Option<&PhaseTimers>,
     observer: F,
 ) -> EngineStats
 where
     F: FnMut(RoundTelemetry, &[Box<dyn NodeLogic>], &StatePlane, &Bus) -> bool,
 {
-    run_segment(nodes, plane, rngs, bus, 0, rounds, None, observer)
+    run_segment(nodes, plane, rngs, bus, 0, rounds, None, tel, observer)
 }
 
 /// Churn-aware segment variant of [`run`]: executes the *absolute*
@@ -56,6 +66,7 @@ pub fn run_segment<F>(
     first_round: usize,
     rounds: usize,
     alive: Option<&[bool]>,
+    tel: Option<&PhaseTimers>,
     mut observer: F,
 ) -> EngineStats
 where
@@ -68,6 +79,9 @@ where
     if let Some(a) = alive {
         assert_eq!(a.len(), n);
     }
+    if let Some(t) = tel {
+        t.bind(SEQUENTIAL_PHASES);
+    }
     let is_alive = |i: usize| alive.map_or(true, |a| a[i]);
     let mut pool = PayloadPool::new();
     let mut completed = first_round;
@@ -77,20 +91,30 @@ where
         let mut max_payload = 0usize;
         // Phase 1: emit + broadcast (pooled cells; the broadcast clones
         // into slots and the local handle drops, so cells return to the
-        // pool once the consume phase clears the inboxes).
+        // pool once the consume phase clears the inboxes). Telemetry
+        // spans are per node here (compress vs broadcast are interleaved
+        // within the loop): two extra clock reads per node per round,
+        // plain Cell stores, observational only.
         for (i, node) in nodes.iter_mut().enumerate() {
             if !is_alive(i) {
                 continue;
             }
+            let span = tel.map(|t| t.start());
             let mut rows = plane.rows(i);
             let out = node.make_message(k, &mut rows, &mut rngs[i], &mut pool);
+            let span = tel.map(|t| t.lap(PH_COMPRESS, span.unwrap()));
             max_tx = max_tx.max(out.tx_magnitude);
             saturations += out.saturated;
             max_payload = max_payload.max(out.payload.wire_bytes());
             bus.broadcast(i, k, &out.payload);
+            if let Some(t) = tel {
+                t.lap(PH_BROADCAST, span.unwrap());
+            }
         }
+        let span = tel.map(|t| t.start());
         bus.advance_round();
         bus.deliver_round(k);
+        let span = tel.map(|t| t.lap(PH_DELIVER, span.unwrap()));
         // Phase 2: consume. Mailbox slots sit in ascending-sender order,
         // so the floating-point reduction order is identical across
         // engines without any per-round sort.
@@ -103,9 +127,11 @@ where
             node.consume(k, &inbox, &mut rows, &mut rngs[i]);
             bus.clear_inbox(i);
         }
+        let span = tel.map(|t| t.lap(PH_CONSUME, span.unwrap()));
         // Encode-plane reclaim hook: salvage any payloads the mailbox
         // orphaned this round (a no-op for pool-encoded traffic).
         bus.reclaim_retired(&mut pool);
+        let span = tel.map(|t| t.lap(PH_RECLAIM, span.unwrap()));
         completed = k;
         let telem = RoundTelemetry {
             round: k,
@@ -113,7 +139,11 @@ where
             saturations,
             max_payload_bytes: max_payload,
         };
-        if !observer(telem, nodes, plane, bus) {
+        let keep_going = observer(telem, nodes, plane, bus);
+        if let Some(t) = tel {
+            t.lap(PH_OBSERVE, span.unwrap());
+        }
+        if !keep_going {
             break;
         }
     }
@@ -157,6 +187,7 @@ mod tests {
             &mut rngs,
             &mut bus,
             1000,
+            None,
             |_t, _n, _p, _b| true,
         );
         assert_eq!(stats.completed, 1000);
@@ -182,8 +213,49 @@ mod tests {
             &mut rngs,
             &mut bus,
             1000,
+            None,
             |t, _n, _p, _b| t.round < 10,
         );
         assert_eq!(stats.completed, 10);
+    }
+
+    #[test]
+    fn phase_timers_count_spans_without_perturbing_the_run() {
+        let (mut fleet, mut rngs, mut bus) = pair_fleet();
+        let timers = PhaseTimers::new();
+        run(
+            &mut fleet.nodes,
+            &mut fleet.plane,
+            &mut rngs,
+            &mut bus,
+            100,
+            Some(&timers),
+            |_t, _n, _p, _b| true,
+        );
+        assert_eq!(timers.names(), SEQUENTIAL_PHASES);
+        // Per-node phases record n spans per round; per-round phases one.
+        assert_eq!(timers.phase_count(PH_COMPRESS), 200);
+        assert_eq!(timers.phase_count(PH_BROADCAST), 200);
+        assert_eq!(timers.phase_count(PH_DELIVER), 100);
+        assert_eq!(timers.phase_count(PH_CONSUME), 100);
+        assert_eq!(timers.phase_count(PH_RECLAIM), 100);
+        assert_eq!(timers.phase_count(PH_OBSERVE), 100);
+        // Bit-identity: an untimed run lands on the same iterates.
+        let (mut fleet2, mut rngs2, mut bus2) = pair_fleet();
+        run(
+            &mut fleet2.nodes,
+            &mut fleet2.plane,
+            &mut rngs2,
+            &mut bus2,
+            100,
+            None,
+            |_t, _n, _p, _b| true,
+        );
+        assert_eq!(
+            fleet.plane.x_row(0)[0].to_bits(),
+            fleet2.plane.x_row(0)[0].to_bits(),
+            "telemetry must be observational"
+        );
+        assert_eq!(bus.total_bytes(), bus2.total_bytes());
     }
 }

@@ -18,8 +18,18 @@ use crate::compress::PayloadPool;
 use crate::network::{Bus, InboxView, MailSlot};
 use crate::rng::Xoshiro256pp;
 use crate::state::StatePlane;
+use crate::telemetry::{PhaseTimers, WORKER_PHASES};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
+
+// Indices into [`WORKER_PHASES`] — the coordinator's barrier-to-barrier
+// segments (the only spans a single writer can observe here): `send` is
+// worker emit (compress + serialize + broadcast), `deliver_consume`
+// covers the round advance, delivery, and worker consume (decode + mix
+// + grad), `observe` the snapshot + observer callback.
+const PH_SEND: usize = 0;
+const PH_DELIVER_CONSUME: usize = 1;
+const PH_OBSERVE: usize = 2;
 
 /// Run `rounds` barrier-synchronized rounds with one thread per node.
 /// The observer runs on the coordinating thread between rounds and may
@@ -34,12 +44,13 @@ pub fn run<F>(
     mut rngs: Vec<Xoshiro256pp>,
     bus: Bus,
     rounds: usize,
+    tel: Option<&PhaseTimers>,
     observer: F,
 ) -> (Vec<Box<dyn NodeLogic>>, Bus, EngineStats)
 where
     F: FnMut(RoundTelemetry, &Snapshot, &Bus) -> bool,
 {
-    run_segment(nodes, plane, &mut rngs, bus, 0, rounds, None, observer)
+    run_segment(nodes, plane, &mut rngs, bus, 0, rounds, None, tel, observer)
 }
 
 /// Churn-aware segment variant of [`run`]: absolute rounds
@@ -57,6 +68,7 @@ pub fn run_segment<F>(
     first_round: usize,
     rounds: usize,
     alive: Option<&[bool]>,
+    tel: Option<&PhaseTimers>,
     mut observer: F,
 ) -> (Vec<Box<dyn NodeLogic>>, Bus, EngineStats)
 where
@@ -68,6 +80,9 @@ where
     assert_eq!(bus.n(), n);
     if let Some(a) = alive {
         assert_eq!(a.len(), n);
+    }
+    if let Some(t) = tel {
+        t.bind(WORKER_PHASES);
     }
     if n == 0 {
         return (nodes, bus, EngineStats::default());
@@ -175,9 +190,13 @@ where
             }));
         }
 
-        // Coordinating thread.
+        // Coordinating thread. Telemetry spans are its barrier-to-barrier
+        // segments (`tel` is `!Sync` by design — worker threads never
+        // touch it).
         for k in first_round + 1..=first_round + rounds {
+            let span = tel.map(|t| t.start());
             after_send.wait();
+            let span = tel.map(|t| t.lap(PH_SEND, span.unwrap()));
             let mut max_tx = 0.0f64;
             let mut saturations = 0usize;
             let mut max_payload = 0usize;
@@ -189,6 +208,7 @@ where
             }
             bus.lock().unwrap().advance_round();
             after_consume.wait();
+            let span = tel.map(|t| t.lap(PH_DELIVER_CONSUME, span.unwrap()));
             let snapshot = Snapshot {
                 states: state_slots.iter().map(|s| s.lock().unwrap().0.clone()).collect(),
                 grad_steps: state_slots.iter().map(|s| s.lock().unwrap().1).collect(),
@@ -208,6 +228,9 @@ where
                 stop.store(true, Ordering::SeqCst);
             }
             after_observe.wait();
+            if let Some(t) = tel {
+                t.lap(PH_OBSERVE, span.unwrap());
+            }
             if !keep_going {
                 break;
             }
@@ -255,7 +278,7 @@ mod tests {
             (0..2).map(|i| Xoshiro256pp::seed_from_u64(i as u64)).collect();
         let bus = Bus::new(&g, LinkModel::default(), 0);
         let (_nodes, bus, stats) =
-            run(fleet.nodes, &mut fleet.plane, rngs, bus, n_iters, |t, _s, _b| {
+            run(fleet.nodes, &mut fleet.plane, rngs, bus, n_iters, None, |t, _s, _b| {
                 stop_at.map(|s| t.round < s).unwrap_or(true)
             });
         let fresh = stats.fresh_payload_cells;

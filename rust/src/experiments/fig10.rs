@@ -74,7 +74,10 @@ pub fn run(p: &Params) -> FigureResult {
             let out = run_scenario(&spec);
             trials.push(out.metrics.grad_norm.clone());
         }
-        let mean = aggregate_mean(&trials);
+        let Some(mean) = aggregate_mean(&trials) else {
+            fr.notes.push((format!("n{n}/skipped"), "0 trials".into()));
+            continue;
+        };
         let x: Vec<f64> = (1..=p.iterations).map(|k| k as f64).collect();
         fr.series.push(MetricSeries::new(format!("n{n}/grad_norm"), x, mean));
     }

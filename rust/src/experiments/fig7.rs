@@ -57,7 +57,10 @@ pub fn run(p: &Params) -> FigureResult {
             let out = prepared.run_with(&cfg);
             trials.push(out.metrics.objective.clone());
         }
-        let mean = aggregate_mean(&trials);
+        let Some(mean) = aggregate_mean(&trials) else {
+            fr.notes.push((format!("gamma_{gamma}/skipped"), "0 trials".into()));
+            continue;
+        };
         let x: Vec<f64> = (1..=p.iterations).map(|k| k as f64).collect();
         fr.series.push(MetricSeries::new(format!("gamma_{gamma}/objective"), x, mean));
     }

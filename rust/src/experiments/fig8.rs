@@ -35,7 +35,10 @@ pub fn run(p: &Params) -> FigureResult {
             saturated_total += out.metrics.saturations.last().copied().unwrap_or(0.0);
             trials.push(out.metrics.max_transmitted.clone());
         }
-        let mean = aggregate_mean(&trials);
+        let Some(mean) = aggregate_mean(&trials) else {
+            fr.notes.push((format!("gamma_{gamma}/skipped"), "0 trials".into()));
+            continue;
+        };
         let x: Vec<f64> = (1..=p.iterations).map(|k| k as f64).collect();
         fr.series.push(MetricSeries::new(format!("gamma_{gamma}/max_transmitted"), x, mean));
         fr.notes.push((

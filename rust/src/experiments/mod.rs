@@ -7,8 +7,10 @@
 //! the bytes-to-accuracy comparison of ADC-DGD against the stochastic
 //! compressed-consensus family (CHOCO-SGD, CEDAS) — `run --exp
 //! stochastic` in the CLI. [`churn`] sweeps join/leave storms over the
-//! churn plane (`run --exp churn`). See DESIGN.md §4 for the experiment
-//! index.
+//! churn plane (`run --exp churn`), and [`trace`] profiles the
+//! telemetry plane's per-phase wall-clock breakdown of ADC-DGD vs
+//! CHOCO-SGD rounds (`run --exp trace`). See DESIGN.md §4 for the
+//! experiment index.
 
 pub mod ablations;
 pub mod churn;
@@ -21,6 +23,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod phase_transition;
 pub mod stochastic;
+pub mod trace;
 
 use crate::algorithms::ObjectiveRef;
 use crate::metrics::MetricSeries;

@@ -1,0 +1,156 @@
+//! Telemetry-plane experiment: where does the engine's wall-clock round
+//! actually go, and does the answer change between ADC-DGD's amplified
+//! full-gradient rounds and CHOCO-SGD's gossip rounds as the fleet
+//! scales?
+//!
+//! Both algorithms run the same ternary wire format on a ring at
+//! n ∈ {256, 2048} through the sequential engine — the engine with the
+//! finest phase table (compress / broadcast / deliver / consume /
+//! reclaim / observe), so the breakdown attributes time to the actual
+//! pipeline stages rather than barrier segments. Series report each
+//! phase's fraction of total phase time; notes record the absolute
+//! per-phase seconds, the fleet send/drop counters, and the
+//! measured-over-modeled wire ratio from the same telemetry summary the
+//! `--trace` JSONL export carries.
+//!
+//! Phase *fractions* are machine-dependent (this is wall clock, not the
+//! simulated clock) — the experiment asserts structure (tables bound,
+//! fractions normalized, counters consistent), never absolute times.
+
+use super::FigureResult;
+use crate::algorithms::{AdcDgdOptions, AlgorithmKind, ChocoSgdOptions, StepSize};
+use crate::coordinator::{
+    run_scenario, CompressorSpec, ObjectiveSpec, RunConfig, ScenarioSpec, TopologySpec,
+};
+use crate::metrics::MetricSeries;
+use crate::topology;
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct Params {
+    /// Ring sizes to profile.
+    pub sizes: Vec<usize>,
+    /// Engine rounds per run.
+    pub iterations: usize,
+    /// Constant gradient step α.
+    pub alpha: f64,
+    /// Consensus step γ for CHOCO-SGD.
+    pub consensus_step: f64,
+    /// CHOCO-SGD minibatch size (`0` = full shard).
+    pub batch: usize,
+    /// Master seed.
+    pub seed: u64,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Self {
+            sizes: vec![256, 2048],
+            iterations: 60,
+            alpha: 0.02,
+            consensus_step: 0.4,
+            batch: 8,
+            seed: 23,
+        }
+    }
+}
+
+/// Run the phase-time breakdown. Series are named
+/// `<algo>_n<size>/phase_fraction` (x = phase index in the engine's
+/// bound table, y = fraction of total phase time); notes carry the
+/// per-phase seconds and span counts, fleet counters, and wire ratio.
+pub fn run(p: &Params) -> FigureResult {
+    let mut fr = FigureResult { id: "trace_phase_breakdown".into(), ..Default::default() };
+    fr.notes.push(("iterations".into(), p.iterations.to_string()));
+
+    for &n in &p.sizes {
+        let graph = topology::ring(n);
+        let runs: Vec<(String, AlgorithmKind, ObjectiveSpec)> = vec![
+            (
+                format!("adc_n{n}"),
+                AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+                ObjectiveSpec::RandomCircle { seed: p.seed ^ 0x0BEC },
+            ),
+            (
+                format!("choco_n{n}"),
+                AlgorithmKind::ChocoSgd(ChocoSgdOptions {
+                    consensus_step: p.consensus_step,
+                    batch: p.batch,
+                }),
+                ObjectiveSpec::SyntheticLogistic {
+                    samples_per_node: 32,
+                    dim: 8,
+                    noise_sd: 0.2,
+                    lambda: 1e-3,
+                    seed: p.seed,
+                },
+            ),
+        ];
+        for (tag, algorithm, objective) in runs {
+            let spec = ScenarioSpec::new(algorithm, TopologySpec::Custom(graph.clone()), objective)
+                .with_compressor(CompressorSpec::TernGrad)
+                .with_config(RunConfig {
+                    iterations: p.iterations,
+                    step_size: StepSize::Constant(p.alpha),
+                    seed: p.seed,
+                    record_every: (p.iterations / 10).max(1),
+                    ..RunConfig::default()
+                });
+            let out = run_scenario(&spec);
+            let tel = &out.telemetry;
+            let total = tel.total_phase_secs.max(f64::MIN_POSITIVE);
+            let x: Vec<f64> = (0..tel.phases.len()).map(|i| i as f64).collect();
+            let y: Vec<f64> = tel.phases.iter().map(|ph| ph.total_secs / total).collect();
+            fr.series.push(MetricSeries::new(format!("{tag}/phase_fraction"), x, y));
+            for ph in &tel.phases {
+                fr.notes.push((
+                    format!("{tag}/phase/{}", ph.name),
+                    format!("{:.6}s over {} spans", ph.total_secs, ph.count),
+                ));
+            }
+            fr.notes
+                .push((format!("{tag}/total_phase_secs"), format!("{:.6}", tel.total_phase_secs)));
+            fr.notes.push((format!("{tag}/sends"), tel.sends.to_string()));
+            fr.notes.push((
+                format!("{tag}/wire_over_modeled"),
+                tel.wire_ratio().map_or_else(|| "-".into(), |r| format!("{r:.3}")),
+            ));
+            fr.notes.push((format!("{tag}/summary"), tel.render_line()));
+        }
+    }
+    fr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_is_normalized_and_counters_consistent() {
+        let p = Params { sizes: vec![8, 16], iterations: 30, ..Params::default() };
+        let fr = run(&p);
+        // Two algorithms × two sizes, one fraction series each.
+        assert_eq!(fr.series.len(), 4);
+        for s in &fr.series {
+            assert_eq!(s.x.len(), 6, "{}: sequential engine binds six phases", s.name);
+            let sum: f64 = s.y.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "{}: fractions sum to {sum}", s.name);
+            assert!(s.y.iter().all(|f| *f >= 0.0), "{}: negative fraction", s.name);
+        }
+        // Ring(n): every node sends to both neighbors every round.
+        let sends = |tag: &str| -> u64 {
+            fr.notes
+                .iter()
+                .find(|(k, _)| k == &format!("{tag}/sends"))
+                .unwrap()
+                .1
+                .parse()
+                .unwrap()
+        };
+        assert_eq!(sends("adc_n8"), (8 * 2 * 30) as u64);
+        assert_eq!(sends("adc_n16"), (16 * 2 * 30) as u64);
+        assert!(fr.notes.iter().any(|(k, _)| k == "adc_n8/phase/compress"));
+        assert!(fr.notes.iter().any(|(k, v)| k == "choco_n8/summary"
+            && v.starts_with("telemetry phase_time=")));
+    }
+}

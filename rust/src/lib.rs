@@ -235,6 +235,45 @@
 //! 1% churn per epoch, asserting in-epoch rounds allocate nothing
 //! (`BENCH_churn_plane.json`).
 //!
+//! ## The telemetry plane
+//!
+//! Observability follows the same pre-register-then-store discipline
+//! as every other plane ([`telemetry`]): a [`telemetry::Registry`] of
+//! typed counters/gauges/histograms is populated at build time and
+//! updated by plain `Cell` stores; span-style [`telemetry::PhaseTimers`]
+//! accumulate wall time per engine round-loop phase (sequential's
+//! compress/broadcast/deliver/consume/reclaim/observe, the
+//! threaded/pool coordinator barrier segments, and the dim engine's
+//! seven A–E2 gates — the tables live in [`telemetry::phases`]); and
+//! per-link/per-node rollups unify what the [`network::Bus`], the
+//! mailbox plane, the payload pools, and the churn driver already
+//! count privately. Three rules keep it safe to leave on (the
+//! default; [`coordinator::RunConfig::telemetry`], CLI
+//! `--no-telemetry`):
+//!
+//! 1. **Observational only** — wall time never feeds the simulated
+//!    clock, the RNG streams, or any golden quantity, so every
+//!    bit-identity suite passes with telemetry on or off
+//!    (`tests/engine_equivalence.rs` pins it).
+//! 2. **Zero steady-state allocation** — recording a span is two
+//!    monotonic clock reads and two `Cell` stores; the
+//!    `ADCDGD_BENCH_ONLY=telemetry` hotpath section asserts zero
+//!    allocations with full instrumentation at n ∈ {16, 256, 2048} and
+//!    reports the on/off overhead (`BENCH_telemetry_plane.json`).
+//! 3. **Single-writer** — only the engine's calling/coordinator thread
+//!    records (`Cell` is `!Sync`, so the compiler enforces it); in the
+//!    parallel engines phases are coordinator barrier/gate segments.
+//!
+//! Every run ends in a [`coordinator::RunOutput::telemetry`] rollup
+//! ([`telemetry::TelemetrySummary`]: phase rows, fleet counters,
+//! per-node rollups — `solve` prints its one-line form), and
+//! `solve --trace out.jsonl` exports the schema-versioned JSONL trace
+//! ([`telemetry::trace`], v1: a meta line, then one object per
+//! recorded round whose byte columns equal
+//! [`coordinator::RunOutput::metrics`] exactly; validated in CI by
+//! `scripts/check_trace_schema.py`). `run --exp trace` sweeps the
+//! ADC-DGD vs CHOCO-SGD phase-time breakdown at n ∈ {256, 2048}.
+//!
 //! Related: [`coordinator::RunConfig::measure_wire`] (default on)
 //! controls whether every broadcast additionally runs the wire plane's
 //! real serializer for measured byte counts; modeled-only studies and
@@ -285,6 +324,7 @@ pub mod rng;
 pub mod runtime;
 pub mod state;
 pub mod stochastic;
+pub mod telemetry;
 pub mod topology;
 pub mod util;
 
@@ -313,5 +353,6 @@ pub mod prelude {
     pub use crate::stochastic::{
         DataPlane, SampleOracle, ShardLoss, ShardObjective, StochasticObjective,
     };
+    pub use crate::telemetry::{PhaseTimers, Registry, TelemetrySummary};
     pub use crate::topology::Graph;
 }

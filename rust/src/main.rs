@@ -3,19 +3,22 @@
 //! Subcommands:
 //!
 //! * `run --exp <fig1|fig5|fig6|fig7|fig8|fig10|phase|delay|stochastic|
-//!   churn|ablations|all>` regenerate a paper figure or ablation
+//!   churn|trace|ablations|all>` regenerate a paper figure or ablation
 //!   (optionally `--out <dir>` for CSVs, `--trials`, `--iters` to
 //!   rescale; `delay` is the delayed-consensus sweep over the mailbox
 //!   plane's in-flight ring, `stochastic` the bytes-to-accuracy sweep of
-//!   ADC-DGD vs CHOCO-SGD vs CEDAS over the stochastic data plane, and
+//!   ADC-DGD vs CHOCO-SGD vs CEDAS over the stochastic data plane,
 //!   `churn` the join/leave-storm convergence sweep over the churn
-//!   plane).
+//!   plane, and `trace` the telemetry plane's ADC-DGD vs CHOCO-SGD
+//!   phase-time breakdown at n ∈ {256, 2048}).
 //! * `solve` — run one algorithm on a chosen topology/objective family
 //!   (`--algo adc|dgd|dgdt|naive|qdgd|choco|cedas`, `--topology
 //!   ring|star|complete|grid|er|ba|paper4`, `--n`, `--gamma`, `--alpha`,
 //!   `--eta`, `--iters`, `--engine seq|threaded|pool|dim`, `--workers`,
 //!   `--tiles` (column tiles for `--engine dim`), `--no-measure-wire`
 //!   (skip the per-broadcast byte serializer; measured counters read 0),
+//!   `--no-telemetry` (skip the phase timers and counter rollups),
+//!   `--trace <out.jsonl>` (write the schema-versioned run trace),
 //!   `--compressor randround|identity|lowprec|sparsifier|terngrad|qsgd`,
 //!   `--drop-prob`, the link/delay axis: `--delay <rounds>` for a
 //!   uniform delivery delay, or `--latency <sec>` + `--bandwidth <B/s>`
@@ -58,7 +61,9 @@ fn main() {
                 "usage: adcdgd <run|solve|train|info> [options]\n\
                  \n  adcdgd run --exp fig5 [--out results/] [--trials 100] [--iters 500]\
                  \n  adcdgd run --exp stochastic [--iters 600]\
+                 \n  adcdgd run --exp trace [--iters 200]\
                  \n  adcdgd solve --algo adc --topology ring --n 10 --iters 1000 [--engine threaded]\
+                 \n  adcdgd solve --algo adc --n 16 --trace out.jsonl [--no-telemetry]\
                  \n  adcdgd solve --algo choco --batch 8 --samples-per-node 64 --gamma 0.4\
                  \n  adcdgd solve --algo adc --churn-epoch 50 --churn-storm 2:2 --churn-rejoin warm\
                  \n  adcdgd train --model logistic --artifacts artifacts/ --nodes 4 --steps 100\
@@ -157,6 +162,13 @@ fn cmd_run(args: &Args) -> i32 {
             p.iterations = iters;
         }
         results.push(experiments::stochastic::run(&p));
+    }
+    if want("trace") {
+        let mut p = experiments::trace::Params::default();
+        if iters > 0 {
+            p.iterations = iters;
+        }
+        results.push(experiments::trace::run(&p));
     }
     if want("ablations") {
         results.push(experiments::ablations::alpha_error_ball(
@@ -308,6 +320,9 @@ fn cmd_solve(args: &Args) -> i32 {
         // `--no-measure-wire` skips the per-broadcast serializer so
         // modeled-only solves pay no wire-metering cost.
         measure_wire: !args.has_flag("no-measure-wire"),
+        // `--no-telemetry` drops the phase timers and counter rollups
+        // (results are bit-identical either way).
+        telemetry: !args.has_flag("no-telemetry"),
     };
     // For the stochastic family `--gamma` is the consensus step γ, so a
     // different safe default applies (1.0 is ADC's amplification sweet
@@ -419,6 +434,7 @@ fn cmd_solve(args: &Args) -> i32 {
         }
     };
 
+    let churn_enabled = churn.is_some();
     let mut spec = ScenarioSpec::new(algorithm, topology_spec, objective)
         .with_compressor(compressor)
         .with_config(cfg);
@@ -443,7 +459,12 @@ fn cmd_solve(args: &Args) -> i32 {
     // engine's pool sharding (one pool per worker/shard), so it is the
     // one legitimately engine-dependent output.
     println!("fresh_payload_cells={}", out.fresh_payload_cells);
-    if out.churn.epochs > 0 {
+    // Telemetry one-liner: total engine phase time, top phases, and the
+    // wire/modeled byte ratio ("telemetry off" under --no-telemetry).
+    println!("{}", out.telemetry.render_line());
+    // The churn line is meaningful only when a schedule was requested —
+    // a churn-free run's counters are structurally zero, not news.
+    if churn_enabled {
         let c = &out.churn;
         println!(
             "churn epochs={} crashes={} rejoins={} link_flaps={} dropped_dead={} \
@@ -470,6 +491,17 @@ fn cmd_solve(args: &Args) -> i32 {
             m.bytes_cumulative[i],
             m.measured_bytes_cumulative[i]
         );
+    }
+    // `--trace out.jsonl`: schema-versioned run trace (meta line +
+    // one JSON object per recorded round, mirroring `RunOutput.metrics`
+    // byte-for-byte).
+    if let Some(path) = args.options.get("trace") {
+        let path = std::path::Path::new(path);
+        if let Err(e) = adcdgd::telemetry::write_trace(path, &out.metrics, &out.telemetry) {
+            eprintln!("trace write failed ({}): {e}", path.display());
+            return 1;
+        }
+        println!("trace written to {} ({} rounds)", path.display(), out.metrics.len());
     }
     0
 }

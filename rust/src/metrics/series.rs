@@ -36,10 +36,12 @@ impl MetricSeries {
 }
 
 /// Point-wise mean of equally-sampled trials: all inputs must share the
-/// same x grid (enforced).
-pub fn aggregate_mean(trials: &[Vec<f64>]) -> Vec<f64> {
-    assert!(!trials.is_empty());
-    let n = trials[0].len();
+/// same x grid (enforced). Returns `None` for an empty trial set — a
+/// zero-trial sweep is a caller configuration problem to surface, not a
+/// panic (ragged trials remain a programming error and still assert).
+pub fn aggregate_mean(trials: &[Vec<f64>]) -> Option<Vec<f64>> {
+    let first = trials.first()?;
+    let n = first.len();
     assert!(trials.iter().all(|t| t.len() == n), "trials not equally sampled");
     let mut out = vec![0.0; n];
     for t in trials {
@@ -50,7 +52,7 @@ pub fn aggregate_mean(trials: &[Vec<f64>]) -> Vec<f64> {
     for o in out.iter_mut() {
         *o /= trials.len() as f64;
     }
-    out
+    Some(out)
 }
 
 #[cfg(test)]
@@ -60,7 +62,12 @@ mod tests {
     #[test]
     fn mean_of_trials() {
         let m = aggregate_mean(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
-        assert_eq!(m, vec![2.0, 3.0]);
+        assert_eq!(m, Some(vec![2.0, 3.0]));
+    }
+
+    #[test]
+    fn empty_trials_yield_none() {
+        assert_eq!(aggregate_mean(&[]), None);
     }
 
     #[test]

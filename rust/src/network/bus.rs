@@ -407,6 +407,26 @@ impl Bus {
         self.stat_index(src, dst).map(|idx| self.stats[idx])
     }
 
+    /// Telemetry rollup for one node: its outgoing-link counters summed
+    /// (the per-link stats already live contiguously in the sender's
+    /// offset range) plus the mailbox plane's supersede attribution for
+    /// its inbox. Summed over all nodes this reproduces the fleet
+    /// totals ([`Bus::total_messages`], [`Bus::total_dropped`],
+    /// [`Bus::total_bytes`], [`Bus::total_measured_bytes`],
+    /// [`Bus::total_superseded`]).
+    pub fn node_rollup(&self, src: usize) -> crate::telemetry::NodeRollup {
+        let mut r = crate::telemetry::NodeRollup::default();
+        for idx in self.layout.offset(src)..self.layout.offset(src + 1) {
+            let s = &self.stats[idx];
+            r.sends += s.messages as u64;
+            r.drops += s.dropped as u64;
+            r.modeled_bytes += s.bytes as u64;
+            r.measured_bytes += s.measured_bytes as u64;
+        }
+        r.superseded_in = self.mailbox.superseded_for(src) as u64;
+        r
+    }
+
     /// Node count.
     pub fn n(&self) -> usize {
         self.n
@@ -469,6 +489,46 @@ mod tests {
         // Premeasured broadcasts meter exactly what the caller hands in.
         bus.broadcast_premeasured(1, 1, &p, 21);
         assert_eq!(bus.total_measured_bytes(), 21);
+    }
+
+    #[test]
+    fn node_rollups_sum_to_fleet_totals() {
+        let g = topology::star(4);
+        let model = LinkModel { drop_prob: 0.5, ..LinkModel::default() };
+        let mut bus = Bus::new(&g, model, 42);
+        let p = Arc::new(Payload::F64(vec![1.0, 2.0]));
+        for r in 1..=20 {
+            for i in 0..4 {
+                bus.broadcast(i, r, &p);
+            }
+            bus.advance_round();
+            bus.deliver_round(r);
+            for i in 0..4 {
+                bus.clear_inbox(i);
+            }
+        }
+        let mut sends = 0u64;
+        let mut drops = 0u64;
+        let mut modeled = 0u64;
+        let mut measured = 0u64;
+        let mut superseded = 0u64;
+        for i in 0..4 {
+            let r = bus.node_rollup(i);
+            sends += r.sends;
+            drops += r.drops;
+            modeled += r.modeled_bytes;
+            measured += r.measured_bytes;
+            superseded += r.superseded_in;
+        }
+        assert_eq!(sends, bus.total_messages() as u64);
+        assert_eq!(drops, bus.total_dropped() as u64);
+        assert_eq!(modeled, bus.total_bytes() as u64);
+        assert_eq!(measured, bus.total_measured_bytes() as u64);
+        assert_eq!(superseded, bus.total_superseded() as u64);
+        assert!(drops > 0, "the lossy model must have dropped something");
+        // The hub touches 3 links per round, the leaves 1 each.
+        assert_eq!(bus.node_rollup(0).sends, 60);
+        assert_eq!(bus.node_rollup(1).sends, 20);
     }
 
     #[test]

@@ -259,6 +259,13 @@ pub struct MailboxPlane {
     /// Rounds `1..=delivered_through` have been drained into slots.
     delivered_through: usize,
     superseded: usize,
+    /// Per-receiver supersede attribution for the telemetry plane's
+    /// node rollups: `superseded_per[i]` counts freshest-wins
+    /// overwrites in node `i`'s inbox. Sized `n` at build; the
+    /// increment maps slot → owner with the O(log n)
+    /// [`MailboxLayout::slot_owner`] search, so the hot path stays
+    /// allocation-free.
+    superseded_per: Vec<usize>,
     /// Encode-plane reclaim hook: payloads this plane dropped as their
     /// *last* `Arc` reference (cleared or superseded slots whose sender
     /// did not retain a pool cell). Drained by
@@ -279,12 +286,14 @@ impl MailboxPlane {
     /// Allocate the (empty) slot plane for `layout`.
     pub fn new(layout: Arc<MailboxLayout>) -> Self {
         let slots = vec![None; layout.slots()];
+        let superseded_per = vec![0; layout.n()];
         Self {
             layout,
             slots,
             in_flight: VecDeque::new(),
             delivered_through: 0,
             superseded: 0,
+            superseded_per,
             retired: Vec::new(),
         }
     }
@@ -332,6 +341,12 @@ impl MailboxPlane {
         self.superseded
     }
 
+    /// Supersedes attributed to node `i`'s inbox (telemetry rollups;
+    /// sums to [`MailboxPlane::superseded`]).
+    pub fn superseded_for(&self, i: usize) -> usize {
+        self.superseded_per[i]
+    }
+
     /// Freshest-wins write into `slot`. Commutative in arrival order.
     /// Whichever side loses the collision (the stale arrival or the
     /// superseded occupant) goes through the retire hook so orphaned
@@ -340,10 +355,12 @@ impl MailboxPlane {
         match self.slots[slot].as_ref().map(|(r, _)| *r) {
             Some(r) if r >= round => {
                 self.superseded += 1;
+                self.superseded_per[self.layout.slot_owner(slot)] += 1;
                 self.drop_or_retire(payload);
             }
             Some(_) => {
                 self.superseded += 1;
+                self.superseded_per[self.layout.slot_owner(slot)] += 1;
                 if let Some((_, old)) = self.slots[slot].replace((round, payload)) {
                     self.drop_or_retire(old);
                 }
@@ -517,6 +534,8 @@ mod tests {
         mb.place(1, 2, payload(2.0));
         mb.place(1, 1, payload(1.0));
         assert_eq!(mb.superseded(), 1);
+        // Per-receiver attribution: slot 1 is node 1's inbox.
+        assert_eq!((mb.superseded_for(0), mb.superseded_for(1)), (0, 1));
         let m: Vec<usize> = mb.view(1).iter().map(|m| m.round).collect();
         assert_eq!(m, vec![2]);
         mb.clear(1);

@@ -1,5 +1,15 @@
-//! `manifest.json` parsing — the cross-language artifact contract.
+//! Run-artifact contracts: `manifest.json` parsing (the cross-language
+//! AOT contract) and the [`RunSnapshot`] telemetry archive entry.
+//!
+//! [`RunSnapshot`] is the first increment of the ROADMAP item-5
+//! run-artifact store: it pins the on-disk JSON shape for the
+//! observability data every archive entry will carry (phase wall-times
+//! plus the fleet counter rollup of one completed run). Full
+//! checkpointing — `StatePlane` + RNG cursors + metrics in a single
+//! compressed, seekable file so long sweeps resume mid-run — is
+//! deferred to that ROADMAP item; nothing here advertises it.
 
+use crate::telemetry::TelemetrySummary;
 use crate::util::json::{parse, Json};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
@@ -168,6 +178,177 @@ pub fn read_f32_blob(path: &Path, expected: usize) -> Result<Vec<f32>> {
         .collect())
 }
 
+/// Schema version of the [`RunSnapshot`] JSON surface.
+pub const SNAPSHOT_VERSION: usize = 1;
+
+/// A saved telemetry snapshot of one completed run — the archive-entry
+/// contract of the run-artifact store.
+///
+/// This is deliberately *only* the observability rollup: the phase
+/// wall-time rows plus the fleet counters of a
+/// [`TelemetrySummary`], stamped with the rounds the engine completed.
+/// It round-trips through the same hand-rolled JSON layer as the
+/// manifest ([`crate::util::json`]), so Python-side tooling can read it
+/// with `json.loads`. Full run checkpointing — `StatePlane` + RNG
+/// cursors + metrics in a compressed, seekable archive so long sweeps
+/// resume mid-run — is ROADMAP item 5 and is **not** provided here;
+/// this type exists so the archive's telemetry column is pinned before
+/// that work lands.
+///
+/// Phase names are owned `String`s (unlike
+/// [`crate::telemetry::PhaseStat`]'s `&'static str`) because a loaded
+/// snapshot cannot point into the engine's static phase tables.
+/// Counters are stored as JSON numbers (f64), exact up to 2^53 — far
+/// beyond any run this crate produces.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunSnapshot {
+    /// Rounds the engine completed for this run.
+    pub rounds_completed: usize,
+    /// Phase rows as (name, accumulated wall seconds, span count), in
+    /// the engine's table order.
+    pub phases: Vec<(String, f64, u64)>,
+    /// Sum of the phase wall seconds.
+    pub total_phase_secs: f64,
+    /// Fleet-total messages put on the wire.
+    pub sends: u64,
+    /// Fleet-total messages dropped by the loss model.
+    pub drops: u64,
+    /// Fleet-total mailbox supersedes.
+    pub superseded: u64,
+    /// Broadcasts delayed by a straggler schedule.
+    pub straggler_delayed: u64,
+    /// Fleet-total modeled payload bytes.
+    pub modeled_bytes: u64,
+    /// Fleet-total measured wire bytes.
+    pub measured_bytes: u64,
+    /// Payload-pool cells created across the engine's pools.
+    pub fresh_payload_cells: u64,
+}
+
+impl RunSnapshot {
+    /// Capture a snapshot from a run's harvested telemetry.
+    pub fn from_summary(rounds_completed: usize, s: &TelemetrySummary) -> Self {
+        Self {
+            rounds_completed,
+            phases: s
+                .phases
+                .iter()
+                .map(|p| (p.name.to_string(), p.total_secs, p.count))
+                .collect(),
+            total_phase_secs: s.total_phase_secs,
+            sends: s.sends,
+            drops: s.drops,
+            superseded: s.superseded,
+            straggler_delayed: s.straggler_delayed,
+            modeled_bytes: s.modeled_bytes,
+            measured_bytes: s.measured_bytes,
+            fresh_payload_cells: s.fresh_payload_cells,
+        }
+    }
+
+    /// Serialize to the schema-v1 JSON text.
+    pub fn to_json(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("snapshot_version".to_string(), Json::Num(SNAPSHOT_VERSION as f64));
+        obj.insert("rounds_completed".to_string(), Json::Num(self.rounds_completed as f64));
+        obj.insert("total_phase_secs".to_string(), Json::Num(self.total_phase_secs));
+        let phases = self
+            .phases
+            .iter()
+            .map(|(name, secs, count)| {
+                let mut p = BTreeMap::new();
+                p.insert("name".to_string(), Json::Str(name.clone()));
+                p.insert("total_secs".to_string(), Json::Num(*secs));
+                p.insert("count".to_string(), Json::Num(*count as f64));
+                Json::Obj(p)
+            })
+            .collect();
+        obj.insert("phases".to_string(), Json::Arr(phases));
+        for (key, value) in [
+            ("sends", self.sends),
+            ("drops", self.drops),
+            ("superseded", self.superseded),
+            ("straggler_delayed", self.straggler_delayed),
+            ("modeled_bytes", self.modeled_bytes),
+            ("measured_bytes", self.measured_bytes),
+            ("fresh_payload_cells", self.fresh_payload_cells),
+        ] {
+            obj.insert(key.to_string(), Json::Num(value as f64));
+        }
+        Json::Obj(obj).to_string()
+    }
+
+    /// Parse a schema-v1 snapshot back from JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = parse(text).map_err(|e| anyhow!("snapshot parse error: {e}"))?;
+        let version = root
+            .get("snapshot_version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("snapshot missing snapshot_version"))?;
+        if version != SNAPSHOT_VERSION {
+            bail!("unsupported snapshot_version {version}");
+        }
+        let field = |key: &str| -> Result<u64> {
+            root.get(key)
+                .and_then(Json::as_f64)
+                .map(|x| x as u64)
+                .ok_or_else(|| anyhow!("snapshot missing {key}"))
+        };
+        let phases = root
+            .get("phases")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("snapshot missing phases"))?
+            .iter()
+            .map(|p| {
+                let name = p
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("phase row missing name"))?
+                    .to_string();
+                let secs = p
+                    .get("total_secs")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("phase {name} missing total_secs"))?;
+                let count = p
+                    .get("count")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("phase {name} missing count"))? as u64;
+                Ok((name, secs, count))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            rounds_completed: root
+                .get("rounds_completed")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("snapshot missing rounds_completed"))?,
+            phases,
+            total_phase_secs: root
+                .get("total_phase_secs")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("snapshot missing total_phase_secs"))?,
+            sends: field("sends")?,
+            drops: field("drops")?,
+            superseded: field("superseded")?,
+            straggler_delayed: field("straggler_delayed")?,
+            modeled_bytes: field("modeled_bytes")?,
+            measured_bytes: field("measured_bytes")?,
+            fresh_payload_cells: field("fresh_payload_cells")?,
+        })
+    }
+
+    /// Write the snapshot to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json()).with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load a snapshot previously written by [`RunSnapshot::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,6 +384,46 @@ mod tests {
         std::fs::write(tmp.join("manifest.json"), "not json").unwrap();
         assert!(Manifest::load(&tmp).is_err());
         let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json() {
+        let summary = TelemetrySummary {
+            enabled: true,
+            phases: vec![
+                crate::telemetry::PhaseStat { name: "compress", total_secs: 0.25, count: 1920 },
+                crate::telemetry::PhaseStat { name: "observe", total_secs: 0.01, count: 120 },
+            ],
+            total_phase_secs: 0.26,
+            sends: 3840,
+            drops: 378,
+            superseded: 0,
+            straggler_delayed: 7,
+            modeled_bytes: 31_158,
+            measured_bytes: 29_001,
+            fresh_payload_cells: 48,
+            node_rollups: vec![],
+        };
+        let snap = RunSnapshot::from_summary(120, &summary);
+        let parsed = RunSnapshot::parse(&snap.to_json()).unwrap();
+        assert_eq!(parsed, snap);
+        assert_eq!(parsed.rounds_completed, 120);
+        assert_eq!(parsed.phases[0], ("compress".to_string(), 0.25, 1920));
+        assert_eq!(parsed.modeled_bytes, 31_158);
+
+        let path = std::env::temp_dir().join("adcdgd_run_snapshot.json");
+        snap.save(&path).unwrap();
+        assert_eq!(RunSnapshot::load(&path).unwrap(), snap);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn snapshot_rejects_wrong_version_and_garbage() {
+        let snap = RunSnapshot::from_summary(1, &TelemetrySummary::default());
+        let bumped = snap.to_json().replace("\"snapshot_version\":1", "\"snapshot_version\":9");
+        assert!(RunSnapshot::parse(&bumped).is_err());
+        assert!(RunSnapshot::parse("not json").is_err());
+        assert!(RunSnapshot::parse("{\"snapshot_version\": 1}").is_err());
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //! `python/compile/aot.py` and executes them from the rust hot path.
 //! Python never runs at request time — the artifacts directory is the
 //! only contract between the layers (`manifest.json` + `*.hlo.txt` +
-//! `transformer_params.bin`).
+//! `transformer_params.bin`). This module also carries
+//! [`RunSnapshot`], the telemetry archive-entry contract of the
+//! (ROADMAP item 5) run-artifact store.
 
 mod artifact;
 mod corpus;
@@ -11,7 +13,7 @@ mod objectives;
 mod quantizer;
 mod train;
 
-pub use artifact::{Manifest, ModelSpec, TensorSpec};
+pub use artifact::{Manifest, ModelSpec, RunSnapshot, TensorSpec, SNAPSHOT_VERSION};
 pub use corpus::TokenGen;
 pub use executable::{LoadedModel, Runtime};
 pub use objectives::{TransformerObjective, XlaLogistic, XlaQuadratic};

@@ -1,0 +1,243 @@
+//! The telemetry plane: zero-alloc tracing, per-plane counters, and
+//! run-trace export.
+//!
+//! Eight planes already count things privately — the [`Bus`] meters
+//! per-link messages/drops/bytes, the mailbox plane counts supersedes,
+//! the payload pools count fresh cells, the churn driver counts faults.
+//! This module is the cross-cutting layer that makes those numbers
+//! *observable on a live run* without perturbing it:
+//!
+//! * [`Registry`] — typed counters/gauges/histograms, pre-registered at
+//!   build time and updated by plain `Cell` stores (zero steady-state
+//!   allocation, asserted by the `ADCDGD_BENCH_ONLY=telemetry` hotpath
+//!   section), with a Prometheus-style [`Registry::render_text`].
+//! * [`PhaseTimers`] — span-style wall-clock timers over the engine
+//!   round loop (the dim engine's seven A–E2 phases; coordinator
+//!   barrier segments in threaded/pool; compress/broadcast/deliver/
+//!   consume/reclaim/observe in sequential). Timing is strictly
+//!   observational: it never feeds the simulated clock or the golden
+//!   trajectories, and the bit-identity suites pass with telemetry on
+//!   or off.
+//! * [`TelemetrySummary`] — the per-run rollup ([`RunOutput::telemetry`])
+//!   unifying phase time, fleet counters, and per-node send/receive
+//!   rollups harvested from the planes after the engine returns.
+//! * [`trace`] — `--trace out.jsonl` export: schema-versioned JSON
+//!   Lines, one object per recorded round, byte columns identical to
+//!   [`RunOutput::metrics`] by construction.
+//!
+//! Lifecycle: the driver builds one [`PhaseTimers`] per run when
+//! [`RunConfig::telemetry`] is on (the default; CLI `--no-telemetry`),
+//! threads it through the engine as `Option<&PhaseTimers>`, and
+//! harvests everything into a [`TelemetrySummary`] at run end. Engines
+//! bind their own phase-name table ([`PhaseTimers::bind`]), so dim's
+//! silent pool fallback reports pool's phases, not a mislabeled table.
+//!
+//! [`Bus`]: crate::network::Bus
+//! [`RunOutput::telemetry`]: crate::coordinator::RunOutput::telemetry
+//! [`RunOutput::metrics`]: crate::coordinator::RunOutput::metrics
+//! [`RunConfig::telemetry`]: crate::coordinator::RunConfig::telemetry
+
+pub mod phases;
+pub mod registry;
+pub mod trace;
+
+pub use phases::{PhaseTimers, DIM_PHASES, MAX_PHASES, SEQUENTIAL_PHASES, WORKER_PHASES};
+pub use registry::{CounterId, GaugeId, HistogramId, Registry};
+pub use trace::{write_trace, TRACE_COLUMNS, TRACE_SCHEMA_VERSION};
+
+use std::fmt::Write as _;
+
+/// One phase's accumulated wall time in a [`TelemetrySummary`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseStat {
+    /// Phase name from the engine's table (see [`phases`] docs).
+    pub name: &'static str,
+    /// Accumulated wall seconds across the run.
+    pub total_secs: f64,
+    /// Spans recorded (≈ rounds, or rounds × nodes for the sequential
+    /// per-node phases).
+    pub count: u64,
+}
+
+/// Per-node rollup of the [`Bus`]'s per-link counters plus the mailbox
+/// plane's supersede attribution.
+///
+/// [`Bus`]: crate::network::Bus
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NodeRollup {
+    /// Messages this node put on the wire (sum over outgoing links).
+    pub sends: u64,
+    /// Of those, messages the loss model dropped.
+    pub drops: u64,
+    /// Modeled payload bytes sent.
+    pub modeled_bytes: u64,
+    /// Measured wire bytes sent (0 when `measure_wire` is off).
+    pub measured_bytes: u64,
+    /// Messages superseded *in this node's inbox* (freshest-wins
+    /// overwrites; only possible under per-message delays).
+    pub superseded_in: u64,
+}
+
+/// The per-run telemetry rollup surfaced as
+/// [`crate::coordinator::RunOutput::telemetry`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TelemetrySummary {
+    /// Whether telemetry was enabled for the run
+    /// ([`crate::coordinator::RunConfig::telemetry`]). When `false`,
+    /// every field below is zero/empty.
+    pub enabled: bool,
+    /// Phase wall-time rows in the engine's table order.
+    pub phases: Vec<PhaseStat>,
+    /// Sum of `phases[*].total_secs`.
+    pub total_phase_secs: f64,
+    /// Fleet-total messages put on the wire.
+    pub sends: u64,
+    /// Fleet-total messages dropped by the loss model. Churn
+    /// dead/link-down suppressions are counted separately, in
+    /// [`crate::coordinator::ChurnCounters`].
+    pub drops: u64,
+    /// Fleet-total mailbox supersedes (freshest-wins overwrites).
+    pub superseded: u64,
+    /// Broadcasts delayed by a straggler schedule.
+    pub straggler_delayed: u64,
+    /// Fleet-total modeled payload bytes.
+    pub modeled_bytes: u64,
+    /// Fleet-total measured wire bytes (0 with `measure_wire` off).
+    pub measured_bytes: u64,
+    /// Payload-pool cells created across the engine's pools (the
+    /// encode-plane recycling health signal; engine-dependent because
+    /// pools shard per worker).
+    pub fresh_payload_cells: u64,
+    /// Per-node send/receive rollups, indexed by node id.
+    pub node_rollups: Vec<NodeRollup>,
+}
+
+impl TelemetrySummary {
+    /// The `k` phases with the largest accumulated wall time,
+    /// descending.
+    pub fn top_phases(&self, k: usize) -> Vec<PhaseStat> {
+        let mut sorted = self.phases.clone();
+        sorted.sort_by(|a, b| b.total_secs.total_cmp(&a.total_secs));
+        sorted.truncate(k);
+        sorted
+    }
+
+    /// Measured-to-modeled byte ratio, or `None` when either column is
+    /// zero (wire metering off, or nothing sent).
+    pub fn wire_ratio(&self) -> Option<f64> {
+        if self.modeled_bytes == 0 || self.measured_bytes == 0 {
+            None
+        } else {
+            Some(self.measured_bytes as f64 / self.modeled_bytes as f64)
+        }
+    }
+
+    /// One-line human summary printed by `solve`: total phase time, the
+    /// top-3 phases, and the measured/modeled byte ratio.
+    pub fn render_line(&self) -> String {
+        if !self.enabled {
+            return "telemetry off".to_string();
+        }
+        let mut line = format!("telemetry phase_time={:.3}s", self.total_phase_secs);
+        let top = self.top_phases(3);
+        if !top.is_empty() {
+            line.push_str(" top=[");
+            for (i, p) in top.iter().enumerate() {
+                if i > 0 {
+                    line.push(' ');
+                }
+                let _ = write!(line, "{}:{:.3}s", p.name, p.total_secs);
+            }
+            line.push(']');
+        }
+        match self.wire_ratio() {
+            Some(r) => {
+                let _ = write!(line, " wire/modeled={r:.3}");
+            }
+            None => line.push_str(" wire/modeled=-"),
+        }
+        line
+    }
+
+    /// Dump the rollup into a [`Registry`] (fleet counters + one
+    /// histogram-free gauge per phase) and render it as Prometheus
+    /// text. Convenience for callers that want a scrapeable snapshot
+    /// without keeping a registry alive during the run.
+    pub fn render_text(&self) -> String {
+        let mut r = Registry::new();
+        let sends = r.counter("adcdgd_sends_total");
+        let drops = r.counter("adcdgd_drops_total");
+        let superseded = r.counter("adcdgd_superseded_total");
+        let stragglers = r.counter("adcdgd_straggler_delayed_total");
+        let modeled = r.counter("adcdgd_modeled_bytes_total");
+        let measured = r.counter("adcdgd_measured_bytes_total");
+        let cells = r.counter("adcdgd_fresh_payload_cells_total");
+        let phase_ids: Vec<_> = self
+            .phases
+            .iter()
+            .map(|p| r.gauge(&format!("adcdgd_phase_seconds{{phase=\"{}\"}}", p.name)))
+            .collect();
+        r.seal();
+        r.store(sends, self.sends);
+        r.store(drops, self.drops);
+        r.store(superseded, self.superseded);
+        r.store(stragglers, self.straggler_delayed);
+        r.store(modeled, self.modeled_bytes);
+        r.store(measured, self.measured_bytes);
+        r.store(cells, self.fresh_payload_cells);
+        for (p, id) in self.phases.iter().zip(phase_ids) {
+            r.set_gauge(id, p.total_secs);
+        }
+        r.render_text()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary() -> TelemetrySummary {
+        TelemetrySummary {
+            enabled: true,
+            phases: vec![
+                PhaseStat { name: "send", total_secs: 0.1, count: 10 },
+                PhaseStat { name: "deliver_consume", total_secs: 0.3, count: 10 },
+                PhaseStat { name: "observe", total_secs: 0.05, count: 10 },
+            ],
+            total_phase_secs: 0.45,
+            sends: 100,
+            drops: 7,
+            superseded: 2,
+            straggler_delayed: 0,
+            modeled_bytes: 1000,
+            measured_bytes: 430,
+            fresh_payload_cells: 12,
+            node_rollups: vec![NodeRollup::default(); 4],
+        }
+    }
+
+    #[test]
+    fn top_phases_sorts_descending() {
+        let s = summary();
+        let top = s.top_phases(2);
+        assert_eq!(top[0].name, "deliver_consume");
+        assert_eq!(top[1].name, "send");
+    }
+
+    #[test]
+    fn render_line_mentions_ratio_and_top_phase() {
+        let s = summary();
+        let line = s.render_line();
+        assert!(line.contains("deliver_consume:0.300s"), "{line}");
+        assert!(line.contains("wire/modeled=0.430"), "{line}");
+        assert_eq!(TelemetrySummary::default().render_line(), "telemetry off");
+    }
+
+    #[test]
+    fn render_text_exposes_fleet_counters() {
+        let text = summary().render_text();
+        assert!(text.contains("adcdgd_sends_total 100"));
+        assert!(text.contains("adcdgd_measured_bytes_total 430"));
+        assert!(text.contains("adcdgd_phase_seconds{phase=\"send\"} 0.1"));
+    }
+}

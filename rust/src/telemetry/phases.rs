@@ -1,0 +1,201 @@
+//! Span-style wall-clock phase timers for the engine round loop.
+//!
+//! A [`PhaseTimers`] is a fixed array of `(nanos, count)` accumulator
+//! pairs plus a phase-name table bound by whichever engine runs — so
+//! one timer instance survives engine fallback (dim → pool) and epoch
+//! segmentation without reallocation. Recording a span is two
+//! [`Instant`] reads and two `Cell` stores; nothing on the path
+//! allocates, which is what lets the `ADCDGD_BENCH_ONLY=telemetry`
+//! hotpath section assert zero steady-state allocations with full
+//! instrumentation enabled.
+//!
+//! **Timing is observational.** Phase wall time never feeds the
+//! simulated clock ([`crate::network::Bus::sim_clock`]), the RNG
+//! streams, or any quantity on a golden trajectory — the bit-identity
+//! suites pass with telemetry on or off, which
+//! `rust/tests/engine_equivalence.rs` pins.
+//!
+//! Concurrency contract: like [`super::Registry`], timers are written
+//! only by the engine's calling/coordinator thread. In the parallel
+//! engines the observable phases are therefore the *coordinator's*
+//! barrier-to-barrier (threaded/pool) or gate-to-gate (dim) segments;
+//! worker-interior time shows up inside the segment that contains it.
+//!
+//! Phase-name tables (schema v1):
+//!
+//! | Engine | Phases |
+//! |---|---|
+//! | sequential | `compress`, `broadcast`, `deliver`, `consume`, `reclaim`, `observe` |
+//! | threaded / pool | `send`, `deliver_consume`, `observe` |
+//! | dim | `a_diff_norm`, `b_stage`, `c_encode`, `d_broadcast`, `d2_collect`, `e1_mirror`, `e2_mix_grad`, `observe` |
+//!
+//! For sequential, `compress` is [`NodeLogic::make_message`] (quantize +
+//! stage into the payload pool) and `broadcast` is the bus fan-out
+//! including wire serialization when `measure_wire` is on; `consume`
+//! contains decode + mix + grad (they execute inside
+//! [`NodeLogic::consume`], invisible to the engine). For threaded/pool,
+//! `send` spans worker emit (compress + serialize + broadcast),
+//! `deliver_consume` the advance/deliver plus worker consume (decode +
+//! mix + grad), `observe` the snapshot + observer callback. The dim
+//! table names the engine's seven A–E2 pipeline phases directly.
+//!
+//! [`NodeLogic::make_message`]: crate::algorithms::NodeLogic::make_message
+//! [`NodeLogic::consume`]: crate::algorithms::NodeLogic::consume
+
+use std::cell::Cell;
+use std::time::Instant;
+
+/// Most phases any engine declares (dim's 7 + observe).
+pub const MAX_PHASES: usize = 16;
+
+/// Sequential engine phase names (see module docs).
+pub const SEQUENTIAL_PHASES: &[&str] =
+    &["compress", "broadcast", "deliver", "consume", "reclaim", "observe"];
+
+/// Threaded/pool coordinator barrier-segment names (see module docs).
+pub const WORKER_PHASES: &[&str] = &["send", "deliver_consume", "observe"];
+
+/// Dim engine gate-to-gate phase names (the seven A–E2 pipeline phases
+/// plus the coordinator's snapshot/observe segment).
+pub const DIM_PHASES: &[&str] = &[
+    "a_diff_norm",
+    "b_stage",
+    "c_encode",
+    "d_broadcast",
+    "d2_collect",
+    "e1_mirror",
+    "e2_mix_grad",
+    "observe",
+];
+
+/// Fixed-capacity per-phase wall-time accumulators (see module docs).
+pub struct PhaseTimers {
+    /// Bound by the engine at segment start ([`PhaseTimers::bind`]);
+    /// empty until then.
+    names: Cell<&'static [&'static str]>,
+    nanos: [Cell<u64>; MAX_PHASES],
+    counts: [Cell<u64>; MAX_PHASES],
+}
+
+impl Default for PhaseTimers {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseTimers {
+    /// Fresh timers with no phase table bound yet.
+    pub fn new() -> Self {
+        Self {
+            names: Cell::new(&[]),
+            nanos: std::array::from_fn(|_| Cell::new(0)),
+            counts: std::array::from_fn(|_| Cell::new(0)),
+        }
+    }
+
+    /// Bind the phase-name table. Idempotent per run: the engine calls
+    /// this at every segment start, so the driver does not need to know
+    /// which engine (or dim-fallback) will actually execute. Rebinding
+    /// to a *different* table mid-run would mix meanings, so it panics.
+    pub fn bind(&self, names: &'static [&'static str]) {
+        assert!(names.len() <= MAX_PHASES, "telemetry: too many phases");
+        let cur = self.names.get();
+        assert!(
+            cur.is_empty() || std::ptr::eq(cur, names),
+            "telemetry: phase table rebound mid-run"
+        );
+        self.names.set(names);
+    }
+
+    /// The bound phase-name table (empty before any engine ran).
+    pub fn names(&self) -> &'static [&'static str] {
+        self.names.get()
+    }
+
+    /// Start a span: one monotonic clock read.
+    #[inline]
+    pub fn start(&self) -> Instant {
+        Instant::now()
+    }
+
+    /// Close a span over `phase`, returning the close instant so
+    /// back-to-back phases chain with a single clock read between them:
+    /// `t = timers.lap(PH_A, t); ...; t = timers.lap(PH_B, t);`
+    #[inline]
+    pub fn lap(&self, phase: usize, t0: Instant) -> Instant {
+        let t1 = Instant::now();
+        let ns = &self.nanos[phase];
+        ns.set(ns.get() + t1.duration_since(t0).as_nanos() as u64);
+        let c = &self.counts[phase];
+        c.set(c.get() + 1);
+        t1
+    }
+
+    /// Accumulated nanoseconds in `phase`.
+    pub fn phase_nanos(&self, phase: usize) -> u64 {
+        self.nanos[phase].get()
+    }
+
+    /// Spans recorded in `phase`.
+    pub fn phase_count(&self, phase: usize) -> u64 {
+        self.counts[phase].get()
+    }
+
+    /// Total accumulated nanoseconds across all bound phases.
+    pub fn total_nanos(&self) -> u64 {
+        (0..self.names.get().len()).map(|i| self.nanos[i].get()).sum()
+    }
+
+    /// Snapshot as `(name, seconds, count)` rows in table order.
+    /// Allocates — harvest-time only.
+    pub fn snapshot(&self) -> Vec<(&'static str, f64, u64)> {
+        self.names
+            .get()
+            .iter()
+            .enumerate()
+            .map(|(i, name)| (*name, self.nanos[i].get() as f64 * 1e-9, self.counts[i].get()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate_per_phase() {
+        let t = PhaseTimers::new();
+        t.bind(WORKER_PHASES);
+        let mut now = t.start();
+        now = t.lap(0, now);
+        now = t.lap(1, now);
+        let _ = t.lap(0, now);
+        assert_eq!(t.phase_count(0), 2);
+        assert_eq!(t.phase_count(1), 1);
+        assert_eq!(t.phase_count(2), 0);
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), WORKER_PHASES.len());
+        assert_eq!(snap[0].0, "send");
+        assert_eq!(snap[0].2, 2);
+        assert_eq!(
+            t.total_nanos(),
+            t.phase_nanos(0) + t.phase_nanos(1) + t.phase_nanos(2)
+        );
+    }
+
+    #[test]
+    fn rebind_same_table_is_idempotent() {
+        let t = PhaseTimers::new();
+        t.bind(DIM_PHASES);
+        t.bind(DIM_PHASES); // every epoch segment rebinds
+        assert_eq!(t.names().len(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "rebound mid-run")]
+    fn rebind_different_table_rejected() {
+        let t = PhaseTimers::new();
+        t.bind(DIM_PHASES);
+        t.bind(SEQUENTIAL_PHASES);
+    }
+}

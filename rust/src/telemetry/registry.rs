@@ -1,0 +1,251 @@
+//! Fixed-capacity metric registry: counters, gauges, histograms.
+//!
+//! The registry follows the crate's arena discipline: every metric is
+//! **pre-registered** while the fleet is being built (registration
+//! pushes into `Vec`s and may allocate), then the registry is
+//! [`Registry::seal`]ed and the hot path only performs plain
+//! `u64`/`f64` stores through [`Cell`]s — no locks, no hashing, no
+//! allocation. Ids are index newtypes handed out at registration, so a
+//! hot-path update is one bounds-checked array store.
+//!
+//! Concurrency contract: the registry is written by **one thread** —
+//! the sequential engine's caller or the parallel engines' coordinator
+//! thread. Worker threads never touch it (`Cell` is deliberately
+//! `!Sync`, so the compiler enforces this; see [`super::PhaseTimers`]
+//! for the same rule on timers).
+//!
+//! [`Registry::render_text`] snapshots everything in the Prometheus
+//! text exposition format for scraping or diffing.
+
+use std::cell::Cell;
+use std::fmt::Write as _;
+
+/// Handle to a registered monotone counter (`u64`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterId(usize);
+
+/// Handle to a registered gauge (`f64`, last-write-wins).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GaugeId(usize);
+
+/// Handle to a registered histogram (fixed bucket bounds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistogramId(usize);
+
+struct Counter {
+    name: String,
+    value: Cell<u64>,
+}
+
+struct Gauge {
+    name: String,
+    value: Cell<f64>,
+}
+
+struct Histogram {
+    name: String,
+    /// Upper bounds of the finite buckets (ascending); one implicit
+    /// `+Inf` bucket follows.
+    bounds: Vec<f64>,
+    /// `counts[i]` counts observations `<= bounds[i]`; the last entry
+    /// is the `+Inf` bucket. Length `bounds.len() + 1`.
+    counts: Vec<Cell<u64>>,
+    sum: Cell<f64>,
+    total: Cell<u64>,
+}
+
+/// Pre-registered, fixed-capacity metric store (see module docs).
+#[derive(Default)]
+pub struct Registry {
+    counters: Vec<Counter>,
+    gauges: Vec<Gauge>,
+    histograms: Vec<Histogram>,
+    sealed: bool,
+}
+
+impl Registry {
+    /// Empty, unsealed registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a monotone counter. Panics after [`Registry::seal`] —
+    /// registration is a build-time activity by contract.
+    pub fn counter(&mut self, name: &str) -> CounterId {
+        assert!(!self.sealed, "telemetry: counter {name:?} registered after seal");
+        self.counters.push(Counter { name: name.to_string(), value: Cell::new(0) });
+        CounterId(self.counters.len() - 1)
+    }
+
+    /// Register a gauge. Panics after [`Registry::seal`].
+    pub fn gauge(&mut self, name: &str) -> GaugeId {
+        assert!(!self.sealed, "telemetry: gauge {name:?} registered after seal");
+        self.gauges.push(Gauge { name: name.to_string(), value: Cell::new(0.0) });
+        GaugeId(self.gauges.len() - 1)
+    }
+
+    /// Register a histogram with ascending finite bucket `bounds` (an
+    /// implicit `+Inf` bucket is appended). Panics after
+    /// [`Registry::seal`] or on non-ascending bounds.
+    pub fn histogram(&mut self, name: &str, bounds: &[f64]) -> HistogramId {
+        assert!(!self.sealed, "telemetry: histogram {name:?} registered after seal");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "telemetry: histogram {name:?} bounds must ascend"
+        );
+        self.histograms.push(Histogram {
+            name: name.to_string(),
+            bounds: bounds.to_vec(),
+            counts: (0..=bounds.len()).map(|_| Cell::new(0)).collect(),
+            sum: Cell::new(0.0),
+            total: Cell::new(0),
+        });
+        HistogramId(self.histograms.len() - 1)
+    }
+
+    /// Freeze registration; hot-path updates only from here on.
+    pub fn seal(&mut self) {
+        self.sealed = true;
+    }
+
+    /// Whether [`Registry::seal`] has been called.
+    pub fn sealed(&self) -> bool {
+        self.sealed
+    }
+
+    /// Add `v` to a counter (plain `Cell` store — zero-alloc).
+    #[inline]
+    pub fn add(&self, id: CounterId, v: u64) {
+        let c = &self.counters[id.0].value;
+        c.set(c.get() + v);
+    }
+
+    /// Overwrite a counter with an externally accumulated total (used
+    /// when harvesting counts another plane already keeps).
+    #[inline]
+    pub fn store(&self, id: CounterId, v: u64) {
+        self.counters[id.0].value.set(v);
+    }
+
+    /// Current value of a counter.
+    pub fn get(&self, id: CounterId) -> u64 {
+        self.counters[id.0].value.get()
+    }
+
+    /// Set a gauge (last write wins).
+    #[inline]
+    pub fn set_gauge(&self, id: GaugeId, v: f64) {
+        self.gauges[id.0].value.set(v);
+    }
+
+    /// Current value of a gauge.
+    pub fn gauge_value(&self, id: GaugeId) -> f64 {
+        self.gauges[id.0].value.get()
+    }
+
+    /// Record one observation into a histogram (zero-alloc: a linear
+    /// scan over the fixed bounds and three `Cell` stores).
+    #[inline]
+    pub fn observe(&self, id: HistogramId, v: f64) {
+        let h = &self.histograms[id.0];
+        let mut i = h.bounds.len(); // +Inf bucket by default
+        for (b, bound) in h.bounds.iter().enumerate() {
+            if v <= *bound {
+                i = b;
+                break;
+            }
+        }
+        let c = &h.counts[i];
+        c.set(c.get() + 1);
+        h.sum.set(h.sum.get() + v);
+        h.total.set(h.total.get() + 1);
+    }
+
+    /// Observation count of a histogram.
+    pub fn histogram_count(&self, id: HistogramId) -> u64 {
+        self.histograms[id.0].total.get()
+    }
+
+    /// Sum of a histogram's observations.
+    pub fn histogram_sum(&self, id: HistogramId) -> f64 {
+        self.histograms[id.0].sum.get()
+    }
+
+    /// Render every metric in the Prometheus text exposition format
+    /// (counters as `# TYPE ... counter`, histograms with cumulative
+    /// `_bucket{le="..."}` rows plus `_sum`/`_count`). Allocates — call
+    /// off the hot path.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for c in &self.counters {
+            let _ = writeln!(out, "# TYPE {} counter", c.name);
+            let _ = writeln!(out, "{} {}", c.name, c.value.get());
+        }
+        for g in &self.gauges {
+            let _ = writeln!(out, "# TYPE {} gauge", g.name);
+            let _ = writeln!(out, "{} {}", g.name, g.value.get());
+        }
+        for h in &self.histograms {
+            let _ = writeln!(out, "# TYPE {} histogram", h.name);
+            let mut cum = 0u64;
+            for (i, bound) in h.bounds.iter().enumerate() {
+                cum += h.counts[i].get();
+                let _ = writeln!(out, "{}_bucket{{le=\"{}\"}} {}", h.name, bound, cum);
+            }
+            cum += h.counts[h.bounds.len()].get();
+            let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {}", h.name, cum);
+            let _ = writeln!(out, "{}_sum {}", h.name, h.sum.get());
+            let _ = writeln!(out, "{}_count {}", h.name, h.total.get());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_round_trip() {
+        let mut r = Registry::new();
+        let sends = r.counter("adcdgd_sends_total");
+        let ratio = r.gauge("adcdgd_wire_ratio");
+        r.seal();
+        r.add(sends, 3);
+        r.add(sends, 4);
+        r.store(sends, 10);
+        r.set_gauge(ratio, 0.5);
+        assert_eq!(r.get(sends), 10);
+        assert_eq!(r.gauge_value(ratio), 0.5);
+        let text = r.render_text();
+        assert!(text.contains("# TYPE adcdgd_sends_total counter"));
+        assert!(text.contains("adcdgd_sends_total 10"));
+        assert!(text.contains("adcdgd_wire_ratio 0.5"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let mut r = Registry::new();
+        let h = r.histogram("adcdgd_phase_seconds", &[0.001, 0.01, 0.1]);
+        r.seal();
+        for v in [0.0005, 0.005, 0.005, 0.05, 5.0] {
+            r.observe(h, v);
+        }
+        assert_eq!(r.histogram_count(h), 5);
+        assert!((r.histogram_sum(h) - 5.0605).abs() < 1e-12);
+        let text = r.render_text();
+        assert!(text.contains("adcdgd_phase_seconds_bucket{le=\"0.001\"} 1"));
+        assert!(text.contains("adcdgd_phase_seconds_bucket{le=\"0.01\"} 3"));
+        assert!(text.contains("adcdgd_phase_seconds_bucket{le=\"0.1\"} 4"));
+        assert!(text.contains("adcdgd_phase_seconds_bucket{le=\"+Inf\"} 5"));
+        assert!(text.contains("adcdgd_phase_seconds_count 5"));
+    }
+
+    #[test]
+    #[should_panic(expected = "registered after seal")]
+    fn registration_after_seal_rejected() {
+        let mut r = Registry::new();
+        r.seal();
+        r.counter("late");
+    }
+}

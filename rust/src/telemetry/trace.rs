@@ -1,0 +1,210 @@
+//! Run-trace export: one JSON line per recorded round (schema v1).
+//!
+//! The trace is a JSON-Lines file built on [`crate::util::json`]:
+//!
+//! * **Line 1 — meta object.** `schema: "adcdgd-trace"`, `version: 1`,
+//!   the per-round column list, the engine's phase table with
+//!   accumulated wall seconds, and the run's counter summary.
+//! * **Lines 2.. — round records.** One object per *recorded* round
+//!   (the `record_every` cadence), mirroring
+//!   [`crate::metrics::RunMetrics`] column for column — so the trace's
+//!   cumulative byte columns equal `RunOutput.metrics` exactly, by
+//!   construction, and `scripts/check_trace_schema.py` can validate a
+//!   file without knowing anything about the scenario.
+//!
+//! The writer is buffered ([`std::io::BufWriter`]) and runs **after**
+//! the engine finished — tracing never touches the round hot path.
+
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+use super::TelemetrySummary;
+use crate::metrics::RunMetrics;
+use crate::util::json::Json;
+
+/// Version stamped into every trace meta line; bump on any column or
+/// meta-shape change.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// Per-round column names, in [`RunMetrics`] order.
+pub const TRACE_COLUMNS: &[&str] = &[
+    "round",
+    "grad_iterations",
+    "objective",
+    "grad_norm",
+    "consensus_error",
+    "bytes_cumulative",
+    "measured_bytes_cumulative",
+    "max_transmitted",
+    "saturations",
+];
+
+/// Meta (first) line of a trace as a [`Json`] value.
+pub fn trace_meta_json(metrics: &RunMetrics, summary: &TelemetrySummary) -> Json {
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("schema".to_string(), Json::Str("adcdgd-trace".to_string()));
+    obj.insert("version".to_string(), Json::Num(TRACE_SCHEMA_VERSION as f64));
+    obj.insert("rows".to_string(), Json::Num(metrics.len() as f64));
+    obj.insert(
+        "columns".to_string(),
+        Json::Arr(TRACE_COLUMNS.iter().map(|c| Json::Str(c.to_string())).collect()),
+    );
+    obj.insert(
+        "phases".to_string(),
+        Json::Arr(
+            summary
+                .phases
+                .iter()
+                .map(|p| {
+                    let mut ph = std::collections::BTreeMap::new();
+                    ph.insert("name".to_string(), Json::Str(p.name.to_string()));
+                    ph.insert("total_secs".to_string(), Json::Num(p.total_secs));
+                    ph.insert("count".to_string(), Json::Num(p.count as f64));
+                    Json::Obj(ph)
+                })
+                .collect(),
+        ),
+    );
+    let mut s = std::collections::BTreeMap::new();
+    s.insert("enabled".to_string(), Json::Bool(summary.enabled));
+    s.insert("sends".to_string(), Json::Num(summary.sends as f64));
+    s.insert("drops".to_string(), Json::Num(summary.drops as f64));
+    s.insert("superseded".to_string(), Json::Num(summary.superseded as f64));
+    s.insert("straggler_delayed".to_string(), Json::Num(summary.straggler_delayed as f64));
+    s.insert("modeled_bytes".to_string(), Json::Num(summary.modeled_bytes as f64));
+    s.insert("measured_bytes".to_string(), Json::Num(summary.measured_bytes as f64));
+    s.insert(
+        "fresh_payload_cells".to_string(),
+        Json::Num(summary.fresh_payload_cells as f64),
+    );
+    s.insert("total_phase_secs".to_string(), Json::Num(summary.total_phase_secs));
+    obj.insert("summary".to_string(), Json::Obj(s));
+    Json::Obj(obj)
+}
+
+/// Round record `i` of `metrics` as a [`Json`] value (one trace line).
+pub fn trace_round_json(metrics: &RunMetrics, i: usize) -> Json {
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("round".to_string(), Json::Num(metrics.rounds[i] as f64));
+    obj.insert("grad_iterations".to_string(), Json::Num(metrics.grad_iterations[i] as f64));
+    obj.insert("objective".to_string(), Json::Num(metrics.objective[i]));
+    obj.insert("grad_norm".to_string(), Json::Num(metrics.grad_norm[i]));
+    obj.insert("consensus_error".to_string(), Json::Num(metrics.consensus_error[i]));
+    obj.insert("bytes_cumulative".to_string(), Json::Num(metrics.bytes_cumulative[i] as f64));
+    obj.insert(
+        "measured_bytes_cumulative".to_string(),
+        Json::Num(metrics.measured_bytes_cumulative[i] as f64),
+    );
+    obj.insert("max_transmitted".to_string(), Json::Num(metrics.max_transmitted[i]));
+    obj.insert("saturations".to_string(), Json::Num(metrics.saturations[i]));
+    Json::Obj(obj)
+}
+
+/// Stream a full trace into `writer`: meta line, then one line per
+/// recorded round.
+pub fn write_trace_to<W: Write>(
+    writer: &mut W,
+    metrics: &RunMetrics,
+    summary: &TelemetrySummary,
+) -> io::Result<()> {
+    writeln!(writer, "{}", trace_meta_json(metrics, summary).to_string())?;
+    for i in 0..metrics.len() {
+        writeln!(writer, "{}", trace_round_json(metrics, i).to_string())?;
+    }
+    Ok(())
+}
+
+/// Write a trace file at `path` (buffered; overwrites).
+pub fn write_trace(
+    path: &Path,
+    metrics: &RunMetrics,
+    summary: &TelemetrySummary,
+) -> io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    write_trace_to(&mut w, metrics, summary)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RoundRecord;
+    use crate::util::json;
+
+    fn sample_metrics() -> RunMetrics {
+        let mut m = RunMetrics::default();
+        for (k, r) in [(10usize, 0usize), (20, 1)] {
+            m.push(RoundRecord {
+                round: k,
+                grad_iterations: k,
+                objective: 1.5 - r as f64,
+                grad_norm: 1e-3,
+                consensus_error: 2e-4,
+                bytes_cumulative: 100 * (r + 1),
+                measured_bytes_cumulative: 90 * (r + 1),
+                max_transmitted: 3.25,
+                saturations: 0,
+            });
+        }
+        m
+    }
+
+    #[test]
+    fn round_record_json_round_trips() {
+        let m = sample_metrics();
+        let line = trace_round_json(&m, 1).to_string();
+        let parsed = json::parse(&line).expect("round line parses");
+        assert_eq!(parsed.get("round").and_then(Json::as_usize), Some(20));
+        assert_eq!(parsed.get("bytes_cumulative").and_then(Json::as_usize), Some(200));
+        assert_eq!(
+            parsed.get("measured_bytes_cumulative").and_then(Json::as_usize),
+            Some(180)
+        );
+        assert_eq!(parsed.get("objective").and_then(Json::as_f64), Some(0.5));
+    }
+
+    #[test]
+    fn meta_line_carries_schema_and_phases() {
+        let m = sample_metrics();
+        let mut summary = TelemetrySummary::default();
+        summary.enabled = true;
+        summary.phases.push(super::super::PhaseStat {
+            name: "send",
+            total_secs: 0.25,
+            count: 40,
+        });
+        summary.total_phase_secs = 0.25;
+        let meta = trace_meta_json(&m, &summary).to_string();
+        let parsed = json::parse(&meta).expect("meta parses");
+        assert_eq!(parsed.get("schema").and_then(Json::as_str), Some("adcdgd-trace"));
+        assert_eq!(
+            parsed.get("version").and_then(Json::as_usize),
+            Some(TRACE_SCHEMA_VERSION as usize)
+        );
+        assert_eq!(parsed.get("rows").and_then(Json::as_usize), Some(2));
+        let phases = parsed.get("phases").and_then(Json::as_arr).expect("phases array");
+        assert_eq!(phases.len(), 1);
+        assert_eq!(phases[0].get("name").and_then(Json::as_str), Some("send"));
+        assert_eq!(phases[0].get("count").and_then(Json::as_usize), Some(40));
+    }
+
+    #[test]
+    fn stream_writes_one_line_per_row_plus_meta() {
+        let m = sample_metrics();
+        let summary = TelemetrySummary::default();
+        let mut buf = Vec::new();
+        write_trace_to(&mut buf, &m, &summary).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1 + m.len());
+        // Round indices strictly increase across data lines.
+        let mut prev = 0usize;
+        for line in &lines[1..] {
+            let parsed = json::parse(line).unwrap();
+            let round = parsed.get("round").and_then(Json::as_usize).unwrap();
+            assert!(round > prev, "rounds must be monotone");
+            prev = round;
+        }
+    }
+}

@@ -84,10 +84,14 @@ fn solve_pool_engine_matches_sequential() {
     assert!(seq_ok, "{seq_out}");
     assert!(pool_ok, "{pool_out}");
     // Engines are bit-identical, so the printed metric lines must match
-    // exactly. The one legitimately engine-dependent line is the encode
-    // pool's cell count (one pool per worker/shard), printed separately.
+    // exactly. The legitimately engine-dependent lines are the encode
+    // pool's cell count (one pool per worker/shard) and the telemetry
+    // summary (wall-clock phase times), each printed separately.
     let strip = |out: &str| -> String {
-        out.lines().filter(|l| !l.starts_with("fresh_payload_cells=")).collect::<Vec<_>>().join("\n")
+        out.lines()
+            .filter(|l| !l.starts_with("fresh_payload_cells=") && !l.starts_with("telemetry"))
+            .collect::<Vec<_>>()
+            .join("\n")
     };
     assert_eq!(strip(&seq_out), strip(&pool_out), "pool output must match sequential");
     assert!(seq_out.contains("fresh_payload_cells="), "{seq_out}");
@@ -182,6 +186,33 @@ fn solve_churn_flags_report_fault_counters() {
     ]);
     assert!(plain_ok, "{plain}");
     assert!(!plain.contains("churn epochs="), "{plain}");
+}
+
+#[test]
+fn solve_telemetry_line_and_trace_export() {
+    let dir = std::env::temp_dir().join(format!("adcdgd_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("out.jsonl");
+    let (out, err, ok) = run(&[
+        "solve", "--algo", "adc", "--topology", "ring", "--n", "6", "--iters", "120",
+        "--record-every", "40", "--trace", trace.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout: {out}\nstderr: {err}");
+    assert!(out.contains("telemetry phase_time="), "{out}");
+    assert!(out.contains("trace written to"), "{out}");
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let mut lines = text.lines();
+    let meta = lines.next().unwrap();
+    assert!(meta.contains("\"schema\":\"adcdgd-trace\""), "{meta}");
+    assert_eq!(lines.count(), 3, "record_every 40 over 120 rounds = 3 rows");
+    // --no-telemetry switches the summary off but never the trajectory.
+    let (quiet, _, quiet_ok) = run(&[
+        "solve", "--algo", "adc", "--topology", "ring", "--n", "6", "--iters", "120",
+        "--record-every", "40", "--no-telemetry",
+    ]);
+    assert!(quiet_ok, "{quiet}");
+    assert!(quiet.contains("telemetry off"), "{quiet}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

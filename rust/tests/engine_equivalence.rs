@@ -476,3 +476,42 @@ fn custom_specs_remain_engine_invariant() {
     let b = prepared.run_with(&cfg(EngineKind::pool(), 0.0));
     assert_identical(&a, &b, "custom spec");
 }
+
+/// The telemetry plane must be purely observational: the golden
+/// snapshots (which run with the default `telemetry: true`) must also
+/// reproduce bit-for-bit with telemetry disabled, on every engine —
+/// phase timers only read the wall clock, never the simulated clock or
+/// any RNG stream. The harvested summary itself flips with the flag.
+#[test]
+fn golden_snapshots_hold_with_telemetry_off() {
+    let spec = ring_spec(
+        16,
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        CompressorSpec::TernGrad,
+    );
+    let prepared = spec.prepare();
+    for engine in [
+        EngineKind::Sequential,
+        EngineKind::Threaded,
+        EngineKind::pool(),
+        EngineKind::dim(2),
+    ] {
+        let mut off = golden_cfg(engine, 120);
+        off.telemetry = false;
+        let out = prepared.run_with(&off);
+        assert_bits(&out.final_states, &GOLDEN_R120, &format!("{engine:?} telemetry off"));
+        assert_eq!(out.total_bytes, GOLDEN_TOTAL_BYTES, "{engine:?} bytes");
+        assert_eq!(out.dropped_messages, GOLDEN_DROPPED, "{engine:?} drops");
+        assert!(!out.telemetry.enabled, "{engine:?}: summary must be off");
+        assert_eq!(out.telemetry.sends, 0, "{engine:?}: off summary stays zeroed");
+
+        let on = prepared.run_with(&golden_cfg(engine, 120));
+        assert_identical(&on, &out, &format!("{engine:?} telemetry on vs off"));
+        assert!(on.telemetry.enabled, "{engine:?}: default-on summary");
+        // Fleet counters in the summary mirror the run's own accounting:
+        // sends are pre-drop attempts (16 nodes × 2 links × 120 rounds).
+        assert_eq!(on.telemetry.sends, 16 * 2 * 120, "{engine:?} sends");
+        assert_eq!(on.telemetry.drops as usize, GOLDEN_DROPPED, "{engine:?} drop counter");
+        assert_eq!(on.telemetry.modeled_bytes as usize, out.total_bytes, "{engine:?} bytes counter");
+    }
+}

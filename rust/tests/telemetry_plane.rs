@@ -1,0 +1,225 @@
+//! Telemetry-plane contract tests: all four engines must harvest
+//! identical values for every deterministic counter (sends, drops,
+//! supersedes, modeled and measured bytes, per-node rollups), the
+//! `--trace` JSONL export must mirror `RunOutput.metrics` column for
+//! column, and the epoch (churn) pathway must accumulate phase spans
+//! across segments.
+
+use adcdgd::algorithms::{AdcDgdOptions, AlgorithmKind, StepSize};
+use adcdgd::coordinator::{
+    CompressorSpec, EngineKind, ObjectiveSpec, RunConfig, RunOutput, ScenarioSpec, TopologySpec,
+};
+use adcdgd::network::{DelayDist, LinkModel, TopologySchedule};
+use adcdgd::telemetry::trace::write_trace_to;
+use adcdgd::telemetry::{TRACE_COLUMNS, TRACE_SCHEMA_VERSION};
+use adcdgd::util::json::{self, Json};
+
+fn cfg(engine: EngineKind) -> RunConfig {
+    RunConfig {
+        iterations: 120,
+        step_size: StepSize::Constant(0.01),
+        record_every: 30,
+        seed: 5,
+        engine,
+        link: LinkModel { drop_prob: 0.10, ..LinkModel::default() },
+        ..RunConfig::default()
+    }
+}
+
+fn adc_ring(n: usize) -> ScenarioSpec {
+    ScenarioSpec::new(
+        AlgorithmKind::AdcDgd(AdcDgdOptions { gamma: 1.0 }),
+        TopologySpec::Ring(n),
+        ObjectiveSpec::RandomCircle { seed: 77 },
+    )
+    .with_compressor(CompressorSpec::TernGrad)
+}
+
+/// Every deterministic telemetry quantity — fleet counters and the full
+/// per-node rollup vector — must be identical across sequential /
+/// threaded / pool / dim. Only `fresh_payload_cells` may differ (pools
+/// shard per worker), and even that must be reproducible per engine.
+#[test]
+fn counters_identical_across_all_four_engines() {
+    let prepared = adc_ring(16).prepare();
+    let engines = [
+        EngineKind::Sequential,
+        EngineKind::Threaded,
+        EngineKind::Pool { workers: 3 },
+        EngineKind::Dim { workers: 3, tiles: 2 },
+    ];
+    let outs: Vec<RunOutput> =
+        engines.iter().map(|&e| prepared.run_with(&cfg(e))).collect();
+    let seq = &outs[0].telemetry;
+    assert!(seq.enabled);
+    // Ring(16): every node sends to both neighbors every round, pre-drop.
+    assert_eq!(seq.sends, 16 * 2 * 120);
+    assert!(seq.drops > 0, "10% loss must fire");
+    assert_eq!(seq.superseded, 0, "uniform delays never collide");
+    assert!(seq.modeled_bytes > 0 && seq.measured_bytes > 0);
+    assert_eq!(seq.node_rollups.len(), 16);
+    assert_eq!(seq.node_rollups.iter().map(|r| r.sends).sum::<u64>(), seq.sends);
+    for (engine, out) in engines.iter().zip(&outs).skip(1) {
+        let t = &out.telemetry;
+        assert_eq!(t.sends, seq.sends, "{engine:?} sends");
+        assert_eq!(t.drops, seq.drops, "{engine:?} drops");
+        assert_eq!(t.superseded, seq.superseded, "{engine:?} superseded");
+        assert_eq!(t.straggler_delayed, seq.straggler_delayed, "{engine:?} stragglers");
+        assert_eq!(t.modeled_bytes, seq.modeled_bytes, "{engine:?} modeled bytes");
+        assert_eq!(t.measured_bytes, seq.measured_bytes, "{engine:?} measured bytes");
+        assert_eq!(t.node_rollups, seq.node_rollups, "{engine:?} per-node rollups");
+        // Counters mirror the run's own accounting fields exactly.
+        assert_eq!(t.modeled_bytes as usize, out.total_bytes, "{engine:?} vs total_bytes");
+        assert_eq!(
+            t.measured_bytes as usize, out.measured_wire_bytes,
+            "{engine:?} vs measured_wire_bytes"
+        );
+        assert_eq!(t.drops as usize, out.dropped_messages, "{engine:?} vs dropped_messages");
+        assert_eq!(
+            t.fresh_payload_cells as usize, out.fresh_payload_cells,
+            "{engine:?} vs fresh_payload_cells"
+        );
+        // Per-engine determinism of the one engine-dependent counter.
+        let again = prepared.run_with(&cfg(*engine));
+        assert_eq!(
+            again.telemetry.fresh_payload_cells, t.fresh_payload_cells,
+            "{engine:?} fresh cells must be reproducible"
+        );
+    }
+    // Phase tables: each engine binds its own, with one span per round
+    // (or more for the sequential per-node phases).
+    assert_eq!(outs[0].telemetry.phases.len(), 6, "sequential table");
+    assert_eq!(outs[1].telemetry.phases.len(), 3, "threaded table");
+    assert_eq!(outs[2].telemetry.phases.len(), 3, "pool table");
+    assert_eq!(outs[3].telemetry.phases.len(), 8, "dim table");
+    for out in &outs {
+        for ph in &out.telemetry.phases {
+            assert!(ph.count >= 120, "{}: {} spans", ph.name, ph.count);
+            assert!(ph.total_secs >= 0.0);
+        }
+    }
+}
+
+/// The JSONL trace must carry the schema header and mirror the recorded
+/// metrics exactly — in particular the cumulative byte columns, which
+/// the issue pins against `RunOutput.metrics`.
+#[test]
+fn trace_export_mirrors_run_metrics() {
+    let prepared = adc_ring(16).prepare();
+    let out = prepared.run_with(&cfg(EngineKind::Sequential));
+    let mut buf = Vec::new();
+    write_trace_to(&mut buf, &out.metrics, &out.telemetry).unwrap();
+    let text = String::from_utf8(buf).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 1 + out.metrics.len());
+
+    let meta = json::parse(lines[0]).expect("meta line parses");
+    assert_eq!(meta.get("schema").and_then(Json::as_str), Some("adcdgd-trace"));
+    assert_eq!(
+        meta.get("version").and_then(Json::as_usize),
+        Some(TRACE_SCHEMA_VERSION as usize)
+    );
+    assert_eq!(meta.get("rows").and_then(Json::as_usize), Some(out.metrics.len()));
+    let columns = meta.get("columns").and_then(Json::as_arr).expect("columns");
+    let names: Vec<&str> = columns.iter().filter_map(Json::as_str).collect();
+    assert_eq!(names, TRACE_COLUMNS);
+    let phases = meta.get("phases").and_then(Json::as_arr).expect("phases");
+    assert_eq!(phases.len(), 6, "sequential phase table in meta");
+    let summary = meta.get("summary").expect("summary");
+    assert_eq!(summary.get("enabled").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        summary.get("sends").and_then(Json::as_usize),
+        Some(out.telemetry.sends as usize)
+    );
+    assert_eq!(
+        summary.get("modeled_bytes").and_then(Json::as_usize),
+        Some(out.total_bytes)
+    );
+
+    let mut prev_round = 0usize;
+    for (i, line) in lines[1..].iter().enumerate() {
+        let row = json::parse(line).expect("round line parses");
+        for &col in TRACE_COLUMNS {
+            assert!(row.get(col).is_some(), "row {i} missing column {col}");
+        }
+        let round = row.get("round").and_then(Json::as_usize).unwrap();
+        assert!(round > prev_round, "rounds must be strictly monotone");
+        prev_round = round;
+        assert_eq!(
+            row.get("bytes_cumulative").and_then(Json::as_usize),
+            Some(out.metrics.bytes_cumulative[i]),
+            "row {i} modeled bytes"
+        );
+        assert_eq!(
+            row.get("measured_bytes_cumulative").and_then(Json::as_usize),
+            Some(out.metrics.measured_bytes_cumulative[i]),
+            "row {i} measured bytes"
+        );
+        assert_eq!(
+            row.get("objective").and_then(Json::as_f64),
+            Some(out.metrics.objective[i]),
+            "row {i} objective"
+        );
+    }
+    // Final cumulative row equals the run totals.
+    assert_eq!(out.metrics.bytes_cumulative.last().copied(), Some(out.total_bytes));
+}
+
+/// Prometheus-style rendering of a real run's summary exposes the fleet
+/// counters with the run's actual values.
+#[test]
+fn render_text_exposes_real_run_counters() {
+    let prepared = adc_ring(8).prepare();
+    let out = prepared.run_with(&cfg(EngineKind::Sequential));
+    let text = out.telemetry.render_text();
+    assert!(
+        text.contains(&format!("adcdgd_sends_total {}", out.telemetry.sends)),
+        "{text}"
+    );
+    assert!(
+        text.contains(&format!("adcdgd_modeled_bytes_total {}", out.total_bytes)),
+        "{text}"
+    );
+    assert!(text.contains("adcdgd_phase_seconds{phase=\"compress\"}"), "{text}");
+    assert!(out.telemetry.render_line().starts_with("telemetry phase_time="), "render_line");
+}
+
+/// The epoch (churn) pathway: one `PhaseTimers` accumulates across all
+/// segments, and the harvested summary folds in churn drops and
+/// straggler delays. The phase table belongs to whichever engine ran.
+#[test]
+fn epoch_pathway_accumulates_phases_and_faults() {
+    let schedule = TopologySchedule::new(25)
+        .leave(1, 3)
+        .join(3, 3)
+        .with_straggler(5, DelayDist::Fixed(1));
+    let prepared = adc_ring(16).with_churn(schedule).prepare();
+    for engine in [EngineKind::Sequential, EngineKind::Dim { workers: 3, tiles: 2 }] {
+        let mut c = cfg(engine);
+        c.iterations = 100;
+        let out = prepared.run_with(&c);
+        let t = &out.telemetry;
+        assert!(t.enabled, "{engine:?}");
+        assert!(t.straggler_delayed > 0, "{engine:?}: straggler must fire");
+        assert_eq!(
+            t.straggler_delayed as usize, out.churn.straggler_delayed,
+            "{engine:?}: straggler counter matches churn plane"
+        );
+        // `drops` is loss-model drops only; dead-destination suppressions
+        // live in the churn counters.
+        assert_eq!(t.drops as usize, out.dropped_messages, "{engine:?} drops");
+        assert!(out.churn.dropped_dead > 0, "{engine:?}: dead node must eat copies");
+        for ph in &t.phases {
+            // One PhaseTimers spans all 4 epochs: at least one lap per
+            // round (per-node phases record more).
+            assert!(ph.count >= 100, "{engine:?} {}: {} spans", ph.name, ph.count);
+        }
+        // Telemetry off on the same churn run: identical trajectory.
+        let mut off = c.clone();
+        off.telemetry = false;
+        let quiet = prepared.run_with(&off);
+        assert!(!quiet.telemetry.enabled);
+        assert_eq!(quiet.final_states, out.final_states, "{engine:?}: bit-identity");
+        assert_eq!(quiet.churn, out.churn, "{engine:?}: fault counters");
+    }
+}

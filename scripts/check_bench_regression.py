@@ -53,6 +53,7 @@ DEFAULT_THRESHOLD = 0.75
 KEY_FIELDS = (
     "n", "p", "dim", "tiles", "wire", "rounds", "timed_rounds", "shard",
     "batch", "edges", "k_regular", "epoch_len", "epochs", "churn_per_epoch",
+    "telemetry",
 )
 
 

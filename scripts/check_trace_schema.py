@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Validate a ``--trace out.jsonl`` run-trace file (schema v1).
+
+The trace format is produced by ``adcdgd solve ... --trace out.jsonl``
+(see ``rust/src/telemetry/trace.rs``):
+
+* Line 1 — meta object: ``schema: "adcdgd-trace"``, ``version: 1``,
+  ``rows`` (the data-line count), ``columns`` (the per-round column
+  list), ``phases`` (the engine's phase table with accumulated wall
+  seconds and span counts), and ``summary`` (the run's fleet counters).
+* Lines 2.. — one object per recorded round, carrying exactly the
+  declared columns, with strictly increasing ``round`` indices and
+  non-decreasing cumulative byte columns.
+
+The checker knows nothing about the scenario — it validates shape and
+internal consistency only, so CI can run it on any sample trace.
+
+Exit codes: 0 valid, 1 invalid, 2 usage error.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+EXPECTED_SCHEMA = "adcdgd-trace"
+EXPECTED_VERSION = 1
+EXPECTED_COLUMNS = [
+    "round",
+    "grad_iterations",
+    "objective",
+    "grad_norm",
+    "consensus_error",
+    "bytes_cumulative",
+    "measured_bytes_cumulative",
+    "max_transmitted",
+    "saturations",
+]
+SUMMARY_FIELDS = (
+    "enabled", "sends", "drops", "superseded", "straggler_delayed",
+    "modeled_bytes", "measured_bytes", "fresh_payload_cells",
+    "total_phase_secs",
+)
+PHASE_FIELDS = ("name", "total_secs", "count")
+
+
+def fail(msg: str) -> None:
+    sys.exit(f"trace invalid: {msg}")
+
+
+def check(path: Path) -> None:
+    try:
+        lines = path.read_text().splitlines()
+    except OSError as e:
+        sys.exit(f"error: cannot read {path}: {e}")
+    if not lines:
+        fail("empty file (expected a meta line)")
+    try:
+        meta = json.loads(lines[0])
+    except json.JSONDecodeError as e:
+        fail(f"meta line is not JSON: {e}")
+
+    if meta.get("schema") != EXPECTED_SCHEMA:
+        fail(f"schema {meta.get('schema')!r}, expected {EXPECTED_SCHEMA!r}")
+    if meta.get("version") != EXPECTED_VERSION:
+        fail(f"version {meta.get('version')!r}, expected {EXPECTED_VERSION}")
+    columns = meta.get("columns")
+    if columns != EXPECTED_COLUMNS:
+        fail(f"columns {columns!r}, expected {EXPECTED_COLUMNS!r}")
+    rows = meta.get("rows")
+    data_lines = lines[1:]
+    if rows != len(data_lines):
+        fail(f"meta declares {rows} rows, file has {len(data_lines)}")
+    for i, phase in enumerate(meta.get("phases", [])):
+        for field in PHASE_FIELDS:
+            if field not in phase:
+                fail(f"phase entry {i} missing {field!r}: {phase!r}")
+        if phase["total_secs"] < 0 or phase["count"] < 0:
+            fail(f"phase entry {i} has negative stats: {phase!r}")
+    summary = meta.get("summary")
+    if not isinstance(summary, dict):
+        fail("meta has no summary object")
+    for field in SUMMARY_FIELDS:
+        if field not in summary:
+            fail(f"summary missing {field!r}")
+
+    prev_round = 0
+    prev_bytes = -1
+    prev_measured = -1
+    for i, line in enumerate(data_lines, start=2):
+        try:
+            row = json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(f"line {i} is not JSON: {e}")
+        extra = set(row) - set(EXPECTED_COLUMNS)
+        missing = set(EXPECTED_COLUMNS) - set(row)
+        if extra or missing:
+            fail(f"line {i} columns mismatch (missing {sorted(missing)}, "
+                 f"extra {sorted(extra)})")
+        if row["round"] <= prev_round:
+            fail(f"line {i}: round {row['round']} not strictly increasing "
+                 f"(previous {prev_round})")
+        prev_round = row["round"]
+        if row["bytes_cumulative"] < prev_bytes:
+            fail(f"line {i}: bytes_cumulative decreased")
+        prev_bytes = row["bytes_cumulative"]
+        if row["measured_bytes_cumulative"] < prev_measured:
+            fail(f"line {i}: measured_bytes_cumulative decreased")
+        prev_measured = row["measured_bytes_cumulative"]
+    # The final cumulative totals must agree with the summary counters
+    # (only meaningful when the run had telemetry on — with
+    # --no-telemetry the summary is all zeros by contract).
+    if data_lines and summary["enabled"]:
+        last = json.loads(data_lines[-1])
+        if last["bytes_cumulative"] != summary["modeled_bytes"]:
+            fail(f"final bytes_cumulative {last['bytes_cumulative']} != "
+                 f"summary modeled_bytes {summary['modeled_bytes']}")
+        if last["measured_bytes_cumulative"] != summary["measured_bytes"]:
+            fail(f"final measured_bytes_cumulative "
+                 f"{last['measured_bytes_cumulative']} != summary "
+                 f"measured_bytes {summary['measured_bytes']}")
+    print(f"{path}: valid adcdgd-trace v{EXPECTED_VERSION} "
+          f"({len(data_lines)} rounds, {len(meta.get('phases', []))} phases)")
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(f"usage: {sys.argv[0]} <trace.jsonl>", file=sys.stderr)
+        return 2
+    check(Path(sys.argv[1]))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
